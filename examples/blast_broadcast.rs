@@ -1,0 +1,66 @@
+//! BLAST scenario: tuning the broadcast pattern's replication factor.
+//!
+//! The paper's Table 4 shows the trade-off the `Replication` hint
+//! exposes: more replicas make the stage-in slower but the parallel
+//! search faster, with a sweet spot well below full replication. This
+//! example sweeps the factor on the simulated cluster and prints the
+//! breakdown, then shows the same hint steering the *live* store.
+//!
+//! Run: `cargo run --release --example blast_broadcast`
+
+use woss::bench::{execute, RunSpec, SystemKind};
+use woss::hints::TagSet;
+use woss::live::LiveStore;
+use woss::storage::NodeId;
+use woss::util::table::Table;
+use woss::workloads::Blast;
+
+fn main() {
+    println!("== simulated: replication sweep (19 workers, 1.8 GB database) ==\n");
+    let mut table = Table::new("BLAST breakdown vs replication")
+        .header(["config", "stage-in (s)", "all tasks (s)", "total (s)"]);
+    for (label, sys, rep) in [
+        ("NFS", SystemKind::Nfs, None),
+        ("DSS", SystemKind::DssRam, None),
+        ("WOSS r2", SystemKind::WossRam, Some(2)),
+        ("WOSS r4", SystemKind::WossRam, Some(4)),
+        ("WOSS r8", SystemKind::WossRam, Some(8)),
+        ("WOSS r16", SystemKind::WossRam, Some(16)),
+    ] {
+        let blast = Blast {
+            db_replication: rep,
+            ..Default::default()
+        };
+        let r = execute(&RunSpec::cluster(sys, 7), &blast.build());
+        table.row([
+            label.to_string(),
+            format!("{:.0}", r.stage_end("stageIn")),
+            format!("{:.0}", r.stage_end("blast")),
+            format!("{:.0}", r.makespan),
+        ]);
+    }
+    println!("{}", table.render());
+
+    println!("== live: the same hint moves real replicas ==");
+    let store = LiveStore::woss(6);
+    let db = vec![0xDBu8; 2 << 20];
+    let tags = TagSet::from_pairs([("Replication", "4"), ("RepSmntc", "optimistic")]);
+    store.write_file(NodeId(0), "/blast/db", &db, &tags).unwrap();
+    println!(
+        "   2 MB database written with Replication=4 -> holders {:?}",
+        store.locations("/blast/db")
+    );
+    println!(
+        "   replication_state attribute: {:?}",
+        store.get_xattr("/blast/db", "replication_state")
+    );
+    // Workers on replica holders read without touching the network.
+    for holder in store.locations("/blast/db").into_iter().take(3) {
+        store.read_file(holder, "/blast/db").unwrap();
+    }
+    println!(
+        "   after 3 worker reads on holders: {} local / {} remote chunk reads",
+        store.local_reads.load(std::sync::atomic::Ordering::Relaxed),
+        store.remote_reads.load(std::sync::atomic::Ordering::Relaxed)
+    );
+}

@@ -1,0 +1,69 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Runs a Montage-shaped workflow (≈100 tasks, ~40 MB of real bytes)
+//! through the LIVE engine: the rust coordinator schedules tasks
+//! location-aware over an in-process WOSS deployment holding actual
+//! chunk bytes, and every task body executes the AOT-compiled JAX/Pallas
+//! kernels through PJRT (stage transform, 8-way reduce merge). Data
+//! integrity is verified end-to-end with the checksum kernel, and the
+//! run is compared against the DSS baseline (hints off) on the same
+//! workload.
+//!
+//! Requires `make artifacts` first.
+//!
+//! Run: `cargo run --release --example montage_e2e`
+
+use woss::live::{LiveEngine, LiveStore};
+use woss::workloads::Montage;
+
+fn main() -> anyhow::Result<()> {
+    let workload = |hints: bool| Montage {
+        inputs: 16,
+        hints,
+        scale: 0.05,
+    };
+
+    println!("== live Montage over WOSS (8 nodes, 8 workers) ==");
+    let woss = LiveEngine::new(LiveStore::woss(8), 8)?;
+    let wf = workload(true).build();
+    println!(
+        "   workflow: {} tasks, {} stages, {:.1} MB to write",
+        wf.tasks.len(),
+        wf.stages().len(),
+        wf.bytes_written() as f64 / 1048576.0
+    );
+    let r_woss = woss.run(&wf)?;
+    let verified = woss.verify(&r_woss)?;
+    report("WOSS", &r_woss);
+    println!("   integrity: {verified} files re-read + checksum-verified via the PJRT kernel");
+
+    println!("== same workload over DSS (hints ignored) ==");
+    let dss = LiveEngine::new(LiveStore::dss(8), 8)?;
+    let r_dss = dss.run(&workload(false).build())?;
+    report("DSS", &r_dss);
+
+    println!("== comparison ==");
+    println!(
+        "   locality: WOSS {:.0}% vs DSS {:.0}% of chunk reads served node-locally",
+        r_woss.locality() * 100.0,
+        r_dss.locality() * 100.0
+    );
+    anyhow::ensure!(
+        r_woss.locality() > r_dss.locality(),
+        "cross-layer hints must improve locality"
+    );
+    println!("   -> the cross-layer channel changed real data placement, end to end.");
+    Ok(())
+}
+
+fn report(label: &str, r: &woss::live::LiveReport) {
+    println!(
+        "   {label}: {} tasks in {:.2}s | {:.1} MB written, {:.1} MB read ({:.0} MB/s) | kernels: {:?}",
+        r.tasks,
+        r.elapsed_secs,
+        r.bytes_written as f64 / 1048576.0,
+        r.bytes_read as f64 / 1048576.0,
+        r.throughput_mbps(),
+        r.kernel_execs
+    );
+}

@@ -1,0 +1,52 @@
+"""AOT lowering: JAX → HLO text → ``artifacts/*.hlo.txt``.
+
+HLO *text* is the interchange format, NOT a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowered with ``return_tuple=True``; the
+rust side unwraps with ``to_tuple1()``.
+
+Run once per build: ``make artifacts`` (no-op when inputs are older than
+the outputs). Python is never on the request path.
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a jittable fn to XLA HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir",
+        default="../artifacts",
+        help="directory for the .hlo.txt artifacts",
+    )
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    for name, fn, example_args in model.entry_points():
+        text = to_hlo_text(fn, example_args)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""L1 Pallas kernel: block fingerprint.
+
+Position-weighted reduction of one tile to a scalar. The live engine
+fingerprints every block it moves so the end-to-end example can verify
+that data survived the storage path bit-exactly (in f32 tolerance).
+
+TPU shaping: a pure VPU reduction — one VMEM-resident tile, elementwise
+multiply with a compile-time coefficient pattern, full-tile sum.
+``interpret=True`` for CPU-PJRT execution.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE = ref.TILE
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[...]
+    n = TILE * TILE
+    coeff = (
+        jnp.arange(n, dtype=jnp.float32).reshape(TILE, TILE) % 64.0 + 1.0
+    )
+    o_ref[...] = jnp.sum(x * coeff).reshape(1, 1)
+
+
+def checksum(x):
+    """Pallas entry point; ``(TILE, TILE)`` f32 → ``(1, 1)`` f32."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: reduce-pattern merge.
+
+Weighted accumulation of ``K`` input tiles into one output tile — the
+compute analog of mAdd/merge tasks consuming collocated inputs.
+
+TPU shaping: the grid iterates over the ``K`` input tiles; each grid step
+streams one 256 KiB tile HBM→VMEM through the BlockSpec while a VMEM
+accumulator (the output block, revisited every step) integrates it —
+the canonical Pallas reduction schedule. ``interpret=True`` for CPU-PJRT
+execution; see stage_transform.py for the rationale.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE = ref.TILE
+#: Number of tiles merged per kernel invocation. Larger merges are tree-
+#: composed by the caller (L2/L3), keeping the kernel's VMEM footprint
+#: fixed at 2 tiles + the weight vector.
+K = 8
+
+
+def _kernel(w_ref, x_ref, o_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += w_ref[k] * x_ref[0]
+
+
+def reduce_merge(parts, weights):
+    """Pallas entry point; ``parts``: ``(K, TILE, TILE)`` f32,
+    ``weights``: ``(K,)`` f32 → ``(TILE, TILE)`` f32."""
+    return pl.pallas_call(
+        _kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((K,), lambda k: (0,)),
+            pl.BlockSpec((1, TILE, TILE), lambda k: (k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((TILE, TILE), jnp.float32),
+        interpret=True,
+    )(weights, parts)

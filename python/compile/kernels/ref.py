@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(``python/tests``) sweeps shapes/data with hypothesis and asserts
+``assert_allclose`` between the Pallas (interpret=True) kernel and its
+oracle. The rust runtime never sees these — they are correctness
+anchors only.
+"""
+
+import jax.numpy as jnp
+
+#: Side of the square data tile every kernel operates on. 256×256 f32 =
+#: 256 KiB — one storage chunk, and a shape that tiles the TPU MXU
+#: (128×128 systolic array) exactly 2×2.
+TILE = 256
+
+
+def stage_transform(x, w, b):
+    """Reference for the per-stage data transform.
+
+    ``y = tanh(x @ w + b)`` over one tile: the workflow-task compute
+    analog (mProject/mDiff/dock all reduce to dense per-block math for
+    our purposes), shaped to keep the MXU busy.
+    """
+    return jnp.tanh(x @ w + b)
+
+
+def reduce_merge(parts, weights):
+    """Reference for the reduce-pattern merge.
+
+    Weighted accumulation of ``k`` tiles into one:
+    ``out = sum_i weights[i] * parts[i]`` — the mAdd / merge analog.
+    ``parts`` has shape ``(k, TILE, TILE)``, ``weights`` ``(k,)``.
+    """
+    return jnp.einsum("k,kij->ij", weights, parts)
+
+
+def checksum(x):
+    """Reference for the block fingerprint.
+
+    A position-weighted sum reduced to a scalar; cheap VPU-style
+    reduction used by the live engine to verify data integrity across
+    the storage path. Returns shape ``(1, 1)``.
+    """
+    n = x.shape[0] * x.shape[1]
+    coeff = (jnp.arange(n, dtype=x.dtype) % 64.0 + 1.0).reshape(x.shape)
+    return jnp.sum(x * coeff).reshape(1, 1)

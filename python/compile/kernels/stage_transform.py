@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: per-stage data transform.
+
+``y = tanh(x @ w + b)`` on one 256×256 f32 tile.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper is a
+storage paper with no GPU kernels to port, so the task-compute payload is
+authored TPU-first: a 256×256 tile fits comfortably in VMEM (3 × 256 KiB
+working set), the matmul maps onto the 128×128 MXU as a 2×2 macro-tile,
+and the bias+tanh epilogue runs on the VPU. The kernel is lowered with
+``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls — so correctness is validated through the interpret path and
+TPU performance is *estimated* from the VMEM/MXU model in EXPERIMENTS.md
+§Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE = ref.TILE
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref):
+    # One fused VMEM-resident tile op: MXU matmul + VPU epilogue.
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.tanh(acc + b_ref[...])
+
+
+def stage_transform(x, w, b):
+    """Pallas entry point; shapes ``(TILE, TILE)`` f32 throughout."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((TILE, TILE), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,63 @@
+"""L2: the workflow task compute graphs, composed from the L1 kernels.
+
+These jitted functions are what actually gets lowered to HLO text and
+executed by the rust coordinator's PJRT runtime. Python never runs on
+the request path: ``aot.py`` lowers each entry point once at build time.
+
+Entry points (all static shapes, f32):
+
+* ``stage_transform(x, w, b)`` — one tile through the per-stage
+  transform kernel (pipeline-pattern task body).
+* ``stage_chain(x, w1, b1, w2, b2)`` — two chained transforms, fused by
+  XLA into one executable (a two-stage pipeline body, used to validate
+  that kernel composition lowers cleanly).
+* ``reduce_merge(parts, weights)`` — 8-way weighted merge
+  (reduce-pattern task body).
+* ``checksum(x)`` — block fingerprint (integrity verification on the
+  live data path).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import checksum as checksum_k
+from .kernels import reduce_merge as reduce_k
+from .kernels import stage_transform as stage_k
+from .kernels.ref import TILE
+
+K = reduce_k.K
+
+
+def stage_transform(x, w, b):
+    """One pipeline-stage transform over a tile."""
+    return (stage_k.stage_transform(x, w, b),)
+
+
+def stage_chain(x, w1, b1, w2, b2):
+    """Two pipeline stages fused into one lowered computation."""
+    y = stage_k.stage_transform(x, w1, b1)
+    z = stage_k.stage_transform(y, w2, b2)
+    return (z,)
+
+
+def reduce_merge(parts, weights):
+    """8-way reduce-pattern merge."""
+    return (reduce_k.reduce_merge(parts, weights),)
+
+
+def checksum(x):
+    """Block fingerprint."""
+    return (checksum_k.checksum(x),)
+
+
+def entry_points():
+    """(name, fn, example_args) for every AOT artifact."""
+    tile = jax.ShapeDtypeStruct((TILE, TILE), jnp.float32)
+    vec = jax.ShapeDtypeStruct((K,), jnp.float32)
+    parts = jax.ShapeDtypeStruct((K, TILE, TILE), jnp.float32)
+    return [
+        ("stage_transform", stage_transform, (tile, tile, tile)),
+        ("stage_chain", stage_chain, (tile, tile, tile, tile, tile)),
+        ("reduce_merge", reduce_merge, (parts, vec)),
+        ("checksum", checksum, (tile,)),
+    ]

@@ -1,0 +1,115 @@
+"""Kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle.
+
+Hypothesis sweeps the data distributions; shapes are the kernels' static
+tile shapes (AOT artifacts are compiled for fixed shapes), with a padded
+wrapper test covering ragged logical sizes the way the rust runtime pads
+real chunks.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import checksum as checksum_k
+from compile.kernels import reduce_merge as reduce_k
+from compile.kernels import ref
+from compile.kernels import stage_transform as stage_k
+
+TILE = ref.TILE
+K = reduce_k.K
+
+
+def rng_tile(seed, scale=1.0, shape=(TILE, TILE)):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape, dtype=np.float32) * scale).astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([0.01, 0.1, 1.0]))
+def test_stage_transform_matches_ref(seed, scale):
+    x = rng_tile(seed, scale)
+    w = rng_tile(seed + 1, 0.05)
+    b = rng_tile(seed + 2, 0.1)
+    got = stage_k.stage_transform(x, w, b)
+    want = ref.stage_transform(x, w, b)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_reduce_merge_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    parts = rng.standard_normal((K, TILE, TILE)).astype(np.float32)
+    weights = rng.standard_normal(K).astype(np.float32)
+    got = reduce_k.reduce_merge(parts, weights)
+    want = ref.reduce_merge(parts, weights)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_checksum_matches_ref(seed):
+    x = rng_tile(seed)
+    got = checksum_k.checksum(x)
+    want = ref.checksum(x)
+    assert got.shape == (1, 1)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+def test_checksum_detects_corruption():
+    x = rng_tile(7)
+    a = float(np.asarray(checksum_k.checksum(x))[0, 0])
+    x2 = x.copy()
+    x2[13, 200] += 1.0
+    b = float(np.asarray(checksum_k.checksum(x2))[0, 0])
+    assert a != b, "single-element corruption must change the fingerprint"
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    h=st.integers(1, TILE),
+    w=st.integers(1, TILE),
+)
+def test_padded_ragged_blocks(seed, h, w):
+    """Ragged logical blocks are zero-padded to the tile, as the rust
+    runtime does for the last chunk of a file; the transform of the
+    padded region must match the oracle on the whole padded tile."""
+    rng = np.random.default_rng(seed)
+    ragged = rng.standard_normal((h, w)).astype(np.float32)
+    x = np.zeros((TILE, TILE), dtype=np.float32)
+    x[:h, :w] = ragged
+    wmat = rng_tile(seed + 1, 0.05)
+    b = np.zeros((TILE, TILE), dtype=np.float32)
+    got = stage_k.stage_transform(x, wmat, b)
+    want = ref.stage_transform(x, wmat, b)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_reduce_merge_zero_weights_is_zero():
+    parts = np.ones((K, TILE, TILE), dtype=np.float32)
+    weights = np.zeros(K, dtype=np.float32)
+    out = np.asarray(reduce_k.reduce_merge(parts, weights))
+    assert np.all(out == 0.0)
+
+
+def test_reduce_merge_identity_selects_part():
+    rng = np.random.default_rng(3)
+    parts = rng.standard_normal((K, TILE, TILE)).astype(np.float32)
+    weights = np.zeros(K, dtype=np.float32)
+    weights[3] = 1.0
+    out = np.asarray(reduce_k.reduce_merge(parts, weights))
+    assert_allclose(out, parts[3], rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_dtypes_stable(dtype):
+    x = jnp.asarray(rng_tile(11), dtype=dtype)
+    w = jnp.asarray(rng_tile(12, 0.05), dtype=dtype)
+    b = jnp.asarray(rng_tile(13, 0.1), dtype=dtype)
+    out = stage_k.stage_transform(x, w, b)
+    assert out.dtype == dtype
+    assert bool(jnp.all(jnp.isfinite(out)))

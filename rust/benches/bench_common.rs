@@ -1,0 +1,42 @@
+//! Shared mini bench harness (offline substitute for criterion).
+//!
+//! Each paper-figure bench regenerates its experiment a few times,
+//! reports wall-clock stats for the regeneration itself, and prints the
+//! experiment table so `cargo bench` output doubles as a results log.
+//! Sample count: WOSS_BENCH_SAMPLES (default 3).
+
+use std::time::Instant;
+use woss::bench::experiments;
+use woss::util::Summary;
+
+pub fn samples() -> usize {
+    std::env::var("WOSS_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+}
+
+/// Run one experiment repeatedly, timing regeneration.
+pub fn bench_experiment(id: &str) {
+    let n = samples();
+    let mut wall = Summary::new();
+    let mut last = None;
+    for s in 0..n {
+        let t0 = Instant::now();
+        let report = experiments::run(id, 2, 42 + s as u64).expect("known experiment id");
+        wall.add(t0.elapsed().as_secs_f64());
+        last = Some(report);
+    }
+    let report = last.unwrap();
+    println!("{}", report.table.render());
+    println!("(expectation: {})", report.expectation);
+    println!(
+        "bench {id}: regenerated {n}x in {} per run (min {:.3}s, max {:.3}s)\n",
+        woss::util::table::fmt_secs(wall.mean()),
+        wall.min(),
+        wall.max()
+    );
+}
+
+#[allow(dead_code)]
+fn main() {}

@@ -1,0 +1,9 @@
+//! `cargo bench` target regenerating the paper's fig11 on the
+//! simulated testbed. See rust/src/bench/experiments.rs for the driver.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+fn main() {
+    bench_common::bench_experiment("fig11");
+}

@@ -1,0 +1,151 @@
+//! Hot-path microbenches: the operations the perf pass (EXPERIMENTS.md
+//! §Perf) optimizes. Not paper figures — these time the system's own
+//! internals: DES resource reservations, manager metadata ops, placement
+//! decisions, full pipeline simulation, scheduler picks, and (when
+//! artifacts are present) PJRT kernel execution.
+
+use std::time::Instant;
+use woss::bench::{execute, RunSpec, SystemKind};
+use woss::dispatch::{PlacementCtx, PlacementState, Registry};
+use woss::hints::TagSet;
+use woss::sim::{Calib, Cluster, DiskKind, Dur, Metrics, Resource, SimTime};
+use woss::storage::{standard_deployment, Manager, NodeId, NodeState, StorageModel};
+use woss::workloads;
+
+fn time<F: FnMut()>(label: &str, iters: usize, mut f: F) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let rate = 1.0 / per;
+    println!("{label:46} {:>12.3} µs/op {rate:>14.0} op/s", per * 1e6);
+}
+
+fn main() {
+    println!("== WOSS hot paths ==");
+
+    time("resource: gap-filling acquire (fifo run)", 100, || {
+        let mut r = Resource::new();
+        for i in 0..10_000u64 {
+            r.acquire(SimTime(i * 100), Dur(100));
+        }
+    });
+
+    time("resource: acquire with fragmentation", 100, || {
+        let mut r = Resource::new();
+        for i in 0..5_000u64 {
+            // leave gaps, then fill them
+            r.acquire(SimTime(i * 200), Dur(50));
+        }
+        for i in 0..5_000u64 {
+            r.acquire(SimTime(i * 200 + 60), Dur(40));
+        }
+    });
+
+    {
+        let calib = Calib::default();
+        let mut cluster = Cluster::new(20, DiskKind::RamDisk, &calib);
+        let nodes: Vec<NodeState> = (1..20)
+            .map(|i| NodeState {
+                node: NodeId(i),
+                capacity: u64::MAX / 2,
+                used: 0,
+            })
+            .collect();
+        let mut mgr = Manager::new(NodeId(0), nodes, Registry::woss(), &calib);
+        let mut metrics = Metrics::new();
+        let mut n = 0u64;
+        time("manager: create (64MB file, 64 chunks)", 200, || {
+            n += 1;
+            mgr.create(
+                &mut cluster,
+                &mut metrics,
+                NodeId(1),
+                &format!("/bench/{n}"),
+                64 << 20,
+                TagSet::new(),
+                SimTime::ZERO,
+            )
+            .unwrap();
+        });
+    }
+
+    {
+        let reg = Registry::woss();
+        let nodes: Vec<NodeState> = (1..20)
+            .map(|i| NodeState {
+                node: NodeId(i),
+                capacity: u64::MAX / 2,
+                used: 0,
+            })
+            .collect();
+        let tags = TagSet::from_pairs([("DP", "collocation g")]);
+        let mut state = PlacementState::default();
+        time("dispatch: hinted placement decision", 10_000, || {
+            let mut ctx = PlacementCtx {
+                client: NodeId(3),
+                tags: &tags,
+                nodes: &nodes,
+                state: &mut state,
+            };
+            let _ = reg.place_chunk(&mut ctx, 0, 1 << 20).unwrap();
+        });
+    }
+
+    {
+        let calib = Calib::default();
+        let mut cluster = Cluster::new(20, DiskKind::RamDisk, &calib);
+        let mut store = standard_deployment(&cluster, true, true, 1);
+        let mut n = 0u64;
+        time("storage: 16MB tagged write (sim)", 500, || {
+            n += 1;
+            store
+                .write_file(
+                    &mut cluster,
+                    NodeId(1 + (n % 19) as usize),
+                    &format!("/w/{n}"),
+                    16 << 20,
+                    &TagSet::from_pairs([("DP", "local")]),
+                    SimTime::ZERO,
+                )
+                .unwrap();
+        });
+    }
+
+    time("end-to-end: pipeline experiment (95 tasks)", 10, || {
+        let wf = workloads::pipeline(19, 1.0, true);
+        let r = execute(&RunSpec::cluster(SystemKind::WossRam, 1), &wf);
+        assert!(r.makespan > 0.0);
+    });
+
+    time("end-to-end: montage experiment (~470 tasks)", 5, || {
+        let wf = workloads::Montage::default().build();
+        let r = execute(&RunSpec::cluster(SystemKind::WossDisk, 1), &wf);
+        assert!(r.makespan > 0.0);
+    });
+
+    // PJRT kernels (skipped when artifacts are absent).
+    let dir = woss::runtime::Runtime::artifact_dir();
+    if dir.join("stage_transform.hlo.txt").exists() {
+        let mut rt = woss::runtime::Runtime::load(&dir).unwrap();
+        let tile = vec![0.25f32; woss::runtime::TILE_ELEMS];
+        time("pjrt: stage_transform (256x256 tile)", 50, || {
+            rt.stage_transform(&tile, &tile, &tile).unwrap();
+        });
+        let parts: Vec<f32> = (0..woss::runtime::MERGE_K)
+            .flat_map(|_| tile.clone())
+            .collect();
+        let weights = vec![0.125f32; woss::runtime::MERGE_K];
+        time("pjrt: reduce_merge (8-way)", 50, || {
+            rt.reduce_merge(&parts, &weights).unwrap();
+        });
+        time("pjrt: checksum", 50, || {
+            rt.checksum(&tile).unwrap();
+        });
+    } else {
+        println!("(artifacts missing — PJRT kernel benches skipped; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,268 @@
+//! Experiment harness: one entry per paper figure/table.
+//!
+//! [`SystemKind`] enumerates the storage configurations the paper
+//! compares; [`execute`] deploys one over a fresh simulated cluster and
+//! runs a workflow through it; [`repeat`] averages seeded repetitions
+//! (the paper averages 4–20 runs). The per-figure drivers live in
+//! [`experiments`] and are reachable via `woss experiment <id>` and the
+//! `cargo bench` targets.
+
+pub mod experiments;
+
+use crate::gpfs::Gpfs;
+use crate::nfs::NfsServer;
+use crate::sim::{Calib, Cluster, DiskKind};
+use crate::storage::model::StorageModel;
+use crate::storage::{standard_deployment, LocalFs};
+use crate::util::Summary;
+use crate::workflow::engine::{run_workflow, EngineConfig, RunResult};
+use crate::workflow::scheduler::{LeastLoaded, LocationAware, ProbeLocation, Scheduler};
+use crate::workflow::Workflow;
+
+/// Which persistent backend serves stage-in/out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Nfs,
+    Gpfs,
+}
+
+/// A storage configuration under test (one bar/line in a figure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    /// Workflow runs directly against the NFS server (no intermediate).
+    Nfs,
+    /// DSS baseline over spinning disks.
+    DssDisk,
+    /// DSS baseline over RAM-disks.
+    DssRam,
+    /// WOSS over spinning disks.
+    WossDisk,
+    /// WOSS over RAM-disks.
+    WossRam,
+    /// Node-local RAM-disk file system (pipeline best case).
+    LocalRam,
+    /// Workflow runs directly against GPFS (BG/P backend baseline).
+    GpfsOnly,
+}
+
+impl SystemKind {
+    /// Display label matching the paper's figures.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SystemKind::Nfs => "NFS",
+            SystemKind::DssDisk => "DSS-DISK",
+            SystemKind::DssRam => "DSS-RAM",
+            SystemKind::WossDisk => "WOSS-DISK",
+            SystemKind::WossRam => "WOSS-RAM",
+            SystemKind::LocalRam => "local",
+            SystemKind::GpfsOnly => "GPFS",
+        }
+    }
+
+    fn disk_kind(&self) -> DiskKind {
+        match self {
+            SystemKind::DssDisk | SystemKind::WossDisk => DiskKind::Spinning,
+            _ => DiskKind::RamDisk,
+        }
+    }
+
+    fn is_woss(&self) -> bool {
+        matches!(self, SystemKind::WossDisk | SystemKind::WossRam)
+    }
+}
+
+/// One experiment run specification.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub system: SystemKind,
+    /// Cluster nodes including the manager node.
+    pub nodes: usize,
+    pub backend: Backend,
+    pub calib: Calib,
+    pub seed: u64,
+    /// Engine-config override (Table 6 ladder); `None` picks the natural
+    /// config for the system (WOSS → full integration, others → plain).
+    pub engine: Option<EngineConfig>,
+    /// Scheduler override; `None` picks the natural scheduler.
+    pub scheduler: Option<SchedKind>,
+}
+
+/// Scheduler selection for overrides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    LeastLoaded,
+    LocationAware,
+    ProbeLocation,
+    /// Follow data unconditionally (node-local file system runs, where
+    /// a file is only readable where it was written).
+    FollowData,
+}
+
+impl RunSpec {
+    /// Natural spec for a system on the 20-node cluster.
+    pub fn cluster(system: SystemKind, seed: u64) -> Self {
+        RunSpec {
+            system,
+            nodes: 20,
+            backend: Backend::Nfs,
+            calib: Calib::cluster(),
+            seed,
+            engine: None,
+            scheduler: None,
+        }
+    }
+
+    /// Natural spec for a system on a BG/P allocation of `nodes`.
+    pub fn bgp(system: SystemKind, nodes: usize, seed: u64) -> Self {
+        RunSpec {
+            system,
+            nodes,
+            backend: Backend::Gpfs,
+            calib: Calib::bgp(),
+            seed,
+            engine: None,
+            scheduler: None,
+        }
+    }
+}
+
+fn make_scheduler(kind: SchedKind) -> Box<dyn Scheduler> {
+    match kind {
+        SchedKind::LeastLoaded => Box::new(LeastLoaded::new()),
+        SchedKind::LocationAware => Box::new(LocationAware::new()),
+        SchedKind::ProbeLocation => Box::new(ProbeLocation::new()),
+        SchedKind::FollowData => {
+            let mut s = LocationAware::new();
+            s.min_gravity_bytes = 0.0;
+            s.max_queue = 10_000;
+            Box::new(s)
+        }
+    }
+}
+
+/// Execute one workflow run under `spec`.
+pub fn execute(spec: &RunSpec, workflow: &Workflow) -> RunResult {
+    let mut cluster = Cluster::new(spec.nodes, spec.system.disk_kind(), &spec.calib);
+
+    let mut backend: Box<dyn StorageModel> = match spec.backend {
+        Backend::Nfs => Box::new(NfsServer::new(&spec.calib)),
+        Backend::Gpfs => Box::new(Gpfs::new(&spec.calib)),
+    };
+
+    let mut inter: Box<dyn StorageModel> = match spec.system {
+        SystemKind::Nfs => Box::new(NfsServer::new(&spec.calib)),
+        SystemKind::GpfsOnly => Box::new(Gpfs::new(&spec.calib)),
+        SystemKind::LocalRam => Box::new(LocalFs::new()),
+        s => Box::new(standard_deployment(
+            &cluster,
+            s.is_woss(),
+            s.disk_kind() == DiskKind::RamDisk,
+            spec.seed ^ 0x5707_AA5E,
+        )),
+    };
+
+    let engine_cfg = spec.engine.clone().unwrap_or_else(|| {
+        if spec.system.is_woss() {
+            EngineConfig::woss(spec.seed)
+        } else if spec.system == SystemKind::LocalRam {
+            // The shell script knows where it ran; it follows files
+            // without paying remote location queries.
+            EngineConfig {
+                tag_outputs: false,
+                useless_tags: false,
+                query_location: true,
+                charge_fork: false,
+                fork_only: false,
+                jitter: 0.03,
+                seed: spec.seed,
+                stage_in_barrier: true,
+            }
+        } else {
+            EngineConfig::plain(spec.seed)
+        }
+    });
+
+    let sched_kind = spec.scheduler.unwrap_or(match spec.system {
+        s if s.is_woss() => SchedKind::LocationAware,
+        SystemKind::LocalRam => SchedKind::FollowData,
+        _ => SchedKind::LeastLoaded,
+    });
+    let mut scheduler = make_scheduler(sched_kind);
+
+    run_workflow(
+        &mut cluster,
+        inter.as_mut(),
+        backend.as_mut(),
+        scheduler.as_mut(),
+        engine_cfg,
+        workflow,
+    )
+    .expect("workflow run failed")
+}
+
+/// Repeat a run with derived seeds; returns per-run makespans and the
+/// last run's full result (for breakdown rows).
+pub fn repeat<F: Fn(u64) -> Workflow>(
+    spec: &RunSpec,
+    runs: usize,
+    build: F,
+) -> (Summary, RunResult) {
+    assert!(runs >= 1);
+    let mut summary = Summary::new();
+    let mut last = None;
+    for r in 0..runs {
+        let mut s = spec.clone();
+        s.seed = spec
+            .seed
+            .wrapping_add((r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1);
+        if let Some(e) = &mut s.engine {
+            e.seed = s.seed;
+        }
+        let wf = build(s.seed);
+        let result = execute(&s, &wf);
+        summary.add(result.makespan);
+        last = Some(result);
+    }
+    (summary, last.expect("at least one run"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn pipeline_system_ordering() {
+        // The paper's headline: WOSS ≈ local ≫ DSS ≫ NFS on pipeline.
+        let runs = 3;
+        let (nfs, _) = repeat(&RunSpec::cluster(SystemKind::Nfs, 1), runs, |_| {
+            workloads::pipeline(19, 1.0, false)
+        });
+        let (dss, _) = repeat(&RunSpec::cluster(SystemKind::DssRam, 1), runs, |_| {
+            workloads::pipeline(19, 1.0, false)
+        });
+        let (woss, _) = repeat(&RunSpec::cluster(SystemKind::WossRam, 1), runs, |_| {
+            workloads::pipeline(19, 1.0, true)
+        });
+        assert!(
+            woss.mean() < dss.mean() && dss.mean() < nfs.mean(),
+            "WOSS {:.1} < DSS {:.1} < NFS {:.1}",
+            woss.mean(),
+            dss.mean(),
+            nfs.mean()
+        );
+        assert!(
+            nfs.mean() / woss.mean() > 3.0,
+            "NFS/WOSS ratio {:.1} too small",
+            nfs.mean() / woss.mean()
+        );
+    }
+
+    #[test]
+    fn repeat_is_deterministic() {
+        let spec = RunSpec::cluster(SystemKind::WossRam, 7);
+        let (a, _) = repeat(&spec, 2, |_| workloads::reduce(8, 1.0, true));
+        let (b, _) = repeat(&spec, 2, |_| workloads::reduce(8, 1.0, true));
+        assert_eq!(a.samples(), b.samples());
+    }
+}

@@ -1,0 +1,148 @@
+//! Calibration config files (offline TOML subset).
+//!
+//! A deployment file overrides [`Calib`] fields:
+//!
+//! ```toml
+//! # testbed.toml
+//! [network]
+//! nic_bw_mbps = 117.0
+//! tcp_stream_mbps = 80.0
+//! net_latency_us = 100.0
+//!
+//! [node]
+//! cores = 4
+//! cpu_slowdown = 1.0
+//!
+//! [manager]
+//! op_ms = 0.2
+//! setattr_ms = 4.0
+//! setattr_serialized = true
+//! ```
+//!
+//! Only `key = value` pairs and `[section]` headers are supported
+//! (comments with `#`); unknown keys are reported as errors so typos
+//! cannot silently skew an experiment.
+
+use crate::sim::Calib;
+use anyhow::{anyhow, Result};
+
+const MB: f64 = 1024.0 * 1024.0;
+
+/// Parse `source` and apply overrides onto `base`.
+pub fn apply(base: &mut Calib, source: &str) -> Result<()> {
+    let mut section = String::new();
+    for (lineno, raw) in source.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = format!("{section}.{}", key.trim());
+        let value = value.trim();
+        set(base, &key, value).map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+    }
+    Ok(())
+}
+
+fn set(c: &mut Calib, key: &str, value: &str) -> Result<()> {
+    let f = || -> Result<f64> {
+        value
+            .parse::<f64>()
+            .map_err(|e| anyhow!("{key}: bad number '{value}': {e}"))
+    };
+    let b = || -> Result<bool> {
+        value
+            .parse::<bool>()
+            .map_err(|e| anyhow!("{key}: bad bool '{value}': {e}"))
+    };
+    match key {
+        "network.nic_bw_mbps" => c.nic_bw = f()? * MB,
+        "network.tcp_stream_mbps" => c.tcp_stream_bw = f()? * MB,
+        "network.net_latency_us" => c.net_latency_us = f()?,
+        "node.cores" => c.cores_per_node = f()? as usize,
+        "node.cpu_slowdown" => c.cpu_slowdown = f()?,
+        "node.os_cache_mb" => c.os_cache_bytes = (f()? * MB) as u64,
+        "disk.spinning_read_mbps" => c.disk.spinning_read_bw = f()? * MB,
+        "disk.spinning_write_mbps" => c.disk.spinning_write_bw = f()? * MB,
+        "disk.position_ms" => c.disk.spinning_position_ms = f()?,
+        "disk.ramdisk_mbps" => c.disk.ramdisk_bw = f()? * MB,
+        "sai.fuse_op_ms" => c.fuse_op_ms = f()?,
+        "sai.chunk_kb" => c.chunk_size = (f()? * 1024.0) as u64,
+        "sai.stripe_width" => c.default_stripe_width = f()? as usize,
+        "manager.op_ms" => c.manager_op_ms = f()?,
+        "manager.setattr_ms" => c.manager_setattr_ms = f()?,
+        "manager.parallelism" => c.manager_parallelism = f()? as usize,
+        "manager.setattr_serialized" => c.manager_setattr_serialized = b()?,
+        "runtime.fork_ms" => c.fork_ms = f()?,
+        "runtime.swift_tag_task_ms" => c.swift_tag_task_ms = f()?,
+        "runtime.sched_decision_ms" => c.sched_decision_ms = f()?,
+        "nfs.nic_bw_mbps" => c.nfs_nic_bw = f()? * MB,
+        "nfs.cache_gb" => c.nfs_cache_bytes = (f()? * 1024.0 * MB) as u64,
+        "nfs.op_ms" => c.nfs_op_ms = f()?,
+        "gpfs.servers" => c.gpfs_servers = f()? as usize,
+        "gpfs.server_bw_mbps" => c.gpfs_server_bw = f()? * MB,
+        "gpfs.op_ms" => c.gpfs_op_ms = f()?,
+        _ => return Err(anyhow!("unknown config key '{key}'")),
+    }
+    Ok(())
+}
+
+/// Load a calibration: defaults (or the BG/P profile) + optional file.
+pub fn load_calib(profile: &str, path: Option<&str>) -> Result<Calib> {
+    let mut calib = match profile {
+        "cluster" => Calib::cluster(),
+        "bgp" => Calib::bgp(),
+        other => return Err(anyhow!("unknown profile '{other}' (cluster|bgp)")),
+    };
+    if let Some(p) = path {
+        let text = std::fs::read_to_string(p).map_err(|e| anyhow!("read {p}: {e}"))?;
+        apply(&mut calib, &text)?;
+    }
+    Ok(calib)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn applies_overrides() {
+        let mut c = Calib::default();
+        apply(
+            &mut c,
+            "# comment\n[network]\nnic_bw_mbps = 234\n\n[manager]\nsetattr_serialized = false\nop_ms = 1.5\n",
+        )
+        .unwrap();
+        assert!((c.nic_bw - 234.0 * MB).abs() < 1.0);
+        assert!(!c.manager_setattr_serialized);
+        assert!((c.manager_op_ms - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = Calib::default();
+        let err = apply(&mut c, "[network]\nwarp_speed = 9\n").unwrap_err();
+        assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let mut c = Calib::default();
+        assert!(apply(&mut c, "[node]\ncores\n").is_err());
+        assert!(apply(&mut c, "[node]\ncores = banana\n").is_err());
+    }
+
+    #[test]
+    fn profiles() {
+        assert!(load_calib("cluster", None).is_ok());
+        let bgp = load_calib("bgp", None).unwrap();
+        assert!(bgp.cpu_slowdown > 1.0);
+        assert!(load_calib("laptop", None).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! The leader process: configuration, experiment registry, reporting.
+//!
+//! `woss` (rust/src/main.rs) parses the CLI through [`crate::util::cli`],
+//! loads calibration overrides from a config file ([`config`]), runs
+//! experiments from [`crate::bench::experiments`] or the live engine,
+//! and renders reports ([`report`]).
+
+pub mod config;
+pub mod report;
+
+pub use config::load_calib;
+pub use report::write_reports;

@@ -1,0 +1,44 @@
+//! Report rendering and persistence.
+
+use crate::bench::experiments::Report;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Print each report's table and expectation line.
+pub fn print_reports(reports: &[Report]) {
+    for r in reports {
+        println!("{}", r.table.render());
+        println!("(expectation: {})\n", r.expectation);
+    }
+}
+
+/// Write all reports as one JSON document.
+pub fn write_reports(reports: &[Report], path: &Path) -> Result<()> {
+    let doc = Json::obj([(
+        "experiments",
+        Json::Arr(reports.iter().map(|r| r.json.clone()).collect()),
+    )]);
+    std::fs::write(path, doc.to_string_pretty())
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::experiments;
+
+    #[test]
+    fn json_roundtrip_on_disk() {
+        let reports = vec![experiments::run("fig8", 1, 5).unwrap()];
+        let dir = std::env::temp_dir().join(format!("woss-report-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        write_reports(&reports, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert!(parsed.get("experiments").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,152 @@
+//! Bottom-up information-retrieval modules (paper §3.2, "passing hints
+//! bottom-up").
+//!
+//! These serve reserved extended attributes from manager-internal state,
+//! triggered by a plain POSIX `getxattr` — the storage-to-application
+//! half of the bidirectional channel. The flagship provider is
+//! [`LocationProvider`]: the workflow scheduler `get`s `location` and
+//! schedules the consuming task on a node that holds the data.
+
+use super::GetAttrProvider;
+use crate::storage::types::{FileMeta, NodeState};
+
+/// Reserved `location` attribute: the set of storage nodes holding the
+/// file, rendered as a comma-separated node list (primary holders first,
+/// in chunk order).
+pub struct LocationProvider;
+
+impl GetAttrProvider for LocationProvider {
+    fn key(&self) -> &'static str {
+        crate::hints::LOCATION_ATTR
+    }
+
+    fn get(&self, file: &FileMeta, _nodes: &[NodeState]) -> String {
+        let holders = file.holders();
+        holders
+            .iter()
+            .map(|n| n.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Reserved `chunk_location` attribute: fine-grained per-chunk map
+/// (`idx:node;...`), used by the scatter benchmark where readers align
+/// with their disjoint region.
+pub struct ChunkLocationProvider;
+
+impl GetAttrProvider for ChunkLocationProvider {
+    fn key(&self) -> &'static str {
+        "chunk_location"
+    }
+
+    fn get(&self, file: &FileMeta, _nodes: &[NodeState]) -> String {
+        file.chunks
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{}:{}", i, c.primary()))
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+}
+
+/// Reserved `system_status` attribute: storage-pool usage summary —
+/// an example of exposing broader internal state (§5 lists replication
+/// counts, device status, caching status as candidates).
+pub struct SystemStatusProvider;
+
+impl GetAttrProvider for SystemStatusProvider {
+    fn key(&self) -> &'static str {
+        "system_status"
+    }
+
+    fn get(&self, _file: &FileMeta, nodes: &[NodeState]) -> String {
+        let total: u64 = nodes.iter().map(|n| n.capacity).sum();
+        let used: u64 = nodes.iter().map(|n| n.used).sum();
+        format!("nodes={} used={} capacity={}", nodes.len(), used, total)
+    }
+}
+
+/// Reserved `replication_state` attribute: achieved replica count per
+/// chunk (min across chunks) — lets an application judge data-loss risk.
+pub struct ReplicationStateProvider;
+
+impl GetAttrProvider for ReplicationStateProvider {
+    fn key(&self) -> &'static str {
+        "replication_state"
+    }
+
+    fn get(&self, file: &FileMeta, _nodes: &[NodeState]) -> String {
+        let min = file
+            .chunks
+            .iter()
+            .map(|c| c.replicas.len())
+            .min()
+            .unwrap_or(0);
+        format!("{min}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hints::TagSet;
+    use crate::storage::types::{ChunkMeta, FileId, NodeId};
+
+    fn file() -> FileMeta {
+        FileMeta {
+            id: FileId(9),
+            size: 3072,
+            chunk_size: 1024,
+            tags: TagSet::new(),
+            chunks: vec![
+                ChunkMeta {
+                    replicas: vec![NodeId(4), NodeId(2)],
+                },
+                ChunkMeta {
+                    replicas: vec![NodeId(4)],
+                },
+                ChunkMeta {
+                    replicas: vec![NodeId(7)],
+                },
+            ],
+            creator: NodeId(4),
+        }
+    }
+
+    #[test]
+    fn location_lists_distinct_holders() {
+        let s = LocationProvider.get(&file(), &[]);
+        assert_eq!(s, "n2,n4,n7");
+    }
+
+    #[test]
+    fn chunk_location_fine_grained() {
+        let s = ChunkLocationProvider.get(&file(), &[]);
+        assert_eq!(s, "0:n4;1:n4;2:n7");
+    }
+
+    #[test]
+    fn system_status_sums_pool() {
+        let nodes = vec![
+            NodeState {
+                node: NodeId(1),
+                capacity: 100,
+                used: 25,
+            },
+            NodeState {
+                node: NodeId(2),
+                capacity: 100,
+                used: 50,
+            },
+        ];
+        let s = SystemStatusProvider.get(&file(), &nodes);
+        assert_eq!(s, "nodes=2 used=75 capacity=200");
+    }
+
+    #[test]
+    fn replication_state_is_min() {
+        let s = ReplicationStateProvider.get(&file(), &[]);
+        assert_eq!(s, "1");
+    }
+}

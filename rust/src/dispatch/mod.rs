@@ -1,0 +1,373 @@
+//! The extensible dispatcher (paper §3.2, Figure 3).
+//!
+//! Every storage component processes requests through a dispatcher:
+//! requests arrive stamped with the file's [`TagSet`]; the dispatcher
+//! routes them to the optimization module registered for the matching
+//! hint, or to a default implementation when no hint matches. Extending
+//! the system = pick the `<key, value>` hint + implement the callback +
+//! register it — exactly the paper's developer story, expressed here as
+//! three trait surfaces:
+//!
+//! * [`PlacementPolicy`] — chunk allocation (manager side),
+//! * [`ReplicationPolicy`] — replica creation (storage-node side),
+//! * [`GetAttrProvider`] — bottom-up information retrieval (manager side,
+//!   triggered by POSIX `getxattr`).
+//!
+//! [`Registry`] wires hints to modules. The DSS baseline uses
+//! [`Registry::baseline`] (default modules only — hints are carried but
+//! never interpreted); WOSS uses [`Registry::woss`].
+
+pub mod getattr;
+pub mod placement;
+pub mod replication;
+
+use crate::hints::{Hint, TagSet};
+use crate::storage::types::{FileMeta, NodeId, NodeState};
+use std::collections::BTreeMap;
+
+/// Mutable manager-side state placement decisions may consult/update.
+#[derive(Debug, Default)]
+pub struct PlacementState {
+    /// Round-robin cursor for default striping.
+    pub rr_cursor: usize,
+    /// Collocation group → chosen anchor node.
+    pub groups: BTreeMap<String, NodeId>,
+}
+
+/// Everything a placement decision may look at.
+pub struct PlacementCtx<'a> {
+    /// The client (SAI) node writing the file.
+    pub client: NodeId,
+    /// The file's tags (already cached at the SAI, stamped on the
+    /// allocation request).
+    pub tags: &'a TagSet,
+    /// Registry view of the storage nodes (usage is maintained by the
+    /// manager as allocations commit).
+    pub nodes: &'a [NodeState],
+    /// Manager placement state (round-robin cursor, collocation anchors).
+    pub state: &'a mut PlacementState,
+}
+
+impl<'a> PlacementCtx<'a> {
+    /// Does `node` have room for `bytes` more?
+    pub fn fits(&self, node: NodeId, bytes: u64) -> bool {
+        self.nodes
+            .iter()
+            .find(|n| n.node == node)
+            .map(|n| n.fits(bytes))
+            .unwrap_or(false)
+    }
+
+    /// Next node from the round-robin cursor with room for `bytes`;
+    /// `None` if the whole pool is full.
+    pub fn next_rr(&mut self, bytes: u64) -> Option<NodeId> {
+        let n = self.nodes.len();
+        for probe in 0..n {
+            let idx = (self.state.rr_cursor + probe) % n;
+            if self.nodes[idx].fits(bytes) {
+                self.state.rr_cursor = (idx + 1) % n;
+                return Some(self.nodes[idx].node);
+            }
+        }
+        None
+    }
+
+    /// Node with the most free space (collocation anchor selection).
+    pub fn most_free(&self, bytes: u64) -> Option<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|s| s.fits(bytes))
+            .max_by_key(|s| s.free())
+            .map(|s| s.node)
+    }
+}
+
+/// A chunk-placement optimization module.
+pub trait PlacementPolicy: Send + Sync {
+    /// Module name (diagnostics, table6-style breakdowns).
+    fn name(&self) -> &'static str;
+    /// Choose the primary holder for chunk `chunk_idx` (`chunk_bytes`
+    /// long). Returning `None` falls back to the default policy —
+    /// *hints, not directives*.
+    fn place(&self, ctx: &mut PlacementCtx<'_>, chunk_idx: u64, chunk_bytes: u64)
+        -> Option<NodeId>;
+}
+
+/// A replica-creation optimization module (runs at the storage nodes).
+pub trait ReplicationPolicy: Send + Sync {
+    /// Module name.
+    fn name(&self) -> &'static str;
+    /// Pick replica holders (excluding the primary) for one chunk.
+    fn replica_targets(
+        &self,
+        ctx: &mut PlacementCtx<'_>,
+        primary: NodeId,
+        factor: u32,
+        chunk_bytes: u64,
+    ) -> Vec<NodeId>;
+    /// Whether replica creation blocks write completion (pessimistic) or
+    /// proceeds in the background (optimistic / lazy chained).
+    fn blocking(&self, tags: &TagSet) -> bool;
+}
+
+/// Bottom-up information retrieval module (paper's `GetAttrib` design):
+/// maps a reserved attribute name to internal system state.
+pub trait GetAttrProvider: Send + Sync {
+    /// Attribute key this provider serves (e.g. `"location"`).
+    fn key(&self) -> &'static str;
+    /// Produce the value for `file` given the manager's node view.
+    fn get(&self, file: &FileMeta, nodes: &[NodeState]) -> String;
+}
+
+/// The per-deployment module registry: the concrete form of the paper's
+/// "extensible storage system components".
+pub struct Registry {
+    placements: Vec<Box<dyn PlacementPolicy>>,
+    replication: Box<dyn ReplicationPolicy>,
+    getattrs: BTreeMap<&'static str, Box<dyn GetAttrProvider>>,
+    /// When false (DSS baseline) tags are stored but never dispatched on.
+    hints_enabled: bool,
+}
+
+impl Registry {
+    /// Traditional distributed storage system: round-robin placement,
+    /// chained lazy replication, no hint dispatch, no location exposure.
+    /// This is the paper's DSS baseline.
+    pub fn baseline() -> Registry {
+        Registry {
+            placements: vec![],
+            replication: Box::new(replication::LazyChained),
+            getattrs: BTreeMap::new(),
+            hints_enabled: false,
+        }
+    }
+
+    /// The full WOSS registry: all Table 3 modules.
+    pub fn woss() -> Registry {
+        let mut r = Registry {
+            placements: vec![
+                Box::new(placement::LocalPlacement),
+                Box::new(placement::CollocatePlacement),
+                Box::new(placement::ScatterPlacement),
+            ],
+            replication: Box::new(replication::EagerParallel),
+            getattrs: BTreeMap::new(),
+            hints_enabled: true,
+        };
+        r.register_getattr(Box::new(getattr::LocationProvider));
+        r.register_getattr(Box::new(getattr::ChunkLocationProvider));
+        r.register_getattr(Box::new(getattr::SystemStatusProvider));
+        r.register_getattr(Box::new(getattr::ReplicationStateProvider));
+        r
+    }
+
+    /// Are hint-triggered optimizations active?
+    pub fn hints_enabled(&self) -> bool {
+        self.hints_enabled
+    }
+
+    /// Register an additional placement module (the extensibility path a
+    /// developer takes to add a new optimization).
+    pub fn register_placement(&mut self, policy: Box<dyn PlacementPolicy>) {
+        self.placements.push(policy);
+    }
+
+    /// Register/replace the replication policy.
+    pub fn set_replication(&mut self, policy: Box<dyn ReplicationPolicy>) {
+        self.replication = policy;
+    }
+
+    /// Register a bottom-up provider.
+    pub fn register_getattr(&mut self, provider: Box<dyn GetAttrProvider>) {
+        self.getattrs.insert(provider.key(), provider);
+    }
+
+    /// Dispatch a chunk allocation through the hint-triggered modules
+    /// only; `None` means no module claimed it (default layout applies).
+    pub fn place_hinted(
+        &self,
+        ctx: &mut PlacementCtx<'_>,
+        chunk_idx: u64,
+        chunk_bytes: u64,
+    ) -> Option<NodeId> {
+        if self.hints_enabled {
+            for policy in &self.placements {
+                if let Some(node) = policy.place(ctx, chunk_idx, chunk_bytes) {
+                    return Some(node);
+                }
+            }
+        }
+        None
+    }
+
+    /// Dispatch a chunk allocation: first registered module that accepts
+    /// the tagged request wins; otherwise the default round-robin path.
+    pub fn place_chunk(
+        &self,
+        ctx: &mut PlacementCtx<'_>,
+        chunk_idx: u64,
+        chunk_bytes: u64,
+    ) -> Option<NodeId> {
+        self.place_hinted(ctx, chunk_idx, chunk_bytes)
+            .or_else(|| ctx.next_rr(chunk_bytes))
+    }
+
+    /// Which placement module would claim this tag set (diagnostics).
+    pub fn placement_module(&self, tags: &TagSet) -> &'static str {
+        if self.hints_enabled {
+            match tags.placement() {
+                Some(Hint::PlacementLocal) => return "placement.local",
+                Some(Hint::PlacementCollocate(_)) => return "placement.collocate",
+                Some(Hint::PlacementScatter(_)) => return "placement.scatter",
+                _ => {}
+            }
+        }
+        "placement.default"
+    }
+
+    /// Replication policy in force.
+    pub fn replication(&self) -> &dyn ReplicationPolicy {
+        self.replication.as_ref()
+    }
+
+    /// Requested replication factor for a file: the `Replication` tag if
+    /// hints are enabled, else 1 (the DSS baseline stores one copy of
+    /// intermediate scratch data).
+    pub fn replication_factor(&self, tags: &TagSet) -> u32 {
+        if self.hints_enabled {
+            tags.replication().unwrap_or(1)
+        } else {
+            1
+        }
+    }
+
+    /// Serve a `getxattr` through the bottom-up providers. `None` means
+    /// the attribute is not system-provided (fall through to the plain
+    /// xattr store).
+    pub fn get_system_attr(
+        &self,
+        key: &str,
+        file: &FileMeta,
+        nodes: &[NodeState],
+    ) -> Option<String> {
+        if !self.hints_enabled {
+            return None;
+        }
+        self.getattrs.get(key).map(|p| p.get(file, nodes))
+    }
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Registry")
+            .field("hints_enabled", &self.hints_enabled)
+            .field("placements", &self.placements.iter().map(|p| p.name()).collect::<Vec<_>>())
+            .field("replication", &self.replication.name())
+            .field("getattrs", &self.getattrs.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hints::TagSet;
+
+    fn nodes(n: usize, capacity: u64) -> Vec<NodeState> {
+        (0..n)
+            .map(|i| NodeState {
+                node: NodeId(i + 1),
+                capacity,
+                used: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn baseline_ignores_hints() {
+        let reg = Registry::baseline();
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        let nodes = nodes(4, 1 << 30);
+        let mut state = PlacementState::default();
+        let mut ctx = PlacementCtx {
+            client: NodeId(3),
+            tags: &tags,
+            nodes: &nodes,
+            state: &mut state,
+        };
+        // Round-robin, not local: DSS carries tags but never dispatches.
+        let first = reg.place_chunk(&mut ctx, 0, 1024).unwrap();
+        let second = reg.place_chunk(&mut ctx, 1, 1024).unwrap();
+        assert_eq!(first, NodeId(1));
+        assert_eq!(second, NodeId(2));
+        assert_eq!(reg.placement_module(&tags), "placement.default");
+        assert_eq!(reg.replication_factor(&TagSet::from_pairs([("Replication", "8")])), 1);
+    }
+
+    #[test]
+    fn woss_dispatches_local() {
+        let reg = Registry::woss();
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        let nodes = nodes(4, 1 << 30);
+        let mut state = PlacementState::default();
+        let mut ctx = PlacementCtx {
+            client: NodeId(3),
+            tags: &tags,
+            nodes: &nodes,
+            state: &mut state,
+        };
+        assert_eq!(reg.place_chunk(&mut ctx, 0, 1024), Some(NodeId(3)));
+        assert_eq!(reg.placement_module(&tags), "placement.local");
+    }
+
+    #[test]
+    fn custom_module_registration() {
+        struct Pin7;
+        impl PlacementPolicy for Pin7 {
+            fn name(&self) -> &'static str {
+                "placement.pin7"
+            }
+            fn place(
+                &self,
+                ctx: &mut PlacementCtx<'_>,
+                _idx: u64,
+                bytes: u64,
+            ) -> Option<NodeId> {
+                if ctx.tags.get("Pin") == Some("7") && ctx.fits(NodeId(7), bytes) {
+                    Some(NodeId(7))
+                } else {
+                    None
+                }
+            }
+        }
+        let mut reg = Registry::woss();
+        reg.register_placement(Box::new(Pin7));
+        let tags = TagSet::from_pairs([("Pin", "7")]);
+        let nodes = nodes(8, 1 << 30);
+        let mut state = PlacementState::default();
+        let mut ctx = PlacementCtx {
+            client: NodeId(1),
+            tags: &tags,
+            nodes: &nodes,
+            state: &mut state,
+        };
+        assert_eq!(reg.place_chunk(&mut ctx, 0, 1024), Some(NodeId(7)));
+    }
+
+    #[test]
+    fn full_pool_returns_none() {
+        let reg = Registry::woss();
+        let tags = TagSet::new();
+        let mut ns = nodes(2, 1000);
+        ns[0].used = 1000;
+        ns[1].used = 1000;
+        let mut state = PlacementState::default();
+        let mut ctx = PlacementCtx {
+            client: NodeId(1),
+            tags: &tags,
+            nodes: &ns,
+            state: &mut state,
+        };
+        assert_eq!(reg.place_chunk(&mut ctx, 0, 1024), None);
+    }
+}

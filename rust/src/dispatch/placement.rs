@@ -1,0 +1,222 @@
+//! Data-placement optimization modules (paper Table 3, top half).
+//!
+//! Each module claims an allocation request when the file's tags carry
+//! its hint, and *declines* (returns `None`) otherwise — including when
+//! the hint cannot be honored (full node, missing group), in which case
+//! the dispatcher falls through to default round-robin. Hints are hints.
+
+use super::{PlacementCtx, PlacementPolicy};
+use crate::hints::Hint;
+use crate::storage::types::NodeId;
+
+/// `DP=local` — pipeline pattern. Prefer the writer's own storage node so
+/// the next pipeline stage (scheduled location-aware) reads locally.
+pub struct LocalPlacement;
+
+impl PlacementPolicy for LocalPlacement {
+    fn name(&self) -> &'static str {
+        "placement.local"
+    }
+
+    fn place(
+        &self,
+        ctx: &mut PlacementCtx<'_>,
+        _chunk_idx: u64,
+        chunk_bytes: u64,
+    ) -> Option<NodeId> {
+        if !matches!(ctx.tags.placement(), Some(Hint::PlacementLocal)) {
+            return None;
+        }
+        // "if space is available" — otherwise decline and let the
+        // default policy stripe it.
+        if ctx.fits(ctx.client, chunk_bytes) {
+            Some(ctx.client)
+        } else {
+            None
+        }
+    }
+}
+
+/// `DP=collocation <group>` — reduce pattern. All files tagged with the
+/// same group land on one anchor node so the reduce task can be scheduled
+/// there and consume every input locally.
+pub struct CollocatePlacement;
+
+impl PlacementPolicy for CollocatePlacement {
+    fn name(&self) -> &'static str {
+        "placement.collocate"
+    }
+
+    fn place(
+        &self,
+        ctx: &mut PlacementCtx<'_>,
+        _chunk_idx: u64,
+        chunk_bytes: u64,
+    ) -> Option<NodeId> {
+        let group = match ctx.tags.placement() {
+            Some(Hint::PlacementCollocate(g)) => g,
+            _ => return None,
+        };
+        if let Some(&anchor) = ctx.state.groups.get(&group) {
+            if ctx.fits(anchor, chunk_bytes) {
+                return Some(anchor);
+            }
+            // Anchor full: decline (files will spill via default path —
+            // the reduce task still finds most inputs on the anchor).
+            return None;
+        }
+        // First file of the group: anchor on the most-free node.
+        let anchor = ctx.most_free(chunk_bytes)?;
+        ctx.state.groups.insert(group, anchor);
+        Some(anchor)
+    }
+}
+
+/// `DP=scatter <n>` — scatter pattern. Every group of `n` contiguous
+/// chunks goes to one node, groups round-robin across the pool, so each
+/// downstream reader's disjoint region lives on one node and fine-grained
+/// location exposure lets the scheduler line readers up with their
+/// region.
+pub struct ScatterPlacement;
+
+impl PlacementPolicy for ScatterPlacement {
+    fn name(&self) -> &'static str {
+        "placement.scatter"
+    }
+
+    fn place(
+        &self,
+        ctx: &mut PlacementCtx<'_>,
+        chunk_idx: u64,
+        chunk_bytes: u64,
+    ) -> Option<NodeId> {
+        let group_size = match ctx.tags.placement() {
+            Some(Hint::PlacementScatter(n)) => n,
+            _ => return None,
+        };
+        let n = ctx.nodes.len() as u64;
+        if n == 0 {
+            return None;
+        }
+        let slot = (chunk_idx / group_size) % n;
+        let node = ctx.nodes[slot as usize].node;
+        if ctx.fits(node, chunk_bytes) {
+            Some(node)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::PlacementState;
+    use crate::hints::TagSet;
+    use crate::storage::types::NodeState;
+
+    fn nodes(n: usize) -> Vec<NodeState> {
+        (0..n)
+            .map(|i| NodeState {
+                node: NodeId(i + 1),
+                capacity: 1 << 30,
+                used: 0,
+            })
+            .collect()
+    }
+
+    fn ctx<'a>(
+        client: NodeId,
+        tags: &'a TagSet,
+        nodes: &'a [NodeState],
+        state: &'a mut PlacementState,
+    ) -> PlacementCtx<'a> {
+        PlacementCtx {
+            client,
+            tags,
+            nodes,
+            state,
+        }
+    }
+
+    #[test]
+    fn local_places_on_writer() {
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        let ns = nodes(4);
+        let mut st = PlacementState::default();
+        let mut c = ctx(NodeId(2), &tags, &ns, &mut st);
+        assert_eq!(LocalPlacement.place(&mut c, 0, 100), Some(NodeId(2)));
+        assert_eq!(LocalPlacement.place(&mut c, 5, 100), Some(NodeId(2)));
+    }
+
+    #[test]
+    fn local_declines_when_writer_full() {
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        let mut ns = nodes(4);
+        ns[1].used = ns[1].capacity; // client NodeId(2) is index 1
+        let mut st = PlacementState::default();
+        let mut c = ctx(NodeId(2), &tags, &ns, &mut st);
+        assert_eq!(LocalPlacement.place(&mut c, 0, 100), None);
+    }
+
+    #[test]
+    fn local_declines_untagged() {
+        let tags = TagSet::new();
+        let ns = nodes(4);
+        let mut st = PlacementState::default();
+        let mut c = ctx(NodeId(2), &tags, &ns, &mut st);
+        assert_eq!(LocalPlacement.place(&mut c, 0, 100), None);
+    }
+
+    #[test]
+    fn collocate_sticky_anchor() {
+        let tags = TagSet::from_pairs([("DP", "collocation g")]);
+        let ns = nodes(4);
+        let mut st = PlacementState::default();
+        let mut c = ctx(NodeId(1), &tags, &ns, &mut st);
+        let a = CollocatePlacement.place(&mut c, 0, 100).unwrap();
+        // different writer, same group → same anchor
+        let mut c2 = ctx(NodeId(3), &tags, &ns, &mut st);
+        let b = CollocatePlacement.place(&mut c2, 0, 100).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn collocate_groups_independent() {
+        let t1 = TagSet::from_pairs([("DP", "collocation g1")]);
+        let t2 = TagSet::from_pairs([("DP", "collocation g2")]);
+        let mut ns = nodes(4);
+        let mut st = PlacementState::default();
+        let a = CollocatePlacement
+            .place(&mut ctx(NodeId(1), &t1, &ns, &mut st), 0, 100)
+            .unwrap();
+        // consume capacity on the anchor so g2 picks a different most-free
+        ns.iter_mut().find(|n| n.node == a).unwrap().used = 500;
+        let b = CollocatePlacement
+            .place(&mut ctx(NodeId(1), &t2, &ns, &mut st), 0, 100)
+            .unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn scatter_stripes_groups() {
+        let tags = TagSet::from_pairs([("DP", "scatter 2")]);
+        let ns = nodes(3);
+        let mut st = PlacementState::default();
+        let mut c = ctx(NodeId(1), &tags, &ns, &mut st);
+        let places: Vec<_> = (0..8)
+            .map(|i| ScatterPlacement.place(&mut c, i, 100).unwrap().0)
+            .collect();
+        // groups of 2 chunks, round-robin over nodes 1,2,3
+        assert_eq!(places, vec![1, 1, 2, 2, 3, 3, 1, 1]);
+    }
+
+    #[test]
+    fn scatter_declines_other_tags() {
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        let ns = nodes(3);
+        let mut st = PlacementState::default();
+        let mut c = ctx(NodeId(1), &tags, &ns, &mut st);
+        assert_eq!(ScatterPlacement.place(&mut c, 0, 100), None);
+    }
+}

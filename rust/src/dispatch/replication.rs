@@ -1,0 +1,176 @@
+//! Replication optimization modules (paper §3.3).
+//!
+//! The prototype implements two policies at the storage nodes, selected
+//! per file through tags:
+//!
+//! * **eager parallel** — replicas are created while each block is being
+//!   written, fanning out from the primary to distinct nodes; used to
+//!   pre-spread hot-spot files (broadcast pattern).
+//! * **lazy chained** — replicas trickle down a chain in the background;
+//!   reliability without front-loading overhead (and the DSS default).
+//!
+//! Whether replica creation blocks write completion is governed by the
+//! `RepSmntc` tag (optimistic vs pessimistic), honoring the paper's
+//! Table 3 semantics.
+
+use super::{PlacementCtx, ReplicationPolicy};
+use crate::hints::{RepSemantics, TagSet};
+use crate::storage::types::NodeId;
+
+/// Pick `count` replica holders distinct from `primary` (and each other),
+/// round-robin from the manager cursor, capacity-checked.
+fn pick_targets(
+    ctx: &mut PlacementCtx<'_>,
+    primary: NodeId,
+    count: usize,
+    chunk_bytes: u64,
+) -> Vec<NodeId> {
+    let mut targets = Vec::with_capacity(count);
+    let n = ctx.nodes.len();
+    if n == 0 {
+        return targets;
+    }
+    let start = ctx.state.rr_cursor;
+    for probe in 0..n {
+        if targets.len() == count {
+            break;
+        }
+        let cand = &ctx.nodes[(start + probe) % n];
+        if cand.node != primary && cand.fits(chunk_bytes) && !targets.contains(&cand.node) {
+            targets.push(cand.node);
+        }
+    }
+    ctx.state.rr_cursor = (start + 1) % n;
+    targets
+}
+
+/// Eager parallel replication: used for broadcast-pattern hot files.
+pub struct EagerParallel;
+
+impl ReplicationPolicy for EagerParallel {
+    fn name(&self) -> &'static str {
+        "replication.eager_parallel"
+    }
+
+    fn replica_targets(
+        &self,
+        ctx: &mut PlacementCtx<'_>,
+        primary: NodeId,
+        factor: u32,
+        chunk_bytes: u64,
+    ) -> Vec<NodeId> {
+        let extra = factor.saturating_sub(1) as usize;
+        pick_targets(ctx, primary, extra, chunk_bytes)
+    }
+
+    fn blocking(&self, tags: &TagSet) -> bool {
+        // Optimistic (default): return to the application after the first
+        // replica (the primary write); replication proceeds eagerly in
+        // the background. Pessimistic: block until well replicated.
+        matches!(tags.replication_semantics(), RepSemantics::Pessimistic)
+    }
+}
+
+/// Lazy chained replication: reliability-oriented background chaining.
+pub struct LazyChained;
+
+impl ReplicationPolicy for LazyChained {
+    fn name(&self) -> &'static str {
+        "replication.lazy_chained"
+    }
+
+    fn replica_targets(
+        &self,
+        ctx: &mut PlacementCtx<'_>,
+        primary: NodeId,
+        factor: u32,
+        chunk_bytes: u64,
+    ) -> Vec<NodeId> {
+        let extra = factor.saturating_sub(1) as usize;
+        pick_targets(ctx, primary, extra, chunk_bytes)
+    }
+
+    fn blocking(&self, _tags: &TagSet) -> bool {
+        false // lazy: never blocks the writer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::PlacementState;
+    use crate::storage::types::NodeState;
+
+    fn nodes(n: usize) -> Vec<NodeState> {
+        (0..n)
+            .map(|i| NodeState {
+                node: NodeId(i + 1),
+                capacity: 1 << 30,
+                used: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn eager_picks_distinct_non_primary() {
+        let tags = TagSet::from_pairs([("Replication", "4")]);
+        let ns = nodes(8);
+        let mut st = PlacementState::default();
+        let mut ctx = PlacementCtx {
+            client: NodeId(1),
+            tags: &tags,
+            nodes: &ns,
+            state: &mut st,
+        };
+        let targets = EagerParallel.replica_targets(&mut ctx, NodeId(2), 4, 1024);
+        assert_eq!(targets.len(), 3, "factor 4 = primary + 3 replicas");
+        assert!(!targets.contains(&NodeId(2)));
+        let mut dedup = targets.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), targets.len());
+    }
+
+    #[test]
+    fn factor_capped_by_pool() {
+        let tags = TagSet::new();
+        let ns = nodes(3);
+        let mut st = PlacementState::default();
+        let mut ctx = PlacementCtx {
+            client: NodeId(1),
+            tags: &tags,
+            nodes: &ns,
+            state: &mut st,
+        };
+        let targets = EagerParallel.replica_targets(&mut ctx, NodeId(1), 16, 1024);
+        assert_eq!(targets.len(), 2, "only 2 other nodes exist");
+    }
+
+    #[test]
+    fn semantics_drive_blocking() {
+        assert!(!EagerParallel.blocking(&TagSet::new()), "optimistic default");
+        assert!(!EagerParallel.blocking(&TagSet::from_pairs([("RepSmntc", "optimistic")])));
+        assert!(EagerParallel.blocking(&TagSet::from_pairs([("RepSmntc", "pessimistic")])));
+        assert!(
+            !LazyChained.blocking(&TagSet::from_pairs([("RepSmntc", "pessimistic")])),
+            "lazy chaining never blocks"
+        );
+    }
+
+    #[test]
+    fn full_nodes_skipped() {
+        let tags = TagSet::new();
+        let mut ns = nodes(4);
+        ns[2].used = ns[2].capacity;
+        let mut st = PlacementState::default();
+        let mut ctx = PlacementCtx {
+            client: NodeId(1),
+            tags: &tags,
+            nodes: &ns,
+            state: &mut st,
+        };
+        let targets = EagerParallel.replica_targets(&mut ctx, NodeId(1), 4, 1024);
+        assert!(!targets.contains(&NodeId(3)), "full node must be skipped");
+        assert_eq!(targets.len(), 2);
+    }
+}

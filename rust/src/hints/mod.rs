@@ -1,0 +1,248 @@
+//! The cross-layer hint grammar (paper Table 3).
+//!
+//! Hints are plain `<key, value>` pairs carried in POSIX extended
+//! attributes — the paper's entire cross-layer mechanism. This module is
+//! the *mechanism* half of the mechanism/policy split (§5 design
+//! guidelines): it only parses and carries tags; the policies that react
+//! to them live in [`crate::dispatch`].
+//!
+//! Implemented hints:
+//!
+//! | Tag | Optimization |
+//! |-----|--------------|
+//! | `DP=local` | pipeline pattern: place blocks on the writer's node |
+//! | `DP=collocation <group>` | reduce pattern: co-place all files of a group |
+//! | `DP=scatter <n>` | scatter pattern: stripe every `n` contiguous chunks round-robin |
+//! | `Replication=<n>` | broadcast pattern: replicate blocks `n`× |
+//! | `RepSmntc=optimistic\|pessimistic` | return after first replica vs after full replication |
+//! | `CacheSize=<bytes>` | per-file client cache sizing |
+//! | `BlockSize=<bytes>` | application-informed chunk size (scatter/gather) |
+//! | `location` *(reserved, read-only)* | bottom-up: storage exposes replica locations |
+
+pub mod tagset;
+
+pub use tagset::TagSet;
+
+/// Reserved attribute through which the storage system exposes data
+/// location to the workflow runtime (bottom-up channel).
+pub const LOCATION_ATTR: &str = "location";
+
+/// A parsed, typed hint. Unknown keys are preserved in the [`TagSet`] but
+/// parse to [`Hint::Unknown`] — a legacy storage system would simply
+/// ignore them (the paper's incremental-adoption argument).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Hint {
+    /// `DP=local` — prefer the writer's own storage node.
+    PlacementLocal,
+    /// `DP=collocation <group>` — co-place all files tagged with the same
+    /// group on a single storage node.
+    PlacementCollocate(String),
+    /// `DP=scatter <n>` — place every `n` contiguous chunks on one node,
+    /// round-robin across nodes.
+    PlacementScatter(u64),
+    /// `Replication=<n>` — keep `n` replicas of every block.
+    Replication(u32),
+    /// `RepSmntc=...` — replication completion semantics.
+    ReplicationSemantics(RepSemantics),
+    /// `CacheSize=<bytes>` — per-file client cache budget.
+    CacheSize(u64),
+    /// `BlockSize=<bytes>` — application-informed chunk size.
+    BlockSize(u64),
+    /// Recognized key, malformed value (reported, then ignored — hints
+    /// are hints, not directives).
+    Malformed { key: String, value: String },
+    /// Unrecognized key (application-private metadata; ignored).
+    Unknown { key: String, value: String },
+}
+
+/// Replication completion semantics (Table 3 `RepSmntc`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RepSemantics {
+    /// Return to the application after the first replica exists; the
+    /// remaining replicas are created in the background.
+    #[default]
+    Optimistic,
+    /// Return only after every replica is durable.
+    Pessimistic,
+}
+
+/// Canonical tag keys.
+pub mod keys {
+    /// Data-placement policy selector.
+    pub const DP: &str = "DP";
+    /// Replication factor.
+    pub const REPLICATION: &str = "Replication";
+    /// Replication semantics.
+    pub const REP_SEMANTICS: &str = "RepSmntc";
+    /// Per-file cache budget.
+    pub const CACHE_SIZE: &str = "CacheSize";
+    /// Application-informed chunk size.
+    pub const BLOCK_SIZE: &str = "BlockSize";
+}
+
+/// Parse one `<key, value>` pair into a typed hint.
+pub fn parse(key: &str, value: &str) -> Hint {
+    match key {
+        keys::DP => parse_dp(value),
+        keys::REPLICATION => match value.trim().parse::<u32>() {
+            Ok(n) if n >= 1 => Hint::Replication(n),
+            _ => malformed(key, value),
+        },
+        keys::REP_SEMANTICS => match value.trim().to_ascii_lowercase().as_str() {
+            // the paper's Table 3 itself spells these loosely
+            // ("Optimisite/Pessimestic"); accept prefixes.
+            v if v.starts_with("optim") => {
+                Hint::ReplicationSemantics(RepSemantics::Optimistic)
+            }
+            v if v.starts_with("pessim") => {
+                Hint::ReplicationSemantics(RepSemantics::Pessimistic)
+            }
+            _ => malformed(key, value),
+        },
+        keys::CACHE_SIZE => match parse_size(value) {
+            Some(n) => Hint::CacheSize(n),
+            None => malformed(key, value),
+        },
+        keys::BLOCK_SIZE => match parse_size(value) {
+            Some(n) if n >= 1 => Hint::BlockSize(n),
+            _ => malformed(key, value),
+        },
+        _ => Hint::Unknown {
+            key: key.to_string(),
+            value: value.to_string(),
+        },
+    }
+}
+
+fn parse_dp(value: &str) -> Hint {
+    let v = value.trim();
+    if v.eq_ignore_ascii_case("local") {
+        return Hint::PlacementLocal;
+    }
+    if let Some(rest) = strip_word(v, "collocation") {
+        if rest.is_empty() {
+            return malformed(keys::DP, value);
+        }
+        return Hint::PlacementCollocate(rest.to_string());
+    }
+    if let Some(rest) = strip_word(v, "scatter") {
+        if let Ok(n) = rest.parse::<u64>() {
+            if n >= 1 {
+                return Hint::PlacementScatter(n);
+            }
+        }
+        return malformed(keys::DP, value);
+    }
+    malformed(keys::DP, value)
+}
+
+/// Case-insensitive `word` prefix followed by whitespace; returns the
+/// trimmed remainder.
+fn strip_word<'a>(v: &'a str, word: &str) -> Option<&'a str> {
+    if v.len() >= word.len() && v[..word.len()].eq_ignore_ascii_case(word) {
+        let rest = &v[word.len()..];
+        if rest.is_empty() || rest.starts_with(char::is_whitespace) {
+            return Some(rest.trim());
+        }
+    }
+    None
+}
+
+/// Parse sizes like `4096`, `64K`, `1M`, `2G`.
+fn parse_size(v: &str) -> Option<u64> {
+    let v = v.trim();
+    if v.is_empty() {
+        return None;
+    }
+    let (digits, mult) = match v.as_bytes()[v.len() - 1].to_ascii_uppercase() {
+        b'K' => (&v[..v.len() - 1], 1024u64),
+        b'M' => (&v[..v.len() - 1], 1024 * 1024),
+        b'G' => (&v[..v.len() - 1], 1024 * 1024 * 1024),
+        _ => (v, 1),
+    };
+    digits.trim().parse::<u64>().ok().map(|n| n * mult)
+}
+
+fn malformed(key: &str, value: &str) -> Hint {
+    Hint::Malformed {
+        key: key.to_string(),
+        value: value.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dp_local() {
+        assert_eq!(parse("DP", "local"), Hint::PlacementLocal);
+        assert_eq!(parse("DP", " LOCAL "), Hint::PlacementLocal);
+    }
+
+    #[test]
+    fn dp_collocation() {
+        assert_eq!(
+            parse("DP", "collocation merge_group_3"),
+            Hint::PlacementCollocate("merge_group_3".into())
+        );
+        assert!(matches!(
+            parse("DP", "collocation"),
+            Hint::Malformed { .. }
+        ));
+    }
+
+    #[test]
+    fn dp_scatter() {
+        assert_eq!(parse("DP", "scatter 16"), Hint::PlacementScatter(16));
+        assert!(matches!(parse("DP", "scatter 0"), Hint::Malformed { .. }));
+        assert!(matches!(parse("DP", "scatter x"), Hint::Malformed { .. }));
+        // "scattergun" must not match the scatter word-prefix
+        assert!(matches!(parse("DP", "scattergun 4"), Hint::Malformed { .. }));
+    }
+
+    #[test]
+    fn replication() {
+        assert_eq!(parse("Replication", "8"), Hint::Replication(8));
+        assert!(matches!(parse("Replication", "0"), Hint::Malformed { .. }));
+        assert!(matches!(
+            parse("Replication", "many"),
+            Hint::Malformed { .. }
+        ));
+    }
+
+    #[test]
+    fn rep_semantics_accepts_papers_spelling() {
+        assert_eq!(
+            parse("RepSmntc", "Optimisite"),
+            Hint::ReplicationSemantics(RepSemantics::Optimistic)
+        );
+        assert_eq!(
+            parse("RepSmntc", "Pessimestic"),
+            Hint::ReplicationSemantics(RepSemantics::Pessimistic)
+        );
+        assert_eq!(
+            parse("RepSmntc", "pessimistic"),
+            Hint::ReplicationSemantics(RepSemantics::Pessimistic)
+        );
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(parse("CacheSize", "4096"), Hint::CacheSize(4096));
+        assert_eq!(parse("BlockSize", "64K"), Hint::BlockSize(65536));
+        assert_eq!(parse("BlockSize", "1M"), Hint::BlockSize(1 << 20));
+        assert!(matches!(parse("BlockSize", "0"), Hint::Malformed { .. }));
+    }
+
+    #[test]
+    fn unknown_keys_preserved() {
+        assert_eq!(
+            parse("provenance", "stage3"),
+            Hint::Unknown {
+                key: "provenance".into(),
+                value: "stage3".into()
+            }
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! Raw extended-attribute sets attached to files.
+//!
+//! A [`TagSet`] is the wire-level form of the cross-layer channel: an
+//! ordered map of `<key, value>` string pairs, exactly what POSIX
+//! `setxattr`/`getxattr` carries. In the prototype's design every
+//! inter-component message related to a file is stamped with the file's
+//! `TagSet` ("tagged communication messages") so each component's
+//! dispatcher can trigger the matching optimization without extra
+//! manager round-trips.
+
+use super::{parse, Hint, RepSemantics};
+use std::collections::BTreeMap;
+
+/// An ordered set of extended attributes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TagSet {
+    tags: BTreeMap<String, String>,
+}
+
+impl TagSet {
+    /// Empty set (a legacy, hint-free file).
+    pub fn new() -> Self {
+        TagSet::default()
+    }
+
+    /// Build from `(key, value)` pairs.
+    pub fn from_pairs<K: Into<String>, V: Into<String>, I: IntoIterator<Item = (K, V)>>(
+        pairs: I,
+    ) -> Self {
+        TagSet {
+            tags: pairs
+                .into_iter()
+                .map(|(k, v)| (k.into(), v.into()))
+                .collect(),
+        }
+    }
+
+    /// Set (or replace) an attribute.
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.tags.insert(key.to_string(), value.to_string());
+    }
+
+    /// Get an attribute's raw value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.tags.get(key).map(String::as_str)
+    }
+
+    /// Remove an attribute; returns the previous value.
+    pub fn remove(&mut self, key: &str) -> Option<String> {
+        self.tags.remove(key)
+    }
+
+    /// Number of attributes.
+    pub fn len(&self) -> usize {
+        self.tags.len()
+    }
+
+    /// True when no attributes are set.
+    pub fn is_empty(&self) -> bool {
+        self.tags.is_empty()
+    }
+
+    /// Iterate raw pairs in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.tags.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Parse every pair into a typed [`Hint`].
+    pub fn hints(&self) -> Vec<Hint> {
+        self.iter().map(|(k, v)| parse(k, v)).collect()
+    }
+
+    /// The placement-relevant hint, if any (`DP=...` parses cleanly).
+    pub fn placement(&self) -> Option<Hint> {
+        self.get(super::keys::DP).map(|v| parse(super::keys::DP, v)).filter(|h| {
+            matches!(
+                h,
+                Hint::PlacementLocal | Hint::PlacementCollocate(_) | Hint::PlacementScatter(_)
+            )
+        })
+    }
+
+    /// The requested replication factor, if tagged and well-formed.
+    pub fn replication(&self) -> Option<u32> {
+        match self
+            .get(super::keys::REPLICATION)
+            .map(|v| parse(super::keys::REPLICATION, v))
+        {
+            Some(Hint::Replication(n)) => Some(n),
+            _ => None,
+        }
+    }
+
+    /// Replication semantics (defaults to optimistic, per Table 3).
+    pub fn replication_semantics(&self) -> RepSemantics {
+        match self
+            .get(super::keys::REP_SEMANTICS)
+            .map(|v| parse(super::keys::REP_SEMANTICS, v))
+        {
+            Some(Hint::ReplicationSemantics(s)) => s,
+            _ => RepSemantics::default(),
+        }
+    }
+
+    /// Application-informed chunk size, if tagged.
+    pub fn block_size(&self) -> Option<u64> {
+        match self
+            .get(super::keys::BLOCK_SIZE)
+            .map(|v| parse(super::keys::BLOCK_SIZE, v))
+        {
+            Some(Hint::BlockSize(n)) => Some(n),
+            _ => None,
+        }
+    }
+
+    /// Per-file cache budget, if tagged.
+    pub fn cache_size(&self) -> Option<u64> {
+        match self
+            .get(super::keys::CACHE_SIZE)
+            .map(|v| parse(super::keys::CACHE_SIZE, v))
+        {
+            Some(Hint::CacheSize(n)) => Some(n),
+            _ => None,
+        }
+    }
+}
+
+impl<'a> IntoIterator for &'a TagSet {
+    type Item = (&'a String, &'a String);
+    type IntoIter = std::collections::btree_map::Iter<'a, String, String>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.tags.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hints::Hint;
+
+    #[test]
+    fn set_get_remove() {
+        let mut t = TagSet::new();
+        assert!(t.is_empty());
+        t.set("DP", "local");
+        assert_eq!(t.get("DP"), Some("local"));
+        t.set("DP", "scatter 4");
+        assert_eq!(t.get("DP"), Some("scatter 4"), "set replaces");
+        assert_eq!(t.remove("DP"), Some("scatter 4".to_string()));
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let t = TagSet::from_pairs([
+            ("DP", "collocation g1"),
+            ("Replication", "4"),
+            ("RepSmntc", "pessimistic"),
+            ("BlockSize", "64K"),
+            ("CacheSize", "1M"),
+        ]);
+        assert_eq!(t.placement(), Some(Hint::PlacementCollocate("g1".into())));
+        assert_eq!(t.replication(), Some(4));
+        assert_eq!(t.replication_semantics(), RepSemantics::Pessimistic);
+        assert_eq!(t.block_size(), Some(65536));
+        assert_eq!(t.cache_size(), Some(1 << 20));
+    }
+
+    #[test]
+    fn defaults_when_untagged() {
+        let t = TagSet::new();
+        assert_eq!(t.placement(), None);
+        assert_eq!(t.replication(), None);
+        assert_eq!(t.replication_semantics(), RepSemantics::Optimistic);
+    }
+
+    #[test]
+    fn malformed_placement_is_none() {
+        let t = TagSet::from_pairs([("DP", "teleport")]);
+        assert_eq!(t.placement(), None, "hints are hints: malformed → default path");
+    }
+
+    #[test]
+    fn unknown_tags_carried_not_interpreted() {
+        let t = TagSet::from_pairs([("app.provenance", "stage-7")]);
+        assert_eq!(t.get("app.provenance"), Some("stage-7"));
+        assert_eq!(t.placement(), None);
+        assert_eq!(t.hints().len(), 1);
+        assert!(matches!(t.hints()[0], Hint::Unknown { .. }));
+    }
+}

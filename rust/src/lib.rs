@@ -1,0 +1,52 @@
+//! # WOSS — Workflow-Optimized Storage System
+//!
+//! Reproduction of *"The Case for Cross-Layer Optimizations in Storage: A
+//! Workflow-Optimized Storage System"* (Al-Kiswany, Vairavanathan, Costa,
+//! Yang, Ripeanu — 2013).
+//!
+//! The paper's thesis: POSIX **extended attributes** can act as a
+//! *bidirectional* communication channel between applications and the
+//! storage system, enabling per-file cross-layer optimizations without
+//! abandoning the POSIX interface. Top-down, the workflow runtime tags
+//! files with access-pattern hints (`DP=local`, `DP=collocation <g>`,
+//! `DP=scatter <n>`, `Replication=<n>`, ...); bottom-up, the storage
+//! exposes data location through the reserved `location` attribute so the
+//! scheduler can collocate computation with data.
+//!
+//! ## Crate layout
+//!
+//! * [`sim`] — discrete-event simulation substrate (virtual clock, network
+//!   fabric, disk models) standing in for the paper's 20-node cluster and
+//!   BG/P rack.
+//! * [`storage`] — the object-store substrate: metadata manager, storage
+//!   nodes, client SAI, chunking, replication.
+//! * [`hints`] — the typed hint grammar of Table 3.
+//! * [`dispatch`] — the paper's extensible dispatcher: tag-triggered
+//!   optimization modules (placement, replication, location exposure).
+//! * [`nfs`], [`gpfs`] — baseline storage systems used in the evaluation.
+//! * [`workflow`] — pyFlow-equivalent runtime with round-robin and
+//!   location-aware schedulers, plus the Swift-personality overhead model.
+//! * [`workloads`] — synthetic patterns + BLAST / modFTDock / Montage.
+//! * [`runtime`] — PJRT loader executing the AOT JAX/Pallas artifacts.
+//! * [`live`] — live engine: real bytes, real compute, std-thread actors.
+//! * [`coordinator`] — leader: config, experiment registry, reporting.
+//! * [`bench`] — experiment harness regenerating every paper figure/table.
+//! * [`util`] — in-tree substrates (CLI, stats, RNG, property testing)
+//!   since this build is fully offline.
+
+pub mod bench;
+pub mod coordinator;
+pub mod dispatch;
+pub mod gpfs;
+pub mod hints;
+pub mod live;
+pub mod nfs;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod util;
+pub mod workflow;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

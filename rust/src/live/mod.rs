@@ -1,0 +1,17 @@
+//! The live execution engine: real bytes, real threads, real compute.
+//!
+//! The simulator (`crate::sim`) reproduces the paper's figures; this
+//! module is the proof that the three-layer stack *composes*: an
+//! in-process WOSS deployment ([`store::LiveStore`]) holds actual chunk
+//! bytes across per-node stores, the same dispatcher registry routes
+//! placement/location decisions, and workflow tasks execute on a std
+//! worker pool calling the AOT JAX/Pallas kernels through the PJRT
+//! runtime (`crate::runtime`). `examples/montage_e2e.rs` drives it on a
+//! real workload and verifies data integrity end to end with the
+//! checksum kernel.
+
+pub mod engine;
+pub mod store;
+
+pub use engine::{LiveEngine, LiveReport};
+pub use store::LiveStore;

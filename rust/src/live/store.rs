@@ -1,0 +1,477 @@
+//! In-process WOSS deployment with real chunk bytes.
+//!
+//! The same dispatcher [`Registry`] that drives the simulator drives
+//! this store: chunk placement, replication fan-out, and the reserved
+//! `location` attribute all run the identical decision logic — only
+//! here the chunks are actual `Vec<u8>` held in per-node stores and the
+//! callers are concurrent worker threads.
+
+use crate::dispatch::{PlacementCtx, PlacementState, Registry};
+use crate::hints::TagSet;
+use crate::storage::types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+/// Default chunk size for the live store (256 KiB = one kernel tile).
+pub const LIVE_CHUNK: u64 = 256 * 1024;
+
+/// One storage node's chunk store.
+#[derive(Default)]
+struct NodeStore {
+    chunks: Mutex<HashMap<(FileId, u64), Vec<u8>>>,
+}
+
+/// Manager-side state (namespace + placement), one lock.
+struct ManagerState {
+    files: HashMap<String, FileMeta>,
+    nodes: Vec<NodeState>,
+    placement: PlacementState,
+    next_id: u64,
+}
+
+/// The live object store.
+pub struct LiveStore {
+    registry: Registry,
+    manager: Mutex<ManagerState>,
+    stores: Vec<NodeStore>,
+    /// Counters (lock-free).
+    pub bytes_written: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub local_reads: AtomicU64,
+    pub remote_reads: AtomicU64,
+    pub setattr_ops: AtomicU64,
+    pub getattr_ops: AtomicU64,
+    /// Pending tags set before file creation.
+    pending_tags: RwLock<HashMap<String, TagSet>>,
+    /// Failure injection: nodes marked dead serve nothing.
+    dead: RwLock<Vec<bool>>,
+}
+
+impl LiveStore {
+    /// A deployment over `n_nodes` stores with `capacity` bytes each.
+    pub fn new(registry: Registry, n_nodes: usize, capacity: u64) -> Self {
+        LiveStore {
+            registry,
+            manager: Mutex::new(ManagerState {
+                files: HashMap::new(),
+                nodes: (0..n_nodes)
+                    .map(|i| NodeState {
+                        node: NodeId(i),
+                        capacity,
+                        used: 0,
+                    })
+                    .collect(),
+                placement: PlacementState::default(),
+                next_id: 1,
+            }),
+            stores: (0..n_nodes).map(|_| NodeStore::default()).collect(),
+            bytes_written: AtomicU64::new(0),
+            bytes_read: AtomicU64::new(0),
+            local_reads: AtomicU64::new(0),
+            remote_reads: AtomicU64::new(0),
+            setattr_ops: AtomicU64::new(0),
+            getattr_ops: AtomicU64::new(0),
+            pending_tags: RwLock::new(HashMap::new()),
+            dead: RwLock::new(vec![false; n_nodes]),
+        }
+    }
+
+    /// Failure injection: mark a node dead. Chunks it held are only
+    /// recoverable through replicas on surviving nodes — the
+    /// reliability rationale behind the lazy-chained replication policy.
+    pub fn kill_node(&self, node: NodeId) {
+        self.dead.write().unwrap()[node.0] = true;
+    }
+
+    /// Revive a node (its chunk store contents survive the outage).
+    pub fn revive_node(&self, node: NodeId) {
+        self.dead.write().unwrap()[node.0] = false;
+    }
+
+    /// Is the node currently alive?
+    pub fn is_alive(&self, node: NodeId) -> bool {
+        !self.dead.read().unwrap()[node.0]
+    }
+
+    /// WOSS deployment (full hint registry).
+    pub fn woss(n_nodes: usize) -> Self {
+        LiveStore::new(Registry::woss(), n_nodes, u64::MAX / 2)
+    }
+
+    /// DSS baseline deployment.
+    pub fn dss(n_nodes: usize) -> Self {
+        LiveStore::new(Registry::baseline(), n_nodes, u64::MAX / 2)
+    }
+
+    /// Number of storage nodes.
+    pub fn n_nodes(&self) -> usize {
+        self.stores.len()
+    }
+
+    /// Set an extended attribute (top-down channel). Works before the
+    /// file exists — the runtime tags outputs ahead of execution.
+    pub fn set_xattr(&self, path: &str, key: &str, value: &str) {
+        self.setattr_ops.fetch_add(1, Ordering::Relaxed);
+        let mut mgr = self.manager.lock().unwrap();
+        if let Some(meta) = mgr.files.get_mut(path) {
+            meta.tags.set(key, value);
+            return;
+        }
+        drop(mgr);
+        self.pending_tags
+            .write()
+            .unwrap()
+            .entry(path.to_string())
+            .or_default()
+            .set(key, value);
+    }
+
+    /// Get an extended attribute (bottom-up channel): system-reserved
+    /// attributes are served by the registry's providers.
+    pub fn get_xattr(&self, path: &str, key: &str) -> Option<String> {
+        self.getattr_ops.fetch_add(1, Ordering::Relaxed);
+        let mgr = self.manager.lock().unwrap();
+        let meta = mgr.files.get(path)?;
+        self.registry
+            .get_system_attr(key, meta, &mgr.nodes)
+            .or_else(|| meta.tags.get(key).map(str::to_string))
+    }
+
+    /// Replica holders (decision-time view for the scheduler).
+    pub fn locations(&self, path: &str) -> Vec<NodeId> {
+        if !self.registry.hints_enabled() {
+            return Vec::new();
+        }
+        let mgr = self.manager.lock().unwrap();
+        mgr.files.get(path).map(|m| m.holders()).unwrap_or_default()
+    }
+
+    /// Stored size of a file.
+    pub fn file_size(&self, path: &str) -> Option<u64> {
+        self.manager.lock().unwrap().files.get(path).map(|m| m.size)
+    }
+
+    /// Create + write a file from `client`, dispatching placement
+    /// through the registry (pending tags merge in).
+    pub fn write_file(
+        &self,
+        client: NodeId,
+        path: &str,
+        data: &[u8],
+        tags: &TagSet,
+    ) -> Result<(), StorageError> {
+        let mut all_tags = self
+            .pending_tags
+            .write()
+            .unwrap()
+            .remove(path)
+            .unwrap_or_default();
+        for (k, v) in tags.iter() {
+            all_tags.set(k, v);
+        }
+
+        // Placement decisions under the manager lock.
+        let (meta, placements) = {
+            let mut mgr = self.manager.lock().unwrap();
+            if mgr.files.contains_key(path) {
+                return Err(StorageError::AlreadyExists(path.to_string()));
+            }
+            let chunk_size = all_tags.block_size().unwrap_or(LIVE_CHUNK);
+            let n_chunks = FileMeta::chunk_count(data.len() as u64, chunk_size);
+            let factor = self.registry.replication_factor(&all_tags);
+            let mut chunks = Vec::with_capacity(n_chunks as usize);
+            let mut placements = Vec::with_capacity(n_chunks as usize);
+            for idx in 0..n_chunks {
+                let lo = (idx * chunk_size) as usize;
+                let hi = ((idx + 1) * chunk_size).min(data.len() as u64) as usize;
+                let bytes = (hi - lo) as u64;
+                let ManagerState {
+                    ref nodes,
+                    ref mut placement,
+                    ..
+                } = *mgr;
+                let mut ctx = PlacementCtx {
+                    client,
+                    tags: &all_tags,
+                    nodes,
+                    state: placement,
+                };
+                let primary = self
+                    .registry
+                    .place_chunk(&mut ctx, idx, bytes)
+                    .ok_or(StorageError::NoSpace(bytes))?;
+                let replicas = if factor > 1 {
+                    let ManagerState {
+                        ref nodes,
+                        ref mut placement,
+                        ..
+                    } = *mgr;
+                    let mut rctx = PlacementCtx {
+                        client,
+                        tags: &all_tags,
+                        nodes,
+                        state: placement,
+                    };
+                    self.registry
+                        .replication()
+                        .replica_targets(&mut rctx, primary, factor, bytes)
+                } else {
+                    Vec::new()
+                };
+                let mut all = vec![primary];
+                all.extend(replicas.iter().copied());
+                for holder in &all {
+                    if let Some(n) = mgr.nodes.iter_mut().find(|n| n.node == *holder) {
+                        n.used += bytes;
+                    }
+                }
+                chunks.push(ChunkMeta { replicas: all });
+                placements.push((idx, lo, hi));
+            }
+            let id = FileId(mgr.next_id);
+            mgr.next_id += 1;
+            let meta = FileMeta {
+                id,
+                size: data.len() as u64,
+                chunk_size,
+                tags: all_tags,
+                chunks,
+                creator: client,
+            };
+            mgr.files.insert(path.to_string(), meta.clone());
+            (meta, placements)
+        };
+
+        // Data path outside the manager lock: copy bytes to each holder.
+        for (idx, lo, hi) in placements {
+            let payload = &data[lo..hi];
+            for holder in &meta.chunks[idx as usize].replicas {
+                self.stores[holder.0]
+                    .chunks
+                    .lock()
+                    .unwrap()
+                    .insert((meta.id, idx), payload.to_vec());
+            }
+        }
+        self.bytes_written
+            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Read a whole file into a buffer from `client`'s perspective
+    /// (locality counted per chunk).
+    pub fn read_file(&self, client: NodeId, path: &str) -> Result<Vec<u8>, StorageError> {
+        let meta = {
+            let mgr = self.manager.lock().unwrap();
+            mgr.files
+                .get(path)
+                .cloned()
+                .ok_or_else(|| StorageError::NotFound(path.to_string()))?
+        };
+        let mut out = Vec::with_capacity(meta.size as usize);
+        for (idx, chunk) in meta.chunks.iter().enumerate() {
+            // Fail over to the first live replica; error only when every
+            // holder of the chunk is down.
+            let live: Vec<NodeId> = chunk
+                .replicas
+                .iter()
+                .copied()
+                .filter(|&n| self.is_alive(n))
+                .collect();
+            if live.is_empty() {
+                return Err(StorageError::Invalid(format!(
+                    "all {} replicas of chunk {idx} of {path} are on dead nodes",
+                    chunk.replicas.len()
+                )));
+            }
+            let source = if live.contains(&client) {
+                self.local_reads.fetch_add(1, Ordering::Relaxed);
+                client
+            } else {
+                self.remote_reads.fetch_add(1, Ordering::Relaxed);
+                live[0]
+            };
+            let store = self.stores[source.0].chunks.lock().unwrap();
+            let bytes = store
+                .get(&(meta.id, idx as u64))
+                .ok_or_else(|| StorageError::Invalid(format!("missing chunk {idx} of {path}")))?;
+            out.extend_from_slice(bytes);
+        }
+        self.bytes_read.fetch_add(out.len() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Delete a file and free its chunks.
+    pub fn delete(&self, path: &str) -> Result<(), StorageError> {
+        let meta = {
+            let mut mgr = self.manager.lock().unwrap();
+            let meta = mgr
+                .files
+                .remove(path)
+                .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
+            for (idx, chunk) in meta.chunks.iter().enumerate() {
+                let bytes = meta.chunk_bytes(idx as u64);
+                for holder in &chunk.replicas {
+                    if let Some(n) = mgr.nodes.iter_mut().find(|n| n.node == *holder) {
+                        n.used = n.used.saturating_sub(bytes);
+                    }
+                }
+            }
+            meta
+        };
+        for (idx, chunk) in meta.chunks.iter().enumerate() {
+            for holder in &chunk.replicas {
+                self.stores[holder.0]
+                    .chunks
+                    .lock()
+                    .unwrap()
+                    .remove(&(meta.id, idx as u64));
+            }
+        }
+        Ok(())
+    }
+
+    /// Does the store expose data location?
+    pub fn exposes_location(&self) -> bool {
+        self.registry.hints_enabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn roundtrip_bytes_exact() {
+        let store = LiveStore::woss(4);
+        let data: Vec<u8> = (0..600_000u32).map(|i| (i % 251) as u8).collect();
+        store
+            .write_file(NodeId(1), "/f", &data, &TagSet::new())
+            .unwrap();
+        let back = store.read_file(NodeId(2), "/f").unwrap();
+        assert_eq!(back, data, "bytes must survive the storage path");
+        assert_eq!(store.file_size("/f"), Some(600_000));
+    }
+
+    #[test]
+    fn local_hint_places_all_chunks_on_writer() {
+        let store = LiveStore::woss(4);
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        let data = vec![7u8; 1_000_000];
+        store.write_file(NodeId(3), "/local", &data, &tags).unwrap();
+        assert_eq!(store.locations("/local"), vec![NodeId(3)]);
+        // Reading from the writer is all-local.
+        store.read_file(NodeId(3), "/local").unwrap();
+        assert!(store.local_reads.load(Ordering::Relaxed) > 0);
+        assert_eq!(store.remote_reads.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn location_attr_via_getxattr() {
+        let store = LiveStore::woss(4);
+        store
+            .set_xattr("/out", "DP", "local");
+        store
+            .write_file(NodeId(2), "/out", &[1u8; 1000], &TagSet::new())
+            .unwrap();
+        let loc = store.get_xattr("/out", "location").unwrap();
+        assert_eq!(loc, "n2", "pending tag honored + location exposed");
+    }
+
+    #[test]
+    fn dss_hides_location_and_ignores_hints() {
+        let store = LiveStore::dss(4);
+        let tags = TagSet::from_pairs([("DP", "local"), ("Replication", "3")]);
+        store.write_file(NodeId(1), "/f", &[0u8; 1000], &tags).unwrap();
+        assert!(store.locations("/f").is_empty());
+        assert_eq!(store.get_xattr("/f", "location"), None);
+        assert!(!store.exposes_location());
+    }
+
+    #[test]
+    fn replication_copies_chunks() {
+        let store = LiveStore::woss(5);
+        let tags = TagSet::from_pairs([("Replication", "3")]);
+        store
+            .write_file(NodeId(0), "/db", &[9u8; 600_000], &tags)
+            .unwrap();
+        assert!(store.locations("/db").len() >= 3);
+        // Replica holders serve a large share of chunk reads locally
+        // (replica targets rotate per chunk, so not necessarily all).
+        for holder in store.locations("/db") {
+            store.read_file(holder, "/db").unwrap();
+        }
+        let local = store.local_reads.load(Ordering::Relaxed);
+        let remote = store.remote_reads.load(Ordering::Relaxed);
+        assert!(
+            local > remote,
+            "replication should localize most reads: {local} local vs {remote} remote"
+        );
+    }
+
+    #[test]
+    fn concurrent_writers_and_readers() {
+        let store = Arc::new(LiveStore::woss(8));
+        let mut handles = Vec::new();
+        for w in 0..8usize {
+            let st = Arc::clone(&store);
+            handles.push(std::thread::spawn(move || {
+                let data: Vec<u8> = (0..300_000u32)
+                    .map(|i| ((i as usize * (w + 1)) % 256) as u8)
+                    .collect();
+                let tags = TagSet::from_pairs([("DP", "local")]);
+                st.write_file(NodeId(w % 8), &format!("/t{w}"), &data, &tags)
+                    .unwrap();
+                let back = st.read_file(NodeId((w + 1) % 8), &format!("/t{w}")).unwrap();
+                assert_eq!(back, data);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(store.bytes_written.load(Ordering::Relaxed), 8 * 300_000);
+    }
+
+    #[test]
+    fn failure_injection_replicas_survive() {
+        let store = LiveStore::woss(5);
+        let tags = TagSet::from_pairs([("Replication", "3")]);
+        let data: Vec<u8> = (0..700_000u32).map(|i| (i % 241) as u8).collect();
+        store.write_file(NodeId(0), "/db", &data, &tags).unwrap();
+        let holders = store.locations("/db");
+        assert!(holders.len() >= 3);
+        // Kill one holder: reads must fail over and return exact bytes.
+        store.kill_node(holders[0]);
+        let back = store.read_file(NodeId(4), "/db").unwrap();
+        assert_eq!(back, data, "replica failover must preserve bytes");
+        store.revive_node(holders[0]);
+    }
+
+    #[test]
+    fn failure_injection_unreplicated_file_lost() {
+        let store = LiveStore::woss(3);
+        store
+            .write_file(NodeId(1), "/single", &[7u8; 400_000], &TagSet::from_pairs([("DP", "local")]))
+            .unwrap();
+        store.kill_node(NodeId(1));
+        assert!(
+            store.read_file(NodeId(0), "/single").is_err(),
+            "an unreplicated file on a dead node is unreadable"
+        );
+        store.revive_node(NodeId(1));
+        assert!(store.read_file(NodeId(0), "/single").is_ok(), "outage, not loss");
+    }
+
+    #[test]
+    fn delete_frees_chunks() {
+        let store = LiveStore::woss(3);
+        store
+            .write_file(NodeId(0), "/f", &[1u8; 100_000], &TagSet::new())
+            .unwrap();
+        store.delete("/f").unwrap();
+        assert!(store.read_file(NodeId(0), "/f").is_err());
+        assert!(store.delete("/f").is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! `woss` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `experiment <id|all>` — regenerate a paper figure/table on the
+//!   simulated testbed (`woss list` shows ids). `--runs`, `--seed`,
+//!   `--json out.json`, `--config file.toml`, `--profile cluster|bgp`.
+//! * `live` — run a workload on the live engine (real bytes, real PJRT
+//!   kernels): `--workload pipeline|montage`, `--nodes`, `--workers`.
+//! * `list` — experiment ids.
+//! * `calib` — print the active calibration.
+
+use anyhow::{anyhow, Result};
+use woss::bench::experiments;
+use woss::coordinator::{config, report};
+use woss::live::{LiveEngine, LiveStore};
+use woss::util::cli::Args;
+use woss::workloads;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("experiment") => cmd_experiment(args),
+        Some("live") => cmd_live(args),
+        Some("list") => {
+            for id in experiments::ids() {
+                println!("{id}");
+            }
+            Ok(())
+        }
+        Some("calib") => {
+            let calib = config::load_calib(
+                args.get_or("profile", "cluster"),
+                args.get("config"),
+            )?;
+            println!("{calib:#?}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown command '{other}' (experiment|live|list|calib)")),
+        None => {
+            println!("woss — workflow-optimized storage system (paper reproduction)");
+            println!("usage: woss <experiment|live|list|calib> [options]");
+            println!("  woss experiment all --runs 5 --json results.json");
+            println!("  woss experiment fig5 --runs 20");
+            println!("  woss live --workload montage --nodes 8 --workers 8");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("usage: woss experiment <id|all>"))?;
+    let runs = args.get_parse("runs", 5usize);
+    let seed = args.get_parse("seed", 42u64);
+    // Config overrides apply through the experiment drivers' defaults;
+    // the drivers construct their own testbeds, so overrides are
+    // currently limited to validating the file parses (future work:
+    // thread the calib through every driver).
+    if let Some(cfg) = args.get("config") {
+        let _ = config::load_calib(args.get_or("profile", "cluster"), Some(cfg))?;
+    }
+
+    let reports = if id == "all" {
+        experiments::run_all(runs, seed)
+    } else {
+        vec![experiments::run(id, runs, seed)
+            .ok_or_else(|| anyhow!("unknown experiment '{id}'; see `woss list`"))?]
+    };
+    report::print_reports(&reports);
+    if let Some(path) = args.get("json") {
+        report::write_reports(&reports, std::path::Path::new(path))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_live(args: &Args) -> Result<()> {
+    let nodes = args.get_parse("nodes", 8usize);
+    let workers = args.get_parse("workers", 8usize);
+    let workload = args.get_or("workload", "pipeline");
+    let hints = !args.has_flag("no-hints");
+
+    let wf = match workload {
+        "pipeline" => workloads::pipeline(nodes.min(8), 0.01, hints),
+        "montage" => workloads::Montage {
+            inputs: 12,
+            hints,
+            scale: 0.05,
+        }
+        .build(),
+        other => return Err(anyhow!("unknown workload '{other}' (pipeline|montage)")),
+    };
+
+    let store = if hints {
+        LiveStore::woss(nodes)
+    } else {
+        LiveStore::dss(nodes)
+    };
+    let engine = LiveEngine::new(store, workers)?;
+    let rep = engine.run(&wf)?;
+    let verified = engine.verify(&rep)?;
+    println!("live run: {} tasks in {:.2}s", rep.tasks, rep.elapsed_secs);
+    println!(
+        "  storage: {:.1} MB written, {:.1} MB read, {:.1} MB/s aggregate",
+        rep.bytes_written as f64 / 1048576.0,
+        rep.bytes_read as f64 / 1048576.0,
+        rep.throughput_mbps()
+    );
+    println!(
+        "  locality: {:.0}% of chunk reads local ({} local / {} remote)",
+        rep.locality() * 100.0,
+        rep.local_reads,
+        rep.remote_reads
+    );
+    println!("  kernels: {:?}", rep.kernel_execs);
+    println!("  integrity: {verified} files verified by checksum kernel");
+    Ok(())
+}

@@ -1,0 +1,371 @@
+//! NFS baseline: a single well-provisioned server.
+//!
+//! The paper's backend baseline is an NFS server on a bigger machine
+//! (8 cores, 8 GB RAM, RAID-5 over six SATA disks, 1 Gbps NIC). Its
+//! structural weakness in the experiments is exactly what this model
+//! captures: every byte of every client's traffic serializes on one
+//! server NIC and one disk array, softened only by the server's page
+//! cache (which is why the paper notes "NFS only provided competitive
+//! performance under cache friendly workloads").
+//!
+//! The model: whole files move client↔server over the shared fabric;
+//! reads hit an LRU page cache (bytes-accurate) before touching RAID-5;
+//! writes land in the cache and flush to disk asynchronously (blocking
+//! only the server's disk resource, not the client — close-to-open NFS
+//! semantics); every call pays the per-op server overhead. xattrs are
+//! accepted and stored but trigger nothing, and location is never
+//! exposed — NFS is the "legacy storage + hint-passing application"
+//! corner of the incremental-adoption matrix.
+
+use crate::hints::TagSet;
+use crate::sim::{Calib, Cluster, Disk, DiskKind, Dur, Metrics, MultiResource, SimTime};
+use crate::storage::model::StorageModel;
+use crate::storage::types::{NodeId, StorageError};
+use std::collections::BTreeMap;
+
+/// Server-side page-cache entry state.
+#[derive(Debug, Clone)]
+struct CacheEntry {
+    /// Cached bytes of the file (whole-file granularity: workflow files
+    /// are written/read sequentially end-to-end).
+    bytes: u64,
+    /// LRU stamp.
+    last_use: u64,
+}
+
+/// The NFS server model.
+pub struct NfsServer {
+    files: BTreeMap<String, (u64, TagSet)>,
+    /// RAID-5 device (lives at the backend endpoint, outside the
+    /// cluster's per-node disks).
+    disk: Disk,
+    /// Server CPU (request processing).
+    cpu: MultiResource,
+    op_cost: Dur,
+    cache: BTreeMap<String, CacheEntry>,
+    cache_capacity: u64,
+    cache_used: u64,
+    lru_clock: u64,
+    /// Client-side OS cache: (client, path) fully read before, served
+    /// locally when it fits `Calib::os_cache_bytes`.
+    client_cache: std::collections::HashSet<(NodeId, String)>,
+    metrics: Metrics,
+}
+
+impl NfsServer {
+    /// Build the server from calibration.
+    pub fn new(calib: &Calib) -> Self {
+        NfsServer {
+            files: BTreeMap::new(),
+            disk: Disk::new(DiskKind::Raid5, &calib.disk),
+            cpu: MultiResource::new(8),
+            op_cost: Dur::from_millis_f64(calib.nfs_op_ms),
+            cache: BTreeMap::new(),
+            cache_capacity: calib.nfs_cache_bytes,
+            cache_used: 0,
+            lru_clock: 0,
+            client_cache: std::collections::HashSet::new(),
+            metrics: Metrics::new(),
+        }
+    }
+
+    /// Pre-load a file (dataset already resident on the backend before
+    /// the workflow starts — the stage-in source).
+    pub fn preload(&mut self, path: &str, size: u64) {
+        self.files.insert(path.to_string(), (size, TagSet::new()));
+    }
+
+    fn touch_cache(&mut self, path: &str, bytes: u64) {
+        self.lru_clock += 1;
+        let clock = self.lru_clock;
+        let add = match self.cache.get_mut(path) {
+            Some(e) => {
+                e.last_use = clock;
+                let grow = bytes.saturating_sub(e.bytes);
+                e.bytes = e.bytes.max(bytes);
+                grow
+            }
+            None => {
+                self.cache.insert(
+                    path.to_string(),
+                    CacheEntry {
+                        bytes,
+                        last_use: clock,
+                    },
+                );
+                bytes
+            }
+        };
+        self.cache_used += add;
+        // LRU eviction.
+        while self.cache_used > self.cache_capacity {
+            let victim = self
+                .cache
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| k.clone())
+                .expect("cache non-empty while over capacity");
+            let e = self.cache.remove(&victim).unwrap();
+            self.cache_used -= e.bytes;
+        }
+    }
+
+    fn cached_bytes(&self, path: &str) -> u64 {
+        self.cache.get(path).map(|e| e.bytes).unwrap_or(0)
+    }
+
+    /// Server endpoint in the fabric.
+    fn server(&self, cluster: &Cluster) -> NodeId {
+        cluster.backend()
+    }
+}
+
+impl StorageModel for NfsServer {
+    fn name(&self) -> String {
+        "NFS".to_string()
+    }
+
+    fn write_file(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        size: u64,
+        tags: &TagSet,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        let server = self.server(cluster);
+        let t = cluster.fuse_op(at);
+        let cpu = self.cpu.acquire(t, self.op_cost);
+        let xfer = cluster.fabric.transfer(client, server, size, cpu.end);
+        self.metrics.net_bytes += size;
+        self.metrics.chunk_writes += 1;
+        // Write-back: data lands in the page cache; flush occupies the
+        // disk but does not block the client (close-to-open semantics).
+        self.touch_cache(path, size);
+        self.disk.write(size, xfer.end);
+        self.client_cache.retain(|(_, p)| p != path);
+        self.files.insert(path.to_string(), (size, tags.clone()));
+        Ok(cluster.fuse_op(xfer.end))
+    }
+
+    fn read_file(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        let size = self
+            .files
+            .get(path)
+            .map(|(s, _)| *s)
+            .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
+        self.read_range(cluster, client, path, 0, size, at)
+    }
+
+    fn read_range(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        offset: u64,
+        len: u64,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        let size = self
+            .files
+            .get(path)
+            .map(|(s, _)| *s)
+            .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
+        let server = self.server(cluster);
+        let len = len.min(size.saturating_sub(offset));
+        let t = cluster.fuse_op(at);
+        // NFS client page cache: a full re-read by the same client is
+        // served from client memory.
+        if size <= cluster.calib().os_cache_bytes
+            && self.client_cache.contains(&(client, path.to_string()))
+        {
+            self.metrics.cache_hit_bytes += len;
+            self.metrics.local_bytes += len;
+            return Ok(cluster.fuse_op(t));
+        }
+        let cpu = self.cpu.acquire(t, self.op_cost);
+        // Cache split: whole-file granularity LRU.
+        let cached = self.cached_bytes(path).min(size);
+        let hit = ((cached.saturating_sub(offset)).min(len)) as u64;
+        let miss = len - hit;
+        self.metrics.cache_hit_bytes += hit;
+        self.metrics.cache_miss_bytes += miss;
+        let disk_done = if miss > 0 {
+            let span = self.disk.read(miss, cpu.end);
+            span.end
+        } else {
+            cpu.end
+        };
+        self.metrics.chunk_reads += 1;
+        self.metrics.net_bytes += len;
+        let xfer = cluster.fabric.transfer(server, client, len, disk_done);
+        self.touch_cache(path, offset + len);
+        if offset == 0 && len >= size {
+            self.client_cache.insert((client, path.to_string()));
+        }
+        Ok(cluster.fuse_op(xfer.end))
+    }
+
+    fn set_xattr(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        key: &str,
+        value: &str,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        // Legacy storage: accepts the attribute, optimizes nothing.
+        let server = self.server(cluster);
+        let t = cluster.fuse_op(at);
+        let rpc = cluster.fabric.rpc(client, server, t);
+        let cpu = self.cpu.acquire(rpc.end, self.op_cost);
+        if let Some((_, tags)) = self.files.get_mut(path) {
+            tags.set(key, value);
+        }
+        let back = cluster.fabric.rpc(server, client, cpu.end);
+        Ok(back.end)
+    }
+
+    fn get_xattr(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        key: &str,
+        at: SimTime,
+    ) -> Result<(Option<String>, SimTime), StorageError> {
+        let server = self.server(cluster);
+        let t = cluster.fuse_op(at);
+        let rpc = cluster.fabric.rpc(client, server, t);
+        let cpu = self.cpu.acquire(rpc.end, self.op_cost);
+        let back = cluster.fabric.rpc(server, client, cpu.end);
+        let value = self
+            .files
+            .get(path)
+            .and_then(|(_, tags)| tags.get(key))
+            .map(str::to_string);
+        // `location` is NOT served: NFS does not expose data location.
+        Ok((value, back.end))
+    }
+
+    fn locations(&self, _path: &str) -> Vec<NodeId> {
+        Vec::new() // never exposed
+    }
+
+    fn file_size(&self, path: &str) -> Option<u64> {
+        self.files.get(path).map(|(s, _)| *s)
+    }
+
+    fn delete(&mut self, path: &str) -> Result<(), StorageError> {
+        if let Some(e) = self.cache.remove(path) {
+            self.cache_used -= e.bytes;
+        }
+        self.client_cache.retain(|(_, p)| p != path);
+        self.files
+            .remove(path)
+            .map(|_| ())
+            .ok_or_else(|| StorageError::NotFound(path.to_string()))
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1024 * 1024;
+
+    fn setup() -> (Cluster, NfsServer) {
+        let calib = Calib::default();
+        let cluster = Cluster::new(20, DiskKind::RamDisk, &calib);
+        (cluster, NfsServer::new(&calib))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (mut cl, mut nfs) = setup();
+        let w = nfs
+            .write_file(&mut cl, NodeId(1), "/in", 100 * MB, &TagSet::new(), SimTime::ZERO)
+            .unwrap();
+        let r = nfs.read_file(&mut cl, NodeId(2), "/in", w).unwrap();
+        assert!(r > w);
+        assert_eq!(nfs.file_size("/in"), Some(100 * MB));
+    }
+
+    #[test]
+    fn server_nic_serializes_clients() {
+        let (mut cl, mut nfs) = setup();
+        nfs.preload("/db", 100 * MB);
+        // warm cache so disk is not the bottleneck
+        nfs.read_file(&mut cl, NodeId(1), "/db", SimTime::ZERO).unwrap();
+        let mut finishes = Vec::new();
+        for c in 2..12 {
+            let done = nfs.read_file(&mut cl, NodeId(c), "/db", SimTime::ZERO).unwrap();
+            finishes.push(done.as_secs_f64());
+        }
+        let max = finishes.iter().cloned().fold(0.0, f64::max);
+        // 10 × 100MB over one 117MB/s NIC ≥ ~8.5s
+        assert!(max > 8.0, "server NIC must serialize: {max}");
+    }
+
+    #[test]
+    fn cache_hit_skips_disk() {
+        let (mut cl, mut nfs) = setup();
+        nfs.preload("/f", 50 * MB);
+        let r1 = nfs.read_file(&mut cl, NodeId(1), "/f", SimTime::ZERO).unwrap();
+        assert_eq!(nfs.metrics().cache_miss_bytes, 50 * MB);
+        nfs.read_file(&mut cl, NodeId(2), "/f", r1).unwrap();
+        assert_eq!(nfs.metrics().cache_miss_bytes, 50 * MB, "second read all hit");
+        assert_eq!(nfs.metrics().cache_hit_bytes, 50 * MB);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut calib = Calib::default();
+        calib.nfs_cache_bytes = 100 * MB;
+        let mut cl = Cluster::new(4, DiskKind::RamDisk, &calib);
+        let mut nfs = NfsServer::new(&calib);
+        nfs.preload("/a", 60 * MB);
+        nfs.preload("/b", 60 * MB);
+        nfs.read_file(&mut cl, NodeId(1), "/a", SimTime::ZERO).unwrap();
+        nfs.read_file(&mut cl, NodeId(1), "/b", SimTime::ZERO).unwrap(); // evicts /a
+        let misses_before = nfs.metrics().cache_miss_bytes;
+        // A different client (no client-cache hit) re-reads /a.
+        nfs.read_file(&mut cl, NodeId(2), "/a", SimTime::ZERO).unwrap();
+        assert_eq!(
+            nfs.metrics().cache_miss_bytes,
+            misses_before + 60 * MB,
+            "/a was evicted"
+        );
+    }
+
+    #[test]
+    fn xattrs_accepted_but_inert() {
+        let (mut cl, mut nfs) = setup();
+        nfs.write_file(&mut cl, NodeId(1), "/f", MB, &TagSet::new(), SimTime::ZERO)
+            .unwrap();
+        nfs.set_xattr(&mut cl, NodeId(1), "/f", "DP", "local", SimTime::ZERO)
+            .unwrap();
+        let (v, _) = nfs
+            .get_xattr(&mut cl, NodeId(1), "/f", "DP", SimTime::ZERO)
+            .unwrap();
+        assert_eq!(v.as_deref(), Some("local"), "stored verbatim");
+        let (loc, _) = nfs
+            .get_xattr(&mut cl, NodeId(1), "/f", "location", SimTime::ZERO)
+            .unwrap();
+        assert_eq!(loc, None, "location never exposed");
+        assert!(nfs.locations("/f").is_empty());
+        assert_eq!(nfs.metrics().replicas_created, 0);
+    }
+}

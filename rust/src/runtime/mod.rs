@@ -1,0 +1,324 @@
+//! PJRT runtime: load the AOT JAX/Pallas artifacts and execute them.
+//!
+//! The build path (`make artifacts`) lowers the L2 compute graphs to HLO
+//! *text* (see `python/compile/aot.py` for why text, not serialized
+//! proto); this module loads each `artifacts/*.hlo.txt`, compiles it once
+//! on the PJRT CPU client, and exposes typed execute helpers. After
+//! `make artifacts` the rust binary is self-contained — Python never
+//! runs on the request path.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Tile side used by every kernel (mirrors `python/compile/kernels/ref.py`).
+pub const TILE: usize = 256;
+/// Elements per tile.
+pub const TILE_ELEMS: usize = TILE * TILE;
+/// Merge fan-in of the `reduce_merge` artifact.
+pub const MERGE_K: usize = 8;
+
+/// Artifact names the runtime expects after `make artifacts`.
+pub const ARTIFACTS: [&str; 4] = [
+    "stage_transform",
+    "stage_chain",
+    "reduce_merge",
+    "checksum",
+];
+
+/// A compiled artifact pool over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions per artifact (perf accounting).
+    exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut rt = Runtime {
+            client,
+            executables: HashMap::new(),
+            exec_counts: HashMap::new(),
+        };
+        for name in ARTIFACTS {
+            rt.load_artifact(name, &dir.join(format!("{name}.hlo.txt")))
+                .with_context(|| format!("loading artifact '{name}'"))?;
+        }
+        Ok(rt)
+    }
+
+    /// Default artifact directory (`$WOSS_ARTIFACTS` or `./artifacts`).
+    pub fn artifact_dir() -> PathBuf {
+        std::env::var("WOSS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load + compile one HLO-text artifact under `name`.
+    pub fn load_artifact(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Names of loaded artifacts.
+    pub fn loaded(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.executables.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// How many times `name` has executed.
+    pub fn exec_count(&self, name: &str) -> u64 {
+        self.exec_counts.get(name).copied().unwrap_or(0)
+    }
+
+    /// Execute artifact `name` on f32 literals shaped per `shapes`.
+    fn run(&mut self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// `stage_transform(x, w, b)` over one tile.
+    pub fn stage_transform(&mut self, x: &[f32], w: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        check_tile(x)?;
+        check_tile(w)?;
+        check_tile(b)?;
+        let s: &[i64] = &[TILE as i64, TILE as i64];
+        self.run("stage_transform", &[(x, s), (w, s), (b, s)])
+    }
+
+    /// `stage_chain(x, w1, b1, w2, b2)`.
+    pub fn stage_chain(
+        &mut self,
+        x: &[f32],
+        w1: &[f32],
+        b1: &[f32],
+        w2: &[f32],
+        b2: &[f32],
+    ) -> Result<Vec<f32>> {
+        for t in [x, w1, b1, w2, b2] {
+            check_tile(t)?;
+        }
+        let s: &[i64] = &[TILE as i64, TILE as i64];
+        self.run("stage_chain", &[(x, s), (w1, s), (b1, s), (w2, s), (b2, s)])
+    }
+
+    /// `reduce_merge(parts, weights)` — parts is `MERGE_K` stacked tiles.
+    pub fn reduce_merge(&mut self, parts: &[f32], weights: &[f32]) -> Result<Vec<f32>> {
+        if parts.len() != MERGE_K * TILE_ELEMS {
+            return Err(anyhow!(
+                "reduce_merge parts: got {} elems, want {}",
+                parts.len(),
+                MERGE_K * TILE_ELEMS
+            ));
+        }
+        if weights.len() != MERGE_K {
+            return Err(anyhow!("reduce_merge weights: got {}", weights.len()));
+        }
+        self.run(
+            "reduce_merge",
+            &[
+                (parts, &[MERGE_K as i64, TILE as i64, TILE as i64]),
+                (weights, &[MERGE_K as i64]),
+            ],
+        )
+    }
+
+    /// `checksum(x)` — scalar fingerprint of one tile.
+    pub fn checksum(&mut self, x: &[f32]) -> Result<f32> {
+        check_tile(x)?;
+        let out = self.run("checksum", &[(x, &[TILE as i64, TILE as i64])])?;
+        Ok(out[0])
+    }
+}
+
+fn check_tile(t: &[f32]) -> Result<()> {
+    if t.len() == TILE_ELEMS {
+        Ok(())
+    } else {
+        Err(anyhow!("tile: got {} elems, want {TILE_ELEMS}", t.len()))
+    }
+}
+
+/// Pure-rust oracle for `checksum` (verifies the PJRT path end-to-end
+/// without Python).
+pub fn checksum_ref(x: &[f32]) -> f32 {
+    x.iter()
+        .enumerate()
+        .map(|(i, &v)| v * ((i % 64) as f32 + 1.0))
+        .sum()
+}
+
+/// Pure-rust oracle for `reduce_merge`.
+pub fn reduce_merge_ref(parts: &[f32], weights: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; TILE_ELEMS];
+    for (k, &w) in weights.iter().enumerate() {
+        let base = k * TILE_ELEMS;
+        for (o, &p) in out.iter_mut().zip(&parts[base..base + TILE_ELEMS]) {
+            *o += w * p;
+        }
+    }
+    out
+}
+
+/// Convert raw bytes into zero-padded f32 tiles (how the live engine
+/// feeds storage chunks to the kernels). Values are mapped into [0, 1]
+/// so transforms stay finite.
+pub fn bytes_to_tiles(bytes: &[u8]) -> Vec<Vec<f32>> {
+    let mut tiles = Vec::new();
+    for chunk in bytes.chunks(TILE_ELEMS * 4) {
+        let mut tile = vec![0.0f32; TILE_ELEMS];
+        for (i, quad) in chunk.chunks(4).enumerate() {
+            let mut buf = [0u8; 4];
+            buf[..quad.len()].copy_from_slice(quad);
+            let raw = u32::from_le_bytes(buf);
+            tile[i] = (raw % 1_000_000) as f32 / 1.0e6;
+        }
+        tiles.push(tile);
+    }
+    if tiles.is_empty() {
+        tiles.push(vec![0.0f32; TILE_ELEMS]);
+    }
+    tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::artifact_dir();
+        if !dir.join("stage_transform.hlo.txt").exists() {
+            eprintln!("artifacts missing; run `make artifacts` (skipping)");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime loads"))
+    }
+
+    fn tile(seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..TILE_ELEMS)
+            .map(|_| (rng.gen_f64() as f32 - 0.5) * 2.0 * scale)
+            .collect()
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(
+            rt.loaded(),
+            vec!["checksum", "reduce_merge", "stage_chain", "stage_transform"]
+        );
+    }
+
+    #[test]
+    fn checksum_matches_rust_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let x = tile(1, 1.0);
+        let got = rt.checksum(&x).unwrap();
+        let want = checksum_ref(&x);
+        assert!(
+            (got - want).abs() <= want.abs().max(1.0) * 1e-3,
+            "pjrt {got} vs rust {want}"
+        );
+        assert_eq!(rt.exec_count("checksum"), 1);
+    }
+
+    #[test]
+    fn reduce_merge_matches_rust_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let mut parts = Vec::new();
+        for k in 0..MERGE_K {
+            parts.extend(tile(k as u64 + 10, 1.0));
+        }
+        let weights: Vec<f32> = (0..MERGE_K).map(|k| 0.1 * (k as f32 + 1.0)).collect();
+        let got = rt.reduce_merge(&parts, &weights).unwrap();
+        let want = reduce_merge_ref(&parts, &weights);
+        let max_err = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "max err {max_err}");
+    }
+
+    #[test]
+    fn stage_chain_equals_two_transforms() {
+        let Some(mut rt) = runtime() else { return };
+        let x = tile(2, 1.0);
+        let w1 = tile(3, 0.05);
+        let b1 = tile(4, 0.1);
+        let w2 = tile(5, 0.05);
+        let b2 = tile(6, 0.1);
+        let y = rt.stage_transform(&x, &w1, &b1).unwrap();
+        let z = rt.stage_transform(&y, &w2, &b2).unwrap();
+        let chained = rt.stage_chain(&x, &w1, &b1, &w2, &b2).unwrap();
+        let max_err = z
+            .iter()
+            .zip(&chained)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-5, "max err {max_err}");
+    }
+
+    #[test]
+    fn transform_output_bounded() {
+        let Some(mut rt) = runtime() else { return };
+        let out = rt
+            .stage_transform(&tile(7, 10.0), &tile(8, 10.0), &tile(9, 10.0))
+            .unwrap();
+        // XLA's CPU tanh approximation can exceed ±1 by a few ULPs.
+        assert!(out.iter().all(|v| v.is_finite() && v.abs() <= 1.0 + 1e-5));
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let Some(mut rt) = runtime() else { return };
+        assert!(rt.stage_transform(&[1.0], &[1.0], &[1.0]).is_err());
+        assert!(rt.reduce_merge(&[0.0; 8], &[0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn bytes_to_tiles_pads_and_bounds() {
+        let tiles = bytes_to_tiles(&[0xFFu8; 100]);
+        assert_eq!(tiles.len(), 1);
+        assert_eq!(tiles[0].len(), TILE_ELEMS);
+        assert!(tiles[0].iter().all(|v| v.is_finite() && *v >= 0.0 && *v <= 1.0));
+        let empty = bytes_to_tiles(&[]);
+        assert_eq!(empty.len(), 1);
+        let two = bytes_to_tiles(&vec![1u8; TILE_ELEMS * 4 + 1]);
+        assert_eq!(two.len(), 2);
+    }
+}

@@ -1,0 +1,176 @@
+//! Calibration constants for the simulated testbeds.
+//!
+//! Defaults reproduce the paper's §4 testbeds: a 20-node cluster (Intel
+//! Xeon E5345 4-core, 1 Gbps NIC, RAID-1 SATA or RAM-disk), a
+//! better-provisioned NFS server (8 cores, RAID-5 ×6, big page cache),
+//! and one BG/P rack (850 MHz quad-core, RAM-disk only, GPFS backend with
+//! 24 I/O servers). All values are overridable through the coordinator's
+//! config file (`woss --config testbed.toml`); EXPERIMENTS.md reports the
+//! values each figure was generated with.
+
+use super::disk::DiskCalib;
+
+const MB: f64 = 1024.0 * 1024.0;
+const GB: f64 = 1024.0 * MB;
+
+/// Full calibration for one simulated deployment.
+#[derive(Debug, Clone)]
+pub struct Calib {
+    // ---- interconnect ----
+    /// Compute/storage node NIC bandwidth, bytes/s per direction (1 Gbps).
+    pub nic_bw: f64,
+    /// Per-message propagation latency, microseconds.
+    pub net_latency_us: f64,
+    /// Effective per-flow streaming rate, bytes/s: protocol + copy
+    /// overhead caps what one TCP stream through the SAI achieves even
+    /// on an idle 1 Gbps link (the era's measured MosaStore/NFS
+    /// single-stream rates). Local (same-node) access bypasses this.
+    pub tcp_stream_bw: f64,
+
+    // ---- node hardware ----
+    /// CPU cores per node usable by workflow tasks.
+    pub cores_per_node: usize,
+    /// Multiplier on task service times (BG/P's 850 MHz cores vs the
+    /// cluster's 2.33 GHz Xeons ⇒ ~2.5).
+    pub cpu_slowdown: f64,
+    /// Device-level constants.
+    pub disk: DiskCalib,
+
+    // ---- client SAI ----
+    /// FUSE/VFS overhead per file-system call, ms (the prototype's
+    /// acknowledged per-call FUSE cost).
+    pub fuse_op_ms: f64,
+    /// Client OS page cache, bytes: a file a client has fully read
+    /// re-reads from local memory (below-FUSE kernel caching; NFS client
+    /// caching). Zero disables.
+    pub os_cache_bytes: u64,
+    /// Chunk (block) size in bytes; the scatter hint overrides per file.
+    pub chunk_size: u64,
+    /// Default data-placement stripe width: a new file's chunks stripe
+    /// round-robin over this many storage nodes (MosaStore-style). Hints
+    /// override per file (local = 1 node, scatter = explicit layout).
+    pub default_stripe_width: usize,
+
+    // ---- metadata manager ----
+    /// Cost of one metadata operation at the manager, ms.
+    pub manager_op_ms: f64,
+    /// Cost of one `set-attribute` operation at the manager, ms. The
+    /// prototype's implementation is notably slower here (Table 6 shows
+    /// tagging as the dominant overhead) — it both serializes and does
+    /// more work per call than a plain metadata op.
+    pub manager_setattr_ms: f64,
+    /// Manager-side parallelism for general metadata ops.
+    pub manager_parallelism: usize,
+    /// The prototype serializes `set-attribute` calls in a single queue —
+    /// the dominant overhead in Table 6. `true` reproduces that.
+    pub manager_setattr_serialized: bool,
+
+    // ---- workflow-runtime integration overheads (Table 6 / fig11) ----
+    /// Cost of forking a helper process to run `setfattr`, ms.
+    pub fork_ms: f64,
+    /// Swift personality: every tag/get-location op is scheduled as a
+    /// Swift task, ms per op (reproduces the BG/P fig11 regression).
+    pub swift_tag_task_ms: f64,
+    /// Scheduler decision cost per task, ms.
+    pub sched_decision_ms: f64,
+
+    // ---- NFS baseline server ----
+    /// NFS server NIC bandwidth, bytes/s (same 1 Gbps fabric).
+    pub nfs_nic_bw: f64,
+    /// NFS server page-cache size, bytes (8 GB RAM machine).
+    pub nfs_cache_bytes: u64,
+    /// NFS per-operation server overhead, ms.
+    pub nfs_op_ms: f64,
+
+    // ---- GPFS backend (BG/P) ----
+    /// Number of GPFS I/O servers.
+    pub gpfs_servers: usize,
+    /// Per-I/O-server sustained bandwidth, bytes/s.
+    pub gpfs_server_bw: f64,
+    /// GPFS per-operation overhead, ms. Small-file operations from
+    /// thousands of concurrent many-task clients hit GPFS's metadata
+    /// path hard (the effect §2's storage-bottleneck citations document);
+    /// this per-op cost is what DSS's intermediate tier avoids.
+    pub gpfs_op_ms: f64,
+}
+
+impl Default for Calib {
+    fn default() -> Self {
+        Calib {
+            nic_bw: 117.0 * MB, // 1 Gbps payload rate
+            net_latency_us: 100.0,
+            tcp_stream_bw: 80.0 * MB,
+            cores_per_node: 4,
+            cpu_slowdown: 1.0,
+            disk: DiskCalib::default(),
+            fuse_op_ms: 0.15,
+            os_cache_bytes: 2 << 30,
+            chunk_size: 1024 * 1024,
+            default_stripe_width: 4,
+            manager_op_ms: 0.2,
+            manager_setattr_ms: 4.0,
+            manager_parallelism: 4,
+            manager_setattr_serialized: true,
+            fork_ms: 1.0,
+            swift_tag_task_ms: 0.0, // pyFlow personality by default
+            sched_decision_ms: 0.1,
+            nfs_nic_bw: 117.0 * MB,
+            nfs_cache_bytes: 6 * GB as u64,
+            nfs_op_ms: 0.3,
+            gpfs_servers: 24,
+            gpfs_server_bw: 400.0 * MB,
+            gpfs_op_ms: 25.0,
+        }
+    }
+}
+
+impl Calib {
+    /// The paper's 20-node lab cluster.
+    pub fn cluster() -> Self {
+        Calib::default()
+    }
+
+    /// One BG/P rack: slower cores, RAM-disk only nodes, GPFS backend,
+    /// and the Swift integration's per-tag-op task-launch overhead.
+    pub fn bgp() -> Self {
+        Calib {
+            cores_per_node: 4,
+            cpu_slowdown: 2.5,
+            // BG/P tree/torus links are fast; keep 10 Gbps-class I/O paths.
+            nic_bw: 350.0 * MB,
+            net_latency_us: 10.0,
+            tcp_stream_bw: 250.0 * MB,
+            swift_tag_task_ms: 50.0,
+            // backend endpoint NIC carries the whole GPFS server pool
+            nfs_nic_bw: 24.0 * 400.0 * MB,
+            ..Calib::default()
+        }
+    }
+
+    /// Network latency as a [`crate::sim::Dur`].
+    pub fn net_latency(&self) -> super::time::Dur {
+        super::time::Dur::from_micros_f64(self.net_latency_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Calib::default();
+        assert!(c.nic_bw > 100.0 * MB);
+        assert_eq!(c.chunk_size, 1024 * 1024);
+        assert!(c.manager_setattr_serialized);
+        assert_eq!(c.swift_tag_task_ms, 0.0);
+    }
+
+    #[test]
+    fn bgp_profile() {
+        let c = Calib::bgp();
+        assert!(c.cpu_slowdown > 1.0);
+        assert!(c.swift_tag_task_ms > 0.0);
+        assert!(c.nic_bw > Calib::default().nic_bw);
+    }
+}

@@ -1,0 +1,127 @@
+//! Simulated cluster hardware: nodes (cores + device) on a fabric.
+//!
+//! This is the virtual testbed every storage configuration is deployed
+//! onto. Matching the paper's methodology, node 0 hosts the metadata
+//! manager / coordination scripts, a dedicated *backend* endpoint hosts
+//! the NFS server or GPFS I/O-server pool, and the remaining nodes run
+//! storage nodes + SAI + application tasks.
+
+use super::calib::Calib;
+use super::disk::{Disk, DiskKind};
+use super::net::Fabric;
+use super::resource::MultiResource;
+use super::time::{Dur, SimTime, Span};
+use crate::storage::types::NodeId;
+
+/// Simulated hardware state for one deployment.
+#[derive(Debug)]
+pub struct Cluster {
+    /// Interconnect. Index space: `0..n_nodes` are cluster nodes,
+    /// `n_nodes` is the backend server endpoint.
+    pub fabric: Fabric,
+    /// Per-cluster-node device (index = node id).
+    pub disks: Vec<Disk>,
+    /// Per-cluster-node CPU cores.
+    pub cores: Vec<MultiResource>,
+    /// Backend storage endpoint id (NFS server / GPFS pool).
+    backend: NodeId,
+    n_nodes: usize,
+    calib: Calib,
+}
+
+impl Cluster {
+    /// Build a cluster of `n_nodes` whose storage nodes use `disk_kind`,
+    /// plus one backend endpoint with its own NIC.
+    pub fn new(n_nodes: usize, disk_kind: DiskKind, calib: &Calib) -> Self {
+        assert!(n_nodes >= 1, "cluster needs at least one node");
+        let mut bws = vec![calib.nic_bw; n_nodes];
+        bws.push(calib.nfs_nic_bw); // backend endpoint
+        let fabric = Fabric::new_with_stream(&bws, calib.net_latency(), calib.tcp_stream_bw);
+        let disks = (0..n_nodes)
+            .map(|_| Disk::new(disk_kind, &calib.disk))
+            .collect();
+        let cores = (0..n_nodes)
+            .map(|_| MultiResource::new(calib.cores_per_node))
+            .collect();
+        Cluster {
+            fabric,
+            disks,
+            cores,
+            backend: NodeId(n_nodes),
+            n_nodes,
+            calib: calib.clone(),
+        }
+    }
+
+    /// Number of cluster nodes (excludes the backend endpoint).
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// The backend endpoint id.
+    pub fn backend(&self) -> NodeId {
+        self.backend
+    }
+
+    /// Calibration this cluster was built with.
+    pub fn calib(&self) -> &Calib {
+        &self.calib
+    }
+
+    /// All cluster node ids.
+    pub fn nodes(&self) -> impl Iterator<Item = NodeId> {
+        (0..self.n_nodes).map(NodeId)
+    }
+
+    /// Run `cpu_secs` of compute on `node`, not before `earliest`.
+    /// Applies the testbed's CPU slowdown factor (BG/P cores).
+    pub fn compute(&mut self, node: NodeId, cpu_secs: f64, earliest: SimTime) -> Span {
+        let dur = Dur::from_secs_f64(cpu_secs).scale(self.calib.cpu_slowdown);
+        self.cores[node.0].acquire(earliest, dur)
+    }
+
+    /// Charge the client-side FUSE/VFS per-call overhead.
+    pub fn fuse_op(&self, earliest: SimTime) -> SimTime {
+        earliest + Dur::from_millis_f64(self.calib.fuse_op_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout() {
+        let c = Cluster::new(20, DiskKind::Spinning, &Calib::default());
+        assert_eq!(c.n_nodes(), 20);
+        assert_eq!(c.backend(), NodeId(20));
+        assert_eq!(c.fabric.len(), 21);
+        assert_eq!(c.disks.len(), 20);
+        assert_eq!(c.nodes().count(), 20);
+    }
+
+    #[test]
+    fn compute_uses_cores() {
+        let mut c = Cluster::new(2, DiskKind::RamDisk, &Calib::default());
+        // 4 cores: 5 one-second jobs → two waves on one core
+        let spans: Vec<_> = (0..5)
+            .map(|_| c.compute(NodeId(0), 1.0, SimTime::ZERO))
+            .collect();
+        let max_end = spans.iter().map(|s| s.end).max().unwrap();
+        assert!((max_end.as_secs_f64() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bgp_slowdown_applied() {
+        let mut c = Cluster::new(2, DiskKind::RamDisk, &Calib::bgp());
+        let s = c.compute(NodeId(0), 1.0, SimTime::ZERO);
+        assert!((s.dur().as_secs_f64() - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fuse_overhead() {
+        let c = Cluster::new(1, DiskKind::RamDisk, &Calib::default());
+        let t = c.fuse_op(SimTime::ZERO);
+        assert!((t.as_secs_f64() - 0.15e-3).abs() < 1e-9);
+    }
+}

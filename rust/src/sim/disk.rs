@@ -1,0 +1,188 @@
+//! Storage-device models.
+//!
+//! The paper's testbed runs storage nodes either on spinning disks
+//! (RAID-1, 7200 rpm SATA) or on RAM-disks, and the NFS baseline on a
+//! RAID-5 array; figures compare `*-DISK` vs `*-RAM` configurations
+//! directly. A device is a FIFO [`Resource`] with sequential bandwidth
+//! plus a per-operation positioning cost (seek + rotational latency for
+//! spinning media, ~zero for RAM).
+
+use super::resource::Resource;
+use super::time::{Dur, SimTime, Span};
+
+/// Kinds of backing device for a storage node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiskKind {
+    /// RAID-1 of two 7200 rpm SATA disks (the paper's cluster nodes).
+    Spinning,
+    /// RAM-disk (the paper's `*-RAM` configurations and BG/P nodes).
+    RamDisk,
+    /// RAID-5 over six SATA disks (the paper's NFS server).
+    Raid5,
+    /// Diskless (BG/P compute nodes mount only a RAM disk; this kind is
+    /// used for nodes that contribute no storage).
+    None,
+}
+
+/// A storage device with FIFO queueing.
+#[derive(Debug, Clone)]
+pub struct Disk {
+    kind: DiskKind,
+    read_bw: f64,  // bytes/sec
+    write_bw: f64, // bytes/sec
+    position_cost: Dur,
+    resource: Resource,
+}
+
+impl Disk {
+    /// Build a device of `kind` using the calibration numbers in
+    /// [`DiskCalib`].
+    pub fn new(kind: DiskKind, calib: &DiskCalib) -> Self {
+        let (read_bw, write_bw, position_cost) = match kind {
+            DiskKind::Spinning => (
+                calib.spinning_read_bw,
+                calib.spinning_write_bw,
+                Dur::from_millis_f64(calib.spinning_position_ms),
+            ),
+            DiskKind::RamDisk => (calib.ramdisk_bw, calib.ramdisk_bw, Dur::ZERO),
+            DiskKind::Raid5 => (
+                calib.raid5_read_bw,
+                calib.raid5_write_bw,
+                Dur::from_millis_f64(calib.spinning_position_ms),
+            ),
+            DiskKind::None => (f64::INFINITY, f64::INFINITY, Dur::ZERO),
+        };
+        Disk {
+            kind,
+            read_bw,
+            write_bw,
+            position_cost,
+            resource: Resource::new(),
+        }
+    }
+
+    /// Device kind.
+    pub fn kind(&self) -> DiskKind {
+        self.kind
+    }
+
+    /// Read `bytes`, not before `earliest`.
+    pub fn read(&mut self, bytes: u64, earliest: SimTime) -> Span {
+        self.io(bytes, self.read_bw, earliest)
+    }
+
+    /// Write `bytes`, not before `earliest`.
+    pub fn write(&mut self, bytes: u64, earliest: SimTime) -> Span {
+        self.io(bytes, self.write_bw, earliest)
+    }
+
+    fn io(&mut self, bytes: u64, bw: f64, earliest: SimTime) -> Span {
+        if self.kind == DiskKind::None || bytes == 0 {
+            return Span::instant(earliest);
+        }
+        let dur = Dur::for_bytes(bytes, bw) + self.position_cost;
+        self.resource.acquire(earliest, dur)
+    }
+
+    /// Accumulated busy time.
+    pub fn busy_total(&self) -> Dur {
+        self.resource.busy_total()
+    }
+
+    /// Number of I/O operations served.
+    pub fn ops(&self) -> u64 {
+        self.resource.reservations()
+    }
+}
+
+/// Device calibration constants (overridable from config).
+#[derive(Debug, Clone)]
+pub struct DiskCalib {
+    /// Sequential read bandwidth of the RAID-1 SATA pair, bytes/s.
+    pub spinning_read_bw: f64,
+    /// Sequential write bandwidth of the RAID-1 SATA pair, bytes/s.
+    pub spinning_write_bw: f64,
+    /// Seek + rotational cost per operation, ms.
+    pub spinning_position_ms: f64,
+    /// RAM-disk bandwidth, bytes/s.
+    pub ramdisk_bw: f64,
+    /// NFS server RAID-5 aggregate read bandwidth, bytes/s.
+    pub raid5_read_bw: f64,
+    /// NFS server RAID-5 aggregate write bandwidth, bytes/s (parity
+    /// penalty).
+    pub raid5_write_bw: f64,
+}
+
+impl Default for DiskCalib {
+    fn default() -> Self {
+        const MB: f64 = 1024.0 * 1024.0;
+        DiskCalib {
+            // RAID-1 pair: reads can be served by both spindles
+            // (~2 × 60 MB/s effective), writes go to both (one-spindle
+            // sequential rate with write-back absorbing latency).
+            spinning_read_bw: 115.0 * MB,
+            spinning_write_bw: 100.0 * MB,
+            spinning_position_ms: 8.0,
+            ramdisk_bw: 1600.0 * MB,
+            raid5_read_bw: 260.0 * MB,
+            raid5_write_bw: 140.0 * MB,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1024 * 1024;
+
+    #[test]
+    fn spinning_slower_than_ram() {
+        let calib = DiskCalib::default();
+        let mut hdd = Disk::new(DiskKind::Spinning, &calib);
+        let mut ram = Disk::new(DiskKind::RamDisk, &calib);
+        let h = hdd.write(100 * MB, SimTime::ZERO);
+        let r = ram.write(100 * MB, SimTime::ZERO);
+        assert!(h.dur() > r.dur());
+        assert!(h.dur().as_secs_f64() > 1.0);
+        assert!(r.dur().as_secs_f64() < 0.1);
+    }
+
+    #[test]
+    fn seek_cost_charged_per_op() {
+        let calib = DiskCalib::default();
+        let mut hdd = Disk::new(DiskKind::Spinning, &calib);
+        let s = hdd.read(0, SimTime::ZERO);
+        assert_eq!(s.dur(), Dur::ZERO, "zero-byte I/O is free");
+        let s = hdd.read(1, SimTime::ZERO);
+        assert!(s.dur().as_secs_f64() >= 8e-3);
+    }
+
+    #[test]
+    fn fifo_queueing() {
+        let calib = DiskCalib::default();
+        let mut d = Disk::new(DiskKind::RamDisk, &calib);
+        let a = d.write(1600 * MB, SimTime::ZERO);
+        let b = d.read(1600 * MB, SimTime::ZERO);
+        assert!((a.dur().as_secs_f64() - 1.0).abs() < 0.01);
+        assert_eq!(b.start, a.end);
+    }
+
+    #[test]
+    fn none_kind_is_free() {
+        let calib = DiskCalib::default();
+        let mut d = Disk::new(DiskKind::None, &calib);
+        let s = d.write(u64::MAX, SimTime(5));
+        assert_eq!(s, Span::instant(SimTime(5)));
+        assert_eq!(d.ops(), 0);
+    }
+
+    #[test]
+    fn raid5_write_penalty() {
+        let calib = DiskCalib::default();
+        let mut d = Disk::new(DiskKind::Raid5, &calib);
+        let r = d.read(260 * MB, SimTime::ZERO);
+        let w = d.write(260 * MB, r.end);
+        assert!(w.dur() > r.dur());
+    }
+}

@@ -1,0 +1,141 @@
+//! Simulation counters.
+//!
+//! Every simulated run accumulates a [`Metrics`] record; the experiment
+//! harness prints these alongside runtimes so the *cause* of a
+//! configuration's win (local vs remote bytes, manager pressure, cache
+//! hits) is visible, matching the paper's §4.4 overhead analysis.
+
+use crate::util::json::Json;
+
+/// Counters accumulated during one simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Bytes that crossed the network fabric.
+    pub net_bytes: u64,
+    /// Bytes served from the same node the task ran on.
+    pub local_bytes: u64,
+    /// Chunk-store write operations.
+    pub chunk_writes: u64,
+    /// Chunk-store read operations.
+    pub chunk_reads: u64,
+    /// Metadata-manager operations (all kinds).
+    pub manager_ops: u64,
+    /// `set-attribute` (tagging) operations.
+    pub setattr_ops: u64,
+    /// `get-attribute` operations (includes `location` queries).
+    pub getattr_ops: u64,
+    /// Replica chunks created by replication policies.
+    pub replicas_created: u64,
+    /// Tasks scheduled onto a node that already held their main input.
+    pub local_placements: u64,
+    /// Tasks scheduled without locality.
+    pub remote_placements: u64,
+    /// NFS/backend page-cache hits (bytes).
+    pub cache_hit_bytes: u64,
+    /// NFS/backend page-cache misses (bytes).
+    pub cache_miss_bytes: u64,
+    /// Helper-process forks performed for tagging.
+    pub forks: u64,
+}
+
+impl Metrics {
+    /// Fresh, zeroed metrics.
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Merge another record into this one (sums all counters).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.net_bytes += other.net_bytes;
+        self.local_bytes += other.local_bytes;
+        self.chunk_writes += other.chunk_writes;
+        self.chunk_reads += other.chunk_reads;
+        self.manager_ops += other.manager_ops;
+        self.setattr_ops += other.setattr_ops;
+        self.getattr_ops += other.getattr_ops;
+        self.replicas_created += other.replicas_created;
+        self.local_placements += other.local_placements;
+        self.remote_placements += other.remote_placements;
+        self.cache_hit_bytes += other.cache_hit_bytes;
+        self.cache_miss_bytes += other.cache_miss_bytes;
+        self.forks += other.forks;
+    }
+
+    /// Fraction of bytes served locally.
+    pub fn locality(&self) -> f64 {
+        let total = self.net_bytes + self.local_bytes;
+        if total == 0 {
+            0.0
+        } else {
+            self.local_bytes as f64 / total as f64
+        }
+    }
+
+    /// JSON rendering for report files.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("net_bytes", self.net_bytes.into()),
+            ("local_bytes", self.local_bytes.into()),
+            ("chunk_writes", self.chunk_writes.into()),
+            ("chunk_reads", self.chunk_reads.into()),
+            ("manager_ops", self.manager_ops.into()),
+            ("setattr_ops", self.setattr_ops.into()),
+            ("getattr_ops", self.getattr_ops.into()),
+            ("replicas_created", self.replicas_created.into()),
+            ("local_placements", self.local_placements.into()),
+            ("remote_placements", self.remote_placements.into()),
+            ("cache_hit_bytes", self.cache_hit_bytes.into()),
+            ("cache_miss_bytes", self.cache_miss_bytes.into()),
+            ("forks", self.forks.into()),
+            ("locality", self.locality().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Metrics {
+            net_bytes: 10,
+            manager_ops: 1,
+            ..Metrics::default()
+        };
+        let b = Metrics {
+            net_bytes: 5,
+            local_bytes: 20,
+            ..Metrics::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.net_bytes, 15);
+        assert_eq!(a.local_bytes, 20);
+        assert_eq!(a.manager_ops, 1);
+    }
+
+    #[test]
+    fn locality_fraction() {
+        let m = Metrics {
+            net_bytes: 25,
+            local_bytes: 75,
+            ..Metrics::default()
+        };
+        assert!((m.locality() - 0.75).abs() < 1e-12);
+        assert_eq!(Metrics::default().locality(), 0.0);
+    }
+
+    #[test]
+    fn json_has_all_fields() {
+        let j = Metrics::default().to_json();
+        for key in [
+            "net_bytes",
+            "manager_ops",
+            "locality",
+            "replicas_created",
+            "forks",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper evaluates WOSS on a 20-node cluster, Grid5000 and a BG/P
+//! rack — hardware we do not have. Per the reproduction plan (DESIGN.md
+//! §2) the hardware is replaced by a virtual-time resource-contention
+//! simulator: every contended device (NIC direction, disk, CPU core,
+//! manager queue) is a FIFO resource with *busy-until* semantics, and
+//! operations compose spans greedily in virtual time. This reproduces the
+//! first-order bottlenecks the paper's ratios come from — NIC
+//! serialization at hot nodes, disk vs RAM-disk bandwidth, manager
+//! serialization of `set-attribute`, and scheduler overheads — while
+//! staying deterministic and fast enough to run every figure's full sweep
+//! in milliseconds.
+
+pub mod calib;
+pub mod cluster;
+pub mod disk;
+pub mod metrics;
+pub mod net;
+pub mod resource;
+pub mod time;
+
+pub use calib::Calib;
+pub use cluster::Cluster;
+pub use disk::{Disk, DiskCalib, DiskKind};
+pub use metrics::Metrics;
+pub use net::Fabric;
+pub use resource::{MultiResource, Resource};
+pub use time::{Dur, SimTime, Span};

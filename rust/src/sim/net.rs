@@ -1,0 +1,202 @@
+//! Network fabric model.
+//!
+//! Each node has a full-duplex NIC modelled as two FIFO [`Resource`]s
+//! (transmit and receive) with per-direction bandwidth, plus a per-message
+//! propagation latency. A transfer serializes on the sender's TX and the
+//! receiver's RX at `min(tx_bw, rx_bw)` effective bandwidth — this is the
+//! first-order contention that makes a single NFS server or an
+//! un-replicated broadcast source a bottleneck in the paper's experiments,
+//! while node-local access (src == dst) bypasses the fabric entirely
+//! (that is exactly the pipeline-pattern win).
+
+use super::resource::Resource;
+use super::time::{Dur, SimTime, Span};
+use crate::storage::types::NodeId;
+
+/// Per-node NIC state.
+#[derive(Debug, Clone)]
+struct Nic {
+    tx: Resource,
+    rx: Resource,
+    bw: f64, // bytes/sec, per direction
+}
+
+/// The cluster interconnect.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    nics: Vec<Nic>,
+    latency: Dur,
+    /// Per-flow effective streaming rate (protocol/copy overheads); a
+    /// flow never completes faster than `bytes / stream_bw` even when
+    /// both endpoints are idle. Endpoint *occupancy* is still charged at
+    /// line rate, so slow flows overlap rather than hogging the NIC.
+    stream_bw: f64,
+}
+
+impl Fabric {
+    /// `bandwidths[n]` is node *n*'s per-direction NIC bandwidth in
+    /// bytes/sec; `latency` is the per-message propagation delay;
+    /// `stream_bw` caps a single flow's effective rate.
+    pub fn new_with_stream(bandwidths: &[f64], latency: Dur, stream_bw: f64) -> Self {
+        assert!(!bandwidths.is_empty(), "fabric needs at least one node");
+        for &bw in bandwidths {
+            assert!(bw > 0.0, "non-positive NIC bandwidth");
+        }
+        assert!(stream_bw > 0.0, "non-positive stream bandwidth");
+        Fabric {
+            nics: bandwidths
+                .iter()
+                .map(|&bw| Nic {
+                    tx: Resource::new(),
+                    rx: Resource::new(),
+                    bw,
+                })
+                .collect(),
+            latency,
+            stream_bw,
+        }
+    }
+
+    /// Fabric without a per-flow cap (tests, ideal interconnects).
+    pub fn new(bandwidths: &[f64], latency: Dur) -> Self {
+        Fabric::new_with_stream(bandwidths, latency, f64::INFINITY)
+    }
+
+    /// Uniform fabric: `n` nodes at `bw` bytes/sec, no per-flow cap.
+    pub fn uniform(n: usize, bw: f64, latency: Dur) -> Self {
+        Fabric::new(&vec![bw; n], latency)
+    }
+
+    /// Number of endpoints.
+    pub fn len(&self) -> usize {
+        self.nics.len()
+    }
+
+    /// True when the fabric has no endpoints (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.nics.is_empty()
+    }
+
+    /// Move `bytes` from `src` to `dst`, not starting before `earliest`.
+    /// Local moves (src == dst) cost nothing: the paper's locality
+    /// optimizations are precisely about converting remote transfers into
+    /// these.
+    pub fn transfer(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        earliest: SimTime,
+    ) -> Span {
+        if src == dst {
+            return Span::instant(earliest);
+        }
+        // Each endpoint is occupied for bytes at *its own* line rate, so
+        // a fat endpoint (GPFS pool NIC) can overlap many slow flows
+        // while a 1 Gbps NFS box serializes them. The flow completes when
+        // the slower endpoint finishes.
+        let tx_dur = Dur::for_bytes(bytes, self.nics[src.0].bw);
+        let rx_dur = Dur::for_bytes(bytes, self.nics[dst.0].bw);
+        let tx = self.nics[src.0].tx.acquire(earliest, tx_dur);
+        let rx = self.nics[dst.0].rx.acquire(tx.start, rx_dur);
+        let stream_floor = if self.stream_bw.is_finite() {
+            tx.start + Dur::for_bytes(bytes, self.stream_bw)
+        } else {
+            tx.start
+        };
+        Span {
+            start: tx.start,
+            end: tx.end.max(rx.end).max(stream_floor) + self.latency,
+        }
+    }
+
+    /// A small control-plane message (metadata RPC): latency-bound.
+    pub fn rpc(&mut self, src: NodeId, dst: NodeId, earliest: SimTime) -> Span {
+        // Control messages are tiny; model propagation latency only
+        // (they do not saturate NIC bandwidth).
+        if src == dst {
+            return Span::instant(earliest);
+        }
+        Span {
+            start: earliest,
+            end: earliest + self.latency,
+        }
+    }
+
+    /// Per-message latency.
+    pub fn latency(&self) -> Dur {
+        self.latency
+    }
+
+    /// Total bytes·seconds of TX busy time on a node (utilization probe).
+    pub fn tx_busy(&self, node: NodeId) -> Dur {
+        self.nics[node.0].tx.busy_total()
+    }
+
+    /// RX busy time on a node.
+    pub fn rx_busy(&self, node: NodeId) -> Dur {
+        self.nics[node.0].rx.busy_total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1024 * 1024;
+    const GBPS: f64 = 117.0 * 1024.0 * 1024.0; // ~1 Gbps in bytes/sec
+
+    fn fabric(n: usize) -> Fabric {
+        Fabric::uniform(n, GBPS, Dur::from_micros_f64(100.0))
+    }
+
+    #[test]
+    fn local_transfer_is_free() {
+        let mut f = fabric(2);
+        let s = f.transfer(NodeId(0), NodeId(0), 100 * MB, SimTime(42));
+        assert_eq!(s, Span::instant(SimTime(42)));
+        assert_eq!(f.tx_busy(NodeId(0)), Dur::ZERO);
+    }
+
+    #[test]
+    fn remote_transfer_takes_bandwidth_time() {
+        let mut f = fabric(2);
+        let s = f.transfer(NodeId(0), NodeId(1), 117 * MB, SimTime::ZERO);
+        assert!((s.dur().as_secs_f64() - 1.0001).abs() < 0.01);
+    }
+
+    #[test]
+    fn server_rx_serializes_many_senders() {
+        // 4 clients pushing 117MB each to one server: last finishes ~4s.
+        let mut f = fabric(5);
+        let mut last = SimTime::ZERO;
+        for c in 1..5 {
+            let s = f.transfer(NodeId(c), NodeId(0), 117 * MB, SimTime::ZERO);
+            last = last.max(s.end);
+        }
+        assert!((last.as_secs_f64() - 4.0).abs() < 0.05, "got {last}");
+    }
+
+    #[test]
+    fn disjoint_pairs_run_in_parallel() {
+        let mut f = fabric(4);
+        let a = f.transfer(NodeId(0), NodeId(1), 117 * MB, SimTime::ZERO);
+        let b = f.transfer(NodeId(2), NodeId(3), 117 * MB, SimTime::ZERO);
+        assert_eq!(a.start, SimTime::ZERO);
+        assert_eq!(b.start, SimTime::ZERO);
+    }
+
+    #[test]
+    fn asymmetric_bandwidth_takes_min() {
+        let mut f = Fabric::new(&[GBPS, GBPS / 2.0], Dur::ZERO);
+        let s = f.transfer(NodeId(0), NodeId(1), 117 * MB, SimTime::ZERO);
+        assert!((s.dur().as_secs_f64() - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn rpc_is_latency_bound() {
+        let mut f = fabric(2);
+        let s = f.rpc(NodeId(0), NodeId(1), SimTime::ZERO);
+        assert!((s.dur().as_secs_f64() - 100e-6).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,193 @@
+//! Virtual time. The simulator works in integer nanoseconds so experiment
+//! results are exactly reproducible across runs and platforms (no float
+//! accumulation drift in the event order).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in virtual time (nanoseconds since simulation start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+/// A span of virtual time (nanoseconds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Dur(pub u64);
+
+impl SimTime {
+    /// Simulation origin.
+    pub const ZERO: SimTime = SimTime(0);
+
+    /// Construct from seconds.
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        debug_assert!(s >= 0.0 && s.is_finite());
+        SimTime((s * 1e9).round() as u64)
+    }
+
+    /// As floating-point seconds (for reports).
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    /// Later of two instants.
+    pub fn max(self, other: SimTime) -> SimTime {
+        SimTime(self.0.max(other.0))
+    }
+
+    /// Duration since `earlier` (saturating).
+    pub fn since(self, earlier: SimTime) -> Dur {
+        Dur(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl Dur {
+    /// Zero-length duration.
+    pub const ZERO: Dur = Dur(0);
+
+    /// Construct from seconds.
+    pub fn from_secs_f64(s: f64) -> Dur {
+        debug_assert!(s >= 0.0 && s.is_finite(), "negative duration {s}");
+        Dur((s * 1e9).round() as u64)
+    }
+
+    /// Construct from milliseconds.
+    pub fn from_millis_f64(ms: f64) -> Dur {
+        Dur::from_secs_f64(ms / 1e3)
+    }
+
+    /// Construct from microseconds.
+    pub fn from_micros_f64(us: f64) -> Dur {
+        Dur::from_secs_f64(us / 1e6)
+    }
+
+    /// Time to move `bytes` at `bytes_per_sec` throughput.
+    pub fn for_bytes(bytes: u64, bytes_per_sec: f64) -> Dur {
+        debug_assert!(bytes_per_sec > 0.0, "non-positive bandwidth");
+        Dur::from_secs_f64(bytes as f64 / bytes_per_sec)
+    }
+
+    /// As floating-point seconds.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    /// Saturating sum.
+    pub fn saturating_add(self, other: Dur) -> Dur {
+        Dur(self.0.saturating_add(other.0))
+    }
+
+    /// Scale by a factor (e.g. jitter, slow-core multipliers).
+    pub fn scale(self, f: f64) -> Dur {
+        debug_assert!(f >= 0.0);
+        Dur((self.0 as f64 * f).round() as u64)
+    }
+}
+
+impl Add<Dur> for SimTime {
+    type Output = SimTime;
+    fn add(self, d: Dur) -> SimTime {
+        SimTime(self.0 + d.0)
+    }
+}
+
+impl AddAssign<Dur> for SimTime {
+    fn add_assign(&mut self, d: Dur) {
+        self.0 += d.0;
+    }
+}
+
+impl Add for Dur {
+    type Output = Dur;
+    fn add(self, other: Dur) -> Dur {
+        Dur(self.0 + other.0)
+    }
+}
+
+impl AddAssign for Dur {
+    fn add_assign(&mut self, other: Dur) {
+        self.0 += other.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = Dur;
+    fn sub(self, other: SimTime) -> Dur {
+        debug_assert!(self.0 >= other.0, "negative time difference");
+        Dur(self.0 - other.0)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.6}s", self.as_secs_f64())
+    }
+}
+
+impl fmt::Display for Dur {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.6}s", self.as_secs_f64())
+    }
+}
+
+/// A `[start, end]` interval produced by a resource reservation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl Span {
+    /// Zero-length span at `t`.
+    pub fn instant(t: SimTime) -> Span {
+        Span { start: t, end: t }
+    }
+
+    /// Length of the span.
+    pub fn dur(&self) -> Dur {
+        self.end - self.start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::from_secs_f64(1.0) + Dur::from_millis_f64(500.0);
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-9);
+        let d = t - SimTime::from_secs_f64(1.0);
+        assert!((d.as_secs_f64() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn for_bytes() {
+        // 117 MB/s over 117 MB = 1s
+        let d = Dur::for_bytes(117 * 1024 * 1024, 117.0 * 1024.0 * 1024.0);
+        assert!((d.as_secs_f64() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_and_since() {
+        let a = SimTime(10);
+        let b = SimTime(20);
+        assert_eq!(a.max(b), b);
+        assert_eq!(b.since(a), Dur(10));
+        assert_eq!(a.since(b), Dur(0)); // saturates
+    }
+
+    #[test]
+    fn span_dur() {
+        let s = Span {
+            start: SimTime(5),
+            end: SimTime(15),
+        };
+        assert_eq!(s.dur(), Dur(10));
+        assert_eq!(Span::instant(SimTime(7)).dur(), Dur::ZERO);
+    }
+
+    #[test]
+    fn scale() {
+        assert_eq!(Dur(1000).scale(2.5), Dur(2500));
+        assert_eq!(Dur(1000).scale(0.0), Dur(0));
+    }
+}

@@ -1,0 +1,639 @@
+//! The distributed object store: DSS baseline and WOSS.
+//!
+//! Both configurations share this implementation — exactly as in the
+//! paper, where WOSS is MosaStore re-architected around the dispatcher:
+//! the *only* difference between `DSS` and `WOSS` is the module
+//! [`Registry`] installed in the manager (baseline vs hint-dispatching)
+//! — which is the cross-layer thesis in code form. Storage nodes run on
+//! every cluster node except the manager host (node 0), mirroring the
+//! paper's deployment.
+//!
+//! Data-path timing composes fabric transfers and device I/O through the
+//! busy-until resources in [`crate::sim`]:
+//!
+//! * write: per chunk, client→primary transfer, then primary disk write;
+//!   eager replication fans out from the primary; `RepSmntc` decides
+//!   whether replication blocks completion.
+//! * read: per chunk, prefer a local replica (free of fabric cost — the
+//!   locality the pipeline/reduce hints manufacture), else a random
+//!   remote replica (the broadcast pattern's load spreading).
+
+use crate::dispatch::Registry;
+use crate::hints::TagSet;
+use crate::sim::{Cluster, Metrics, SimTime};
+use crate::storage::manager::Manager;
+use crate::storage::model::StorageModel;
+use crate::storage::types::{NodeId, NodeState, StorageError};
+use crate::util::Rng;
+use std::collections::HashSet;
+
+/// DSS / WOSS deployment over the simulated cluster.
+pub struct DistributedStore {
+    label: String,
+    manager: Manager,
+    /// SAI metadata caches: (client, file) pairs whose attributes are
+    /// cached client-side (first open pays the manager RPC). Keyed by
+    /// FileId, not path: the sim hot loop must not allocate strings
+    /// (perf pass, EXPERIMENTS.md §Perf).
+    attr_cache: HashSet<(NodeId, crate::storage::FileId)>,
+    /// Per-client read caches for the reuse pattern: (client, file)
+    /// pairs fully cached at the client.
+    read_cache: HashSet<(NodeId, crate::storage::FileId)>,
+    /// Replica readiness: a replica cannot serve reads before its
+    /// creation completes (matters for the broadcast sweep — eager
+    /// replication is optimistic, so the write returns while replicas
+    /// are still materializing). Keyed by (file, chunk, holder).
+    replica_ready: std::collections::HashMap<(crate::storage::FileId, u64, NodeId), SimTime>,
+    metrics: Metrics,
+    rng: Rng,
+}
+
+impl DistributedStore {
+    /// Deploy over `cluster` with the given module registry. Storage
+    /// nodes are nodes `1..n` (node 0 hosts the manager), each
+    /// contributing `node_capacity` bytes of chunk store.
+    pub fn new(
+        cluster: &Cluster,
+        registry: Registry,
+        node_capacity: u64,
+        seed: u64,
+    ) -> Self {
+        let label = if registry.hints_enabled() { "WOSS" } else { "DSS" };
+        let nodes: Vec<NodeState> = (1..cluster.n_nodes())
+            .map(|i| NodeState {
+                node: NodeId(i),
+                capacity: node_capacity,
+                used: 0,
+            })
+            .collect();
+        DistributedStore {
+            label: label.to_string(),
+            manager: Manager::new(NodeId(0), nodes, registry, cluster.calib()),
+            attr_cache: HashSet::new(),
+            read_cache: HashSet::new(),
+            replica_ready: std::collections::HashMap::new(),
+            metrics: Metrics::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Convenience: DSS baseline (hints carried, never dispatched).
+    pub fn dss(cluster: &Cluster, node_capacity: u64, seed: u64) -> Self {
+        DistributedStore::new(cluster, Registry::baseline(), node_capacity, seed)
+    }
+
+    /// Convenience: full WOSS registry.
+    pub fn woss(cluster: &Cluster, node_capacity: u64, seed: u64) -> Self {
+        DistributedStore::new(cluster, Registry::woss(), node_capacity, seed)
+    }
+
+    /// Set a custom display label (e.g. "WOSS-RAM").
+    pub fn with_label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    /// Access the manager (tests, diagnostics, runtime extension).
+    pub fn manager(&self) -> &Manager {
+        &self.manager
+    }
+
+    /// Mutable manager access (registering new optimization modules at
+    /// runtime — the extensibility path).
+    pub fn manager_mut(&mut self) -> &mut Manager {
+        &mut self.manager
+    }
+
+    /// Ensure the client's SAI has the file's attributes cached; charges
+    /// one manager RPC on the first access (open path).
+    fn ensure_attrs(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        file: crate::storage::FileId,
+        path: &str,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        if self.attr_cache.contains(&(client, file)) {
+            return Ok(at);
+        }
+        let (_, done) = self
+            .manager
+            .open(cluster, &mut self.metrics, client, path, at)?;
+        self.attr_cache.insert((client, file));
+        Ok(done)
+    }
+
+    /// A re-read is served from client memory when the file fits the
+    /// cache budget: the `CacheSize` hint when tagged (WOSS), else the
+    /// OS page cache below FUSE (all configurations benefit — standard
+    /// kernel behaviour, not a cross-layer optimization).
+    fn cache_hit(&self, client: NodeId, file: crate::storage::FileId, size: u64, tags: &TagSet, os_cache: u64) -> bool {
+        if !self.read_cache.contains(&(client, file)) {
+            return false;
+        }
+        let budget = if self.manager.registry().hints_enabled() {
+            tags.cache_size().unwrap_or(os_cache)
+        } else {
+            os_cache
+        };
+        size <= budget
+    }
+}
+
+impl StorageModel for DistributedStore {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn write_file(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        size: u64,
+        tags: &TagSet,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        let t = cluster.fuse_op(at); // open/create VFS call
+        // Tags previously set on the path (before creation) merge with
+        // the tags stamped on this write.
+        let mut all_tags = self.manager.take_pending_tags(path).unwrap_or_default();
+        for (k, v) in tags.iter() {
+            all_tags.set(k, v);
+        }
+        let blocking = self
+            .manager
+            .registry()
+            .replication()
+            .blocking(&all_tags);
+
+        let (placements, t) = self.manager.create(
+            cluster,
+            &mut self.metrics,
+            client,
+            path,
+            size,
+            all_tags,
+            t,
+        )?;
+        let meta = self.manager.peek(path).expect("just created").clone();
+
+        // Contiguous chunks headed to the same primary move as one
+        // sequential run: one transfer, one device op (one seek). This is
+        // the physical reason local placement wins on spinning disks —
+        // round-robin striping degenerates to runs of length one.
+        // The SAI data path is single-threaded (FUSE): successive runs
+        // chain, so a striped remote write is still one ~stream-rate
+        // flow, while a local run bypasses the network entirely.
+        let mut completion = t;
+        let mut chain = t;
+        let mut idx = 0usize;
+        while idx < placements.len() {
+            let place = placements[idx].clone();
+            let mut run_bytes = meta.chunk_bytes(idx as u64);
+            let mut run_len = 1usize;
+            while idx + run_len < placements.len()
+                && placements[idx + run_len].primary == place.primary
+            {
+                run_bytes += meta.chunk_bytes((idx + run_len) as u64);
+                run_len += 1;
+            }
+
+            let xfer = cluster
+                .fabric
+                .transfer(client, place.primary, run_bytes, chain);
+            if place.primary == client {
+                self.metrics.local_bytes += run_bytes;
+            } else {
+                self.metrics.net_bytes += run_bytes;
+            }
+            chain = chain.max(xfer.end);
+            let written = if place.primary == client {
+                // Local run: the device is the path (chain through it).
+                let w = cluster.disks[place.primary.0].write(run_bytes, chain);
+                chain = chain.max(w.end);
+                w
+            } else {
+                // Remote run: the storage node's device write proceeds
+                // off the client's critical path (ack on receipt).
+                cluster.disks[place.primary.0].write(run_bytes, xfer.end)
+            };
+            self.metrics.chunk_writes += run_len as u64;
+            completion = completion.max(written.end);
+            for off in 0..run_len {
+                self.replica_ready
+                    .insert((meta.id, (idx + off) as u64, place.primary), written.end);
+            }
+
+            // Eager parallel replication: a star fan-out from the
+            // primary, per chunk (replica targets rotate). The primary's
+            // TX serializes the copies, so replication cost grows
+            // linearly with the factor — the trade-off Table 4's
+            // stage-in row and fig6's past-the-optimum region measure.
+            for off in 0..run_len {
+                let place = &placements[idx + off];
+                let bytes = meta.chunk_bytes((idx + off) as u64);
+                for &replica in place.replicas.iter() {
+                    let rxfer =
+                        cluster
+                            .fabric
+                            .transfer(place.primary, replica, bytes, xfer.end);
+                    let rwritten = cluster.disks[replica.0].write(bytes, rxfer.end);
+                    self.metrics.net_bytes += bytes;
+                    self.metrics.chunk_writes += 1;
+                    self.metrics.replicas_created += 1;
+                    self.replica_ready
+                        .insert((meta.id, (idx + off) as u64, replica), rwritten.end);
+                    if blocking {
+                        completion = completion.max(rwritten.end);
+                    }
+                }
+            }
+            idx += run_len;
+        }
+
+        self.attr_cache.insert((client, meta.id));
+        Ok(cluster.fuse_op(completion)) // close
+    }
+
+    fn read_file(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        let size = self
+            .file_size(path)
+            .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
+        self.read_range(cluster, client, path, 0, size, at)
+    }
+
+    fn read_range(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        offset: u64,
+        len: u64,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        let t = cluster.fuse_op(at); // open
+        let meta = self
+            .manager
+            .peek(path)
+            .ok_or_else(|| StorageError::NotFound(path.to_string()))?
+            .clone();
+        let t = self.ensure_attrs(cluster, client, meta.id, path, t)?;
+
+        if self.cache_hit(client, meta.id, meta.size, &meta.tags, cluster.calib().os_cache_bytes) {
+            self.metrics.local_bytes += len.min(meta.size);
+            return Ok(cluster.fuse_op(t));
+        }
+
+        // Pick a source per chunk (prefer local, else a random replica —
+        // the broadcast pattern's load spreading), then coalesce
+        // consecutive same-source chunks into sequential runs.
+        let file = meta.id;
+        let ready = |idx: u64, node: NodeId, at: SimTime, rr: &std::collections::HashMap<(crate::storage::FileId, u64, NodeId), SimTime>| {
+            rr.get(&(file, idx, node)).map(|&r| r <= at).unwrap_or(true)
+        };
+        let chunk_sources: Vec<(NodeId, u64)> = meta
+            .chunk_range(offset, len)
+            .map(|idx| {
+                let replicas = &meta.chunks[idx as usize].replicas;
+                debug_assert!(!replicas.is_empty());
+                // Only replicas that finished materializing can serve;
+                // the primary (first entry) is always the fallback.
+                let available: Vec<NodeId> = replicas
+                    .iter()
+                    .copied()
+                    .filter(|&n| ready(idx, n, t, &self.replica_ready))
+                    .collect();
+                let pool: &[NodeId] = if available.is_empty() {
+                    &replicas[..1]
+                } else {
+                    &available
+                };
+                let source = if pool.contains(&client) {
+                    client
+                } else {
+                    *self.rng.choose(pool)
+                };
+                (source, meta.chunk_bytes(idx))
+            })
+            .collect();
+
+        // Single-threaded SAI: runs chain back-to-back.
+        let mut completion = t;
+        let mut chain = t;
+        let mut i = 0usize;
+        while i < chunk_sources.len() {
+            let source = chunk_sources[i].0;
+            let mut run_bytes = 0u64;
+            let mut run_len = 0usize;
+            while i + run_len < chunk_sources.len() && chunk_sources[i + run_len].0 == source {
+                run_bytes += chunk_sources[i + run_len].1;
+                run_len += 1;
+            }
+            let read = cluster.disks[source.0].read(run_bytes, chain);
+            self.metrics.chunk_reads += run_len as u64;
+            if source == client {
+                self.metrics.local_bytes += run_bytes;
+                chain = chain.max(read.end);
+            } else {
+                self.metrics.net_bytes += run_bytes;
+                let xfer = cluster.fabric.transfer(source, client, run_bytes, read.end);
+                chain = chain.max(xfer.end);
+            }
+            completion = completion.max(chain);
+            i += run_len;
+        }
+
+        self.read_cache.insert((client, meta.id));
+        Ok(cluster.fuse_op(completion)) // close
+    }
+
+    fn set_xattr(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        key: &str,
+        value: &str,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        let t = cluster.fuse_op(at);
+        self.manager
+            .set_xattr(cluster, &mut self.metrics, client, path, key, value, t)
+    }
+
+    fn get_xattr(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        key: &str,
+        at: SimTime,
+    ) -> Result<(Option<String>, SimTime), StorageError> {
+        let t = cluster.fuse_op(at);
+        self.manager
+            .get_xattr(cluster, &mut self.metrics, client, path, key, t)
+    }
+
+    fn locations(&self, path: &str) -> Vec<NodeId> {
+        if !self.manager.registry().hints_enabled() {
+            return Vec::new(); // DSS does not expose location
+        }
+        self.manager
+            .peek(path)
+            .map(|m| m.holders())
+            .unwrap_or_default()
+    }
+
+    fn locations_range(&self, path: &str, offset: u64, len: u64) -> Vec<NodeId> {
+        if !self.manager.registry().hints_enabled() {
+            return Vec::new();
+        }
+        let Some(meta) = self.manager.peek(path) else {
+            return Vec::new();
+        };
+        let mut out: Vec<NodeId> = meta
+            .chunk_range(offset, len)
+            .filter_map(|i| meta.chunks.get(i as usize))
+            .map(|c| c.primary())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    fn file_size(&self, path: &str) -> Option<u64> {
+        self.manager.peek(path).map(|m| m.size)
+    }
+
+    fn delete(&mut self, path: &str) -> Result<(), StorageError> {
+        if let Some(meta) = self.manager.peek(path) {
+            let id = meta.id;
+            self.attr_cache.retain(|(_, f)| *f != id);
+            self.read_cache.retain(|(_, f)| *f != id);
+            self.replica_ready.retain(|(f, _, _), _| *f != id);
+        }
+        self.manager.delete(path)
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn exposes_location(&self) -> bool {
+        self.manager.registry().hints_enabled()
+    }
+}
+
+/// Default per-node chunk-store capacity for RAM-disk deployments
+/// (4 GB machines keep ~3 GB usable).
+pub const RAM_NODE_CAPACITY: u64 = 3 << 30;
+/// Spinning-disk deployments are effectively unconstrained for these
+/// workloads (300 GB disks).
+pub const DISK_NODE_CAPACITY: u64 = 280 << 30;
+
+/// Build the standard benchmark deployments over a cluster.
+pub fn standard_deployment(
+    cluster: &Cluster,
+    woss: bool,
+    ram: bool,
+    seed: u64,
+) -> DistributedStore {
+    let capacity = if ram { RAM_NODE_CAPACITY } else { DISK_NODE_CAPACITY };
+    let store = if woss {
+        DistributedStore::woss(cluster, capacity, seed)
+    } else {
+        DistributedStore::dss(cluster, capacity, seed)
+    };
+    let suffix = if ram { "RAM" } else { "DISK" };
+    let label = format!("{}-{}", if woss { "WOSS" } else { "DSS" }, suffix);
+    store.with_label(&label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Calib, DiskKind};
+
+    const MB: u64 = 1024 * 1024;
+
+    fn setup(woss: bool) -> (Cluster, DistributedStore) {
+        let calib = Calib::default();
+        let cluster = Cluster::new(8, DiskKind::RamDisk, &calib);
+        let store = standard_deployment(&cluster, woss, true, 42);
+        (cluster, store)
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let (mut cl, mut st) = setup(true);
+        let done = st
+            .write_file(&mut cl, NodeId(1), "/a", 10 * MB, &TagSet::new(), SimTime::ZERO)
+            .unwrap();
+        assert!(done > SimTime::ZERO);
+        assert_eq!(st.file_size("/a"), Some(10 * MB));
+        let rdone = st.read_file(&mut cl, NodeId(2), "/a", done).unwrap();
+        assert!(rdone > done);
+    }
+
+    #[test]
+    fn local_hint_eliminates_network() {
+        let (mut cl, mut st) = setup(true);
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        st.write_file(&mut cl, NodeId(3), "/local", 50 * MB, &tags, SimTime::ZERO)
+            .unwrap();
+        assert_eq!(st.metrics().net_bytes, 0, "all writes local");
+        assert_eq!(st.metrics().local_bytes, 50 * MB);
+        assert_eq!(st.locations("/local"), vec![NodeId(3)]);
+
+        // A local read by the same node costs no network either.
+        let before = st.metrics().net_bytes;
+        st.read_file(&mut cl, NodeId(3), "/local", SimTime::ZERO)
+            .unwrap();
+        assert_eq!(st.metrics().net_bytes, before);
+    }
+
+    #[test]
+    fn local_read_faster_than_remote() {
+        let calib = Calib::default();
+        // Spinning disks so device time is visible vs network.
+        let mut cl = Cluster::new(8, DiskKind::Spinning, &calib);
+        let mut st = standard_deployment(&cl_ref(&cl), true, false, 1);
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        let w = st
+            .write_file(&mut cl, NodeId(3), "/f", 100 * MB, &tags, SimTime::ZERO)
+            .unwrap();
+        let local = st.read_file(&mut cl, NodeId(3), "/f", w).unwrap();
+        let mut cl2 = Cluster::new(8, DiskKind::Spinning, &calib);
+        let mut st2 = standard_deployment(&cl2, true, false, 1);
+        let w2 = st2
+            .write_file(&mut cl2, NodeId(3), "/f", 100 * MB, &tags, SimTime::ZERO)
+            .unwrap();
+        let remote = st2.read_file(&mut cl2, NodeId(4), "/f", w2).unwrap();
+        assert!(
+            (local - w) < (remote - w2),
+            "local read {:?} must beat remote {:?}",
+            local - w,
+            remote - w2
+        );
+    }
+
+    fn cl_ref(c: &Cluster) -> &Cluster {
+        c
+    }
+
+    #[test]
+    fn dss_ignores_hints_and_hides_location() {
+        let (mut cl, mut st) = setup(false);
+        let tags = TagSet::from_pairs([("DP", "local"), ("Replication", "4")]);
+        st.write_file(&mut cl, NodeId(3), "/f", 10 * MB, &tags, SimTime::ZERO)
+            .unwrap();
+        assert_eq!(st.metrics().replicas_created, 0, "DSS: no hint replication");
+        assert_eq!(st.locations("/f"), Vec::<NodeId>::new());
+        assert!(!st.exposes_location());
+        let (loc, _) = st
+            .get_xattr(&mut cl, NodeId(3), "/f", "location", SimTime::ZERO)
+            .unwrap();
+        assert_eq!(loc, None);
+    }
+
+    #[test]
+    fn replication_tag_creates_replicas() {
+        let (mut cl, mut st) = setup(true);
+        let tags = TagSet::from_pairs([("Replication", "4")]);
+        st.write_file(&mut cl, NodeId(1), "/db", 8 * MB, &tags, SimTime::ZERO)
+            .unwrap();
+        assert_eq!(st.metrics().replicas_created, 8 * 3, "8 chunks × 3 extra replicas");
+        assert!(st.locations("/db").len() >= 4);
+    }
+
+    #[test]
+    fn pessimistic_replication_blocks_longer() {
+        let (mut cl, mut st) = setup(true);
+        let opt = TagSet::from_pairs([("Replication", "4"), ("RepSmntc", "optimistic")]);
+        let done_opt = st
+            .write_file(&mut cl, NodeId(1), "/opt", 64 * MB, &opt, SimTime::ZERO)
+            .unwrap();
+
+        let (mut cl2, mut st2) = setup(true);
+        let pes = TagSet::from_pairs([("Replication", "4"), ("RepSmntc", "pessimistic")]);
+        let done_pes = st2
+            .write_file(&mut cl2, NodeId(1), "/pes", 64 * MB, &pes, SimTime::ZERO)
+            .unwrap();
+        assert!(done_pes > done_opt);
+    }
+
+    #[test]
+    fn pending_tags_applied_at_create() {
+        let (mut cl, mut st) = setup(true);
+        // Runtime tags the output path before the task writes it.
+        st.set_xattr(&mut cl, NodeId(2), "/out", "DP", "local", SimTime::ZERO)
+            .unwrap();
+        st.write_file(&mut cl, NodeId(5), "/out", 10 * MB, &TagSet::new(), SimTime::ZERO)
+            .unwrap();
+        assert_eq!(st.locations("/out"), vec![NodeId(5)], "local hint honored");
+    }
+
+    #[test]
+    fn reuse_cache_hit_with_cache_hint() {
+        let (mut cl, mut st) = setup(true);
+        let tags = TagSet::from_pairs([("CacheSize", "100M")]);
+        let w = st
+            .write_file(&mut cl, NodeId(1), "/c", 10 * MB, &tags, SimTime::ZERO)
+            .unwrap();
+        let r1 = st.read_file(&mut cl, NodeId(2), "/c", w).unwrap();
+        let net_after_first = st.metrics().net_bytes;
+        let r2 = st.read_file(&mut cl, NodeId(2), "/c", r1).unwrap();
+        assert_eq!(st.metrics().net_bytes, net_after_first, "second read cached");
+        assert!(r2 - r1 < r1 - w, "cached read much faster");
+    }
+
+    #[test]
+    fn scatter_layout_and_range_reads() {
+        let (mut cl, mut st) = setup(true);
+        let tags = TagSet::from_pairs([("DP", "scatter 2"), ("BlockSize", "1M")]);
+        st.write_file(&mut cl, NodeId(1), "/s", 14 * MB, &tags, SimTime::ZERO)
+            .unwrap();
+        // 14 chunks in groups of 2 over 7 storage nodes
+        let all = st.locations("/s");
+        assert_eq!(all.len(), 7, "spread across the pool: {all:?}");
+        let first_region = st.locations_range("/s", 0, 2 * MB);
+        assert_eq!(first_region.len(), 1, "one node owns the first region");
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let (mut cl, mut st) = setup(true);
+        assert!(st
+            .read_file(&mut cl, NodeId(1), "/missing", SimTime::ZERO)
+            .is_err());
+        assert!(st.delete("/missing").is_err());
+    }
+
+    #[test]
+    fn woss_no_tags_equals_dss_event_count() {
+        // Design guideline: zero cost when unused. Untagged WOSS must do
+        // exactly what DSS does (same ops, same bytes).
+        let (mut cl_w, mut woss) = setup(true);
+        let (mut cl_d, mut dss) = setup(false);
+        for (i, size) in [(1u64, 5 * MB), (2, 12 * MB), (3, 1 * MB)] {
+            let p = format!("/f{i}");
+            woss.write_file(&mut cl_w, NodeId(i as usize), &p, size, &TagSet::new(), SimTime::ZERO)
+                .unwrap();
+            dss.write_file(&mut cl_d, NodeId(i as usize), &p, size, &TagSet::new(), SimTime::ZERO)
+                .unwrap();
+            woss.read_file(&mut cl_w, NodeId(4), &p, SimTime::ZERO).unwrap();
+            dss.read_file(&mut cl_d, NodeId(4), &p, SimTime::ZERO).unwrap();
+        }
+        assert_eq!(woss.metrics().net_bytes, dss.metrics().net_bytes);
+        assert_eq!(woss.metrics().chunk_writes, dss.metrics().chunk_writes);
+        assert_eq!(woss.metrics().manager_ops, dss.metrics().manager_ops);
+    }
+}

@@ -1,0 +1,159 @@
+//! Node-local storage: the optimal-performance baseline.
+//!
+//! The pipeline benchmark (Figure 5) includes a "local" configuration —
+//! a plain local file system on RAM-disk — representing the best
+//! possible performance on the hardware. Files live on the node that
+//! wrote them; reads from other nodes are *not* supported (the paper
+//! uses it only for single-node pipelines).
+
+use crate::hints::TagSet;
+use crate::sim::{Cluster, Metrics, SimTime};
+use crate::storage::model::StorageModel;
+use crate::storage::types::{NodeId, StorageError};
+use std::collections::BTreeMap;
+
+/// Per-node local file system (no network, no manager).
+pub struct LocalFs {
+    files: BTreeMap<String, (NodeId, u64)>,
+    metrics: Metrics,
+}
+
+impl LocalFs {
+    /// Empty local store.
+    pub fn new() -> Self {
+        LocalFs {
+            files: BTreeMap::new(),
+            metrics: Metrics::new(),
+        }
+    }
+}
+
+impl Default for LocalFs {
+    fn default() -> Self {
+        LocalFs::new()
+    }
+}
+
+impl StorageModel for LocalFs {
+    fn name(&self) -> String {
+        "local".to_string()
+    }
+
+    fn write_file(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        size: u64,
+        _tags: &TagSet,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        let t = cluster.fuse_op(at);
+        let written = cluster.disks[client.0].write(size, t);
+        self.files.insert(path.to_string(), (client, size));
+        self.metrics.local_bytes += size;
+        self.metrics.chunk_writes += 1;
+        Ok(written.end)
+    }
+
+    fn read_file(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        let (holder, size) = *self
+            .files
+            .get(path)
+            .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
+        if holder != client {
+            return Err(StorageError::Invalid(format!(
+                "local fs: {path} lives on {holder}, read from {client}"
+            )));
+        }
+        let t = cluster.fuse_op(at);
+        let read = cluster.disks[client.0].read(size, t);
+        self.metrics.local_bytes += size;
+        self.metrics.chunk_reads += 1;
+        Ok(read.end)
+    }
+
+    fn set_xattr(
+        &mut self,
+        cluster: &mut Cluster,
+        _client: NodeId,
+        _path: &str,
+        _key: &str,
+        _value: &str,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        // Plain local xattrs: a VFS call, no cross-layer behaviour.
+        Ok(cluster.fuse_op(at))
+    }
+
+    fn get_xattr(
+        &mut self,
+        cluster: &mut Cluster,
+        _client: NodeId,
+        path: &str,
+        _key: &str,
+        at: SimTime,
+    ) -> Result<(Option<String>, SimTime), StorageError> {
+        if !self.files.contains_key(path) {
+            return Err(StorageError::NotFound(path.to_string()));
+        }
+        Ok((None, cluster.fuse_op(at)))
+    }
+
+    fn locations(&self, path: &str) -> Vec<NodeId> {
+        self.files.get(path).map(|(n, _)| vec![*n]).unwrap_or_default()
+    }
+
+    fn file_size(&self, path: &str) -> Option<u64> {
+        self.files.get(path).map(|(_, s)| *s)
+    }
+
+    fn delete(&mut self, path: &str) -> Result<(), StorageError> {
+        self.files
+            .remove(path)
+            .map(|_| ())
+            .ok_or_else(|| StorageError::NotFound(path.to_string()))
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn exposes_location(&self) -> bool {
+        true // trivially: everything is local
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Calib, Cluster, DiskKind};
+
+    #[test]
+    fn local_roundtrip() {
+        let mut cl = Cluster::new(2, DiskKind::RamDisk, &Calib::default());
+        let mut fs = LocalFs::new();
+        let w = fs
+            .write_file(&mut cl, NodeId(1), "/x", 1 << 20, &TagSet::new(), SimTime::ZERO)
+            .unwrap();
+        let r = fs.read_file(&mut cl, NodeId(1), "/x", w).unwrap();
+        assert!(r > w);
+        assert_eq!(fs.metrics().net_bytes, 0);
+        assert_eq!(fs.locations("/x"), vec![NodeId(1)]);
+    }
+
+    #[test]
+    fn cross_node_read_rejected() {
+        let mut cl = Cluster::new(2, DiskKind::RamDisk, &Calib::default());
+        let mut fs = LocalFs::new();
+        fs.write_file(&mut cl, NodeId(0), "/x", 1024, &TagSet::new(), SimTime::ZERO)
+            .unwrap();
+        assert!(fs.read_file(&mut cl, NodeId(1), "/x", SimTime::ZERO).is_err());
+    }
+}

@@ -1,0 +1,512 @@
+//! The centralized metadata manager (paper Figure 2/3).
+//!
+//! The manager owns the namespace, per-file block-maps, the extended
+//! attributes, and the storage-node registry, and it hosts the dispatcher
+//! that routes allocation requests to placement modules and `getxattr`
+//! requests to bottom-up providers.
+//!
+//! Timing model: every client→manager interaction is an RPC (fabric
+//! latency) plus a service slot on the manager's worker pool. Matching
+//! the prototype's acknowledged behaviour (§4.4), `set-attribute` calls
+//! are serialized through a single queue when
+//! `Calib::manager_setattr_serialized` is set — the dominant tagging
+//! overhead in Table 6.
+
+use crate::dispatch::{PlacementCtx, PlacementState, Registry};
+use crate::hints::TagSet;
+use crate::sim::{Cluster, Dur, Metrics, MultiResource, Resource, SimTime};
+use crate::storage::types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};
+use std::collections::BTreeMap;
+
+/// Chunk placement decision for one chunk: primary + replica holders.
+#[derive(Debug, Clone)]
+pub struct ChunkPlacement {
+    pub primary: NodeId,
+    pub replicas: Vec<NodeId>,
+}
+
+/// The metadata manager.
+pub struct Manager {
+    /// Node hosting the manager process.
+    host: NodeId,
+    files: BTreeMap<String, FileMeta>,
+    nodes: Vec<NodeState>,
+    registry: Registry,
+    placement_state: PlacementState,
+    workers: MultiResource,
+    setattr_queue: Resource,
+    op_cost: Dur,
+    setattr_cost: Dur,
+    setattr_serialized: bool,
+    next_file_id: u64,
+}
+
+impl Manager {
+    /// Build a manager hosted on `host` managing `storage_nodes`.
+    pub fn new(
+        host: NodeId,
+        storage_nodes: Vec<NodeState>,
+        registry: Registry,
+        calib: &crate::sim::Calib,
+    ) -> Self {
+        Manager {
+            host,
+            files: BTreeMap::new(),
+            nodes: storage_nodes,
+            registry,
+            placement_state: PlacementState::default(),
+            workers: MultiResource::new(calib.manager_parallelism.max(1)),
+            setattr_queue: Resource::new(),
+            op_cost: Dur::from_millis_f64(calib.manager_op_ms),
+            setattr_cost: Dur::from_millis_f64(calib.manager_setattr_ms),
+            setattr_serialized: calib.manager_setattr_serialized,
+            next_file_id: 1,
+        }
+    }
+
+    /// Manager host node.
+    pub fn host(&self) -> NodeId {
+        self.host
+    }
+
+    /// The module registry (for diagnostics and extension).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Mutable registry access (runtime extension of the system —
+    /// the paper's extensibility requirement).
+    pub fn registry_mut(&mut self) -> &mut Registry {
+        &mut self.registry
+    }
+
+    /// Current node registry view.
+    pub fn nodes(&self) -> &[NodeState] {
+        &self.nodes
+    }
+
+    /// One metadata RPC from `client`: request latency + a worker slot +
+    /// response latency. Returns when the reply reaches the client.
+    fn rpc(&mut self, cluster: &mut Cluster, client: NodeId, at: SimTime) -> SimTime {
+        let req = cluster.fabric.rpc(client, self.host, at);
+        let served = self.workers.acquire(req.end, self.op_cost);
+        let resp = cluster.fabric.rpc(self.host, client, served.end);
+        resp.end
+    }
+
+    /// A serialized `set-attribute` RPC (Table 6's bottleneck).
+    fn setattr_rpc(&mut self, cluster: &mut Cluster, client: NodeId, at: SimTime) -> SimTime {
+        let req = cluster.fabric.rpc(client, self.host, at);
+        let served = if self.setattr_serialized {
+            self.setattr_queue.acquire(req.end, self.setattr_cost)
+        } else {
+            self.workers.acquire(req.end, self.setattr_cost)
+        };
+        let resp = cluster.fabric.rpc(self.host, client, served.end);
+        resp.end
+    }
+
+    /// Create a file and lay out its chunks through the dispatcher.
+    /// Returns the per-chunk placements and the reply time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn create(
+        &mut self,
+        cluster: &mut Cluster,
+        metrics: &mut Metrics,
+        client: NodeId,
+        path: &str,
+        size: u64,
+        tags: TagSet,
+        at: SimTime,
+    ) -> Result<(Vec<ChunkPlacement>, SimTime), StorageError> {
+        if self.files.contains_key(path) {
+            return Err(StorageError::AlreadyExists(path.to_string()));
+        }
+        let chunk_size = tags
+            .block_size()
+            .filter(|_| self.registry.hints_enabled())
+            .unwrap_or(cluster.calib().chunk_size);
+        let n_chunks = FileMeta::chunk_count(size, chunk_size);
+        let factor = self.registry.replication_factor(&tags);
+
+        let mut placements = Vec::with_capacity(n_chunks as usize);
+        let mut chunks = Vec::with_capacity(n_chunks as usize);
+        // Default layout: the file stripes round-robin over
+        // `default_stripe_width` nodes starting from a per-file base slot
+        // (MosaStore-style narrow striping).
+        let stripe_width = cluster.calib().default_stripe_width.max(1);
+        let mut base_slot: Option<usize> = None;
+        for idx in 0..n_chunks {
+            let chunk_bytes = if idx == n_chunks - 1 {
+                size - idx * chunk_size
+            } else {
+                chunk_size
+            };
+            let mut ctx = PlacementCtx {
+                client,
+                tags: &tags,
+                nodes: &self.nodes,
+                state: &mut self.placement_state,
+            };
+            let hinted = self.registry.place_hinted(&mut ctx, idx, chunk_bytes);
+            let primary = match hinted {
+                Some(node) => node,
+                None => {
+                    let slot = match base_slot {
+                        Some(b) => {
+                            let n = self.nodes.len();
+                            (b + (idx as usize % stripe_width)) % n
+                        }
+                        None => {
+                            let mut c2 = PlacementCtx {
+                                client,
+                                tags: &tags,
+                                nodes: &self.nodes,
+                                state: &mut self.placement_state,
+                            };
+                            let first = c2
+                                .next_rr(chunk_bytes)
+                                .ok_or(StorageError::NoSpace(chunk_bytes))?;
+                            let slot = self
+                                .nodes
+                                .iter()
+                                .position(|s| s.node == first)
+                                .expect("node in registry");
+                            base_slot = Some(slot);
+                            slot
+                        }
+                    };
+                    // Capacity fallback: spill to round-robin when the
+                    // stripe target is full.
+                    if self.nodes[slot].fits(chunk_bytes) {
+                        self.nodes[slot].node
+                    } else {
+                        let mut c3 = PlacementCtx {
+                            client,
+                            tags: &tags,
+                            nodes: &self.nodes,
+                            state: &mut self.placement_state,
+                        };
+                        c3.next_rr(chunk_bytes)
+                            .ok_or(StorageError::NoSpace(chunk_bytes))?
+                    }
+                }
+            };
+            let replicas = if factor > 1 {
+                let mut rctx = PlacementCtx {
+                    client,
+                    tags: &tags,
+                    nodes: &self.nodes,
+                    state: &mut self.placement_state,
+                };
+                self.registry
+                    .replication()
+                    .replica_targets(&mut rctx, primary, factor, chunk_bytes)
+            } else {
+                Vec::new()
+            };
+            // Commit usage.
+            for holder in std::iter::once(primary).chain(replicas.iter().copied()) {
+                if let Some(n) = self.nodes.iter_mut().find(|n| n.node == holder) {
+                    n.used += chunk_bytes;
+                }
+            }
+            let mut all = vec![primary];
+            all.extend(replicas.iter().copied());
+            chunks.push(ChunkMeta { replicas: all });
+            placements.push(ChunkPlacement { primary, replicas });
+        }
+
+        let meta = FileMeta {
+            id: FileId(self.next_file_id),
+            size,
+            chunk_size,
+            tags,
+            chunks,
+            creator: client,
+        };
+        self.next_file_id += 1;
+        self.files.insert(path.to_string(), meta);
+
+        metrics.manager_ops += 1;
+        let done = self.rpc(cluster, client, at);
+        Ok((placements, done))
+    }
+
+    /// Look up file metadata (allocates a manager op; the SAI caches the
+    /// result, so charge this once per open).
+    pub fn open(
+        &mut self,
+        cluster: &mut Cluster,
+        metrics: &mut Metrics,
+        client: NodeId,
+        path: &str,
+        at: SimTime,
+    ) -> Result<(FileMeta, SimTime), StorageError> {
+        let meta = self
+            .files
+            .get(path)
+            .cloned()
+            .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
+        metrics.manager_ops += 1;
+        let done = self.rpc(cluster, client, at);
+        Ok((meta, done))
+    }
+
+    /// Zero-cost metadata peek for decision logic (scheduler look-ups are
+    /// charged explicitly through [`Manager::get_xattr`]).
+    pub fn peek(&self, path: &str) -> Option<&FileMeta> {
+        self.files.get(path)
+    }
+
+    /// Set one extended attribute (the top-down hint channel).
+    pub fn set_xattr(
+        &mut self,
+        cluster: &mut Cluster,
+        metrics: &mut Metrics,
+        client: NodeId,
+        path: &str,
+        key: &str,
+        value: &str,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        // Tags on yet-to-be-created files are held as pending: the paper's
+        // workflow runtimes tag outputs before the producing task opens
+        // them. We model that by creating a zero-size placeholder.
+        let entry = self.files.entry(path.to_string()).or_insert_with(|| FileMeta {
+            id: FileId(0),
+            size: 0,
+            chunk_size: cluster.calib().chunk_size,
+            tags: TagSet::new(),
+            chunks: Vec::new(),
+            creator: client,
+        });
+        if entry.id == FileId(0) && entry.size == 0 {
+            // placeholder gets a real id lazily at create()
+        }
+        entry.tags.set(key, value);
+        metrics.manager_ops += 1;
+        metrics.setattr_ops += 1;
+        Ok(self.setattr_rpc(cluster, client, at))
+    }
+
+    /// Pending tags attached to `path` before creation (consumed by
+    /// the SAI at create time).
+    pub fn take_pending_tags(&mut self, path: &str) -> Option<TagSet> {
+        match self.files.get(path) {
+            Some(meta) if meta.chunks.is_empty() && meta.size == 0 => {
+                let meta = self.files.remove(path).unwrap();
+                Some(meta.tags)
+            }
+            _ => None,
+        }
+    }
+
+    /// Get one extended attribute. System-reserved attributes (location,
+    /// chunk_location, ...) are served by the bottom-up providers when
+    /// the registry has hints enabled; everything else reads the plain
+    /// xattr store.
+    pub fn get_xattr(
+        &mut self,
+        cluster: &mut Cluster,
+        metrics: &mut Metrics,
+        client: NodeId,
+        path: &str,
+        key: &str,
+        at: SimTime,
+    ) -> Result<(Option<String>, SimTime), StorageError> {
+        let meta = self
+            .files
+            .get(path)
+            .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
+        let value = self
+            .registry
+            .get_system_attr(key, meta, &self.nodes)
+            .or_else(|| meta.tags.get(key).map(str::to_string));
+        metrics.manager_ops += 1;
+        metrics.getattr_ops += 1;
+        let done = self.rpc(cluster, client, at);
+        Ok((value, done))
+    }
+
+    /// Delete a file, releasing capacity.
+    pub fn delete(&mut self, path: &str) -> Result<(), StorageError> {
+        let meta = self
+            .files
+            .remove(path)
+            .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
+        for (idx, chunk) in meta.chunks.iter().enumerate() {
+            let bytes = meta.chunk_bytes(idx as u64);
+            for holder in &chunk.replicas {
+                if let Some(n) = self.nodes.iter_mut().find(|n| n.node == *holder) {
+                    n.used = n.used.saturating_sub(bytes);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of files in the namespace.
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+
+    /// Iterate paths (tests/diagnostics).
+    pub fn paths(&self) -> impl Iterator<Item = &str> {
+        self.files.keys().map(String::as_str)
+    }
+}
+
+impl std::fmt::Debug for Manager {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Manager")
+            .field("host", &self.host)
+            .field("files", &self.files.len())
+            .field("nodes", &self.nodes.len())
+            .field("registry", &self.registry)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Calib, DiskKind};
+
+    fn setup(registry: Registry) -> (Cluster, Manager, Metrics) {
+        let calib = Calib::default();
+        let cluster = Cluster::new(4, DiskKind::RamDisk, &calib);
+        let nodes = (1..4)
+            .map(|i| NodeState {
+                node: NodeId(i),
+                capacity: 1 << 30,
+                used: 0,
+            })
+            .collect();
+        let mgr = Manager::new(NodeId(0), nodes, registry, &calib);
+        (cluster, mgr, Metrics::new())
+    }
+
+    #[test]
+    fn create_lays_out_chunks() {
+        let (mut cl, mut mgr, mut m) = setup(Registry::woss());
+        let (pl, done) = mgr
+            .create(
+                &mut cl,
+                &mut m,
+                NodeId(1),
+                "/f",
+                3 * 1024 * 1024,
+                TagSet::new(),
+                SimTime::ZERO,
+            )
+            .unwrap();
+        assert_eq!(pl.len(), 3);
+        assert!(done > SimTime::ZERO);
+        assert_eq!(mgr.peek("/f").unwrap().chunks.len(), 3);
+        assert_eq!(m.manager_ops, 1);
+        // usage committed
+        let used: u64 = mgr.nodes().iter().map(|n| n.used).sum();
+        assert_eq!(used, 3 * 1024 * 1024);
+    }
+
+    #[test]
+    fn local_hint_places_on_creator() {
+        let (mut cl, mut mgr, mut m) = setup(Registry::woss());
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        let (pl, _) = mgr
+            .create(&mut cl, &mut m, NodeId(2), "/f", 2 << 20, tags, SimTime::ZERO)
+            .unwrap();
+        assert!(pl.iter().all(|p| p.primary == NodeId(2)));
+    }
+
+    #[test]
+    fn baseline_location_not_exposed() {
+        let (mut cl, mut mgr, mut m) = setup(Registry::baseline());
+        mgr.create(&mut cl, &mut m, NodeId(1), "/f", 1024, TagSet::new(), SimTime::ZERO)
+            .unwrap();
+        let (v, _) = mgr
+            .get_xattr(&mut cl, &mut m, NodeId(1), "/f", "location", SimTime::ZERO)
+            .unwrap();
+        assert_eq!(v, None, "DSS does not expose data location");
+    }
+
+    #[test]
+    fn woss_location_exposed() {
+        let (mut cl, mut mgr, mut m) = setup(Registry::woss());
+        mgr.create(&mut cl, &mut m, NodeId(1), "/f", 1024, TagSet::new(), SimTime::ZERO)
+            .unwrap();
+        let (v, _) = mgr
+            .get_xattr(&mut cl, &mut m, NodeId(1), "/f", "location", SimTime::ZERO)
+            .unwrap();
+        assert!(v.is_some());
+        assert_eq!(m.getattr_ops, 1);
+    }
+
+    #[test]
+    fn setattr_serialized_queue_backs_up() {
+        let (mut cl, mut mgr, mut m) = setup(Registry::woss());
+        mgr.create(&mut cl, &mut m, NodeId(1), "/f", 1024, TagSet::new(), SimTime::ZERO)
+            .unwrap();
+        // 10 concurrent setattrs from different clients all start at t=0:
+        // the serialized queue must stretch them out.
+        let mut last = SimTime::ZERO;
+        for i in 0..10 {
+            let done = mgr
+                .set_xattr(
+                    &mut cl,
+                    &mut m,
+                    NodeId(1 + (i % 3)),
+                    "/f",
+                    &format!("k{i}"),
+                    "v",
+                    SimTime::ZERO,
+                )
+                .unwrap();
+            last = last.max(done);
+        }
+        let serial_floor = 10.0 * Calib::default().manager_op_ms / 1e3;
+        assert!(
+            last.as_secs_f64() >= serial_floor,
+            "10 serialized ops must take ≥ {serial_floor}s, got {last}"
+        );
+        assert_eq!(m.setattr_ops, 10);
+    }
+
+    #[test]
+    fn pending_tags_survive_until_create() {
+        let (mut cl, mut mgr, mut m) = setup(Registry::woss());
+        mgr.set_xattr(&mut cl, &mut m, NodeId(1), "/out", "DP", "local", SimTime::ZERO)
+            .unwrap();
+        let pending = mgr.take_pending_tags("/out").unwrap();
+        assert_eq!(pending.get("DP"), Some("local"));
+        assert!(mgr.peek("/out").is_none(), "placeholder consumed");
+    }
+
+    #[test]
+    fn delete_releases_capacity() {
+        let (mut cl, mut mgr, mut m) = setup(Registry::woss());
+        mgr.create(&mut cl, &mut m, NodeId(1), "/f", 1 << 20, TagSet::new(), SimTime::ZERO)
+            .unwrap();
+        mgr.delete("/f").unwrap();
+        assert_eq!(mgr.nodes().iter().map(|n| n.used).sum::<u64>(), 0);
+        assert!(mgr.peek("/f").is_none());
+    }
+
+    #[test]
+    fn no_space_error() {
+        let calib = Calib::default();
+        let mut cl = Cluster::new(3, DiskKind::RamDisk, &calib);
+        let nodes = vec![NodeState {
+            node: NodeId(1),
+            capacity: 1024,
+            used: 0,
+        }];
+        let mut mgr = Manager::new(NodeId(0), nodes, Registry::woss(), &calib);
+        let mut m = Metrics::new();
+        let err = mgr
+            .create(&mut cl, &mut m, NodeId(1), "/big", 1 << 20, TagSet::new(), SimTime::ZERO)
+            .unwrap_err();
+        assert!(matches!(err, StorageError::NoSpace(_)));
+    }
+}

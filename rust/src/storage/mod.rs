@@ -1,0 +1,20 @@
+//! The object-based distributed storage substrate (paper §3.2).
+//!
+//! Components mirror Figure 2: a centralized metadata [`manager`], the
+//! storage nodes (capacity tracked in the manager registry, device
+//! timing in [`crate::sim::disk`]), and the client SAI logic embedded in
+//! [`distributed::DistributedStore`]. The [`model::StorageModel`] trait
+//! is the POSIX-shaped surface the workflow engine drives; `DSS` and
+//! `WOSS` differ *only* in the dispatcher registry installed.
+
+pub mod distributed;
+pub mod local;
+pub mod manager;
+pub mod model;
+pub mod types;
+
+pub use distributed::{standard_deployment, DistributedStore};
+pub use local::LocalFs;
+pub use manager::{ChunkPlacement, Manager};
+pub use model::StorageModel;
+pub use types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};

@@ -1,0 +1,103 @@
+//! The storage-system interface the workflow engine drives.
+//!
+//! Each evaluated configuration — WOSS, the DSS baseline, NFS, GPFS, and
+//! node-local storage — implements [`StorageModel`]. The interface is
+//! deliberately POSIX-shaped: whole-file/range reads and writes plus
+//! `setxattr`/`getxattr`; the cross-layer channel is *only* the xattr
+//! calls, mirroring the paper's thesis that no API extension is needed.
+
+use crate::hints::TagSet;
+use crate::sim::{Cluster, Metrics, SimTime};
+use crate::storage::types::{NodeId, StorageError};
+
+/// One storage configuration under test.
+pub trait StorageModel {
+    /// Short label used in result tables ("WOSS-RAM", "NFS", ...).
+    fn name(&self) -> String;
+
+    /// Create + write a whole file from `client`. Returns the time the
+    /// write is complete from the application's perspective (replication
+    /// semantics decide whether background replicas block).
+    fn write_file(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        size: u64,
+        tags: &TagSet,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError>;
+
+    /// Read a whole file into `client`.
+    fn read_file(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError>;
+
+    /// Read `[offset, offset+len)` (scatter consumers read disjoint
+    /// regions). Default: whole-file read.
+    fn read_range(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        _offset: u64,
+        _len: u64,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        self.read_file(cluster, client, path, at)
+    }
+
+    /// Set an extended attribute (top-down hints). Non-POSIX systems may
+    /// accept and ignore (legacy interop — the incremental-adoption
+    /// argument).
+    fn set_xattr(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        key: &str,
+        value: &str,
+        at: SimTime,
+    ) -> Result<SimTime, StorageError>;
+
+    /// Get an extended attribute (bottom-up info). Returns the value (if
+    /// any) and the completion time.
+    fn get_xattr(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        key: &str,
+        at: SimTime,
+    ) -> Result<(Option<String>, SimTime), StorageError>;
+
+    /// Decision-time replica locations for the scheduler. Empty when the
+    /// system does not expose location (DSS, NFS): the paper's point is
+    /// that schedulers can only exploit what the storage exposes. The
+    /// *query cost* is charged by the caller via
+    /// `get_xattr("location")`; this accessor is the parsed result.
+    fn locations(&self, path: &str) -> Vec<NodeId>;
+
+    /// Per-chunk locations over a byte range (scatter scheduling).
+    fn locations_range(&self, path: &str, _offset: u64, _len: u64) -> Vec<NodeId> {
+        self.locations(path)
+    }
+
+    /// Size of a stored file, if it exists.
+    fn file_size(&self, path: &str) -> Option<u64>;
+
+    /// Delete a file (stage-out cleanup).
+    fn delete(&mut self, path: &str) -> Result<(), StorageError>;
+
+    /// Counters accumulated so far.
+    fn metrics(&self) -> &Metrics;
+
+    /// Does this system expose data location to applications?
+    fn exposes_location(&self) -> bool {
+        false
+    }
+}

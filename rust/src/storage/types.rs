@@ -1,0 +1,206 @@
+//! Core identifier and metadata types shared across the storage stack.
+
+use crate::hints::TagSet;
+use std::fmt;
+
+/// A node index in the simulated (or live) cluster. Node 0 hosts the
+/// metadata manager; the backend endpoint uses the highest index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// A file identifier assigned by the metadata manager at create time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FileId(pub u64);
+
+/// Per-chunk metadata: which nodes hold replicas of the chunk. The first
+/// entry is the primary (write target); later entries are replicas.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChunkMeta {
+    /// Replica holders, primary first.
+    pub replicas: Vec<NodeId>,
+}
+
+impl ChunkMeta {
+    /// Primary holder.
+    pub fn primary(&self) -> NodeId {
+        self.replicas[0]
+    }
+}
+
+/// Per-file metadata maintained by the manager: the block-map plus the
+/// extended attributes that carry cross-layer hints.
+#[derive(Debug, Clone)]
+pub struct FileMeta {
+    /// Manager-assigned id.
+    pub id: FileId,
+    /// Logical size in bytes.
+    pub size: u64,
+    /// Chunk size this file was laid out with (the `BlockSize` hint can
+    /// override the system default — scatter/gather patterns).
+    pub chunk_size: u64,
+    /// Extended attributes (the cross-layer channel).
+    pub tags: TagSet,
+    /// Block-map: one entry per chunk.
+    pub chunks: Vec<ChunkMeta>,
+    /// Node whose SAI created the file (placement context).
+    pub creator: NodeId,
+}
+
+impl FileMeta {
+    /// Number of chunks for `size` bytes at `chunk_size`.
+    pub fn chunk_count(size: u64, chunk_size: u64) -> u64 {
+        if size == 0 {
+            0
+        } else {
+            size.div_ceil(chunk_size)
+        }
+    }
+
+    /// Size in bytes of chunk `idx` (the last chunk may be short).
+    pub fn chunk_bytes(&self, idx: u64) -> u64 {
+        debug_assert!(idx < self.chunks.len() as u64);
+        let full = self.size / self.chunk_size;
+        if idx < full {
+            self.chunk_size
+        } else {
+            self.size - full * self.chunk_size
+        }
+    }
+
+    /// All distinct nodes holding at least one chunk of this file.
+    pub fn holders(&self) -> Vec<NodeId> {
+        let mut out: Vec<NodeId> = self
+            .chunks
+            .iter()
+            .flat_map(|c| c.replicas.iter().copied())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Chunk index range covering `[offset, offset+len)`.
+    pub fn chunk_range(&self, offset: u64, len: u64) -> std::ops::Range<u64> {
+        if len == 0 || self.size == 0 {
+            return 0..0;
+        }
+        let first = offset / self.chunk_size;
+        let last = (offset + len - 1).min(self.size - 1) / self.chunk_size;
+        first..(last + 1).min(self.chunks.len() as u64)
+    }
+}
+
+/// Storage-node registry entry kept by the manager.
+#[derive(Debug, Clone)]
+pub struct NodeState {
+    /// Node id.
+    pub node: NodeId,
+    /// Total chunk-store capacity, bytes.
+    pub capacity: u64,
+    /// Bytes currently allocated.
+    pub used: u64,
+}
+
+impl NodeState {
+    /// Remaining capacity.
+    pub fn free(&self) -> u64 {
+        self.capacity.saturating_sub(self.used)
+    }
+
+    /// Can this node accept `bytes` more?
+    pub fn fits(&self, bytes: u64) -> bool {
+        self.free() >= bytes
+    }
+}
+
+/// Storage-stack error type.
+#[derive(Debug, thiserror::Error)]
+pub enum StorageError {
+    #[error("file not found: {0}")]
+    NotFound(String),
+    #[error("file already exists: {0}")]
+    AlreadyExists(String),
+    #[error("no storage node has {0} bytes free")]
+    NoSpace(u64),
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(size: u64, chunk_size: u64) -> FileMeta {
+        let n = FileMeta::chunk_count(size, chunk_size);
+        FileMeta {
+            id: FileId(1),
+            size,
+            chunk_size,
+            tags: TagSet::new(),
+            chunks: (0..n)
+                .map(|i| ChunkMeta {
+                    replicas: vec![NodeId((i % 3) as usize)],
+                })
+                .collect(),
+            creator: NodeId(1),
+        }
+    }
+
+    #[test]
+    fn chunk_count() {
+        assert_eq!(FileMeta::chunk_count(0, 1024), 0);
+        assert_eq!(FileMeta::chunk_count(1, 1024), 1);
+        assert_eq!(FileMeta::chunk_count(1024, 1024), 1);
+        assert_eq!(FileMeta::chunk_count(1025, 1024), 2);
+    }
+
+    #[test]
+    fn chunk_bytes_last_short() {
+        let m = meta(2500, 1024);
+        assert_eq!(m.chunks.len(), 3);
+        assert_eq!(m.chunk_bytes(0), 1024);
+        assert_eq!(m.chunk_bytes(1), 1024);
+        assert_eq!(m.chunk_bytes(2), 452);
+    }
+
+    #[test]
+    fn chunk_bytes_exact_multiple() {
+        let m = meta(2048, 1024);
+        assert_eq!(m.chunks.len(), 2);
+        assert_eq!(m.chunk_bytes(1), 1024);
+    }
+
+    #[test]
+    fn holders_dedup() {
+        let m = meta(4096, 1024); // nodes 0,1,2,0
+        assert_eq!(m.holders(), vec![NodeId(0), NodeId(1), NodeId(2)]);
+    }
+
+    #[test]
+    fn chunk_range() {
+        let m = meta(10_240, 1024); // 10 chunks
+        assert_eq!(m.chunk_range(0, 1024), 0..1);
+        assert_eq!(m.chunk_range(0, 1025), 0..2);
+        assert_eq!(m.chunk_range(5000, 100), 4..5);
+        assert_eq!(m.chunk_range(9000, 9999), 8..10, "clamped to file end");
+        assert_eq!(m.chunk_range(0, 0), 0..0);
+    }
+
+    #[test]
+    fn node_state_capacity() {
+        let n = NodeState {
+            node: NodeId(3),
+            capacity: 100,
+            used: 80,
+        };
+        assert_eq!(n.free(), 20);
+        assert!(n.fits(20));
+        assert!(!n.fits(21));
+    }
+}

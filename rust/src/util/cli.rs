@@ -1,0 +1,131 @@
+//! Minimal command-line argument parser (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments. The `woss` binary and all examples parse through
+//! this.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, named options, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` and `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` tokens.
+    pub flags: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit token stream.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Option value by key.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option value or default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Parse an option as `T`, with default when absent. Panics with a
+    /// readable message on malformed input (CLI boundary).
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(raw) => raw
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key} {raw}: {e}")),
+        }
+    }
+
+    /// Is a bare flag present? (accepts both `--quiet` and `--quiet=true`)
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("experiment fig5 --runs 20 --seed=7 --quiet");
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig5"]);
+        assert_eq!(a.get("runs"), Some("20"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn get_parse_with_default() {
+        let a = parse("run --nodes 50");
+        assert_eq!(a.get_parse("nodes", 20usize), 50);
+        assert_eq!(a.get_parse("runs", 5usize), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "--nodes")]
+    fn get_parse_malformed_panics() {
+        let a = parse("run --nodes banana");
+        let _: usize = a.get_parse("nodes", 0);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_value() {
+        let a = parse("run --verbose --nodes 3");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("nodes"), Some("3"));
+    }
+
+    #[test]
+    fn empty_input() {
+        let a = parse("");
+        assert!(a.command.is_none());
+        assert!(a.options.is_empty());
+    }
+}

@@ -1,0 +1,15 @@
+//! In-tree substrates. This build is fully offline (only the crates
+//! vendored for the `xla` bridge are available), so the small library
+//! pieces a project would normally pull from crates.io — deterministic
+//! RNG, statistics, a CLI parser, a JSON emitter, table rendering, a
+//! property-testing harness — are implemented here.
+
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::Summary;

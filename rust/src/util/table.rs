@@ -1,0 +1,159 @@
+//! Plain-text table rendering for experiment reports.
+//!
+//! Every figure/table reproduction in [`crate::bench`] renders through
+//! this so `woss experiment <id>` output looks like the paper's tables.
+
+/// A simple column-aligned text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title line.
+    pub fn new(title: &str) -> Self {
+        Table {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Set the header row.
+    pub fn header<S: Into<String>, I: IntoIterator<Item = S>>(mut self, cols: I) -> Self {
+        self.header = cols.into_iter().map(Into::into).collect();
+        self
+    }
+
+    /// Append a data row.
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cols: I) {
+        self.rows.push(cols.into_iter().map(Into::into).collect());
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render the table.
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        let measure = |row: &[String], widths: &mut [usize]| {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        };
+        measure(&self.header, &mut widths);
+        for row in &self.rows {
+            measure(row, &mut widths);
+        }
+
+        let render_row = |row: &[String]| -> String {
+            let cells: Vec<String> = (0..ncols)
+                .map(|i| {
+                    let cell = row.get(i).map(String::as_str).unwrap_or("");
+                    format!("{:<width$}", cell, width = widths[i])
+                })
+                .collect();
+            format!("| {} |", cells.join(" | "))
+        };
+
+        let sep = format!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        if !self.header.is_empty() {
+            out.push_str(&render_row(&self.header));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&render_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds human-readably (`1.2 s`, `830 ms`).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.1} s")
+    } else if s >= 1e-3 {
+        format!("{:.1} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Format a byte count (`1.8 GB`, `204 KB`).
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.1} GB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.1} MB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.1} KB", b / KB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Fig X").header(["system", "runtime (s)"]);
+        t.row(["NFS", "320.0"]);
+        t.row(["WOSS-RAM", "31.5"]);
+        let out = t.render();
+        assert!(out.contains("## Fig X"));
+        assert!(out.contains("| NFS      | 320.0       |"));
+        assert!(out.lines().count() == 5);
+    }
+
+    #[test]
+    fn ragged_rows_padded() {
+        let mut t = Table::new("").header(["a", "b", "c"]);
+        t.row(["1"]);
+        let out = t.render();
+        assert!(out.contains("| 1 |   |   |"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(2.5), "2.5 s");
+        assert_eq!(fmt_secs(0.05), "50.0 ms");
+        assert_eq!(fmt_secs(2e-5), "20.0 µs");
+        assert_eq!(fmt_bytes(1024), "1.0 KB");
+        assert_eq!(fmt_bytes(1_887_436_800), "1.8 GB");
+        assert_eq!(fmt_bytes(100), "100 B");
+    }
+}

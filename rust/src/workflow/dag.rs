@@ -1,0 +1,314 @@
+//! Workflow DAG specification.
+//!
+//! A workflow is a set of tasks communicating through intermediary files
+//! (the many-task model of §2). Dependencies are derived from the
+//! producer/consumer relation over file paths — a task is ready when
+//! every file it reads from intermediate storage has been produced.
+//! Stage-in/out tasks cross the backend boundary (dashed line in the
+//! paper's Figure 4).
+
+use crate::hints::TagSet;
+use crate::storage::types::NodeId;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Where a file access is served from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// The shared intermediate (scratch) storage under evaluation.
+    Intermediate,
+    /// The persistent backend (NFS / GPFS).
+    Backend,
+}
+
+/// One file read performed by a task.
+#[derive(Debug, Clone)]
+pub struct ReadSpec {
+    pub path: String,
+    pub tier: Tier,
+    /// Byte range; `None` reads the whole file (scatter readers use
+    /// disjoint ranges).
+    pub range: Option<(u64, u64)>,
+}
+
+/// One file write performed by a task.
+#[derive(Debug, Clone)]
+pub struct WriteSpec {
+    pub path: String,
+    pub tier: Tier,
+    pub size: u64,
+    /// Cross-layer hints the runtime attaches to this output.
+    pub tags: TagSet,
+}
+
+/// One workflow task.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// Unique id within the workflow.
+    pub id: usize,
+    /// Stage label ("stageIn", "mProject", "dock", ...).
+    pub stage: String,
+    /// Files read.
+    pub reads: Vec<ReadSpec>,
+    /// Files written.
+    pub writes: Vec<WriteSpec>,
+    /// Pure compute time (seconds on the reference cluster CPU).
+    pub cpu_secs: f64,
+    /// Pin execution to a node (stage-in scripts, manager-side merges);
+    /// `None` lets the scheduler choose.
+    pub pin: Option<NodeId>,
+}
+
+impl TaskSpec {
+    /// New task with the given id and stage label.
+    pub fn new(id: usize, stage: &str) -> Self {
+        TaskSpec {
+            id,
+            stage: stage.to_string(),
+            reads: Vec::new(),
+            writes: Vec::new(),
+            cpu_secs: 0.0,
+            pin: None,
+        }
+    }
+
+    /// Add a whole-file read.
+    pub fn read(mut self, path: &str, tier: Tier) -> Self {
+        self.reads.push(ReadSpec {
+            path: path.to_string(),
+            tier,
+            range: None,
+        });
+        self
+    }
+
+    /// Add a range read (scatter consumers).
+    pub fn read_range(mut self, path: &str, tier: Tier, offset: u64, len: u64) -> Self {
+        self.reads.push(ReadSpec {
+            path: path.to_string(),
+            tier,
+            range: Some((offset, len)),
+        });
+        self
+    }
+
+    /// Add a write.
+    pub fn write(mut self, path: &str, tier: Tier, size: u64, tags: TagSet) -> Self {
+        self.writes.push(WriteSpec {
+            path: path.to_string(),
+            tier,
+            size,
+            tags,
+        });
+        self
+    }
+
+    /// Set compute time.
+    pub fn compute(mut self, cpu_secs: f64) -> Self {
+        self.cpu_secs = cpu_secs;
+        self
+    }
+
+    /// Pin to a node.
+    pub fn pin_to(mut self, node: NodeId) -> Self {
+        self.pin = Some(node);
+        self
+    }
+}
+
+/// A whole workflow.
+#[derive(Debug, Clone, Default)]
+pub struct Workflow {
+    pub tasks: Vec<TaskSpec>,
+    /// Files resident on the backend before the run (stage-in sources).
+    pub backend_preload: Vec<(String, u64)>,
+}
+
+impl Workflow {
+    /// Empty workflow.
+    pub fn new() -> Self {
+        Workflow::default()
+    }
+
+    /// Append a task, assigning its id.
+    pub fn push(&mut self, mut task: TaskSpec) -> usize {
+        let id = self.tasks.len();
+        task.id = id;
+        self.tasks.push(task);
+        id
+    }
+
+    /// Declare a backend-resident input dataset.
+    pub fn preload(&mut self, path: &str, size: u64) {
+        self.backend_preload.push((path.to_string(), size));
+    }
+
+    /// Derive dependency edges: task B depends on task A when A writes a
+    /// file (on either tier) that B reads. Returns `deps[b] = {a, ...}`.
+    pub fn dependencies(&self) -> Vec<BTreeSet<usize>> {
+        let mut producer: BTreeMap<&str, usize> = BTreeMap::new();
+        for t in &self.tasks {
+            for w in &t.writes {
+                producer.insert(w.path.as_str(), t.id);
+            }
+        }
+        self.tasks
+            .iter()
+            .map(|t| {
+                t.reads
+                    .iter()
+                    .filter_map(|r| producer.get(r.path.as_str()).copied())
+                    .filter(|&p| p != t.id)
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Validate: every intermediate read has a producer or preload, and
+    /// the dependency graph is acyclic. Returns a topological order.
+    pub fn validate(&self) -> Result<Vec<usize>, String> {
+        let preloaded: BTreeSet<&str> = self
+            .backend_preload
+            .iter()
+            .map(|(p, _)| p.as_str())
+            .collect();
+        let produced: BTreeSet<&str> = self
+            .tasks
+            .iter()
+            .flat_map(|t| t.writes.iter().map(|w| w.path.as_str()))
+            .collect();
+        for t in &self.tasks {
+            for r in &t.reads {
+                if !produced.contains(r.path.as_str()) && !preloaded.contains(r.path.as_str()) {
+                    return Err(format!(
+                        "task {} ({}) reads {} which nothing produces",
+                        t.id, t.stage, r.path
+                    ));
+                }
+            }
+        }
+        // Kahn topological sort.
+        let deps = self.dependencies();
+        let mut indeg: Vec<usize> = deps.iter().map(BTreeSet::len).collect();
+        let mut rdeps: Vec<Vec<usize>> = vec![Vec::new(); self.tasks.len()];
+        for (b, ds) in deps.iter().enumerate() {
+            for &a in ds {
+                rdeps[a].push(b);
+            }
+        }
+        let mut queue: Vec<usize> = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut order = Vec::with_capacity(self.tasks.len());
+        while let Some(t) = queue.pop() {
+            order.push(t);
+            for &b in &rdeps[t] {
+                indeg[b] -= 1;
+                if indeg[b] == 0 {
+                    queue.push(b);
+                }
+            }
+        }
+        if order.len() != self.tasks.len() {
+            return Err("workflow has a dependency cycle".to_string());
+        }
+        Ok(order)
+    }
+
+    /// Total bytes written by all tasks (workload characterization).
+    pub fn bytes_written(&self) -> u64 {
+        self.tasks
+            .iter()
+            .flat_map(|t| t.writes.iter().map(|w| w.size))
+            .sum()
+    }
+
+    /// Distinct stage labels in task order.
+    pub fn stages(&self) -> Vec<String> {
+        let mut seen = BTreeSet::new();
+        let mut out = Vec::new();
+        for t in &self.tasks {
+            if seen.insert(t.stage.clone()) {
+                out.push(t.stage.clone());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pipeline3() -> Workflow {
+        let mut w = Workflow::new();
+        w.preload("/in", 1024);
+        w.push(
+            TaskSpec::new(0, "stageIn")
+                .read("/in", Tier::Backend)
+                .write("/a", Tier::Intermediate, 1024, TagSet::new()),
+        );
+        w.push(
+            TaskSpec::new(0, "s1")
+                .read("/a", Tier::Intermediate)
+                .write("/b", Tier::Intermediate, 2048, TagSet::new())
+                .compute(1.0),
+        );
+        w.push(
+            TaskSpec::new(0, "stageOut")
+                .read("/b", Tier::Intermediate)
+                .write("/out", Tier::Backend, 2048, TagSet::new()),
+        );
+        w
+    }
+
+    #[test]
+    fn dependencies_via_files() {
+        let w = pipeline3();
+        let deps = w.dependencies();
+        assert!(deps[0].is_empty());
+        assert_eq!(deps[1], BTreeSet::from([0]));
+        assert_eq!(deps[2], BTreeSet::from([1]));
+    }
+
+    #[test]
+    fn validates_and_orders() {
+        let w = pipeline3();
+        let order = w.validate().unwrap();
+        let pos = |id: usize| order.iter().position(|&t| t == id).unwrap();
+        assert!(pos(0) < pos(1));
+        assert!(pos(1) < pos(2));
+    }
+
+    #[test]
+    fn missing_producer_rejected() {
+        let mut w = Workflow::new();
+        w.push(TaskSpec::new(0, "t").read("/ghost", Tier::Intermediate));
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        let mut w = Workflow::new();
+        w.push(
+            TaskSpec::new(0, "a")
+                .read("/y", Tier::Intermediate)
+                .write("/x", Tier::Intermediate, 1, TagSet::new()),
+        );
+        w.push(
+            TaskSpec::new(0, "b")
+                .read("/x", Tier::Intermediate)
+                .write("/y", Tier::Intermediate, 1, TagSet::new()),
+        );
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn characterization() {
+        let w = pipeline3();
+        assert_eq!(w.bytes_written(), 1024 + 2048 + 2048);
+        assert_eq!(w.stages(), vec!["stageIn", "s1", "stageOut"]);
+    }
+}

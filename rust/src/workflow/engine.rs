@@ -1,0 +1,646 @@
+//! The workflow execution engine (pyFlow-equivalent).
+//!
+//! List-scheduling in virtual time: tasks become ready when their
+//! producers finish, the scheduler picks a node (optionally
+//! location-aware), and the task's life-cycle charges every cost the
+//! paper's §4.4 microbenchmark itemizes — forking the tag helper,
+//! `set-attribute` round-trips, `get location` queries, the scheduler
+//! decision, input reads, compute, output writes. The Swift personality
+//! (per-tag-op task launch, `Calib::swift_tag_task_ms`) reproduces the
+//! fig11 regression; the pyFlow personality sets it to zero.
+
+use crate::sim::{Cluster, Dur, Metrics, SimTime};
+use crate::storage::model::StorageModel;
+use crate::storage::types::{NodeId, StorageError};
+use crate::util::Rng;
+use crate::workflow::dag::{TaskSpec, Tier, Workflow};
+use crate::workflow::scheduler::{LocalityInfo, NodeView, Scheduler};
+use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, HashMap};
+
+/// Engine configuration: which cross-layer steps are performed. The
+/// Table 6 overhead ladder is expressed by toggling these.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Runtime tags outputs with the workload's hints (`set-attribute`).
+    pub tag_outputs: bool,
+    /// Replace every hint with an inert tag (same overhead, no
+    /// optimization triggered) — Table 6's "useless tags" rungs.
+    pub useless_tags: bool,
+    /// Runtime queries `location` for task inputs.
+    pub query_location: bool,
+    /// Charge the fork of the `setfattr` helper per tag operation (the
+    /// prototype's implementation shortcut).
+    pub charge_fork: bool,
+    /// Fork the helper but skip the actual `set-attribute` RPC — the
+    /// "DSS + fork" rung of Table 6.
+    pub fork_only: bool,
+    /// Service-time jitter spread (run-to-run variance, e.g. 0.03).
+    pub jitter: f64,
+    /// RNG seed for this run.
+    pub seed: u64,
+    /// Run stage-in as a separate phase: no workflow task starts before
+    /// every `stageIn` task has finished (the paper's scripts stage the
+    /// whole dataset, then start the benchmark and time it separately).
+    pub stage_in_barrier: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            tag_outputs: true,
+            useless_tags: false,
+            query_location: true,
+            charge_fork: true,
+            fork_only: false,
+            jitter: 0.03,
+            seed: 1,
+            stage_in_barrier: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Full WOSS integration.
+    pub fn woss(seed: u64) -> Self {
+        EngineConfig {
+            seed,
+            ..EngineConfig::default()
+        }
+    }
+
+    /// Plain baseline: no tagging, no location queries (DSS/NFS runs).
+    pub fn plain(seed: u64) -> Self {
+        EngineConfig {
+            tag_outputs: false,
+            useless_tags: false,
+            query_location: false,
+            charge_fork: false,
+            fork_only: false,
+            jitter: 0.03,
+            seed,
+            stage_in_barrier: true,
+        }
+    }
+}
+
+/// Execution record for one task.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub id: usize,
+    pub stage: String,
+    pub node: NodeId,
+    pub ready: SimTime,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+/// Result of one simulated workflow run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// All-tasks makespan, seconds.
+    pub makespan: f64,
+    /// Per-task execution records.
+    pub tasks: Vec<TaskRecord>,
+    /// Merged counters (intermediate + backend + engine).
+    pub metrics: Metrics,
+}
+
+impl RunResult {
+    /// Latest finish among tasks whose stage matches.
+    pub fn stage_end(&self, stage: &str) -> f64 {
+        self.tasks
+            .iter()
+            .filter(|t| t.stage == stage)
+            .map(|t| t.end.as_secs_f64())
+            .fold(0.0, f64::max)
+    }
+
+    /// Earliest start among tasks whose stage matches.
+    pub fn stage_start(&self, stage: &str) -> f64 {
+        self.tasks
+            .iter()
+            .filter(|t| t.stage == stage)
+            .map(|t| t.start.as_secs_f64())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Wall-clock duration of one stage.
+    pub fn stage_duration(&self, stage: &str) -> f64 {
+        let s = self.stage_start(stage);
+        if s.is_finite() {
+            self.stage_end(stage) - s
+        } else {
+            0.0
+        }
+    }
+
+    /// Workflow-only span: first start to last finish over tasks that
+    /// are neither stage-in nor stage-out. Figures 5–8 report this
+    /// ("reports stage-in/out ... separately from the workflow time").
+    pub fn workflow_span(&self) -> f64 {
+        let core = |t: &TaskRecord| t.stage != "stageIn" && t.stage != "stageOut";
+        let start = self
+            .tasks
+            .iter()
+            .filter(|t| core(t))
+            .map(|t| t.start.as_secs_f64())
+            .fold(f64::INFINITY, f64::min);
+        let end = self
+            .tasks
+            .iter()
+            .filter(|t| core(t))
+            .map(|t| t.end.as_secs_f64())
+            .fold(0.0, f64::max);
+        if start.is_finite() {
+            end - start
+        } else {
+            0.0
+        }
+    }
+
+    /// Percentile of finish times over tasks matching `filter`
+    /// (Table 4's "90% of workflow tasks" row).
+    pub fn finish_percentile<F: Fn(&TaskRecord) -> bool>(&self, p: f64, filter: F) -> f64 {
+        let mut ends: Vec<f64> = self
+            .tasks
+            .iter()
+            .filter(|t| filter(t))
+            .map(|t| t.end.as_secs_f64())
+            .collect();
+        if ends.is_empty() {
+            return 0.0;
+        }
+        ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (ends.len() - 1) as f64).round() as usize;
+        ends[rank]
+    }
+}
+
+/// The engine.
+pub struct Engine<'a> {
+    pub cluster: &'a mut Cluster,
+    /// Intermediate (scratch) storage under test.
+    pub inter: &'a mut dyn StorageModel,
+    /// Persistent backend (stage-in source / stage-out sink).
+    pub backend: &'a mut dyn StorageModel,
+    pub scheduler: &'a mut dyn Scheduler,
+    pub config: EngineConfig,
+}
+
+impl<'a> Engine<'a> {
+    /// Execute `workflow` to completion; returns per-task records.
+    pub fn run(&mut self, workflow: &Workflow) -> Result<RunResult, StorageError> {
+        workflow
+            .validate()
+            .map_err(StorageError::Invalid)?;
+        for (path, size) in &workflow.backend_preload {
+            // Datasets already on the backend: materialize instantly.
+            self.backend
+                .write_file(self.cluster, self.cluster_backend(), path, *size, &Default::default(), SimTime::ZERO)?;
+        }
+
+        let deps = workflow.dependencies();
+        let mut remaining: Vec<usize> = deps.iter().map(|d| d.len()).collect();
+        let mut rdeps: Vec<Vec<usize>> = vec![Vec::new(); workflow.tasks.len()];
+        for (b, ds) in deps.iter().enumerate() {
+            for &a in ds {
+                rdeps[a].push(b);
+            }
+        }
+        let mut finish: Vec<Option<SimTime>> = vec![None; workflow.tasks.len()];
+        let mut ready_at: Vec<SimTime> = vec![SimTime::ZERO; workflow.tasks.len()];
+
+        let mut rng = Rng::new(self.config.seed);
+        let mut records: Vec<Option<TaskRecord>> = vec![None; workflow.tasks.len()];
+        let mut engine_metrics = Metrics::new();
+        // Finish times of tasks per node: the scheduler's in-flight view.
+        let mut node_ends: HashMap<usize, Vec<SimTime>> = HashMap::new();
+
+        // Stage-in phase: when the barrier is on, all `stageIn` tasks run
+        // to completion before any workflow task becomes ready.
+        let mut barrier = SimTime::ZERO;
+        if self.config.stage_in_barrier {
+            for (id, task) in workflow.tasks.iter().enumerate() {
+                if task.stage == "stageIn" && remaining[id] == 0 {
+                    let end = self.execute_task(
+                        task,
+                        SimTime::ZERO,
+                        &mut rng,
+                        &mut engine_metrics,
+                        &mut records,
+                        &mut node_ends,
+                    )?;
+                    finish[id] = Some(end);
+                    barrier = barrier.max(end);
+                }
+            }
+        }
+
+        // Min-heap of (ready time, id).
+        let mut heap: BinaryHeap<std::cmp::Reverse<(SimTime, usize)>> = BinaryHeap::new();
+        for (id, _task) in workflow.tasks.iter().enumerate() {
+            if finish[id].is_some() {
+                continue; // already ran in the stage-in phase
+            }
+            if remaining[id] == 0 {
+                heap.push(std::cmp::Reverse((barrier, id)));
+            }
+        }
+        // Credit finished stage-in tasks to their dependents.
+        if self.config.stage_in_barrier {
+            for (id, f) in finish.clone().iter().enumerate() {
+                if let Some(end) = f {
+                    for &b in &rdeps[id] {
+                        remaining[b] -= 1;
+                        ready_at[b] = ready_at[b].max(*end).max(barrier);
+                        if remaining[b] == 0 {
+                            heap.push(std::cmp::Reverse((ready_at[b], b)));
+                        }
+                    }
+                }
+            }
+        }
+
+        while let Some(std::cmp::Reverse((ready, id))) = heap.pop() {
+            let task = &workflow.tasks[id];
+            let end = self.execute_task(
+                task,
+                ready,
+                &mut rng,
+                &mut engine_metrics,
+                &mut records,
+                &mut node_ends,
+            )?;
+            finish[id] = Some(end);
+            for &b in &rdeps[id] {
+                remaining[b] -= 1;
+                ready_at[b] = ready_at[b].max(end);
+                if remaining[b] == 0 {
+                    heap.push(std::cmp::Reverse((ready_at[b], b)));
+                }
+            }
+        }
+
+        let makespan = finish
+            .iter()
+            .map(|f| f.expect("all tasks ran").as_secs_f64())
+            .fold(0.0, f64::max);
+        let mut metrics = engine_metrics;
+        metrics.merge(self.inter.metrics());
+        metrics.merge(self.backend.metrics());
+        Ok(RunResult {
+            makespan,
+            tasks: records.into_iter().map(|r| r.expect("recorded")).collect(),
+            metrics,
+        })
+    }
+
+    fn cluster_backend(&self) -> NodeId {
+        // Preloads are written "from" the backend endpoint itself: no
+        // cluster traffic is charged for data that starts on the backend.
+        self.cluster.backend()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn execute_task(
+        &mut self,
+        task: &TaskSpec,
+        ready: SimTime,
+        rng: &mut Rng,
+        em: &mut Metrics,
+        records: &mut [Option<TaskRecord>],
+        node_ends: &mut HashMap<usize, Vec<SimTime>>,
+    ) -> Result<SimTime, StorageError> {
+        let calib = self.cluster.calib().clone();
+        let mut t = ready + Dur::from_millis_f64(calib.sched_decision_ms);
+
+        // --- location queries (bottom-up channel) ---
+        let mut locality = LocalityInfo::default();
+        if self.config.query_location && self.scheduler.wants_location() {
+            for read in crate::workflow::scheduler::intermediate_reads(task) {
+                // Swift personality launches a task per query.
+                t = t + Dur::from_millis_f64(calib.swift_tag_task_ms);
+                let (_, done) = self.inter.get_xattr(
+                    self.cluster,
+                    NodeId(0),
+                    &read.path,
+                    crate::hints::LOCATION_ATTR,
+                    t,
+                )?;
+                t = done;
+                let (holders, bytes) = match read.range {
+                    Some((off, len)) => (
+                        self.inter.locations_range(&read.path, off, len),
+                        len,
+                    ),
+                    None => (
+                        self.inter.locations(&read.path),
+                        self.inter.file_size(&read.path).unwrap_or(0),
+                    ),
+                };
+                locality.inputs.push((holders, bytes));
+            }
+        }
+
+        // --- scheduling decision ---
+        // Tasks are scheduled in ready-time order (min-heap), so finish
+        // times at or before `ready` can be pruned permanently — keeps
+        // the in-flight scan O(active) instead of O(all tasks so far)
+        // (perf pass, EXPERIMENTS.md §Perf).
+        let views: Vec<NodeView> = self
+            .cluster
+            .nodes()
+            .skip(1) // node 0 hosts the manager / coordination scripts
+            .map(|n| NodeView {
+                node: n,
+                next_free: self.cluster.cores[n.0].free_at(),
+                in_flight: match node_ends.get_mut(&n.0) {
+                    Some(ends) => {
+                        ends.retain(|&e| e > ready);
+                        ends.len()
+                    }
+                    None => 0,
+                },
+            })
+            .collect();
+        let node = if views.is_empty() {
+            NodeId(0)
+        } else {
+            self.scheduler.pick(task, &views, &locality)
+        };
+        if !locality.inputs.is_empty() {
+            let local = locality
+                .inputs
+                .iter()
+                .any(|(holders, _)| holders.contains(&node));
+            if local {
+                em.local_placements += 1;
+            } else {
+                em.remote_placements += 1;
+            }
+        }
+
+        // --- tag outputs (top-down channel) ---
+        if self.config.tag_outputs {
+            for write in &task.writes {
+                if write.tier != Tier::Intermediate {
+                    continue;
+                }
+                for (key, value) in write.tags.iter() {
+                    if self.config.charge_fork {
+                        t = t + Dur::from_millis_f64(calib.fork_ms);
+                        em.forks += 1;
+                    }
+                    if self.config.fork_only {
+                        continue; // helper forked, no RPC issued
+                    }
+                    t = t + Dur::from_millis_f64(calib.swift_tag_task_ms);
+                    let (k, v) = if self.config.useless_tags {
+                        (format!("junk_{key}"), value.to_string())
+                    } else {
+                        (key.to_string(), value.to_string())
+                    };
+                    t = self
+                        .inter
+                        .set_xattr(self.cluster, node, &write.path, &k, &v, t)?;
+                }
+            }
+        }
+
+        let start = t;
+
+        // --- input reads ---
+        for read in &task.reads {
+            let storage: &mut dyn StorageModel = match read.tier {
+                Tier::Intermediate => self.inter,
+                Tier::Backend => self.backend,
+            };
+            t = match read.range {
+                Some((off, len)) => {
+                    storage.read_range(self.cluster, node, &read.path, off, len, t)?
+                }
+                None => storage.read_file(self.cluster, node, &read.path, t)?,
+            };
+        }
+
+        // --- compute ---
+        if task.cpu_secs > 0.0 {
+            let secs = rng.jitter(task.cpu_secs, self.config.jitter);
+            let span = self.cluster.compute(node, secs, t);
+            t = span.end;
+        }
+
+        // --- output writes ---
+        for write in &task.writes {
+            let storage: &mut dyn StorageModel = match write.tier {
+                Tier::Intermediate => self.inter,
+                Tier::Backend => self.backend,
+            };
+            // Hints travel through the xattr channel (set above, pending
+            // at the manager); the write itself carries none — except
+            // when tagging is off entirely (plain DSS/NFS runs), where
+            // there are none anyway.
+            t = storage.write_file(
+                self.cluster,
+                node,
+                &write.path,
+                write.size,
+                &Default::default(),
+                t,
+            )?;
+        }
+
+        node_ends.entry(node.0).or_default().push(t);
+        records[task.id] = Some(TaskRecord {
+            id: task.id,
+            stage: task.stage.clone(),
+            node,
+            ready,
+            start,
+            end: t,
+        });
+        Ok(t)
+    }
+}
+
+/// Convenience wrapper: run `workflow` once over the given pieces.
+pub fn run_workflow(
+    cluster: &mut Cluster,
+    inter: &mut dyn StorageModel,
+    backend: &mut dyn StorageModel,
+    scheduler: &mut dyn Scheduler,
+    config: EngineConfig,
+    workflow: &Workflow,
+) -> Result<RunResult, StorageError> {
+    Engine {
+        cluster,
+        inter,
+        backend,
+        scheduler,
+        config,
+    }
+    .run(workflow)
+}
+
+/// Aggregate stage-level summary used by several experiment tables.
+pub fn stage_table(result: &RunResult) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for t in &result.tasks {
+        let e = out.entry(t.stage.clone()).or_insert(0.0f64);
+        *e = e.max(t.end.as_secs_f64());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hints::TagSet;
+    use crate::nfs::NfsServer;
+    use crate::sim::{Calib, DiskKind};
+    use crate::storage::standard_deployment;
+    use crate::workflow::dag::TaskSpec;
+    use crate::workflow::scheduler::{LeastLoaded, LocationAware};
+
+    const MB: u64 = 1024 * 1024;
+
+    /// A 3-stage, 4-wide pipeline with local tags.
+    fn pipelines(width: usize, tagged: bool) -> Workflow {
+        let mut w = Workflow::new();
+        w.preload("/backend/in", 100 * MB);
+        for p in 0..width {
+            let tags = if tagged {
+                TagSet::from_pairs([("DP", "local")])
+            } else {
+                TagSet::new()
+            };
+            let stage_in = w.push(
+                TaskSpec::new(0, "stageIn")
+                    .read("/backend/in", Tier::Backend)
+                    .write(&format!("/p{p}/a"), Tier::Intermediate, 100 * MB, tags.clone()),
+            );
+            let _ = stage_in;
+            w.push(
+                TaskSpec::new(0, "s1")
+                    .read(&format!("/p{p}/a"), Tier::Intermediate)
+                    .write(&format!("/p{p}/b"), Tier::Intermediate, 200 * MB, tags.clone())
+                    .compute(1.0),
+            );
+            w.push(
+                TaskSpec::new(0, "s2")
+                    .read(&format!("/p{p}/b"), Tier::Intermediate)
+                    .write(&format!("/p{p}/c"), Tier::Intermediate, 10 * MB, tags.clone())
+                    .compute(1.0),
+            );
+            w.push(
+                TaskSpec::new(0, "stageOut")
+                    .read(&format!("/p{p}/c"), Tier::Intermediate)
+                    .write(&format!("/backend/out{p}"), Tier::Backend, 10 * MB, TagSet::new()),
+            );
+        }
+        w
+    }
+
+    fn run_config(
+        woss: bool,
+    ) -> (RunResult, f64) {
+        let calib = Calib::default();
+        let mut cluster = Cluster::new(8, DiskKind::RamDisk, &calib);
+        let mut inter = standard_deployment(&cluster, woss, true, 7);
+        let mut backend = NfsServer::new(&calib);
+        let wf = pipelines(4, woss);
+        let result = if woss {
+            let mut sched = LocationAware::new();
+            run_workflow(
+                &mut cluster,
+                &mut inter,
+                &mut backend,
+                &mut sched,
+                EngineConfig::woss(3),
+                &wf,
+            )
+            .unwrap()
+        } else {
+            let mut sched = LeastLoaded::new();
+            run_workflow(
+                &mut cluster,
+                &mut inter,
+                &mut backend,
+                &mut sched,
+                EngineConfig::plain(3),
+                &wf,
+            )
+            .unwrap()
+        };
+        let makespan = result.makespan;
+        (result, makespan)
+    }
+
+    #[test]
+    fn runs_to_completion_and_orders_stages() {
+        let (res, makespan) = run_config(true);
+        assert_eq!(res.tasks.len(), 16);
+        assert!(makespan > 0.0);
+        assert!(res.stage_end("stageIn") <= res.stage_end("s1"));
+        assert!(res.stage_end("s1") <= res.stage_end("s2"));
+        assert!(res.stage_end("s2") <= res.stage_end("stageOut"));
+    }
+
+    #[test]
+    fn woss_pipeline_beats_dss() {
+        let (_, woss) = run_config(true);
+        let (_, dss) = run_config(false);
+        assert!(
+            woss < dss,
+            "WOSS ({woss:.2}s) must beat DSS ({dss:.2}s) on the pipeline pattern"
+        );
+    }
+
+    #[test]
+    fn woss_achieves_locality() {
+        let (res, _) = run_config(true);
+        assert!(
+            res.metrics.local_placements > 0,
+            "location-aware scheduling found local placements"
+        );
+        assert!(res.metrics.local_bytes > 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (_, a) = run_config(true);
+        let (_, b) = run_config(true);
+        assert_eq!(a, b, "same seed, same makespan");
+    }
+
+    #[test]
+    fn percentile_and_stage_helpers() {
+        let (res, makespan) = run_config(true);
+        let p90 = res.finish_percentile(90.0, |t| t.stage != "stageIn" && t.stage != "stageOut");
+        assert!(p90 > 0.0 && p90 <= makespan);
+        let table = stage_table(&res);
+        assert_eq!(table.len(), 4);
+    }
+
+    #[test]
+    fn swift_personality_slower() {
+        let calib = Calib::default();
+        let mut swift_calib = calib.clone();
+        swift_calib.swift_tag_task_ms = 50.0;
+
+        let mut c1 = Cluster::new(8, DiskKind::RamDisk, &calib);
+        let mut i1 = standard_deployment(&c1, true, true, 7);
+        let mut b1 = NfsServer::new(&calib);
+        let mut s1 = LocationAware::new();
+        let r1 = run_workflow(&mut c1, &mut i1, &mut b1, &mut s1, EngineConfig::woss(3), &pipelines(4, true)).unwrap();
+
+        let mut c2 = Cluster::new(8, DiskKind::RamDisk, &swift_calib);
+        let mut i2 = standard_deployment(&c2, true, true, 7);
+        let mut b2 = NfsServer::new(&swift_calib);
+        let mut s2 = LocationAware::new();
+        let r2 = run_workflow(&mut c2, &mut i2, &mut b2, &mut s2, EngineConfig::woss(3), &pipelines(4, true)).unwrap();
+
+        assert!(r2.makespan > r1.makespan, "swift tag-task overhead must show");
+    }
+}

@@ -1,0 +1,15 @@
+//! Workflow runtime (pyFlow-equivalent) with WOSS integration.
+//!
+//! Mirrors §3.4: the runtime owns the DAG, tags files with
+//! access-pattern hints derived from the workflow structure, queries the
+//! storage's `location` attribute, and schedules tasks location-aware.
+//! The Swift personality (per-tag-op task launch cost) is modelled via
+//! `Calib::swift_tag_task_ms`.
+
+pub mod dag;
+pub mod engine;
+pub mod scheduler;
+
+pub use dag::{ReadSpec, TaskSpec, Tier, Workflow, WriteSpec};
+pub use engine::{run_workflow, Engine, EngineConfig, RunResult, TaskRecord};
+pub use scheduler::{LeastLoaded, LocalityInfo, LocationAware, NodeView, Scheduler};

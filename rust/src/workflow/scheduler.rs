@@ -1,0 +1,341 @@
+//! Task schedulers.
+//!
+//! The paper's integration modifies pyFlow/Swift to (a) tag files with
+//! access-pattern hints and (b) query the storage's `location` attribute
+//! and schedule the consuming task on a node that holds the data. Both
+//! schedulers here implement the same simple heuristics the paper calls
+//! "relatively naïve" — round-robin/least-loaded without locality
+//! (baseline) vs locality-first (WOSS integration).
+
+use crate::sim::SimTime;
+use crate::storage::types::NodeId;
+use crate::workflow::dag::{ReadSpec, TaskSpec, Tier};
+
+/// The engine's per-node view offered to schedulers.
+#[derive(Debug, Clone)]
+pub struct NodeView {
+    pub node: NodeId,
+    /// When the node's cores are estimated to be next free.
+    pub next_free: SimTime,
+    /// Tasks assigned to this node that have not finished yet (the
+    /// engine's own bookkeeping — the robust load signal).
+    pub in_flight: usize,
+}
+
+/// Input-locality information for a task: per read, the nodes holding
+/// the data and the byte count (empty when the storage does not expose
+/// location — DSS/NFS).
+#[derive(Debug, Clone, Default)]
+pub struct LocalityInfo {
+    /// (holders, bytes) per intermediate read.
+    pub inputs: Vec<(Vec<NodeId>, u64)>,
+}
+
+/// Scheduler decision surface.
+pub trait Scheduler: Send {
+    /// Name for reports.
+    fn name(&self) -> &'static str;
+    /// Pick a node for `task`. `nodes` is never empty.
+    fn pick(
+        &mut self,
+        task: &TaskSpec,
+        nodes: &[NodeView],
+        locality: &LocalityInfo,
+    ) -> NodeId;
+    /// Whether this scheduler wants the engine to pay for `location`
+    /// queries (WOSS integration does; the baseline does not).
+    fn wants_location(&self) -> bool {
+        false
+    }
+}
+
+/// Baseline: least-loaded, round-robin tie-break. This is what pyFlow
+/// and Swift do without the WOSS integration.
+pub struct LeastLoaded {
+    cursor: usize,
+}
+
+impl LeastLoaded {
+    pub fn new() -> Self {
+        LeastLoaded { cursor: 0 }
+    }
+}
+
+impl Default for LeastLoaded {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn pick(
+        &mut self,
+        task: &TaskSpec,
+        nodes: &[NodeView],
+        _locality: &LocalityInfo,
+    ) -> NodeId {
+        if let Some(pin) = task.pin {
+            return pin;
+        }
+        let min_load = nodes.iter().map(|n| n.in_flight).min().expect("non-empty");
+        // Rotate among the equally-least-loaded to spread work.
+        let candidates: Vec<&NodeView> =
+            nodes.iter().filter(|n| n.in_flight == min_load).collect();
+        let pick = candidates[self.cursor % candidates.len()];
+        self.cursor = self.cursor.wrapping_add(1);
+        pick.node
+    }
+}
+
+/// WOSS integration: schedule on the node holding the most input bytes,
+/// provided it is not overloaded relative to the least-loaded node;
+/// otherwise fall back to least-loaded.
+pub struct LocationAware {
+    fallback: LeastLoaded,
+    /// Don't chase locality onto a node more than this many tasks deeper
+    /// than the least-loaded node (naïve heuristic, per the paper).
+    pub max_queue: usize,
+    /// Ignore gravity below this many bytes: moving a few hundred KB is
+    /// cheaper than unbalancing the compute placement.
+    pub min_gravity_bytes: f64,
+}
+
+impl LocationAware {
+    pub fn new() -> Self {
+        LocationAware {
+            fallback: LeastLoaded::new(),
+            max_queue: 4,
+            min_gravity_bytes: 8.0 * 1024.0 * 1024.0,
+        }
+    }
+}
+
+impl Default for LocationAware {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for LocationAware {
+    fn name(&self) -> &'static str {
+        "location-aware"
+    }
+
+    fn wants_location(&self) -> bool {
+        true
+    }
+
+    fn pick(
+        &mut self,
+        task: &TaskSpec,
+        nodes: &[NodeView],
+        locality: &LocalityInfo,
+    ) -> NodeId {
+        if let Some(pin) = task.pin {
+            return pin;
+        }
+        // Score nodes by local input bytes. A file striped over k
+        // holders contributes bytes/k to each — a fully-striped file is
+        // weak gravity, a `DP=local`/collocated file is strong gravity.
+        let mut scores: Vec<(NodeId, f64)> = Vec::new();
+        for (holders, bytes) in &locality.inputs {
+            if holders.is_empty() {
+                continue;
+            }
+            let share = *bytes as f64 / holders.len() as f64;
+            for h in holders {
+                match scores.iter_mut().find(|(n, _)| n == h) {
+                    Some((_, b)) => *b += share,
+                    None => scores.push((*h, share)),
+                }
+            }
+        }
+        let min_load = nodes
+            .iter()
+            .map(|n| n.in_flight)
+            .min()
+            .unwrap_or(0);
+        let best = scores.iter().map(|(_, b)| *b).fold(0.0f64, f64::max);
+        if best < self.min_gravity_bytes {
+            return self.fallback.pick(task, nodes, locality);
+        }
+        // Among near-equally attractive holders (replicas of a broadcast
+        // file, stripes of equal size), spread load: pick the least
+        // loaded, provided it is within the queue budget.
+        let mut candidates: Vec<(NodeId, usize)> = scores
+            .iter()
+            .filter(|(_, b)| *b >= 0.99 * best)
+            .filter_map(|(n, _)| {
+                nodes
+                    .iter()
+                    .find(|v| v.node == *n)
+                    .map(|v| (*n, v.in_flight))
+            })
+            .collect();
+        candidates.sort_by_key(|&(n, load)| (load, n));
+        if let Some(&(node, load)) = candidates.first() {
+            if load <= min_load + self.max_queue {
+                return node;
+            }
+        }
+        self.fallback.pick(task, nodes, locality)
+    }
+}
+
+/// Overhead-probe scheduler (Table 6's "get location" rung): pays for
+/// `location` queries like the WOSS integration but schedules exactly
+/// like [`LeastLoaded`] — isolating the query cost from its benefit.
+pub struct ProbeLocation {
+    inner: LeastLoaded,
+}
+
+impl ProbeLocation {
+    pub fn new() -> Self {
+        ProbeLocation {
+            inner: LeastLoaded::new(),
+        }
+    }
+}
+
+impl Default for ProbeLocation {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for ProbeLocation {
+    fn name(&self) -> &'static str {
+        "probe-location"
+    }
+
+    fn wants_location(&self) -> bool {
+        true
+    }
+
+    fn pick(
+        &mut self,
+        task: &TaskSpec,
+        nodes: &[NodeView],
+        locality: &LocalityInfo,
+    ) -> NodeId {
+        self.inner.pick(task, nodes, locality)
+    }
+}
+
+/// Extract the intermediate-tier reads a locality query covers.
+pub fn intermediate_reads(task: &TaskSpec) -> Vec<&ReadSpec> {
+    task.reads
+        .iter()
+        .filter(|r| r.tier == Tier::Intermediate)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::dag::TaskSpec;
+
+    /// Views where each entry is (next_free_secs, in_flight).
+    fn views(free: &[f64]) -> Vec<NodeView> {
+        free.iter()
+            .enumerate()
+            .map(|(i, &f)| NodeView {
+                node: NodeId(i + 1),
+                next_free: SimTime::from_secs_f64(f),
+                in_flight: f.round() as usize,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn least_loaded_picks_idle() {
+        let mut s = LeastLoaded::new();
+        let node = s.pick(
+            &TaskSpec::new(0, "t"),
+            &views(&[3.0, 0.0, 5.0]),
+            &LocalityInfo::default(),
+        );
+        assert_eq!(node, NodeId(2));
+    }
+
+    #[test]
+    fn least_loaded_rotates_ties() {
+        let mut s = LeastLoaded::new();
+        let v = views(&[0.0, 0.0, 0.0]);
+        let picks: Vec<_> = (0..3)
+            .map(|_| s.pick(&TaskSpec::new(0, "t"), &v, &LocalityInfo::default()).0)
+            .collect();
+        assert_eq!(picks, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pinned_task_respected() {
+        let mut s = LocationAware::new();
+        let t = TaskSpec::new(0, "t").pin_to(NodeId(9));
+        assert_eq!(
+            s.pick(&t, &views(&[0.0]), &LocalityInfo::default()),
+            NodeId(9)
+        );
+    }
+
+    #[test]
+    fn location_aware_follows_data() {
+        let mut s = LocationAware::new();
+        let loc = LocalityInfo {
+            inputs: vec![(vec![NodeId(3)], 100 << 20)],
+        };
+        let node = s.pick(&TaskSpec::new(0, "t"), &views(&[0.0, 0.0, 1.0]), &loc);
+        assert_eq!(node, NodeId(3), "data gravity beats 1s of queueing");
+    }
+
+    #[test]
+    fn location_aware_abandons_overloaded_holder() {
+        let mut s = LocationAware::new();
+        let loc = LocalityInfo {
+            inputs: vec![(vec![NodeId(3)], 100 << 20)],
+        };
+        let node = s.pick(&TaskSpec::new(0, "t"), &views(&[0.0, 0.0, 60.0]), &loc);
+        assert_ne!(node, NodeId(3), "60s queue exceeds the wait budget");
+    }
+
+    #[test]
+    fn location_aware_without_info_falls_back() {
+        let mut s = LocationAware::new();
+        let node = s.pick(
+            &TaskSpec::new(0, "t"),
+            &views(&[1.0, 0.0]),
+            &LocalityInfo::default(),
+        );
+        assert_eq!(node, NodeId(2));
+    }
+
+    #[test]
+    fn multi_input_gravity_sums() {
+        let mut s = LocationAware::new();
+        const MB: u64 = 1 << 20;
+        let loc = LocalityInfo {
+            inputs: vec![
+                (vec![NodeId(1)], 10 * MB),
+                (vec![NodeId(2)], 6 * MB),
+                (vec![NodeId(2)], 6 * MB),
+            ],
+        };
+        let node = s.pick(&TaskSpec::new(0, "t"), &views(&[0.0, 0.0]), &loc);
+        assert_eq!(node, NodeId(2), "12 MB on n2 beat 10 MB on n1");
+    }
+
+    #[test]
+    fn tiny_gravity_ignored() {
+        let mut s = LocationAware::new();
+        // 150 KB of gravity on a node 3 tasks deep: load wins.
+        let loc = LocalityInfo {
+            inputs: vec![(vec![NodeId(2)], 150 * 1024)],
+        };
+        let node = s.pick(&TaskSpec::new(0, "t"), &views(&[0.0, 3.0]), &loc);
+        assert_eq!(node, NodeId(1), "tiny files must not drive placement");
+    }
+}

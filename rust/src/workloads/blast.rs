@@ -1,0 +1,167 @@
+//! BLAST workload (paper §4.2, Figure 12, Table 4).
+//!
+//! DNA search: a 1.8 GB database is broadcast to all nodes; 19 worker
+//! processes each run two queries against it, writing small result
+//! files straight to the backend. The cross-layer hint is the database's
+//! replication factor — Table 4 sweeps it over {2, 4, 8, 16} and shows
+//! the stage-in cost growing with replicas while task time shrinks,
+//! with the sweet spot before 16.
+
+use crate::hints::TagSet;
+use crate::workflow::dag::{TaskSpec, Tier, Workflow};
+
+const KB: u64 = 1024;
+const MB: u64 = 1024 * KB;
+
+/// BLAST configuration.
+#[derive(Debug, Clone)]
+pub struct Blast {
+    /// Worker processes (one per machine; paper: 19).
+    pub workers: usize,
+    /// Queries per worker (paper: 2 → 38 total).
+    pub queries_per_worker: usize,
+    /// Database size (paper: 1.7–1.8 GB).
+    pub db_bytes: u64,
+    /// Database replication factor (`None` = untagged: DSS/NFS runs).
+    pub db_replication: Option<u32>,
+    /// Per-query compute seconds (search is CPU-heavy; calibrated so
+    /// the DSS total lands near Table 4's scale).
+    pub query_cpu_secs: f64,
+}
+
+impl Default for Blast {
+    fn default() -> Self {
+        Blast {
+            workers: 19,
+            queries_per_worker: 2,
+            db_bytes: 1800 * MB,
+            db_replication: Some(4),
+            query_cpu_secs: 70.0,
+        }
+    }
+}
+
+impl Blast {
+    /// Build the workflow.
+    pub fn build(&self) -> Workflow {
+        let mut w = Workflow::new();
+        w.preload("/backend/db", self.db_bytes);
+        for q in 0..(self.workers * self.queries_per_worker) {
+            w.preload(&format!("/backend/query{q}"), 8 * KB);
+        }
+
+        let mut db_tags = TagSet::new();
+        if let Some(r) = self.db_replication {
+            db_tags.set("Replication", &r.to_string());
+            db_tags.set("RepSmntc", "optimistic");
+        }
+        w.push(
+            TaskSpec::new(0, "stageIn")
+                .read("/backend/db", Tier::Backend)
+                .write("/w/db", Tier::Intermediate, self.db_bytes, db_tags),
+        );
+
+        // Each worker runs its queries sequentially: query k depends on
+        // query k-1 of the same worker through a small chain file,
+        // mirroring one BLAST process handling two queries.
+        for worker in 0..self.workers {
+            let mut prev: Option<String> = None;
+            for q in 0..self.queries_per_worker {
+                let qid = worker * self.queries_per_worker + q;
+                let mut task = TaskSpec::new(0, "blast")
+                    .read(&format!("/backend/query{qid}"), Tier::Backend)
+                    .read("/w/db", Tier::Intermediate)
+                    .compute(self.query_cpu_secs)
+                    .write(
+                        &format!("/w/result{qid}"),
+                        Tier::Intermediate,
+                        300 * KB,
+                        TagSet::new(),
+                    );
+                if let Some(p) = &prev {
+                    task = task.read(p, Tier::Intermediate);
+                }
+                let chain = format!("/w/chain{worker}_{q}");
+                task = task.write(&chain, Tier::Intermediate, 1 * KB, TagSet::new());
+                prev = Some(chain);
+                w.push(task);
+                w.push(
+                    TaskSpec::new(0, "stageOut")
+                        .read(&format!("/w/result{qid}"), Tier::Intermediate)
+                        .write(
+                            &format!("/backend/result{qid}"),
+                            Tier::Backend,
+                            300 * KB,
+                            TagSet::new(),
+                        ),
+                );
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates() {
+        Blast::default().build().validate().unwrap();
+        Blast {
+            db_replication: None,
+            ..Default::default()
+        }
+        .build()
+        .validate()
+        .unwrap();
+    }
+
+    #[test]
+    fn shape() {
+        let w = Blast::default().build();
+        assert_eq!(w.tasks.iter().filter(|t| t.stage == "blast").count(), 38);
+        assert_eq!(w.tasks.iter().filter(|t| t.stage == "stageIn").count(), 1);
+    }
+
+    #[test]
+    fn replication_tag_present_only_when_set() {
+        let tagged = Blast::default().build();
+        let db = tagged
+            .tasks
+            .iter()
+            .flat_map(|t| t.writes.iter())
+            .find(|wr| wr.path == "/w/db")
+            .unwrap();
+        assert_eq!(db.tags.replication(), Some(4));
+
+        let plain = Blast {
+            db_replication: None,
+            ..Default::default()
+        }
+        .build();
+        let db = plain
+            .tasks
+            .iter()
+            .flat_map(|t| t.writes.iter())
+            .find(|wr| wr.path == "/w/db")
+            .unwrap();
+        assert_eq!(db.tags.replication(), None);
+    }
+
+    #[test]
+    fn queries_chain_per_worker() {
+        let w = Blast::default().build();
+        let deps = w.dependencies();
+        // The second query of worker 0 depends on the first (chain file)
+        // and on the stage-in (db).
+        let blast_ids: Vec<usize> = w
+            .tasks
+            .iter()
+            .filter(|t| t.stage == "blast")
+            .map(|t| t.id)
+            .collect();
+        let second = blast_ids[1];
+        assert!(deps[second].contains(&blast_ids[0]));
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload generators: the paper's synthetic patterns (§4.1) and the
+//! three real applications (§4.2–4.3), expressed as [`crate::workflow`]
+//! DAGs with the Table 1/3 hints attached exactly where the paper's
+//! figures put them.
+
+pub mod blast;
+pub mod modftdock;
+pub mod montage;
+pub mod synthetic;
+
+pub use blast::Blast;
+pub use modftdock::ModFtDock;
+pub use montage::Montage;
+pub use synthetic::{broadcast, pipeline, reduce, scatter, WORKERS};

@@ -1,0 +1,183 @@
+//! modFTDock workload (paper §4.2, Figures 9–11).
+//!
+//! Protein-docking workflow combining three patterns per stream:
+//! *dock* verifies molecules against a database (the database is
+//! broadcast to all dock tasks), *merge* summarizes each stream's dock
+//! outputs (reduce — outputs collocated), *score* ranks the merge result
+//! (pipeline — local placement). The paper runs 9 streams over 18 nodes
+//! on the cluster and scales streams with nodes on BG/P.
+
+use crate::hints::TagSet;
+use crate::workflow::dag::{TaskSpec, Tier, Workflow};
+
+const KB: u64 = 1024;
+
+/// modFTDock configuration.
+#[derive(Debug, Clone)]
+pub struct ModFtDock {
+    /// Parallel dock streams (paper: 9 on the cluster).
+    pub streams: usize,
+    /// Dock tasks per stream.
+    pub docks_per_stream: usize,
+    /// Replication factor for the broadcast database.
+    pub db_replication: u32,
+    /// Attach WOSS hints?
+    pub hints: bool,
+    /// Database size in bytes.
+    pub db_bytes: u64,
+    /// Per-molecule input size in bytes.
+    pub mol_bytes: u64,
+    /// Dock compute seconds (reference CPU).
+    pub dock_cpu: f64,
+}
+
+impl Default for ModFtDock {
+    fn default() -> Self {
+        ModFtDock {
+            streams: 9,
+            docks_per_stream: 6,
+            db_replication: 8,
+            hints: true,
+            db_bytes: 200 * KB,
+            mol_bytes: 150 * KB,
+            dock_cpu: 12.0,
+        }
+    }
+}
+
+impl ModFtDock {
+    /// BG/P scaling point: streams proportional to node count
+    /// (fig11 sweeps the allocation; the workload grows with it). Files
+    /// stay small (the paper's modFTDock inputs are 100–200 KB); what
+    /// degrades GPFS at scale is its per-operation metadata cost under
+    /// many-task storms, not bandwidth.
+    pub fn bgp(nodes: usize, hints: bool) -> Self {
+        ModFtDock {
+            streams: nodes / 2,
+            docks_per_stream: 6,
+            db_replication: (nodes / 4).clamp(2, 32) as u32,
+            hints,
+            ..ModFtDock::default()
+        }
+    }
+
+    /// Build the workflow.
+    pub fn build(&self) -> Workflow {
+        let mut w = Workflow::new();
+        let db_size = self.db_bytes;
+        w.preload("/backend/db", db_size);
+
+        // Stage in + (optionally) replicate the shared database.
+        let mut db_tags = TagSet::new();
+        if self.hints && self.db_replication > 1 {
+            db_tags.set("Replication", &self.db_replication.to_string());
+            db_tags.set("RepSmntc", "optimistic");
+        }
+        w.push(
+            TaskSpec::new(0, "stageIn")
+                .read("/backend/db", Tier::Backend)
+                .write("/w/db", Tier::Intermediate, db_size, db_tags),
+        );
+
+        for s in 0..self.streams {
+            let input = format!("/backend/mol{s}");
+            w.preload(&input, self.mol_bytes);
+            w.push(
+                TaskSpec::new(0, "stageIn")
+                    .read(&input, Tier::Backend)
+                    .write(&format!("/w/mol{s}"), Tier::Intermediate, self.mol_bytes, TagSet::new()),
+            );
+
+            let colloc = if self.hints {
+                TagSet::from_pairs([("DP", format!("collocation merge{s}").as_str())])
+            } else {
+                TagSet::new()
+            };
+            let mut merge = TaskSpec::new(0, "merge").compute(2.0);
+            for d in 0..self.docks_per_stream {
+                let out = format!("/w/dock{s}_{d}");
+                w.push(
+                    TaskSpec::new(0, "dock")
+                        .read(&format!("/w/mol{s}"), Tier::Intermediate)
+                        .read("/w/db", Tier::Intermediate)
+                        .write(&out, Tier::Intermediate, 120 * KB, colloc.clone())
+                        .compute(self.dock_cpu),
+                );
+                merge = merge.read(&out, Tier::Intermediate);
+            }
+            let local = if self.hints {
+                TagSet::from_pairs([("DP", "local")])
+            } else {
+                TagSet::new()
+            };
+            merge = merge.write(&format!("/w/merged{s}"), Tier::Intermediate, 150 * KB, local);
+            w.push(merge);
+            w.push(
+                TaskSpec::new(0, "score")
+                    .read(&format!("/w/merged{s}"), Tier::Intermediate)
+                    .write(&format!("/w/rank{s}"), Tier::Intermediate, 50 * KB, TagSet::new())
+                    .compute(1.5),
+            );
+            w.push(
+                TaskSpec::new(0, "stageOut")
+                    .read(&format!("/w/rank{s}"), Tier::Intermediate)
+                    .write(&format!("/backend/rank{s}"), Tier::Backend, 50 * KB, TagSet::new()),
+            );
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates() {
+        ModFtDock::default().build().validate().unwrap();
+        ModFtDock {
+            hints: false,
+            ..Default::default()
+        }
+        .build()
+        .validate()
+        .unwrap();
+    }
+
+    #[test]
+    fn shape() {
+        let w = ModFtDock::default().build();
+        let docks = w.tasks.iter().filter(|t| t.stage == "dock").count();
+        let merges = w.tasks.iter().filter(|t| t.stage == "merge").count();
+        let scores = w.tasks.iter().filter(|t| t.stage == "score").count();
+        assert_eq!(docks, 9 * 6);
+        assert_eq!(merges, 9);
+        assert_eq!(scores, 9);
+    }
+
+    #[test]
+    fn patterns_tagged() {
+        let w = ModFtDock::default().build();
+        let db = w
+            .tasks
+            .iter()
+            .flat_map(|t| t.writes.iter())
+            .find(|wr| wr.path == "/w/db")
+            .unwrap();
+        assert_eq!(db.tags.replication(), Some(8), "broadcast db replicated");
+        let dock_out = w
+            .tasks
+            .iter()
+            .flat_map(|t| t.writes.iter())
+            .find(|wr| wr.path.starts_with("/w/dock"))
+            .unwrap();
+        assert!(dock_out.tags.get("DP").unwrap().starts_with("collocation"));
+    }
+
+    #[test]
+    fn bgp_scales_with_nodes() {
+        let small = ModFtDock::bgp(64, true).build();
+        let large = ModFtDock::bgp(256, true).build();
+        assert!(large.tasks.len() > 3 * small.tasks.len());
+    }
+}

@@ -1,0 +1,242 @@
+//! Montage workload (paper §4.3, Figure 13, Table 5).
+//!
+//! Astronomy mosaic pipeline: 10 processing stages with highly variable
+//! I/O intensity — ~650 files, 1 KB…165 MB, ~2 GB moved. Stage shapes,
+//! file counts and sizes follow Table 5; the hints follow Figure 13's
+//! arrow labels (pipeline stages tag `DP=local`, the two reduce stages
+//! tag `DP=collocation`).
+
+use crate::hints::TagSet;
+use crate::workflow::dag::{TaskSpec, Tier, Workflow};
+
+const KB: u64 = 1024;
+const MB: u64 = 1024 * KB;
+
+/// Montage configuration (defaults = the paper's workload).
+#[derive(Debug, Clone)]
+pub struct Montage {
+    /// Input images (Table 5: 57 files, 1.7–2.1 MB).
+    pub inputs: usize,
+    /// Attach WOSS hints?
+    pub hints: bool,
+    /// Scale factor on file sizes.
+    pub scale: f64,
+}
+
+impl Default for Montage {
+    fn default() -> Self {
+        Montage {
+            inputs: 57,
+            hints: true,
+            scale: 1.0,
+        }
+    }
+}
+
+impl Montage {
+    fn sz(&self, bytes: u64) -> u64 {
+        ((bytes as f64) * self.scale).round().max(1.0) as u64
+    }
+
+    fn local(&self) -> TagSet {
+        if self.hints {
+            TagSet::from_pairs([("DP", "local")])
+        } else {
+            TagSet::new()
+        }
+    }
+
+    fn colloc(&self, group: &str) -> TagSet {
+        if self.hints {
+            TagSet::from_pairs([("DP", format!("collocation {group}").as_str())])
+        } else {
+            TagSet::new()
+        }
+    }
+
+    /// Build the workflow.
+    pub fn build(&self) -> Workflow {
+        let n = self.inputs;
+        let mut w = Workflow::new();
+
+        // --- stageIn: 57 files, 1.7–2.1 MB (109 MB total) ---
+        for i in 0..n {
+            let src = format!("/backend/raw{i}");
+            w.preload(&src, self.sz(1900 * KB));
+            w.push(
+                TaskSpec::new(0, "stageIn")
+                    .read(&src, Tier::Backend)
+                    .write(&format!("/w/raw{i}.fits"), Tier::Intermediate, self.sz(1900 * KB), TagSet::new()),
+            );
+        }
+
+        // --- mProject: one task per image, 2 outputs each (113 files,
+        //     3.3–4.2 MB; 438 MB) — pipeline pattern ---
+        for i in 0..n {
+            w.push(
+                TaskSpec::new(0, "mProject")
+                    .read(&format!("/w/raw{i}.fits"), Tier::Intermediate)
+                    .write(&format!("/w/proj{i}.fits"), Tier::Intermediate, self.sz(3800 * KB), self.local())
+                    .write(&format!("/w/proj{i}.area"), Tier::Intermediate, self.sz(3800 * KB), self.local())
+                    .compute(0.6),
+            );
+        }
+
+        // --- mImgTbl: one task reads all projected images, 17 KB out ---
+        let mut imgtbl = TaskSpec::new(0, "mImgTbl").compute(0.3);
+        for i in 0..n {
+            imgtbl = imgtbl.read(&format!("/w/proj{i}.fits"), Tier::Intermediate);
+        }
+        imgtbl = imgtbl.write("/w/images.tbl", Tier::Intermediate, self.sz(17 * KB), TagSet::new());
+        w.push(imgtbl);
+
+        // --- mOverlaps: reads the table, 17 KB out ---
+        w.push(
+            TaskSpec::new(0, "mOverlaps")
+                .read("/w/images.tbl", Tier::Intermediate)
+                .write("/w/diffs.tbl", Tier::Intermediate, self.sz(17 * KB), TagSet::new())
+                .compute(0.2),
+        );
+
+        // --- mDiff: one task per overlapping pair (~142 tasks, 285
+        //     files, 100 KB–3 MB; 148 MB) — pipeline pattern ---
+        let n_diff = (n as f64 * 2.5) as usize; // ~142 for 57 inputs
+        for d in 0..n_diff {
+            let a = d % n;
+            let b = (d + 1) % n;
+            w.push(
+                TaskSpec::new(0, "mDiff")
+                    .read("/w/diffs.tbl", Tier::Intermediate)
+                    .read(&format!("/w/proj{a}.fits"), Tier::Intermediate)
+                    .read(&format!("/w/proj{b}.fits"), Tier::Intermediate)
+                    .write(&format!("/w/diff{d}.fits"), Tier::Intermediate, self.sz(1000 * KB), self.local())
+                    .write(&format!("/w/diff{d}.area"), Tier::Intermediate, self.sz(40 * KB), self.local())
+                    .compute(0.15),
+            );
+        }
+
+        // --- mFitPlane: one per diff (142 files, 4 KB; 576 KB) ---
+        for d in 0..n_diff {
+            w.push(
+                TaskSpec::new(0, "mFitPlane")
+                    .read(&format!("/w/diff{d}.fits"), Tier::Intermediate)
+                    .write(&format!("/w/fit{d}.txt"), Tier::Intermediate, self.sz(4 * KB), self.colloc("fits"))
+                    .compute(0.1),
+            );
+        }
+
+        // --- mConcatFit: reduce over all fit files (16 KB out) ---
+        let mut concat = TaskSpec::new(0, "mConcatFit").compute(0.2);
+        for d in 0..n_diff {
+            concat = concat.read(&format!("/w/fit{d}.txt"), Tier::Intermediate);
+        }
+        concat = concat.write("/w/fits.tbl", Tier::Intermediate, self.sz(16 * KB), self.local());
+        w.push(concat);
+
+        // --- mBgModel: 2 KB out ---
+        w.push(
+            TaskSpec::new(0, "mBgModel")
+                .read("/w/fits.tbl", Tier::Intermediate)
+                .write("/w/corrections.tbl", Tier::Intermediate, self.sz(2 * KB), TagSet::new())
+                .compute(0.4),
+        );
+
+        // --- mBackground: one per projected image (113 files; 438 MB)
+        //     — pipeline pattern ---
+        for i in 0..n {
+            w.push(
+                TaskSpec::new(0, "mBackground")
+                    .read(&format!("/w/proj{i}.fits"), Tier::Intermediate)
+                    .read("/w/corrections.tbl", Tier::Intermediate)
+                    .write(&format!("/w/bg{i}.fits"), Tier::Intermediate, self.sz(3800 * KB), self.local())
+                    .write(&format!("/w/bg{i}.area"), Tier::Intermediate, self.sz(3800 * KB), self.local())
+                    .compute(0.3),
+            );
+        }
+
+        // --- mAdd: reduce over all background files (2 files, 165 MB) ---
+        let mut madd = TaskSpec::new(0, "mAdd").compute(1.5);
+        for i in 0..n {
+            madd = madd.read(&format!("/w/bg{i}.fits"), Tier::Intermediate);
+        }
+        madd = madd
+            .write("/w/mosaic.fits", Tier::Intermediate, self.sz(165 * MB), self.local())
+            .write("/w/mosaic.area", Tier::Intermediate, self.sz(165 * MB), self.local());
+        w.push(madd);
+
+        // --- mJPEG: pipeline from the mosaic (4.7 MB) ---
+        w.push(
+            TaskSpec::new(0, "mJPEG")
+                .read("/w/mosaic.fits", Tier::Intermediate)
+                .write("/w/mosaic.jpg", Tier::Intermediate, self.sz(4700 * KB), self.local())
+                .compute(0.5),
+        );
+
+        // --- stageOut: mosaic + jpeg (170 MB) ---
+        w.push(
+            TaskSpec::new(0, "stageOut")
+                .read("/w/mosaic.fits", Tier::Intermediate)
+                .read("/w/mosaic.jpg", Tier::Intermediate)
+                .write("/backend/mosaic.fits", Tier::Backend, self.sz(165 * MB), TagSet::new())
+                .write("/backend/mosaic.jpg", Tier::Backend, self.sz(4700 * KB), TagSet::new()),
+        );
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates() {
+        Montage::default().build().validate().unwrap();
+        Montage {
+            hints: false,
+            ..Default::default()
+        }
+        .build()
+        .validate()
+        .unwrap();
+    }
+
+    #[test]
+    fn table5_shape() {
+        let w = Montage::default().build();
+        let count = |s: &str| w.tasks.iter().filter(|t| t.stage == s).count();
+        assert_eq!(count("stageIn"), 57);
+        assert_eq!(count("mProject"), 57);
+        assert_eq!(count("mImgTbl"), 1);
+        assert_eq!(count("mDiff"), 142);
+        assert_eq!(count("mFitPlane"), 142);
+        assert_eq!(count("mConcatFit"), 1);
+        assert_eq!(count("mBgModel"), 1);
+        assert_eq!(count("mBackground"), 57);
+        assert_eq!(count("mAdd"), 1);
+        assert_eq!(count("mJPEG"), 1);
+        assert_eq!(count("stageOut"), 1);
+        // ~650 files overall
+        let files: usize = w.tasks.iter().map(|t| t.writes.len()).sum();
+        assert!((600..750).contains(&files), "file count {files}");
+        // ~2 GB written
+        let gb = w.bytes_written() as f64 / (1024.0 * 1024.0 * 1024.0);
+        assert!((1.2..2.5).contains(&gb), "bytes written {gb:.2} GB");
+    }
+
+    #[test]
+    fn hints_follow_figure13() {
+        let w = Montage::default().build();
+        let tag_of = |path: &str| -> Option<String> {
+            w.tasks
+                .iter()
+                .flat_map(|t| t.writes.iter())
+                .find(|wr| wr.path == path)
+                .and_then(|wr| wr.tags.get("DP").map(str::to_string))
+        };
+        assert_eq!(tag_of("/w/proj0.fits").as_deref(), Some("local"));
+        assert!(tag_of("/w/fit0.txt").unwrap().starts_with("collocation"));
+        assert_eq!(tag_of("/w/bg0.fits").as_deref(), Some("local"));
+        assert_eq!(tag_of("/w/mosaic.fits").as_deref(), Some("local"));
+        assert_eq!(tag_of("/w/images.tbl"), None, "untagged stage");
+    }
+}

@@ -1,0 +1,285 @@
+//! Synthetic pattern benchmarks (paper §4.1, Figure 4).
+//!
+//! Four workloads, one per pattern: pipeline, broadcast, reduce,
+//! scatter. Data sizes follow Figure 4's labels; `scale` multiplies all
+//! file sizes (the paper also runs 10× up and 1000× down). Each builder
+//! takes `hints`: when true the runtime attaches the WOSS tags from
+//! Table 1/3; when false the same workflow runs hint-free (DSS/NFS
+//! baselines — identical I/O, no cross-layer information).
+
+use crate::hints::TagSet;
+use crate::workflow::dag::{TaskSpec, Tier, Workflow};
+
+const MB: u64 = 1024 * 1024;
+
+/// Number of worker machines in the paper's cluster benchmarks
+/// (20 nodes minus the manager/coordination node).
+pub const WORKERS: usize = 19;
+
+fn scaled(bytes: u64, scale: f64) -> u64 {
+    ((bytes as f64) * scale).round().max(1.0) as u64
+}
+
+/// Pipeline benchmark: `width` independent 3-stage pipelines. Per
+/// pipeline: stage-in 100 MB → s1 (200 MB) → s2 (10 MB) → s3 (1 MB) →
+/// stage-out. Hints: every intermediate output `DP=local`; the script
+/// then launches the next stage on the node holding the file.
+pub fn pipeline(width: usize, scale: f64, hints: bool) -> Workflow {
+    let mut w = Workflow::new();
+    w.preload("/backend/input", scaled(100 * MB, scale));
+    let local = || {
+        if hints {
+            TagSet::from_pairs([("DP", "local")])
+        } else {
+            TagSet::new()
+        }
+    };
+    for p in 0..width {
+        w.push(
+            TaskSpec::new(0, "stageIn")
+                .read("/backend/input", Tier::Backend)
+                .write(&format!("/w/p{p}.in"), Tier::Intermediate, scaled(100 * MB, scale), local()),
+        );
+        w.push(
+            TaskSpec::new(0, "stage1")
+                .read(&format!("/w/p{p}.in"), Tier::Intermediate)
+                .write(&format!("/w/p{p}.s1"), Tier::Intermediate, scaled(200 * MB, scale), local())
+                .compute(1.0),
+        );
+        w.push(
+            TaskSpec::new(0, "stage2")
+                .read(&format!("/w/p{p}.s1"), Tier::Intermediate)
+                .write(&format!("/w/p{p}.s2"), Tier::Intermediate, scaled(10 * MB, scale), local())
+                .compute(1.0),
+        );
+        w.push(
+            TaskSpec::new(0, "stage3")
+                .read(&format!("/w/p{p}.s2"), Tier::Intermediate)
+                .write(&format!("/w/p{p}.out"), Tier::Intermediate, scaled(1 * MB, scale), local())
+                .compute(0.5),
+        );
+        w.push(
+            TaskSpec::new(0, "stageOut")
+                .read(&format!("/w/p{p}.out"), Tier::Intermediate)
+                .write(&format!("/backend/p{p}.result"), Tier::Backend, scaled(1 * MB, scale), TagSet::new()),
+        );
+    }
+    w
+}
+
+/// Broadcast benchmark: one staged-in file, a producer stage emits a
+/// 100 MB file consumed by `consumers` parallel tasks (one per machine),
+/// each writing an independent output staged out. Hint:
+/// `Replication=<factor>` on the hot file (plus optimistic semantics).
+pub fn broadcast(consumers: usize, replication: u32, scale: f64, hints: bool) -> Workflow {
+    let mut w = Workflow::new();
+    w.preload("/backend/input", scaled(100 * MB, scale));
+    let mut tags = TagSet::new();
+    if hints && replication > 1 {
+        tags.set("Replication", &replication.to_string());
+        tags.set("RepSmntc", "optimistic");
+    }
+    w.push(
+        TaskSpec::new(0, "stageIn")
+            .read("/backend/input", Tier::Backend)
+            .write("/w/staged", Tier::Intermediate, scaled(100 * MB, scale), TagSet::new()),
+    );
+    w.push(
+        TaskSpec::new(0, "produce")
+            .read("/w/staged", Tier::Intermediate)
+            .write("/w/hot", Tier::Intermediate, scaled(100 * MB, scale), tags)
+            .compute(1.0),
+    );
+    for c in 0..consumers {
+        w.push(
+            TaskSpec::new(0, "consume")
+                .read("/w/hot", Tier::Intermediate)
+                .write(&format!("/w/out{c}"), Tier::Intermediate, scaled(10 * MB, scale), TagSet::new())
+                .compute(1.0),
+        );
+        w.push(
+            TaskSpec::new(0, "stageOut")
+                .read(&format!("/w/out{c}"), Tier::Intermediate)
+                .write(&format!("/backend/out{c}"), Tier::Backend, scaled(10 * MB, scale), TagSet::new()),
+        );
+    }
+    w
+}
+
+/// Reduce benchmark: `producers` staged-in files, one parallel task per
+/// file producing a `DP=collocation` output, then a single reduce task
+/// consumes them all and its 1 MB result is staged out. With hints, the
+/// staged inputs are tagged `DP=local` ("the storage system stored
+/// staged-in files locally") so producers read locally, and the produce
+/// outputs collocate on one anchor where the reduce task is scheduled.
+/// Producer service times are heterogeneous (±30%), as in any real batch,
+/// which lets the collocated writes overlap the compute stagger.
+pub fn reduce(producers: usize, scale: f64, hints: bool) -> Workflow {
+    let mut w = Workflow::new();
+    let colloc = || {
+        if hints {
+            TagSet::from_pairs([("DP", "collocation reduce_g1")])
+        } else {
+            TagSet::new()
+        }
+    };
+    let local = || {
+        if hints {
+            TagSet::from_pairs([("DP", "local")])
+        } else {
+            TagSet::new()
+        }
+    };
+    let mut reduce_task = TaskSpec::new(0, "reduce").compute(2.0);
+    for p in 0..producers {
+        w.preload(&format!("/backend/in{p}"), scaled(50 * MB, scale));
+        w.push(
+            TaskSpec::new(0, "stageIn")
+                .read(&format!("/backend/in{p}"), Tier::Backend)
+                .write(&format!("/w/in{p}"), Tier::Intermediate, scaled(50 * MB, scale), local()),
+        );
+        let cpu = 8.0 * (0.7 + 0.6 * (p % 7) as f64 / 6.0);
+        w.push(
+            TaskSpec::new(0, "produce")
+                .read(&format!("/w/in{p}"), Tier::Intermediate)
+                .write(&format!("/w/part{p}"), Tier::Intermediate, scaled(50 * MB, scale), colloc())
+                .compute(cpu),
+        );
+        reduce_task = reduce_task.read(&format!("/w/part{p}"), Tier::Intermediate);
+    }
+    reduce_task = reduce_task.write("/w/result", Tier::Intermediate, scaled(1 * MB, scale), TagSet::new());
+    w.push(reduce_task);
+    w.push(
+        TaskSpec::new(0, "stageOut")
+            .read("/w/result", Tier::Intermediate)
+            .write("/backend/result", Tier::Backend, scaled(1 * MB, scale), TagSet::new()),
+    );
+    w
+}
+
+/// Scatter benchmark: stage-in, one task writes a scatter-file whose
+/// block size matches the readers' region size (`BlockSize` +
+/// `DP=scatter 1` hints), then `readers` tasks read disjoint regions and
+/// write independent outputs, staged out. Figure 8 reports only stage 2
+/// (the region reads), which [`crate::bench`] extracts by stage label.
+pub fn scatter(readers: usize, scale: f64, hints: bool) -> Workflow {
+    let region = scaled(30 * MB, scale);
+    let total = region * readers as u64;
+    let mut w = Workflow::new();
+    w.preload("/backend/input", scaled(100 * MB, scale));
+    let mut tags = TagSet::new();
+    if hints {
+        tags.set("DP", "scatter 1");
+        tags.set("BlockSize", &region.to_string());
+    }
+    w.push(
+        TaskSpec::new(0, "stageIn")
+            .read("/backend/input", Tier::Backend)
+            .write("/w/staged", Tier::Intermediate, scaled(100 * MB, scale), TagSet::new()),
+    );
+    w.push(
+        TaskSpec::new(0, "produce")
+            .read("/w/staged", Tier::Intermediate)
+            .write("/w/scatter", Tier::Intermediate, total, tags)
+            .compute(1.0),
+    );
+    for r in 0..readers {
+        let local = if hints {
+            TagSet::from_pairs([("DP", "local")])
+        } else {
+            TagSet::new()
+        };
+        w.push(
+            TaskSpec::new(0, "readRegion")
+                .read_range("/w/scatter", Tier::Intermediate, r as u64 * region, region)
+                .write(&format!("/w/out{r}"), Tier::Intermediate, scaled(1 * MB, scale), local)
+                .compute(0.25),
+        );
+        w.push(
+            TaskSpec::new(0, "stageOut")
+                .read(&format!("/w/out{r}"), Tier::Intermediate)
+                .write(&format!("/backend/out{r}"), Tier::Backend, scaled(1 * MB, scale), TagSet::new()),
+        );
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_validate() {
+        for wf in [
+            pipeline(WORKERS, 1.0, true),
+            pipeline(WORKERS, 1.0, false),
+            broadcast(WORKERS, 8, 1.0, true),
+            reduce(WORKERS, 1.0, true),
+            scatter(WORKERS, 1.0, true),
+        ] {
+            wf.validate().expect("workflow valid");
+        }
+    }
+
+    #[test]
+    fn pipeline_shape() {
+        let w = pipeline(19, 1.0, true);
+        assert_eq!(w.tasks.len(), 19 * 5);
+        assert_eq!(
+            w.stages(),
+            vec!["stageIn", "stage1", "stage2", "stage3", "stageOut"]
+        );
+    }
+
+    #[test]
+    fn hints_toggle() {
+        let tagged = pipeline(2, 1.0, true);
+        let plain = pipeline(2, 1.0, false);
+        let n_tags = |w: &Workflow| -> usize {
+            w.tasks
+                .iter()
+                .flat_map(|t| t.writes.iter())
+                .map(|wr| wr.tags.len())
+                .sum()
+        };
+        assert!(n_tags(&tagged) > 0);
+        assert_eq!(n_tags(&plain), 0);
+        // Same I/O volume either way.
+        assert_eq!(tagged.bytes_written(), plain.bytes_written());
+    }
+
+    #[test]
+    fn broadcast_replication_tag() {
+        let w = broadcast(19, 8, 1.0, true);
+        let hot = w
+            .tasks
+            .iter()
+            .flat_map(|t| t.writes.iter())
+            .find(|wr| wr.path == "/w/hot")
+            .unwrap();
+        assert_eq!(hot.tags.replication(), Some(8));
+    }
+
+    #[test]
+    fn scatter_ranges_disjoint() {
+        let w = scatter(4, 1.0, true);
+        let mut ranges: Vec<(u64, u64)> = w
+            .tasks
+            .iter()
+            .flat_map(|t| t.reads.iter())
+            .filter_map(|r| r.range)
+            .collect();
+        ranges.sort();
+        assert_eq!(ranges.len(), 4);
+        for pair in ranges.windows(2) {
+            assert!(pair[0].0 + pair[0].1 <= pair[1].0, "regions overlap");
+        }
+    }
+
+    #[test]
+    fn scale_multiplies_sizes() {
+        let big = pipeline(1, 10.0, true);
+        let small = pipeline(1, 1.0, true);
+        assert_eq!(big.bytes_written(), small.bytes_written() * 10);
+    }
+}

@@ -1,0 +1,194 @@
+//! Edge-case and failure-path coverage across module boundaries.
+
+use woss::hints::TagSet;
+use woss::nfs::NfsServer;
+use woss::sim::{Calib, Cluster, DiskKind, SimTime};
+use woss::storage::{standard_deployment, NodeId, StorageModel};
+use woss::workflow::dag::{TaskSpec, Tier, Workflow};
+use woss::workflow::engine::{run_workflow, EngineConfig};
+use woss::workflow::scheduler::{LeastLoaded, LocationAware};
+
+fn cluster() -> Cluster {
+    Cluster::new(6, DiskKind::RamDisk, &Calib::default())
+}
+
+#[test]
+fn empty_workflow_completes_instantly() {
+    let mut cl = cluster();
+    let mut inter = standard_deployment(&cl, true, true, 1);
+    let mut backend = NfsServer::new(&Calib::default());
+    let mut sched = LocationAware::new();
+    let result = run_workflow(
+        &mut cl,
+        &mut inter,
+        &mut backend,
+        &mut sched,
+        EngineConfig::woss(1),
+        &Workflow::new(),
+    )
+    .unwrap();
+    assert_eq!(result.tasks.len(), 0);
+    assert_eq!(result.makespan, 0.0);
+}
+
+#[test]
+fn pinned_tasks_run_where_pinned() {
+    let mut w = Workflow::new();
+    w.preload("/backend/in", 1 << 20);
+    w.push(
+        TaskSpec::new(0, "stageIn")
+            .read("/backend/in", Tier::Backend)
+            .write("/w/a", Tier::Intermediate, 1 << 20, TagSet::new())
+            .pin_to(NodeId(4)),
+    );
+    w.push(
+        TaskSpec::new(0, "work")
+            .read("/w/a", Tier::Intermediate)
+            .write("/w/b", Tier::Intermediate, 1 << 20, TagSet::new())
+            .pin_to(NodeId(2))
+            .compute(0.1),
+    );
+    let mut cl = cluster();
+    let mut inter = standard_deployment(&cl, true, true, 2);
+    let mut backend = NfsServer::new(&Calib::default());
+    let mut sched = LeastLoaded::new();
+    let result = run_workflow(
+        &mut cl,
+        &mut inter,
+        &mut backend,
+        &mut sched,
+        EngineConfig::plain(2),
+        &w,
+    )
+    .unwrap();
+    let node_of = |stage: &str| {
+        result
+            .tasks
+            .iter()
+            .find(|t| t.stage == stage)
+            .map(|t| t.node)
+            .unwrap()
+    };
+    assert_eq!(node_of("stageIn"), NodeId(4));
+    assert_eq!(node_of("work"), NodeId(2));
+}
+
+#[test]
+fn barrier_off_lets_stages_overlap() {
+    // Two pipelines; with the barrier off, pipeline 1's stage1 may start
+    // before pipeline 2's stageIn completes.
+    let build = || woss::workloads::pipeline(4, 1.0, false);
+    let run = |barrier: bool| {
+        let mut cl = Cluster::new(8, DiskKind::RamDisk, &Calib::default());
+        let mut inter = standard_deployment(&cl, false, true, 3);
+        let mut backend = NfsServer::new(&Calib::default());
+        let mut sched = LeastLoaded::new();
+        let cfg = EngineConfig {
+            stage_in_barrier: barrier,
+            ..EngineConfig::plain(3)
+        };
+        run_workflow(&mut cl, &mut inter, &mut backend, &mut sched, cfg, &build()).unwrap()
+    };
+    let with_barrier = run(true);
+    let without = run(false);
+    assert!(
+        without.makespan <= with_barrier.makespan + 1e-9,
+        "overlap can only help the makespan"
+    );
+    let first_stage1 = without.stage_start("stage1");
+    let last_stage_in = without.stage_end("stageIn");
+    assert!(
+        first_stage1 < last_stage_in,
+        "stages must overlap staging when the barrier is off"
+    );
+}
+
+#[test]
+fn block_size_hint_changes_layout_only_for_woss() {
+    let mut cl = cluster();
+    let mut woss = standard_deployment(&cl, true, true, 4);
+    let tags = TagSet::from_pairs([("BlockSize", "64K"), ("DP", "scatter 1")]);
+    woss.write_file(&mut cl, NodeId(1), "/s", 512 * 1024, &tags, SimTime::ZERO)
+        .unwrap();
+    // 8 × 64 KB blocks scattered one per node (5 storage nodes): >1 holder.
+    assert!(woss.locations("/s").len() > 1);
+
+    let mut cl2 = cluster();
+    let mut dss = standard_deployment(&cl2, false, true, 4);
+    dss.write_file(&mut cl2, NodeId(1), "/s", 512 * 1024, &tags, SimTime::ZERO)
+        .unwrap();
+    // DSS ignores BlockSize: 512 KB < 1 MB default chunk → single chunk.
+    assert!(dss.locations("/s").is_empty(), "DSS exposes nothing");
+}
+
+#[test]
+fn system_status_attribute_reports_pool() {
+    let mut cl = cluster();
+    let mut woss = standard_deployment(&cl, true, true, 5);
+    woss.write_file(&mut cl, NodeId(1), "/f", 1 << 20, &TagSet::new(), SimTime::ZERO)
+        .unwrap();
+    let (status, _) = woss
+        .get_xattr(&mut cl, NodeId(1), "/f", "system_status", SimTime::ZERO)
+        .unwrap();
+    let status = status.expect("system_status served");
+    assert!(status.contains("nodes=5"), "{status}");
+    assert!(status.contains("used="), "{status}");
+}
+
+#[test]
+fn double_create_rejected_everywhere() {
+    let mut cl = cluster();
+    let calib = Calib::default();
+    let mut woss = standard_deployment(&cl, true, true, 6);
+    let mut nfs = NfsServer::new(&calib);
+    woss.write_file(&mut cl, NodeId(1), "/dup", 1024, &TagSet::new(), SimTime::ZERO)
+        .unwrap();
+    assert!(woss
+        .write_file(&mut cl, NodeId(1), "/dup", 1024, &TagSet::new(), SimTime::ZERO)
+        .is_err());
+    // NFS overwrites (close-to-open semantics allow it).
+    nfs.write_file(&mut cl, NodeId(1), "/dup", 1024, &TagSet::new(), SimTime::ZERO)
+        .unwrap();
+    assert!(nfs
+        .write_file(&mut cl, NodeId(1), "/dup", 2048, &TagSet::new(), SimTime::ZERO)
+        .is_ok());
+    assert_eq!(nfs.file_size("/dup"), Some(2048));
+}
+
+#[test]
+fn gpfs_xattr_roundtrip_and_delete() {
+    let calib = Calib::bgp();
+    let mut cl = Cluster::new(8, DiskKind::RamDisk, &calib);
+    let mut gpfs = woss::gpfs::Gpfs::new(&calib);
+    gpfs.write_file(&mut cl, NodeId(1), "/g", 4 << 20, &TagSet::new(), SimTime::ZERO)
+        .unwrap();
+    gpfs.set_xattr(&mut cl, NodeId(1), "/g", "DP", "local", SimTime::ZERO)
+        .unwrap();
+    let (v, _) = gpfs
+        .get_xattr(&mut cl, NodeId(2), "/g", "DP", SimTime::ZERO)
+        .unwrap();
+    assert_eq!(v.as_deref(), Some("local"), "stored verbatim, never acted on");
+    gpfs.delete("/g").unwrap();
+    assert!(gpfs.read_file(&mut cl, NodeId(1), "/g", SimTime::ZERO).is_err());
+}
+
+#[test]
+fn scatter_range_scheduling_targets_owning_node() {
+    // Fine-grained location exposure: each region maps to exactly one
+    // node, and different regions map to different nodes.
+    let mut cl = Cluster::new(8, DiskKind::RamDisk, &Calib::default());
+    let mut woss = standard_deployment(&cl, true, true, 7);
+    let region = 2u64 << 20;
+    let tags = TagSet::from_pairs([("DP", "scatter 1"), ("BlockSize", &region.to_string())]);
+    woss.write_file(&mut cl, NodeId(1), "/sc", region * 6, &tags, SimTime::ZERO)
+        .unwrap();
+    let mut owners = Vec::new();
+    for r in 0..6 {
+        let o = woss.locations_range("/sc", r * region, region);
+        assert_eq!(o.len(), 1, "region {r} owned by one node");
+        owners.push(o[0]);
+    }
+    owners.sort_unstable();
+    owners.dedup();
+    assert!(owners.len() > 1, "regions spread across nodes");
+}

@@ -1,0 +1,67 @@
+//! Integration: the full three-layer stack (coordinator → live store →
+//! PJRT kernels). Skips gracefully when `make artifacts` has not run.
+
+use woss::live::{LiveEngine, LiveStore};
+use woss::runtime::Runtime;
+use woss::workloads::{self, Montage};
+
+fn artifacts_present() -> bool {
+    Runtime::artifact_dir()
+        .join("stage_transform.hlo.txt")
+        .exists()
+}
+
+#[test]
+fn live_montage_completes_and_verifies() {
+    if !artifacts_present() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let engine = LiveEngine::new(LiveStore::woss(6), 6).unwrap();
+    let wf = Montage {
+        inputs: 8,
+        hints: true,
+        scale: 0.02,
+    }
+    .build();
+    let report = engine.run(&wf).unwrap();
+    assert_eq!(report.tasks, wf.tasks.len());
+    assert!(report.bytes_written > 0 && report.bytes_read > 0);
+    assert!(report.kernel_execs["reduce_merge"] > 0, "reduce tasks ran the merge kernel");
+    assert!(report.kernel_execs["stage_transform"] > 0);
+    let verified = engine.verify(&report).unwrap();
+    assert_eq!(verified, report.fingerprints.len());
+    assert!(verified > 20, "montage produces many verified files: {verified}");
+}
+
+#[test]
+fn live_pipeline_hints_improve_locality() {
+    if !artifacts_present() {
+        return;
+    }
+    let wf = |hints| workloads::pipeline(6, 0.002, hints);
+    let woss = LiveEngine::new(LiveStore::woss(6), 4).unwrap();
+    let rw = woss.run(&wf(true)).unwrap();
+    let dss = LiveEngine::new(LiveStore::dss(6), 4).unwrap();
+    let rd = dss.run(&wf(false)).unwrap();
+    assert!(
+        rw.locality() >= rd.locality(),
+        "WOSS {:.2} vs DSS {:.2}",
+        rw.locality(),
+        rd.locality()
+    );
+}
+
+#[test]
+fn live_runtime_kernels_match_oracles() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut rt = Runtime::load(&Runtime::artifact_dir()).unwrap();
+    let tile: Vec<f32> = (0..woss::runtime::TILE_ELEMS)
+        .map(|i| ((i % 97) as f32) / 97.0)
+        .collect();
+    let got = rt.checksum(&tile).unwrap();
+    let want = woss::runtime::checksum_ref(&tile);
+    assert!((got - want).abs() <= want.abs() * 1e-4);
+}

@@ -1,0 +1,312 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! placement, scheduling, accounting), via the in-tree propcheck
+//! harness. Replay failures with WOSS_PROP_SEED=<seed>.
+
+use woss::dispatch::{PlacementCtx, PlacementState, Registry};
+use woss::hints::TagSet;
+use woss::sim::{Calib, Cluster, DiskKind, Dur, Metrics, Resource, SimTime};
+use woss::storage::{standard_deployment, Manager, NodeId, NodeState};
+use woss::util::propcheck::{forall, forall_noshrink, shrink_vec};
+use woss::util::Rng;
+use woss::workflow::dag::{TaskSpec, Tier, Workflow};
+use woss::workflow::engine::{run_workflow, EngineConfig};
+use woss::workflow::scheduler::LocationAware;
+
+/// Resource reservations never overlap, regardless of request order —
+/// the gap-filling allocator's core invariant.
+#[test]
+fn prop_resource_reservations_disjoint() {
+    forall(
+        "resource-disjoint",
+        |rng: &mut Rng| {
+            (0..rng.range_usize(1, 60))
+                .map(|_| (rng.gen_range(10_000), 1 + rng.gen_range(500)))
+                .collect::<Vec<(u64, u64)>>()
+        },
+        |v| shrink_vec(v),
+        |requests| {
+            let mut r = Resource::new();
+            let mut spans = Vec::new();
+            for &(earliest, dur) in requests {
+                let s = r.acquire(SimTime(earliest), Dur(dur));
+                if s.start.0 < earliest {
+                    return false; // must not start early
+                }
+                spans.push((s.start.0, s.end.0));
+            }
+            spans.sort_unstable();
+            spans.windows(2).all(|w| w[0].1 <= w[1].0)
+        },
+    );
+}
+
+/// Manager capacity accounting: used bytes always equals the sum of
+/// live chunks, across arbitrary create/delete sequences.
+#[test]
+fn prop_manager_accounting_balances() {
+    forall_noshrink(
+        "manager-accounting",
+        |rng: &mut Rng| {
+            (0..rng.range_usize(1, 40))
+                .map(|_| {
+                    (
+                        rng.gen_range(3) == 0, // delete?
+                        rng.range_usize(0, 8), // path index
+                        1 + rng.gen_range(32 << 20),
+                    )
+                })
+                .collect::<Vec<(bool, usize, u64)>>()
+        },
+        |ops| {
+            let calib = Calib::default();
+            let mut cluster = Cluster::new(8, DiskKind::RamDisk, &calib);
+            let nodes = (1..8)
+                .map(|i| NodeState {
+                    node: NodeId(i),
+                    capacity: u64::MAX / 4,
+                    used: 0,
+                })
+                .collect();
+            let mut mgr = Manager::new(NodeId(0), nodes, Registry::woss(), &calib);
+            let mut metrics = Metrics::new();
+            let mut live_bytes: std::collections::BTreeMap<String, u64> = Default::default();
+            for (delete, pidx, size) in ops {
+                let path = format!("/p{pidx}");
+                if *delete {
+                    let existed = mgr.delete(&path).is_ok();
+                    if existed {
+                        live_bytes.remove(&path);
+                    }
+                } else if !live_bytes.contains_key(&path) {
+                    mgr.create(
+                        &mut cluster,
+                        &mut metrics,
+                        NodeId(1),
+                        &path,
+                        *size,
+                        TagSet::new(),
+                        SimTime::ZERO,
+                    )
+                    .unwrap();
+                    live_bytes.insert(path, *size);
+                }
+            }
+            let used: u64 = mgr.nodes().iter().map(|n| n.used).sum();
+            let expected: u64 = live_bytes.values().sum();
+            used == expected
+        },
+    );
+}
+
+/// Placement honors capacity: every chunk of every file lands on a node
+/// that had room, and collocation groups stay on one anchor while space
+/// remains.
+#[test]
+fn prop_placement_respects_capacity_and_groups() {
+    forall_noshrink(
+        "placement-capacity",
+        |rng: &mut Rng| {
+            let files = rng.range_usize(1, 20);
+            (0..files)
+                .map(|i| {
+                    let hint = match rng.gen_range(3) {
+                        0 => Some(format!("collocation g{}", rng.gen_range(2))),
+                        1 => Some("local".to_string()),
+                        _ => None,
+                    };
+                    (i, hint, 1 + rng.gen_range(4 << 20))
+                })
+                .collect::<Vec<(usize, Option<String>, u64)>>()
+        },
+        |files| {
+            let reg = Registry::woss();
+            let mut nodes: Vec<NodeState> = (1..6)
+                .map(|i| NodeState {
+                    node: NodeId(i),
+                    capacity: 8 << 20,
+                    used: 0,
+                })
+                .collect();
+            let mut state = PlacementState::default();
+            let mut anchors: std::collections::BTreeMap<String, NodeId> = Default::default();
+            for (i, hint, size) in files {
+                let mut tags = TagSet::new();
+                if let Some(h) = hint {
+                    tags.set("DP", h);
+                }
+                let mut ctx = PlacementCtx {
+                    client: NodeId(1 + (i % 5)),
+                    tags: &tags,
+                    nodes: &nodes,
+                    state: &mut state,
+                };
+                match reg.place_chunk(&mut ctx, 0, *size) {
+                    Some(node) => {
+                        let st = nodes.iter_mut().find(|n| n.node == node).unwrap();
+                        if st.free() < *size {
+                            return false; // placed beyond capacity
+                        }
+                        st.used += size;
+                        if let Some(h) = hint {
+                            if let Some(group) = h.strip_prefix("collocation ") {
+                                let anchor =
+                                    anchors.entry(group.to_string()).or_insert(node);
+                                // Sticky while the anchor still fits.
+                                if *anchor != node
+                                    && nodes
+                                        .iter()
+                                        .find(|n| n.node == *anchor)
+                                        .map(|n| n.free() >= *size)
+                                        .unwrap_or(false)
+                                {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                    None => {
+                        // Only acceptable when nothing fits.
+                        if nodes.iter().any(|n| n.free() >= *size) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Engine scheduling: every task starts at/after its ready time and
+/// after all of its producers finish, under random DAGs.
+#[test]
+fn prop_engine_respects_dependencies() {
+    forall_noshrink(
+        "engine-dependencies",
+        |rng: &mut Rng| {
+            // Random layered DAG: 2-4 layers, 1-6 tasks each.
+            let layers = rng.range_usize(2, 5);
+            let widths: Vec<usize> =
+                (0..layers).map(|_| rng.range_usize(1, 7)).collect();
+            let seed = rng.next_u64();
+            (widths, seed)
+        },
+        |(widths, seed)| {
+            let mut w = Workflow::new();
+            let mut prev: Vec<String> = Vec::new();
+            let mut rng = Rng::new(*seed);
+            for (layer, &width) in widths.iter().enumerate() {
+                let mut current = Vec::new();
+                for t in 0..width {
+                    let path = format!("/l{layer}t{t}");
+                    let mut task =
+                        TaskSpec::new(0, &format!("layer{layer}")).compute(0.1);
+                    if prev.is_empty() {
+                        w.preload(&format!("/backend/in{t}"), 1 << 20);
+                        task = task.read(&format!("/backend/in{t}"), Tier::Backend);
+                    } else {
+                        // Read 1..=2 random files from the previous layer.
+                        for _ in 0..rng.range_usize(1, 3.min(prev.len() + 1)) {
+                            let src = rng.choose(prev.as_slice());
+                            if !task.reads.iter().any(|r| &r.path == src) {
+                                task = task.read(src, Tier::Intermediate);
+                            }
+                        }
+                    }
+                    task = task.write(&path, Tier::Intermediate, 1 << 20, TagSet::from_pairs([("DP", "local")]));
+                    w.push(task);
+                    current.push(path);
+                }
+                prev = current;
+            }
+
+            let calib = Calib::default();
+            let mut cluster = Cluster::new(8, DiskKind::RamDisk, &calib);
+            let mut inter = standard_deployment(&cluster, true, true, *seed);
+            let mut backend = woss::nfs::NfsServer::new(&calib);
+            let mut sched = LocationAware::new();
+            let result = run_workflow(
+                &mut cluster,
+                &mut inter,
+                &mut backend,
+                &mut sched,
+                EngineConfig::woss(*seed),
+                &w,
+            )
+            .unwrap();
+
+            // Dependencies respected.
+            let deps = w.dependencies();
+            let by_id: std::collections::BTreeMap<usize, &woss::workflow::TaskRecord> =
+                result.tasks.iter().map(|t| (t.id, t)).collect();
+            for (b, ds) in deps.iter().enumerate() {
+                for a in ds {
+                    if by_id[&b].start < by_id[a].end {
+                        return false;
+                    }
+                }
+            }
+            result.tasks.iter().all(|t| t.start >= t.ready && t.end >= t.start)
+        },
+    );
+}
+
+/// The live store round-trips arbitrary byte patterns under arbitrary
+/// hints (no hint may corrupt data).
+#[test]
+fn prop_live_store_roundtrip_under_any_hints() {
+    forall_noshrink(
+        "live-roundtrip",
+        |rng: &mut Rng| {
+            let len = rng.range_usize(1, 2_000_000);
+            let seed = rng.next_u64();
+            let hint = rng.gen_range(5);
+            (len, seed, hint)
+        },
+        |&(len, seed, hint)| {
+            let store = woss::live::LiveStore::woss(5);
+            let mut rng = Rng::new(seed);
+            let data: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let tags = match hint {
+                0 => TagSet::from_pairs([("DP", "local")]),
+                1 => TagSet::from_pairs([("DP", "collocation g")]),
+                2 => TagSet::from_pairs([("DP", "scatter 2"), ("BlockSize", "64K")]),
+                3 => TagSet::from_pairs([("Replication", "3")]),
+                _ => TagSet::new(),
+            };
+            store
+                .write_file(NodeId(seed as usize % 5), "/f", &data, &tags)
+                .unwrap();
+            let back = store.read_file(NodeId((seed as usize + 1) % 5), "/f").unwrap();
+            back == data
+        },
+    );
+}
+
+/// Simulation determinism: identical seeds ⇒ identical results, across
+/// every storage configuration.
+#[test]
+fn prop_simulation_deterministic() {
+    forall_noshrink(
+        "determinism",
+        |rng: &mut Rng| (rng.next_u64(), rng.gen_range(3)),
+        |&(seed, sys)| {
+            use woss::bench::{execute, RunSpec, SystemKind};
+            let system = match sys {
+                0 => SystemKind::Nfs,
+                1 => SystemKind::DssRam,
+                _ => SystemKind::WossRam,
+            };
+            let hints = system == SystemKind::WossRam;
+            let a = execute(
+                &RunSpec::cluster(system, seed),
+                &woss::workloads::reduce(8, 0.2, hints),
+            );
+            let b = execute(
+                &RunSpec::cluster(system, seed),
+                &woss::workloads::reduce(8, 0.2, hints),
+            );
+            a.makespan == b.makespan
+        },
+    );
+}
