@@ -127,25 +127,23 @@ fn main() {
         assert!(r.makespan > 0.0);
     });
 
-    // PJRT kernels (skipped when artifacts are absent).
-    let dir = woss::runtime::Runtime::artifact_dir();
-    if dir.join("stage_transform.hlo.txt").exists() {
+    // Compute kernels (interpreted backend — no artifacts required).
+    {
+        let dir = woss::runtime::Runtime::artifact_dir();
         let mut rt = woss::runtime::Runtime::load(&dir).unwrap();
         let tile = vec![0.25f32; woss::runtime::TILE_ELEMS];
-        time("pjrt: stage_transform (256x256 tile)", 50, || {
+        time("kernel: stage_transform (256x256 tile)", 10, || {
             rt.stage_transform(&tile, &tile, &tile).unwrap();
         });
         let parts: Vec<f32> = (0..woss::runtime::MERGE_K)
             .flat_map(|_| tile.clone())
             .collect();
         let weights = vec![0.125f32; woss::runtime::MERGE_K];
-        time("pjrt: reduce_merge (8-way)", 50, || {
+        time("kernel: reduce_merge (8-way)", 50, || {
             rt.reduce_merge(&parts, &weights).unwrap();
         });
-        time("pjrt: checksum", 50, || {
+        time("kernel: checksum", 50, || {
             rt.checksum(&tile).unwrap();
         });
-    } else {
-        println!("(artifacts missing — PJRT kernel benches skipped; run `make artifacts`)");
     }
 }

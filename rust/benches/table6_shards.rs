@@ -1,0 +1,10 @@
+//! `cargo bench` target for the Table 6 variant: setattr throughput vs
+//! manager shard count and batch size. See rust/src/bench/experiments.rs
+//! for the driver.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+fn main() {
+    bench_common::bench_experiment("table6_shards");
+}

@@ -29,8 +29,8 @@ pub struct Report {
 /// All known experiment ids, in paper order.
 pub fn ids() -> Vec<&'static str> {
     vec![
-        "fig5", "fig6", "fig7", "fig8", "fig10", "fig11", "table4", "fig14", "table6", "scale",
-        "ablation",
+        "fig5", "fig6", "fig7", "fig8", "fig10", "fig11", "table4", "fig14", "table6",
+        "table6_shards", "scale", "ablation",
     ]
 }
 
@@ -46,6 +46,7 @@ pub fn run(id: &str, runs: usize, seed: u64) -> Option<Report> {
         "table4" => Some(table4(runs, seed)),
         "fig14" => Some(fig14(runs, seed)),
         "table6" => Some(table6(runs, seed)),
+        "table6_shards" => Some(table6_shards(runs, seed)),
         "scale" => Some(scale(runs, seed)),
         "ablation" => Some(ablation(runs, seed)),
         _ => None,
@@ -518,6 +519,116 @@ fn table6(runs: usize, seed: u64) -> Report {
     }
 }
 
+/// Table 6 variant: the serialized `set-attribute` bottleneck vs the
+/// sharded/batched metadata path.
+///
+/// Part 1 replays Table 6's pressure point directly: a storm of tagging
+/// RPCs from every client at t=0 against the manager, sweeping the shard
+/// count. The 1-shard serialized row *is* the Table 6 configuration
+/// (`manager_shards = 1, manager_setattr_serialized = true`); each
+/// doubling of the shard count should roughly double setattr throughput.
+/// Part 2 holds shards at 1 and sweeps the batch size of
+/// [`crate::storage::Manager::set_attrs_bulk`], showing the per-RPC cost
+/// amortizing within a single queue.
+fn table6_shards(runs: usize, seed: u64) -> Report {
+    use crate::dispatch::Registry;
+    use crate::sim::{Calib, Cluster, DiskKind, Metrics, SimTime};
+    use crate::storage::{Manager, NodeId, NodeState};
+
+    const OPS: usize = 128;
+    const CLIENTS: usize = 19;
+
+    let mut table = Table::new("Table 6 variant — setattr throughput vs shards and batch size")
+        .header(["knob", "value", "storm completion (s)", "setattr ops/s"]);
+    let mut rows = Vec::new();
+
+    let storm = |shards: usize, batch: usize, seed: u64| -> (f64, u64) {
+        let mut calib = Calib::default();
+        calib.manager_shards = shards;
+        calib.setattr_batch = batch;
+        // Table 6's acknowledged behaviour: serialized per-shard queue.
+        calib.manager_setattr_serialized = true;
+        let mut cluster = Cluster::new(20, DiskKind::RamDisk, &calib);
+        let nodes: Vec<NodeState> = (1..20)
+            .map(|i| NodeState {
+                node: NodeId(i),
+                capacity: u64::MAX / 2,
+                used: 0,
+            })
+            .collect();
+        let mut mgr = Manager::new(NodeId(0), nodes, Registry::woss(), &calib);
+        let mut metrics = Metrics::new();
+        let mut last = SimTime::ZERO;
+        // Every client tags its own output files at t=0 — the many-task
+        // tagging storm the serialized queue chokes on. Each file carries
+        // `batch` attributes, issued through the batched API.
+        let pairs: Vec<(String, String)> = (0..batch)
+            .map(|i| (format!("k{i}"), format!("v{seed}")))
+            .collect();
+        for op in 0..OPS {
+            let client = NodeId(1 + (op % CLIENTS));
+            let path = format!("/wf/out{op}");
+            let done = mgr
+                .set_attrs_bulk(&mut cluster, &mut metrics, client, &path, &pairs, SimTime::ZERO)
+                .expect("setattr storm");
+            last = last.max(done);
+        }
+        let secs = last.as_secs_f64();
+        (secs, metrics.setattr_ops)
+    };
+
+    // Part 1: shard sweep at batch=1 (one attribute per RPC, the
+    // prototype's behaviour). The storm runs straight against the
+    // manager with no jitter, so one run per configuration is exact —
+    // `runs` repetitions would reproduce the same numbers.
+    for shards in [1usize, 2, 4, 8] {
+        let (secs, ops) = storm(shards, 1, seed);
+        let thr = ops as f64 / secs.max(1e-12);
+        table.row([
+            "manager_shards".to_string(),
+            shards.to_string(),
+            format!("{secs:.4}"),
+            format!("{thr:.0}"),
+        ]);
+        rows.push(Json::obj([
+            ("knob", "manager_shards".into()),
+            ("value", shards.into()),
+            ("storm_s", secs.into()),
+            ("setattr_per_s", thr.into()),
+        ]));
+    }
+
+    // Part 2: batch sweep at the Table 6 shard count (1, serialized).
+    for batch in [1usize, 4, 16] {
+        let (secs, ops) = storm(1, batch, seed);
+        let thr = ops as f64 / secs.max(1e-12);
+        table.row([
+            "setattr_batch".to_string(),
+            batch.to_string(),
+            format!("{secs:.4}"),
+            format!("{thr:.0}"),
+        ]);
+        rows.push(Json::obj([
+            ("knob", "setattr_batch".into()),
+            ("value", batch.into()),
+            ("storm_s", secs.into()),
+            ("setattr_per_s", thr.into()),
+        ]));
+    }
+
+    Report {
+        id: "table6_shards",
+        title: "Setattr throughput vs manager shards / batch size",
+        table,
+        json: Json::obj([
+            ("id", "table6_shards".into()),
+            ("runs", runs.into()),
+            ("rows", Json::Arr(rows)),
+        ]),
+        expectation: "shards=1 serialized is the Table 6 bottleneck; throughput scales ~linearly with shard count, and batching amortizes the per-RPC cost on a single queue",
+    }
+}
+
 /// §4.1 data-size sweep: 10x up and 1000x down.
 fn scale(runs: usize, seed: u64) -> Report {
     let mut table = Table::new("Scale sweep — pipeline benchmark at 10x and 1/1000x data")
@@ -714,6 +825,53 @@ mod tests {
         assert!(get("NFS") / get("WOSS-RAM") > 5.0, "order-of-magnitude gap");
         let local = get("local");
         assert!((get("WOSS-RAM") - local).abs() / local < 0.25, "WOSS ≈ local");
+    }
+
+    #[test]
+    fn table6_shards_throughput_scales() {
+        let r = table6_shards(1, 9);
+        let rows = match r.json.get("rows") {
+            Some(Json::Arr(rows)) => rows,
+            _ => panic!("rows"),
+        };
+        let thr = |knob: &str, value: f64| -> f64 {
+            rows.iter()
+                .find(|row| {
+                    row.get("knob").and_then(Json::as_str) == Some(knob)
+                        && row.get("value").and_then(Json::as_f64) == Some(value)
+                })
+                .and_then(|row| row.get("setattr_per_s"))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        let s1 = thr("manager_shards", 1.0);
+        let s8 = thr("manager_shards", 8.0);
+        assert!(
+            s8 > 4.0 * s1,
+            "8 shards must scale setattr throughput well past 4x: {s8:.0}/s vs {s1:.0}/s"
+        );
+        let b1 = thr("setattr_batch", 1.0);
+        let b16 = thr("setattr_batch", 16.0);
+        assert!(
+            b16 > 2.0 * b1,
+            "batch=16 must amortize the per-RPC cost: {b16:.0}/s vs {b1:.0}/s"
+        );
+        // The 1-shard serialized row is the Table 6 configuration: the
+        // storm must take at least the serial floor of the queue.
+        let storm_s = rows
+            .iter()
+            .find(|row| {
+                row.get("knob").and_then(Json::as_str) == Some("manager_shards")
+                    && row.get("value").and_then(Json::as_f64) == Some(1.0)
+            })
+            .and_then(|row| row.get("storm_s"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        let serial_floor = 128.0 * crate::sim::Calib::default().manager_setattr_ms / 1e3;
+        assert!(
+            storm_s >= serial_floor * 0.99,
+            "centralized storm {storm_s:.3}s below the serialized floor {serial_floor:.3}s"
+        );
     }
 
     #[test]

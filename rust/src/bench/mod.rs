@@ -22,7 +22,9 @@ use crate::workflow::Workflow;
 /// Which persistent backend serves stage-in/out.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
+    /// The single NFS server (cluster testbed).
     Nfs,
+    /// The GPFS I/O-server pool (BG/P testbed).
     Gpfs,
 }
 
@@ -74,11 +76,15 @@ impl SystemKind {
 /// One experiment run specification.
 #[derive(Debug, Clone)]
 pub struct RunSpec {
+    /// Storage configuration under test.
     pub system: SystemKind,
     /// Cluster nodes including the manager node.
     pub nodes: usize,
+    /// Persistent backend serving stage-in/out.
     pub backend: Backend,
+    /// Testbed calibration.
     pub calib: Calib,
+    /// Base RNG seed for the run.
     pub seed: u64,
     /// Engine-config override (Table 6 ladder); `None` picks the natural
     /// config for the system (WOSS → full integration, others → plain).
@@ -90,8 +96,12 @@ pub struct RunSpec {
 /// Scheduler selection for overrides.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedKind {
+    /// Baseline least-loaded, round-robin tie-break.
     LeastLoaded,
+    /// WOSS integration: locality-first with a queue budget.
     LocationAware,
+    /// Pays for location queries but schedules like the baseline
+    /// (Table 6's "get location" rung).
     ProbeLocation,
     /// Follow data unconditionally (node-local file system runs, where
     /// a file is only readable where it was written).

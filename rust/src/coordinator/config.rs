@@ -79,6 +79,8 @@ fn set(c: &mut Calib, key: &str, value: &str) -> Result<()> {
         "manager.setattr_ms" => c.manager_setattr_ms = f()?,
         "manager.parallelism" => c.manager_parallelism = f()? as usize,
         "manager.setattr_serialized" => c.manager_setattr_serialized = b()?,
+        "manager.shards" => c.manager_shards = (f()? as usize).max(1),
+        "manager.setattr_batch" => c.setattr_batch = (f()? as usize).max(1),
         "runtime.fork_ms" => c.fork_ms = f()?,
         "runtime.swift_tag_task_ms" => c.swift_tag_task_ms = f()?,
         "runtime.sched_decision_ms" => c.sched_decision_ms = f()?,
@@ -122,6 +124,17 @@ mod tests {
         assert!((c.nic_bw - 234.0 * MB).abs() < 1.0);
         assert!(!c.manager_setattr_serialized);
         assert!((c.manager_op_ms - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_and_batch_overrides() {
+        let mut c = Calib::default();
+        apply(&mut c, "[manager]\nshards = 8\nsetattr_batch = 16\n").unwrap();
+        assert_eq!(c.manager_shards, 8);
+        assert_eq!(c.setattr_batch, 16);
+        // Zero is clamped to 1: a manager always has at least one shard.
+        apply(&mut c, "[manager]\nshards = 0\n").unwrap();
+        assert_eq!(c.manager_shards, 1);
     }
 
     #[test]

@@ -34,6 +34,59 @@ pub struct PlacementState {
     pub groups: BTreeMap<String, NodeId>,
 }
 
+/// Placement state for a sharded metadata manager.
+///
+/// The round-robin cursor is the placement path's only always-written
+/// state, so a sharded manager gives **each shard its own cursor** — in a
+/// threaded deployment that is the difference between a shared atomic hot
+/// spot and shard-private (lock-free) state, and in the simulator it
+/// removes any cross-shard ordering coupling. Collocation anchors stay
+/// **global**: a `DP=collocation <group>` must resolve to one anchor node
+/// no matter which shard each member file's path hashes to. Shards borrow
+/// a [`PlacementState`]-shaped view through [`ShardedPlacementState::with_view`],
+/// so every [`PlacementPolicy`] runs unchanged against either layout.
+#[derive(Debug)]
+pub struct ShardedPlacementState {
+    /// Global collocation-group anchors (shared across shards).
+    groups: BTreeMap<String, NodeId>,
+    /// Per-shard round-robin cursors.
+    cursors: Vec<usize>,
+}
+
+impl ShardedPlacementState {
+    /// State for `shards` metadata shards (`shards` is clamped to ≥ 1).
+    pub fn new(shards: usize) -> Self {
+        ShardedPlacementState {
+            groups: BTreeMap::new(),
+            cursors: vec![0; shards.max(1)],
+        }
+    }
+
+    /// Number of shards this state serves.
+    pub fn shard_count(&self) -> usize {
+        self.cursors.len()
+    }
+
+    /// Run `f` against shard `shard`'s placement view. The view combines
+    /// the shard-private cursor with the global group anchors; updates to
+    /// both are written back when `f` returns.
+    pub fn with_view<R>(
+        &mut self,
+        shard: usize,
+        f: impl FnOnce(&mut PlacementState) -> R,
+    ) -> R {
+        let shard = shard % self.cursors.len();
+        let mut view = PlacementState {
+            rr_cursor: self.cursors[shard],
+            groups: std::mem::take(&mut self.groups),
+        };
+        let out = f(&mut view);
+        self.cursors[shard] = view.rr_cursor;
+        self.groups = view.groups;
+        out
+    }
+}
+
 /// Everything a placement decision may look at.
 pub struct PlacementCtx<'a> {
     /// The client (SAI) node writing the file.
@@ -352,6 +405,62 @@ mod tests {
             state: &mut state,
         };
         assert_eq!(reg.place_chunk(&mut ctx, 0, 1024), Some(NodeId(7)));
+    }
+
+    #[test]
+    fn sharded_cursors_are_independent() {
+        let reg = Registry::baseline();
+        let ns = nodes(4, 1 << 30);
+        let mut sharded = ShardedPlacementState::new(2);
+        assert_eq!(sharded.shard_count(), 2);
+        let tags = TagSet::new();
+        // Two allocations through shard 0 advance its cursor twice...
+        let (a, b) = sharded.with_view(0, |st| {
+            let mut ctx = PlacementCtx {
+                client: NodeId(1),
+                tags: &tags,
+                nodes: &ns,
+                state: st,
+            };
+            (
+                reg.place_chunk(&mut ctx, 0, 1024).unwrap(),
+                reg.place_chunk(&mut ctx, 1, 1024).unwrap(),
+            )
+        });
+        assert_eq!((a, b), (NodeId(1), NodeId(2)));
+        // ...while shard 1's cursor still starts from the beginning.
+        let c = sharded.with_view(1, |st| {
+            let mut ctx = PlacementCtx {
+                client: NodeId(1),
+                tags: &tags,
+                nodes: &ns,
+                state: st,
+            };
+            reg.place_chunk(&mut ctx, 0, 1024).unwrap()
+        });
+        assert_eq!(c, NodeId(1), "shard 1 unaffected by shard 0 traffic");
+    }
+
+    #[test]
+    fn sharded_collocation_anchors_are_global() {
+        let reg = Registry::woss();
+        let ns = nodes(4, 1 << 30);
+        let mut sharded = ShardedPlacementState::new(4);
+        let tags = TagSet::from_pairs([("DP", "collocation g")]);
+        let place = |sharded: &mut ShardedPlacementState, shard: usize| {
+            sharded.with_view(shard, |st| {
+                let mut ctx = PlacementCtx {
+                    client: NodeId(2),
+                    tags: &tags,
+                    nodes: &ns,
+                    state: st,
+                };
+                reg.place_chunk(&mut ctx, 0, 1024).unwrap()
+            })
+        };
+        let a = place(&mut sharded, 0);
+        let b = place(&mut sharded, 3);
+        assert_eq!(a, b, "same group must anchor together across shards");
     }
 
     #[test]

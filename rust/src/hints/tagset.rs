@@ -10,8 +10,31 @@
 
 use super::{parse, Hint, RepSemantics};
 use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
 
 /// An ordered set of extended attributes.
+///
+/// A tag set renders to a `key=value;key=value` wire form
+/// ([`fmt::Display`]) and parses back losslessly ([`FromStr`]) — the
+/// round-trip the hint grammar (paper Table 3) rides on. Delimiter
+/// characters inside keys/values (`;`, `\`, and `=` in keys) are
+/// backslash-escaped on render and unescaped on parse:
+///
+/// ```
+/// use woss::hints::{Hint, TagSet};
+///
+/// let tags = TagSet::from_pairs([("DP", "collocation merge_g3")]);
+/// let wire = tags.to_string();
+/// assert_eq!(wire, "DP=collocation merge_g3");
+///
+/// let back: TagSet = wire.parse().unwrap();
+/// assert_eq!(back, tags);
+/// assert_eq!(
+///     back.placement(),
+///     Some(Hint::PlacementCollocate("merge_g3".into()))
+/// );
+/// ```
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TagSet {
     tags: BTreeMap<String, String>,
@@ -125,6 +148,82 @@ impl TagSet {
     }
 }
 
+/// Append `s` to `out`, backslash-escaping `\`, `;`, and (for keys)
+/// `=`, so the wire form survives delimiter characters in tag content.
+fn escape_into(out: &mut String, s: &str, escape_eq: bool) {
+    for c in s.chars() {
+        if c == '\\' || c == ';' || (escape_eq && c == '=') {
+            out.push('\\');
+        }
+        out.push(c);
+    }
+}
+
+impl fmt::Display for TagSet {
+    /// Render as `key=value` pairs joined by `;`, in key order, with
+    /// delimiter characters backslash-escaped.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        for (i, (k, v)) in self.tags.iter().enumerate() {
+            if i > 0 {
+                out.push(';');
+            }
+            escape_into(&mut out, k, true);
+            out.push('=');
+            escape_into(&mut out, v, false);
+        }
+        f.write_str(&out)
+    }
+}
+
+impl FromStr for TagSet {
+    type Err = String;
+
+    /// Parse the `key=value;key=value` wire form produced by
+    /// [`TagSet`]'s `Display`, honoring backslash escapes. The empty
+    /// string parses to an empty set.
+    fn from_str(s: &str) -> Result<TagSet, String> {
+        let mut tags = TagSet::new();
+        let mut key = String::new();
+        let mut value = String::new();
+        let mut in_value = false;
+        let mut escaped = false;
+        for c in s.chars() {
+            if escaped {
+                (if in_value { &mut value } else { &mut key }).push(c);
+                escaped = false;
+                continue;
+            }
+            match c {
+                '\\' => escaped = true,
+                '=' if !in_value => in_value = true,
+                ';' => {
+                    if !in_value {
+                        if !key.is_empty() {
+                            return Err(format!("tag pair '{key}' is missing '='"));
+                        }
+                    } else {
+                        tags.set(&key, &value);
+                        key.clear();
+                        value.clear();
+                        in_value = false;
+                    }
+                }
+                _ => (if in_value { &mut value } else { &mut key }).push(c),
+            }
+        }
+        if escaped {
+            return Err("dangling '\\' escape at end of tag set".to_string());
+        }
+        if in_value {
+            tags.set(&key, &value);
+        } else if !key.is_empty() {
+            return Err(format!("tag pair '{key}' is missing '='"));
+        }
+        Ok(tags)
+    }
+}
+
 impl<'a> IntoIterator for &'a TagSet {
     type Item = (&'a String, &'a String);
     type IntoIter = std::collections::btree_map::Iter<'a, String, String>;
@@ -178,6 +277,38 @@ mod tests {
     fn malformed_placement_is_none() {
         let t = TagSet::from_pairs([("DP", "teleport")]);
         assert_eq!(t.placement(), None, "hints are hints: malformed → default path");
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let t = TagSet::from_pairs([
+            ("DP", "collocation g1"),
+            ("Replication", "4"),
+            ("app.note", "x=y is fine in values"),
+        ]);
+        let wire = t.to_string();
+        let back: TagSet = wire.parse().unwrap();
+        assert_eq!(back, t, "display→parse must round-trip: {wire}");
+        assert_eq!("".parse::<TagSet>().unwrap(), TagSet::new());
+        assert!("noequals".parse::<TagSet>().is_err());
+        assert!("a=b;dangling\\".parse::<TagSet>().is_err());
+    }
+
+    #[test]
+    fn delimiters_in_tag_content_roundtrip() {
+        // ';' in values, '=' in keys, and '\' anywhere must survive the
+        // wire form via escaping.
+        let t = TagSet::from_pairs([
+            ("app.note", "a;b"),
+            ("odd=key", "v"),
+            ("path", "C:\\data;x=1"),
+        ]);
+        let wire = t.to_string();
+        let back: TagSet = wire.parse().unwrap();
+        assert_eq!(back, t, "escaped round-trip failed: {wire}");
+        assert_eq!(back.get("app.note"), Some("a;b"));
+        assert_eq!(back.get("odd=key"), Some("v"));
+        assert_eq!(back.get("path"), Some("C:\\data;x=1"));
     }
 
     #[test]

@@ -18,8 +18,8 @@
 //! * [`sim`] — discrete-event simulation substrate (virtual clock, network
 //!   fabric, disk models) standing in for the paper's 20-node cluster and
 //!   BG/P rack.
-//! * [`storage`] — the object-store substrate: metadata manager, storage
-//!   nodes, client SAI, chunking, replication.
+//! * [`storage`] — the object-store substrate: sharded metadata manager,
+//!   storage nodes, client SAI, chunking, replication.
 //! * [`hints`] — the typed hint grammar of Table 3.
 //! * [`dispatch`] — the paper's extensible dispatcher: tag-triggered
 //!   optimization modules (placement, replication, location exposure).
@@ -27,12 +27,15 @@
 //! * [`workflow`] — pyFlow-equivalent runtime with round-robin and
 //!   location-aware schedulers, plus the Swift-personality overhead model.
 //! * [`workloads`] — synthetic patterns + BLAST / modFTDock / Montage.
-//! * [`runtime`] — PJRT loader executing the AOT JAX/Pallas artifacts.
+//! * [`runtime`] — kernel runtime executing the workload's compute tiles
+//!   (interpreted backend; PJRT artifacts validated when present).
 //! * [`live`] — live engine: real bytes, real compute, std-thread actors.
 //! * [`coordinator`] — leader: config, experiment registry, reporting.
 //! * [`bench`] — experiment harness regenerating every paper figure/table.
 //! * [`util`] — in-tree substrates (CLI, stats, RNG, property testing)
 //!   since this build is fully offline.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod coordinator;

@@ -5,8 +5,8 @@
 //! in-process WOSS deployment ([`store::LiveStore`]) holds actual chunk
 //! bytes across per-node stores, the same dispatcher registry routes
 //! placement/location decisions, and workflow tasks execute on a std
-//! worker pool calling the AOT JAX/Pallas kernels through the PJRT
-//! runtime (`crate::runtime`). `examples/montage_e2e.rs` drives it on a
+//! worker pool calling the compute kernels through the runtime
+//! (`crate::runtime`). `examples/montage_e2e.rs` drives it on a
 //! real workload and verifies data integrity end to end with the
 //! checksum kernel.
 

@@ -35,12 +35,17 @@ pub struct LiveStore {
     registry: Registry,
     manager: Mutex<ManagerState>,
     stores: Vec<NodeStore>,
-    /// Counters (lock-free).
+    /// Bytes written through [`LiveStore::write_file`] (lock-free counter).
     pub bytes_written: AtomicU64,
+    /// Bytes returned by [`LiveStore::read_file`].
     pub bytes_read: AtomicU64,
+    /// Chunk reads served from the reader's own node store.
     pub local_reads: AtomicU64,
+    /// Chunk reads that had to fetch from another node's store.
     pub remote_reads: AtomicU64,
+    /// `set-attribute` operations (top-down channel traffic).
     pub setattr_ops: AtomicU64,
+    /// `get-attribute` operations (bottom-up channel traffic).
     pub getattr_ops: AtomicU64,
     /// Pending tags set before file creation.
     pending_tags: RwLock<HashMap<String, TagSet>>,

@@ -64,6 +64,17 @@ pub struct Calib {
     /// The prototype serializes `set-attribute` calls in a single queue —
     /// the dominant overhead in Table 6. `true` reproduces that.
     pub manager_setattr_serialized: bool,
+    /// Number of metadata shards. Each shard owns a slice of the
+    /// namespace (keyed by file-path hash) with its own worker pool and
+    /// `set-attribute` queue, so metadata load spreads instead of
+    /// funneling through one queue. `1` reproduces the paper's
+    /// centralized manager (the Table 6 configuration).
+    pub manager_shards: usize,
+    /// Maximum attributes carried per batched `set-attribute` RPC issued
+    /// by the workflow runtime. `1` reproduces the prototype's
+    /// one-RPC-per-tag behaviour (Table 6); larger values amortize the
+    /// fork + RPC + queue-slot cost across a file's whole tag set.
+    pub setattr_batch: usize,
 
     // ---- workflow-runtime integration overheads (Table 6 / fig11) ----
     /// Cost of forking a helper process to run `setfattr`, ms.
@@ -111,6 +122,8 @@ impl Default for Calib {
             manager_setattr_ms: 4.0,
             manager_parallelism: 4,
             manager_setattr_serialized: true,
+            manager_shards: 1,
+            setattr_batch: 1,
             fork_ms: 1.0,
             swift_tag_task_ms: 0.0, // pyFlow personality by default
             sched_decision_ms: 0.1,
@@ -164,6 +177,10 @@ mod tests {
         assert_eq!(c.chunk_size, 1024 * 1024);
         assert!(c.manager_setattr_serialized);
         assert_eq!(c.swift_tag_task_ms, 0.0);
+        // Table 6 reproduction requires the centralized, unbatched
+        // defaults; the sharded/batched path is opt-in.
+        assert_eq!(c.manager_shards, 1);
+        assert_eq!(c.setattr_batch, 1);
     }
 
     #[test]

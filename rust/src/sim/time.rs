@@ -131,7 +131,9 @@ impl fmt::Display for Dur {
 /// A `[start, end]` interval produced by a resource reservation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Span {
+    /// When the reservation begins.
     pub start: SimTime,
+    /// When the reservation ends.
     pub end: SimTime,
 }
 

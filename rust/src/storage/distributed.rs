@@ -369,6 +369,23 @@ impl StorageModel for DistributedStore {
             .set_xattr(cluster, &mut self.metrics, client, path, key, value, t)
     }
 
+    fn set_xattrs_bulk(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        pairs: &[(String, String)],
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        if pairs.is_empty() {
+            return Ok(at);
+        }
+        // One VFS call, one manager RPC, one queue slot for the batch.
+        let t = cluster.fuse_op(at);
+        self.manager
+            .set_attrs_bulk(cluster, &mut self.metrics, client, path, pairs, t)
+    }
+
     fn get_xattr(
         &mut self,
         cluster: &mut Cluster,

@@ -1,18 +1,42 @@
-//! The centralized metadata manager (paper Figure 2/3).
+//! The metadata manager (paper Figure 2/3), sharded.
 //!
 //! The manager owns the namespace, per-file block-maps, the extended
 //! attributes, and the storage-node registry, and it hosts the dispatcher
 //! that routes allocation requests to placement modules and `getxattr`
 //! requests to bottom-up providers.
 //!
+//! ## Sharding
+//!
+//! The paper's prototype is centralized: one manager process, and —
+//! acknowledged in §4.4 — one serialized queue for every `set-attribute`
+//! call, which Table 6 identifies as the dominant tagging overhead. To
+//! scale past that bottleneck the namespace here is split into
+//! [`Calib::manager_shards`](crate::sim::Calib) shards keyed by
+//! file-path hash; each shard owns its slice of the namespace plus its
+//! **own worker pool and `set-attribute` queue**, so metadata load from
+//! independent files spreads instead of funneling through one queue.
+//! Placement state follows the same split through
+//! [`ShardedPlacementState`]: per-shard round-robin cursors, global
+//! collocation anchors. With `manager_shards = 1` (the default) every
+//! path hashes to shard 0 and the original centralized behaviour — and
+//! Table 6 — is reproduced exactly.
+//!
+//! ## Batched tagging
+//!
+//! [`Manager::set_attrs_bulk`] carries a file's whole tag set in one RPC:
+//! one fabric round-trip and one queue slot whose service time is
+//! `setattr_cost + (k−1)·op_cost` for `k` attributes, amortizing the
+//! per-RPC cost the prototype pays per tag. A batch of one is exactly the
+//! legacy [`Manager::set_xattr`] cost, so the Table 6 ladder is untouched
+//! when `Calib::setattr_batch = 1`.
+//!
 //! Timing model: every client→manager interaction is an RPC (fabric
-//! latency) plus a service slot on the manager's worker pool. Matching
-//! the prototype's acknowledged behaviour (§4.4), `set-attribute` calls
-//! are serialized through a single queue when
-//! `Calib::manager_setattr_serialized` is set — the dominant tagging
-//! overhead in Table 6.
+//! latency) plus a service slot on the owning shard's worker pool.
+//! Matching the prototype's acknowledged behaviour (§4.4),
+//! `set-attribute` calls are serialized through the shard's single queue
+//! when `Calib::manager_setattr_serialized` is set.
 
-use crate::dispatch::{PlacementCtx, PlacementState, Registry};
+use crate::dispatch::{PlacementCtx, Registry, ShardedPlacementState};
 use crate::hints::TagSet;
 use crate::sim::{Cluster, Dur, Metrics, MultiResource, Resource, SimTime};
 use crate::storage::types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};
@@ -21,20 +45,30 @@ use std::collections::BTreeMap;
 /// Chunk placement decision for one chunk: primary + replica holders.
 #[derive(Debug, Clone)]
 pub struct ChunkPlacement {
+    /// Node receiving the chunk's primary copy (the write target).
     pub primary: NodeId,
+    /// Replica holders (excluding the primary).
     pub replicas: Vec<NodeId>,
+}
+
+/// One metadata shard: a namespace slice with its own service resources.
+struct Shard {
+    /// Files whose path hashes to this shard.
+    files: BTreeMap<String, FileMeta>,
+    /// Shard-local worker pool for general metadata ops.
+    workers: MultiResource,
+    /// Shard-local serialized `set-attribute` queue.
+    setattr_queue: Resource,
 }
 
 /// The metadata manager.
 pub struct Manager {
     /// Node hosting the manager process.
     host: NodeId,
-    files: BTreeMap<String, FileMeta>,
+    shards: Vec<Shard>,
     nodes: Vec<NodeState>,
     registry: Registry,
-    placement_state: PlacementState,
-    workers: MultiResource,
-    setattr_queue: Resource,
+    placement: ShardedPlacementState,
     op_cost: Dur,
     setattr_cost: Dur,
     setattr_serialized: bool,
@@ -42,21 +76,28 @@ pub struct Manager {
 }
 
 impl Manager {
-    /// Build a manager hosted on `host` managing `storage_nodes`.
+    /// Build a manager hosted on `host` managing `storage_nodes`, with
+    /// `calib.manager_shards` namespace shards.
     pub fn new(
         host: NodeId,
         storage_nodes: Vec<NodeState>,
         registry: Registry,
         calib: &crate::sim::Calib,
     ) -> Self {
+        let n_shards = calib.manager_shards.max(1);
+        let shards = (0..n_shards)
+            .map(|_| Shard {
+                files: BTreeMap::new(),
+                workers: MultiResource::new(calib.manager_parallelism.max(1)),
+                setattr_queue: Resource::new(),
+            })
+            .collect();
         Manager {
             host,
-            files: BTreeMap::new(),
+            shards,
             nodes: storage_nodes,
             registry,
-            placement_state: PlacementState::default(),
-            workers: MultiResource::new(calib.manager_parallelism.max(1)),
-            setattr_queue: Resource::new(),
+            placement: ShardedPlacementState::new(n_shards),
             op_cost: Dur::from_millis_f64(calib.manager_op_ms),
             setattr_cost: Dur::from_millis_f64(calib.manager_setattr_ms),
             setattr_serialized: calib.manager_setattr_serialized,
@@ -67,6 +108,11 @@ impl Manager {
     /// Manager host node.
     pub fn host(&self) -> NodeId {
         self.host
+    }
+
+    /// Number of namespace shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
     /// The module registry (for diagnostics and extension).
@@ -85,22 +131,52 @@ impl Manager {
         &self.nodes
     }
 
-    /// One metadata RPC from `client`: request latency + a worker slot +
-    /// response latency. Returns when the reply reaches the client.
-    fn rpc(&mut self, cluster: &mut Cluster, client: NodeId, at: SimTime) -> SimTime {
+    /// Which shard owns `path` (FNV-1a over the path bytes).
+    fn shard_of(&self, path: &str) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in path.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    /// One metadata RPC from `client` served by `shard`: request latency
+    /// + a worker slot + response latency. Returns when the reply reaches
+    /// the client.
+    fn rpc(&mut self, cluster: &mut Cluster, client: NodeId, shard: usize, at: SimTime) -> SimTime {
         let req = cluster.fabric.rpc(client, self.host, at);
-        let served = self.workers.acquire(req.end, self.op_cost);
+        let served = self.shards[shard].workers.acquire(req.end, self.op_cost);
         let resp = cluster.fabric.rpc(self.host, client, served.end);
         resp.end
     }
 
-    /// A serialized `set-attribute` RPC (Table 6's bottleneck).
-    fn setattr_rpc(&mut self, cluster: &mut Cluster, client: NodeId, at: SimTime) -> SimTime {
+    /// A (possibly serialized) `set-attribute` RPC carrying `batch_len`
+    /// attributes in one message. The first attribute pays the full
+    /// `set-attribute` service cost; each further attribute in the batch
+    /// adds only a plain-op increment — the amortization the batched API
+    /// exists for.
+    fn setattr_rpc(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        shard: usize,
+        batch_len: usize,
+        at: SimTime,
+    ) -> SimTime {
         let req = cluster.fabric.rpc(client, self.host, at);
-        let served = if self.setattr_serialized {
-            self.setattr_queue.acquire(req.end, self.setattr_cost)
+        let service = self
+            .setattr_cost
+            .saturating_add(self.op_cost.scale(batch_len.saturating_sub(1) as f64));
+        let serialized = self.setattr_serialized;
+        let shard = &mut self.shards[shard];
+        let served = if serialized {
+            shard.setattr_queue.acquire(req.end, service)
         } else {
-            self.workers.acquire(req.end, self.setattr_cost)
+            shard.workers.acquire(req.end, service)
         };
         let resp = cluster.fabric.rpc(self.host, client, served.end);
         resp.end
@@ -119,7 +195,8 @@ impl Manager {
         tags: TagSet,
         at: SimTime,
     ) -> Result<(Vec<ChunkPlacement>, SimTime), StorageError> {
-        if self.files.contains_key(path) {
+        let shard_idx = self.shard_of(path);
+        if self.shards[shard_idx].files.contains_key(path) {
             return Err(StorageError::AlreadyExists(path.to_string()));
         }
         let chunk_size = tags
@@ -128,94 +205,126 @@ impl Manager {
             .unwrap_or(cluster.calib().chunk_size);
         let n_chunks = FileMeta::chunk_count(size, chunk_size);
         let factor = self.registry.replication_factor(&tags);
-
-        let mut placements = Vec::with_capacity(n_chunks as usize);
-        let mut chunks = Vec::with_capacity(n_chunks as usize);
         // Default layout: the file stripes round-robin over
         // `default_stripe_width` nodes starting from a per-file base slot
         // (MosaStore-style narrow striping).
         let stripe_width = cluster.calib().default_stripe_width.max(1);
-        let mut base_slot: Option<usize> = None;
-        for idx in 0..n_chunks {
-            let chunk_bytes = if idx == n_chunks - 1 {
-                size - idx * chunk_size
-            } else {
-                chunk_size
-            };
-            let mut ctx = PlacementCtx {
-                client,
-                tags: &tags,
-                nodes: &self.nodes,
-                state: &mut self.placement_state,
-            };
-            let hinted = self.registry.place_hinted(&mut ctx, idx, chunk_bytes);
-            let primary = match hinted {
-                Some(node) => node,
-                None => {
-                    let slot = match base_slot {
-                        Some(b) => {
-                            let n = self.nodes.len();
-                            (b + (idx as usize % stripe_width)) % n
-                        }
-                        None => {
-                            let mut c2 = PlacementCtx {
-                                client,
-                                tags: &tags,
-                                nodes: &self.nodes,
-                                state: &mut self.placement_state,
-                            };
-                            let first = c2
-                                .next_rr(chunk_bytes)
-                                .ok_or(StorageError::NoSpace(chunk_bytes))?;
-                            let slot = self
-                                .nodes
-                                .iter()
-                                .position(|s| s.node == first)
-                                .expect("node in registry");
-                            base_slot = Some(slot);
-                            slot
-                        }
-                    };
-                    // Capacity fallback: spill to round-robin when the
-                    // stripe target is full.
-                    if self.nodes[slot].fits(chunk_bytes) {
-                        self.nodes[slot].node
+
+        let nodes = &mut self.nodes;
+        let registry = &self.registry;
+        let (placements, chunks) = self.placement.with_view(shard_idx, |state| {
+            let mut placements = Vec::with_capacity(n_chunks as usize);
+            let mut chunks: Vec<ChunkMeta> = Vec::with_capacity(n_chunks as usize);
+            let mut base_slot: Option<usize> = None;
+            // `break 'place Some(e)` aborts placement; committed usage
+            // from already-placed chunks is rolled back below so a
+            // failed create leaks no capacity.
+            let failed = 'place: {
+                for idx in 0..n_chunks {
+                    let chunk_bytes = if idx == n_chunks - 1 {
+                        size - idx * chunk_size
                     } else {
-                        let mut c3 = PlacementCtx {
+                        chunk_size
+                    };
+                    let hinted = {
+                        let mut ctx = PlacementCtx {
                             client,
                             tags: &tags,
-                            nodes: &self.nodes,
-                            state: &mut self.placement_state,
+                            nodes: &*nodes,
+                            state: &mut *state,
                         };
-                        c3.next_rr(chunk_bytes)
-                            .ok_or(StorageError::NoSpace(chunk_bytes))?
+                        registry.place_hinted(&mut ctx, idx, chunk_bytes)
+                    };
+                    let primary = match hinted {
+                        Some(node) => node,
+                        None => {
+                            let slot = match base_slot {
+                                Some(b) => {
+                                    let n = nodes.len();
+                                    (b + (idx as usize % stripe_width)) % n
+                                }
+                                None => {
+                                    let mut c2 = PlacementCtx {
+                                        client,
+                                        tags: &tags,
+                                        nodes: &*nodes,
+                                        state: &mut *state,
+                                    };
+                                    let first = match c2.next_rr(chunk_bytes) {
+                                        Some(f) => f,
+                                        None => break 'place Some(StorageError::NoSpace(
+                                            chunk_bytes,
+                                        )),
+                                    };
+                                    let slot = nodes
+                                        .iter()
+                                        .position(|s| s.node == first)
+                                        .expect("node in registry");
+                                    base_slot = Some(slot);
+                                    slot
+                                }
+                            };
+                            // Capacity fallback: spill to round-robin when
+                            // the stripe target is full.
+                            if nodes[slot].fits(chunk_bytes) {
+                                nodes[slot].node
+                            } else {
+                                let mut c3 = PlacementCtx {
+                                    client,
+                                    tags: &tags,
+                                    nodes: &*nodes,
+                                    state: &mut *state,
+                                };
+                                match c3.next_rr(chunk_bytes) {
+                                    Some(n) => n,
+                                    None => break 'place Some(StorageError::NoSpace(
+                                        chunk_bytes,
+                                    )),
+                                }
+                            }
+                        }
+                    };
+                    let replicas = if factor > 1 {
+                        let mut rctx = PlacementCtx {
+                            client,
+                            tags: &tags,
+                            nodes: &*nodes,
+                            state: &mut *state,
+                        };
+                        registry
+                            .replication()
+                            .replica_targets(&mut rctx, primary, factor, chunk_bytes)
+                    } else {
+                        Vec::new()
+                    };
+                    // Commit usage.
+                    for holder in std::iter::once(primary).chain(replicas.iter().copied()) {
+                        if let Some(n) = nodes.iter_mut().find(|n| n.node == holder) {
+                            n.used += chunk_bytes;
+                        }
+                    }
+                    let mut all = vec![primary];
+                    all.extend(replicas.iter().copied());
+                    chunks.push(ChunkMeta { replicas: all });
+                    placements.push(ChunkPlacement { primary, replicas });
+                }
+                None
+            };
+            if let Some(err) = failed {
+                // Roll back committed usage. Every committed chunk is a
+                // full `chunk_size`: the short tail chunk is only ever
+                // committed last, after which no failure can occur.
+                for chunk in &chunks {
+                    for holder in &chunk.replicas {
+                        if let Some(n) = nodes.iter_mut().find(|n| n.node == *holder) {
+                            n.used = n.used.saturating_sub(chunk_size);
+                        }
                     }
                 }
-            };
-            let replicas = if factor > 1 {
-                let mut rctx = PlacementCtx {
-                    client,
-                    tags: &tags,
-                    nodes: &self.nodes,
-                    state: &mut self.placement_state,
-                };
-                self.registry
-                    .replication()
-                    .replica_targets(&mut rctx, primary, factor, chunk_bytes)
-            } else {
-                Vec::new()
-            };
-            // Commit usage.
-            for holder in std::iter::once(primary).chain(replicas.iter().copied()) {
-                if let Some(n) = self.nodes.iter_mut().find(|n| n.node == holder) {
-                    n.used += chunk_bytes;
-                }
+                return Err(err);
             }
-            let mut all = vec![primary];
-            all.extend(replicas.iter().copied());
-            chunks.push(ChunkMeta { replicas: all });
-            placements.push(ChunkPlacement { primary, replicas });
-        }
+            Ok((placements, chunks))
+        })?;
 
         let meta = FileMeta {
             id: FileId(self.next_file_id),
@@ -226,10 +335,10 @@ impl Manager {
             creator: client,
         };
         self.next_file_id += 1;
-        self.files.insert(path.to_string(), meta);
+        self.shards[shard_idx].files.insert(path.to_string(), meta);
 
         metrics.manager_ops += 1;
-        let done = self.rpc(cluster, client, at);
+        let done = self.rpc(cluster, client, shard_idx, at);
         Ok((placements, done))
     }
 
@@ -243,23 +352,25 @@ impl Manager {
         path: &str,
         at: SimTime,
     ) -> Result<(FileMeta, SimTime), StorageError> {
-        let meta = self
+        let shard_idx = self.shard_of(path);
+        let meta = self.shards[shard_idx]
             .files
             .get(path)
             .cloned()
             .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
         metrics.manager_ops += 1;
-        let done = self.rpc(cluster, client, at);
+        let done = self.rpc(cluster, client, shard_idx, at);
         Ok((meta, done))
     }
 
     /// Zero-cost metadata peek for decision logic (scheduler look-ups are
     /// charged explicitly through [`Manager::get_xattr`]).
     pub fn peek(&self, path: &str) -> Option<&FileMeta> {
-        self.files.get(path)
+        self.shards[self.shard_of(path)].files.get(path)
     }
 
-    /// Set one extended attribute (the top-down hint channel).
+    /// Set one extended attribute (the top-down hint channel). Cost and
+    /// semantics of a single-attribute [`Manager::set_attrs_bulk`].
     pub fn set_xattr(
         &mut self,
         cluster: &mut Cluster,
@@ -270,32 +381,56 @@ impl Manager {
         value: &str,
         at: SimTime,
     ) -> Result<SimTime, StorageError> {
-        // Tags on yet-to-be-created files are held as pending: the paper's
-        // workflow runtimes tag outputs before the producing task opens
-        // them. We model that by creating a zero-size placeholder.
-        let entry = self.files.entry(path.to_string()).or_insert_with(|| FileMeta {
-            id: FileId(0),
-            size: 0,
-            chunk_size: cluster.calib().chunk_size,
-            tags: TagSet::new(),
-            chunks: Vec::new(),
-            creator: client,
-        });
-        if entry.id == FileId(0) && entry.size == 0 {
-            // placeholder gets a real id lazily at create()
+        let pair = [(key.to_string(), value.to_string())];
+        self.set_attrs_bulk(cluster, metrics, client, path, &pair, at)
+    }
+
+    /// Set a batch of extended attributes on `path` with **one** RPC and
+    /// one queue slot (see the module docs for the cost model). Tags on
+    /// yet-to-be-created files are held as pending: the paper's workflow
+    /// runtimes tag outputs before the producing task opens them. We
+    /// model that by creating a zero-size placeholder.
+    pub fn set_attrs_bulk(
+        &mut self,
+        cluster: &mut Cluster,
+        metrics: &mut Metrics,
+        client: NodeId,
+        path: &str,
+        pairs: &[(String, String)],
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        if pairs.is_empty() {
+            return Ok(at);
         }
-        entry.tags.set(key, value);
+        let shard_idx = self.shard_of(path);
+        let default_chunk = cluster.calib().chunk_size;
+        let entry = self.shards[shard_idx]
+            .files
+            .entry(path.to_string())
+            .or_insert_with(|| FileMeta {
+                id: FileId(0),
+                size: 0,
+                chunk_size: default_chunk,
+                tags: TagSet::new(),
+                chunks: Vec::new(),
+                creator: client,
+            });
+        for (key, value) in pairs {
+            entry.tags.set(key, value);
+        }
         metrics.manager_ops += 1;
-        metrics.setattr_ops += 1;
-        Ok(self.setattr_rpc(cluster, client, at))
+        metrics.setattr_ops += pairs.len() as u64;
+        Ok(self.setattr_rpc(cluster, client, shard_idx, pairs.len(), at))
     }
 
     /// Pending tags attached to `path` before creation (consumed by
     /// the SAI at create time).
     pub fn take_pending_tags(&mut self, path: &str) -> Option<TagSet> {
-        match self.files.get(path) {
+        let shard_idx = self.shard_of(path);
+        let files = &mut self.shards[shard_idx].files;
+        match files.get(path) {
             Some(meta) if meta.chunks.is_empty() && meta.size == 0 => {
-                let meta = self.files.remove(path).unwrap();
+                let meta = files.remove(path).unwrap();
                 Some(meta.tags)
             }
             _ => None,
@@ -315,7 +450,8 @@ impl Manager {
         key: &str,
         at: SimTime,
     ) -> Result<(Option<String>, SimTime), StorageError> {
-        let meta = self
+        let shard_idx = self.shard_of(path);
+        let meta = self.shards[shard_idx]
             .files
             .get(path)
             .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
@@ -325,13 +461,14 @@ impl Manager {
             .or_else(|| meta.tags.get(key).map(str::to_string));
         metrics.manager_ops += 1;
         metrics.getattr_ops += 1;
-        let done = self.rpc(cluster, client, at);
+        let done = self.rpc(cluster, client, shard_idx, at);
         Ok((value, done))
     }
 
     /// Delete a file, releasing capacity.
     pub fn delete(&mut self, path: &str) -> Result<(), StorageError> {
-        let meta = self
+        let shard_idx = self.shard_of(path);
+        let meta = self.shards[shard_idx]
             .files
             .remove(path)
             .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
@@ -346,14 +483,21 @@ impl Manager {
         Ok(())
     }
 
-    /// Number of files in the namespace.
+    /// Number of files in the namespace (all shards).
     pub fn file_count(&self) -> usize {
-        self.files.len()
+        self.shards.iter().map(|s| s.files.len()).sum()
     }
 
-    /// Iterate paths (tests/diagnostics).
+    /// Iterate paths across every shard, in sorted order
+    /// (tests/diagnostics).
     pub fn paths(&self) -> impl Iterator<Item = &str> {
-        self.files.keys().map(String::as_str)
+        let mut all: Vec<&str> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.files.keys().map(String::as_str))
+            .collect();
+        all.sort_unstable();
+        all.into_iter()
     }
 }
 
@@ -361,7 +505,8 @@ impl std::fmt::Debug for Manager {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Manager")
             .field("host", &self.host)
-            .field("files", &self.files.len())
+            .field("shards", &self.shards.len())
+            .field("files", &self.file_count())
             .field("nodes", &self.nodes.len())
             .field("registry", &self.registry)
             .finish()
@@ -374,7 +519,10 @@ mod tests {
     use crate::sim::{Calib, DiskKind};
 
     fn setup(registry: Registry) -> (Cluster, Manager, Metrics) {
-        let calib = Calib::default();
+        setup_with(registry, Calib::default())
+    }
+
+    fn setup_with(registry: Registry, calib: Calib) -> (Cluster, Manager, Metrics) {
         let cluster = Cluster::new(4, DiskKind::RamDisk, &calib);
         let nodes = (1..4)
             .map(|i| NodeState {
@@ -474,6 +622,111 @@ mod tests {
     }
 
     #[test]
+    fn sharded_setattr_scales() {
+        // The same storm of setattrs over distinct files, against 1 vs 4
+        // shards: per-shard queues must cut the completion time by at
+        // least 2x (hashing is not perfectly balanced, so not exactly 4x).
+        let run = |shards: usize| -> f64 {
+            let mut calib = Calib::default();
+            calib.manager_shards = shards;
+            let (mut cl, mut mgr, mut m) = setup_with(Registry::woss(), calib);
+            assert_eq!(mgr.shard_count(), shards);
+            let mut last = SimTime::ZERO;
+            for i in 0..64 {
+                let done = mgr
+                    .set_xattr(
+                        &mut cl,
+                        &mut m,
+                        NodeId(1 + (i % 3)),
+                        &format!("/f{i}"),
+                        "DP",
+                        "local",
+                        SimTime::ZERO,
+                    )
+                    .unwrap();
+                last = last.max(done);
+            }
+            last.as_secs_f64()
+        };
+        let centralized = run(1);
+        let sharded = run(4);
+        assert!(
+            sharded < centralized / 2.0,
+            "4 shards must be >2x faster: {sharded:.4}s vs {centralized:.4}s"
+        );
+    }
+
+    #[test]
+    fn bulk_setattr_amortizes_rpc_cost() {
+        let pairs: Vec<(String, String)> = (0..8)
+            .map(|i| (format!("k{i}"), "v".to_string()))
+            .collect();
+
+        // Eight per-attribute RPCs, serialized.
+        let (mut cl, mut mgr, mut m) = setup(Registry::woss());
+        let mut serial_last = SimTime::ZERO;
+        for (k, v) in &pairs {
+            let done = mgr
+                .set_xattr(&mut cl, &mut m, NodeId(1), "/f", k, v, SimTime::ZERO)
+                .unwrap();
+            serial_last = serial_last.max(done);
+        }
+
+        // One batched RPC carrying all eight.
+        let (mut cl2, mut mgr2, mut m2) = setup(Registry::woss());
+        let bulk_done = mgr2
+            .set_attrs_bulk(&mut cl2, &mut m2, NodeId(1), "/f", &pairs, SimTime::ZERO)
+            .unwrap();
+
+        assert!(
+            bulk_done < serial_last,
+            "bulk ({bulk_done}) must beat {} serial RPCs ({serial_last})",
+            pairs.len()
+        );
+        // Same attributes stored either way.
+        assert_eq!(mgr.peek("/f").unwrap().tags.len(), 8);
+        assert_eq!(mgr2.peek("/f").unwrap().tags.len(), 8);
+        // One RPC, eight attributes, in the counters.
+        assert_eq!(m2.manager_ops, 1);
+        assert_eq!(m2.setattr_ops, 8);
+    }
+
+    #[test]
+    fn sharded_namespace_roundtrip() {
+        let mut calib = Calib::default();
+        calib.manager_shards = 4;
+        let (mut cl, mut mgr, mut m) = setup_with(Registry::woss(), calib);
+        for i in 0..16 {
+            mgr.create(
+                &mut cl,
+                &mut m,
+                NodeId(1),
+                &format!("/d/f{i}"),
+                1 << 20,
+                TagSet::new(),
+                SimTime::ZERO,
+            )
+            .unwrap();
+        }
+        assert_eq!(mgr.file_count(), 16);
+        let listed: Vec<&str> = mgr.paths().collect();
+        assert_eq!(listed.len(), 16);
+        assert!(listed.windows(2).all(|w| w[0] < w[1]), "sorted across shards");
+        for i in 0..16 {
+            let path = format!("/d/f{i}");
+            assert!(mgr.peek(&path).is_some(), "{path} resolvable");
+            let (meta, _) = mgr.open(&mut cl, &mut m, NodeId(2), &path, SimTime::ZERO).unwrap();
+            assert_eq!(meta.size, 1 << 20);
+        }
+        // Deleting through the shard router releases all capacity.
+        for i in 0..16 {
+            mgr.delete(&format!("/d/f{i}")).unwrap();
+        }
+        assert_eq!(mgr.file_count(), 0);
+        assert_eq!(mgr.nodes().iter().map(|n| n.used).sum::<u64>(), 0);
+    }
+
+    #[test]
     fn pending_tags_survive_until_create() {
         let (mut cl, mut mgr, mut m) = setup(Registry::woss());
         mgr.set_xattr(&mut cl, &mut m, NodeId(1), "/out", "DP", "local", SimTime::ZERO)
@@ -491,6 +744,31 @@ mod tests {
         mgr.delete("/f").unwrap();
         assert_eq!(mgr.nodes().iter().map(|n| n.used).sum::<u64>(), 0);
         assert!(mgr.peek("/f").is_none());
+    }
+
+    #[test]
+    fn failed_create_rolls_back_capacity() {
+        // Pool with room for exactly one chunk: a two-chunk create must
+        // fail AND leave the capacity accounting untouched.
+        let calib = Calib::default();
+        let mut cl = Cluster::new(3, DiskKind::RamDisk, &calib);
+        let nodes = vec![NodeState {
+            node: NodeId(1),
+            capacity: 1 << 20,
+            used: 0,
+        }];
+        let mut mgr = Manager::new(NodeId(0), nodes, Registry::woss(), &calib);
+        let mut m = Metrics::new();
+        let err = mgr
+            .create(&mut cl, &mut m, NodeId(1), "/two", 2 << 20, TagSet::new(), SimTime::ZERO)
+            .unwrap_err();
+        assert!(matches!(err, StorageError::NoSpace(_)));
+        assert_eq!(
+            mgr.nodes().iter().map(|n| n.used).sum::<u64>(),
+            0,
+            "failed create must not leak committed capacity"
+        );
+        assert!(mgr.peek("/two").is_none());
     }
 
     #[test]

@@ -64,6 +64,27 @@ pub trait StorageModel {
         at: SimTime,
     ) -> Result<SimTime, StorageError>;
 
+    /// Set a batch of extended attributes on one file (top-down hints,
+    /// amortized). Systems with a batched metadata path (WOSS's sharded
+    /// manager) override this to carry the whole batch in one RPC; the
+    /// default falls back to sequential [`StorageModel::set_xattr`]
+    /// calls, so legacy systems keep per-attribute cost — exactly the
+    /// incremental-adoption story.
+    fn set_xattrs_bulk(
+        &mut self,
+        cluster: &mut Cluster,
+        client: NodeId,
+        path: &str,
+        pairs: &[(String, String)],
+        at: SimTime,
+    ) -> Result<SimTime, StorageError> {
+        let mut t = at;
+        for (key, value) in pairs {
+            t = self.set_xattr(cluster, client, path, key, value, t)?;
+        }
+        Ok(t)
+    }
+
     /// Get an extended attribute (bottom-up info). Returns the value (if
     /// any) and the completion time.
     fn get_xattr(

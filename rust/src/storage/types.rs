@@ -120,17 +120,30 @@ impl NodeState {
 }
 
 /// Storage-stack error type.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StorageError {
-    #[error("file not found: {0}")]
+    /// The path does not name a stored file.
     NotFound(String),
-    #[error("file already exists: {0}")]
+    /// Create was issued for a path that already exists.
     AlreadyExists(String),
-    #[error("no storage node has {0} bytes free")]
+    /// No storage node has room for an allocation of this many bytes.
     NoSpace(u64),
-    #[error("invalid argument: {0}")]
+    /// Malformed request (bad range, cross-node local read, ...).
     Invalid(String),
 }
+
+impl fmt::Display for StorageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StorageError::NotFound(p) => write!(f, "file not found: {p}"),
+            StorageError::AlreadyExists(p) => write!(f, "file already exists: {p}"),
+            StorageError::NoSpace(b) => write!(f, "no storage node has {b} bytes free"),
+            StorageError::Invalid(m) => write!(f, "invalid argument: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StorageError {}
 
 #[cfg(test)]
 mod tests {

@@ -11,11 +11,17 @@ use std::fmt;
 /// A JSON value. Object keys are sorted (BTreeMap) for stable output.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (all JSON numbers are f64 here).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with sorted keys.
     Obj(BTreeMap<String, Json>),
 }
 

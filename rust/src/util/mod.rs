@@ -1,8 +1,8 @@
-//! In-tree substrates. This build is fully offline (only the crates
-//! vendored for the `xla` bridge are available), so the small library
-//! pieces a project would normally pull from crates.io — deterministic
-//! RNG, statistics, a CLI parser, a JSON emitter, table rendering, a
-//! property-testing harness — are implemented here.
+//! In-tree substrates. This build is fully offline (no crates.io
+//! access), so the small library pieces a project would normally pull
+//! from crates.io — deterministic RNG, statistics, a CLI parser, a JSON
+//! emitter, table rendering, a property-testing harness — are
+//! implemented here.
 
 pub mod cli;
 pub mod json;

@@ -23,7 +23,9 @@ pub enum Tier {
 /// One file read performed by a task.
 #[derive(Debug, Clone)]
 pub struct ReadSpec {
+    /// File path read.
     pub path: String,
+    /// Tier the read is served from.
     pub tier: Tier,
     /// Byte range; `None` reads the whole file (scatter readers use
     /// disjoint ranges).
@@ -33,8 +35,11 @@ pub struct ReadSpec {
 /// One file write performed by a task.
 #[derive(Debug, Clone)]
 pub struct WriteSpec {
+    /// File path written.
     pub path: String,
+    /// Tier the write lands on.
     pub tier: Tier,
+    /// Bytes written.
     pub size: u64,
     /// Cross-layer hints the runtime attaches to this output.
     pub tags: TagSet,
@@ -118,6 +123,7 @@ impl TaskSpec {
 /// A whole workflow.
 #[derive(Debug, Clone, Default)]
 pub struct Workflow {
+    /// Tasks, indexed by id.
     pub tasks: Vec<TaskSpec>,
     /// Files resident on the backend before the run (stage-in sources).
     pub backend_preload: Vec<(String, u64)>,

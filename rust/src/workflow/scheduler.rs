@@ -14,6 +14,7 @@ use crate::workflow::dag::{ReadSpec, TaskSpec, Tier};
 /// The engine's per-node view offered to schedulers.
 #[derive(Debug, Clone)]
 pub struct NodeView {
+    /// The node this view describes.
     pub node: NodeId,
     /// When the node's cores are estimated to be next free.
     pub next_free: SimTime,
@@ -56,6 +57,7 @@ pub struct LeastLoaded {
 }
 
 impl LeastLoaded {
+    /// Fresh scheduler with the rotation cursor at zero.
     pub fn new() -> Self {
         LeastLoaded { cursor: 0 }
     }
@@ -105,6 +107,8 @@ pub struct LocationAware {
 }
 
 impl LocationAware {
+    /// Scheduler with the paper's naïve defaults (queue budget 4,
+    /// 8 MB gravity floor).
     pub fn new() -> Self {
         LocationAware {
             fallback: LeastLoaded::new(),
@@ -194,6 +198,7 @@ pub struct ProbeLocation {
 }
 
 impl ProbeLocation {
+    /// Fresh probe scheduler.
     pub fn new() -> Self {
         ProbeLocation {
             inner: LeastLoaded::new(),

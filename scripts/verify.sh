@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 verification plus the documentation gate, in one command:
+#   scripts/verify.sh
+# Runs from any working directory.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo doc --no-deps (missing_docs must be clean) =="
+doc_log="$(mktemp)"
+if ! cargo doc --no-deps 2>&1 | tee "$doc_log"; then
+    rm -f "$doc_log"
+    exit 1
+fi
+if grep -E "missing documentation" "$doc_log" >/dev/null; then
+    echo "error: cargo doc reported missing_docs warnings (see above)" >&2
+    rm -f "$doc_log"
+    exit 1
+fi
+rm -f "$doc_log"
+
+echo "verify.sh: all gates green"
