@@ -46,6 +46,10 @@ fn main() {
     let db = vec![0xDBu8; 2 << 20];
     let tags = TagSet::from_pairs([("Replication", "4"), ("RepSmntc", "optimistic")]);
     store.write_file(NodeId(0), "/blast/db", &db, &tags).unwrap();
+    // Optimistic semantics returned after the primary copy; the barrier
+    // waits for the background pool so the locality numbers below are
+    // deterministic.
+    store.flush_replication();
     println!(
         "   2 MB database written with Replication=4 -> holders {:?}",
         store.locations("/blast/db")

@@ -1,0 +1,11 @@
+//! `cargo bench` target for the live-store concurrency sweep: read and
+//! tagged-write throughput vs lock-stripe count × thread count, plus
+//! optimistic-vs-pessimistic write latency. See
+//! rust/src/bench/experiments.rs for the driver.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+fn main() {
+    bench_common::bench_experiment("live_throughput");
+}

@@ -34,6 +34,23 @@ pub struct PlacementState {
     pub groups: BTreeMap<String, NodeId>,
 }
 
+/// Which of `shards` namespace shards owns `path` (FNV-1a over the path
+/// bytes). Both metadata layers route by this function — the simulated
+/// [`Manager`](crate::storage::Manager) and the live store's lock
+/// stripes — so a path's shard is stable across the whole stack.
+/// `shards` is clamped to ≥ 1.
+pub fn shard_for_path(path: &str, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in path.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    (h % shards as u64) as usize
+}
+
 /// Placement state for a sharded metadata manager.
 ///
 /// The round-robin cursor is the placement path's only always-written
@@ -294,6 +311,13 @@ impl Registry {
         }
     }
 
+    /// Would [`Registry::get_system_attr`] serve this key? A cheap
+    /// pre-check callers use to avoid assembling the node view (which
+    /// may sit behind a contended lock) for plain user attributes.
+    pub fn serves_attr(&self, key: &str) -> bool {
+        self.hints_enabled && self.getattrs.contains_key(key)
+    }
+
     /// Serve a `getxattr` through the bottom-up providers. `None` means
     /// the attribute is not system-provided (fall through to the plain
     /// xattr store).
@@ -405,6 +429,24 @@ mod tests {
             state: &mut state,
         };
         assert_eq!(reg.place_chunk(&mut ctx, 0, 1024), Some(NodeId(7)));
+    }
+
+    #[test]
+    fn shard_for_path_stable_and_in_range() {
+        assert_eq!(shard_for_path("/any/path", 1), 0);
+        assert_eq!(shard_for_path("/any/path", 0), 0, "clamped to one shard");
+        for shards in [2usize, 4, 8] {
+            for p in ["/a", "/b", "/wf/out17", ""] {
+                let s = shard_for_path(p, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_for_path(p, shards), "routing is stable");
+            }
+        }
+        // The hash actually spreads paths (FNV-1a, not constant).
+        let spread: std::collections::BTreeSet<usize> = (0..64)
+            .map(|i| shard_for_path(&format!("/wf/out{i}"), 8))
+            .collect();
+        assert!(spread.len() >= 4, "64 paths landed on {} shards", spread.len());
     }
 
     #[test]

@@ -94,6 +94,12 @@ impl PlacementPolicy for ScatterPlacement {
             Some(Hint::PlacementScatter(n)) => n,
             _ => return None,
         };
+        // `scatter 0` parses as `Hint::Malformed` and never reaches this
+        // module; the guard keeps the modulo safe even against a caller
+        // constructing the hint directly.
+        if group_size == 0 {
+            return None;
+        }
         let n = ctx.nodes.len() as u64;
         if n == 0 {
             return None;
@@ -209,6 +215,17 @@ mod tests {
             .collect();
         // groups of 2 chunks, round-robin over nodes 1,2,3
         assert_eq!(places, vec![1, 1, 2, 2, 3, 3, 1, 1]);
+    }
+
+    #[test]
+    fn scatter_zero_stride_declines() {
+        // `scatter 0` is malformed; the module must decline (default
+        // striping applies) rather than divide by a zero stride.
+        let tags = TagSet::from_pairs([("DP", "scatter 0")]);
+        let ns = nodes(3);
+        let mut st = PlacementState::default();
+        let mut c = ctx(NodeId(1), &tags, &ns, &mut st);
+        assert_eq!(ScatterPlacement.place(&mut c, 0, 100), None);
     }
 
     #[test]

@@ -100,8 +100,8 @@ pub fn parse(key: &str, value: &str) -> Hint {
             _ => malformed(key, value),
         },
         keys::CACHE_SIZE => match parse_size(value) {
-            Some(n) => Hint::CacheSize(n),
-            None => malformed(key, value),
+            Some(n) if n >= 1 => Hint::CacheSize(n),
+            _ => malformed(key, value),
         },
         keys::BLOCK_SIZE => match parse_size(value) {
             Some(n) if n >= 1 => Hint::BlockSize(n),
@@ -148,7 +148,9 @@ fn strip_word<'a>(v: &'a str, word: &str) -> Option<&'a str> {
     None
 }
 
-/// Parse sizes like `4096`, `64K`, `1M`, `2G`.
+/// Parse sizes like `4096`, `64K`, `1M`, `2G`. Values whose scaled size
+/// does not fit in `u64` are rejected (a malformed hint must degrade to
+/// [`Hint::Malformed`], never panic the manager).
 fn parse_size(v: &str) -> Option<u64> {
     let v = v.trim();
     if v.is_empty() {
@@ -160,7 +162,11 @@ fn parse_size(v: &str) -> Option<u64> {
         b'G' => (&v[..v.len() - 1], 1024 * 1024 * 1024),
         _ => (v, 1),
     };
-    digits.trim().parse::<u64>().ok().map(|n| n * mult)
+    digits
+        .trim()
+        .parse::<u64>()
+        .ok()
+        .and_then(|n| n.checked_mul(mult))
 }
 
 fn malformed(key: &str, value: &str) -> Hint {
@@ -233,6 +239,39 @@ mod tests {
         assert_eq!(parse("BlockSize", "64K"), Hint::BlockSize(65536));
         assert_eq!(parse("BlockSize", "1M"), Hint::BlockSize(1 << 20));
         assert!(matches!(parse("BlockSize", "0"), Hint::Malformed { .. }));
+    }
+
+    /// Zero-valued hints are nonsense the data path must never see: a
+    /// zero scatter stride would feed a modulo, a zero replication
+    /// factor would mean "store nothing", a zero block size would make
+    /// chunking diverge. Each parses to `Malformed` (hints, not
+    /// directives) so the dispatcher falls back to defaults.
+    #[test]
+    fn zero_values_malformed_for_every_key() {
+        assert!(matches!(parse("DP", "scatter 0"), Hint::Malformed { .. }));
+        assert!(matches!(parse("Replication", "0"), Hint::Malformed { .. }));
+        assert!(matches!(parse("BlockSize", "0"), Hint::Malformed { .. }));
+        assert!(matches!(parse("CacheSize", "0"), Hint::Malformed { .. }));
+        assert!(matches!(parse("CacheSize", "0K"), Hint::Malformed { .. }));
+    }
+
+    /// A size whose scaled value overflows `u64` is malformed, not a
+    /// panic: hostile or buggy tag values must never crash the manager.
+    #[test]
+    fn size_overflow_is_malformed_not_panic() {
+        assert!(matches!(
+            parse("BlockSize", "18446744073709551615K"),
+            Hint::Malformed { .. }
+        ));
+        assert!(matches!(
+            parse("CacheSize", "99999999999999999G"),
+            Hint::Malformed { .. }
+        ));
+        // The largest representable size still parses.
+        assert_eq!(
+            parse("BlockSize", "18446744073709551615"),
+            Hint::BlockSize(u64::MAX)
+        );
     }
 
     #[test]

@@ -41,6 +41,10 @@ pub struct LiveReport {
     pub local_reads: u64,
     /// Chunk reads served remotely.
     pub remote_reads: u64,
+    /// Replica chunk copies drained by the background replication pool
+    /// (optimistic `RepSmntc`); the run flushes before reporting, so
+    /// every deferred copy has landed by the time this is read.
+    pub bg_replicas: u64,
     /// Kernel executions by artifact name.
     pub kernel_execs: BTreeMap<String, u64>,
     /// Fingerprint of every produced file (path → checksum of first
@@ -185,6 +189,11 @@ impl LiveEngine {
         if let Some(err) = st.failed {
             return Err(anyhow!(err));
         }
+        // Replication barrier: optimistic writes returned after their
+        // primary copy; a completed run leaves every file at its full
+        // replica count (and the makespan pays for it, keeping the
+        // optimistic-vs-pessimistic comparison honest).
+        self.store.flush_replication();
         let rt = self.runtime.0.lock().unwrap();
         let kernel_execs = runtime::ARTIFACTS
             .iter()
@@ -197,6 +206,7 @@ impl LiveEngine {
             bytes_read: self.store.bytes_read.load(Ordering::Relaxed),
             local_reads: self.store.local_reads.load(Ordering::Relaxed),
             remote_reads: self.store.remote_reads.load(Ordering::Relaxed),
+            bg_replicas: self.store.background_copies(),
             kernel_execs,
             fingerprints: fingerprints.into_inner().unwrap(),
         })

@@ -9,9 +9,17 @@
 //! (`crate::runtime`). `examples/montage_e2e.rs` drives it on a
 //! real workload and verifies data integrity end to end with the
 //! checksum kernel.
+//!
+//! The store's hot path is built to scale with cores: the namespace is
+//! lock-striped ([`store::LiveTuning::stripes`]), per-node chunk stores
+//! take shared read locks, and optimistic replication drains through a
+//! background worker pool behind the
+//! [`store::LiveStore::flush_replication`] barrier. The
+//! `live_throughput` bench sweeps reader/writer thread counts against
+//! stripe counts.
 
 pub mod engine;
 pub mod store;
 
 pub use engine::{LiveEngine, LiveReport};
-pub use store::LiveStore;
+pub use store::{LiveStore, LiveTuning};

@@ -5,36 +5,262 @@
 //! `location` attribute all run the identical decision logic — only
 //! here the chunks are actual `Vec<u8>` held in per-node stores and the
 //! callers are concurrent worker threads.
+//!
+//! # Concurrency layout
+//!
+//! The manager side is **lock-striped**: the namespace splits into
+//! [`LiveTuning::stripes`] shards keyed by file-path hash
+//! ([`crate::dispatch::shard_for_path`], the same routing the simulated
+//! sharded manager uses), so metadata operations on unrelated files
+//! never contend. Placement state (node usage + round-robin cursors +
+//! collocation anchors) lives behind one short-critical-section lock,
+//! with per-stripe cursors and global anchors provided by the existing
+//! [`ShardedPlacementState`]. Per-node chunk stores are `RwLock`s:
+//! concurrent readers of the same node never block each other, and the
+//! data-path byte copies run outside every manager lock.
+//!
+//! Replication honors the paper's `RepSmntc` semantics for real:
+//! **pessimistic** writes return only after every replica holds the
+//! bytes, while **optimistic** writes (the Table 3 default) return
+//! after the primary copy and drain the remaining replicas through a
+//! small background worker pool. [`LiveStore::flush_replication`] is
+//! the barrier that makes shutdown and tests deterministic; dropping
+//! the store drains the queue before joining the workers.
+//!
+//! Visibility contract: a file is readable with its full byte content
+//! as soon as [`LiveStore::write_file`] returns (the primary copy is
+//! synchronous); reads racing an in-progress create may transiently
+//! fail, exactly as with the previous single-lock store. While
+//! optimistic replicas are still draining, reads transparently fall
+//! back to a holder that has materialized the chunk.
 
-use crate::dispatch::{PlacementCtx, PlacementState, Registry};
+use crate::dispatch::{shard_for_path, PlacementCtx, Registry, ShardedPlacementState};
 use crate::hints::TagSet;
 use crate::storage::types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 /// Default chunk size for the live store (256 KiB = one kernel tile).
 pub const LIVE_CHUNK: u64 = 256 * 1024;
 
-/// One storage node's chunk store.
-#[derive(Default)]
-struct NodeStore {
-    chunks: Mutex<HashMap<(FileId, u64), Vec<u8>>>,
+/// Concurrency tuning for a [`LiveStore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiveTuning {
+    /// Namespace lock stripes. `1` reproduces the previous single-lock
+    /// manager behaviour; values are clamped to ≥ 1.
+    pub stripes: usize,
+    /// Background replication worker threads (optimistic `RepSmntc`);
+    /// clamped to ≥ 1.
+    pub repl_workers: usize,
 }
 
-/// Manager-side state (namespace + placement), one lock.
-struct ManagerState {
+impl Default for LiveTuning {
+    fn default() -> Self {
+        LiveTuning {
+            stripes: 8,
+            repl_workers: 2,
+        }
+    }
+}
+
+/// One storage node's chunk store. Readers share the lock.
+#[derive(Default)]
+struct NodeStore {
+    chunks: RwLock<HashMap<(FileId, u64), Vec<u8>>>,
+}
+
+/// One namespace stripe: the files (and pre-creation tags) whose path
+/// hashes here.
+#[derive(Default)]
+struct NamespaceShard {
     files: HashMap<String, FileMeta>,
+    /// Tags set before file creation (the runtime tags outputs ahead of
+    /// execution); merged into the file at create time.
+    pending_tags: HashMap<String, TagSet>,
+}
+
+/// Shared placement state: node usage plus the sharded cursor/anchor
+/// state. Critical sections here are decision-sized (no byte copies).
+struct PlacementCore {
     nodes: Vec<NodeState>,
-    placement: PlacementState,
-    next_id: u64,
+    placement: ShardedPlacementState,
+}
+
+/// One background replication job: copy a chunk's payload to the
+/// remaining replica holders.
+struct ReplJob {
+    file: FileId,
+    chunk: u64,
+    payload: Arc<Vec<u8>>,
+    targets: Vec<NodeId>,
+}
+
+/// Backpressure bound: at most this many queued jobs per worker. Each
+/// queued job holds one extra heap copy of its chunk payload, so an
+/// unbounded queue would let optimistic writers that outpace the pool
+/// grow memory without limit; past the bound, `enqueue` blocks the
+/// writer until a worker pops — degrading toward pessimistic latency
+/// instead of toward OOM.
+const MAX_QUEUED_JOBS_PER_WORKER: usize = 64;
+
+/// Queue state guarded by the pool mutex.
+struct ReplQueue {
+    jobs: VecDeque<ReplJob>,
+    /// In-flight job count per file — lets `delete` wait out exactly the
+    /// copies that could resurrect its chunks.
+    in_flight: HashMap<FileId, usize>,
+    shutdown: bool,
+}
+
+/// State shared between the store and its replication workers.
+struct ReplShared {
+    queue: Mutex<ReplQueue>,
+    /// Signaled when work arrives or shutdown flips.
+    work: Condvar,
+    /// Signaled when a job completes (flush / cancel barriers re-check).
+    drained: Condvar,
+    stores: Arc<Vec<NodeStore>>,
+    /// Replica chunk copies completed in the background.
+    copied: AtomicU64,
+}
+
+/// The background replication worker pool.
+struct ReplPool {
+    shared: Arc<ReplShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Queued-job bound (workers × [`MAX_QUEUED_JOBS_PER_WORKER`]).
+    cap: usize,
+}
+
+impl ReplPool {
+    fn new(stores: Arc<Vec<NodeStore>>, workers: usize) -> Self {
+        let shared = Arc::new(ReplShared {
+            queue: Mutex::new(ReplQueue {
+                jobs: VecDeque::new(),
+                in_flight: HashMap::new(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            drained: Condvar::new(),
+            stores,
+            copied: AtomicU64::new(0),
+        });
+        let n_workers = workers.max(1);
+        let workers = (0..n_workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("woss-repl-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn replication worker")
+            })
+            .collect();
+        ReplPool {
+            shared,
+            workers,
+            cap: n_workers * MAX_QUEUED_JOBS_PER_WORKER,
+        }
+    }
+
+    /// Queue a copy job; blocks (backpressure) while the queue is at
+    /// capacity, so writers cannot outrun the pool without bound.
+    fn enqueue(&self, job: ReplJob) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while q.jobs.len() >= self.cap {
+            q = self.shared.drained.wait(q).unwrap();
+        }
+        q.jobs.push_back(job);
+        drop(q);
+        self.shared.work.notify_one();
+    }
+
+    /// Block until every queued and in-flight copy has landed.
+    fn flush(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !(q.jobs.is_empty() && q.in_flight.is_empty()) {
+            q = self.shared.drained.wait(q).unwrap();
+        }
+    }
+
+    /// Drop queued jobs for `file` and wait out its in-flight copies,
+    /// so a subsequent chunk sweep cannot be resurrected by a straggler.
+    fn cancel_file(&self, file: FileId) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.retain(|j| j.file != file);
+        while q.in_flight.contains_key(&file) {
+            q = self.shared.drained.wait(q).unwrap();
+        }
+    }
+
+    /// Queued + in-flight copy jobs (diagnostics).
+    fn pending(&self) -> usize {
+        let q = self.shared.queue.lock().unwrap();
+        q.jobs.len() + q.in_flight.values().sum::<usize>()
+    }
+}
+
+impl Drop for ReplPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker body: drain jobs (even after shutdown flips — shutdown means
+/// "no new work", not "drop queued replicas"), then exit.
+fn worker_loop(shared: &ReplShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    *q.in_flight.entry(job.file).or_insert(0) += 1;
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        // A slot just freed: wake any writer blocked on backpressure
+        // (flush/cancel waiters re-check their conditions and re-sleep).
+        shared.drained.notify_all();
+        for &target in &job.targets {
+            shared.stores[target.0]
+                .chunks
+                .write()
+                .unwrap()
+                .insert((job.file, job.chunk), job.payload.as_ref().clone());
+            shared.copied.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut q = shared.queue.lock().unwrap();
+        if let Some(n) = q.in_flight.get_mut(&job.file) {
+            *n -= 1;
+            if *n == 0 {
+                q.in_flight.remove(&job.file);
+            }
+        }
+        drop(q);
+        shared.drained.notify_all();
+    }
 }
 
 /// The live object store.
 pub struct LiveStore {
     registry: Registry,
-    manager: Mutex<ManagerState>,
-    stores: Vec<NodeStore>,
+    stripes: Vec<Mutex<NamespaceShard>>,
+    core: Mutex<PlacementCore>,
+    stores: Arc<Vec<NodeStore>>,
+    next_id: AtomicU64,
+    repl: ReplPool,
     /// Bytes written through [`LiveStore::write_file`] (lock-free counter).
     pub bytes_written: AtomicU64,
     /// Bytes returned by [`LiveStore::read_file`].
@@ -47,19 +273,36 @@ pub struct LiveStore {
     pub setattr_ops: AtomicU64,
     /// `get-attribute` operations (bottom-up channel traffic).
     pub getattr_ops: AtomicU64,
-    /// Pending tags set before file creation.
-    pending_tags: RwLock<HashMap<String, TagSet>>,
+    /// Replica chunk copies handed to the background pool (optimistic
+    /// `RepSmntc` writes).
+    pub replicas_deferred: AtomicU64,
     /// Failure injection: nodes marked dead serve nothing.
     dead: RwLock<Vec<bool>>,
 }
 
 impl LiveStore {
-    /// A deployment over `n_nodes` stores with `capacity` bytes each.
+    /// A deployment over `n_nodes` stores with `capacity` bytes each and
+    /// default [`LiveTuning`].
     pub fn new(registry: Registry, n_nodes: usize, capacity: u64) -> Self {
+        LiveStore::with_tuning(registry, n_nodes, capacity, LiveTuning::default())
+    }
+
+    /// A deployment with explicit concurrency tuning.
+    pub fn with_tuning(
+        registry: Registry,
+        n_nodes: usize,
+        capacity: u64,
+        tuning: LiveTuning,
+    ) -> Self {
+        let stores: Arc<Vec<NodeStore>> =
+            Arc::new((0..n_nodes).map(|_| NodeStore::default()).collect());
+        let n_stripes = tuning.stripes.max(1);
         LiveStore {
             registry,
-            manager: Mutex::new(ManagerState {
-                files: HashMap::new(),
+            stripes: (0..n_stripes)
+                .map(|_| Mutex::new(NamespaceShard::default()))
+                .collect(),
+            core: Mutex::new(PlacementCore {
                 nodes: (0..n_nodes)
                     .map(|i| NodeState {
                         node: NodeId(i),
@@ -67,19 +310,70 @@ impl LiveStore {
                         used: 0,
                     })
                     .collect(),
-                placement: PlacementState::default(),
-                next_id: 1,
+                placement: ShardedPlacementState::new(n_stripes),
             }),
-            stores: (0..n_nodes).map(|_| NodeStore::default()).collect(),
+            stores: Arc::clone(&stores),
+            next_id: AtomicU64::new(1),
+            repl: ReplPool::new(stores, tuning.repl_workers),
             bytes_written: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
             local_reads: AtomicU64::new(0),
             remote_reads: AtomicU64::new(0),
             setattr_ops: AtomicU64::new(0),
             getattr_ops: AtomicU64::new(0),
-            pending_tags: RwLock::new(HashMap::new()),
+            replicas_deferred: AtomicU64::new(0),
             dead: RwLock::new(vec![false; n_nodes]),
         }
+    }
+
+    /// WOSS deployment (full hint registry, default tuning).
+    pub fn woss(n_nodes: usize) -> Self {
+        LiveStore::new(Registry::woss(), n_nodes, u64::MAX / 2)
+    }
+
+    /// WOSS deployment with explicit stripe / worker counts.
+    pub fn woss_tuned(n_nodes: usize, stripes: usize, repl_workers: usize) -> Self {
+        LiveStore::with_tuning(
+            Registry::woss(),
+            n_nodes,
+            u64::MAX / 2,
+            LiveTuning {
+                stripes,
+                repl_workers,
+            },
+        )
+    }
+
+    /// DSS baseline deployment (default tuning).
+    pub fn dss(n_nodes: usize) -> Self {
+        LiveStore::new(Registry::baseline(), n_nodes, u64::MAX / 2)
+    }
+
+    /// DSS baseline deployment with explicit stripe / worker counts.
+    pub fn dss_tuned(n_nodes: usize, stripes: usize, repl_workers: usize) -> Self {
+        LiveStore::with_tuning(
+            Registry::baseline(),
+            n_nodes,
+            u64::MAX / 2,
+            LiveTuning {
+                stripes,
+                repl_workers,
+            },
+        )
+    }
+
+    /// Number of storage nodes.
+    pub fn n_nodes(&self) -> usize {
+        self.stores.len()
+    }
+
+    /// Number of namespace lock stripes.
+    pub fn stripe_count(&self) -> usize {
+        self.stripes.len()
+    }
+
+    fn stripe_of(&self, path: &str) -> usize {
+        shard_for_path(path, self.stripes.len())
     }
 
     /// Failure injection: mark a node dead. Chunks it held are only
@@ -99,48 +393,82 @@ impl LiveStore {
         !self.dead.read().unwrap()[node.0]
     }
 
-    /// WOSS deployment (full hint registry).
-    pub fn woss(n_nodes: usize) -> Self {
-        LiveStore::new(Registry::woss(), n_nodes, u64::MAX / 2)
+    /// Barrier: block until every background replica copy has landed.
+    /// After this returns (and absent concurrent writes), every file
+    /// holds its full replica count — the determinism hook tests and
+    /// shutdown paths rely on.
+    pub fn flush_replication(&self) {
+        self.repl.flush();
     }
 
-    /// DSS baseline deployment.
-    pub fn dss(n_nodes: usize) -> Self {
-        LiveStore::new(Registry::baseline(), n_nodes, u64::MAX / 2)
+    /// Replica chunk copies completed by the background pool so far.
+    pub fn background_copies(&self) -> u64 {
+        self.repl.shared.copied.load(Ordering::Relaxed)
     }
 
-    /// Number of storage nodes.
-    pub fn n_nodes(&self) -> usize {
-        self.stores.len()
+    /// Queued + in-flight background replication jobs (diagnostics).
+    pub fn pending_replication(&self) -> usize {
+        self.repl.pending()
+    }
+
+    /// Does every replica holder of every chunk of `path` hold the
+    /// chunk's bytes right now? (`false` while optimistic replication
+    /// is still draining; always `true` after [`Self::flush_replication`].)
+    pub fn fully_replicated(&self, path: &str) -> Result<bool, StorageError> {
+        let meta = {
+            let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            stripe
+                .files
+                .get(path)
+                .cloned()
+                .ok_or_else(|| StorageError::NotFound(path.to_string()))?
+        };
+        for (idx, chunk) in meta.chunks.iter().enumerate() {
+            for holder in &chunk.replicas {
+                let present = self.stores[holder.0]
+                    .chunks
+                    .read()
+                    .unwrap()
+                    .contains_key(&(meta.id, idx as u64));
+                if !present {
+                    return Ok(false);
+                }
+            }
+        }
+        Ok(true)
     }
 
     /// Set an extended attribute (top-down channel). Works before the
     /// file exists — the runtime tags outputs ahead of execution.
     pub fn set_xattr(&self, path: &str, key: &str, value: &str) {
         self.setattr_ops.fetch_add(1, Ordering::Relaxed);
-        let mut mgr = self.manager.lock().unwrap();
-        if let Some(meta) = mgr.files.get_mut(path) {
+        let mut stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+        if let Some(meta) = stripe.files.get_mut(path) {
             meta.tags.set(key, value);
             return;
         }
-        drop(mgr);
-        self.pending_tags
-            .write()
-            .unwrap()
+        stripe
+            .pending_tags
             .entry(path.to_string())
             .or_default()
             .set(key, value);
     }
 
     /// Get an extended attribute (bottom-up channel): system-reserved
-    /// attributes are served by the registry's providers.
+    /// attributes are served by the registry's providers. Plain user
+    /// tags never touch the shared placement core, so getattr traffic
+    /// on unrelated files scales with the stripes.
     pub fn get_xattr(&self, path: &str, key: &str) -> Option<String> {
         self.getattr_ops.fetch_add(1, Ordering::Relaxed);
-        let mgr = self.manager.lock().unwrap();
-        let meta = mgr.files.get(path)?;
-        self.registry
-            .get_system_attr(key, meta, &mgr.nodes)
-            .or_else(|| meta.tags.get(key).map(str::to_string))
+        let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+        let meta = stripe.files.get(path)?;
+        if self.registry.serves_attr(key) {
+            let core = self.core.lock().unwrap();
+            if let Some(value) = self.registry.get_system_attr(key, meta, &core.nodes) {
+                return Some(value);
+            }
+        }
+        meta.tags.get(key).map(str::to_string)
     }
 
     /// Replica holders (decision-time view for the scheduler).
@@ -148,17 +476,24 @@ impl LiveStore {
         if !self.registry.hints_enabled() {
             return Vec::new();
         }
-        let mgr = self.manager.lock().unwrap();
-        mgr.files.get(path).map(|m| m.holders()).unwrap_or_default()
+        let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+        stripe
+            .files
+            .get(path)
+            .map(|m| m.holders())
+            .unwrap_or_default()
     }
 
     /// Stored size of a file.
     pub fn file_size(&self, path: &str) -> Option<u64> {
-        self.manager.lock().unwrap().files.get(path).map(|m| m.size)
+        let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+        stripe.files.get(path).map(|m| m.size)
     }
 
     /// Create + write a file from `client`, dispatching placement
-    /// through the registry (pending tags merge in).
+    /// through the registry (pending tags merge in). Returns once the
+    /// file is durable per its `RepSmntc` semantics: pessimistic waits
+    /// for every replica, optimistic (the default) for the primary copy.
     pub fn write_file(
         &self,
         client: NodeId,
@@ -166,118 +501,176 @@ impl LiveStore {
         data: &[u8],
         tags: &TagSet,
     ) -> Result<(), StorageError> {
-        let mut all_tags = self
-            .pending_tags
-            .write()
-            .unwrap()
-            .remove(path)
-            .unwrap_or_default();
+        let stripe_idx = self.stripe_of(path);
+        let mut stripe = self.stripes[stripe_idx].lock().unwrap();
+        if stripe.files.contains_key(path) {
+            return Err(StorageError::AlreadyExists(path.to_string()));
+        }
+        let mut all_tags = stripe.pending_tags.remove(path).unwrap_or_default();
         for (k, v) in tags.iter() {
             all_tags.set(k, v);
         }
+        let size = data.len() as u64;
+        let chunk_size = all_tags.block_size().unwrap_or(LIVE_CHUNK);
+        let n_chunks = FileMeta::chunk_count(size, chunk_size);
+        let factor = self.registry.replication_factor(&all_tags);
+        let blocking = factor > 1 && self.registry.replication().blocking(&all_tags);
 
-        // Placement decisions under the manager lock.
-        let (meta, placements) = {
-            let mut mgr = self.manager.lock().unwrap();
-            if mgr.files.contains_key(path) {
-                return Err(StorageError::AlreadyExists(path.to_string()));
-            }
-            let chunk_size = all_tags.block_size().unwrap_or(LIVE_CHUNK);
-            let n_chunks = FileMeta::chunk_count(data.len() as u64, chunk_size);
-            let factor = self.registry.replication_factor(&all_tags);
-            let mut chunks = Vec::with_capacity(n_chunks as usize);
-            let mut placements = Vec::with_capacity(n_chunks as usize);
-            for idx in 0..n_chunks {
-                let lo = (idx * chunk_size) as usize;
-                let hi = ((idx + 1) * chunk_size).min(data.len() as u64) as usize;
-                let bytes = (hi - lo) as u64;
-                let ManagerState {
-                    ref nodes,
-                    ref mut placement,
-                    ..
-                } = *mgr;
-                let mut ctx = PlacementCtx {
-                    client,
-                    tags: &all_tags,
-                    nodes,
-                    state: placement,
-                };
-                let primary = self
-                    .registry
-                    .place_chunk(&mut ctx, idx, bytes)
-                    .ok_or(StorageError::NoSpace(bytes))?;
-                let replicas = if factor > 1 {
-                    let ManagerState {
-                        ref nodes,
-                        ref mut placement,
-                        ..
-                    } = *mgr;
-                    let mut rctx = PlacementCtx {
-                        client,
-                        tags: &all_tags,
-                        nodes,
-                        state: placement,
-                    };
-                    self.registry
-                        .replication()
-                        .replica_targets(&mut rctx, primary, factor, bytes)
-                } else {
-                    Vec::new()
-                };
-                let mut all = vec![primary];
-                all.extend(replicas.iter().copied());
-                for holder in &all {
-                    if let Some(n) = mgr.nodes.iter_mut().find(|n| n.node == *holder) {
-                        n.used += bytes;
+        // Placement decisions: a short critical section on the shared
+        // core (node usage + cursors); the stripe keeps its own
+        // round-robin cursor, collocation anchors stay global.
+        let chunks = {
+            let mut core = self.core.lock().unwrap();
+            let PlacementCore { nodes, placement } = &mut *core;
+            let registry = &self.registry;
+            placement.with_view(stripe_idx, |state| {
+                let mut chunks: Vec<ChunkMeta> = Vec::with_capacity(n_chunks as usize);
+                let failed = 'place: {
+                    for idx in 0..n_chunks {
+                        let (lo, hi) = FileMeta::chunk_span(size, chunk_size, idx);
+                        let bytes = hi - lo;
+                        let primary = {
+                            let mut ctx = PlacementCtx {
+                                client,
+                                tags: &all_tags,
+                                nodes: &*nodes,
+                                state: &mut *state,
+                            };
+                            match registry.place_chunk(&mut ctx, idx, bytes) {
+                                Some(node) => node,
+                                None => break 'place Some(StorageError::NoSpace(bytes)),
+                            }
+                        };
+                        let replicas = if factor > 1 {
+                            let mut rctx = PlacementCtx {
+                                client,
+                                tags: &all_tags,
+                                nodes: &*nodes,
+                                state: &mut *state,
+                            };
+                            registry
+                                .replication()
+                                .replica_targets(&mut rctx, primary, factor, bytes)
+                        } else {
+                            Vec::new()
+                        };
+                        let mut all = vec![primary];
+                        all.extend(replicas);
+                        for holder in &all {
+                            if let Some(n) = nodes.iter_mut().find(|n| n.node == *holder) {
+                                n.used += bytes;
+                            }
+                        }
+                        chunks.push(ChunkMeta { replicas: all });
                     }
+                    None
+                };
+                if let Some(err) = failed {
+                    // Roll back usage committed by already-placed chunks
+                    // so a failed create leaks no capacity.
+                    for (idx, chunk) in chunks.iter().enumerate() {
+                        let (lo, hi) = FileMeta::chunk_span(size, chunk_size, idx as u64);
+                        for holder in &chunk.replicas {
+                            if let Some(n) = nodes.iter_mut().find(|n| n.node == *holder) {
+                                n.used = n.used.saturating_sub(hi - lo);
+                            }
+                        }
+                    }
+                    return Err(err);
                 }
-                chunks.push(ChunkMeta { replicas: all });
-                placements.push((idx, lo, hi));
-            }
-            let id = FileId(mgr.next_id);
-            mgr.next_id += 1;
-            let meta = FileMeta {
-                id,
-                size: data.len() as u64,
-                chunk_size,
-                tags: all_tags,
-                chunks,
-                creator: client,
-            };
-            mgr.files.insert(path.to_string(), meta.clone());
-            (meta, placements)
+                Ok(chunks)
+            })?
         };
 
-        // Data path outside the manager lock: copy bytes to each holder.
-        for (idx, lo, hi) in placements {
-            let payload = &data[lo..hi];
-            for holder in &meta.chunks[idx as usize].replicas {
-                self.stores[holder.0]
-                    .chunks
-                    .lock()
-                    .unwrap()
-                    .insert((meta.id, idx), payload.to_vec());
+        let meta = FileMeta {
+            id: FileId(self.next_id.fetch_add(1, Ordering::Relaxed)),
+            size,
+            chunk_size,
+            tags: all_tags,
+            chunks,
+            creator: client,
+        };
+        stripe.files.insert(path.to_string(), meta.clone());
+        drop(stripe);
+
+        // Data path outside every manager lock: the primary copy lands
+        // synchronously; replicas follow per the file's semantics.
+        for (idx, chunk) in meta.chunks.iter().enumerate() {
+            let idx = idx as u64;
+            let (lo, hi) = FileMeta::chunk_span(meta.size, meta.chunk_size, idx);
+            let payload = &data[lo as usize..hi as usize];
+            let key = (meta.id, idx);
+            self.stores[chunk.primary().0]
+                .chunks
+                .write()
+                .unwrap()
+                .insert(key, payload.to_vec());
+            let replicas = &chunk.replicas[1..];
+            if replicas.is_empty() {
+                continue;
+            }
+            if blocking {
+                for holder in replicas {
+                    self.stores[holder.0]
+                        .chunks
+                        .write()
+                        .unwrap()
+                        .insert(key, payload.to_vec());
+                }
+            } else {
+                self.replicas_deferred
+                    .fetch_add(replicas.len() as u64, Ordering::Relaxed);
+                self.repl.enqueue(ReplJob {
+                    file: meta.id,
+                    chunk: idx,
+                    payload: Arc::new(payload.to_vec()),
+                    targets: replicas.to_vec(),
+                });
             }
         }
-        self.bytes_written
-            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        // A delete racing this create could have removed the meta while
+        // the copies above were still landing — it would have found no
+        // queued jobs to cancel. Re-check and sweep our own bytes so the
+        // race cannot orphan chunks (an id check, so a file re-created
+        // at this path after the delete is left untouched).
+        let raced_delete = {
+            let stripe = self.stripes[stripe_idx].lock().unwrap();
+            stripe.files.get(path).map(|m| m.id) != Some(meta.id)
+        };
+        if raced_delete {
+            self.repl.cancel_file(meta.id);
+            for (idx, chunk) in meta.chunks.iter().enumerate() {
+                for holder in &chunk.replicas {
+                    self.stores[holder.0]
+                        .chunks
+                        .write()
+                        .unwrap()
+                        .remove(&(meta.id, idx as u64));
+                }
+            }
+        }
+        self.bytes_written.fetch_add(size, Ordering::Relaxed);
         Ok(())
     }
 
     /// Read a whole file into a buffer from `client`'s perspective
-    /// (locality counted per chunk).
+    /// (locality counted per chunk). Prefers the reader's own store,
+    /// then any live holder that has materialized the chunk — so reads
+    /// stay correct while optimistic replication is still draining.
     pub fn read_file(&self, client: NodeId, path: &str) -> Result<Vec<u8>, StorageError> {
         let meta = {
-            let mgr = self.manager.lock().unwrap();
-            mgr.files
+            let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            stripe
+                .files
                 .get(path)
                 .cloned()
                 .ok_or_else(|| StorageError::NotFound(path.to_string()))?
         };
         let mut out = Vec::with_capacity(meta.size as usize);
         for (idx, chunk) in meta.chunks.iter().enumerate() {
-            // Fail over to the first live replica; error only when every
-            // holder of the chunk is down.
+            let key = (meta.id, idx as u64);
+            // Fail over to a live replica; error only when every holder
+            // of the chunk is down.
             let live: Vec<NodeId> = chunk
                 .replicas
                 .iter()
@@ -290,46 +683,62 @@ impl LiveStore {
                     chunk.replicas.len()
                 )));
             }
-            let source = if live.contains(&client) {
-                self.local_reads.fetch_add(1, Ordering::Relaxed);
-                client
-            } else {
-                self.remote_reads.fetch_add(1, Ordering::Relaxed);
-                live[0]
-            };
-            let store = self.stores[source.0].chunks.lock().unwrap();
-            let bytes = store
-                .get(&(meta.id, idx as u64))
-                .ok_or_else(|| StorageError::Invalid(format!("missing chunk {idx} of {path}")))?;
-            out.extend_from_slice(bytes);
+            let ordered = std::iter::once(client)
+                .filter(|c| live.contains(c))
+                .chain(live.iter().copied().filter(|&n| n != client));
+            let mut served = false;
+            for source in ordered {
+                let store = self.stores[source.0].chunks.read().unwrap();
+                if let Some(bytes) = store.get(&key) {
+                    out.extend_from_slice(bytes);
+                    if source == client {
+                        self.local_reads.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.remote_reads.fetch_add(1, Ordering::Relaxed);
+                    }
+                    served = true;
+                    break;
+                }
+            }
+            if !served {
+                return Err(StorageError::Invalid(format!(
+                    "missing chunk {idx} of {path}"
+                )));
+            }
         }
-        self.bytes_read.fetch_add(out.len() as u64, Ordering::Relaxed);
+        self.bytes_read
+            .fetch_add(out.len() as u64, Ordering::Relaxed);
         Ok(out)
     }
 
-    /// Delete a file and free its chunks.
+    /// Delete a file and free its chunks. Queued background copies for
+    /// the file are cancelled (and in-flight ones waited out) so a
+    /// straggler cannot resurrect swept chunks.
     pub fn delete(&self, path: &str) -> Result<(), StorageError> {
         let meta = {
-            let mut mgr = self.manager.lock().unwrap();
-            let meta = mgr
+            let mut stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            stripe
                 .files
                 .remove(path)
-                .ok_or_else(|| StorageError::NotFound(path.to_string()))?;
+                .ok_or_else(|| StorageError::NotFound(path.to_string()))?
+        };
+        {
+            let mut core = self.core.lock().unwrap();
             for (idx, chunk) in meta.chunks.iter().enumerate() {
                 let bytes = meta.chunk_bytes(idx as u64);
                 for holder in &chunk.replicas {
-                    if let Some(n) = mgr.nodes.iter_mut().find(|n| n.node == *holder) {
+                    if let Some(n) = core.nodes.iter_mut().find(|n| n.node == *holder) {
                         n.used = n.used.saturating_sub(bytes);
                     }
                 }
             }
-            meta
-        };
+        }
+        self.repl.cancel_file(meta.id);
         for (idx, chunk) in meta.chunks.iter().enumerate() {
             for holder in &chunk.replicas {
                 self.stores[holder.0]
                     .chunks
-                    .lock()
+                    .write()
                     .unwrap()
                     .remove(&(meta.id, idx as u64));
             }
@@ -376,8 +785,7 @@ mod tests {
     #[test]
     fn location_attr_via_getxattr() {
         let store = LiveStore::woss(4);
-        store
-            .set_xattr("/out", "DP", "local");
+        store.set_xattr("/out", "DP", "local");
         store
             .write_file(NodeId(2), "/out", &[1u8; 1000], &TagSet::new())
             .unwrap();
@@ -389,7 +797,9 @@ mod tests {
     fn dss_hides_location_and_ignores_hints() {
         let store = LiveStore::dss(4);
         let tags = TagSet::from_pairs([("DP", "local"), ("Replication", "3")]);
-        store.write_file(NodeId(1), "/f", &[0u8; 1000], &tags).unwrap();
+        store
+            .write_file(NodeId(1), "/f", &[0u8; 1000], &tags)
+            .unwrap();
         assert!(store.locations("/f").is_empty());
         assert_eq!(store.get_xattr("/f", "location"), None);
         assert!(!store.exposes_location());
@@ -402,7 +812,11 @@ mod tests {
         store
             .write_file(NodeId(0), "/db", &[9u8; 600_000], &tags)
             .unwrap();
+        // Optimistic default: replicas drain in the background; the
+        // barrier makes the locality assertion deterministic.
+        store.flush_replication();
         assert!(store.locations("/db").len() >= 3);
+        assert!(store.fully_replicated("/db").unwrap());
         // Replica holders serve a large share of chunk reads locally
         // (replica targets rotate per chunk, so not necessarily all).
         for holder in store.locations("/db") {
@@ -414,6 +828,104 @@ mod tests {
             local > remote,
             "replication should localize most reads: {local} local vs {remote} remote"
         );
+    }
+
+    #[test]
+    fn optimistic_defers_pessimistic_blocks() {
+        let store = LiveStore::woss(5);
+        let opt = TagSet::from_pairs([("Replication", "3"), ("RepSmntc", "optimistic")]);
+        store
+            .write_file(NodeId(0), "/opt", &[1u8; 600_000], &opt)
+            .unwrap();
+        assert!(
+            store.replicas_deferred.load(Ordering::Relaxed) > 0,
+            "optimistic replicas go through the background pool"
+        );
+        // Reads are correct even while replication drains: the primary
+        // always has the bytes.
+        let back = store.read_file(NodeId(4), "/opt").unwrap();
+        assert_eq!(back, vec![1u8; 600_000]);
+        store.flush_replication();
+        assert!(store.fully_replicated("/opt").unwrap());
+        assert_eq!(
+            store.background_copies(),
+            store.replicas_deferred.load(Ordering::Relaxed),
+            "flush means every deferred copy landed"
+        );
+
+        // Pessimistic: durable on return, nothing deferred.
+        let deferred_before = store.replicas_deferred.load(Ordering::Relaxed);
+        let pess = TagSet::from_pairs([("Replication", "3"), ("RepSmntc", "pessimistic")]);
+        store
+            .write_file(NodeId(0), "/pess", &[2u8; 600_000], &pess)
+            .unwrap();
+        assert!(store.fully_replicated("/pess").unwrap(), "no flush needed");
+        assert_eq!(
+            store.replicas_deferred.load(Ordering::Relaxed),
+            deferred_before,
+            "pessimistic writes defer nothing"
+        );
+    }
+
+    #[test]
+    fn stripe_count_one_reproduces_single_lock_store() {
+        let store = LiveStore::woss_tuned(4, 1, 1);
+        assert_eq!(store.stripe_count(), 1);
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        let data: Vec<u8> = (0..400_000u32).map(|i| (i % 199) as u8).collect();
+        store.write_file(NodeId(2), "/one", &data, &tags).unwrap();
+        assert_eq!(store.locations("/one"), vec![NodeId(2)]);
+        assert_eq!(store.read_file(NodeId(1), "/one").unwrap(), data);
+    }
+
+    #[test]
+    fn delete_cancels_background_replication() {
+        let store = LiveStore::woss(5);
+        let tags = TagSet::from_pairs([("Replication", "3")]);
+        store
+            .write_file(NodeId(0), "/gone", &[3u8; 900_000], &tags)
+            .unwrap();
+        store.delete("/gone").unwrap();
+        store.flush_replication();
+        // No node store may hold a chunk of the deleted file: queued
+        // jobs were cancelled, in-flight ones waited out before sweep.
+        for ns in store.stores.iter() {
+            assert!(
+                ns.chunks.read().unwrap().is_empty(),
+                "deleted file left chunks behind"
+            );
+        }
+    }
+
+    #[test]
+    fn racing_delete_never_orphans_chunks() {
+        // A delete can land between a create's meta publish and its
+        // data copies; whichever side sweeps last must leave no bytes
+        // behind. Stress the window a few rounds.
+        for round in 0..8 {
+            let store = Arc::new(LiveStore::woss(4));
+            std::thread::scope(|scope| {
+                let writer = Arc::clone(&store);
+                scope.spawn(move || {
+                    let tags = TagSet::from_pairs([("Replication", "3")]);
+                    let _ = writer.write_file(NodeId(0), "/r", &[5u8; 700_000], &tags);
+                });
+                let deleter = Arc::clone(&store);
+                scope.spawn(move || loop {
+                    match deleter.delete("/r") {
+                        Ok(()) => break,
+                        Err(_) => std::thread::yield_now(),
+                    }
+                });
+            });
+            store.flush_replication();
+            for ns in store.stores.iter() {
+                assert!(
+                    ns.chunks.read().unwrap().is_empty(),
+                    "round {round} leaked chunks"
+                );
+            }
+        }
     }
 
     #[test]
@@ -445,6 +957,7 @@ mod tests {
         let tags = TagSet::from_pairs([("Replication", "3")]);
         let data: Vec<u8> = (0..700_000u32).map(|i| (i % 241) as u8).collect();
         store.write_file(NodeId(0), "/db", &data, &tags).unwrap();
+        store.flush_replication();
         let holders = store.locations("/db");
         assert!(holders.len() >= 3);
         // Kill one holder: reads must fail over and return exact bytes.
@@ -458,7 +971,12 @@ mod tests {
     fn failure_injection_unreplicated_file_lost() {
         let store = LiveStore::woss(3);
         store
-            .write_file(NodeId(1), "/single", &[7u8; 400_000], &TagSet::from_pairs([("DP", "local")]))
+            .write_file(
+                NodeId(1),
+                "/single",
+                &[7u8; 400_000],
+                &TagSet::from_pairs([("DP", "local")]),
+            )
             .unwrap();
         store.kill_node(NodeId(1));
         assert!(
@@ -466,7 +984,10 @@ mod tests {
             "an unreplicated file on a dead node is unreadable"
         );
         store.revive_node(NodeId(1));
-        assert!(store.read_file(NodeId(0), "/single").is_ok(), "outage, not loss");
+        assert!(
+            store.read_file(NodeId(0), "/single").is_ok(),
+            "outage, not loss"
+        );
     }
 
     #[test]

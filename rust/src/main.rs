@@ -6,7 +6,9 @@
 //!   simulated testbed (`woss list` shows ids). `--runs`, `--seed`,
 //!   `--json out.json`, `--config file.toml`, `--profile cluster|bgp`.
 //! * `live` — run a workload on the live engine (real bytes, real PJRT
-//!   kernels): `--workload pipeline|montage`, `--nodes`, `--workers`.
+//!   kernels): `--workload pipeline|montage`, `--nodes`, `--workers`,
+//!   `--stripes` (manager lock stripes), `--repl-workers` (background
+//!   replication threads).
 //! * `list` — experiment ids.
 //! * `calib` — print the active calibration.
 
@@ -49,7 +51,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("usage: woss <experiment|live|list|calib> [options]");
             println!("  woss experiment all --runs 5 --json results.json");
             println!("  woss experiment fig5 --runs 20");
-            println!("  woss live --workload montage --nodes 8 --workers 8");
+            println!("  woss live --workload montage --nodes 8 --workers 8 --stripes 8 --repl-workers 2");
             Ok(())
         }
     }
@@ -88,6 +90,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 fn cmd_live(args: &Args) -> Result<()> {
     let nodes = args.get_parse("nodes", 8usize);
     let workers = args.get_parse("workers", 8usize);
+    let tuning = woss::live::LiveTuning::default();
+    let stripes = args.get_parse("stripes", tuning.stripes);
+    let repl_workers = args.get_parse("repl-workers", tuning.repl_workers);
     let workload = args.get_or("workload", "pipeline");
     let hints = !args.has_flag("no-hints");
 
@@ -103,9 +108,9 @@ fn cmd_live(args: &Args) -> Result<()> {
     };
 
     let store = if hints {
-        LiveStore::woss(nodes)
+        LiveStore::woss_tuned(nodes, stripes, repl_workers)
     } else {
-        LiveStore::dss(nodes)
+        LiveStore::dss_tuned(nodes, stripes, repl_workers)
     };
     let engine = LiveEngine::new(store, workers)?;
     let rep = engine.run(&wf)?;
@@ -122,6 +127,10 @@ fn cmd_live(args: &Args) -> Result<()> {
         rep.locality() * 100.0,
         rep.local_reads,
         rep.remote_reads
+    );
+    println!(
+        "  replication: {} replica copies drained in the background ({} stripes, {} repl workers)",
+        rep.bg_replicas, stripes, repl_workers
     );
     println!("  kernels: {:?}", rep.kernel_execs);
     println!("  integrity: {verified} files verified by checksum kernel");

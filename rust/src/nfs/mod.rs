@@ -97,12 +97,14 @@ impl NfsServer {
             }
         };
         self.cache_used += add;
-        // LRU eviction.
+        // LRU eviction. Ties on the LRU stamp break by path so identical
+        // simulations evict identically — victim choice must never depend
+        // on map iteration order.
         while self.cache_used > self.cache_capacity {
             let victim = self
                 .cache
                 .iter()
-                .min_by_key(|(_, e)| e.last_use)
+                .min_by_key(|&(k, e)| (e.last_use, k))
                 .map(|(k, _)| k.clone())
                 .expect("cache non-empty while over capacity");
             let e = self.cache.remove(&victim).unwrap();
@@ -348,6 +350,43 @@ mod tests {
             misses_before + 60 * MB,
             "/a was evicted"
         );
+    }
+
+    #[test]
+    fn lru_eviction_ties_break_by_path() {
+        // Regression: with two entries carrying the *same* LRU stamp the
+        // victim used to be whatever the map iterator yielded first; the
+        // tie must break deterministically by path ("/a" before "/z").
+        let calib = Calib {
+            nfs_cache_bytes: 100 * MB,
+            ..Calib::default()
+        };
+        let mut nfs = NfsServer::new(&calib);
+        nfs.cache.insert(
+            "/z".to_string(),
+            CacheEntry {
+                bytes: 60 * MB,
+                last_use: 7,
+            },
+        );
+        nfs.cache.insert(
+            "/a".to_string(),
+            CacheEntry {
+                bytes: 60 * MB,
+                last_use: 7,
+            },
+        );
+        nfs.cache_used = 120 * MB;
+        nfs.lru_clock = 7;
+        // Next touch pushes the cache over capacity and evicts one entry.
+        nfs.touch_cache("/c", 10 * MB);
+        assert!(
+            !nfs.cache.contains_key("/a"),
+            "/a is the deterministic victim on an LRU-stamp tie"
+        );
+        assert!(nfs.cache.contains_key("/z"));
+        assert!(nfs.cache.contains_key("/c"));
+        assert_eq!(nfs.cache_used, 70 * MB);
     }
 
     #[test]

@@ -131,17 +131,10 @@ impl Manager {
         &self.nodes
     }
 
-    /// Which shard owns `path` (FNV-1a over the path bytes).
+    /// Which shard owns `path` (FNV-1a over the path bytes, shared with
+    /// the live store's lock stripes via [`crate::dispatch::shard_for_path`]).
     fn shard_of(&self, path: &str) -> usize {
-        if self.shards.len() == 1 {
-            return 0;
-        }
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in path.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0100_0000_01b3);
-        }
-        (h % self.shards.len() as u64) as usize
+        crate::dispatch::shard_for_path(path, self.shards.len())
     }
 
     /// One metadata RPC from `client` served by `shard`: request latency

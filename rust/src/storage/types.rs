@@ -62,6 +62,16 @@ impl FileMeta {
         }
     }
 
+    /// Byte range `[lo, hi)` of chunk `idx` in a file of `size` bytes
+    /// laid out at `chunk_size` — the slice a data path copies for that
+    /// chunk. Static because the write path needs spans before the
+    /// [`FileMeta`] exists.
+    pub fn chunk_span(size: u64, chunk_size: u64, idx: u64) -> (u64, u64) {
+        let lo = idx.saturating_mul(chunk_size).min(size);
+        let hi = (idx + 1).saturating_mul(chunk_size).min(size);
+        (lo, hi)
+    }
+
     /// Size in bytes of chunk `idx` (the last chunk may be short).
     pub fn chunk_bytes(&self, idx: u64) -> u64 {
         debug_assert!(idx < self.chunks.len() as u64);
@@ -187,6 +197,17 @@ mod tests {
         let m = meta(2048, 1024);
         assert_eq!(m.chunks.len(), 2);
         assert_eq!(m.chunk_bytes(1), 1024);
+    }
+
+    #[test]
+    fn chunk_span_matches_chunk_bytes() {
+        let m = meta(2500, 1024);
+        for idx in 0..m.chunks.len() as u64 {
+            let (lo, hi) = FileMeta::chunk_span(m.size, m.chunk_size, idx);
+            assert_eq!(hi - lo, m.chunk_bytes(idx), "chunk {idx}");
+            assert_eq!(lo, idx * 1024);
+        }
+        assert_eq!(FileMeta::chunk_span(2500, 1024, 2), (2048, 2500));
     }
 
     #[test]

@@ -84,12 +84,24 @@ impl Scheduler for LeastLoaded {
             return pin;
         }
         let min_load = nodes.iter().map(|n| n.in_flight).min().expect("non-empty");
-        // Rotate among the equally-least-loaded to spread work.
-        let candidates: Vec<&NodeView> =
-            nodes.iter().filter(|n| n.in_flight == min_load).collect();
-        let pick = candidates[self.cursor % candidates.len()];
+        // Rotate over the *stable node order*, not the tie-set: indexing
+        // the tie-set by a shared cursor could starve a member outright
+        // whenever the tie-set size varied between calls (cursor % 2 vs
+        // cursor % 3 land on different nodes for the same cursor).
+        // Scanning from a monotonically advancing start slot guarantees
+        // every tie member is picked at least once per lap of the
+        // cursor (no starvation) and is perfectly even when the tie
+        // spans the whole pool; a persistent interior gap in the
+        // tie-set can still skew the split — acceptable for the
+        // paper's "relatively naïve" baseline heuristic.
+        let n = nodes.len();
+        let start = self.cursor % n;
         self.cursor = self.cursor.wrapping_add(1);
-        pick.node
+        (0..n)
+            .map(|i| &nodes[(start + i) % n])
+            .find(|v| v.in_flight == min_load)
+            .expect("a node carrying the minimum load exists")
+            .node
     }
 }
 
@@ -275,6 +287,56 @@ mod tests {
             .map(|_| s.pick(&TaskSpec::new(0, "t"), &v, &LocalityInfo::default()).0)
             .collect();
         assert_eq!(picks, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn least_loaded_spreads_evenly_when_tie_set_varies() {
+        // Regression: the old rotation indexed the tie-set by a shared
+        // cursor, so alternating tie-set sizes skewed the spread. Here
+        // every even call sees 4 tied nodes and every odd call sees the
+        // same 4 — but interleaved with picks over a 2-node tie-set the
+        // old code would double-pick some nodes and starve others.
+        let mut s = LeastLoaded::new();
+        let all_tied = views(&[0.0, 0.0, 0.0, 0.0]);
+        let mut counts = [0usize; 4];
+        for round in 0..8 {
+            // Interleave a call over a smaller tie-set to perturb the
+            // cursor the way a real varying workload does.
+            if round % 2 == 1 {
+                let _ = s.pick(
+                    &TaskSpec::new(0, "t"),
+                    &views(&[0.0, 0.0, 5.0, 5.0]),
+                    &LocalityInfo::default(),
+                );
+            }
+            let node = s.pick(&TaskSpec::new(0, "t"), &all_tied, &LocalityInfo::default());
+            counts[node.0 - 1] += 1;
+        }
+        // 8 all-tied picks over 4 nodes: stable-order rotation gives each
+        // node exactly 2, regardless of the interleaved small-tie calls.
+        assert_eq!(counts, [2, 2, 2, 2], "uneven spread: {counts:?}");
+    }
+
+    #[test]
+    fn least_loaded_never_starves_a_tie_member() {
+        // Regression: alternating a unique-minimum call with a two-node
+        // tie call left the old tie-set indexing at `cursor % 2 == 0` on
+        // every tie call — the first tie member got ALL the work. The
+        // stable-order rotation must keep both members in play.
+        let mut s = LeastLoaded::new();
+        let tie = views(&[0.0, 0.0, 9.0]);
+        let unique = views(&[9.0, 9.0, 0.0]);
+        let mut counts = [0usize; 2];
+        for _ in 0..6 {
+            let node = s.pick(&TaskSpec::new(0, "t"), &tie, &LocalityInfo::default());
+            counts[node.0 - 1] += 1;
+            let u = s.pick(&TaskSpec::new(0, "t"), &unique, &LocalityInfo::default());
+            assert_eq!(u, NodeId(3), "a unique minimum always wins");
+        }
+        assert!(
+            counts[0] >= 2 && counts[1] >= 2,
+            "a tie member was starved: {counts:?}"
+        );
     }
 
     #[test]

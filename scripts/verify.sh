@@ -6,6 +6,24 @@ set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
+echo "== cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "rustfmt component unavailable in this toolchain; skipping"
+fi
+
+echo "== cargo clippy -- -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    # Lints lib + bins (the shipped surface). Widening to --all-targets
+    # also lints tests/benches — do that in a dedicated sweep so any
+    # style lints it surfaces in test code can be fixed in the same
+    # change rather than leaving the gate red.
+    cargo clippy -- -D warnings
+else
+    echo "clippy component unavailable in this toolchain; skipping"
+fi
+
 echo "== cargo build --release =="
 cargo build --release
 
