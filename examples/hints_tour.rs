@@ -113,4 +113,64 @@ fn main() {
         "   new `Pin=5` hint honored by the fresh module: {:?}",
         store2.locations("/t/pinned")
     );
+
+    println!("== Lifetime + Consumers (scratch reclamation) ==");
+    // A cache-enabled, lifetime-enforcing deployment: the intermediate
+    // is declared dead after two reads and the store reclaims it.
+    let store3 = LiveStore::woss_with(
+        4,
+        woss::live::LiveTuning {
+            cache_bytes: Some(8 << 20),
+            lifetime: true,
+            ..woss::live::LiveTuning::default()
+        },
+    );
+    store3
+        .write_file(
+            NodeId(0),
+            "/t/scratch",
+            &blob(400_000),
+            &TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch"), ("Consumers", "2")]),
+        )
+        .unwrap();
+    println!(
+        "   consumers_left after write: {:?}",
+        store3.get_xattr("/t/scratch", "consumers_left")
+    );
+    store3.read_file(NodeId(1), "/t/scratch").unwrap();
+    println!(
+        "   after 1st read:            {:?}",
+        store3.get_xattr("/t/scratch", "consumers_left")
+    );
+    store3.read_file(NodeId(2), "/t/scratch").unwrap();
+    println!(
+        "   after 2nd (last) read:     reclaimed -> read now fails: {}",
+        store3.read_file(NodeId(1), "/t/scratch").is_err()
+    );
+
+    println!("== Pattern=pipeline (cache prefetch) ==");
+    store3
+        .write_file(
+            NodeId(0),
+            "/t/stage_out",
+            &blob(600_000),
+            &TagSet::from_pairs([("DP", "local"), ("Pattern", "pipeline")]),
+        )
+        .unwrap();
+    let queued = store3.prefetch(NodeId(3), "/t/stage_out").unwrap();
+    store3.flush_replication();
+    println!(
+        "   {queued} chunks promoted into n3's cache; cache_state: {:?}",
+        store3.get_xattr("/t/stage_out", "cache_state")
+    );
+    store3.read_file(NodeId(3), "/t/stage_out").unwrap();
+    println!(
+        "   consumer read served locally: {} local / {} remote chunk reads on this store",
+        store3
+            .local_reads
+            .load(std::sync::atomic::Ordering::Relaxed),
+        store3
+            .remote_reads
+            .load(std::sync::atomic::Ordering::Relaxed)
+    );
 }

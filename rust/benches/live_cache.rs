@@ -1,0 +1,11 @@
+//! `cargo bench` target for the live cache-tier sweep: locality vs
+//! cache budget × eviction policy (hint-aware vs plain LRU), plus the
+//! `Pattern=pipeline` prefetch and `Lifetime=scratch` reclamation
+//! demonstrations. See rust/src/bench/experiments.rs for the driver.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+fn main() {
+    bench_common::bench_experiment("live_cache");
+}

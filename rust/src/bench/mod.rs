@@ -186,6 +186,7 @@ pub fn execute(spec: &RunSpec, workflow: &Workflow) -> RunResult {
                 jitter: 0.03,
                 seed: spec.seed,
                 stage_in_barrier: true,
+                tag_lifetime: false,
             }
         } else {
             EngineConfig::plain(spec.seed)

@@ -67,6 +67,28 @@ impl GetAttrProvider for SystemStatusProvider {
     }
 }
 
+/// Reserved `consumers_left` attribute: declared consumer reads
+/// remaining before a scratch file is dead. The live store keeps the
+/// countdown in the file's own `Consumers` tag (decremented under the
+/// namespace lock on every whole-file read when lifetime enforcement
+/// is on), so this provider simply reflects it; files that declared no
+/// consumer count report `untracked`. The workflow runtime reads this
+/// to verify the reclamation protocol bottom-up.
+pub struct ConsumersLeftProvider;
+
+impl GetAttrProvider for ConsumersLeftProvider {
+    fn key(&self) -> &'static str {
+        crate::hints::CONSUMERS_LEFT_ATTR
+    }
+
+    fn get(&self, file: &FileMeta, _nodes: &[NodeState]) -> String {
+        file.tags
+            .get(crate::hints::keys::CONSUMERS)
+            .map(str::to_string)
+            .unwrap_or_else(|| "untracked".to_string())
+    }
+}
+
 /// Reserved `replication_state` attribute: achieved replica count per
 /// chunk (min across chunks) — lets an application judge data-loss risk.
 pub struct ReplicationStateProvider;
@@ -148,5 +170,15 @@ mod tests {
     fn replication_state_is_min() {
         let s = ReplicationStateProvider.get(&file(), &[]);
         assert_eq!(s, "1");
+    }
+
+    #[test]
+    fn consumers_left_reflects_tag() {
+        let mut f = file();
+        assert_eq!(ConsumersLeftProvider.get(&f, &[]), "untracked");
+        f.tags.set("Consumers", "3");
+        assert_eq!(ConsumersLeftProvider.get(&f, &[]), "3");
+        f.tags.set("Consumers", "0");
+        assert_eq!(ConsumersLeftProvider.get(&f, &[]), "0", "fan-out complete");
     }
 }

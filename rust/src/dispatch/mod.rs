@@ -228,6 +228,7 @@ impl Registry {
         r.register_getattr(Box::new(getattr::ChunkLocationProvider));
         r.register_getattr(Box::new(getattr::SystemStatusProvider));
         r.register_getattr(Box::new(getattr::ReplicationStateProvider));
+        r.register_getattr(Box::new(getattr::ConsumersLeftProvider));
         r
     }
 

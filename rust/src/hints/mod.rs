@@ -17,7 +17,13 @@
 //! | `RepSmntc=optimistic\|pessimistic` | return after first replica vs after full replication |
 //! | `CacheSize=<bytes>` | per-file client cache sizing |
 //! | `BlockSize=<bytes>` | application-informed chunk size (scatter/gather) |
+//! | `Lifetime=scratch\|durable` | cache eviction class + auto-reclamation eligibility |
+//! | `Consumers=<n>` | declared consumer reads before a scratch file is dead |
+//! | `Pattern=pipeline\|broadcast\|reduce\|scatter` | access-pattern class driving prefetch / cache pinning |
 //! | `location` *(reserved, read-only)* | bottom-up: storage exposes replica locations |
+//!
+//! The complete grammar — wire form, consuming layer, and triggered
+//! optimization per tag — is documented in `docs/HINTS.md`.
 
 pub mod tagset;
 
@@ -26,6 +32,16 @@ pub use tagset::TagSet;
 /// Reserved attribute through which the storage system exposes data
 /// location to the workflow runtime (bottom-up channel).
 pub const LOCATION_ATTR: &str = "location";
+
+/// Reserved attribute exposing a file's cache-tier residency
+/// (`chunks=<n>;bytes=<n>;pinned=<n>`, summed over node caches) —
+/// bottom-up, served by the live store.
+pub const CACHE_STATE_ATTR: &str = "cache_state";
+
+/// Reserved attribute exposing how many declared consumer reads remain
+/// before a scratch file is reclaimed (`<n>`, or `untracked` when the
+/// file declared no consumer count) — bottom-up.
+pub const CONSUMERS_LEFT_ATTR: &str = "consumers_left";
 
 /// A parsed, typed hint. Unknown keys are preserved in the [`TagSet`] but
 /// parse to [`Hint::Unknown`] — a legacy storage system would simply
@@ -48,6 +64,13 @@ pub enum Hint {
     CacheSize(u64),
     /// `BlockSize=<bytes>` — application-informed chunk size.
     BlockSize(u64),
+    /// `Lifetime=...` — how long the file's bytes matter.
+    Lifetime(Lifetime),
+    /// `Consumers=<n>` — declared number of whole-file consumer reads;
+    /// a scratch file is dead (and reclaimable) after the last one.
+    Consumers(u32),
+    /// `Pattern=...` — workflow-level access pattern of the file.
+    Pattern(AccessPattern),
     /// Recognized key, malformed value (reported, then ignored — hints
     /// are hints, not directives).
     Malformed { key: String, value: String },
@@ -66,6 +89,40 @@ pub enum RepSemantics {
     Pessimistic,
 }
 
+/// File lifetime class (`Lifetime` tag): which data is worth keeping.
+///
+/// Workflow intermediates are typically written once, read by a known
+/// set of consumers, then never touched again; tagging them `scratch`
+/// lets the cache evict them first and — when a consumer count is
+/// declared — lets the store reclaim them automatically after the last
+/// read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Lifetime {
+    /// Keep until explicitly deleted (the default for untagged files).
+    #[default]
+    Durable,
+    /// Workflow scratch: evict from caches first; auto-reclaim after
+    /// the last declared consumer read (`Consumers=<n>`).
+    Scratch,
+}
+
+/// Workflow access pattern (`Pattern` tag): how the file will be
+/// consumed, independent of where it is placed (`DP`/`Replication`
+/// decide placement; `Pattern` drives the cache tier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// One producer, next-stage consumer: eligible for cache prefetch
+    /// into the consumer's node.
+    Pipeline,
+    /// One producer, many consumers: cached copies stay pinned until
+    /// the fan-out completes (all declared consumers have read).
+    Broadcast,
+    /// Many producers, one consumer.
+    Reduce,
+    /// One producer, disjoint-range consumers.
+    Scatter,
+}
+
 /// Canonical tag keys.
 pub mod keys {
     /// Data-placement policy selector.
@@ -78,9 +135,28 @@ pub mod keys {
     pub const CACHE_SIZE: &str = "CacheSize";
     /// Application-informed chunk size.
     pub const BLOCK_SIZE: &str = "BlockSize";
+    /// File lifetime class (scratch/durable).
+    pub const LIFETIME: &str = "Lifetime";
+    /// Declared consumer-read count.
+    pub const CONSUMERS: &str = "Consumers";
+    /// Workflow access pattern.
+    pub const PATTERN: &str = "Pattern";
 }
 
 /// Parse one `<key, value>` pair into a typed hint.
+///
+/// ```
+/// use woss::hints::{parse, AccessPattern, Hint, Lifetime};
+///
+/// assert_eq!(parse("Lifetime", "scratch"), Hint::Lifetime(Lifetime::Scratch));
+/// assert_eq!(parse("Consumers", "3"), Hint::Consumers(3));
+/// assert_eq!(
+///     parse("Pattern", "pipeline"),
+///     Hint::Pattern(AccessPattern::Pipeline)
+/// );
+/// // Zero-valued hints are nonsense the data path must never see.
+/// assert!(matches!(parse("Consumers", "0"), Hint::Malformed { .. }));
+/// ```
 pub fn parse(key: &str, value: &str) -> Hint {
     match key {
         keys::DP => parse_dp(value),
@@ -105,6 +181,24 @@ pub fn parse(key: &str, value: &str) -> Hint {
         },
         keys::BLOCK_SIZE => match parse_size(value) {
             Some(n) if n >= 1 => Hint::BlockSize(n),
+            _ => malformed(key, value),
+        },
+        keys::LIFETIME => match value.trim().to_ascii_lowercase().as_str() {
+            "scratch" => Hint::Lifetime(Lifetime::Scratch),
+            "durable" => Hint::Lifetime(Lifetime::Durable),
+            _ => malformed(key, value),
+        },
+        keys::CONSUMERS => match value.trim().parse::<u32>() {
+            // Zero declared consumers would mean "dead on arrival";
+            // like every other zero-valued hint it is malformed.
+            Ok(n) if n >= 1 => Hint::Consumers(n),
+            _ => malformed(key, value),
+        },
+        keys::PATTERN => match value.trim().to_ascii_lowercase().as_str() {
+            "pipeline" => Hint::Pattern(AccessPattern::Pipeline),
+            "broadcast" => Hint::Pattern(AccessPattern::Broadcast),
+            "reduce" => Hint::Pattern(AccessPattern::Reduce),
+            "scatter" => Hint::Pattern(AccessPattern::Scatter),
             _ => malformed(key, value),
         },
         _ => Hint::Unknown {
@@ -272,6 +366,27 @@ mod tests {
             parse("BlockSize", "18446744073709551615"),
             Hint::BlockSize(u64::MAX)
         );
+    }
+
+    #[test]
+    fn lifetime_consumers_pattern() {
+        assert_eq!(parse("Lifetime", "scratch"), Hint::Lifetime(Lifetime::Scratch));
+        assert_eq!(parse("Lifetime", " Durable "), Hint::Lifetime(Lifetime::Durable));
+        assert!(matches!(parse("Lifetime", "eternal"), Hint::Malformed { .. }));
+        assert_eq!(parse("Consumers", "3"), Hint::Consumers(3));
+        assert!(matches!(parse("Consumers", "0"), Hint::Malformed { .. }));
+        assert!(matches!(parse("Consumers", "-1"), Hint::Malformed { .. }));
+        assert_eq!(
+            parse("Pattern", "pipeline"),
+            Hint::Pattern(AccessPattern::Pipeline)
+        );
+        assert_eq!(
+            parse("Pattern", "BROADCAST"),
+            Hint::Pattern(AccessPattern::Broadcast)
+        );
+        assert_eq!(parse("Pattern", "reduce"), Hint::Pattern(AccessPattern::Reduce));
+        assert_eq!(parse("Pattern", "scatter"), Hint::Pattern(AccessPattern::Scatter));
+        assert!(matches!(parse("Pattern", "zigzag"), Hint::Malformed { .. }));
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! dispatcher can trigger the matching optimization without extra
 //! manager round-trips.
 
-use super::{parse, Hint, RepSemantics};
+use super::{parse, AccessPattern, Hint, Lifetime, RepSemantics};
 use std::collections::BTreeMap;
 use std::fmt;
 use std::str::FromStr;
@@ -146,6 +146,57 @@ impl TagSet {
             _ => None,
         }
     }
+
+    /// Lifetime class (defaults to durable — untagged and malformed
+    /// files are never auto-reclaimed):
+    ///
+    /// ```
+    /// use woss::hints::{Lifetime, TagSet};
+    ///
+    /// let t = TagSet::from_pairs([("Lifetime", "scratch"), ("Consumers", "2")]);
+    /// assert_eq!(t.lifetime(), Lifetime::Scratch);
+    /// assert_eq!(t.consumers(), Some(2));
+    /// assert_eq!(TagSet::new().lifetime(), Lifetime::Durable);
+    /// ```
+    pub fn lifetime(&self) -> Lifetime {
+        match self
+            .get(super::keys::LIFETIME)
+            .map(|v| parse(super::keys::LIFETIME, v))
+        {
+            Some(Hint::Lifetime(l)) => l,
+            _ => Lifetime::default(),
+        }
+    }
+
+    /// Declared consumer-read count, if tagged and well-formed.
+    pub fn consumers(&self) -> Option<u32> {
+        match self
+            .get(super::keys::CONSUMERS)
+            .map(|v| parse(super::keys::CONSUMERS, v))
+        {
+            Some(Hint::Consumers(n)) => Some(n),
+            _ => None,
+        }
+    }
+
+    /// Workflow access pattern, if tagged and well-formed:
+    ///
+    /// ```
+    /// use woss::hints::{AccessPattern, TagSet};
+    ///
+    /// let t = TagSet::from_pairs([("Pattern", "pipeline")]);
+    /// assert_eq!(t.pattern(), Some(AccessPattern::Pipeline));
+    /// assert_eq!(TagSet::new().pattern(), None);
+    /// ```
+    pub fn pattern(&self) -> Option<AccessPattern> {
+        match self
+            .get(super::keys::PATTERN)
+            .map(|v| parse(super::keys::PATTERN, v))
+        {
+            Some(Hint::Pattern(p)) => Some(p),
+            _ => None,
+        }
+    }
 }
 
 /// Append `s` to `out`, backslash-escaping `\`, `;`, and (for keys)
@@ -182,12 +233,30 @@ impl FromStr for TagSet {
     /// Parse the `key=value;key=value` wire form produced by
     /// [`TagSet`]'s `Display`, honoring backslash escapes. The empty
     /// string parses to an empty set.
+    ///
+    /// A key appearing twice is a malformed tag set, not a last-wins
+    /// merge: on the wire there is no way to tell a retagged file from
+    /// a corrupted one, so the parser refuses rather than silently
+    /// dropping a pair (`docs/HINTS.md` documents the rule):
+    ///
+    /// ```
+    /// use woss::hints::TagSet;
+    ///
+    /// assert!("DP=local;DP=scatter 4".parse::<TagSet>().is_err());
+    /// ```
     fn from_str(s: &str) -> Result<TagSet, String> {
         let mut tags = TagSet::new();
         let mut key = String::new();
         let mut value = String::new();
         let mut in_value = false;
         let mut escaped = false;
+        let commit = |tags: &mut TagSet, key: &str, value: &str| {
+            if tags.get(key).is_some() {
+                return Err(format!("duplicate tag key '{key}'"));
+            }
+            tags.set(key, value);
+            Ok(())
+        };
         for c in s.chars() {
             if escaped {
                 (if in_value { &mut value } else { &mut key }).push(c);
@@ -203,7 +272,7 @@ impl FromStr for TagSet {
                             return Err(format!("tag pair '{key}' is missing '='"));
                         }
                     } else {
-                        tags.set(&key, &value);
+                        commit(&mut tags, &key, &value)?;
                         key.clear();
                         value.clear();
                         in_value = false;
@@ -216,7 +285,7 @@ impl FromStr for TagSet {
             return Err("dangling '\\' escape at end of tag set".to_string());
         }
         if in_value {
-            tags.set(&key, &value);
+            commit(&mut tags, &key, &value)?;
         } else if !key.is_empty() {
             return Err(format!("tag pair '{key}' is missing '='"));
         }
@@ -292,6 +361,36 @@ mod tests {
         assert_eq!("".parse::<TagSet>().unwrap(), TagSet::new());
         assert!("noequals".parse::<TagSet>().is_err());
         assert!("a=b;dangling\\".parse::<TagSet>().is_err());
+    }
+
+    /// Duplicate keys on the wire are a parse error, never a silent
+    /// last-wins overwrite — a retagged pair is indistinguishable from
+    /// corruption once serialized.
+    #[test]
+    fn duplicate_keys_are_a_parse_error() {
+        let err = "DP=local;DP=scatter 4".parse::<TagSet>().unwrap_err();
+        assert!(err.contains("duplicate tag key 'DP'"), "{err}");
+        assert!("a=1;b=2;a=3".parse::<TagSet>().is_err());
+        // An escaped '=' makes the keys distinct — not a duplicate.
+        let ok: TagSet = "a\\=x=1;a=2".parse().unwrap();
+        assert_eq!(ok.get("a=x"), Some("1"));
+        assert_eq!(ok.get("a"), Some("2"));
+    }
+
+    #[test]
+    fn lifetime_pattern_accessors() {
+        let t = TagSet::from_pairs([
+            ("Lifetime", "scratch"),
+            ("Consumers", "4"),
+            ("Pattern", "broadcast"),
+        ]);
+        assert_eq!(t.lifetime(), crate::hints::Lifetime::Scratch);
+        assert_eq!(t.consumers(), Some(4));
+        assert_eq!(t.pattern(), Some(crate::hints::AccessPattern::Broadcast));
+        // Malformed values degrade to the safe defaults.
+        let bad = TagSet::from_pairs([("Lifetime", "forever"), ("Consumers", "0")]);
+        assert_eq!(bad.lifetime(), crate::hints::Lifetime::Durable);
+        assert_eq!(bad.consumers(), None);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! and outputs are written back with the workload's hints (top-down
 //! channel).
 
-use crate::hints::TagSet;
+use crate::hints::{AccessPattern, Hint, Lifetime, TagSet};
 use crate::runtime::{self, Runtime};
 use crate::storage::types::NodeId;
 use crate::workflow::dag::{Tier, Workflow};
@@ -20,6 +20,21 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use super::store::LiveStore;
+
+/// Engine-side cross-layer options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineOptions {
+    /// Tag every consumed intermediate output with `Lifetime=scratch` +
+    /// `Consumers=<n>` derived from the DAG (top-down channel), so a
+    /// store with [`crate::live::LiveTuning::lifetime`] reclaims it
+    /// after its last read. Outputs that already carry an explicit
+    /// `Lifetime` tag are left alone.
+    pub lifetime: bool,
+    /// Ask the store to promote `Pattern=pipeline` inputs into the
+    /// executing node's cache ahead of the reads (no-op without a
+    /// cache tier).
+    pub prefetch: bool,
+}
 
 /// Wrapper serializing kernel execution across the worker pool: the
 /// example workloads are storage-bound, so a single compute lane is an
@@ -45,6 +60,20 @@ pub struct LiveReport {
     /// (optimistic `RepSmntc`); the run flushes before reporting, so
     /// every deferred copy has landed by the time this is read.
     pub bg_replicas: u64,
+    /// Chunk reads served from the hot-chunk cache tier (0 when the
+    /// tier is disabled).
+    pub cache_hits: u64,
+    /// Chunks promoted into consumer caches by the prefetch path.
+    pub prefetched_chunks: u64,
+    /// Highest bytes resident in any single node's cache over the run
+    /// — bounded by the configured per-node budget.
+    pub peak_cache_bytes: u64,
+    /// Scratch intermediates the store reclaimed after their last
+    /// declared consumer read (lifetime enforcement).
+    pub files_reclaimed: u64,
+    /// Logical bytes freed by that reclamation — the run's working-set
+    /// saving.
+    pub bytes_reclaimed: u64,
     /// Kernel executions by artifact name.
     pub kernel_execs: BTreeMap<String, u64>,
     /// Fingerprint of every produced file (path → checksum of first
@@ -75,6 +104,7 @@ pub struct LiveEngine {
     store: Arc<LiveStore>,
     runtime: Arc<SharedRuntime>,
     workers: usize,
+    options: EngineOptions,
     /// Fixed kernel parameters (weights/bias tiles), deterministic.
     w: Arc<Vec<f32>>,
     b: Arc<Vec<f32>>,
@@ -88,15 +118,22 @@ struct RunState {
 }
 
 impl LiveEngine {
-    /// Build an engine over `store` with `workers` threads. Kernel
+    /// Build an engine over `store` with `workers` threads and default
+    /// [`EngineOptions`] (no lifetime tagging, no prefetch). Kernel
     /// artifacts in the default directory, if any, are validated; the
     /// interpreted backend runs regardless (see [`crate::runtime`]).
     pub fn new(store: LiveStore, workers: usize) -> Result<Self> {
+        LiveEngine::with_options(store, workers, EngineOptions::default())
+    }
+
+    /// Build an engine with explicit cross-layer [`EngineOptions`].
+    pub fn with_options(store: LiveStore, workers: usize, options: EngineOptions) -> Result<Self> {
         let rt = Runtime::load(&Runtime::artifact_dir())?;
         Ok(LiveEngine {
             store: Arc::new(store),
             runtime: Arc::new(SharedRuntime(Mutex::new(rt))),
             workers: workers.max(1),
+            options,
             w: Arc::new(param_tile(101, 0.02)),
             b: Arc::new(param_tile(102, 0.05)),
         })
@@ -140,6 +177,15 @@ impl LiveEngine {
         let rdeps = &rdeps;
         let next_node = AtomicUsize::new(0);
         let fingerprints = Mutex::new(BTreeMap::new());
+        // Lifetime tagging (top-down channel): the DAG knows exactly
+        // how many reads each intermediate will see; declare that to
+        // the store so it can reclaim scratch data after the last one.
+        let consumers = if self.options.lifetime {
+            workflow.consumer_counts()
+        } else {
+            BTreeMap::new()
+        };
+        let consumers = &consumers;
         let start = Instant::now();
 
         std::thread::scope(|scope| {
@@ -165,6 +211,7 @@ impl LiveEngine {
                             task_id,
                             &next_node,
                             &fingerprints,
+                            consumers,
                         );
                         let mut st = state.lock().unwrap();
                         match result {
@@ -199,6 +246,7 @@ impl LiveEngine {
             .iter()
             .map(|&n| (n.to_string(), rt.exec_count(n)))
             .collect();
+        let cache = self.store.cache_stats();
         Ok(LiveReport {
             elapsed_secs: start.elapsed().as_secs_f64(),
             tasks: workflow.tasks.len(),
@@ -207,6 +255,11 @@ impl LiveEngine {
             local_reads: self.store.local_reads.load(Ordering::Relaxed),
             remote_reads: self.store.remote_reads.load(Ordering::Relaxed),
             bg_replicas: self.store.background_copies(),
+            cache_hits: cache.hits,
+            prefetched_chunks: cache.prefetched,
+            peak_cache_bytes: cache.peak_node_resident,
+            files_reclaimed: cache.files_reclaimed,
+            bytes_reclaimed: cache.bytes_reclaimed,
             kernel_execs,
             fingerprints: fingerprints.into_inner().unwrap(),
         })
@@ -218,6 +271,7 @@ impl LiveEngine {
         task_id: usize,
         next_node: &AtomicUsize,
         fingerprints: &Mutex<BTreeMap<String, f32>>,
+        consumers: &BTreeMap<String, u32>,
     ) -> Result<()> {
         let task = &workflow.tasks[task_id];
 
@@ -247,6 +301,45 @@ impl LiveEngine {
         for write in &task.writes {
             for (k, v) in write.tags.iter() {
                 self.store.set_xattr(&write.path, k, v);
+            }
+            // Lifetime tagging: consumed intermediates become declared
+            // scratch — unless the workload already chose a lifetime
+            // or declared its own consumer count (e.g. readers beyond
+            // the DAG), which must never be clobbered.
+            if self.engine_tags_scratch(write) {
+                if let Some(n) = consumers.get(&write.path) {
+                    self.store
+                        .set_xattr(&write.path, crate::hints::keys::LIFETIME, "scratch");
+                    self.store
+                        .set_xattr(&write.path, crate::hints::keys::CONSUMERS, &n.to_string());
+                }
+            }
+        }
+
+        // --- prefetch pipeline inputs (cache tier warm-up) ---
+        if self.options.prefetch && self.store.cache_enabled() {
+            for read in &task.reads {
+                if read.tier != Tier::Intermediate {
+                    continue;
+                }
+                // The typed grammar owns Pattern parsing — a raw
+                // string compare here would drift from the store's
+                // cache_class as the grammar evolves.
+                let pipeline = self
+                    .store
+                    .get_xattr(&read.path, crate::hints::keys::PATTERN)
+                    .map(|v| {
+                        matches!(
+                            crate::hints::parse(crate::hints::keys::PATTERN, &v),
+                            Hint::Pattern(AccessPattern::Pipeline)
+                        )
+                    })
+                    .unwrap_or(false);
+                if pipeline {
+                    // Best-effort warm-up; the read path below is
+                    // correct with or without the promotion landing.
+                    let _ = self.store.prefetch(node, &read.path);
+                }
             }
         }
 
@@ -282,7 +375,14 @@ impl LiveEngine {
             // Tags already set via set_xattr (pending), write plain.
             self.store
                 .write_file(node, &write.path, &data, &TagSet::new())?;
-            if write.tier == Tier::Intermediate {
+            // Fingerprint outputs for end-of-run verification — except
+            // files the store will actually reclaim after their last
+            // consumer, which verify() could never re-read (transience
+            // is the point). Anything that survives the run — explicit
+            // durable tags, engine lifetime off, store enforcement off
+            // — stays covered.
+            let transient = self.will_be_reclaimed(write, consumers);
+            if write.tier == Tier::Intermediate && !transient {
                 let tiles = runtime::bytes_to_tiles(&data);
                 let mut rt = self.runtime.0.lock().unwrap();
                 let fp = rt.checksum(&tiles[0])?;
@@ -290,6 +390,38 @@ impl LiveEngine {
             }
         }
         Ok(())
+    }
+
+    /// Would this engine stamp `write` with `Lifetime=scratch` +
+    /// `Consumers`? Only when lifetime tagging is on, the output is an
+    /// intermediate, and the workload declared neither a lifetime nor
+    /// its own consumer count.
+    fn engine_tags_scratch(&self, write: &crate::workflow::dag::WriteSpec) -> bool {
+        self.options.lifetime
+            && write.tier == Tier::Intermediate
+            && write.tags.get(crate::hints::keys::LIFETIME).is_none()
+            && write.tags.get(crate::hints::keys::CONSUMERS).is_none()
+    }
+
+    /// Will the store reclaim this output before the run ends? True
+    /// only when enforcement is actually active (store lifetime knob +
+    /// hints-enabled registry — a DSS baseline never reclaims) and the
+    /// effective tags declare scratch with a consumer count: either
+    /// the engine is about to stamp them, or the workload authored
+    /// them itself.
+    fn will_be_reclaimed(
+        &self,
+        write: &crate::workflow::dag::WriteSpec,
+        consumers: &BTreeMap<String, u32>,
+    ) -> bool {
+        if !self.store.lifetime_enabled() || !self.store.exposes_location() {
+            return false; // no enforcement / DSS: tags are inert
+        }
+        let engine_tagged =
+            self.engine_tags_scratch(write) && consumers.contains_key(&write.path);
+        let workload_tagged =
+            write.tags.lifetime() == Lifetime::Scratch && write.tags.consumers().is_some();
+        engine_tagged || workload_tagged
     }
 
     /// Re-read every fingerprinted file and verify its checksum — the
@@ -389,6 +521,54 @@ mod tests {
         let verified = engine.verify(&report).unwrap();
         assert_eq!(verified, report.fingerprints.len());
         assert!(verified >= 2);
+    }
+
+    #[test]
+    fn lifetime_mode_reclaims_consumed_intermediates() {
+        // Ungated smoke: with lifetime tagging on (engine) and
+        // enforcement on (store), the consumed intermediate is gone
+        // after the run, the final output survives, and verification
+        // still passes (scratch files are not fingerprinted).
+        use crate::live::store::LiveTuning;
+        let mut w = Workflow::new();
+        w.preload("/backend/in", 200_000);
+        w.push(
+            TaskSpec::new(0, "stageIn")
+                .read("/backend/in", Tier::Backend)
+                .write("/w/in", Tier::Intermediate, 150_000, TagSet::from_pairs([("DP", "local")])),
+        );
+        w.push(
+            TaskSpec::new(0, "s1")
+                .read("/w/in", Tier::Intermediate)
+                .write("/w/out", Tier::Intermediate, 100_000, TagSet::new()),
+        );
+        let store = LiveStore::woss_with(
+            3,
+            LiveTuning {
+                cache_bytes: Some(4 << 20),
+                lifetime: true,
+                ..LiveTuning::default()
+            },
+        );
+        let engine = LiveEngine::with_options(
+            store,
+            2,
+            EngineOptions {
+                lifetime: true,
+                prefetch: true,
+            },
+        )
+        .unwrap();
+        let report = engine.run(&w).unwrap();
+        assert_eq!(report.tasks, 2);
+        assert_eq!(report.files_reclaimed, 1, "/w/in died after its only read");
+        assert_eq!(report.bytes_reclaimed, 150_000);
+        assert!(engine.store().file_size("/w/in").is_none(), "reclaimed");
+        assert!(engine.store().file_size("/w/out").is_some(), "output survives");
+        assert!(report.fingerprints.contains_key("/w/out"));
+        assert!(!report.fingerprints.contains_key("/w/in"));
+        let verified = engine.verify(&report).unwrap();
+        assert_eq!(verified, report.fingerprints.len());
     }
 
     fn small_workflow() -> Workflow {

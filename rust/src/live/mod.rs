@@ -17,9 +17,20 @@
 //! [`store::LiveStore::flush_replication`] barrier. The
 //! `live_throughput` bench sweeps reader/writer thread counts against
 //! stripe counts.
+//!
+//! On top sits the hint-driven **lifetime & cache tier**
+//! ([`store::LiveTuning::cache_bytes`] / [`store::LiveTuning::lifetime`]):
+//! a per-node, capacity-bounded hot-chunk cache with hint-aware
+//! eviction, automatic reclamation of `Lifetime=scratch` intermediates
+//! after their last declared consumer read, and `Pattern=pipeline`
+//! prefetch into the consumer node's cache — the first feature where
+//! the top-down and bottom-up channels interact on the same file (the
+//! runtime tags lifetimes down, and verifies `consumers_left` /
+//! `cache_state` back up). The `live_cache` bench sweeps cache size ×
+//! eviction policy.
 
 pub mod engine;
 pub mod store;
 
-pub use engine::{LiveEngine, LiveReport};
-pub use store::{LiveStore, LiveTuning};
+pub use engine::{EngineOptions, LiveEngine, LiveReport};
+pub use store::{CachePolicy, CacheStats, LiveStore, LiveTuning};

@@ -33,9 +33,33 @@
 //! fail, exactly as with the previous single-lock store. While
 //! optimistic replicas are still draining, reads transparently fall
 //! back to a holder that has materialized the chunk.
+//!
+//! # Lifetime & cache tier
+//!
+//! On top of the authoritative per-node stores sits an **optional,
+//! capacity-bounded hot-chunk cache** ([`LiveTuning::cache_bytes`],
+//! budget per node, disabled by default so the default store behaves
+//! exactly like the uncached one). Remote chunk reads populate the
+//! reader's cache; [`LiveStore::prefetch`] promotes a file's chunks
+//! into a consumer node's cache off-thread through the replication
+//! worker pool (the `Pattern=pipeline` optimization). Eviction is
+//! hint-aware ([`CachePolicy::HintAware`]): `Lifetime=scratch` entries
+//! evict first, durable entries next, and `Pattern=broadcast` entries
+//! stay pinned until the declared fan-out completes; a plain
+//! [`CachePolicy::Lru`] baseline ignores the hints.
+//!
+//! With [`LiveTuning::lifetime`] enabled the store also *enforces*
+//! lifetimes: a file tagged `Lifetime=scratch;Consumers=<n>` is
+//! reclaimed automatically — namespace entry, capacity, chunks, cache
+//! entries, queued background copies — after its `n`-th whole-file
+//! read. The remaining count is exposed bottom-up through the
+//! reserved `consumers_left` attribute and cache residency through
+//! `cache_state`, so a runtime can verify the protocol. Reads beyond
+//! the declared consumer count see `NotFound` — the count is a
+//! contract, not a guess.
 
 use crate::dispatch::{shard_for_path, PlacementCtx, Registry, ShardedPlacementState};
-use crate::hints::TagSet;
+use crate::hints::{AccessPattern, Lifetime, TagSet};
 use crate::storage::types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -43,6 +67,21 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 /// Default chunk size for the live store (256 KiB = one kernel tile).
 pub const LIVE_CHUNK: u64 = 256 * 1024;
+
+/// Eviction policy for the hot-chunk cache tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CachePolicy {
+    /// Plain least-recently-used: every entry is equal. The baseline a
+    /// hint-blind cache would implement — pinned entries are evicted
+    /// like any other.
+    Lru,
+    /// Hint-aware eviction: `Lifetime=scratch` entries evict first
+    /// (LRU among themselves), durable entries next, and pinned
+    /// broadcast entries never — under pressure the cache declines to
+    /// admit a new chunk rather than break a pin.
+    #[default]
+    HintAware,
+}
 
 /// Concurrency tuning for a [`LiveStore`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,6 +92,17 @@ pub struct LiveTuning {
     /// Background replication worker threads (optimistic `RepSmntc`);
     /// clamped to ≥ 1.
     pub repl_workers: usize,
+    /// Per-node hot-chunk cache budget in bytes. `None` (the default)
+    /// disables the cache tier entirely — the store behaves exactly
+    /// like the uncached concurrent store.
+    pub cache_bytes: Option<u64>,
+    /// Eviction policy for the cache tier (ignored while the tier is
+    /// disabled).
+    pub cache_policy: CachePolicy,
+    /// Enforce `Lifetime=scratch;Consumers=<n>` reclamation and
+    /// broadcast cache pinning. Off by default: lifetime tags are
+    /// carried but inert, exactly as before this tier existed.
+    pub lifetime: bool,
 }
 
 impl Default for LiveTuning {
@@ -60,6 +110,9 @@ impl Default for LiveTuning {
         LiveTuning {
             stripes: 8,
             repl_workers: 2,
+            cache_bytes: None,
+            cache_policy: CachePolicy::default(),
+            lifetime: false,
         }
     }
 }
@@ -68,6 +121,235 @@ impl Default for LiveTuning {
 #[derive(Default)]
 struct NodeStore {
     chunks: RwLock<HashMap<(FileId, u64), Vec<u8>>>,
+}
+
+/// Eviction class of a cached chunk, derived from its file's tags at
+/// insert time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CacheClass {
+    /// `Lifetime=scratch`: first out under pressure.
+    Scratch,
+    /// Untagged / durable: plain LRU among themselves.
+    Durable,
+    /// `Pattern=broadcast` with consumers outstanding: never evicted
+    /// (hint-aware policy) until the fan-out completes.
+    Pinned,
+}
+
+/// One cached chunk.
+struct CacheEntry {
+    bytes: Vec<u8>,
+    class: CacheClass,
+    last_used: u64,
+}
+
+/// One node's cache: entries + resident accounting + an LRU clock.
+#[derive(Default)]
+struct NodeCache {
+    entries: HashMap<(FileId, u64), CacheEntry>,
+    resident: u64,
+    tick: u64,
+}
+
+/// Observable cache-tier counters (see [`LiveStore::cache_stats`]).
+/// All zeros while the tier is disabled.
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    /// Bytes currently resident per node cache.
+    pub resident: Vec<u64>,
+    /// Highest bytes ever resident in any single node's cache — must
+    /// never exceed the configured per-node budget.
+    pub peak_node_resident: u64,
+    /// Chunk reads served from a cache.
+    pub hits: u64,
+    /// Chunks admitted into a cache.
+    pub insertions: u64,
+    /// Chunks evicted under pressure.
+    pub evictions: u64,
+    /// Chunks promoted by the off-thread prefetch path.
+    pub prefetched: u64,
+    /// Entries currently pinned (broadcast fan-out outstanding).
+    pub pinned_entries: u64,
+    /// Scratch files auto-reclaimed after their last declared read.
+    pub files_reclaimed: u64,
+    /// Logical bytes freed by auto-reclamation.
+    pub bytes_reclaimed: u64,
+}
+
+/// The per-node, capacity-bounded hot-chunk cache tier.
+///
+/// Caches sit beside the authoritative stores: they hold copies of
+/// chunks a node does not own, so a consumer's repeat reads stay
+/// node-local. Inserts are best-effort — when the budget cannot be met
+/// without evicting a pinned entry (hint-aware policy), the chunk is
+/// simply not cached. Cache bytes are bounded by the budget and do not
+/// count against node storage capacity.
+struct CacheTier {
+    nodes: Vec<Mutex<NodeCache>>,
+    /// Per-node budget, bytes.
+    budget: u64,
+    policy: CachePolicy,
+    hits: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    prefetched: AtomicU64,
+    peak_node_resident: AtomicU64,
+}
+
+impl CacheTier {
+    fn new(n_nodes: usize, budget: u64, policy: CachePolicy) -> Self {
+        CacheTier {
+            nodes: (0..n_nodes).map(|_| Mutex::new(NodeCache::default())).collect(),
+            budget,
+            policy,
+            hits: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            prefetched: AtomicU64::new(0),
+            peak_node_resident: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a chunk in `node`'s cache, refreshing its recency.
+    fn get(&self, node: NodeId, key: (FileId, u64)) -> Option<Vec<u8>> {
+        let mut c = self.nodes[node.0].lock().unwrap();
+        c.tick += 1;
+        let tick = c.tick;
+        let entry = c.entries.get_mut(&key)?;
+        entry.last_used = tick;
+        let bytes = entry.bytes.clone();
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(bytes)
+    }
+
+    /// Is the chunk resident in `node`'s cache? (No recency touch.)
+    fn contains(&self, node: NodeId, key: (FileId, u64)) -> bool {
+        self.nodes[node.0].lock().unwrap().entries.contains_key(&key)
+    }
+
+    /// Best-effort insert into `node`'s cache. Returns `false` when the
+    /// chunk cannot be admitted within the budget (larger than the
+    /// whole budget, or — hint-aware policy — only pinned entries could
+    /// make room).
+    fn insert(&self, node: NodeId, key: (FileId, u64), bytes: Vec<u8>, class: CacheClass) -> bool {
+        let need = bytes.len() as u64;
+        if need > self.budget {
+            return false;
+        }
+        let mut c = self.nodes[node.0].lock().unwrap();
+        if let Some(old) = c.entries.remove(&key) {
+            // Re-insert refreshes bytes, class, and recency.
+            c.resident -= old.bytes.len() as u64;
+        }
+        while c.resident + need > self.budget {
+            let victim = match self.policy {
+                CachePolicy::Lru => c
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| *k),
+                CachePolicy::HintAware => {
+                    let oldest_of = |want: CacheClass| {
+                        c.entries
+                            .iter()
+                            .filter(|(_, e)| e.class == want)
+                            .min_by_key(|(_, e)| e.last_used)
+                            .map(|(k, _)| *k)
+                    };
+                    oldest_of(CacheClass::Scratch).or_else(|| oldest_of(CacheClass::Durable))
+                }
+            };
+            match victim {
+                Some(k) => {
+                    let evicted = c.entries.remove(&k).expect("victim resident");
+                    c.resident -= evicted.bytes.len() as u64;
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                // Only pinned entries left: decline to cache.
+                None => return false,
+            }
+        }
+        c.tick += 1;
+        let tick = c.tick;
+        c.resident += need;
+        c.entries.insert(
+            key,
+            CacheEntry {
+                bytes,
+                class,
+                last_used: tick,
+            },
+        );
+        let resident = c.resident;
+        drop(c);
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        self.peak_node_resident.fetch_max(resident, Ordering::Relaxed);
+        true
+    }
+
+    /// Drop every cached chunk of `file` on every node (delete /
+    /// reclaim sweep).
+    fn purge_file(&self, file: FileId) {
+        for node in &self.nodes {
+            let mut c = node.lock().unwrap();
+            let keys: Vec<(FileId, u64)> =
+                c.entries.keys().filter(|k| k.0 == file).copied().collect();
+            for k in keys {
+                let e = c.entries.remove(&k).expect("key just listed");
+                c.resident -= e.bytes.len() as u64;
+            }
+        }
+    }
+
+    /// Demote `file`'s pinned entries to durable: its broadcast
+    /// fan-out completed, ordinary LRU applies from here on.
+    fn unpin_file(&self, file: FileId) {
+        for node in &self.nodes {
+            let mut c = node.lock().unwrap();
+            for (k, e) in c.entries.iter_mut() {
+                if k.0 == file && e.class == CacheClass::Pinned {
+                    e.class = CacheClass::Durable;
+                }
+            }
+        }
+    }
+
+    /// Residency of `file` across all node caches:
+    /// `(chunk copies, bytes, pinned copies)`.
+    fn file_state(&self, file: FileId) -> (u64, u64, u64) {
+        let (mut chunks, mut bytes, mut pinned) = (0u64, 0u64, 0u64);
+        for node in &self.nodes {
+            let c = node.lock().unwrap();
+            for (k, e) in c.entries.iter() {
+                if k.0 == file {
+                    chunks += 1;
+                    bytes += e.bytes.len() as u64;
+                    if e.class == CacheClass::Pinned {
+                        pinned += 1;
+                    }
+                }
+            }
+        }
+        (chunks, bytes, pinned)
+    }
+
+    /// Fill the tier's counters into `stats`.
+    fn fill_stats(&self, stats: &mut CacheStats) {
+        for node in &self.nodes {
+            let c = node.lock().unwrap();
+            stats.resident.push(c.resident);
+            stats.pinned_entries += c
+                .entries
+                .values()
+                .filter(|e| e.class == CacheClass::Pinned)
+                .count() as u64;
+        }
+        stats.peak_node_resident = self.peak_node_resident.load(Ordering::Relaxed);
+        stats.hits = self.hits.load(Ordering::Relaxed);
+        stats.insertions = self.insertions.load(Ordering::Relaxed);
+        stats.evictions = self.evictions.load(Ordering::Relaxed);
+        stats.prefetched = self.prefetched.load(Ordering::Relaxed);
+    }
 }
 
 /// One namespace stripe: the files (and pre-creation tags) whose path
@@ -87,13 +369,29 @@ struct PlacementCore {
     placement: ShardedPlacementState,
 }
 
-/// One background replication job: copy a chunk's payload to the
-/// remaining replica holders.
+/// What a background job does with its chunk.
+enum ReplWork {
+    /// Copy a write's payload to the remaining replica holders
+    /// (optimistic `RepSmntc`).
+    Copy {
+        payload: Arc<Vec<u8>>,
+        targets: Vec<NodeId>,
+    },
+    /// Promote the chunk from any holder's store into `target`'s cache
+    /// (the `Pattern=pipeline` prefetch path). No payload is held in
+    /// the queue: the bytes are fetched at execution time.
+    Promote {
+        sources: Vec<NodeId>,
+        target: NodeId,
+        class: CacheClass,
+    },
+}
+
+/// One background job: a chunk plus the work to do with it.
 struct ReplJob {
     file: FileId,
     chunk: u64,
-    payload: Arc<Vec<u8>>,
-    targets: Vec<NodeId>,
+    work: ReplWork,
 }
 
 /// Backpressure bound: at most this many queued jobs per worker. Each
@@ -121,6 +419,8 @@ struct ReplShared {
     /// Signaled when a job completes (flush / cancel barriers re-check).
     drained: Condvar,
     stores: Arc<Vec<NodeStore>>,
+    /// Cache tier promote jobs land in (absent when the tier is off).
+    cache: Option<Arc<CacheTier>>,
     /// Replica chunk copies completed in the background.
     copied: AtomicU64,
 }
@@ -134,7 +434,7 @@ struct ReplPool {
 }
 
 impl ReplPool {
-    fn new(stores: Arc<Vec<NodeStore>>, workers: usize) -> Self {
+    fn new(stores: Arc<Vec<NodeStore>>, cache: Option<Arc<CacheTier>>, workers: usize) -> Self {
         let shared = Arc::new(ReplShared {
             queue: Mutex::new(ReplQueue {
                 jobs: VecDeque::new(),
@@ -144,6 +444,7 @@ impl ReplPool {
             work: Condvar::new(),
             drained: Condvar::new(),
             stores,
+            cache,
             copied: AtomicU64::new(0),
         });
         let n_workers = workers.max(1);
@@ -193,6 +494,20 @@ impl ReplPool {
         }
     }
 
+    /// Drop queued cache promotions for `file` and wait out its
+    /// in-flight jobs, leaving queued replica copies untouched. Used
+    /// when the file's pin state changes: a promotion carrying a
+    /// stale `Pinned` class must not land after the fan-out completed,
+    /// or nothing would ever unpin it.
+    fn cancel_promotes(&self, file: FileId) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs
+            .retain(|j| j.file != file || matches!(j.work, ReplWork::Copy { .. }));
+        while q.in_flight.contains_key(&file) {
+            q = self.shared.drained.wait(q).unwrap();
+        }
+    }
+
     /// Queued + in-flight copy jobs (diagnostics).
     fn pending(&self) -> usize {
         let q = self.shared.queue.lock().unwrap();
@@ -233,13 +548,44 @@ fn worker_loop(shared: &ReplShared) {
         // A slot just freed: wake any writer blocked on backpressure
         // (flush/cancel waiters re-check their conditions and re-sleep).
         shared.drained.notify_all();
-        for &target in &job.targets {
-            shared.stores[target.0]
-                .chunks
-                .write()
-                .unwrap()
-                .insert((job.file, job.chunk), job.payload.as_ref().clone());
-            shared.copied.fetch_add(1, Ordering::Relaxed);
+        let key = (job.file, job.chunk);
+        match &job.work {
+            ReplWork::Copy { payload, targets } => {
+                for &target in targets {
+                    shared.stores[target.0]
+                        .chunks
+                        .write()
+                        .unwrap()
+                        .insert(key, payload.as_ref().clone());
+                    shared.copied.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            ReplWork::Promote {
+                sources,
+                target,
+                class,
+            } => {
+                // Re-check residency at execution time: a concurrent
+                // read may have cached the chunk since the job was
+                // queued — promoting again would fetch and copy for
+                // nothing.
+                if let Some(cache) = &shared.cache {
+                    if !cache.contains(*target, key) {
+                        // Fetch from the first holder that has
+                        // materialized the chunk; a file deleted
+                        // mid-flight simply has no source left and the
+                        // job becomes a no-op.
+                        let bytes = sources.iter().find_map(|s| {
+                            shared.stores[s.0].chunks.read().unwrap().get(&key).cloned()
+                        });
+                        if let Some(bytes) = bytes {
+                            if cache.insert(*target, key, bytes, *class) {
+                                cache.prefetched.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            }
         }
         let mut q = shared.queue.lock().unwrap();
         if let Some(n) = q.in_flight.get_mut(&job.file) {
@@ -259,6 +605,11 @@ pub struct LiveStore {
     stripes: Vec<Mutex<NamespaceShard>>,
     core: Mutex<PlacementCore>,
     stores: Arc<Vec<NodeStore>>,
+    /// Hot-chunk cache tier ([`LiveTuning::cache_bytes`]); absent by
+    /// default.
+    cache: Option<Arc<CacheTier>>,
+    /// Enforce scratch-lifetime reclamation and broadcast pinning.
+    lifetime_on: bool,
     next_id: AtomicU64,
     repl: ReplPool,
     /// Bytes written through [`LiveStore::write_file`] (lock-free counter).
@@ -276,6 +627,11 @@ pub struct LiveStore {
     /// Replica chunk copies handed to the background pool (optimistic
     /// `RepSmntc` writes).
     pub replicas_deferred: AtomicU64,
+    /// Scratch files auto-reclaimed after their last declared consumer
+    /// read (lifetime enforcement).
+    pub files_reclaimed: AtomicU64,
+    /// Logical bytes freed by auto-reclamation.
+    pub bytes_reclaimed: AtomicU64,
     /// Failure injection: nodes marked dead serve nothing.
     dead: RwLock<Vec<bool>>,
 }
@@ -297,6 +653,9 @@ impl LiveStore {
         let stores: Arc<Vec<NodeStore>> =
             Arc::new((0..n_nodes).map(|_| NodeStore::default()).collect());
         let n_stripes = tuning.stripes.max(1);
+        let cache = tuning
+            .cache_bytes
+            .map(|budget| Arc::new(CacheTier::new(n_nodes, budget, tuning.cache_policy)));
         LiveStore {
             registry,
             stripes: (0..n_stripes)
@@ -313,8 +672,10 @@ impl LiveStore {
                 placement: ShardedPlacementState::new(n_stripes),
             }),
             stores: Arc::clone(&stores),
+            cache: cache.clone(),
+            lifetime_on: tuning.lifetime,
             next_id: AtomicU64::new(1),
-            repl: ReplPool::new(stores, tuning.repl_workers),
+            repl: ReplPool::new(stores, cache, tuning.repl_workers),
             bytes_written: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
             local_reads: AtomicU64::new(0),
@@ -322,6 +683,8 @@ impl LiveStore {
             setattr_ops: AtomicU64::new(0),
             getattr_ops: AtomicU64::new(0),
             replicas_deferred: AtomicU64::new(0),
+            files_reclaimed: AtomicU64::new(0),
+            bytes_reclaimed: AtomicU64::new(0),
             dead: RwLock::new(vec![false; n_nodes]),
         }
     }
@@ -340,8 +703,15 @@ impl LiveStore {
             LiveTuning {
                 stripes,
                 repl_workers,
+                ..LiveTuning::default()
             },
         )
+    }
+
+    /// WOSS deployment with full [`LiveTuning`] (cache tier, lifetime
+    /// enforcement) over effectively unbounded node capacity.
+    pub fn woss_with(n_nodes: usize, tuning: LiveTuning) -> Self {
+        LiveStore::with_tuning(Registry::woss(), n_nodes, u64::MAX / 2, tuning)
     }
 
     /// DSS baseline deployment (default tuning).
@@ -358,6 +728,7 @@ impl LiveStore {
             LiveTuning {
                 stripes,
                 repl_workers,
+                ..LiveTuning::default()
             },
         )
     }
@@ -458,10 +829,23 @@ impl LiveStore {
     /// attributes are served by the registry's providers. Plain user
     /// tags never touch the shared placement core, so getattr traffic
     /// on unrelated files scales with the stripes.
+    ///
+    /// The reserved `cache_state` attribute is served directly by the
+    /// store (node-local cache residency is live-deployment state the
+    /// manager-side providers cannot see): its value is
+    /// `chunks=<copies>;bytes=<n>;pinned=<copies>` summed over every
+    /// node's cache.
     pub fn get_xattr(&self, path: &str, key: &str) -> Option<String> {
         self.getattr_ops.fetch_add(1, Ordering::Relaxed);
         let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
         let meta = stripe.files.get(path)?;
+        if self.registry.hints_enabled() && key == crate::hints::CACHE_STATE_ATTR {
+            let (chunks, bytes, pinned) = match &self.cache {
+                Some(cache) => cache.file_state(meta.id),
+                None => (0, 0, 0),
+            };
+            return Some(format!("chunks={chunks};bytes={bytes};pinned={pinned}"));
+        }
         if self.registry.serves_attr(key) {
             let core = self.core.lock().unwrap();
             if let Some(value) = self.registry.get_system_attr(key, meta, &core.nodes) {
@@ -623,8 +1007,10 @@ impl LiveStore {
                 self.repl.enqueue(ReplJob {
                     file: meta.id,
                     chunk: idx,
-                    payload: Arc::new(payload.to_vec()),
-                    targets: replicas.to_vec(),
+                    work: ReplWork::Copy {
+                        payload: Arc::new(payload.to_vec()),
+                        targets: replicas.to_vec(),
+                    },
                 });
             }
         }
@@ -648,6 +1034,9 @@ impl LiveStore {
                         .remove(&(meta.id, idx as u64));
                 }
             }
+            if let Some(cache) = &self.cache {
+                cache.purge_file(meta.id);
+            }
         }
         self.bytes_written.fetch_add(size, Ordering::Relaxed);
         Ok(())
@@ -655,8 +1044,13 @@ impl LiveStore {
 
     /// Read a whole file into a buffer from `client`'s perspective
     /// (locality counted per chunk). Prefers the reader's own store,
-    /// then any live holder that has materialized the chunk — so reads
-    /// stay correct while optimistic replication is still draining.
+    /// then the reader's cache tier, then any live holder that has
+    /// materialized the chunk — so reads stay correct while optimistic
+    /// replication is still draining. Remote chunks populate the
+    /// reader's cache (when the tier is enabled), and a completed read
+    /// counts against the file's declared consumers (when lifetime
+    /// enforcement is on) — the last declared read reclaims a scratch
+    /// file.
     pub fn read_file(&self, client: NodeId, path: &str) -> Result<Vec<u8>, StorageError> {
         let meta = {
             let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
@@ -666,6 +1060,7 @@ impl LiveStore {
                 .cloned()
                 .ok_or_else(|| StorageError::NotFound(path.to_string()))?
         };
+        let client_alive = self.is_alive(client);
         let mut out = Vec::with_capacity(meta.size as usize);
         for (idx, chunk) in meta.chunks.iter().enumerate() {
             let key = (meta.id, idx as u64);
@@ -683,21 +1078,42 @@ impl LiveStore {
                     chunk.replicas.len()
                 )));
             }
-            let ordered = std::iter::once(client)
-                .filter(|c| live.contains(c))
-                .chain(live.iter().copied().filter(|&n| n != client));
             let mut served = false;
-            for source in ordered {
-                let store = self.stores[source.0].chunks.read().unwrap();
+            // 1. The reader's own store (authoritative copy).
+            if live.contains(&client) {
+                let store = self.stores[client.0].chunks.read().unwrap();
                 if let Some(bytes) = store.get(&key) {
                     out.extend_from_slice(bytes);
-                    if source == client {
-                        self.local_reads.fetch_add(1, Ordering::Relaxed);
-                    } else {
-                        self.remote_reads.fetch_add(1, Ordering::Relaxed);
-                    }
+                    self.local_reads.fetch_add(1, Ordering::Relaxed);
                     served = true;
-                    break;
+                }
+            }
+            // 2. The reader's cache tier (still node-local).
+            if !served && client_alive {
+                if let Some(cache) = &self.cache {
+                    if let Some(bytes) = cache.get(client, key) {
+                        out.extend_from_slice(&bytes);
+                        self.local_reads.fetch_add(1, Ordering::Relaxed);
+                        served = true;
+                    }
+                }
+            }
+            // 3. Any live holder that materialized the chunk; fill the
+            //    reader's cache on the way so the next read is local —
+            //    unless the reader is itself a (still-draining) holder,
+            //    whose authoritative copy is about to arrive anyway.
+            if !served {
+                for source in live.iter().copied().filter(|&n| n != client) {
+                    let got = self.stores[source.0].chunks.read().unwrap().get(&key).cloned();
+                    if let Some(bytes) = got {
+                        out.extend_from_slice(&bytes);
+                        self.remote_reads.fetch_add(1, Ordering::Relaxed);
+                        if client_alive && !live.contains(&client) {
+                            self.cache_insert_current(client, path, key, bytes);
+                        }
+                        served = true;
+                        break;
+                    }
                 }
             }
             if !served {
@@ -708,20 +1124,126 @@ impl LiveStore {
         }
         self.bytes_read
             .fetch_add(out.len() as u64, Ordering::Relaxed);
+        if self.lifetime_on
+            && self.registry.hints_enabled()
+            && meta.tags.consumers().is_some()
+        {
+            self.consume_one(path, meta.id);
+        }
         Ok(out)
     }
 
-    /// Delete a file and free its chunks. Queued background copies for
-    /// the file are cancelled (and in-flight ones waited out) so a
-    /// straggler cannot resurrect swept chunks.
-    pub fn delete(&self, path: &str) -> Result<(), StorageError> {
-        let meta = {
-            let mut stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
-            stripe
-                .files
-                .remove(path)
-                .ok_or_else(|| StorageError::NotFound(path.to_string()))?
+    /// Eviction class for chunks of this file, per its tags. A DSS
+    /// baseline (hints disabled) never interprets tags, so everything
+    /// is plain durable there — in particular it must never pin, since
+    /// the only unpin path (the consumer countdown in
+    /// [`Self::consume_one`]) also requires hints. Broadcast pinning
+    /// additionally requires lifetime enforcement, which drives the
+    /// countdown that releases the pin.
+    fn cache_class(&self, meta: &FileMeta) -> CacheClass {
+        if !self.registry.hints_enabled() {
+            return CacheClass::Durable;
+        }
+        if self.lifetime_on
+            && meta.tags.pattern() == Some(AccessPattern::Broadcast)
+            && meta.tags.consumers().is_some()
+        {
+            return CacheClass::Pinned;
+        }
+        if meta.tags.lifetime() == Lifetime::Scratch {
+            return CacheClass::Scratch;
+        }
+        CacheClass::Durable
+    }
+
+    /// Cache-fill with the class derived from the file's *current*
+    /// metadata, atomically with respect to the consumer countdown
+    /// (both run under the namespace stripe lock). Deriving the class
+    /// from a metadata clone taken at read start would race the
+    /// fan-out countdown: a `Pinned` entry inserted after the last
+    /// consumer's `unpin_file` pass would never be unpinned. A file
+    /// that was reclaimed, deleted, or re-created mid-read is simply
+    /// not cached.
+    fn cache_insert_current(&self, client: NodeId, path: &str, key: (FileId, u64), bytes: Vec<u8>) {
+        let Some(cache) = &self.cache else { return };
+        let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+        let Some(meta) = stripe.files.get(path) else {
+            return;
         };
+        if meta.id != key.0 {
+            return;
+        }
+        let class = self.cache_class(meta);
+        cache.insert(client, key, bytes, class);
+    }
+
+    /// One declared consumer read of `path` completed. Decrements the
+    /// remaining count (kept in the file's own `Consumers` tag, so the
+    /// bottom-up `consumers_left` attribute always reflects it); the
+    /// last read reclaims a scratch file entirely and releases a
+    /// durable broadcast file's cache pins.
+    fn consume_one(&self, path: &str, id: FileId) {
+        enum Outcome {
+            Reclaim(FileMeta),
+            FanOutDone(FileId),
+            Pending,
+        }
+        let outcome = {
+            let mut stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            let info = match stripe.files.get(path) {
+                // The id check skips files re-created at this path
+                // after a delete raced the read.
+                Some(meta) if meta.id == id => Some((meta.tags.consumers(), meta.tags.lifetime())),
+                _ => None,
+            };
+            match info {
+                Some((Some(1), Lifetime::Scratch)) => match stripe.files.remove(path) {
+                    Some(meta) => Outcome::Reclaim(meta),
+                    None => Outcome::Pending,
+                },
+                Some((Some(n), _)) => {
+                    if let Some(meta) = stripe.files.get_mut(path) {
+                        let left = n - 1;
+                        meta.tags
+                            .set(crate::hints::keys::CONSUMERS, &left.to_string());
+                        if left == 0 {
+                            // Durable broadcast: fan-out complete,
+                            // release the cache pins.
+                            Outcome::FanOutDone(meta.id)
+                        } else {
+                            Outcome::Pending
+                        }
+                    } else {
+                        Outcome::Pending
+                    }
+                }
+                _ => Outcome::Pending,
+            }
+        };
+        match outcome {
+            Outcome::Reclaim(meta) => {
+                self.sweep_file(&meta);
+                self.files_reclaimed.fetch_add(1, Ordering::Relaxed);
+                self.bytes_reclaimed.fetch_add(meta.size, Ordering::Relaxed);
+            }
+            Outcome::FanOutDone(file) => {
+                if let Some(cache) = &self.cache {
+                    // Queued/in-flight promotions still carry the
+                    // enqueue-time `Pinned` class; drain them first so
+                    // none can land after the unpin pass and stay
+                    // pinned forever.
+                    self.repl.cancel_promotes(file);
+                    cache.unpin_file(file);
+                }
+            }
+            Outcome::Pending => {}
+        }
+    }
+
+    /// Free `meta`'s capacity, cancel its background jobs, and sweep
+    /// its chunks from every store and cache. The caller has already
+    /// removed the namespace entry.
+    fn sweep_file(&self, meta: &FileMeta) {
         {
             let mut core = self.core.lock().unwrap();
             for (idx, chunk) in meta.chunks.iter().enumerate() {
@@ -743,6 +1265,101 @@ impl LiveStore {
                     .remove(&(meta.id, idx as u64));
             }
         }
+        if let Some(cache) = &self.cache {
+            cache.purge_file(meta.id);
+        }
+    }
+
+    /// Promote `path`'s chunks into `client`'s cache off-thread — the
+    /// `Pattern=pipeline` optimization: the workflow runtime knows
+    /// which node will consume a stage's output next and warms that
+    /// node's cache through the background worker pool. Chunks already
+    /// resident on the client (holder or cached) are skipped. Returns
+    /// the number of promotions queued; `0` when the cache tier is
+    /// disabled or hints are off (DSS baseline).
+    /// [`LiveStore::flush_replication`] is the barrier that makes the
+    /// promotions visible deterministically.
+    pub fn prefetch(&self, client: NodeId, path: &str) -> Result<usize, StorageError> {
+        let Some(cache) = &self.cache else {
+            return Ok(0);
+        };
+        if !self.registry.hints_enabled() {
+            return Ok(0);
+        }
+        let meta = {
+            let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            stripe
+                .files
+                .get(path)
+                .cloned()
+                .ok_or_else(|| StorageError::NotFound(path.to_string()))?
+        };
+        let class = self.cache_class(&meta);
+        let mut queued = 0;
+        for (idx, chunk) in meta.chunks.iter().enumerate() {
+            let key = (meta.id, idx as u64);
+            if chunk.replicas.contains(&client) || cache.contains(client, key) {
+                continue;
+            }
+            let sources: Vec<NodeId> = chunk
+                .replicas
+                .iter()
+                .copied()
+                .filter(|&n| self.is_alive(n))
+                .collect();
+            if sources.is_empty() {
+                continue;
+            }
+            self.repl.enqueue(ReplJob {
+                file: meta.id,
+                chunk: idx as u64,
+                work: ReplWork::Promote {
+                    sources,
+                    target: client,
+                    class,
+                },
+            });
+            queued += 1;
+        }
+        Ok(queued)
+    }
+
+    /// Is the hot-chunk cache tier configured?
+    pub fn cache_enabled(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Is scratch-lifetime enforcement on?
+    pub fn lifetime_enabled(&self) -> bool {
+        self.lifetime_on
+    }
+
+    /// Snapshot of the cache tier's counters (all zeros when the tier
+    /// is disabled) plus the reclamation counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut stats = CacheStats::default();
+        match &self.cache {
+            Some(cache) => cache.fill_stats(&mut stats),
+            None => stats.resident = vec![0; self.stores.len()],
+        }
+        stats.files_reclaimed = self.files_reclaimed.load(Ordering::Relaxed);
+        stats.bytes_reclaimed = self.bytes_reclaimed.load(Ordering::Relaxed);
+        stats
+    }
+
+    /// Delete a file and free its chunks (including any cached
+    /// copies). Queued background copies for the file are cancelled
+    /// (and in-flight ones waited out) so a straggler cannot resurrect
+    /// swept chunks.
+    pub fn delete(&self, path: &str) -> Result<(), StorageError> {
+        let meta = {
+            let mut stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            stripe
+                .files
+                .remove(path)
+                .ok_or_else(|| StorageError::NotFound(path.to_string()))?
+        };
+        self.sweep_file(&meta);
         Ok(())
     }
 
@@ -999,5 +1616,52 @@ mod tests {
         store.delete("/f").unwrap();
         assert!(store.read_file(NodeId(0), "/f").is_err());
         assert!(store.delete("/f").is_err());
+    }
+
+    #[test]
+    fn cache_tier_budget_and_eviction_classes() {
+        let tier = CacheTier::new(2, 1000, CachePolicy::HintAware);
+        let f = FileId(1);
+        assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Durable));
+        assert!(tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Scratch));
+        // Admitting a third chunk needs room: scratch goes first.
+        assert!(tier.insert(NodeId(0), (f, 2), vec![3u8; 400], CacheClass::Durable));
+        assert!(tier.get(NodeId(0), (f, 1)).is_none(), "scratch evicted first");
+        assert!(tier.get(NodeId(0), (f, 0)).is_some(), "durable survived");
+        // A chunk larger than the whole budget is declined outright.
+        assert!(!tier.insert(NodeId(0), (f, 3), vec![0u8; 2000], CacheClass::Durable));
+        // Pinned entries never evict under the hint-aware policy: the
+        // cache declines the newcomer instead.
+        let tier = CacheTier::new(1, 500, CachePolicy::HintAware);
+        assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Pinned));
+        assert!(!tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Durable));
+        assert!(tier.get(NodeId(0), (f, 0)).is_some(), "pin held");
+        // Plain LRU is hint-blind: the same pressure evicts the pin.
+        let tier = CacheTier::new(1, 500, CachePolicy::Lru);
+        assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Pinned));
+        assert!(tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Durable));
+        assert!(tier.get(NodeId(0), (f, 0)).is_none(), "LRU ignores pins");
+    }
+
+    #[test]
+    fn default_store_has_no_cache_tier() {
+        let store = LiveStore::woss(3);
+        assert!(!store.cache_enabled());
+        assert!(!store.lifetime_enabled());
+        let data = vec![1u8; 100_000];
+        store
+            .write_file(NodeId(0), "/f", &data, &TagSet::from_pairs([("DP", "local")]))
+            .unwrap();
+        store.read_file(NodeId(1), "/f").unwrap();
+        store.read_file(NodeId(1), "/f").unwrap();
+        assert_eq!(
+            store.remote_reads.load(Ordering::Relaxed),
+            2,
+            "no cache tier: repeat reads stay remote, exactly as before"
+        );
+        let stats = store.cache_stats();
+        assert_eq!(stats.hits, 0);
+        assert!(stats.resident.iter().all(|&r| r == 0));
+        assert_eq!(store.prefetch(NodeId(1), "/f").unwrap(), 0);
     }
 }

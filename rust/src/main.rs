@@ -8,14 +8,17 @@
 //! * `live` — run a workload on the live engine (real bytes, real PJRT
 //!   kernels): `--workload pipeline|montage`, `--nodes`, `--workers`,
 //!   `--stripes` (manager lock stripes), `--repl-workers` (background
-//!   replication threads).
+//!   replication threads), `--cache-mb` (per-node hot-chunk cache
+//!   budget; 0 = off), `--cache-policy lru|hint` (eviction policy),
+//!   `--lifetime` (tag + enforce scratch reclamation).
 //! * `list` — experiment ids.
 //! * `calib` — print the active calibration.
 
 use anyhow::{anyhow, Result};
 use woss::bench::experiments;
 use woss::coordinator::{config, report};
-use woss::live::{LiveEngine, LiveStore};
+use woss::dispatch::Registry;
+use woss::live::{CachePolicy, EngineOptions, LiveEngine, LiveStore, LiveTuning};
 use woss::util::cli::Args;
 use woss::workloads;
 
@@ -52,6 +55,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("  woss experiment all --runs 5 --json results.json");
             println!("  woss experiment fig5 --runs 20");
             println!("  woss live --workload montage --nodes 8 --workers 8 --stripes 8 --repl-workers 2");
+            println!("  woss live --workload pipeline --cache-mb 64 --cache-policy hint --lifetime");
             Ok(())
         }
     }
@@ -90,9 +94,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 fn cmd_live(args: &Args) -> Result<()> {
     let nodes = args.get_parse("nodes", 8usize);
     let workers = args.get_parse("workers", 8usize);
-    let tuning = woss::live::LiveTuning::default();
-    let stripes = args.get_parse("stripes", tuning.stripes);
-    let repl_workers = args.get_parse("repl-workers", tuning.repl_workers);
+    let defaults = LiveTuning::default();
+    let stripes = args.get_parse("stripes", defaults.stripes);
+    let repl_workers = args.get_parse("repl-workers", defaults.repl_workers);
+    let cache_mb = args.get_parse("cache-mb", 0u64);
+    let cache_policy = match args.get_or("cache-policy", "hint") {
+        "lru" => CachePolicy::Lru,
+        "hint" => CachePolicy::HintAware,
+        other => return Err(anyhow!("unknown --cache-policy '{other}' (lru|hint)")),
+    };
+    let lifetime = args.has_flag("lifetime");
     let workload = args.get_or("workload", "pipeline");
     let hints = !args.has_flag("no-hints");
 
@@ -107,12 +118,31 @@ fn cmd_live(args: &Args) -> Result<()> {
         other => return Err(anyhow!("unknown workload '{other}' (pipeline|montage)")),
     };
 
-    let store = if hints {
-        LiveStore::woss_tuned(nodes, stripes, repl_workers)
-    } else {
-        LiveStore::dss_tuned(nodes, stripes, repl_workers)
+    let tuning = LiveTuning {
+        stripes,
+        repl_workers,
+        cache_bytes: if cache_mb > 0 {
+            Some(cache_mb * 1024 * 1024)
+        } else {
+            None
+        },
+        cache_policy,
+        lifetime,
     };
-    let engine = LiveEngine::new(store, workers)?;
+    let registry = if hints {
+        Registry::woss()
+    } else {
+        Registry::baseline()
+    };
+    let store = LiveStore::with_tuning(registry, nodes, u64::MAX / 2, tuning);
+    let engine = LiveEngine::with_options(
+        store,
+        workers,
+        EngineOptions {
+            lifetime,
+            prefetch: cache_mb > 0,
+        },
+    )?;
     let rep = engine.run(&wf)?;
     let verified = engine.verify(&rep)?;
     println!("live run: {} tasks in {:.2}s", rep.tasks, rep.elapsed_secs);
@@ -132,6 +162,22 @@ fn cmd_live(args: &Args) -> Result<()> {
         "  replication: {} replica copies drained in the background ({} stripes, {} repl workers)",
         rep.bg_replicas, stripes, repl_workers
     );
+    if cache_mb > 0 {
+        println!(
+            "  cache: {} hits, {} chunks prefetched, peak {:.1} MB resident (budget {cache_mb} MB/node, {:?} eviction)",
+            rep.cache_hits,
+            rep.prefetched_chunks,
+            rep.peak_cache_bytes as f64 / 1048576.0,
+            tuning.cache_policy
+        );
+    }
+    if lifetime {
+        println!(
+            "  lifetime: {} scratch intermediates reclaimed ({:.1} MB returned before run end)",
+            rep.files_reclaimed,
+            rep.bytes_reclaimed as f64 / 1048576.0
+        );
+    }
     println!("  kernels: {:?}", rep.kernel_execs);
     println!("  integrity: {verified} files verified by checksum kernel");
     Ok(())

@@ -223,6 +223,25 @@ impl Workflow {
         Ok(order)
     }
 
+    /// Read operations per intermediate path across the whole workflow
+    /// — the declared consumer count the runtime attaches via
+    /// `Consumers=<n>` when lifetime tagging is on. Counts read
+    /// *operations* (a task listing a path twice counts twice), so one
+    /// decrement per storage read lands at exactly zero after the last
+    /// consumer; backend-tier reads are excluded (stage-in sources are
+    /// not workflow scratch).
+    pub fn consumer_counts(&self) -> BTreeMap<String, u32> {
+        let mut counts: BTreeMap<String, u32> = BTreeMap::new();
+        for t in &self.tasks {
+            for r in &t.reads {
+                if r.tier == Tier::Intermediate {
+                    *counts.entry(r.path.clone()).or_insert(0) += 1;
+                }
+            }
+        }
+        counts
+    }
+
     /// Total bytes written by all tasks (workload characterization).
     pub fn bytes_written(&self) -> u64 {
         self.tasks
@@ -316,5 +335,20 @@ mod tests {
         let w = pipeline3();
         assert_eq!(w.bytes_written(), 1024 + 2048 + 2048);
         assert_eq!(w.stages(), vec!["stageIn", "s1", "stageOut"]);
+    }
+
+    #[test]
+    fn consumer_counts_count_reads_not_tasks() {
+        let mut w = pipeline3(); // /a read once, /b read once, /in is backend
+        w.push(
+            TaskSpec::new(0, "audit")
+                .read("/a", Tier::Intermediate)
+                .read("/a", Tier::Intermediate),
+        );
+        let counts = w.consumer_counts();
+        assert_eq!(counts.get("/a"), Some(&3), "1 pipeline read + 2 audit reads");
+        assert_eq!(counts.get("/b"), Some(&1));
+        assert_eq!(counts.get("/in"), None, "backend reads excluded");
+        assert_eq!(counts.get("/out"), None, "never-read outputs untracked");
     }
 }

@@ -43,6 +43,14 @@ pub struct EngineConfig {
     /// every `stageIn` task has finished (the paper's scripts stage the
     /// whole dataset, then start the benchmark and time it separately).
     pub stage_in_barrier: bool,
+    /// Additionally tag every consumed intermediate output with
+    /// `Lifetime=scratch` + `Consumers=<n>` derived from the DAG —
+    /// the lifetime protocol's top-down half. The simulated stores
+    /// carry the tags (and the run pays the extra `set-attribute`
+    /// traffic, batched like every other tag); enforcement itself is a
+    /// live-store feature. Off by default so existing figures are
+    /// untouched.
+    pub tag_lifetime: bool,
 }
 
 impl Default for EngineConfig {
@@ -56,6 +64,7 @@ impl Default for EngineConfig {
             jitter: 0.03,
             seed: 1,
             stage_in_barrier: true,
+            tag_lifetime: false,
         }
     }
 }
@@ -80,6 +89,7 @@ impl EngineConfig {
             jitter: 0.03,
             seed,
             stage_in_barrier: true,
+            tag_lifetime: false,
         }
     }
 }
@@ -229,6 +239,13 @@ impl<'a> Engine<'a> {
         let mut engine_metrics = Metrics::new();
         // Finish times of tasks per node: the scheduler's in-flight view.
         let mut node_ends: HashMap<usize, Vec<SimTime>> = HashMap::new();
+        // Consumed-intermediate counts for lifetime tagging (empty map
+        // when the protocol is off — no per-task cost).
+        let lifetime_consumers = if self.config.tag_lifetime {
+            workflow.consumer_counts()
+        } else {
+            BTreeMap::new()
+        };
 
         // Stage-in phase: when the barrier is on, all `stageIn` tasks run
         // to completion before any workflow task becomes ready.
@@ -243,6 +260,7 @@ impl<'a> Engine<'a> {
                         &mut engine_metrics,
                         &mut records,
                         &mut node_ends,
+                        &lifetime_consumers,
                     )?;
                     finish[id] = Some(end);
                     barrier = barrier.max(end);
@@ -284,6 +302,7 @@ impl<'a> Engine<'a> {
                 &mut engine_metrics,
                 &mut records,
                 &mut node_ends,
+                &lifetime_consumers,
             )?;
             finish[id] = Some(end);
             for &b in &rdeps[id] {
@@ -324,6 +343,7 @@ impl<'a> Engine<'a> {
         em: &mut Metrics,
         records: &mut [Option<TaskRecord>],
         node_ends: &mut HashMap<usize, Vec<SimTime>>,
+        lifetime_consumers: &BTreeMap<String, u32>,
     ) -> Result<SimTime, StorageError> {
         let calib = self.cluster.calib().clone();
         let mut t = ready + Dur::from_millis_f64(calib.sched_decision_ms);
@@ -407,7 +427,7 @@ impl<'a> Engine<'a> {
                 if write.tier != Tier::Intermediate {
                     continue;
                 }
-                let pairs: Vec<(String, String)> = write
+                let mut pairs: Vec<(String, String)> = write
                     .tags
                     .iter()
                     .map(|(key, value)| {
@@ -418,6 +438,21 @@ impl<'a> Engine<'a> {
                         }
                     })
                     .collect();
+                // Lifetime protocol, top-down half: declare the DAG's
+                // consumer count so an enforcing store could reclaim
+                // the intermediate after its last read. Rides the same
+                // batched set-attribute path (and pays its cost). A
+                // workload-authored Lifetime or Consumers tag is never
+                // clobbered — it may declare readers beyond the DAG.
+                if self.config.tag_lifetime
+                    && write.tags.get(crate::hints::keys::LIFETIME).is_none()
+                    && write.tags.get(crate::hints::keys::CONSUMERS).is_none()
+                {
+                    if let Some(n) = lifetime_consumers.get(&write.path) {
+                        pairs.push((crate::hints::keys::LIFETIME.to_string(), "scratch".into()));
+                        pairs.push((crate::hints::keys::CONSUMERS.to_string(), n.to_string()));
+                    }
+                }
                 for chunk in pairs.chunks(batch) {
                     if self.config.charge_fork {
                         t = t + Dur::from_millis_f64(calib.fork_ms);
@@ -702,6 +737,36 @@ mod tests {
         assert_eq!(batched.metrics.setattr_ops, unbatched.metrics.setattr_ops);
         // One fork per batch instead of one per tag.
         assert!(batched.metrics.forks < unbatched.metrics.forks);
+    }
+
+    #[test]
+    fn tag_lifetime_charges_extra_setattr_traffic() {
+        let run = |tag_lifetime: bool| {
+            let calib = Calib::default();
+            let mut cluster = Cluster::new(8, DiskKind::RamDisk, &calib);
+            let mut inter = standard_deployment(&cluster, true, true, 7);
+            let mut backend = NfsServer::new(&calib);
+            let mut sched = LocationAware::new();
+            let cfg = EngineConfig {
+                tag_lifetime,
+                jitter: 0.0,
+                ..EngineConfig::woss(9)
+            };
+            run_workflow(&mut cluster, &mut inter, &mut backend, &mut sched, cfg, &pipelines(2, true))
+                .unwrap()
+        };
+        let plain = run(false);
+        let tagged = run(true);
+        // Every consumed intermediate gains Lifetime + Consumers: two
+        // more set-attribute ops per such file, paid in virtual time.
+        assert!(
+            tagged.metrics.setattr_ops > plain.metrics.setattr_ops,
+            "lifetime tagging must show in the top-down channel: {} vs {}",
+            tagged.metrics.setattr_ops,
+            plain.metrics.setattr_ops
+        );
+        assert!(tagged.makespan >= plain.makespan, "the traffic is not free");
+        assert_eq!(tagged.tasks.len(), plain.tasks.len());
     }
 
     #[test]

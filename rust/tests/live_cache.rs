@@ -1,0 +1,252 @@
+//! Integration tests for the hint-driven lifetime & cache tier:
+//! eviction-order properties (scratch before durable, pinned broadcast
+//! never under the hint-aware policy), reclamation-after-last-read,
+//! prefetch, and the NoSpace-under-cache-pressure regression.
+
+use woss::dispatch::Registry;
+use woss::hints::TagSet;
+use woss::live::{CachePolicy, LiveStore, LiveTuning};
+use woss::storage::NodeId;
+
+const CHUNK: usize = 256 * 1024; // the live store's default chunk
+
+fn cached(n_nodes: usize, cache_chunks: u64, lifetime: bool) -> LiveStore {
+    LiveStore::woss_with(
+        n_nodes,
+        LiveTuning {
+            cache_bytes: Some(cache_chunks * CHUNK as u64),
+            cache_policy: CachePolicy::HintAware,
+            lifetime,
+            ..LiveTuning::default()
+        },
+    )
+}
+
+/// One-chunk payload.
+fn chunk_data(fill: u8) -> Vec<u8> {
+    vec![fill; CHUNK]
+}
+
+#[test]
+fn scratch_evicts_before_durable_under_pressure() {
+    let store = cached(3, 2, false);
+    let durable = TagSet::from_pairs([("DP", "local")]);
+    let scratch = TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch")]);
+    store
+        .write_file(NodeId(0), "/durable", &chunk_data(1), &durable)
+        .unwrap();
+    store.write_file(NodeId(0), "/s1", &chunk_data(2), &scratch).unwrap();
+    store.write_file(NodeId(0), "/s2", &chunk_data(3), &scratch).unwrap();
+
+    // First touches from the consumer node: remote, filling its cache
+    // (2-chunk budget) with the durable file and then /s1.
+    store.read_file(NodeId(1), "/durable").unwrap();
+    store.read_file(NodeId(1), "/s1").unwrap();
+    // /s2 needs room: the scratch entry (/s1) must go, not the durable.
+    store.read_file(NodeId(1), "/s2").unwrap();
+
+    let before = store.cache_stats();
+    assert_eq!(before.hits, 0, "all first touches");
+    assert_eq!(before.evictions, 1, "/s1 made room for /s2");
+    assert_eq!(
+        store.get_xattr("/durable", "cache_state").unwrap(),
+        format!("chunks=1;bytes={CHUNK};pinned=0"),
+        "durable entry survived the pressure"
+    );
+
+    let remote_before = store.remote_reads.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(store.read_file(NodeId(1), "/durable").unwrap(), chunk_data(1));
+    assert_eq!(store.cache_stats().hits, 1, "durable re-read is a cache hit");
+    assert_eq!(
+        store.remote_reads.load(std::sync::atomic::Ordering::Relaxed),
+        remote_before,
+        "no remote traffic for the cached durable file"
+    );
+    // The evicted scratch file reads correctly — remotely.
+    assert_eq!(store.read_file(NodeId(1), "/s1").unwrap(), chunk_data(2));
+    assert!(store.remote_reads.load(std::sync::atomic::Ordering::Relaxed) > remote_before);
+}
+
+#[test]
+fn pinned_broadcast_never_evicted_until_fanout_completes() {
+    let store = cached(4, 2, true);
+    let bcast = TagSet::from_pairs([
+        ("DP", "local"),
+        ("Pattern", "broadcast"),
+        ("Consumers", "2"),
+    ]);
+    store.write_file(NodeId(0), "/bcast", &chunk_data(9), &bcast).unwrap();
+    assert_eq!(store.get_xattr("/bcast", "consumers_left").unwrap(), "2");
+
+    // First declared consumer read caches the chunk pinned.
+    store.read_file(NodeId(1), "/bcast").unwrap();
+    assert_eq!(store.get_xattr("/bcast", "consumers_left").unwrap(), "1");
+    assert_eq!(
+        store.get_xattr("/bcast", "cache_state").unwrap(),
+        format!("chunks=1;bytes={CHUNK};pinned=1")
+    );
+
+    // Heavy durable pressure through the same node's 2-chunk cache:
+    // the pin must hold while a consumer is still outstanding.
+    let durable = TagSet::from_pairs([("DP", "local")]);
+    for i in 0..3 {
+        let path = format!("/d{i}");
+        store.write_file(NodeId(0), &path, &chunk_data(i), &durable).unwrap();
+        store.read_file(NodeId(1), &path).unwrap();
+    }
+    assert_eq!(
+        store.get_xattr("/bcast", "cache_state").unwrap(),
+        format!("chunks=1;bytes={CHUNK};pinned=1"),
+        "pinned broadcast entry survived durable churn"
+    );
+
+    // Last declared consumer: a cache hit, after which the fan-out is
+    // complete and the pin is released (entry demoted to durable).
+    let hits_before = store.cache_stats().hits;
+    store.read_file(NodeId(1), "/bcast").unwrap();
+    assert!(store.cache_stats().hits > hits_before, "served from the pin");
+    assert_eq!(store.get_xattr("/bcast", "consumers_left").unwrap(), "0");
+    assert_eq!(
+        store.get_xattr("/bcast", "cache_state").unwrap(),
+        format!("chunks=1;bytes={CHUNK};pinned=0"),
+        "fan-out complete: unpinned, still resident"
+    );
+
+    // Now ordinary LRU applies: enough churn evicts it.
+    for i in 0..2 {
+        let path = format!("/e{i}");
+        store.write_file(NodeId(0), &path, &chunk_data(i), &durable).unwrap();
+        store.read_file(NodeId(1), &path).unwrap();
+    }
+    assert_eq!(
+        store.get_xattr("/bcast", "cache_state").unwrap(),
+        "chunks=0;bytes=0;pinned=0",
+        "unpinned entry ages out like any durable"
+    );
+    // The file itself is durable — still readable (remotely).
+    assert_eq!(store.read_file(NodeId(2), "/bcast").unwrap(), chunk_data(9));
+}
+
+#[test]
+fn scratch_reclaimed_after_last_declared_read() {
+    let store = cached(3, 4, true);
+    let tags = TagSet::from_pairs([
+        ("DP", "local"),
+        ("Lifetime", "scratch"),
+        ("Consumers", "2"),
+    ]);
+    let data: Vec<u8> = (0..300_000u32).map(|i| (i % 251) as u8).collect();
+    store.write_file(NodeId(0), "/tmp", &data, &tags).unwrap();
+    assert_eq!(store.get_xattr("/tmp", "consumers_left").unwrap(), "2");
+
+    assert_eq!(store.read_file(NodeId(1), "/tmp").unwrap(), data);
+    assert_eq!(store.get_xattr("/tmp", "consumers_left").unwrap(), "1");
+    assert_eq!(store.read_file(NodeId(2), "/tmp").unwrap(), data);
+
+    // Last declared consumer has read: the file is dead — namespace,
+    // chunks, capacity, and cached copies all reclaimed.
+    assert!(store.read_file(NodeId(1), "/tmp").is_err());
+    assert_eq!(store.file_size("/tmp"), None);
+    assert_eq!(store.get_xattr("/tmp", "consumers_left"), None);
+    let stats = store.cache_stats();
+    assert_eq!(stats.files_reclaimed, 1);
+    assert_eq!(stats.bytes_reclaimed, 300_000);
+    assert_eq!(
+        stats.resident.iter().sum::<u64>(),
+        0,
+        "cached copies purged with the file"
+    );
+    // The namespace slot is free again.
+    store
+        .write_file(NodeId(0), "/tmp", &chunk_data(7), &TagSet::new())
+        .unwrap();
+    assert_eq!(store.read_file(NodeId(0), "/tmp").unwrap(), chunk_data(7));
+}
+
+#[test]
+fn lifetime_tags_inert_without_enforcement() {
+    // Default store: no cache tier, no lifetime enforcement — the tags
+    // are carried but change nothing (the pre-tier behaviour).
+    let store = LiveStore::woss(3);
+    let tags = TagSet::from_pairs([("Lifetime", "scratch"), ("Consumers", "1")]);
+    store.write_file(NodeId(0), "/f", &chunk_data(4), &tags).unwrap();
+    store.read_file(NodeId(1), "/f").unwrap();
+    store.read_file(NodeId(1), "/f").unwrap();
+    assert_eq!(store.file_size("/f"), Some(CHUNK as u64), "never reclaimed");
+    assert_eq!(store.cache_stats().files_reclaimed, 0);
+    assert_eq!(
+        store.get_xattr("/f", "consumers_left").unwrap(),
+        "1",
+        "no decrement without enforcement"
+    );
+}
+
+#[test]
+fn prefetch_promotes_pipeline_handoff() {
+    let store = cached(4, 8, false);
+    let tags = TagSet::from_pairs([("DP", "local"), ("Pattern", "pipeline")]);
+    let data = vec![0x5Au8; 4 * CHUNK];
+    store.write_file(NodeId(0), "/pipe", &data, &tags).unwrap();
+
+    let queued = store.prefetch(NodeId(1), "/pipe").unwrap();
+    assert_eq!(queued, 4, "all four chunks promoted");
+    store.flush_replication(); // promotion barrier
+    assert_eq!(store.cache_stats().prefetched, 4);
+
+    // The consumer's first read is now fully node-local.
+    assert_eq!(store.read_file(NodeId(1), "/pipe").unwrap(), data);
+    assert_eq!(store.local_reads.load(std::sync::atomic::Ordering::Relaxed), 4);
+    assert_eq!(store.remote_reads.load(std::sync::atomic::Ordering::Relaxed), 0);
+
+    // Re-prefetching a warm cache queues nothing.
+    assert_eq!(store.prefetch(NodeId(1), "/pipe").unwrap(), 0);
+    // Prefetching onto a holder is a no-op too.
+    assert_eq!(store.prefetch(NodeId(0), "/pipe").unwrap(), 0);
+}
+
+#[test]
+fn nospace_under_cache_pressure_rolls_back_cleanly() {
+    // A capacity-bounded deployment with an active cache: placement
+    // failures must roll back exactly as they do uncached, and cache
+    // residency must stay within budget throughout.
+    let budget = CHUNK as u64;
+    let store = LiveStore::with_tuning(
+        Registry::woss(),
+        2,
+        600_000,
+        LiveTuning {
+            cache_bytes: Some(budget),
+            cache_policy: CachePolicy::HintAware,
+            lifetime: true,
+            ..LiveTuning::default()
+        },
+    );
+    let data: Vec<u8> = (0..500_000u32).map(|i| (i % 199) as u8).collect();
+    store.write_file(NodeId(0), "/a", &data, &TagSet::new()).unwrap();
+    // Warm the cache from the other node.
+    assert_eq!(store.read_file(NodeId(1), "/a").unwrap(), data);
+
+    // 900 KB cannot fit the remaining pool capacity: NoSpace, with the
+    // partial placement rolled back.
+    let err = store
+        .write_file(NodeId(0), "/big", &vec![1u8; 900_000], &TagSet::new())
+        .unwrap_err();
+    assert!(
+        matches!(err, woss::storage::StorageError::NoSpace(_)),
+        "expected NoSpace, got {err:?}"
+    );
+    assert!(store.file_size("/big").is_none());
+
+    // The original file is untouched and the cache stayed bounded.
+    assert_eq!(store.read_file(NodeId(1), "/a").unwrap(), data);
+    let stats = store.cache_stats();
+    assert!(stats.peak_node_resident <= budget);
+    assert!(stats.resident.iter().all(|&r| r <= budget));
+
+    // Rollback leaked no capacity: after deleting /a the pool takes a
+    // 550 KB file again.
+    store.delete("/a").unwrap();
+    let data2: Vec<u8> = (0..550_000u32).map(|i| (i % 97) as u8).collect();
+    store.write_file(NodeId(0), "/b", &data2, &TagSet::new()).unwrap();
+    assert_eq!(store.read_file(NodeId(1), "/b").unwrap(), data2);
+}

@@ -283,6 +283,80 @@ fn prop_live_store_roundtrip_under_any_hints() {
     );
 }
 
+/// Cache-tier residency invariant: every node's cached bytes stay
+/// within the configured per-node budget after every operation, under
+/// arbitrary write/read/delete interleavings, both eviction policies,
+/// and active lifetime reclamation.
+#[test]
+fn prop_cache_residency_bounded() {
+    use woss::live::{CachePolicy, LiveStore, LiveTuning};
+    forall_noshrink(
+        "cache-residency",
+        |rng: &mut Rng| {
+            let hint_policy = rng.gen_range(2) == 0;
+            let budget = (1 + rng.gen_range(8)) * 128 * 1024; // 128 KiB..1 MiB
+            let ops = (0..rng.range_usize(1, 40))
+                .map(|_| {
+                    (
+                        rng.gen_range(4),          // 0-1: write, 2: read, 3: delete
+                        rng.range_usize(0, 6),     // path index
+                        rng.range_usize(0, 4),     // acting node
+                        1 + rng.gen_range(700_000), // file size
+                    )
+                })
+                .collect::<Vec<(u64, usize, usize, u64)>>();
+            (hint_policy, budget, ops)
+        },
+        |(hint_policy, budget, ops)| {
+            let store = LiveStore::woss_with(
+                4,
+                LiveTuning {
+                    stripes: 4,
+                    repl_workers: 1,
+                    cache_bytes: Some(*budget),
+                    cache_policy: if *hint_policy {
+                        CachePolicy::HintAware
+                    } else {
+                        CachePolicy::Lru
+                    },
+                    lifetime: true,
+                },
+            );
+            for &(op, pidx, node, size) in ops {
+                let path = format!("/c{pidx}");
+                match op {
+                    0 => {
+                        let tags = TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch")]);
+                        let _ =
+                            store.write_file(NodeId(node), &path, &vec![7u8; size as usize], &tags);
+                    }
+                    1 => {
+                        let tags =
+                            TagSet::from_pairs([("Pattern", "broadcast"), ("Consumers", "2")]);
+                        let _ =
+                            store.write_file(NodeId(node), &path, &vec![9u8; size as usize], &tags);
+                    }
+                    2 => {
+                        let _ = store.read_file(NodeId((node + 1) % 4), &path);
+                    }
+                    _ => {
+                        let _ = store.delete(&path);
+                    }
+                }
+                let stats = store.cache_stats();
+                if stats.resident.iter().any(|&r| r > *budget) {
+                    return false;
+                }
+                if stats.peak_node_resident > *budget {
+                    return false;
+                }
+            }
+            store.flush_replication();
+            store.cache_stats().resident.iter().all(|&r| r <= *budget)
+        },
+    );
+}
+
 /// Simulation determinism: identical seeds ⇒ identical results, across
 /// every storage configuration.
 #[test]
