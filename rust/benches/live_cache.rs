@@ -1,7 +1,9 @@
 //! `cargo bench` target for the live cache-tier sweep: locality vs
-//! cache budget × eviction policy (hint-aware vs plain LRU), plus the
-//! `Pattern=pipeline` prefetch and `Lifetime=scratch` reclamation
-//! demonstrations. See rust/src/bench/experiments.rs for the driver.
+//! cache budget × eviction policy (hint-aware vs plain LRU) × chunk
+//! backend (in-memory vs file-backed spill tier), the disk-penalty
+//! recovery rows, plus the `Pattern=pipeline` prefetch and
+//! `Lifetime=scratch` reclamation demonstrations. See
+//! rust/src/bench/experiments.rs for the driver.
 
 #[path = "bench_common.rs"]
 mod bench_common;

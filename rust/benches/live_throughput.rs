@@ -1,7 +1,7 @@
 //! `cargo bench` target for the live-store concurrency sweep: read and
-//! tagged-write throughput vs lock-stripe count × thread count, plus
-//! optimistic-vs-pessimistic write latency. See
-//! rust/src/bench/experiments.rs for the driver.
+//! tagged-write throughput vs chunk backend (mem|disk) × lock-stripe
+//! count × thread count, plus optimistic-vs-pessimistic write latency.
+//! See rust/src/bench/experiments.rs for the driver.
 
 #[path = "bench_common.rs"]
 mod bench_common;

@@ -634,15 +634,18 @@ fn table6_shards(runs: usize, seed: u64) -> Report {
 }
 
 /// Live-store concurrency sweep: tagged-write and read throughput vs
-/// lock-stripe count × thread count, plus mean tagged-write latency
-/// under optimistic vs pessimistic replication semantics. Unlike the
-/// other experiments this one measures *wall-clock* behaviour of the
-/// live (real-bytes, real-threads) store, so absolute numbers vary by
-/// machine; the shapes — reads scaling with reader threads, optimistic
-/// returning before full replication — are the reproducible claim.
+/// lock-stripe count × thread count, on both chunk backends (the
+/// in-memory store and the file-backed spill tier), plus mean
+/// tagged-write latency under optimistic vs pessimistic replication
+/// semantics. Unlike the other experiments this one measures
+/// *wall-clock* behaviour of the live (real-bytes, real-threads)
+/// store, so absolute numbers vary by machine; the shapes — reads
+/// scaling with reader threads, optimistic returning before full
+/// replication, the disk backend paying a per-chunk file I/O cost the
+/// memory backend does not — are the reproducible claim.
 fn live_throughput(_runs: usize, seed: u64) -> Report {
     use crate::hints::TagSet;
-    use crate::live::LiveStore;
+    use crate::live::{BackendKind, LiveStore, LiveTuning};
     use crate::storage::types::NodeId;
     use std::time::Instant;
 
@@ -654,84 +657,110 @@ fn live_throughput(_runs: usize, seed: u64) -> Report {
     const LATENCY_WRITES: usize = 24;
 
     let mut table =
-        Table::new("Live store — concurrent throughput vs lock stripes and threads")
-            .header(["stripes", "threads", "tagged-write MB/s", "read MB/s"]);
+        Table::new("Live store — concurrent throughput vs backend, lock stripes, threads")
+            .header(["backend", "stripes", "threads", "tagged-write MB/s", "read MB/s"]);
     let mut rows = Vec::new();
     let data: Vec<u8> = (0..FILE_BYTES)
         .map(|i| ((i as u64).wrapping_mul(31).wrapping_add(seed)) as u8)
         .collect();
 
-    for stripes in [1usize, 4, 8] {
-        for threads in [1usize, 2, 4] {
-            let store = LiveStore::woss_tuned(NODES, stripes, REPL_WORKERS);
-            // Tagged-write phase: every write carries placement +
-            // replication hints (the cross-layer hot path), each writer
-            // thread creating its own files.
-            let t0 = Instant::now();
-            std::thread::scope(|scope| {
-                for t in 0..threads {
-                    let store = &store;
-                    let data = &data;
-                    scope.spawn(move || {
-                        let tags = TagSet::from_pairs([
-                            ("DP", "scatter 1"),
-                            ("Replication", "2"),
-                            ("RepSmntc", "optimistic"),
-                        ]);
-                        for f in 0..FILES {
-                            store
-                                .write_file(NodeId(t % NODES), &format!("/w{t}/f{f}"), data, &tags)
-                                .expect("bench write");
-                        }
-                    });
-                }
-            });
-            let write_secs = t0.elapsed().as_secs_f64();
-            store.flush_replication();
+    for backend in [BackendKind::Memory, BackendKind::Disk] {
+        for stripes in [1usize, 4, 8] {
+            for threads in [1usize, 2, 4] {
+                let store = LiveStore::woss_with(
+                    NODES,
+                    LiveTuning {
+                        stripes,
+                        repl_workers: REPL_WORKERS,
+                        backend,
+                        ..LiveTuning::default()
+                    },
+                );
+                // Tagged-write phase: every write carries placement +
+                // replication hints (the cross-layer hot path), each
+                // writer thread creating its own files.
+                let t0 = Instant::now();
+                std::thread::scope(|scope| {
+                    for t in 0..threads {
+                        let store = &store;
+                        let data = &data;
+                        scope.spawn(move || {
+                            let tags = TagSet::from_pairs([
+                                ("DP", "scatter 1"),
+                                ("Replication", "2"),
+                                ("RepSmntc", "optimistic"),
+                            ]);
+                            for f in 0..FILES {
+                                store
+                                    .write_file(
+                                        NodeId(t % NODES),
+                                        &format!("/w{t}/f{f}"),
+                                        data,
+                                        &tags,
+                                    )
+                                    .expect("bench write");
+                            }
+                        });
+                    }
+                });
+                let write_secs = t0.elapsed().as_secs_f64();
+                store.flush_replication();
 
-            // Read phase: reader threads sweep the files concurrently.
-            let t1 = Instant::now();
-            std::thread::scope(|scope| {
-                for r in 0..threads {
-                    let store = &store;
-                    scope.spawn(move || {
-                        for i in 0..READS_PER_THREAD {
-                            let t = (r + i) % threads;
-                            let f = i % FILES;
-                            let back = store
-                                .read_file(NodeId((r + 1) % NODES), &format!("/w{t}/f{f}"))
-                                .expect("bench read");
-                            assert_eq!(back.len(), FILE_BYTES);
-                        }
-                    });
-                }
-            });
-            let read_secs = t1.elapsed().as_secs_f64();
+                // Read phase: reader threads sweep the files concurrently.
+                let t1 = Instant::now();
+                std::thread::scope(|scope| {
+                    for r in 0..threads {
+                        let store = &store;
+                        scope.spawn(move || {
+                            for i in 0..READS_PER_THREAD {
+                                let t = (r + i) % threads;
+                                let f = i % FILES;
+                                let back = store
+                                    .read_file(NodeId((r + 1) % NODES), &format!("/w{t}/f{f}"))
+                                    .expect("bench read");
+                                assert_eq!(back.len(), FILE_BYTES);
+                            }
+                        });
+                    }
+                });
+                let read_secs = t1.elapsed().as_secs_f64();
 
-            let mb = FILE_BYTES as f64 / (1024.0 * 1024.0);
-            let write_mbps = threads as f64 * FILES as f64 * mb / write_secs.max(1e-9);
-            let read_mbps = threads as f64 * READS_PER_THREAD as f64 * mb / read_secs.max(1e-9);
-            table.row([
-                stripes.to_string(),
-                threads.to_string(),
-                format!("{write_mbps:.0}"),
-                format!("{read_mbps:.0}"),
-            ]);
-            rows.push(Json::obj([
-                ("stripes", stripes.into()),
-                ("threads", threads.into()),
-                ("write_mbps", write_mbps.into()),
-                ("read_mbps", read_mbps.into()),
-            ]));
+                let mb = FILE_BYTES as f64 / (1024.0 * 1024.0);
+                let write_mbps = threads as f64 * FILES as f64 * mb / write_secs.max(1e-9);
+                let read_mbps = threads as f64 * READS_PER_THREAD as f64 * mb / read_secs.max(1e-9);
+                table.row([
+                    backend.label().to_string(),
+                    stripes.to_string(),
+                    threads.to_string(),
+                    format!("{write_mbps:.0}"),
+                    format!("{read_mbps:.0}"),
+                ]);
+                rows.push(Json::obj([
+                    ("backend", backend.label().into()),
+                    ("stripes", stripes.into()),
+                    ("threads", threads.into()),
+                    ("write_mbps", write_mbps.into()),
+                    ("read_mbps", read_mbps.into()),
+                ]));
+            }
         }
     }
 
     // Latency rows: mean tagged-write latency under both `RepSmntc`
     // semantics at Replication=4 — the optimistic write returns after
-    // the primary copy, the pessimistic one after all four.
+    // the primary copy, the pessimistic one after all four. The memory
+    // backend keeps the comparison about replication semantics alone.
     let mut latency = Vec::new();
     for sem in ["optimistic", "pessimistic"] {
-        let store = LiveStore::woss_tuned(NODES, 4, REPL_WORKERS);
+        let store = LiveStore::woss_with(
+            NODES,
+            LiveTuning {
+                stripes: 4,
+                repl_workers: REPL_WORKERS,
+                backend: BackendKind::Memory,
+                ..LiveTuning::default()
+            },
+        );
         let tags = TagSet::from_pairs([("Replication", "4"), ("RepSmntc", sem)]);
         let t0 = Instant::now();
         for f in 0..LATENCY_WRITES {
@@ -742,6 +771,7 @@ fn live_throughput(_runs: usize, seed: u64) -> Report {
         let mean_us = t0.elapsed().as_secs_f64() * 1e6 / LATENCY_WRITES as f64;
         store.flush_replication();
         table.row([
+            "mem".to_string(),
             "RepSmntc".to_string(),
             sem.to_string(),
             format!("{mean_us:.0} us/write"),
@@ -755,27 +785,30 @@ fn live_throughput(_runs: usize, seed: u64) -> Report {
 
     Report {
         id: "live_throughput",
-        title: "Live store concurrent throughput (stripes × threads)",
+        title: "Live store concurrent throughput (backend × stripes × threads)",
         table,
         json: Json::obj([
             ("id", "live_throughput".into()),
             ("rows", Json::Arr(rows)),
             ("latency", Json::Arr(latency)),
         ]),
-        expectation: "read throughput scales with reader threads (≥2x from 1→4 threads at 4 stripes on a ≥4-core box); optimistic tagged writes return well below the pessimistic latency; stripes=1 reproduces the single-lock manager behaviour",
+        expectation: "read throughput scales with reader threads (≥2x from 1→4 threads at 4 stripes on a ≥4-core box); the disk backend trails the memory backend on both phases (per-chunk file I/O); optimistic tagged writes return well below the pessimistic latency; stripes=1 reproduces the single-lock manager behaviour",
     }
 }
 
-/// Live cache-tier sweep: locality vs cache budget × eviction policy
-/// on a pipeline-shaped trace (a hot durable reference set re-read
-/// every round while read-once scratch intermediates stream through),
-/// plus prefetch and reclamation demonstrations. Single driver thread,
-/// so every row is deterministic: the claim under test is the policy
-/// shape, not wall-clock throughput.
+/// Live cache-tier sweep: locality vs cache budget × eviction policy ×
+/// chunk backend on a pipeline-shaped trace (a hot durable reference
+/// set re-read every round while read-once scratch intermediates
+/// stream through), plus a disk-penalty recovery measurement and the
+/// prefetch and reclamation demonstrations. Single driver thread, so
+/// every counter row is deterministic: the claim under test is the
+/// policy shape, not wall-clock throughput (the disk-penalty rows also
+/// report wall-clock, which varies by machine).
 fn live_cache(_runs: usize, _seed: u64) -> Report {
     use crate::hints::TagSet;
-    use crate::live::{CachePolicy, LiveStore, LiveTuning};
+    use crate::live::{BackendKind, CachePolicy, LiveStore, LiveTuning};
     use crate::storage::types::NodeId;
+    use std::time::Instant;
 
     const NODES: usize = 4;
     const CHUNK: usize = 256 * 1024; // one LIVE_CHUNK per file
@@ -786,72 +819,138 @@ fn live_cache(_runs: usize, _seed: u64) -> Report {
     const AMPLE: u64 = 16 * CHUNK as u64; // > round working set
 
     let data = vec![0xC5u8; CHUNK];
-    let mut table = Table::new("Live store — hint-aware cache tier vs plain LRU")
-        .header(["policy", "cache", "locality", "hits / evictions / peak KiB"]);
+    let mut table = Table::new("Live store — hint-aware cache tier vs plain LRU, per backend")
+        .header(["backend", "policy", "cache", "locality", "hits / evictions / peak KiB"]);
     let mut rows = Vec::new();
 
-    for (policy, label) in [(CachePolicy::Lru, "lru"), (CachePolicy::HintAware, "hint")] {
-        for budget in [TIGHT, AMPLE] {
-            let store = LiveStore::woss_with(
-                NODES,
-                LiveTuning {
-                    stripes: 4,
-                    repl_workers: 1,
-                    cache_bytes: Some(budget),
-                    cache_policy: policy,
-                    lifetime: false,
-                },
-            );
-            // Producer (node 0) lays everything out locally, so every
-            // consumer (node 1) read is remote unless the cache serves.
-            let durable = TagSet::from_pairs([("DP", "local")]);
-            let scratch = TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch")]);
-            for h in 0..HOT {
-                store
-                    .write_file(NodeId(0), &format!("/hot{h}"), &data, &durable)
-                    .expect("hot write");
-            }
-            let mut next_scratch = 0usize;
-            for _round in 0..ROUNDS {
+    for backend in [BackendKind::Memory, BackendKind::Disk] {
+        for (policy, label) in [(CachePolicy::Lru, "lru"), (CachePolicy::HintAware, "hint")] {
+            for budget in [TIGHT, AMPLE] {
+                let store = LiveStore::woss_with(
+                    NODES,
+                    LiveTuning {
+                        stripes: 4,
+                        repl_workers: 1,
+                        cache_bytes: Some(budget),
+                        cache_policy: policy,
+                        lifetime: false,
+                        backend,
+                        ..LiveTuning::default()
+                    },
+                );
+                // Producer (node 0) lays everything out locally, so
+                // every consumer (node 1) read is remote unless the
+                // cache serves.
+                let durable = TagSet::from_pairs([("DP", "local")]);
+                let scratch = TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch")]);
                 for h in 0..HOT {
                     store
-                        .read_file(NodeId(1), &format!("/hot{h}"))
-                        .expect("hot read");
+                        .write_file(NodeId(0), &format!("/hot{h}"), &data, &durable)
+                        .expect("hot write");
                 }
-                for _ in 0..SCRATCH_PER_ROUND {
-                    let path = format!("/s{next_scratch}");
-                    next_scratch += 1;
-                    store
-                        .write_file(NodeId(0), &path, &data, &scratch)
-                        .expect("scratch write");
-                    store.read_file(NodeId(1), &path).expect("scratch read");
+                let mut next_scratch = 0usize;
+                for _round in 0..ROUNDS {
+                    for h in 0..HOT {
+                        store
+                            .read_file(NodeId(1), &format!("/hot{h}"))
+                            .expect("hot read");
+                    }
+                    for _ in 0..SCRATCH_PER_ROUND {
+                        let path = format!("/s{next_scratch}");
+                        next_scratch += 1;
+                        store
+                            .write_file(NodeId(0), &path, &data, &scratch)
+                            .expect("scratch write");
+                        store.read_file(NodeId(1), &path).expect("scratch read");
+                    }
                 }
+                let stats = store.cache_stats();
+                let local = store.local_reads.load(std::sync::atomic::Ordering::Relaxed);
+                let remote = store.remote_reads.load(std::sync::atomic::Ordering::Relaxed);
+                let locality = local as f64 / (local + remote).max(1) as f64;
+                table.row([
+                    backend.label().to_string(),
+                    label.to_string(),
+                    format!("{} KiB", budget / 1024),
+                    format!("{:.0}%", locality * 100.0),
+                    format!(
+                        "{} / {} / {}",
+                        stats.hits,
+                        stats.evictions,
+                        stats.peak_node_resident / 1024
+                    ),
+                ]);
+                rows.push(Json::obj([
+                    ("backend", backend.label().into()),
+                    ("policy", label.into()),
+                    ("cache_kb", (budget / 1024).into()),
+                    ("budget", budget.into()),
+                    ("locality", locality.into()),
+                    ("hits", stats.hits.into()),
+                    ("evictions", stats.evictions.into()),
+                    ("peak_resident", stats.peak_node_resident.into()),
+                ]));
             }
-            let stats = store.cache_stats();
-            let local = store.local_reads.load(std::sync::atomic::Ordering::Relaxed);
-            let remote = store.remote_reads.load(std::sync::atomic::Ordering::Relaxed);
-            let locality = local as f64 / (local + remote).max(1) as f64;
-            table.row([
-                label.to_string(),
-                format!("{} KiB", budget / 1024),
-                format!("{:.0}%", locality * 100.0),
-                format!(
-                    "{} / {} / {}",
-                    stats.hits,
-                    stats.evictions,
-                    stats.peak_node_resident / 1024
-                ),
-            ]);
-            rows.push(Json::obj([
-                ("policy", label.into()),
-                ("cache_kb", (budget / 1024).into()),
-                ("budget", budget.into()),
-                ("locality", locality.into()),
-                ("hits", stats.hits.into()),
-                ("evictions", stats.evictions.into()),
-                ("peak_resident", stats.peak_node_resident.into()),
-            ]));
         }
+    }
+
+    // Disk-penalty recovery: the same hot set read over and over. On
+    // the disk backend with the cache off every consumer read is a
+    // file read; the hint-aware cache serves all but the first round
+    // from memory, recovering most of the penalty. Counters (remote
+    // chunk fetches, cache hits) are deterministic; the seconds column
+    // is machine-dependent flavour.
+    const PENALTY_FILES: usize = 4;
+    const PENALTY_ROUNDS: usize = 6;
+    let mut penalty = Vec::new();
+    for (config, backend, cache) in [
+        ("mem/no-cache", BackendKind::Memory, None),
+        ("disk/no-cache", BackendKind::Disk, None),
+        ("disk/hint-cache", BackendKind::Disk, Some(AMPLE)),
+    ] {
+        let store = LiveStore::woss_with(
+            2,
+            LiveTuning {
+                stripes: 4,
+                repl_workers: 1,
+                cache_bytes: cache,
+                cache_policy: CachePolicy::HintAware,
+                lifetime: false,
+                backend,
+                ..LiveTuning::default()
+            },
+        );
+        let durable = TagSet::from_pairs([("DP", "local")]);
+        for f in 0..PENALTY_FILES {
+            store
+                .write_file(NodeId(0), &format!("/ref{f}"), &data, &durable)
+                .expect("penalty write");
+        }
+        let t0 = Instant::now();
+        for _ in 0..PENALTY_ROUNDS {
+            for f in 0..PENALTY_FILES {
+                store
+                    .read_file(NodeId(1), &format!("/ref{f}"))
+                    .expect("penalty read");
+            }
+        }
+        let read_s = t0.elapsed().as_secs_f64();
+        let remote = store.remote_reads.load(std::sync::atomic::Ordering::Relaxed);
+        let hits = store.cache_stats().hits;
+        table.row([
+            config.to_string(),
+            "penalty".to_string(),
+            String::new(),
+            format!("{remote} remote chunk fetches"),
+            format!("{hits} hits, {read_s:.4}s reads"),
+        ]);
+        penalty.push(Json::obj([
+            ("config", config.into()),
+            ("backend", backend.label().into()),
+            ("remote_reads", remote.into()),
+            ("cache_hits", hits.into()),
+            ("read_s", read_s.into()),
+        ]));
     }
 
     // Prefetch: a Pattern=pipeline handoff promoted into the consumer
@@ -865,6 +964,8 @@ fn live_cache(_runs: usize, _seed: u64) -> Report {
             cache_bytes: Some(AMPLE),
             cache_policy: CachePolicy::HintAware,
             lifetime: false,
+            backend: BackendKind::Memory,
+            ..LiveTuning::default()
         },
     );
     let stage_out = vec![0x3Au8; 4 * CHUNK];
@@ -903,6 +1004,8 @@ fn live_cache(_runs: usize, _seed: u64) -> Report {
             cache_bytes: Some(TIGHT),
             cache_policy: CachePolicy::HintAware,
             lifetime: true,
+            backend: BackendKind::Memory,
+            ..LiveTuning::default()
         },
     );
     let dead_tags = TagSet::from_pairs([
@@ -934,15 +1037,16 @@ fn live_cache(_runs: usize, _seed: u64) -> Report {
 
     Report {
         id: "live_cache",
-        title: "Live cache tier — eviction policy × budget, prefetch, reclamation",
+        title: "Live cache tier — backend × eviction policy × budget, disk-penalty recovery",
         table,
         json: Json::obj([
             ("id", "live_cache".into()),
             ("rows", Json::Arr(rows)),
+            ("disk_penalty", Json::Arr(penalty)),
             ("prefetch", prefetch_json),
             ("reclaim", reclaim_json),
         ]),
-        expectation: "at the tight budget hint-aware eviction keeps the durable hot set resident where plain LRU churns it (higher locality at equal cache size); at the ample budget the policies converge; peak resident bytes never exceed the per-node budget; prefetch makes the pipeline handoff fully node-local; every Consumers=1 scratch file is reclaimed",
+        expectation: "at the tight budget hint-aware eviction keeps the durable hot set resident where plain LRU churns it (higher locality at equal cache size, on both backends); at the ample budget the policies converge; peak resident bytes never exceed the per-node budget; on the disk backend the hint-aware cache serves every post-warm-up hot read from memory (remote chunk fetches collapse from rounds×files to files), recovering most of the cache-off disk read penalty; prefetch makes the pipeline handoff fully node-local; every Consumers=1 scratch file is reclaimed",
     }
 }
 
@@ -1198,10 +1302,12 @@ mod tests {
             Some(Json::Arr(rows)) => rows,
             _ => panic!("rows"),
         };
-        assert_eq!(rows.len(), 9, "3 stripe counts × 3 thread counts");
+        assert_eq!(rows.len(), 18, "2 backends × 3 stripe counts × 3 thread counts");
         for row in rows {
             assert!(row.get("read_mbps").and_then(Json::as_f64).unwrap() > 0.0);
             assert!(row.get("write_mbps").and_then(Json::as_f64).unwrap() > 0.0);
+            let backend = row.get("backend").and_then(Json::as_str).unwrap();
+            assert!(backend == "mem" || backend == "disk");
         }
         // Wall-clock magnitudes (scaling factors, the optimistic-vs-
         // pessimistic latency gap) are machine-dependent — a 1-core CI
@@ -1230,12 +1336,13 @@ mod tests {
             Some(Json::Arr(rows)) => rows,
             _ => panic!("rows"),
         };
-        assert_eq!(rows.len(), 4, "2 policies × 2 budgets");
+        assert_eq!(rows.len(), 8, "2 backends × 2 policies × 2 budgets");
         let field = |row: &Json, key: &str| row.get(key).and_then(Json::as_f64).unwrap();
-        let locality = |policy: &str, tight: bool| {
+        let locality = |backend: &str, policy: &str, tight: bool| {
             rows.iter()
                 .find(|row| {
-                    row.get("policy").and_then(Json::as_str) == Some(policy)
+                    row.get("backend").and_then(Json::as_str) == Some(backend)
+                        && row.get("policy").and_then(Json::as_str) == Some(policy)
                         && (field(row, "cache_kb") == 1024.0) == tight
                 })
                 .map(|row| field(row, "locality"))
@@ -1244,11 +1351,22 @@ mod tests {
         // The acceptance claim: at equal (tight) cache size, hint-aware
         // eviction wins on locality — scratch evicts first, so the
         // durable hot set stays resident while plain LRU churns it.
-        assert!(
-            locality("hint", true) > locality("lru", true),
-            "hint {:.2} must beat lru {:.2} at the tight budget",
-            locality("hint", true),
-            locality("lru", true)
+        // The policy shape holds on both chunk backends.
+        for backend in ["mem", "disk"] {
+            assert!(
+                locality(backend, "hint", true) > locality(backend, "lru", true),
+                "[{backend}] hint {:.2} must beat lru {:.2} at the tight budget",
+                locality(backend, "hint", true),
+                locality(backend, "lru", true)
+            );
+        }
+        // The cache-policy counters are backend-independent: the tier
+        // sits above the ChunkBackend trait, so swapping mem for disk
+        // must not change what gets cached or evicted.
+        assert_eq!(
+            locality("mem", "hint", true),
+            locality("disk", "hint", true),
+            "cache behaviour must be identical across backends"
         );
         // Cached bytes stay bounded by the budget in every configuration.
         for row in rows {
@@ -1259,6 +1377,30 @@ mod tests {
                 field(row, "budget")
             );
         }
+        // Disk-penalty recovery: with the cache off every hot read
+        // fetches from the remote disk (rounds × files chunk fetches);
+        // the hint-aware cache collapses that to the first round and
+        // serves the rest as hits — no disk read on a cache hit.
+        let penalty = match r.json.get("disk_penalty") {
+            Some(Json::Arr(p)) => p,
+            _ => panic!("disk_penalty"),
+        };
+        let pfield = |config: &str, key: &str| -> f64 {
+            penalty
+                .iter()
+                .find(|row| row.get("config").and_then(Json::as_str) == Some(config))
+                .and_then(|row| row.get(key))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert_eq!(pfield("disk/no-cache", "remote_reads"), 24.0, "6 rounds × 4 files");
+        assert_eq!(pfield("disk/hint-cache", "remote_reads"), 4.0, "first round only");
+        assert_eq!(pfield("disk/hint-cache", "cache_hits"), 20.0, "rest served hot");
+        assert_eq!(
+            pfield("disk/no-cache", "remote_reads"),
+            pfield("mem/no-cache", "remote_reads"),
+            "backends agree on every counter; only the medium differs"
+        );
         // Prefetch made the pipeline handoff fully node-local.
         let pf = r.json.get("prefetch").unwrap();
         assert_eq!(pf.get("queued").and_then(Json::as_f64), Some(4.0));

@@ -6,6 +6,14 @@
 //! half of the bidirectional channel. The flagship provider is
 //! [`LocationProvider`]: the workflow scheduler `get`s `location` and
 //! schedules the consuming task on a node that holds the data.
+//!
+//! Two reserved attributes are *not* provider-backed: `cache_state`
+//! (which chunk backend — `tier=mem|disk` — plus per-node cache
+//! residency) and the live countdown behind `consumers_left` are
+//! deployment-local state only the live store can see, so
+//! [`crate::live::LiveStore::get_xattr`] serves `cache_state` directly
+//! while [`ConsumersLeftProvider`] merely reflects the tag the store
+//! maintains.
 
 use super::GetAttrProvider;
 use crate::storage::types::{FileMeta, NodeState};

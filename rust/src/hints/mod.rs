@@ -33,9 +33,10 @@ pub use tagset::TagSet;
 /// location to the workflow runtime (bottom-up channel).
 pub const LOCATION_ATTR: &str = "location";
 
-/// Reserved attribute exposing a file's cache-tier residency
-/// (`chunks=<n>;bytes=<n>;pinned=<n>`, summed over node caches) —
-/// bottom-up, served by the live store.
+/// Reserved attribute exposing where a file's bytes actually live:
+/// `tier=<mem|disk>;chunks=<n>;bytes=<n>;pinned=<n>` — the chunk
+/// backend uncached bytes sit on, then the file's cache-tier residency
+/// summed over node caches. Bottom-up, served by the live store.
 pub const CACHE_STATE_ATTR: &str = "cache_state";
 
 /// Reserved attribute exposing how many declared consumer reads remain

@@ -65,6 +65,12 @@ pub struct LiveReport {
     pub cache_hits: u64,
     /// Chunks promoted into consumer caches by the prefetch path.
     pub prefetched_chunks: u64,
+    /// Dirty (cache-only `Lifetime=scratch`) chunks the disk backend
+    /// had to write back under eviction pressure; 0 on the memory
+    /// backend or when every scratch chunk died cache-resident.
+    pub spilled_chunks: u64,
+    /// Chunk backend the store ran on (`mem` | `disk`).
+    pub backend: &'static str,
     /// Highest bytes resident in any single node's cache over the run
     /// — bounded by the configured per-node budget.
     pub peak_cache_bytes: u64,
@@ -150,11 +156,15 @@ impl LiveEngine {
     pub fn run(&self, workflow: &Workflow) -> Result<LiveReport> {
         workflow.validate().map_err(|e| anyhow!(e))?;
 
-        // Materialize backend preloads with deterministic bytes.
-        for (path, size) in &workflow.backend_preload {
+        // Materialize backend preloads with deterministic bytes,
+        // round-robin across the nodes: funnelling every preload
+        // through node 0 serialized multi-node runs on node 0's locks
+        // and capacity (and made it the stage-in hot-spot).
+        let n_nodes = self.store.n_nodes().max(1);
+        for (i, (path, size)) in workflow.backend_preload.iter().enumerate() {
             let data = synth_bytes(path, *size);
             self.store
-                .write_file(NodeId(0), path, &data, &TagSet::new())
+                .write_file(NodeId(i % n_nodes), path, &data, &TagSet::new())
                 .map_err(|e| anyhow!("preload {path}: {e}"))?;
         }
 
@@ -176,6 +186,10 @@ impl LiveEngine {
         let cv = Condvar::new();
         let rdeps = &rdeps;
         let next_node = AtomicUsize::new(0);
+        // Tasks currently executing per node — the load signal that
+        // breaks placement ties (holder order never was one).
+        let node_load: Vec<AtomicUsize> = (0..n_nodes).map(|_| AtomicUsize::new(0)).collect();
+        let node_load = &node_load;
         let fingerprints = Mutex::new(BTreeMap::new());
         // Lifetime tagging (top-down channel): the DAG knows exactly
         // how many reads each intermediate will see; declare that to
@@ -210,6 +224,7 @@ impl LiveEngine {
                             workflow,
                             task_id,
                             &next_node,
+                            node_load,
                             &fingerprints,
                             consumers,
                         );
@@ -257,6 +272,8 @@ impl LiveEngine {
             bg_replicas: self.store.background_copies(),
             cache_hits: cache.hits,
             prefetched_chunks: cache.prefetched,
+            spilled_chunks: cache.spilled,
+            backend: self.store.backend_kind().label(),
             peak_cache_bytes: cache.peak_node_resident,
             files_reclaimed: cache.files_reclaimed,
             bytes_reclaimed: cache.bytes_reclaimed,
@@ -270,6 +287,7 @@ impl LiveEngine {
         workflow: &Workflow,
         task_id: usize,
         next_node: &AtomicUsize,
+        node_load: &[AtomicUsize],
         fingerprints: &Mutex<BTreeMap<String, f32>>,
         consumers: &BTreeMap<String, u32>,
     ) -> Result<()> {
@@ -277,25 +295,55 @@ impl LiveEngine {
 
         // --- location-aware placement (bottom-up channel) ---
         let node = if self.store.exposes_location() {
-            let mut best: Option<(NodeId, u64)> = None;
+            // Gravity per holder: the total input bytes it serves
+            // node-locally. The size is looked up once per input (it
+            // was re-queried inside the holder loop), and ties break
+            // toward the currently least-loaded node, then the lowest
+            // id for determinism — a holder's position in the
+            // `locations()` list is placement order, not a load signal.
+            let mut gravity: BTreeMap<usize, u64> = BTreeMap::new();
             for read in &task.reads {
                 // Charge the real getxattr("location") op like the
                 // integration does.
                 let _ = self.store.get_xattr(&read.path, crate::hints::LOCATION_ATTR);
+                let bytes = self.store.file_size(&read.path).unwrap_or(0);
                 for holder in self.store.locations(&read.path) {
-                    let bytes = self.store.file_size(&read.path).unwrap_or(0);
-                    best = match best {
-                        Some((n, b)) if b >= bytes => Some((n, b)),
-                        _ => Some((holder, bytes)),
-                    };
+                    *gravity.entry(holder.0).or_insert(0) += bytes;
                 }
             }
-            best.map(|(n, _)| n).unwrap_or_else(|| {
-                NodeId(next_node.fetch_add(1, Ordering::Relaxed) % self.store.n_nodes())
-            })
+            gravity
+                .into_iter()
+                .max_by_key(|&(n, bytes)| {
+                    (
+                        bytes,
+                        std::cmp::Reverse(node_load[n].load(Ordering::Relaxed)),
+                        std::cmp::Reverse(n),
+                    )
+                })
+                .map(|(n, _)| NodeId(n))
+                .unwrap_or_else(|| {
+                    NodeId(next_node.fetch_add(1, Ordering::Relaxed) % self.store.n_nodes())
+                })
         } else {
             NodeId(next_node.fetch_add(1, Ordering::Relaxed) % self.store.n_nodes())
         };
+        node_load[node.0].fetch_add(1, Ordering::Relaxed);
+        let result = self.run_task_on(workflow, task_id, node, fingerprints, consumers);
+        node_load[node.0].fetch_sub(1, Ordering::Relaxed);
+        result
+    }
+
+    /// Body of one task on its chosen node: tag outputs, warm the
+    /// cache, read inputs, run the kernels, write outputs.
+    fn run_task_on(
+        &self,
+        workflow: &Workflow,
+        task_id: usize,
+        node: NodeId,
+        fingerprints: &Mutex<BTreeMap<String, f32>>,
+        consumers: &BTreeMap<String, u32>,
+    ) -> Result<()> {
+        let task = &workflow.tasks[task_id];
 
         // --- tag outputs (top-down channel) ---
         for write in &task.writes {

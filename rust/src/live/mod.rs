@@ -28,9 +28,20 @@
 //! runtime tags lifetimes down, and verifies `consumers_left` /
 //! `cache_state` back up). The `live_cache` bench sweeps cache size ×
 //! eviction policy.
+//!
+//! The per-node chunk stores themselves are pluggable
+//! ([`backend::ChunkBackend`], [`store::LiveTuning::backend`]): the
+//! default [`backend::MemoryBackend`] keeps chunks in RAM exactly as
+//! before, while [`backend::FileBackend`] spills each chunk to a file
+//! under `--data-dir` (temp-file + rename), turning the cache tier
+//! into a true memory-over-disk hot tier and lifting the store's
+//! capacity past RAM. The `live_throughput` and `live_cache` benches
+//! sweep both backends.
 
+pub mod backend;
 pub mod engine;
 pub mod store;
 
+pub use backend::{chunk_files_under, BackendKind, ChunkBackend, FileBackend, MemoryBackend};
 pub use engine::{EngineOptions, LiveEngine, LiveReport};
 pub use store::{CachePolicy, CacheStats, LiveStore, LiveTuning};

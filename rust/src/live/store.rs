@@ -15,9 +15,10 @@
 //! never contend. Placement state (node usage + round-robin cursors +
 //! collocation anchors) lives behind one short-critical-section lock,
 //! with per-stripe cursors and global anchors provided by the existing
-//! [`ShardedPlacementState`]. Per-node chunk stores are `RwLock`s:
-//! concurrent readers of the same node never block each other, and the
-//! data-path byte copies run outside every manager lock.
+//! [`ShardedPlacementState`]. Per-node chunk stores sit behind the
+//! [`ChunkBackend`] trait (shared-read-lock memory maps or spill
+//! files); concurrent readers of the same node never block each other,
+//! and the data-path byte copies run outside every manager lock.
 //!
 //! Replication honors the paper's `RepSmntc` semantics for real:
 //! **pessimistic** writes return only after every replica holds the
@@ -57,11 +58,32 @@
 //! `cache_state`, so a runtime can verify the protocol. Reads beyond
 //! the declared consumer count see `NotFound` — the count is a
 //! contract, not a guess.
+//!
+//! # Chunk backends
+//!
+//! The authoritative per-node chunk stores sit behind the
+//! [`ChunkBackend`] trait ([`LiveTuning::backend`]):
+//! [`crate::live::MemoryBackend`] reproduces the previous in-memory
+//! `HashMap` store exactly, while [`crate::live::FileBackend`] spills
+//! every chunk to one file under a per-node `--data-dir` directory
+//! (temp-file + rename, so a chunk is never observable half-written).
+//! Under the disk backend the cache tier becomes a true
+//! memory-over-disk hot tier: a cache hit never touches the disk, and
+//! `Lifetime=scratch` chunks (with lifetime enforcement on) skip the
+//! spill entirely — they live **cache-only** as *dirty* entries until
+//! reclaimed, and are written back to the backend only if eviction
+//! pressure forces them out first, so correctness never depends on the
+//! hint being truthful. The reserved `cache_state` attribute reports
+//! the backend in its `tier=` field.
 
+use super::backend::{
+    auto_data_dir, BackendKind, ChunkBackend, DirGuard, FileBackend, MemoryBackend,
+};
 use crate::dispatch::{shard_for_path, PlacementCtx, Registry, ShardedPlacementState};
 use crate::hints::{AccessPattern, Lifetime, TagSet};
 use crate::storage::types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};
 use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
@@ -84,7 +106,7 @@ pub enum CachePolicy {
 }
 
 /// Concurrency tuning for a [`LiveStore`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LiveTuning {
     /// Namespace lock stripes. `1` reproduces the previous single-lock
     /// manager behaviour; values are clamped to ≥ 1.
@@ -103,6 +125,18 @@ pub struct LiveTuning {
     /// broadcast cache pinning. Off by default: lifetime tags are
     /// carried but inert, exactly as before this tier existed.
     pub lifetime: bool,
+    /// Which chunk backend the per-node stores run on. The default is
+    /// resolved from the `LIVE_BACKEND` environment variable
+    /// ([`BackendKind::from_env`], `mem` when unset) so the CI matrix
+    /// can re-run every live test against the disk spill tier; an
+    /// explicit value always wins.
+    pub backend: BackendKind,
+    /// Root directory for the disk backend (one `node<i>/` subdirectory
+    /// per storage node). `None` lets the store create — and remove on
+    /// drop — a process-unique directory under `WOSS_DATA_DIR` (or the
+    /// system temp dir); a user-supplied directory is never deleted.
+    /// Ignored by the memory backend.
+    pub data_dir: Option<PathBuf>,
 }
 
 impl Default for LiveTuning {
@@ -113,14 +147,10 @@ impl Default for LiveTuning {
             cache_bytes: None,
             cache_policy: CachePolicy::default(),
             lifetime: false,
+            backend: BackendKind::from_env(),
+            data_dir: None,
         }
     }
-}
-
-/// One storage node's chunk store. Readers share the lock.
-#[derive(Default)]
-struct NodeStore {
-    chunks: RwLock<HashMap<(FileId, u64), Vec<u8>>>,
 }
 
 /// Eviction class of a cached chunk, derived from its file's tags at
@@ -141,6 +171,11 @@ struct CacheEntry {
     bytes: Vec<u8>,
     class: CacheClass,
     last_used: u64,
+    /// Cache-only chunk: the backend does not hold these bytes (the
+    /// `Lifetime=scratch` spill-skip). Evicting a dirty entry writes it
+    /// back to the node's backend first — the bytes here are the only
+    /// copy this node owns.
+    dirty: bool,
 }
 
 /// One node's cache: entries + resident accounting + an LRU clock.
@@ -168,6 +203,10 @@ pub struct CacheStats {
     pub evictions: u64,
     /// Chunks promoted by the off-thread prefetch path.
     pub prefetched: u64,
+    /// Dirty (cache-only) chunks written back to the node's backend on
+    /// eviction — the spill the `Lifetime=scratch` hint deferred until
+    /// pressure forced it.
+    pub spilled: u64,
     /// Entries currently pinned (broadcast fan-out outstanding).
     pub pinned_entries: u64,
     /// Scratch files auto-reclaimed after their last declared read.
@@ -189,23 +228,35 @@ struct CacheTier {
     /// Per-node budget, bytes.
     budget: u64,
     policy: CachePolicy,
+    /// Write-back target for dirty (cache-only) entries: the same
+    /// per-node backends the store owns. `None` only in unit tests —
+    /// a tier without a spill target declines dirty inserts.
+    spill: Option<Arc<Vec<Box<dyn ChunkBackend>>>>,
     hits: AtomicU64,
     insertions: AtomicU64,
     evictions: AtomicU64,
     prefetched: AtomicU64,
+    spills: AtomicU64,
     peak_node_resident: AtomicU64,
 }
 
 impl CacheTier {
-    fn new(n_nodes: usize, budget: u64, policy: CachePolicy) -> Self {
+    fn new(
+        n_nodes: usize,
+        budget: u64,
+        policy: CachePolicy,
+        spill: Option<Arc<Vec<Box<dyn ChunkBackend>>>>,
+    ) -> Self {
         CacheTier {
             nodes: (0..n_nodes).map(|_| Mutex::new(NodeCache::default())).collect(),
             budget,
             policy,
+            spill,
             hits: AtomicU64::new(0),
             insertions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             prefetched: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
             peak_node_resident: AtomicU64::new(0),
         }
     }
@@ -227,19 +278,92 @@ impl CacheTier {
         self.nodes[node.0].lock().unwrap().entries.contains_key(&key)
     }
 
-    /// Best-effort insert into `node`'s cache. Returns `false` when the
-    /// chunk cannot be admitted within the budget (larger than the
-    /// whole budget, or — hint-aware policy — only pinned entries could
-    /// make room).
+    /// Is the chunk a *dirty* (cache-only) resident of `node`'s cache?
+    /// Dirty bytes are the node's only copy — the backend presence
+    /// checks ([`LiveStore::fully_replicated`]) count them.
+    fn contains_dirty(&self, node: NodeId, key: (FileId, u64)) -> bool {
+        self.nodes[node.0]
+            .lock()
+            .unwrap()
+            .entries
+            .get(&key)
+            .is_some_and(|e| e.dirty)
+    }
+
+    /// Read a chunk from `node`'s cache without touching recency or the
+    /// hit counter — the background promote path and remote fallbacks
+    /// use this so diagnostics only count foreground reads.
+    fn peek(&self, node: NodeId, key: (FileId, u64)) -> Option<Vec<u8>> {
+        self.nodes[node.0]
+            .lock()
+            .unwrap()
+            .entries
+            .get(&key)
+            .map(|e| e.bytes.clone())
+    }
+
+    /// Best-effort clean insert into `node`'s cache (the bytes also
+    /// exist in some backend). Returns `false` when the chunk cannot be
+    /// admitted within the budget (larger than the whole budget, or —
+    /// hint-aware policy — only pinned entries could make room).
     fn insert(&self, node: NodeId, key: (FileId, u64), bytes: Vec<u8>, class: CacheClass) -> bool {
+        self.insert_entry(node, key, bytes, class, false)
+    }
+
+    /// Insert a *dirty* (cache-only) chunk: the backend holds no copy,
+    /// so a later eviction must write the bytes back first. Returns
+    /// `false` when the entry cannot be admitted — the caller then
+    /// spills synchronously instead.
+    fn insert_dirty(
+        &self,
+        node: NodeId,
+        key: (FileId, u64),
+        bytes: Vec<u8>,
+        class: CacheClass,
+    ) -> bool {
+        self.insert_entry(node, key, bytes, class, true)
+    }
+
+    /// Write a dirty victim back to `node`'s backend. `false` when no
+    /// spill target is wired or the backend write failed — the victim
+    /// must then stay resident.
+    fn spill_back(&self, node: NodeId, key: (FileId, u64), bytes: &[u8]) -> bool {
+        match &self.spill {
+            Some(stores) => {
+                let ok = stores[node.0].put(key, bytes).is_ok();
+                if ok {
+                    self.spills.fetch_add(1, Ordering::Relaxed);
+                }
+                ok
+            }
+            None => false,
+        }
+    }
+
+    fn insert_entry(
+        &self,
+        node: NodeId,
+        key: (FileId, u64),
+        bytes: Vec<u8>,
+        class: CacheClass,
+        dirty: bool,
+    ) -> bool {
         let need = bytes.len() as u64;
         if need > self.budget {
             return false;
         }
         let mut c = self.nodes[node.0].lock().unwrap();
-        if let Some(old) = c.entries.remove(&key) {
-            // Re-insert refreshes bytes, class, and recency.
-            c.resident -= old.bytes.len() as u64;
+        c.tick += 1;
+        let tick = c.tick;
+        if let Some(entry) = c.entries.get_mut(&key) {
+            // Same key ⇒ same bytes (a chunk's content is immutable for
+            // a given FileId): refresh class and recency in place. The
+            // dirty flag is sticky — clearing it here would tell a
+            // later eviction the backend holds bytes it does not.
+            entry.class = class;
+            entry.last_used = tick;
+            entry.dirty = entry.dirty || dirty;
+            return true;
         }
         while c.resident + need > self.budget {
             let victim = match self.policy {
@@ -262,6 +386,13 @@ impl CacheTier {
             match victim {
                 Some(k) => {
                     let evicted = c.entries.remove(&k).expect("victim resident");
+                    if evicted.dirty && !self.spill_back(node, k, &evicted.bytes) {
+                        // The victim's bytes exist nowhere else and we
+                        // cannot write them back: keep it resident and
+                        // decline the newcomer instead of losing data.
+                        c.entries.insert(k, evicted);
+                        return false;
+                    }
                     c.resident -= evicted.bytes.len() as u64;
                     self.evictions.fetch_add(1, Ordering::Relaxed);
                 }
@@ -269,8 +400,6 @@ impl CacheTier {
                 None => return false,
             }
         }
-        c.tick += 1;
-        let tick = c.tick;
         c.resident += need;
         c.entries.insert(
             key,
@@ -278,6 +407,7 @@ impl CacheTier {
                 bytes,
                 class,
                 last_used: tick,
+                dirty,
             },
         );
         let resident = c.resident;
@@ -349,6 +479,7 @@ impl CacheTier {
         stats.insertions = self.insertions.load(Ordering::Relaxed);
         stats.evictions = self.evictions.load(Ordering::Relaxed);
         stats.prefetched = self.prefetched.load(Ordering::Relaxed);
+        stats.spilled = self.spills.load(Ordering::Relaxed);
     }
 }
 
@@ -418,7 +549,7 @@ struct ReplShared {
     work: Condvar,
     /// Signaled when a job completes (flush / cancel barriers re-check).
     drained: Condvar,
-    stores: Arc<Vec<NodeStore>>,
+    stores: Arc<Vec<Box<dyn ChunkBackend>>>,
     /// Cache tier promote jobs land in (absent when the tier is off).
     cache: Option<Arc<CacheTier>>,
     /// Replica chunk copies completed in the background.
@@ -434,7 +565,11 @@ struct ReplPool {
 }
 
 impl ReplPool {
-    fn new(stores: Arc<Vec<NodeStore>>, cache: Option<Arc<CacheTier>>, workers: usize) -> Self {
+    fn new(
+        stores: Arc<Vec<Box<dyn ChunkBackend>>>,
+        cache: Option<Arc<CacheTier>>,
+        workers: usize,
+    ) -> Self {
         let shared = Arc::new(ReplShared {
             queue: Mutex::new(ReplQueue {
                 jobs: VecDeque::new(),
@@ -552,12 +687,13 @@ fn worker_loop(shared: &ReplShared) {
         match &job.work {
             ReplWork::Copy { payload, targets } => {
                 for &target in targets {
-                    shared.stores[target.0]
-                        .chunks
-                        .write()
-                        .unwrap()
-                        .insert(key, payload.as_ref().clone());
-                    shared.copied.fetch_add(1, Ordering::Relaxed);
+                    // A backend write failure (disk tier) leaves the
+                    // replica missing — optimistic semantics never
+                    // promised it, and reads fall back to holders that
+                    // materialized the chunk.
+                    if shared.stores[target.0].put(key, payload.as_ref()).is_ok() {
+                        shared.copied.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
             }
             ReplWork::Promote {
@@ -572,11 +708,15 @@ fn worker_loop(shared: &ReplShared) {
                 if let Some(cache) = &shared.cache {
                     if !cache.contains(*target, key) {
                         // Fetch from the first holder that has
-                        // materialized the chunk; a file deleted
-                        // mid-flight simply has no source left and the
-                        // job becomes a no-op.
+                        // materialized the chunk — its cache first (a
+                        // dirty cache-only chunk lives nowhere else,
+                        // and cache-before-backend is the race-free
+                        // probe order under concurrent dirty
+                        // write-backs), then its backend; a file
+                        // deleted mid-flight simply has no source left
+                        // and the job becomes a no-op.
                         let bytes = sources.iter().find_map(|s| {
-                            shared.stores[s.0].chunks.read().unwrap().get(&key).cloned()
+                            cache.peek(*s, key).or_else(|| shared.stores[s.0].get(key))
                         });
                         if let Some(bytes) = bytes {
                             if cache.insert(*target, key, bytes, *class) {
@@ -604,7 +744,13 @@ pub struct LiveStore {
     registry: Registry,
     stripes: Vec<Mutex<NamespaceShard>>,
     core: Mutex<PlacementCore>,
-    stores: Arc<Vec<NodeStore>>,
+    stores: Arc<Vec<Box<dyn ChunkBackend>>>,
+    /// Which [`ChunkBackend`] the per-node stores run on (reported by
+    /// the `cache_state` attribute's `tier=` field).
+    backend_kind: BackendKind,
+    /// Root of the disk backend's per-node directories (disk backend
+    /// only).
+    data_root: Option<PathBuf>,
     /// Hot-chunk cache tier ([`LiveTuning::cache_bytes`]); absent by
     /// default.
     cache: Option<Arc<CacheTier>>,
@@ -634,6 +780,11 @@ pub struct LiveStore {
     pub bytes_reclaimed: AtomicU64,
     /// Failure injection: nodes marked dead serve nothing.
     dead: RwLock<Vec<bool>>,
+    /// Cleanup for an auto-created disk-backend directory. Declared
+    /// last (after `repl`): struct fields drop in declaration order,
+    /// so the replication workers are joined before the directory is
+    /// removed — a worker can never write into a deleted tree.
+    _dir_guard: Option<DirGuard>,
 }
 
 impl LiveStore {
@@ -643,20 +794,64 @@ impl LiveStore {
         LiveStore::with_tuning(registry, n_nodes, capacity, LiveTuning::default())
     }
 
-    /// A deployment with explicit concurrency tuning.
+    /// A deployment with explicit concurrency tuning. Panics when the
+    /// disk backend cannot create its data directories — use
+    /// [`LiveStore::try_with_tuning`] to handle that at a CLI boundary.
     pub fn with_tuning(
         registry: Registry,
         n_nodes: usize,
         capacity: u64,
         tuning: LiveTuning,
     ) -> Self {
-        let stores: Arc<Vec<NodeStore>> =
-            Arc::new((0..n_nodes).map(|_| NodeStore::default()).collect());
+        LiveStore::try_with_tuning(registry, n_nodes, capacity, tuning)
+            .expect("build live store backend")
+    }
+
+    /// A deployment with explicit concurrency tuning; errors when the
+    /// chunk backend cannot be brought up (e.g. the disk backend's
+    /// `data_dir` is not creatable).
+    pub fn try_with_tuning(
+        registry: Registry,
+        n_nodes: usize,
+        capacity: u64,
+        tuning: LiveTuning,
+    ) -> Result<Self, StorageError> {
+        let (backends, data_root, dir_guard) = match tuning.backend {
+            BackendKind::Memory => {
+                let backends: Vec<Box<dyn ChunkBackend>> = (0..n_nodes)
+                    .map(|_| Box::new(MemoryBackend::default()) as Box<dyn ChunkBackend>)
+                    .collect();
+                (backends, None, None)
+            }
+            BackendKind::Disk => {
+                // A user-supplied directory persists across the store's
+                // lifetime; an auto-created one is owned (removed when
+                // the store drops, after the replication workers join).
+                let (root, guard) = match &tuning.data_dir {
+                    Some(dir) => (dir.clone(), None),
+                    None => {
+                        let dir = auto_data_dir();
+                        (dir.clone(), Some(DirGuard { path: dir }))
+                    }
+                };
+                let mut backends: Vec<Box<dyn ChunkBackend>> = Vec::with_capacity(n_nodes);
+                for i in 0..n_nodes {
+                    backends.push(Box::new(FileBackend::new(&root.join(format!("node{i}")))?));
+                }
+                (backends, Some(root), guard)
+            }
+        };
+        let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(backends);
         let n_stripes = tuning.stripes.max(1);
-        let cache = tuning
-            .cache_bytes
-            .map(|budget| Arc::new(CacheTier::new(n_nodes, budget, tuning.cache_policy)));
-        LiveStore {
+        let cache = tuning.cache_bytes.map(|budget| {
+            Arc::new(CacheTier::new(
+                n_nodes,
+                budget,
+                tuning.cache_policy,
+                Some(Arc::clone(&stores)),
+            ))
+        });
+        Ok(LiveStore {
             registry,
             stripes: (0..n_stripes)
                 .map(|_| Mutex::new(NamespaceShard::default()))
@@ -672,6 +867,8 @@ impl LiveStore {
                 placement: ShardedPlacementState::new(n_stripes),
             }),
             stores: Arc::clone(&stores),
+            backend_kind: tuning.backend,
+            data_root,
             cache: cache.clone(),
             lifetime_on: tuning.lifetime,
             next_id: AtomicU64::new(1),
@@ -686,7 +883,8 @@ impl LiveStore {
             files_reclaimed: AtomicU64::new(0),
             bytes_reclaimed: AtomicU64::new(0),
             dead: RwLock::new(vec![false; n_nodes]),
-        }
+            _dir_guard: dir_guard,
+        })
     }
 
     /// WOSS deployment (full hint registry, default tuning).
@@ -736,6 +934,28 @@ impl LiveStore {
     /// Number of storage nodes.
     pub fn n_nodes(&self) -> usize {
         self.stores.len()
+    }
+
+    /// Which chunk backend this deployment runs on.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend_kind
+    }
+
+    /// Root of the disk backend's per-node directories (`None` on the
+    /// memory backend).
+    pub fn data_dir(&self) -> Option<&Path> {
+        self.data_root.as_deref()
+    }
+
+    /// Bytes held by each node's chunk backend (authoritative tier
+    /// only — cache-resident dirty chunks are not backend bytes).
+    pub fn backend_used_bytes(&self) -> Vec<u64> {
+        self.stores.iter().map(|s| s.used_bytes()).collect()
+    }
+
+    /// Chunks held by each node's chunk backend.
+    pub fn backend_chunk_counts(&self) -> Vec<usize> {
+        self.stores.iter().map(|s| s.chunk_count()).collect()
     }
 
     /// Number of namespace lock stripes.
@@ -796,11 +1016,18 @@ impl LiveStore {
         };
         for (idx, chunk) in meta.chunks.iter().enumerate() {
             for holder in &chunk.replicas {
-                let present = self.stores[holder.0]
-                    .chunks
-                    .read()
-                    .unwrap()
-                    .contains_key(&(meta.id, idx as u64));
+                let key = (meta.id, idx as u64);
+                // A dirty cache entry is the holder's copy for a
+                // scratch chunk that skipped the spill — it counts.
+                // Cache first: the evictor holds the cache mutex across
+                // a dirty write-back, so a cache miss means any spill
+                // has already landed in the backend (backend-first
+                // would transiently report false mid-eviction).
+                let present = self
+                    .cache
+                    .as_ref()
+                    .is_some_and(|c| c.contains_dirty(*holder, key))
+                    || self.stores[holder.0].contains(key);
                 if !present {
                     return Ok(false);
                 }
@@ -833,8 +1060,9 @@ impl LiveStore {
     /// The reserved `cache_state` attribute is served directly by the
     /// store (node-local cache residency is live-deployment state the
     /// manager-side providers cannot see): its value is
-    /// `chunks=<copies>;bytes=<n>;pinned=<copies>` summed over every
-    /// node's cache.
+    /// `tier=<mem|disk>;chunks=<copies>;bytes=<n>;pinned=<copies>` —
+    /// the chunk backend uncached bytes live on, then the file's cache
+    /// residency summed over every node's cache.
     pub fn get_xattr(&self, path: &str, key: &str) -> Option<String> {
         self.getattr_ops.fetch_add(1, Ordering::Relaxed);
         let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
@@ -844,7 +1072,10 @@ impl LiveStore {
                 Some(cache) => cache.file_state(meta.id),
                 None => (0, 0, 0),
             };
-            return Some(format!("chunks={chunks};bytes={bytes};pinned={pinned}"));
+            let tier = self.backend_kind.label();
+            return Some(format!(
+                "tier={tier};chunks={chunks};bytes={bytes};pinned={pinned}"
+            ));
         }
         if self.registry.serves_attr(key) {
             let core = self.core.lock().unwrap();
@@ -979,27 +1210,48 @@ impl LiveStore {
 
         // Data path outside every manager lock: the primary copy lands
         // synchronously; replicas follow per the file's semantics.
-        for (idx, chunk) in meta.chunks.iter().enumerate() {
+        //
+        // `Lifetime=scratch` chunks (disk backend, cache tier + lifetime
+        // enforcement on) skip the spill: the primary copy goes into the
+        // primary node's cache as a *dirty* entry and only reaches the
+        // disk if eviction pressure forces a write-back — the hint
+        // declares the file dies before durability matters, and the
+        // dirty flag keeps it correct when the hint lies.
+        let skip_spill = self.scratch_skips_spill(&meta);
+        let mut data_err: Option<StorageError> = None;
+        'data: for (idx, chunk) in meta.chunks.iter().enumerate() {
             let idx = idx as u64;
             let (lo, hi) = FileMeta::chunk_span(meta.size, meta.chunk_size, idx);
             let payload = &data[lo as usize..hi as usize];
             let key = (meta.id, idx);
-            self.stores[chunk.primary().0]
-                .chunks
-                .write()
-                .unwrap()
-                .insert(key, payload.to_vec());
+            let primary = chunk.primary();
+            let mut cached_only = false;
+            if skip_spill {
+                if let Some(cache) = &self.cache {
+                    cached_only = cache.insert_dirty(
+                        primary,
+                        key,
+                        payload.to_vec(),
+                        self.cache_class(&meta),
+                    );
+                }
+            }
+            if !cached_only {
+                if let Err(e) = self.stores[primary.0].put(key, payload) {
+                    data_err = Some(e);
+                    break 'data;
+                }
+            }
             let replicas = &chunk.replicas[1..];
             if replicas.is_empty() {
                 continue;
             }
             if blocking {
                 for holder in replicas {
-                    self.stores[holder.0]
-                        .chunks
-                        .write()
-                        .unwrap()
-                        .insert(key, payload.to_vec());
+                    if let Err(e) = self.stores[holder.0].put(key, payload) {
+                        data_err = Some(e);
+                        break 'data;
+                    }
                 }
             } else {
                 self.replicas_deferred
@@ -1014,6 +1266,28 @@ impl LiveStore {
                 });
             }
         }
+        if let Some(err) = data_err {
+            // A backend write failed (disk tier): unwind the create so
+            // the failure is atomic — no namespace entry, no capacity,
+            // no partial chunks. If a racing delete already removed the
+            // entry it also swept, so only the owner frees capacity.
+            let ours = {
+                let mut stripe = self.stripes[stripe_idx].lock().unwrap();
+                match stripe.files.get(path) {
+                    Some(m) if m.id == meta.id => {
+                        stripe.files.remove(path);
+                        true
+                    }
+                    _ => false,
+                }
+            };
+            if ours {
+                self.sweep_file(&meta);
+            } else {
+                self.sweep_bytes(&meta);
+            }
+            return Err(err);
+        }
         // A delete racing this create could have removed the meta while
         // the copies above were still landing — it would have found no
         // queued jobs to cancel. Re-check and sweep our own bytes so the
@@ -1024,19 +1298,7 @@ impl LiveStore {
             stripe.files.get(path).map(|m| m.id) != Some(meta.id)
         };
         if raced_delete {
-            self.repl.cancel_file(meta.id);
-            for (idx, chunk) in meta.chunks.iter().enumerate() {
-                for holder in &chunk.replicas {
-                    self.stores[holder.0]
-                        .chunks
-                        .write()
-                        .unwrap()
-                        .remove(&(meta.id, idx as u64));
-                }
-            }
-            if let Some(cache) = &self.cache {
-                cache.purge_file(meta.id);
-            }
+            self.sweep_bytes(&meta);
         }
         self.bytes_written.fetch_add(size, Ordering::Relaxed);
         Ok(())
@@ -1079,16 +1341,17 @@ impl LiveStore {
                 )));
             }
             let mut served = false;
-            // 1. The reader's own store (authoritative copy).
+            // 1. The reader's own backend (authoritative copy).
             if live.contains(&client) {
-                let store = self.stores[client.0].chunks.read().unwrap();
-                if let Some(bytes) = store.get(&key) {
-                    out.extend_from_slice(bytes);
+                if let Some(bytes) = self.stores[client.0].get(key) {
+                    out.extend_from_slice(&bytes);
                     self.local_reads.fetch_add(1, Ordering::Relaxed);
                     served = true;
                 }
             }
-            // 2. The reader's cache tier (still node-local).
+            // 2. The reader's cache tier (still node-local; on the disk
+            //    backend this is the hit that skips the disk read, and
+            //    where a holder's dirty spill-skipped chunks live).
             if !served && client_alive {
                 if let Some(cache) = &self.cache {
                     if let Some(bytes) = cache.get(client, key) {
@@ -1098,13 +1361,25 @@ impl LiveStore {
                     }
                 }
             }
-            // 3. Any live holder that materialized the chunk; fill the
-            //    reader's cache on the way so the next read is local —
-            //    unless the reader is itself a (still-draining) holder,
-            //    whose authoritative copy is about to arrive anyway.
+            // 3. Any live holder that materialized the chunk — its
+            //    cache first (a dirty cache-only chunk exists nowhere
+            //    else, and a resident chunk served from cache skips the
+            //    disk), then its backend. This order is race-free: the
+            //    evictor holds the node's cache mutex across the dirty
+            //    write-back, so a cache miss means any spill has
+            //    already landed in the backend. (Backend-first would
+            //    open a window where an eviction lands between the two
+            //    probes and both miss.) Fill the reader's cache on the
+            //    way so the next read is local — unless the reader is
+            //    itself a (still-draining) holder, whose authoritative
+            //    copy is about to arrive anyway.
             if !served {
                 for source in live.iter().copied().filter(|&n| n != client) {
-                    let got = self.stores[source.0].chunks.read().unwrap().get(&key).cloned();
+                    let got = self
+                        .cache
+                        .as_ref()
+                        .and_then(|c| c.peek(source, key))
+                        .or_else(|| self.stores[source.0].get(key));
                     if let Some(bytes) = got {
                         out.extend_from_slice(&bytes);
                         self.remote_reads.fetch_add(1, Ordering::Relaxed);
@@ -1114,6 +1389,19 @@ impl LiveStore {
                         served = true;
                         break;
                     }
+                }
+            }
+            // 4. Re-check the reader's own backend: a holder's dirty
+            //    (cache-only) chunk can be spilled by a concurrent
+            //    eviction between step 1 (backend miss, not yet
+            //    spilled) and step 2 (cache miss, already evicted) —
+            //    the write-back has landed by the time the cache lock
+            //    was released, so the bytes are here now.
+            if !served && live.contains(&client) {
+                if let Some(bytes) = self.stores[client.0].get(key) {
+                    out.extend_from_slice(&bytes);
+                    self.local_reads.fetch_add(1, Ordering::Relaxed);
+                    served = true;
                 }
             }
             if !served {
@@ -1154,6 +1442,21 @@ impl LiveStore {
             return CacheClass::Scratch;
         }
         CacheClass::Durable
+    }
+
+    /// Does this file's primary copy skip the backend spill and live
+    /// cache-only (dirty) until reclaimed? Only on the disk backend —
+    /// the memory backend *is* memory, there is no spill to skip — and
+    /// only while the whole scratch contract is active: a cache to live
+    /// in, lifetime enforcement driving reclamation, and a registry
+    /// that interprets the `Lifetime` tag at all (a DSS baseline never
+    /// does).
+    fn scratch_skips_spill(&self, meta: &FileMeta) -> bool {
+        self.backend_kind == BackendKind::Disk
+            && self.cache.is_some()
+            && self.lifetime_on
+            && self.registry.hints_enabled()
+            && meta.tags.lifetime() == Lifetime::Scratch
     }
 
     /// Cache-fill with the class derived from the file's *current*
@@ -1255,18 +1558,34 @@ impl LiveStore {
                 }
             }
         }
+        self.sweep_bytes(meta);
+    }
+
+    /// Remove every physical trace of `meta`'s chunks: cancel its
+    /// queued/in-flight background jobs, purge its cache entries, and
+    /// delete its backend chunks. Shared by [`Self::sweep_file`] and
+    /// the `write_file` unwind paths, so the ordering below lives in
+    /// exactly one place.
+    ///
+    /// The cache purge MUST precede the backend deletes: a concurrent
+    /// eviction could otherwise write a dirty (never-spilled) chunk of
+    /// this dying file back to the backend after its delete ran,
+    /// orphaning an on-disk file forever. With the entries gone first
+    /// (the per-node cache mutex serializes in-flight spills against
+    /// the purge), nothing can re-materialize a chunk, and the backend
+    /// deletes below are final. Dirty entries are simply dropped: the
+    /// file is dead, its bytes owe nothing to the disk.
+    fn sweep_bytes(&self, meta: &FileMeta) {
         self.repl.cancel_file(meta.id);
-        for (idx, chunk) in meta.chunks.iter().enumerate() {
-            for holder in &chunk.replicas {
-                self.stores[holder.0]
-                    .chunks
-                    .write()
-                    .unwrap()
-                    .remove(&(meta.id, idx as u64));
-            }
-        }
         if let Some(cache) = &self.cache {
             cache.purge_file(meta.id);
+        }
+        for (idx, chunk) in meta.chunks.iter().enumerate() {
+            for holder in &chunk.replicas {
+                // On the disk backend this unlinks the chunk's file —
+                // a swept file leaves nothing in the data directory.
+                self.stores[holder.0].delete((meta.id, idx as u64));
+            }
         }
     }
 
@@ -1504,14 +1823,13 @@ mod tests {
             .unwrap();
         store.delete("/gone").unwrap();
         store.flush_replication();
-        // No node store may hold a chunk of the deleted file: queued
+        // No node backend may hold a chunk of the deleted file: queued
         // jobs were cancelled, in-flight ones waited out before sweep.
-        for ns in store.stores.iter() {
-            assert!(
-                ns.chunks.read().unwrap().is_empty(),
-                "deleted file left chunks behind"
-            );
-        }
+        assert_eq!(
+            store.backend_chunk_counts().iter().sum::<usize>(),
+            0,
+            "deleted file left chunks behind"
+        );
     }
 
     #[test]
@@ -1536,12 +1854,11 @@ mod tests {
                 });
             });
             store.flush_replication();
-            for ns in store.stores.iter() {
-                assert!(
-                    ns.chunks.read().unwrap().is_empty(),
-                    "round {round} leaked chunks"
-                );
-            }
+            assert_eq!(
+                store.backend_chunk_counts().iter().sum::<usize>(),
+                0,
+                "round {round} leaked chunks"
+            );
         }
     }
 
@@ -1620,7 +1937,7 @@ mod tests {
 
     #[test]
     fn cache_tier_budget_and_eviction_classes() {
-        let tier = CacheTier::new(2, 1000, CachePolicy::HintAware);
+        let tier = CacheTier::new(2, 1000, CachePolicy::HintAware, None);
         let f = FileId(1);
         assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Durable));
         assert!(tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Scratch));
@@ -1632,15 +1949,147 @@ mod tests {
         assert!(!tier.insert(NodeId(0), (f, 3), vec![0u8; 2000], CacheClass::Durable));
         // Pinned entries never evict under the hint-aware policy: the
         // cache declines the newcomer instead.
-        let tier = CacheTier::new(1, 500, CachePolicy::HintAware);
+        let tier = CacheTier::new(1, 500, CachePolicy::HintAware, None);
         assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Pinned));
         assert!(!tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Durable));
         assert!(tier.get(NodeId(0), (f, 0)).is_some(), "pin held");
         // Plain LRU is hint-blind: the same pressure evicts the pin.
-        let tier = CacheTier::new(1, 500, CachePolicy::Lru);
+        let tier = CacheTier::new(1, 500, CachePolicy::Lru, None);
         assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Pinned));
         assert!(tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Durable));
         assert!(tier.get(NodeId(0), (f, 0)).is_none(), "LRU ignores pins");
+    }
+
+    #[test]
+    fn dirty_entries_write_back_on_eviction_and_never_silently_drop() {
+        // A tier with a spill target: evicting a dirty entry lands it
+        // in the node's backend first.
+        let backends: Arc<Vec<Box<dyn ChunkBackend>>> =
+            Arc::new(vec![Box::new(MemoryBackend::default())]);
+        let tier = CacheTier::new(1, 1000, CachePolicy::HintAware, Some(Arc::clone(&backends)));
+        let f = FileId(7);
+        assert!(tier.insert_dirty(NodeId(0), (f, 0), vec![1u8; 600], CacheClass::Scratch));
+        assert!(tier.contains_dirty(NodeId(0), (f, 0)));
+        assert!(!backends[0].contains((f, 0)), "spill deferred");
+        // Pressure evicts the dirty scratch entry: write-back first.
+        assert!(tier.insert(NodeId(0), (f, 1), vec![2u8; 600], CacheClass::Durable));
+        assert_eq!(
+            backends[0].get((f, 0)),
+            Some(vec![1u8; 600]),
+            "dirty victim written back before eviction"
+        );
+        assert_eq!(tier.spills.load(Ordering::Relaxed), 1);
+
+        // Without a spill target the tier refuses to evict a dirty
+        // entry — the newcomer is declined, the dirty bytes survive.
+        let tier = CacheTier::new(1, 1000, CachePolicy::HintAware, None);
+        assert!(tier.insert_dirty(NodeId(0), (f, 0), vec![3u8; 600], CacheClass::Scratch));
+        assert!(!tier.insert(NodeId(0), (f, 1), vec![4u8; 600], CacheClass::Durable));
+        assert_eq!(tier.peek(NodeId(0), (f, 0)), Some(vec![3u8; 600]));
+    }
+
+    use super::super::backend::chunk_files_under;
+
+    #[test]
+    fn disk_backend_roundtrips_and_deletes_spilled_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "woss-store-test-disk-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let store = LiveStore::with_tuning(
+                Registry::woss(),
+                3,
+                u64::MAX / 2,
+                LiveTuning {
+                    backend: BackendKind::Disk,
+                    data_dir: Some(dir.clone()),
+                    ..LiveTuning::default()
+                },
+            );
+            assert_eq!(store.backend_kind(), BackendKind::Disk);
+            assert_eq!(store.data_dir(), Some(dir.as_path()));
+            let data: Vec<u8> = (0..600_000u32).map(|i| (i % 251) as u8).collect();
+            store
+                .write_file(NodeId(1), "/f", &data, &TagSet::from_pairs([("DP", "local")]))
+                .unwrap();
+            assert_eq!(chunk_files_under(&dir), 3, "3 chunks spilled to disk");
+            assert_eq!(store.read_file(NodeId(2), "/f").unwrap(), data);
+            assert_eq!(
+                store.get_xattr("/f", "cache_state").unwrap(),
+                "tier=disk;chunks=0;bytes=0;pinned=0",
+                "no cache tier: bytes live on disk"
+            );
+            store.delete("/f").unwrap();
+            assert_eq!(chunk_files_under(&dir), 0, "delete unlinks spilled files");
+        }
+        // The store never deletes a user-supplied data_dir itself.
+        assert!(dir.exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn scratch_skips_the_spill_and_reclaims_without_touching_disk() {
+        let dir = std::env::temp_dir().join(format!(
+            "woss-store-test-scratch-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let store = LiveStore::with_tuning(
+                Registry::woss(),
+                3,
+                u64::MAX / 2,
+                LiveTuning {
+                    backend: BackendKind::Disk,
+                    data_dir: Some(dir.clone()),
+                    cache_bytes: Some(8 * LIVE_CHUNK),
+                    lifetime: true,
+                    ..LiveTuning::default()
+                },
+            );
+            let tags = TagSet::from_pairs([
+                ("DP", "local"),
+                ("Lifetime", "scratch"),
+                ("Consumers", "1"),
+            ]);
+            let data = vec![9u8; 300_000];
+            store.write_file(NodeId(0), "/s", &data, &tags).unwrap();
+            assert_eq!(
+                chunk_files_under(&dir),
+                0,
+                "scratch chunks live cache-only, no spill"
+            );
+            assert!(store.fully_replicated("/s").unwrap(), "dirty copy counts");
+            // The declared consumer reads the full bytes (remotely,
+            // from the primary's cache) and the file dies — the disk
+            // was never touched.
+            assert_eq!(store.read_file(NodeId(2), "/s").unwrap(), data);
+            assert_eq!(store.file_size("/s"), None, "reclaimed after last read");
+            assert_eq!(store.cache_stats().files_reclaimed, 1);
+            assert_eq!(chunk_files_under(&dir), 0);
+            assert_eq!(store.cache_stats().spilled, 0, "no eviction pressure");
+
+            // Under pressure the dirty chunks write back instead of
+            // vanishing: a second scratch file plus durable churn
+            // overflows the budget, and every byte stays readable.
+            let scratch2 = TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch")]);
+            let big = vec![5u8; (6 * LIVE_CHUNK) as usize];
+            store.write_file(NodeId(0), "/s2", &big, &scratch2).unwrap();
+            let more = vec![6u8; (6 * LIVE_CHUNK) as usize];
+            store.write_file(NodeId(0), "/s3", &more, &scratch2).unwrap();
+            assert!(
+                store.cache_stats().spilled > 0,
+                "evicted dirty chunks wrote back to disk"
+            );
+            assert_eq!(store.read_file(NodeId(1), "/s2").unwrap(), big);
+            assert_eq!(store.read_file(NodeId(1), "/s3").unwrap(), more);
+            store.delete("/s2").unwrap();
+            store.delete("/s3").unwrap();
+            assert_eq!(chunk_files_under(&dir), 0, "spilled files removed on delete");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //!   `--stripes` (manager lock stripes), `--repl-workers` (background
 //!   replication threads), `--cache-mb` (per-node hot-chunk cache
 //!   budget; 0 = off), `--cache-policy lru|hint` (eviction policy),
-//!   `--lifetime` (tag + enforce scratch reclamation).
+//!   `--lifetime` (tag + enforce scratch reclamation), `--backend
+//!   mem|disk` (chunk backend; `disk` spills chunks to files),
+//!   `--data-dir PATH` (disk-backend root; omitted = a temp directory
+//!   removed on exit).
 //! * `list` — experiment ids.
 //! * `calib` — print the active calibration.
 
@@ -18,7 +21,7 @@ use anyhow::{anyhow, Result};
 use woss::bench::experiments;
 use woss::coordinator::{config, report};
 use woss::dispatch::Registry;
-use woss::live::{CachePolicy, EngineOptions, LiveEngine, LiveStore, LiveTuning};
+use woss::live::{BackendKind, CachePolicy, EngineOptions, LiveEngine, LiveStore, LiveTuning};
 use woss::util::cli::Args;
 use woss::workloads;
 
@@ -56,6 +59,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("  woss experiment fig5 --runs 20");
             println!("  woss live --workload montage --nodes 8 --workers 8 --stripes 8 --repl-workers 2");
             println!("  woss live --workload pipeline --cache-mb 64 --cache-policy hint --lifetime");
+            println!("  woss live --workload pipeline --backend disk --data-dir /tmp/woss --cache-mb 64");
             Ok(())
         }
     }
@@ -104,6 +108,17 @@ fn cmd_live(args: &Args) -> Result<()> {
         other => return Err(anyhow!("unknown --cache-policy '{other}' (lru|hint)")),
     };
     let lifetime = args.has_flag("lifetime");
+    let data_dir = args.get("data-dir").map(std::path::PathBuf::from);
+    let backend = match args.get("backend") {
+        Some(raw) => raw.parse::<BackendKind>().map_err(|e| anyhow!(e))?,
+        // --data-dir only makes sense for the disk backend; giving it
+        // without --backend selects disk.
+        None if data_dir.is_some() => BackendKind::Disk,
+        None => BackendKind::from_env(),
+    };
+    if backend == BackendKind::Memory && data_dir.is_some() {
+        return Err(anyhow!("--data-dir requires --backend disk"));
+    }
     let workload = args.get_or("workload", "pipeline");
     let hints = !args.has_flag("no-hints");
 
@@ -128,13 +143,17 @@ fn cmd_live(args: &Args) -> Result<()> {
         },
         cache_policy,
         lifetime,
+        backend,
+        data_dir,
     };
     let registry = if hints {
         Registry::woss()
     } else {
         Registry::baseline()
     };
-    let store = LiveStore::with_tuning(registry, nodes, u64::MAX / 2, tuning);
+    let store = LiveStore::try_with_tuning(registry, nodes, u64::MAX / 2, tuning)
+        .map_err(|e| anyhow!("bring up {} backend: {e}", backend.label()))?;
+    let store_data_dir = store.data_dir().map(|p| p.display().to_string());
     let engine = LiveEngine::with_options(
         store,
         workers,
@@ -162,13 +181,20 @@ fn cmd_live(args: &Args) -> Result<()> {
         "  replication: {} replica copies drained in the background ({} stripes, {} repl workers)",
         rep.bg_replicas, stripes, repl_workers
     );
+    match &store_data_dir {
+        Some(dir) => println!(
+            "  backend: {} tier under {dir} ({} scratch chunks written back under pressure)",
+            rep.backend, rep.spilled_chunks
+        ),
+        None => println!("  backend: {} tier", rep.backend),
+    }
     if cache_mb > 0 {
         println!(
             "  cache: {} hits, {} chunks prefetched, peak {:.1} MB resident (budget {cache_mb} MB/node, {:?} eviction)",
             rep.cache_hits,
             rep.prefetched_chunks,
             rep.peak_cache_bytes as f64 / 1048576.0,
-            tuning.cache_policy
+            cache_policy
         );
     }
     if lifetime {

@@ -1,0 +1,181 @@
+//! Backend equivalence at the workflow level: a live run on the
+//! file-backed spill tier must be observably identical to the same run
+//! on the in-memory backend — same fingerprints, same locality, same
+//! reclamation — and deleting everything that survived must leave the
+//! disk store's `--data-dir` with zero chunk files. The chunk backend
+//! is a capacity decision, never a semantics decision.
+
+use woss::hints::TagSet;
+use woss::live::{
+    chunk_files_under, BackendKind, CachePolicy, EngineOptions, LiveEngine, LiveReport, LiveStore,
+    LiveTuning,
+};
+use woss::workflow::dag::{TaskSpec, Tier, Workflow};
+
+/// A fan-out/fan-in workflow whose intermediates are all consumed (and
+/// so reclaimed under lifetime tagging): preload → stageIn → 3
+/// transforms → merge.
+fn workflow() -> Workflow {
+    let mut w = Workflow::new();
+    w.preload("/backend/in", 200_000);
+    w.push(
+        TaskSpec::new(0, "stageIn")
+            .read("/backend/in", Tier::Backend)
+            .write("/w/in", Tier::Intermediate, 150_000, TagSet::from_pairs([("DP", "local")])),
+    );
+    for p in 0..3 {
+        w.push(
+            TaskSpec::new(0, "s1")
+                .read("/w/in", Tier::Intermediate)
+                .write(
+                    &format!("/w/mid{p}"),
+                    Tier::Intermediate,
+                    120_000,
+                    TagSet::from_pairs([("DP", "local")]),
+                ),
+        );
+    }
+    let mut merge = TaskSpec::new(0, "merge");
+    for p in 0..3 {
+        merge = merge.read(&format!("/w/mid{p}"), Tier::Intermediate);
+    }
+    merge = merge.write("/w/out", Tier::Intermediate, 100_000, TagSet::new());
+    w.push(merge);
+    w
+}
+
+/// One deterministic run: single worker, no prefetch races, no
+/// replication tags — every counter is exact.
+fn run_on(backend: BackendKind, data_dir: Option<std::path::PathBuf>) -> (LiveEngine, LiveReport) {
+    let store = LiveStore::woss_with(
+        4,
+        LiveTuning {
+            stripes: 4,
+            repl_workers: 1,
+            cache_bytes: Some(4 << 20),
+            cache_policy: CachePolicy::HintAware,
+            lifetime: true,
+            backend,
+            data_dir,
+        },
+    );
+    let engine = LiveEngine::with_options(
+        store,
+        1,
+        EngineOptions {
+            lifetime: true,
+            prefetch: false,
+        },
+    )
+    .unwrap();
+    let report = engine.run(&workflow()).unwrap();
+    (engine, report)
+}
+
+#[test]
+fn disk_run_matches_memory_run_and_cleans_its_data_dir() {
+    let dir = std::env::temp_dir().join(format!(
+        "woss-backend-equivalence-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let (mem_engine, mem) = run_on(BackendKind::Memory, None);
+    let (disk_engine, disk) = run_on(BackendKind::Disk, Some(dir.clone()));
+
+    assert_eq!(mem.backend, "mem");
+    assert_eq!(disk.backend, "disk");
+    assert_eq!(mem.tasks, disk.tasks);
+    assert_eq!(
+        mem.fingerprints, disk.fingerprints,
+        "identical output checksums on both backends"
+    );
+    assert!(!mem.fingerprints.is_empty());
+    assert_eq!(
+        (mem.local_reads, mem.remote_reads),
+        (disk.local_reads, disk.remote_reads),
+        "identical locality on both backends"
+    );
+    assert_eq!(mem.locality(), disk.locality());
+    assert_eq!(
+        (mem.files_reclaimed, mem.bytes_reclaimed),
+        (disk.files_reclaimed, disk.bytes_reclaimed),
+        "identical reclamation on both backends"
+    );
+    assert_eq!(
+        mem.files_reclaimed, 4,
+        "/w/in and the three mids die with their last consumer"
+    );
+
+    // Both runs re-verify their fingerprinted files end to end.
+    assert_eq!(
+        mem_engine.verify(&mem).unwrap(),
+        disk_engine.verify(&disk).unwrap()
+    );
+
+    // What survived the run is really on disk; deleting it removes
+    // every spilled file.
+    assert!(
+        chunk_files_under(&dir) > 0,
+        "durable survivors live in the data dir"
+    );
+    for path in ["/backend/in", "/w/out"] {
+        disk_engine.store().delete(path).unwrap();
+        mem_engine.store().delete(path).unwrap();
+    }
+    assert_eq!(
+        chunk_files_under(&dir),
+        0,
+        "reclaim + delete leave zero files in --data-dir"
+    );
+    assert_eq!(
+        disk_engine.store().backend_used_bytes().iter().sum::<u64>(),
+        0
+    );
+
+    drop(disk_engine);
+    assert!(dir.exists(), "a user-supplied data_dir is never deleted");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn disk_backend_survives_footprint_beyond_cache_budget() {
+    // The capacity story the memory store could not tell: a working
+    // set several times the cache budget streams through the disk
+    // backend — dirty scratch chunks write back under pressure, every
+    // byte stays readable, and the cache stays within budget.
+    let budget: u64 = 2 * 256 * 1024; // two chunks
+    let store = LiveStore::woss_with(
+        3,
+        LiveTuning {
+            stripes: 4,
+            repl_workers: 1,
+            cache_bytes: Some(budget),
+            cache_policy: CachePolicy::HintAware,
+            lifetime: true,
+            backend: BackendKind::Disk,
+            data_dir: None, // auto temp dir, removed when the store drops
+        },
+    );
+    use woss::storage::NodeId;
+    let scratch = TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch")]);
+    let payload = vec![0xABu8; 400_000]; // ~1.5 chunks per file
+    for f in 0..12 {
+        store
+            .write_file(NodeId(0), &format!("/big{f}"), &payload, &scratch)
+            .unwrap();
+    }
+    let stats = store.cache_stats();
+    assert!(
+        stats.spilled > 0,
+        "a footprint beyond the budget forces write-backs"
+    );
+    assert!(stats.peak_node_resident <= budget, "cache stayed bounded");
+    for f in 0..12 {
+        assert_eq!(
+            store.read_file(NodeId(1), &format!("/big{f}")).unwrap(),
+            payload,
+            "file {f} readable after spill"
+        );
+    }
+}

@@ -46,11 +46,12 @@ fn scratch_evicts_before_durable_under_pressure() {
     store.read_file(NodeId(1), "/s2").unwrap();
 
     let before = store.cache_stats();
+    let tier = store.backend_kind().label();
     assert_eq!(before.hits, 0, "all first touches");
     assert_eq!(before.evictions, 1, "/s1 made room for /s2");
     assert_eq!(
         store.get_xattr("/durable", "cache_state").unwrap(),
-        format!("chunks=1;bytes={CHUNK};pinned=0"),
+        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=0"),
         "durable entry survived the pressure"
     );
 
@@ -76,6 +77,7 @@ fn pinned_broadcast_never_evicted_until_fanout_completes() {
         ("Consumers", "2"),
     ]);
     store.write_file(NodeId(0), "/bcast", &chunk_data(9), &bcast).unwrap();
+    let tier = store.backend_kind().label();
     assert_eq!(store.get_xattr("/bcast", "consumers_left").unwrap(), "2");
 
     // First declared consumer read caches the chunk pinned.
@@ -83,7 +85,7 @@ fn pinned_broadcast_never_evicted_until_fanout_completes() {
     assert_eq!(store.get_xattr("/bcast", "consumers_left").unwrap(), "1");
     assert_eq!(
         store.get_xattr("/bcast", "cache_state").unwrap(),
-        format!("chunks=1;bytes={CHUNK};pinned=1")
+        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=1")
     );
 
     // Heavy durable pressure through the same node's 2-chunk cache:
@@ -96,7 +98,7 @@ fn pinned_broadcast_never_evicted_until_fanout_completes() {
     }
     assert_eq!(
         store.get_xattr("/bcast", "cache_state").unwrap(),
-        format!("chunks=1;bytes={CHUNK};pinned=1"),
+        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=1"),
         "pinned broadcast entry survived durable churn"
     );
 
@@ -108,7 +110,7 @@ fn pinned_broadcast_never_evicted_until_fanout_completes() {
     assert_eq!(store.get_xattr("/bcast", "consumers_left").unwrap(), "0");
     assert_eq!(
         store.get_xattr("/bcast", "cache_state").unwrap(),
-        format!("chunks=1;bytes={CHUNK};pinned=0"),
+        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=0"),
         "fan-out complete: unpinned, still resident"
     );
 
@@ -120,7 +122,7 @@ fn pinned_broadcast_never_evicted_until_fanout_completes() {
     }
     assert_eq!(
         store.get_xattr("/bcast", "cache_state").unwrap(),
-        "chunks=0;bytes=0;pinned=0",
+        format!("tier={tier};chunks=0;bytes=0;pinned=0"),
         "unpinned entry ages out like any durable"
     );
     // The file itself is durable — still readable (remotely).

@@ -320,6 +320,7 @@ fn prop_cache_residency_bounded() {
                         CachePolicy::Lru
                     },
                     lifetime: true,
+                    ..LiveTuning::default()
                 },
             );
             for &(op, pidx, node, size) in ops {
@@ -353,6 +354,120 @@ fn prop_cache_residency_bounded() {
             }
             store.flush_replication();
             store.cache_stats().resident.iter().all(|&r| r <= *budget)
+        },
+    );
+}
+
+/// Backend equivalence: the same operation sequence against a
+/// memory-backed and a disk-backed store produces identical observable
+/// behaviour — byte-for-byte reads, sizes, reclamation counts, and
+/// locality counters — and the disk store's data directory holds zero
+/// chunk files once everything is deleted. (Single-threaded ops, no
+/// replication tags: every counter is deterministic.)
+#[test]
+fn prop_backend_equivalence_mem_vs_disk() {
+    use std::sync::atomic::Ordering;
+    use woss::live::{chunk_files_under, BackendKind, CachePolicy, LiveStore, LiveTuning};
+
+    let case = std::sync::atomic::AtomicU64::new(0);
+    forall_noshrink(
+        "backend-equivalence",
+        |rng: &mut Rng| {
+            // Kept small: 256 cases × a disk-backed store is real file
+            // I/O; the shapes (create/read/reclaim/delete interleaving)
+            // matter, not the byte volume.
+            (0..rng.range_usize(1, 12))
+                .map(|_| {
+                    (
+                        rng.gen_range(5),           // 0-1 write, 2-3 read, 4 delete
+                        rng.range_usize(0, 5),      // path index
+                        rng.range_usize(0, 4),      // acting node
+                        1 + rng.gen_range(300_000), // file size
+                    )
+                })
+                .collect::<Vec<(u64, usize, usize, u64)>>()
+        },
+        |ops| {
+            let dir = std::env::temp_dir().join(format!(
+                "woss-prop-equiv-{}-{}",
+                std::process::id(),
+                case.fetch_add(1, Ordering::Relaxed)
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            // Ample cache budget: under pressure the disk store's
+            // extra dirty (cache-only scratch) entries would shift
+            // evictions relative to the memory store, making locality
+            // counters legitimately diverge; pressure-path behaviour is
+            // covered by the dedicated spill/eviction tests.
+            let tuning = |backend: BackendKind, data_dir: Option<std::path::PathBuf>| LiveTuning {
+                stripes: 4,
+                repl_workers: 1,
+                cache_bytes: Some(64 << 20),
+                cache_policy: CachePolicy::HintAware,
+                lifetime: true,
+                backend,
+                data_dir,
+            };
+            let mem = LiveStore::woss_with(4, tuning(BackendKind::Memory, None));
+            let disk = LiveStore::woss_with(4, tuning(BackendKind::Disk, Some(dir.clone())));
+            let mut ok = true;
+            for &(op, pidx, node, size) in ops {
+                let path = format!("/e{pidx}");
+                match op {
+                    0 | 1 => {
+                        let tags = if op == 0 {
+                            TagSet::from_pairs([
+                                ("DP", "local"),
+                                ("Lifetime", "scratch"),
+                                ("Consumers", "2"),
+                            ])
+                        } else {
+                            TagSet::from_pairs([("DP", "local")])
+                        };
+                        let data = vec![(size % 251) as u8; size as usize];
+                        let a = mem.write_file(NodeId(node), &path, &data, &tags);
+                        let b = disk.write_file(NodeId(node), &path, &data, &tags);
+                        ok &= a.is_ok() == b.is_ok();
+                    }
+                    2 | 3 => {
+                        let a = mem.read_file(NodeId((node + 1) % 4), &path);
+                        let b = disk.read_file(NodeId((node + 1) % 4), &path);
+                        ok &= match (&a, &b) {
+                            (Ok(x), Ok(y)) => x == y,
+                            (Err(_), Err(_)) => true,
+                            _ => false,
+                        };
+                    }
+                    _ => {
+                        let a = mem.delete(&path);
+                        let b = disk.delete(&path);
+                        ok &= a.is_ok() == b.is_ok();
+                    }
+                }
+                ok &= mem.file_size(&path) == disk.file_size(&path);
+                if !ok {
+                    break;
+                }
+            }
+            // Observable state converged: reclamation and locality
+            // counters agree exactly.
+            ok &= mem.cache_stats().files_reclaimed == disk.cache_stats().files_reclaimed;
+            ok &= mem.cache_stats().bytes_reclaimed == disk.cache_stats().bytes_reclaimed;
+            ok &= mem.local_reads.load(Ordering::Relaxed)
+                == disk.local_reads.load(Ordering::Relaxed);
+            ok &= mem.remote_reads.load(Ordering::Relaxed)
+                == disk.remote_reads.load(Ordering::Relaxed);
+            // Deleting every surviving file leaves zero chunk files in
+            // the disk store's data directory.
+            for pidx in 0..5 {
+                let _ = mem.delete(&format!("/e{pidx}"));
+                let _ = disk.delete(&format!("/e{pidx}"));
+            }
+            ok &= chunk_files_under(&dir) == 0;
+            ok &= disk.backend_used_bytes().iter().sum::<u64>() == 0;
+            drop(disk);
+            let _ = std::fs::remove_dir_all(&dir);
+            ok
         },
     );
 }

@@ -30,6 +30,30 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# The live suite again, against both chunk backends. LIVE_BACKEND is the
+# LiveTuning::default() hook: `disk` reroutes every default-tuned live
+# store through the file-backed spill tier. WOSS_DATA_DIR roots the
+# stores' auto-created data directories in a tempdir we can audit: a
+# clean run leaves it empty (stores remove their own directories on
+# drop, deletes/reclaims unlink chunk files), so anything left behind is
+# a leak and fails the gate.
+echo "== live suite × chunk-backend matrix (LIVE_BACKEND=mem|disk) =="
+for backend in mem disk; do
+    tmpdir="$(mktemp -d)"
+    echo "-- LIVE_BACKEND=$backend --"
+    LIVE_BACKEND="$backend" WOSS_DATA_DIR="$tmpdir" cargo test -q --lib live::
+    LIVE_BACKEND="$backend" WOSS_DATA_DIR="$tmpdir" cargo test -q \
+        --test live_cache --test live_concurrency --test live_stack \
+        --test backend_equivalence
+    stray="$(find "$tmpdir" -type f | head -20)"
+    if [ -n "$stray" ]; then
+        echo "FAIL: the $backend run left stray files under $tmpdir:"
+        echo "$stray"
+        exit 1
+    fi
+    rm -rf "$tmpdir"
+done
+
 echo "== cargo test --doc (HINTS.md's mirrored doctests) =="
 # The doc examples in docs/HINTS.md are mirrored as rustdoc doctests
 # (hints/tagset.rs, hints/mod.rs); this gate keeps document and
