@@ -60,12 +60,16 @@ impl GetAttrProvider for ChunkLocationProvider {
 
 /// Reserved `system_status` attribute: storage-pool usage summary —
 /// an example of exposing broader internal state (§5 lists replication
-/// counts, device status, caching status as candidates).
+/// counts, device status, caching status as candidates). The live
+/// store extends the value this provider renders with a
+/// ` recovered=<n>` field (files its last re-open salvaged); the
+/// count is deployment-local restart state only the store can see,
+/// exactly like `cache_state`.
 pub struct SystemStatusProvider;
 
 impl GetAttrProvider for SystemStatusProvider {
     fn key(&self) -> &'static str {
-        "system_status"
+        crate::hints::SYSTEM_STATUS_ATTR
     }
 
     fn get(&self, _file: &FileMeta, nodes: &[NodeState]) -> String {

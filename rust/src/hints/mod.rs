@@ -34,10 +34,19 @@ pub use tagset::TagSet;
 pub const LOCATION_ATTR: &str = "location";
 
 /// Reserved attribute exposing where a file's bytes actually live:
-/// `tier=<mem|disk>;chunks=<n>;bytes=<n>;pinned=<n>` — the chunk
-/// backend uncached bytes sit on, then the file's cache-tier residency
-/// summed over node caches. Bottom-up, served by the live store.
+/// `tier=<mem|disk>;chunks=<n>;bytes=<n>;pinned=<n>;recovered=<0|1>` —
+/// the chunk backend uncached bytes sit on, the file's cache-tier
+/// residency summed over node caches, and whether the file survived a
+/// store restart (`recovered=1` after `LiveStore::reopen` brought it
+/// back). Bottom-up, served by the live store.
 pub const CACHE_STATE_ATTR: &str = "cache_state";
+
+/// Reserved attribute summarizing pool state (`nodes=<n> used=<b>
+/// capacity=<b>`), served by the dispatcher's `SystemStatusProvider`;
+/// the live store appends a ` recovered=<count>` field — how many
+/// files its last re-open salvaged — so a scheduler can judge restart
+/// fallout from one getxattr. Bottom-up.
+pub const SYSTEM_STATUS_ATTR: &str = "system_status";
 
 /// Reserved attribute exposing how many declared consumer reads remain
 /// before a scratch file is reclaimed (`<n>`, or `untracked` when the

@@ -71,6 +71,14 @@ pub struct LiveReport {
     pub spilled_chunks: u64,
     /// Chunk backend the store ran on (`mem` | `disk`).
     pub backend: &'static str,
+    /// Chunk reads that failed on a present chunk (disk fault /
+    /// corruption, counted per backend) — reads failed over to another
+    /// holder, but the faults are a first-class signal now, not
+    /// silent remote traffic. Always 0 on the memory backend.
+    pub read_errors: u64,
+    /// Files that survived a [`LiveStore::reopen`] into the store this
+    /// run executed on (0 for a fresh store).
+    pub recovered_files: u64,
     /// Highest bytes resident in any single node's cache over the run
     /// — bounded by the configured per-node budget.
     pub peak_cache_bytes: u64,
@@ -274,6 +282,12 @@ impl LiveEngine {
             prefetched_chunks: cache.prefetched,
             spilled_chunks: cache.spilled,
             backend: self.store.backend_kind().label(),
+            read_errors: cache.read_errors,
+            recovered_files: self
+                .store
+                .recovery_report()
+                .map(|r| r.files_recovered as u64)
+                .unwrap_or(0),
             peak_cache_bytes: cache.peak_node_resident,
             files_reclaimed: cache.files_reclaimed,
             bytes_reclaimed: cache.bytes_reclaimed,
@@ -475,8 +489,17 @@ impl LiveEngine {
     /// Re-read every fingerprinted file and verify its checksum — the
     /// end-to-end integrity check the e2e example reports.
     pub fn verify(&self, report: &LiveReport) -> Result<usize> {
+        self.verify_fingerprints(&report.fingerprints)
+    }
+
+    /// Verify an explicit path → fingerprint map against the store.
+    /// This is the restart gate's workhorse: a run records its
+    /// fingerprints (e.g. `woss live --fingerprint-file`), the store
+    /// is re-opened in a fresh process, and every recovered file must
+    /// still hash to what the dead process wrote.
+    pub fn verify_fingerprints(&self, fingerprints: &BTreeMap<String, f32>) -> Result<usize> {
         let mut verified = 0;
-        for (path, &want) in &report.fingerprints {
+        for (path, &want) in fingerprints {
             let bytes = self.store.read_file(NodeId(0), path)?;
             let tiles = runtime::bytes_to_tiles(&bytes);
             let got = {

@@ -33,15 +33,30 @@
 //! ([`backend::ChunkBackend`], [`store::LiveTuning::backend`]): the
 //! default [`backend::MemoryBackend`] keeps chunks in RAM exactly as
 //! before, while [`backend::FileBackend`] spills each chunk to a file
-//! under `--data-dir` (temp-file + rename), turning the cache tier
-//! into a true memory-over-disk hot tier and lifting the store's
+//! under `--data-dir` (temp-file + fsync + rename), turning the cache
+//! tier into a true memory-over-disk hot tier and lifting the store's
 //! capacity past RAM. The `live_throughput` and `live_cache` benches
 //! sweep both backends.
+//!
+//! The disk tier is **crash-consistent and re-openable**: every chunk
+//! publish is recorded in a per-node append-only manifest (length +
+//! checksum, fsynced), the namespace is journaled at create time and
+//! snapshotted per stripe on clean shutdown
+//! ([`store::LiveStore::shutdown`]), and
+//! [`store::LiveStore::reopen`] rebuilds a store from a `--data-dir`
+//! left by a dead process — verifying every surviving chunk bottom-up
+//! and reporting what made it through
+//! ([`store::RecoveryReport`], the reserved `recovered=` field on
+//! `cache_state`/`system_status`, and the `live_recovery`
+//! experiment).
 
 pub mod backend;
 pub mod engine;
 pub mod store;
 
-pub use backend::{chunk_files_under, BackendKind, ChunkBackend, FileBackend, MemoryBackend};
+pub use backend::{
+    chunk_crc, chunk_files_under, BackendKind, ChunkBackend, FileBackend, MemoryBackend,
+    NodeRecovery,
+};
 pub use engine::{EngineOptions, LiveEngine, LiveReport};
-pub use store::{CachePolicy, CacheStats, LiveStore, LiveTuning};
+pub use store::{CachePolicy, CacheStats, LiveStore, LiveTuning, RecoveryReport};

@@ -75,20 +75,231 @@
 //! pressure forces them out first, so correctness never depends on the
 //! hint being truthful. The reserved `cache_state` attribute reports
 //! the backend in its `tier=` field.
+//!
+//! # Restart & recovery
+//!
+//! A disk-backed store is **re-openable**: `Lifetime=durable` is a
+//! promise the store keeps across process death, not just across
+//! reads. Three durable artifacts live under the data dir:
+//!
+//! * per-node chunk **manifests** (`node<i>/manifest.log`, see
+//!   [`crate::live::backend`]) — chunk key → length → checksum,
+//!   fsynced on every publish;
+//! * a store-level **namespace journal** (`namespace.log`) — one
+//!   `create` record per file (id, path, tags, block map), appended
+//!   under the namespace stripe lock and fsynced before `write_file`
+//!   returns, plus `del` records from delete/reclaim sweeps;
+//! * per-stripe namespace **snapshots** (`ns-stripe<k>.snap` + the
+//!   `CLEAN` marker), written by [`LiveStore::shutdown`] — the clean
+//!   path that also captures post-create tag mutations (consumer
+//!   countdowns, later `set_xattr`s) the journal does not replay.
+//!
+//! [`LiveStore::reopen`] brings a data dir back: snapshots when the
+//! previous instance shut down cleanly, journal replay + manifest
+//! verification otherwise (the crash path). Either way every candidate
+//! file is checked bottom-up — a chunk counts only where its manifest
+//! record and on-disk bytes agree — holders that lost their copy are
+//! pruned, files with an unrecoverable chunk are dropped, scratch
+//! files never resurrect, and chunks no surviving file claims are
+//! unlinked. What survived is reported through
+//! [`LiveStore::recovery_report`] and the reserved `recovered=` field
+//! on `cache_state` (per file) and `system_status` (count), so a
+//! scheduler can see which files outlived the crash.
 
 use super::backend::{
-    auto_data_dir, BackendKind, ChunkBackend, DirGuard, FileBackend, MemoryBackend,
+    auto_data_dir, AppendLog, BackendKind, ChunkBackend, DirGuard, FileBackend, MemoryBackend,
+    NodeRecovery,
 };
 use crate::dispatch::{shard_for_path, PlacementCtx, Registry, ShardedPlacementState};
 use crate::hints::{AccessPattern, Lifetime, TagSet};
 use crate::storage::types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 /// Default chunk size for the live store (256 KiB = one kernel tile).
 pub const LIVE_CHUNK: u64 = 256 * 1024;
+
+/// Store-level metadata file under the data dir (node count, capacity)
+/// — what [`LiveStore::reopen`] needs before it can rebuild anything.
+const STORE_META: &str = "store.meta";
+
+/// Store-level append-only namespace journal under the data dir.
+const NAMESPACE_LOG: &str = "namespace.log";
+
+/// Marker written by a clean [`LiveStore::shutdown`]; its presence
+/// tells [`LiveStore::reopen`] the per-stripe snapshots are
+/// trustworthy. Removed the moment the namespace mutates again.
+const CLEAN_MARKER: &str = "CLEAN";
+
+/// What [`LiveStore::reopen`] rebuilt — and what the crash cost.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    /// `true` when the namespace came from a clean-shutdown snapshot;
+    /// `false` when it was salvaged from the journal + chunk manifests.
+    pub clean: bool,
+    /// Files fully recovered (every chunk verified on ≥ 1 holder).
+    pub files_recovered: usize,
+    /// Durable files dropped because at least one chunk survived on no
+    /// holder (torn mid-crash).
+    pub files_dropped: usize,
+    /// `Lifetime=scratch` files discarded on principle: a scratch file
+    /// must never resurrect across a restart.
+    pub scratch_discarded: usize,
+    /// Logical bytes across the recovered files.
+    pub bytes_recovered: u64,
+    /// Backend chunks that replayed and verified clean.
+    pub chunks_recovered: usize,
+    /// Backend chunks discarded: torn manifest records, corrupt or
+    /// orphaned chunk files, and chunks no surviving file claims.
+    pub chunks_dropped: usize,
+}
+
+/// Backslash-escape the namespace-record delimiters (tab, newline) so
+/// arbitrary paths and tag values survive the line format.
+fn ns_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\t' => out.push_str("\\t"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn ns_unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('t') => out.push('\t'),
+            Some('n') => out.push('\n'),
+            Some(other) => out.push(other),
+            None => break,
+        }
+    }
+    out
+}
+
+/// Render one namespace `create` record: the full [`FileMeta`] a
+/// recovery needs to serve the file again (journal and snapshot share
+/// the format).
+fn encode_create(path: &str, meta: &FileMeta) -> String {
+    let chunks = if meta.chunks.is_empty() {
+        "-".to_string()
+    } else {
+        meta.chunks
+            .iter()
+            .map(|c| {
+                c.replicas
+                    .iter()
+                    .map(|n| n.0.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    };
+    format!(
+        "create\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+        meta.id.0,
+        meta.size,
+        meta.chunk_size,
+        meta.creator.0,
+        ns_escape(path),
+        ns_escape(&meta.tags.to_string()),
+        chunks
+    )
+}
+
+/// Parse a `create` record back into `(path, FileMeta)`; `None` for
+/// anything garbled (a torn journal tail ends the replay).
+fn decode_create(line: &str) -> Option<(String, FileMeta)> {
+    let fields: Vec<&str> = line.split('\t').collect();
+    if fields.len() != 8 || fields[0] != "create" {
+        return None;
+    }
+    let id = FileId(fields[1].parse().ok()?);
+    let size: u64 = fields[2].parse().ok()?;
+    let chunk_size: u64 = fields[3].parse().ok()?;
+    if chunk_size == 0 {
+        return None; // corrupt: would divide the chunk math by zero
+    }
+    let creator = NodeId(fields[4].parse().ok()?);
+    let path = ns_unescape(fields[5]);
+    let tags: TagSet = ns_unescape(fields[6]).parse().ok()?;
+    let chunks = if fields[7] == "-" {
+        Vec::new()
+    } else {
+        let mut out = Vec::new();
+        for part in fields[7].split(';') {
+            let mut replicas = Vec::new();
+            for n in part.split(',') {
+                replicas.push(NodeId(n.parse().ok()?));
+            }
+            if replicas.is_empty() {
+                return None;
+            }
+            out.push(ChunkMeta { replicas });
+        }
+        out
+    };
+    if FileMeta::chunk_count(size, chunk_size) != chunks.len() as u64 {
+        return None;
+    }
+    Some((
+        path,
+        FileMeta {
+            id,
+            size,
+            chunk_size,
+            tags,
+            chunks,
+            creator,
+        },
+    ))
+}
+
+/// Write `contents` durably at `path` via temp file + fsync + rename,
+/// then fsync the parent directory so the rename itself survives power
+/// loss — without it, later renames (e.g. the `CLEAN` marker) could
+/// become durable while earlier ones (the snapshots it vouches for)
+/// did not.
+fn write_durable(path: &Path, contents: &str) -> Result<(), StorageError> {
+    let tmp = path.with_extension("tmp");
+    let io = std::fs::File::create(&tmp)
+        .and_then(|mut f| f.write_all(contents.as_bytes()).and_then(|()| f.sync_all()))
+        .and_then(|()| std::fs::rename(&tmp, path))
+        .and_then(|()| {
+            match path.parent() {
+                Some(dir) => std::fs::File::open(dir).and_then(|d| d.sync_all()),
+                None => Ok(()),
+            }
+        });
+    io.map_err(|e| StorageError::Invalid(format!("write {}: {e}", path.display())))
+}
+
+/// Remove a file and fsync its parent directory, so the unlink itself
+/// survives power loss. Removing the `CLEAN` marker with a bare
+/// `remove_file` would leave the unlink in the page cache: a crash
+/// could resurrect the marker and let stale snapshots shadow journal
+/// records that *were* fsynced after it was "removed".
+fn remove_durable(path: &Path) {
+    let _ = std::fs::remove_file(path);
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::File::open(dir).and_then(|d| d.sync_all());
+    }
+}
+
 
 /// Eviction policy for the hot-chunk cache tier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -213,6 +424,12 @@ pub struct CacheStats {
     pub files_reclaimed: u64,
     /// Logical bytes freed by auto-reclamation.
     pub bytes_reclaimed: u64,
+    /// Chunk reads that failed on a *present* chunk (I/O error or
+    /// checksum mismatch), summed over node backends. Before this
+    /// counter a damaged disk chunk looked exactly like an absent one
+    /// — the read silently failed over and the fault dissolved into
+    /// remote-traffic noise. Always 0 on the memory backend.
+    pub read_errors: u64,
 }
 
 /// The per-node, capacity-bounded hot-chunk cache tier.
@@ -714,9 +931,14 @@ fn worker_loop(shared: &ReplShared) {
                         // probe order under concurrent dirty
                         // write-backs), then its backend; a file
                         // deleted mid-flight simply has no source left
-                        // and the job becomes a no-op.
+                        // and the job becomes a no-op. A holder whose
+                        // read fails is treated as having no copy (the
+                        // backend counts the fault) and the next source
+                        // is tried.
                         let bytes = sources.iter().find_map(|s| {
-                            cache.peek(*s, key).or_else(|| shared.stores[s.0].get(key))
+                            cache
+                                .peek(*s, key)
+                                .or_else(|| shared.stores[s.0].get(key).ok().flatten())
                         });
                         if let Some(bytes) = bytes {
                             if cache.insert(*target, key, bytes, *class) {
@@ -780,6 +1002,21 @@ pub struct LiveStore {
     pub bytes_reclaimed: AtomicU64,
     /// Failure injection: nodes marked dead serve nothing.
     dead: RwLock<Vec<bool>>,
+    /// Append handle on the namespace journal (disk backend only):
+    /// `create` records land under the namespace stripe lock, `del`
+    /// records from the sweep paths.
+    journal: Option<Mutex<AppendLog>>,
+    /// Set while a `CLEAN` marker written by [`LiveStore::shutdown`]
+    /// is on disk; the first namespace mutation afterwards clears the
+    /// flag and unlinks the marker, invalidating the now-stale
+    /// snapshots so a later crash falls back to journal salvage.
+    clean_marker: AtomicBool,
+    /// Files that came back through [`LiveStore::reopen`] — the
+    /// `recovered=` field on `cache_state` reads this.
+    recovered_ids: HashSet<FileId>,
+    /// What the last [`LiveStore::reopen`] rebuilt (`None` on a fresh
+    /// store).
+    recovery: Option<RecoveryReport>,
     /// Cleanup for an auto-created disk-backend directory. Declared
     /// last (after `repl`): struct fields drop in declaration order,
     /// so the replication workers are joined before the directory is
@@ -816,12 +1053,12 @@ impl LiveStore {
         capacity: u64,
         tuning: LiveTuning,
     ) -> Result<Self, StorageError> {
-        let (backends, data_root, dir_guard) = match tuning.backend {
+        let (backends, data_root, dir_guard, journal) = match tuning.backend {
             BackendKind::Memory => {
                 let backends: Vec<Box<dyn ChunkBackend>> = (0..n_nodes)
                     .map(|_| Box::new(MemoryBackend::default()) as Box<dyn ChunkBackend>)
                     .collect();
-                (backends, None, None)
+                (backends, None, None, None)
             }
             BackendKind::Disk => {
                 // A user-supplied directory persists across the store's
@@ -834,11 +1071,56 @@ impl LiveStore {
                         (dir.clone(), Some(DirGuard { path: dir }))
                     }
                 };
+                // A fresh store must never be built over a previous
+                // store's data: that silently orphans every durable
+                // file the old instance promised to keep. Re-opening
+                // is an explicit, recovering operation.
+                if root.join(STORE_META).exists() || root.join(NAMESPACE_LOG).exists() {
+                    return Err(StorageError::Invalid(format!(
+                        "data dir {} already holds a store; reopen it \
+                         (LiveStore::reopen / --reopen) or point at an empty directory",
+                        root.display()
+                    )));
+                }
+                // store.meta goes down first: once any node manifest
+                // exists this directory refuses a fresh open, so the
+                // reopen path must already have what it needs — a
+                // crash mid-bring-up then recovers (as empty) instead
+                // of leaving a directory neither path will accept.
+                std::fs::create_dir_all(&root).map_err(|e| {
+                    StorageError::Invalid(format!("create data dir {}: {e}", root.display()))
+                })?;
+                // `hints=` records whether the *creating* registry
+                // interpreted tags: a store that treated
+                // `Lifetime=scratch` as transient must discard scratch
+                // at recovery even if the reopening process passes a
+                // different registry, and a DSS store (tags inert)
+                // must keep those same files — they were ordinary
+                // durable data to it.
+                write_durable(
+                    &root.join(STORE_META),
+                    &format!(
+                        "nodes={n_nodes} capacity={capacity} hints={}\n",
+                        u8::from(registry.hints_enabled())
+                    ),
+                )?;
                 let mut backends: Vec<Box<dyn ChunkBackend>> = Vec::with_capacity(n_nodes);
                 for i in 0..n_nodes {
                     backends.push(Box::new(FileBackend::new(&root.join(format!("node{i}")))?));
                 }
-                (backends, Some(root), guard)
+                let journal = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(root.join(NAMESPACE_LOG))
+                    .map_err(|e| {
+                        StorageError::Invalid(format!("create namespace journal: {e}"))
+                    })?;
+                (
+                    backends,
+                    Some(root),
+                    guard,
+                    Some(Mutex::new(AppendLog::new(journal))),
+                )
             }
         };
         let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(backends);
@@ -883,8 +1165,391 @@ impl LiveStore {
             files_reclaimed: AtomicU64::new(0),
             bytes_reclaimed: AtomicU64::new(0),
             dead: RwLock::new(vec![false; n_nodes]),
+            journal,
+            clean_marker: AtomicBool::new(false),
+            recovered_ids: HashSet::new(),
+            recovery: None,
             _dir_guard: dir_guard,
         })
+    }
+
+    /// Re-open a disk-backed store left in `data_dir` by a previous
+    /// process, with default [`LiveTuning`] — the restart path. See
+    /// [`LiveStore::reopen_with`].
+    pub fn reopen(registry: Registry, data_dir: &Path) -> Result<Self, StorageError> {
+        LiveStore::reopen_with(registry, data_dir, LiveTuning::default())
+    }
+
+    /// Re-open a disk-backed store with explicit tuning (the backend is
+    /// forced to disk and `tuning.data_dir` is overridden by
+    /// `data_dir`; node count and capacity come from the store's own
+    /// `store.meta`).
+    ///
+    /// Recovery is bottom-up: per-node chunk manifests are replayed
+    /// and every surviving chunk file verified against its recorded
+    /// length and checksum ([`FileBackend::open_existing`]); the
+    /// namespace comes from the clean-shutdown snapshots when the
+    /// `CLEAN` marker is present, else from journal salvage. A file
+    /// survives only if every chunk verified on at least one holder
+    /// (lost holders are pruned from its block map); scratch files and
+    /// unclaimed chunks are discarded. [`LiveStore::recovery_report`]
+    /// says what happened.
+    pub fn reopen_with(
+        registry: Registry,
+        data_dir: &Path,
+        tuning: LiveTuning,
+    ) -> Result<Self, StorageError> {
+        let meta_raw = std::fs::read_to_string(data_dir.join(STORE_META)).map_err(|e| {
+            StorageError::Invalid(format!(
+                "no store to reopen under {} (store.meta: {e})",
+                data_dir.display()
+            ))
+        })?;
+        let mut n_nodes = 0usize;
+        let mut capacity = 0u64;
+        let mut creator_hints: Option<bool> = None;
+        for field in meta_raw.split_whitespace() {
+            if let Some(v) = field.strip_prefix("nodes=") {
+                n_nodes = v
+                    .parse()
+                    .map_err(|e| StorageError::Invalid(format!("store.meta nodes: {e}")))?;
+            } else if let Some(v) = field.strip_prefix("capacity=") {
+                capacity = v
+                    .parse()
+                    .map_err(|e| StorageError::Invalid(format!("store.meta capacity: {e}")))?;
+            } else if let Some(v) = field.strip_prefix("hints=") {
+                creator_hints = Some(v != "0");
+            }
+        }
+        if n_nodes == 0 {
+            return Err(StorageError::Invalid(format!(
+                "store.meta under {} names no nodes",
+                data_dir.display()
+            )));
+        }
+
+        // Bottom layer first: replay + verify every node's chunks. A
+        // node directory that never made it to disk (the store crashed
+        // during bring-up, after store.meta but before every
+        // FileBackend::new) is an empty node, not an error — the
+        // directory must stay reopenable at every point of its life.
+        let mut file_backends = Vec::with_capacity(n_nodes);
+        let mut node_recs = Vec::with_capacity(n_nodes);
+        for i in 0..n_nodes {
+            let node_dir = data_dir.join(format!("node{i}"));
+            let (b, rec) = if node_dir.is_dir() {
+                FileBackend::open_existing(&node_dir)?
+            } else {
+                (FileBackend::new(&node_dir)?, NodeRecovery::default())
+            };
+            file_backends.push(b);
+            node_recs.push(rec);
+        }
+        let backend_rec = NodeRecovery::merged(&node_recs);
+
+        // Namespace candidates: snapshots on a clean shutdown, journal
+        // salvage after a crash.
+        let clean_stripes = std::fs::read_to_string(data_dir.join(CLEAN_MARKER))
+            .ok()
+            .and_then(|s| s.trim().strip_prefix("stripes=")?.parse::<usize>().ok());
+        let mut max_id = 0u64;
+        // Snapshot path: trusted only when every snapshot the marker
+        // vouches for reads back. A CLEAN marker over a missing or
+        // unreadable snapshot (e.g. power loss between renames on a
+        // file system that reordered them) must not brick the store —
+        // the journal + manifests still hold everything, so fall back
+        // to salvage instead of erroring.
+        let snapshot_candidates: Option<Vec<(String, FileMeta)>> = clean_stripes.and_then(|k| {
+            let mut out = Vec::new();
+            for s in 0..k {
+                let snap =
+                    std::fs::read_to_string(data_dir.join(format!("ns-stripe{s}.snap"))).ok()?;
+                for line in snap.lines() {
+                    out.push(decode_create(line)?);
+                }
+            }
+            Some(out)
+        });
+        let mut report = RecoveryReport {
+            clean: snapshot_candidates.is_some(),
+            ..RecoveryReport::default()
+        };
+        let mut candidates: Vec<(String, FileMeta)> = Vec::new();
+        if let Some(snap) = snapshot_candidates {
+            candidates = snap;
+        } else {
+            // Journal replay: creates insert, dels remove, the first
+            // torn or garbled record (and everything after it —
+            // append order is trust order) is discarded. A journal that
+            // does not exist is a store that crashed before its journal
+            // became durable — legitimately empty; any other read
+            // failure aborts the reopen, because salvaging "nothing"
+            // would drop every file and sweep every chunk on disk.
+            let raw = match std::fs::read(data_dir.join(NAMESPACE_LOG)) {
+                Ok(raw) => raw,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+                Err(e) => {
+                    return Err(StorageError::Invalid(format!(
+                        "read namespace journal under {}: {e}",
+                        data_dir.display()
+                    )));
+                }
+            };
+            let text = String::from_utf8_lossy(&raw);
+            let mut by_id: HashMap<u64, usize> = HashMap::new();
+            let mut ordered: Vec<Option<(String, FileMeta)>> = Vec::new();
+            for line in text.split_inclusive('\n') {
+                let Some(body) = line.strip_suffix('\n') else {
+                    continue; // torn tail: that record alone is lost
+                };
+                if let Some(id) = body.strip_prefix("del\t").and_then(|v| v.parse::<u64>().ok()) {
+                    if let Some(slot) = by_id.remove(&id) {
+                        ordered[slot] = None;
+                    }
+                } else if let Some((path, meta)) = decode_create(body) {
+                    by_id.insert(meta.id.0, ordered.len());
+                    ordered.push(Some((path, meta)));
+                }
+                // A terminated-but-garbled line is one damaged record
+                // (a failed append the next one newline-terminated):
+                // skip it, keep the rest — every candidate is verified
+                // against the chunk manifests below anyway.
+            }
+            candidates.extend(ordered.into_iter().flatten());
+        }
+        // The store is live again the moment recovery starts: a stale
+        // snapshot must not be trusted after new writes land.
+        remove_durable(&data_dir.join(CLEAN_MARKER));
+
+        // Verify each candidate against the recovered chunk stores.
+        // Scratch discard follows the *creating* store's registry (the
+        // `hints=` field store.meta records): if that store treated
+        // `Lifetime=scratch` as transient, reopening with a different
+        // registry (`--no-hints`) must not resurrect those files — and
+        // a DSS-created store's scratch tags were inert, so its files
+        // are ordinary durable data and are kept.
+        let hints_on = creator_hints.unwrap_or_else(|| registry.hints_enabled());
+        let mut kept: Vec<(String, FileMeta)> = Vec::new();
+        for (path, mut meta) in candidates {
+            max_id = max_id.max(meta.id.0);
+            if hints_on && meta.tags.lifetime() == Lifetime::Scratch {
+                report.scratch_discarded += 1;
+                continue;
+            }
+            let mut whole = true;
+            for (idx, chunk) in meta.chunks.iter_mut().enumerate() {
+                let key = (meta.id, idx as u64);
+                chunk
+                    .replicas
+                    .retain(|h| h.0 < n_nodes && file_backends[h.0].contains(key));
+                if chunk.replicas.is_empty() {
+                    whole = false;
+                    break;
+                }
+            }
+            if whole {
+                report.files_recovered += 1;
+                report.bytes_recovered += meta.size;
+                kept.push((path, meta));
+            } else {
+                report.files_dropped += 1;
+            }
+        }
+
+        // Sweep chunks no surviving file claims (scratch remnants,
+        // dropped files, chunks of pruned holders nothing references).
+        let mut claimed: Vec<HashSet<(FileId, u64)>> = vec![HashSet::new(); n_nodes];
+        for (_, meta) in &kept {
+            for (idx, chunk) in meta.chunks.iter().enumerate() {
+                for holder in &chunk.replicas {
+                    claimed[holder.0].insert((meta.id, idx as u64));
+                }
+            }
+        }
+        let mut unclaimed = 0usize;
+        for (i, b) in file_backends.iter().enumerate() {
+            for key in b.chunk_keys() {
+                max_id = max_id.max(key.0 .0);
+                if !claimed[i].contains(&key) {
+                    b.delete(key);
+                    unclaimed += 1;
+                }
+            }
+        }
+        report.chunks_recovered = backend_rec.chunks_recovered - unclaimed;
+        report.chunks_dropped = backend_rec.torn_records
+            + backend_rec.corrupt_chunks
+            + backend_rec.orphan_files
+            + unclaimed;
+
+        // Compact the journal to the surviving truth, so dels and torn
+        // tails reset here and the next crash replays clean.
+        let mut compacted = String::new();
+        for (path, meta) in &kept {
+            compacted.push_str(&encode_create(path, meta));
+            compacted.push('\n');
+        }
+        write_durable(&data_dir.join(NAMESPACE_LOG), &compacted)?;
+        let journal = std::fs::OpenOptions::new()
+            .append(true)
+            .open(data_dir.join(NAMESPACE_LOG))
+            .map_err(|e| StorageError::Invalid(format!("reopen namespace journal: {e}")))?;
+
+        // Rebuild the live structures around the recovered state.
+        let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(
+            file_backends
+                .into_iter()
+                .map(|b| Box::new(b) as Box<dyn ChunkBackend>)
+                .collect(),
+        );
+        let n_stripes = tuning.stripes.max(1);
+        let cache = tuning.cache_bytes.map(|budget| {
+            Arc::new(CacheTier::new(
+                n_nodes,
+                budget,
+                tuning.cache_policy,
+                Some(Arc::clone(&stores)),
+            ))
+        });
+        let mut nodes: Vec<NodeState> = (0..n_nodes)
+            .map(|i| NodeState {
+                node: NodeId(i),
+                capacity,
+                used: 0,
+            })
+            .collect();
+        let mut stripes: Vec<NamespaceShard> =
+            (0..n_stripes).map(|_| NamespaceShard::default()).collect();
+        let mut recovered_ids = HashSet::new();
+        for (path, meta) in kept {
+            for (idx, chunk) in meta.chunks.iter().enumerate() {
+                let bytes = meta.chunk_bytes(idx as u64);
+                for holder in &chunk.replicas {
+                    nodes[holder.0].used += bytes;
+                }
+            }
+            recovered_ids.insert(meta.id);
+            stripes[shard_for_path(&path, n_stripes)]
+                .files
+                .insert(path, meta);
+        }
+
+        Ok(LiveStore {
+            registry,
+            stripes: stripes.into_iter().map(Mutex::new).collect(),
+            core: Mutex::new(PlacementCore {
+                nodes,
+                placement: ShardedPlacementState::new(n_stripes),
+            }),
+            stores: Arc::clone(&stores),
+            backend_kind: BackendKind::Disk,
+            data_root: Some(data_dir.to_path_buf()),
+            cache: cache.clone(),
+            lifetime_on: tuning.lifetime,
+            next_id: AtomicU64::new(max_id + 1),
+            repl: ReplPool::new(stores, cache, tuning.repl_workers),
+            bytes_written: AtomicU64::new(0),
+            bytes_read: AtomicU64::new(0),
+            local_reads: AtomicU64::new(0),
+            remote_reads: AtomicU64::new(0),
+            setattr_ops: AtomicU64::new(0),
+            getattr_ops: AtomicU64::new(0),
+            replicas_deferred: AtomicU64::new(0),
+            files_reclaimed: AtomicU64::new(0),
+            bytes_reclaimed: AtomicU64::new(0),
+            dead: RwLock::new(vec![false; n_nodes]),
+            journal: Some(Mutex::new(AppendLog::new(journal))),
+            clean_marker: AtomicBool::new(false),
+            recovered_ids,
+            recovery: Some(report),
+            _dir_guard: None,
+        })
+    }
+
+    /// Clean shutdown: drain background replication, then persist the
+    /// namespace — a per-stripe snapshot (`ns-stripe<k>.snap`) plus the
+    /// `CLEAN` marker [`LiveStore::reopen`] trusts. Unlike the journal
+    /// (create-time records), the snapshot captures the namespace *as
+    /// it is now*: post-create `set_xattr`s and consumer countdowns
+    /// included. Intended as the store's last act before drop — any
+    /// later namespace mutation invalidates the marker and the next
+    /// reopen falls back to journal salvage. No-op on the memory
+    /// backend.
+    pub fn shutdown(&self) {
+        self.flush_replication();
+        let Some(root) = &self.data_root else { return };
+        if self.journal.is_none() {
+            return;
+        }
+        // Freeze the namespace for the whole snapshot + marker write:
+        // every stripe lock is held at once, so a concurrent create or
+        // delete cannot land in an already-snapshotted stripe and then
+        // be vouched for by a CLEAN marker that never saw it (the next
+        // snapshot-path reopen would silently lose that durable file).
+        // Writers simply block on their stripe until shutdown is done;
+        // the marker flag is set before the locks drop, so the first
+        // post-shutdown mutation invalidates the marker.
+        let guards: Vec<_> = self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        for (k, stripe) in guards.iter().enumerate() {
+            let mut snap = String::new();
+            for (path, meta) in &stripe.files {
+                snap.push_str(&encode_create(path, meta));
+                snap.push('\n');
+            }
+            if write_durable(&root.join(format!("ns-stripe{k}.snap")), &snap).is_err() {
+                return; // no marker ⇒ reopen uses journal salvage
+            }
+        }
+        if write_durable(
+            &root.join(CLEAN_MARKER),
+            &format!("stripes={}\n", guards.len()),
+        )
+        .is_ok()
+        {
+            self.clean_marker.store(true, Ordering::Release);
+        }
+    }
+
+    /// What the reopen that built this store recovered (`None` for a
+    /// fresh store).
+    pub fn recovery_report(&self) -> Option<&RecoveryReport> {
+        self.recovery.as_ref()
+    }
+
+    /// Did `path` survive a restart into this store instance? (The
+    /// per-file half of the `recovered=` bottom-up field.)
+    pub fn was_recovered(&self, path: &str) -> bool {
+        let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+        stripe
+            .files
+            .get(path)
+            .is_some_and(|m| self.recovered_ids.contains(&m.id))
+    }
+
+    /// Append one namespace-journal record (and, first, invalidate any
+    /// clean-shutdown marker — the snapshots are stale the moment the
+    /// namespace mutates). `sync` forces the record to disk before
+    /// returning: the durability point of a `create`'s publish.
+    fn journal_append(&self, record: &str, sync: bool) -> Result<(), StorageError> {
+        let Some(journal) = &self.journal else {
+            return Ok(());
+        };
+        self.invalidate_clean();
+        let mut j = journal.lock().unwrap();
+        j.append(&format!("{record}\n"), sync)
+            .map_err(|e| StorageError::Invalid(format!("namespace journal: {e}")))
+    }
+
+    /// Invalidate any clean-shutdown marker: the snapshots it vouches
+    /// for are stale the moment the namespace mutates — creates and
+    /// deletes (via the journal), but also bare tag mutations, which
+    /// the journal does not record and only a snapshot could restore.
+    fn invalidate_clean(&self) {
+        if self.clean_marker.swap(false, Ordering::AcqRel) {
+            if let Some(root) = &self.data_root {
+                remove_durable(&root.join(CLEAN_MARKER));
+            }
+        }
     }
 
     /// WOSS deployment (full hint registry, default tuning).
@@ -1040,16 +1705,26 @@ impl LiveStore {
     /// file exists — the runtime tags outputs ahead of execution.
     pub fn set_xattr(&self, path: &str, key: &str, value: &str) {
         self.setattr_ops.fetch_add(1, Ordering::Relaxed);
-        let mut stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
-        if let Some(meta) = stripe.files.get_mut(path) {
-            meta.tags.set(key, value);
-            return;
+        {
+            let mut stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            if let Some(meta) = stripe.files.get_mut(path) {
+                meta.tags.set(key, value);
+            } else {
+                stripe
+                    .pending_tags
+                    .entry(path.to_string())
+                    .or_default()
+                    .set(key, value);
+            }
         }
-        stripe
-            .pending_tags
-            .entry(path.to_string())
-            .or_default()
-            .set(key, value);
+        // Tag mutations are namespace mutations the journal does not
+        // record — only a snapshot could restore them, so a snapshot
+        // written before this mutation must stop being trusted.
+        // Invalidating *after* the mutation (and after the stripe lock,
+        // which a concurrent shutdown holds across its marker write)
+        // guarantees one of: the snapshot saw the mutation, or the
+        // marker it wrote is removed here.
+        self.invalidate_clean();
     }
 
     /// Get an extended attribute (bottom-up channel): system-reserved
@@ -1060,9 +1735,13 @@ impl LiveStore {
     /// The reserved `cache_state` attribute is served directly by the
     /// store (node-local cache residency is live-deployment state the
     /// manager-side providers cannot see): its value is
-    /// `tier=<mem|disk>;chunks=<copies>;bytes=<n>;pinned=<copies>` —
-    /// the chunk backend uncached bytes live on, then the file's cache
-    /// residency summed over every node's cache.
+    /// `tier=<mem|disk>;chunks=<copies>;bytes=<n>;pinned=<copies>;recovered=<0|1>`
+    /// — the chunk backend uncached bytes live on, the file's cache
+    /// residency summed over every node's cache, and whether this file
+    /// survived a [`LiveStore::reopen`] into the current instance. The
+    /// live store also extends the registry-served `system_status`
+    /// with a store-wide ` recovered=<n>` count, so a scheduler can see
+    /// how much of the namespace outlived a restart without walking it.
     pub fn get_xattr(&self, path: &str, key: &str) -> Option<String> {
         self.getattr_ops.fetch_add(1, Ordering::Relaxed);
         let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
@@ -1073,13 +1752,17 @@ impl LiveStore {
                 None => (0, 0, 0),
             };
             let tier = self.backend_kind.label();
+            let recovered = u8::from(self.recovered_ids.contains(&meta.id));
             return Some(format!(
-                "tier={tier};chunks={chunks};bytes={bytes};pinned={pinned}"
+                "tier={tier};chunks={chunks};bytes={bytes};pinned={pinned};recovered={recovered}"
             ));
         }
         if self.registry.serves_attr(key) {
             let core = self.core.lock().unwrap();
             if let Some(value) = self.registry.get_system_attr(key, meta, &core.nodes) {
+                if key == crate::hints::SYSTEM_STATUS_ATTR {
+                    return Some(format!("{value} recovered={}", self.recovered_ids.len()));
+                }
                 return Some(value);
             }
         }
@@ -1206,6 +1889,19 @@ impl LiveStore {
             creator: client,
         };
         stripe.files.insert(path.to_string(), meta.clone());
+        // Namespace publish record (disk backend): journaled under the
+        // stripe lock so a racing delete's `del` record can only land
+        // after it. Not yet fsynced — the sync below is the create's
+        // durability point. A create that cannot be journaled cannot
+        // keep the durability promise, so it unwinds.
+        if self.journal.is_some() {
+            if let Err(e) = self.journal_append(&encode_create(path, &meta), false) {
+                stripe.files.remove(path);
+                drop(stripe);
+                self.sweep_file(&meta);
+                return Err(e);
+            }
+        }
         drop(stripe);
 
         // Data path outside every manager lock: the primary copy lands
@@ -1299,9 +1995,24 @@ impl LiveStore {
         };
         if raced_delete {
             self.sweep_bytes(&meta);
+        } else {
+            // Durability point: the primary copy (and, pessimistic, all
+            // replicas) is on its backend with its manifest record
+            // fsynced; now the namespace record follows it down. After
+            // this line a crash cannot un-create the file.
+            self.journal_sync();
         }
         self.bytes_written.fetch_add(size, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Flush the namespace journal to disk (best-effort — a failed
+    /// fsync narrows durability, it does not invalidate the in-memory
+    /// store).
+    fn journal_sync(&self) {
+        if let Some(journal) = &self.journal {
+            let _ = journal.lock().unwrap().sync();
+        }
     }
 
     /// Read a whole file into a buffer from `client`'s perspective
@@ -1343,7 +2054,7 @@ impl LiveStore {
             let mut served = false;
             // 1. The reader's own backend (authoritative copy).
             if live.contains(&client) {
-                if let Some(bytes) = self.stores[client.0].get(key) {
+                if let Some(bytes) = self.backend_read(client, key) {
                     out.extend_from_slice(&bytes);
                     self.local_reads.fetch_add(1, Ordering::Relaxed);
                     served = true;
@@ -1379,7 +2090,7 @@ impl LiveStore {
                         .cache
                         .as_ref()
                         .and_then(|c| c.peek(source, key))
-                        .or_else(|| self.stores[source.0].get(key));
+                        .or_else(|| self.backend_read(source, key));
                     if let Some(bytes) = got {
                         out.extend_from_slice(&bytes);
                         self.remote_reads.fetch_add(1, Ordering::Relaxed);
@@ -1398,7 +2109,7 @@ impl LiveStore {
             //    the write-back has landed by the time the cache lock
             //    was released, so the bytes are here now.
             if !served && live.contains(&client) {
-                if let Some(bytes) = self.stores[client.0].get(key) {
+                if let Some(bytes) = self.backend_read(client, key) {
                     out.extend_from_slice(&bytes);
                     self.local_reads.fetch_add(1, Ordering::Relaxed);
                     served = true;
@@ -1419,6 +2130,18 @@ impl LiveStore {
             self.consume_one(path, meta.id);
         }
         Ok(out)
+    }
+
+    /// Read a chunk from `node`'s backend with the absent/failed
+    /// distinction collapsed for the failover path: a failed read
+    /// means this holder's copy is lost (the backend counted the fault
+    /// — see [`CacheStats::read_errors`]), so the caller moves on to
+    /// the next holder exactly as if the chunk were absent. What must
+    /// *not* happen is the pre-fix behaviour: the error vanishing
+    /// entirely, leaving a disk fault indistinguishable from routine
+    /// remote traffic.
+    fn backend_read(&self, node: NodeId, key: (FileId, u64)) -> Option<Vec<u8>> {
+        self.stores[node.0].get(key).ok().flatten()
     }
 
     /// Eviction class for chunks of this file, per its tags. A DSS
@@ -1523,6 +2246,11 @@ impl LiveStore {
                 _ => Outcome::Pending,
             }
         };
+        // The countdown rewrote the file's Consumers tag (or removed
+        // the file) — a namespace mutation no journal `create` record
+        // captures, so a snapshot written before it is stale. After
+        // the stripe lock, same ordering argument as `set_xattr`.
+        self.invalidate_clean();
         match outcome {
             Outcome::Reclaim(meta) => {
                 self.sweep_file(&meta);
@@ -1576,6 +2304,19 @@ impl LiveStore {
     /// deletes below are final. Dirty entries are simply dropped: the
     /// file is dead, its bytes owe nothing to the disk.
     fn sweep_bytes(&self, meta: &FileMeta) {
+        // Journal the namespace removal first (fsynced): a deleted or
+        // reclaimed durable file must not resurrect after a crash.
+        // Duplicate `del` records from racing sweeps replay as no-ops.
+        // Scratch files under an interpreting registry skip the record
+        // entirely — recovery discards them on principle, and the
+        // reclamation that triggers most scratch sweeps runs inside
+        // `read_file`, where a synchronous journal fsync per reclaimed
+        // file would tax exactly the hot path the hint exists to help.
+        let scratch_never_replays =
+            self.registry.hints_enabled() && meta.tags.lifetime() == Lifetime::Scratch;
+        if self.journal.is_some() && !scratch_never_replays {
+            let _ = self.journal_append(&format!("del\t{}", meta.id.0), true);
+        }
         self.repl.cancel_file(meta.id);
         if let Some(cache) = &self.cache {
             cache.purge_file(meta.id);
@@ -1663,6 +2404,7 @@ impl LiveStore {
         }
         stats.files_reclaimed = self.files_reclaimed.load(Ordering::Relaxed);
         stats.bytes_reclaimed = self.bytes_reclaimed.load(Ordering::Relaxed);
+        stats.read_errors = self.stores.iter().map(|s| s.read_errors()).sum();
         stats
     }
 
@@ -1974,7 +2716,7 @@ mod tests {
         // Pressure evicts the dirty scratch entry: write-back first.
         assert!(tier.insert(NodeId(0), (f, 1), vec![2u8; 600], CacheClass::Durable));
         assert_eq!(
-            backends[0].get((f, 0)),
+            backends[0].get((f, 0)).unwrap(),
             Some(vec![1u8; 600]),
             "dirty victim written back before eviction"
         );
@@ -2018,7 +2760,7 @@ mod tests {
             assert_eq!(store.read_file(NodeId(2), "/f").unwrap(), data);
             assert_eq!(
                 store.get_xattr("/f", "cache_state").unwrap(),
-                "tier=disk;chunks=0;bytes=0;pinned=0",
+                "tier=disk;chunks=0;bytes=0;pinned=0;recovered=0",
                 "no cache tier: bytes live on disk"
             );
             store.delete("/f").unwrap();

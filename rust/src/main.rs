@@ -13,7 +13,13 @@
 //!   `--lifetime` (tag + enforce scratch reclamation), `--backend
 //!   mem|disk` (chunk backend; `disk` spills chunks to files),
 //!   `--data-dir PATH` (disk-backend root; omitted = a temp directory
-//!   removed on exit).
+//!   removed on exit), `--fingerprint-file PATH` (record output
+//!   fingerprints for a later restart check), `--clean-shutdown`
+//!   (write the namespace snapshot + CLEAN marker before exiting).
+//! * `live --reopen --data-dir PATH` — recover a disk store a previous
+//!   process left behind (cleanly or not): replay manifests + journal
+//!   or snapshot, print what survived, verify recorded fingerprints
+//!   when `--fingerprint-file` names a file, and shut down clean.
 //! * `list` — experiment ids.
 //! * `calib` — print the active calibration.
 
@@ -60,6 +66,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("  woss live --workload montage --nodes 8 --workers 8 --stripes 8 --repl-workers 2");
             println!("  woss live --workload pipeline --cache-mb 64 --cache-policy hint --lifetime");
             println!("  woss live --workload pipeline --backend disk --data-dir /tmp/woss --cache-mb 64");
+            println!("  woss live --reopen --data-dir /tmp/woss    # recover a store left behind");
             Ok(())
         }
     }
@@ -96,6 +103,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_live(args: &Args) -> Result<()> {
+    if args.has_flag("reopen") {
+        return cmd_live_reopen(args);
+    }
     let nodes = args.get_parse("nodes", 8usize);
     let workers = args.get_parse("workers", 8usize);
     let defaults = LiveTuning::default();
@@ -204,7 +214,125 @@ fn cmd_live(args: &Args) -> Result<()> {
             rep.bytes_reclaimed as f64 / 1048576.0
         );
     }
+    if rep.read_errors > 0 {
+        println!(
+            "  faults: {} chunk reads failed on a present chunk (failed over)",
+            rep.read_errors
+        );
+    }
     println!("  kernels: {:?}", rep.kernel_execs);
     println!("  integrity: {verified} files verified by checksum kernel");
+    if let Some(fp_path) = args.get("fingerprint-file") {
+        write_fingerprints(std::path::Path::new(fp_path), &rep.fingerprints)?;
+        println!(
+            "  fingerprints: {} recorded to {fp_path}",
+            rep.fingerprints.len()
+        );
+    }
+    if args.has_flag("clean-shutdown") {
+        engine.store().shutdown();
+        println!("  shutdown: clean (namespace snapshot + CLEAN marker written)");
+    }
     Ok(())
+}
+
+/// `woss live --reopen --data-dir PATH`: recover a disk-backed store a
+/// previous process left behind, report what survived, optionally
+/// verify recorded fingerprints, and leave the store cleanly shut down
+/// (so the next reopen takes the snapshot path).
+fn cmd_live_reopen(args: &Args) -> Result<()> {
+    let data_dir = args
+        .get("data-dir")
+        .ok_or_else(|| anyhow!("--reopen requires --data-dir PATH"))?;
+    let defaults = LiveTuning::default();
+    let cache_mb = args.get_parse("cache-mb", 0u64);
+    let cache_policy = match args.get_or("cache-policy", "hint") {
+        "lru" => CachePolicy::Lru,
+        "hint" => CachePolicy::HintAware,
+        other => return Err(anyhow!("unknown --cache-policy '{other}' (lru|hint)")),
+    };
+    let tuning = LiveTuning {
+        stripes: args.get_parse("stripes", defaults.stripes),
+        repl_workers: args.get_parse("repl-workers", defaults.repl_workers),
+        cache_bytes: if cache_mb > 0 {
+            Some(cache_mb * 1024 * 1024)
+        } else {
+            None
+        },
+        cache_policy,
+        lifetime: args.has_flag("lifetime"),
+        ..defaults
+    };
+    let registry = if args.has_flag("no-hints") {
+        Registry::baseline()
+    } else {
+        Registry::woss()
+    };
+    let store = LiveStore::reopen_with(registry, std::path::Path::new(data_dir), tuning)
+        .map_err(|e| anyhow!("reopen {data_dir}: {e}"))?;
+    let recovery = store.recovery_report().cloned().unwrap_or_default();
+    println!(
+        "reopened {data_dir} after a {} shutdown",
+        if recovery.clean { "clean" } else { "crash (journal salvage)" }
+    );
+    println!(
+        "  files: {} recovered ({:.1} MB), {} dropped as torn, {} scratch discarded",
+        recovery.files_recovered,
+        recovery.bytes_recovered as f64 / 1048576.0,
+        recovery.files_dropped,
+        recovery.scratch_discarded
+    );
+    println!(
+        "  chunks: {} verified, {} dropped (torn manifest / corrupt / orphaned / unclaimed)",
+        recovery.chunks_recovered, recovery.chunks_dropped
+    );
+    match args.get("fingerprint-file") {
+        Some(fp_path) => {
+            let fps = read_fingerprints(std::path::Path::new(fp_path))?;
+            let engine = LiveEngine::new(store, 1)?;
+            let verified = engine
+                .verify_fingerprints(&fps)
+                .map_err(|e| anyhow!("recovered fingerprints diverge: {e}"))?;
+            println!(
+                "  integrity: {verified}/{} recovered fingerprints match",
+                fps.len()
+            );
+            engine.store().shutdown();
+        }
+        None => store.shutdown(),
+    }
+    println!("  shutdown: clean (next reopen takes the snapshot path)");
+    Ok(())
+}
+
+/// Record a run's output fingerprints, one `<f32-bits-hex>\t<path>`
+/// line each — exact bit round-trip, so a restarted process can verify
+/// recovered files byte-for-byte against what the dead one wrote.
+fn write_fingerprints(
+    path: &std::path::Path,
+    fps: &std::collections::BTreeMap<String, f32>,
+) -> Result<()> {
+    let mut out = String::new();
+    for (p, fp) in fps {
+        out.push_str(&format!("{:08x}\t{p}\n", fp.to_bits()));
+    }
+    std::fs::write(path, out).map_err(|e| anyhow!("write {}: {e}", path.display()))
+}
+
+/// Parse a fingerprint file written by `write_fingerprints`.
+fn read_fingerprints(
+    path: &std::path::Path,
+) -> Result<std::collections::BTreeMap<String, f32>> {
+    let raw = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+    let mut out = std::collections::BTreeMap::new();
+    for line in raw.lines() {
+        let (bits, p) = line
+            .split_once('\t')
+            .ok_or_else(|| anyhow!("malformed fingerprint line: {line}"))?;
+        let bits = u32::from_str_radix(bits, 16)
+            .map_err(|e| anyhow!("malformed fingerprint bits '{bits}': {e}"))?;
+        out.insert(p.to_string(), f32::from_bits(bits));
+    }
+    Ok(out)
 }

@@ -51,7 +51,7 @@ fn scratch_evicts_before_durable_under_pressure() {
     assert_eq!(before.evictions, 1, "/s1 made room for /s2");
     assert_eq!(
         store.get_xattr("/durable", "cache_state").unwrap(),
-        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=0"),
+        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=0;recovered=0"),
         "durable entry survived the pressure"
     );
 
@@ -85,7 +85,7 @@ fn pinned_broadcast_never_evicted_until_fanout_completes() {
     assert_eq!(store.get_xattr("/bcast", "consumers_left").unwrap(), "1");
     assert_eq!(
         store.get_xattr("/bcast", "cache_state").unwrap(),
-        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=1")
+        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=1;recovered=0")
     );
 
     // Heavy durable pressure through the same node's 2-chunk cache:
@@ -98,7 +98,7 @@ fn pinned_broadcast_never_evicted_until_fanout_completes() {
     }
     assert_eq!(
         store.get_xattr("/bcast", "cache_state").unwrap(),
-        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=1"),
+        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=1;recovered=0"),
         "pinned broadcast entry survived durable churn"
     );
 
@@ -110,7 +110,7 @@ fn pinned_broadcast_never_evicted_until_fanout_completes() {
     assert_eq!(store.get_xattr("/bcast", "consumers_left").unwrap(), "0");
     assert_eq!(
         store.get_xattr("/bcast", "cache_state").unwrap(),
-        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=0"),
+        format!("tier={tier};chunks=1;bytes={CHUNK};pinned=0;recovered=0"),
         "fan-out complete: unpinned, still resident"
     );
 
@@ -122,7 +122,7 @@ fn pinned_broadcast_never_evicted_until_fanout_completes() {
     }
     assert_eq!(
         store.get_xattr("/bcast", "cache_state").unwrap(),
-        format!("tier={tier};chunks=0;bytes=0;pinned=0"),
+        format!("tier={tier};chunks=0;bytes=0;pinned=0;recovered=0"),
         "unpinned entry ages out like any durable"
     );
     // The file itself is durable — still readable (remotely).

@@ -1,0 +1,380 @@
+//! Crash consistency & restart: a disk-backed store killed without a
+//! clean shutdown — dropped after `flush_replication()`, which is what
+//! a `kill -9` looks like to the file system — must reopen on the same
+//! `--data-dir` and serve every fully-replicated durable file
+//! byte-identical. Scratch files must never resurrect, a clean
+//! shutdown must restore the namespace *as it was* (post-create tags
+//! included), and the `recovered=` bottom-up field must tell the
+//! scheduler which files made it. These tests run under both
+//! `LIVE_BACKEND` matrix legs but exercise explicit disk tunings, so
+//! the guarantees hold regardless of the env default.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use woss::dispatch::Registry;
+use woss::hints::TagSet;
+use woss::live::{chunk_files_under, BackendKind, LiveStore, LiveTuning};
+use woss::storage::types::NodeId;
+
+/// A private temp dir per test, honoring `WOSS_DATA_DIR` so the CI
+/// stray-file audit covers whatever these tests leave behind.
+fn test_dir(tag: &str) -> PathBuf {
+    let base = std::env::var_os("WOSS_DATA_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(std::env::temp_dir);
+    let dir = base.join(format!("woss-recovery-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn disk_tuning(dir: &Path) -> LiveTuning {
+    LiveTuning {
+        backend: BackendKind::Disk,
+        data_dir: Some(dir.to_path_buf()),
+        ..LiveTuning::default()
+    }
+}
+
+fn woss_disk(dir: &Path, nodes: usize) -> LiveStore {
+    LiveStore::with_tuning(Registry::woss(), nodes, u64::MAX / 2, disk_tuning(dir))
+}
+
+/// Deterministic per-file payload.
+fn payload(seed: u64, len: usize) -> Vec<u8> {
+    let mult = seed.wrapping_mul(2).wrapping_add(31);
+    (0..len)
+        .map(|i| ((i as u64).wrapping_mul(mult).wrapping_add(seed)) as u8)
+        .collect()
+}
+
+#[test]
+fn crash_reopen_serves_durable_files_byte_identical() {
+    let dir = test_dir("crash");
+    let mut expected: Vec<(String, Vec<u8>)> = Vec::new();
+    {
+        let store = woss_disk(&dir, 4);
+        // A mix of shapes: replicated, single-copy local, multi-chunk,
+        // custom block size, empty.
+        let cases: [(&str, usize, TagSet); 5] = [
+            ("/db/replicated", 700_000, TagSet::from_pairs([("Replication", "3")])),
+            ("/w/local", 300_000, TagSet::from_pairs([("DP", "local")])),
+            ("/w/multichunk", 900_000, TagSet::new()),
+            (
+                "/w/smallblocks",
+                200_000,
+                TagSet::from_pairs([("BlockSize", "64K")]),
+            ),
+            ("/w/empty", 0, TagSet::new()),
+        ];
+        for (i, (path, len, tags)) in cases.into_iter().enumerate() {
+            let data = payload(i as u64 + 1, len);
+            store.write_file(NodeId(i % 4), path, &data, &tags).unwrap();
+            expected.push((path.to_string(), data));
+        }
+        store.flush_replication();
+        for (path, _) in &expected {
+            assert!(store.fully_replicated(path).unwrap());
+        }
+        // Killed: dropped with NO clean shutdown.
+    }
+
+    let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+    let recovery = store.recovery_report().expect("reopen reports").clone();
+    assert!(!recovery.clean, "no CLEAN marker: this is the crash path");
+    assert_eq!(recovery.files_recovered, expected.len());
+    assert_eq!(recovery.files_dropped, 0);
+    for (i, (path, data)) in expected.iter().enumerate() {
+        // Byte-identical from several vantage points (locality paths
+        // differ; content must not).
+        for reader in 0..4 {
+            assert_eq!(
+                &store.read_file(NodeId(reader), path).unwrap(),
+                data,
+                "{path} from n{reader}"
+            );
+        }
+        assert!(store.was_recovered(path), "{path} recovered");
+        let state = store.get_xattr(path, "cache_state").unwrap();
+        assert!(
+            state.ends_with(";recovered=1"),
+            "bottom-up recovered flag on {path}: {state}"
+        );
+        assert!(store.fully_replicated(path).unwrap(), "case {i} replicas back");
+    }
+    // The pool summary carries the store-wide count.
+    let status = store.get_xattr("/db/replicated", "system_status").unwrap();
+    assert!(
+        status.ends_with(&format!("recovered={}", expected.len())),
+        "system_status reports the recovered count: {status}"
+    );
+
+    // A file created *after* the reopen is not "recovered".
+    store
+        .write_file(NodeId(0), "/new", &payload(99, 10_000), &TagSet::new())
+        .unwrap();
+    assert!(!store.was_recovered("/new"));
+    assert!(store
+        .get_xattr("/new", "cache_state")
+        .unwrap()
+        .ends_with(";recovered=0"));
+
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn clean_shutdown_snapshot_restores_post_create_tags() {
+    let dir = test_dir("clean");
+    {
+        let store = woss_disk(&dir, 3);
+        let data = payload(7, 400_000);
+        store
+            .write_file(NodeId(1), "/f", &data, &TagSet::from_pairs([("DP", "local")]))
+            .unwrap();
+        // Mutate the namespace after the create: the journal only has
+        // the create-time record, so only the snapshot carries this.
+        store.set_xattr("/f", "stage", "calibrated");
+        store.shutdown();
+    }
+    let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+    let recovery = store.recovery_report().unwrap().clone();
+    assert!(recovery.clean, "CLEAN marker honored: snapshot path");
+    assert_eq!(recovery.files_recovered, 1);
+    assert_eq!(
+        store.get_xattr("/f", "stage").as_deref(),
+        Some("calibrated"),
+        "clean shutdown preserves post-create tag mutations"
+    );
+    assert_eq!(store.read_file(NodeId(0), "/f").unwrap(), payload(7, 400_000));
+    // Writing anything invalidates the marker: the *next* restart
+    // without a shutdown must fall back to journal salvage, not trust
+    // a stale snapshot.
+    store
+        .write_file(NodeId(0), "/g", &payload(8, 100_000), &TagSet::new())
+        .unwrap();
+    drop(store); // crash
+    let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+    assert!(
+        !store.recovery_report().unwrap().clean,
+        "post-shutdown writes invalidated the snapshot"
+    );
+    assert_eq!(store.read_file(NodeId(0), "/g").unwrap(), payload(8, 100_000));
+    assert_eq!(store.read_file(NodeId(0), "/f").unwrap(), payload(7, 400_000));
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn scratch_and_deleted_files_never_resurrect() {
+    let dir = test_dir("scratch");
+    {
+        let store = LiveStore::with_tuning(
+            Registry::woss(),
+            3,
+            u64::MAX / 2,
+            LiveTuning {
+                cache_bytes: Some(64 << 20),
+                lifetime: true,
+                ..disk_tuning(&dir)
+            },
+        );
+        store
+            .write_file(
+                NodeId(0),
+                "/durable",
+                &payload(1, 500_000),
+                &TagSet::new(),
+            )
+            .unwrap();
+        // Scratch both ways: spill-skipped (dirty cache-only) and
+        // plainly tagged without a consumer count.
+        store
+            .write_file(
+                NodeId(0),
+                "/scratch/skip",
+                &payload(2, 300_000),
+                &TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch"), ("Consumers", "2")]),
+            )
+            .unwrap();
+        store
+            .write_file(
+                NodeId(1),
+                "/scratch/plain",
+                &payload(3, 300_000),
+                &TagSet::from_pairs([("Lifetime", "scratch")]),
+            )
+            .unwrap();
+        store
+            .write_file(NodeId(2), "/deleted", &payload(4, 200_000), &TagSet::new())
+            .unwrap();
+        store.delete("/deleted").unwrap();
+        store.flush_replication();
+    } // crash
+
+    let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+    let recovery = store.recovery_report().unwrap().clone();
+    assert_eq!(recovery.files_recovered, 1, "only /durable survives");
+    assert!(recovery.scratch_discarded >= 1, "scratch dropped on principle");
+    assert_eq!(store.file_size("/scratch/skip"), None);
+    assert_eq!(store.file_size("/scratch/plain"), None);
+    assert_eq!(store.file_size("/deleted"), None);
+    assert_eq!(store.read_file(NodeId(0), "/durable").unwrap(), payload(1, 500_000));
+    // No dead file's chunk survives on disk: everything in the data
+    // dir is accounted to the one recovered file.
+    let indexed: usize = store.backend_chunk_counts().iter().sum();
+    assert_eq!(chunk_files_under(&dir), indexed, "no unclaimed chunk files");
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Kill-and-reopen property sweep: seeded rounds of mixed
+/// durable/scratch/deleted traffic, killed mid-lifecycle (after the
+/// replication barrier), reopened, and checked invariant by invariant:
+/// every surviving durable file byte-identical, every dead path absent,
+/// the on-disk chunk population exactly the recovered index.
+#[test]
+fn prop_kill_and_reopen_roundtrips() {
+    for seed in 0..5u64 {
+        let dir = test_dir(&format!("prop{seed}"));
+        let mut live: Vec<(String, Vec<u8>)> = Vec::new();
+        let mut dead: Vec<String> = Vec::new();
+        {
+            let store = woss_disk(&dir, 4);
+            let mut rng = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+            let mut next = || {
+                rng ^= rng << 13;
+                rng ^= rng >> 7;
+                rng ^= rng << 17;
+                rng
+            };
+            for f in 0..12u64 {
+                let path = format!("/p{f}");
+                let len = 50_000 + (next() % 500_000) as usize;
+                let data = payload(next(), len);
+                let tags = match next() % 4 {
+                    0 => TagSet::from_pairs([("Replication", "2")]),
+                    1 => TagSet::from_pairs([("DP", "local")]),
+                    2 => TagSet::from_pairs([("Lifetime", "scratch")]),
+                    _ => TagSet::new(),
+                };
+                let scratch = tags.get("Lifetime").is_some();
+                store
+                    .write_file(NodeId((next() % 4) as usize), &path, &data, &tags)
+                    .unwrap();
+                if next() % 5 == 0 {
+                    store.delete(&path).unwrap();
+                    dead.push(path);
+                } else if scratch {
+                    dead.push(path);
+                } else {
+                    live.push((path, data));
+                }
+            }
+            store.flush_replication();
+            for (path, _) in &live {
+                assert!(store.fully_replicated(path).unwrap());
+            }
+        } // killed
+
+        let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+        let recovery = store.recovery_report().unwrap().clone();
+        assert_eq!(recovery.files_recovered, live.len(), "seed {seed}");
+        for (path, data) in &live {
+            assert_eq!(&store.read_file(NodeId(0), path).unwrap(), data, "seed {seed} {path}");
+        }
+        for path in &dead {
+            assert!(
+                store.read_file(NodeId(0), path).is_err(),
+                "seed {seed}: {path} must stay dead"
+            );
+        }
+        let indexed: usize = store.backend_chunk_counts().iter().sum();
+        assert_eq!(chunk_files_under(&dir), indexed, "seed {seed}: orphans swept");
+        // The reopened store is a working store: fresh writes and reads
+        // proceed, ids never collide with recovered files.
+        store
+            .write_file(NodeId(0), "/fresh", &payload(1234, 300_000), &TagSet::new())
+            .unwrap();
+        assert_eq!(store.read_file(NodeId(1), "/fresh").unwrap(), payload(1234, 300_000));
+        for (path, data) in &live {
+            assert_eq!(&store.read_file(NodeId(2), path).unwrap(), data);
+        }
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn fresh_store_refuses_populated_data_dir() {
+    let dir = test_dir("refuse");
+    {
+        let store = woss_disk(&dir, 2);
+        store
+            .write_file(NodeId(0), "/f", &payload(1, 100_000), &TagSet::new())
+            .unwrap();
+        store.flush_replication();
+    }
+    // The old bug: a fresh store over the same dir silently orphaned
+    // every durable file. Now it refuses and names the fix.
+    let err = LiveStore::try_with_tuning(Registry::woss(), 2, u64::MAX / 2, disk_tuning(&dir))
+        .err()
+        .expect("fresh open over a previous store must fail");
+    assert!(
+        err.to_string().contains("reopen"),
+        "error points at recovery: {err}"
+    );
+    // And the recovery path it names works.
+    let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+    assert_eq!(store.read_file(NodeId(1), "/f").unwrap(), payload(1, 100_000));
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_primary_fails_over_and_counts_read_errors() {
+    let dir = test_dir("corrupt");
+    let store = woss_disk(&dir, 3);
+    let data = payload(5, 400_000);
+    store
+        .write_file(
+            NodeId(0),
+            "/db",
+            &data,
+            // DP=local pins every primary to node0, so the damage below
+            // covers every chunk and each read must fail over.
+            &TagSet::from_pairs([("DP", "local"), ("Replication", "2")]),
+        )
+        .unwrap();
+    store.flush_replication();
+    // Flip bytes in every chunk file under node0 (same length, so only
+    // the checksum can notice). read_file must fail over to a replica
+    // and the faults must be counted, not dissolved into remote noise.
+    let node0 = dir.join("node0");
+    let mut damaged = 0;
+    for entry in std::fs::read_dir(&node0).unwrap().flatten() {
+        let p = entry.path();
+        if p.extension().is_some_and(|e| e == "chunk") {
+            let len = std::fs::metadata(&p).unwrap().len() as usize;
+            std::fs::write(&p, vec![0xAAu8; len]).unwrap();
+            damaged += 1;
+        }
+    }
+    assert!(damaged > 0, "node0 held chunks to damage");
+    assert_eq!(
+        store.read_file(NodeId(0), "/db").unwrap(),
+        data,
+        "reads fail over to intact replicas"
+    );
+    let stats = store.cache_stats();
+    assert!(
+        stats.read_errors >= damaged as u64,
+        "disk faults surfaced as read_errors: {} < {damaged}",
+        stats.read_errors
+    );
+    assert_eq!(
+        store.remote_reads.load(Ordering::Relaxed) as usize, damaged,
+        "each damaged chunk was served remotely"
+    );
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

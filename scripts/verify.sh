@@ -44,7 +44,7 @@ for backend in mem disk; do
     LIVE_BACKEND="$backend" WOSS_DATA_DIR="$tmpdir" cargo test -q --lib live::
     LIVE_BACKEND="$backend" WOSS_DATA_DIR="$tmpdir" cargo test -q \
         --test live_cache --test live_concurrency --test live_stack \
-        --test backend_equivalence
+        --test backend_equivalence --test live_recovery
     stray="$(find "$tmpdir" -type f | head -20)"
     if [ -n "$stray" ]; then
         echo "FAIL: the $backend run left stray files under $tmpdir:"
@@ -53,6 +53,31 @@ for backend in mem disk; do
     fi
     rm -rf "$tmpdir"
 done
+
+# Restart leg: the disk tier must survive process death. Run a live
+# workload crash-style (no clean shutdown — the process just exits),
+# reopen the same data dir in a fresh process and verify every recorded
+# fingerprint reads back identical (journal-salvage path); the reopen
+# shuts down clean, so a second reopen exercises the snapshot path and
+# must verify the same fingerprints again. The stray-file gate above
+# stays in force: this leg uses its own directory and removes it.
+echo "== disk restart leg (crash salvage + snapshot reopen) =="
+restart_dir="$(mktemp -d)"
+woss="./target/release/woss"
+"$woss" live --workload pipeline --nodes 4 --workers 4 \
+    --backend disk --data-dir "$restart_dir/store" \
+    --fingerprint-file "$restart_dir/fingerprints.txt"
+"$woss" live --reopen --data-dir "$restart_dir/store" \
+    --fingerprint-file "$restart_dir/fingerprints.txt" \
+    | tee "$restart_dir/reopen1.out"
+grep -q "crash (journal salvage)" "$restart_dir/reopen1.out" \
+    || { echo "FAIL: first reopen should take the crash-salvage path"; exit 1; }
+"$woss" live --reopen --data-dir "$restart_dir/store" \
+    --fingerprint-file "$restart_dir/fingerprints.txt" \
+    | tee "$restart_dir/reopen2.out"
+grep -q "after a clean shutdown" "$restart_dir/reopen2.out" \
+    || { echo "FAIL: second reopen should take the snapshot path"; exit 1; }
+rm -rf "$restart_dir"
 
 echo "== cargo test --doc (HINTS.md's mirrored doctests) =="
 # The doc examples in docs/HINTS.md are mirrored as rustdoc doctests
