@@ -34,6 +34,12 @@ pub fn ids() -> Vec<&'static str> {
     ]
 }
 
+/// The live-engine experiment ids — the `woss experiment live` group
+/// whose JSON output becomes the tracked `BENCH_live.json`.
+pub fn live_ids() -> Vec<&'static str> {
+    vec!["live_throughput", "live_cache", "live_recovery"]
+}
+
 /// Run one experiment by id.
 pub fn run(id: &str, runs: usize, seed: u64) -> Option<Report> {
     match id {

@@ -45,6 +45,7 @@ pub mod hints;
 pub mod live;
 pub mod nfs;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod storage;
 pub mod util;

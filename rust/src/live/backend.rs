@@ -144,6 +144,12 @@ pub trait ChunkBackend: Send + Sync {
     fn read_errors(&self) -> u64 {
         0
     }
+
+    /// Every chunk key currently stored, in no particular order. The
+    /// churn and audit machinery cross-references these against the
+    /// namespace to find stale copies (a rejoining node's leftovers)
+    /// and stray chunks no surviving file claims.
+    fn chunk_keys(&self) -> Vec<ChunkKey>;
 }
 
 /// The PR 3 in-memory chunk store: a `RwLock<HashMap>` per node.
@@ -185,6 +191,10 @@ impl ChunkBackend for MemoryBackend {
 
     fn chunk_count(&self) -> usize {
         self.chunks.read().unwrap().len()
+    }
+
+    fn chunk_keys(&self) -> Vec<ChunkKey> {
+        self.chunks.read().unwrap().keys().copied().collect()
     }
 }
 
@@ -713,6 +723,10 @@ impl ChunkBackend for FileBackend {
 
     fn read_errors(&self) -> u64 {
         self.read_failures.load(Ordering::Relaxed)
+    }
+
+    fn chunk_keys(&self) -> Vec<ChunkKey> {
+        FileBackend::chunk_keys(self)
     }
 }
 

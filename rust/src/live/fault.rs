@@ -1,0 +1,426 @@
+//! Deterministic fault injection for the live store's chunk backends.
+//!
+//! The crash-consistency and failover machinery built in PRs 2–5 was
+//! exercised only by cooperative tests: a corrupt file written by hand,
+//! a node killed at a line the test author chose. This module turns
+//! hostility into a *reusable decorator*: [`FaultBackend`] wraps any
+//! [`ChunkBackend`] and injects failures drawn from a seed-driven
+//! schedule —
+//!
+//! * **put errors** — the `put` fails cleanly and stores nothing, the
+//!   way a full or failing disk surfaces mid-write;
+//! * **torn puts** — the `put` *reports success* but the stored copy is
+//!   marked corrupt, the way a torn rename surfaces later through the
+//!   manifest CRC: every read of that copy fails (and counts in
+//!   [`ChunkBackend::read_errors`]) until the copy is overwritten,
+//!   deleted, or injection is disabled;
+//! * **read corruption** — a present, intact chunk fails one read
+//!   (transient I/O fault), exercising the failover path that
+//!   distinguishes a lost copy from an absent one;
+//! * **latency spikes** — a short real sleep on selected operations,
+//!   shaking out timing assumptions in concurrent tests.
+//!
+//! # Determinism
+//!
+//! Every fault decision is a **pure hash** of `(seed, operation, chunk
+//! key, per-key attempt number)` — no shared RNG stream — so the
+//! schedule is a function of *what* is asked, not of how threads
+//! interleave. Two runs with the same seed and the same logical
+//! workload inject the same faults even when the OS schedules their
+//! threads differently; printing the seed is a complete repro recipe.
+//! This is what lets the scenario harness ([`crate::scenario`]) and the
+//! property tests promise "same seed → same schedule".
+//!
+//! A shared [`FaultControl`] (one per store, handed to every node's
+//! decorator) counts each injected fault and carries the master enable
+//! switch: scenarios run their workload with faults live, then call
+//! [`FaultControl::set_enabled`]`(false)` and audit a quiet store.
+//! Disabling injection also "repairs" torn copies — the decorator never
+//! altered the underlying bytes, only refused to return them — so a
+//! final fingerprint audit can prove the payloads underneath survived
+//! the entire schedule intact.
+
+use super::backend::{ChunkBackend, ChunkKey};
+use crate::storage::types::StorageError;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Per-mille fault rates plus the seed that fixes the schedule.
+///
+/// All rates default to zero: a default spec injects nothing and a
+/// store built with it behaves exactly like the undecorated backend.
+/// Rates are independent per operation; `1000` means "every time".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultSpec {
+    /// Seed fixing the entire fault schedule. Same seed + same logical
+    /// operation sequence → same injected faults, regardless of thread
+    /// interleaving.
+    pub seed: u64,
+    /// Per-mille chance a `put` fails cleanly (nothing stored).
+    pub put_error_permille: u16,
+    /// Per-mille chance a `put` succeeds but the stored copy is marked
+    /// corrupt (torn rename detected at read time).
+    pub torn_put_permille: u16,
+    /// Per-mille chance a read of a present chunk fails once
+    /// (transient corruption / I/O error).
+    pub read_error_permille: u16,
+    /// Per-mille chance an operation sleeps for
+    /// [`FaultSpec::delay_us`] (latency spike).
+    pub delay_permille: u16,
+    /// Duration of an injected latency spike, in microseconds.
+    pub delay_us: u64,
+}
+
+impl FaultSpec {
+    /// Derive the node-local spec: same rates, seed mixed with the
+    /// node index so two nodes never share a schedule.
+    pub fn for_node(mut self, node: usize) -> FaultSpec {
+        self.seed = splitmix64(self.seed ^ (node as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        self
+    }
+}
+
+/// Shared control block for one store's fault decorators: the master
+/// enable switch plus counters of every injected fault. The store
+/// holds one `Arc<FaultControl>` and hands a clone to each node's
+/// [`FaultBackend`], so a scenario can flip injection off (for the
+/// final audit) and read totals without downcasting backends.
+#[derive(Debug, Default)]
+pub struct FaultControl {
+    enabled: AtomicBool,
+    put_errors: AtomicU64,
+    torn_puts: AtomicU64,
+    read_errors: AtomicU64,
+    delays: AtomicU64,
+}
+
+impl FaultControl {
+    /// A control block with injection already enabled.
+    pub fn armed() -> Arc<FaultControl> {
+        let ctl = FaultControl::default();
+        ctl.enabled.store(true, Ordering::SeqCst);
+        Arc::new(ctl)
+    }
+
+    /// Turn injection on or off. Off means every decorator passes
+    /// operations straight through (torn copies read fine again — the
+    /// underlying bytes were never altered).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::SeqCst);
+    }
+
+    /// Is injection currently live?
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::SeqCst)
+    }
+
+    /// Injected clean `put` failures so far.
+    pub fn put_errors(&self) -> u64 {
+        self.put_errors.load(Ordering::Relaxed)
+    }
+
+    /// Injected torn puts so far.
+    pub fn torn_puts(&self) -> u64 {
+        self.torn_puts.load(Ordering::Relaxed)
+    }
+
+    /// Injected read failures so far (transient and torn-copy reads).
+    pub fn read_errors(&self) -> u64 {
+        self.read_errors.load(Ordering::Relaxed)
+    }
+
+    /// Injected latency spikes so far.
+    pub fn delays(&self) -> u64 {
+        self.delays.load(Ordering::Relaxed)
+    }
+
+    /// Total faults injected across all classes.
+    pub fn total(&self) -> u64 {
+        self.put_errors() + self.torn_puts() + self.read_errors() + self.delays()
+    }
+}
+
+const OP_PUT: u8 = 1;
+const OP_GET: u8 = 2;
+
+/// SplitMix64 — the mixing function behind the schedule hash. Small,
+/// statistically solid, and dependency-free.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Seed-driven fault-injecting decorator over any [`ChunkBackend`].
+///
+/// Thread-safe like the backends it wraps; see the module docs for the
+/// fault classes and the determinism argument.
+pub struct FaultBackend {
+    inner: Box<dyn ChunkBackend>,
+    spec: FaultSpec,
+    control: Arc<FaultControl>,
+    /// Keys whose stored copy a torn put marked corrupt.
+    torn: Mutex<HashSet<ChunkKey>>,
+    /// Per-(op, key) attempt counters: the third input to the schedule
+    /// hash, so the Nth read of a key draws the same verdict in every
+    /// run no matter which thread issues it.
+    attempts: Mutex<HashMap<(u8, ChunkKey), u64>>,
+    /// Faults injected by *this* node's decorator that surface as read
+    /// errors — added to the inner backend's count so per-node
+    /// `read_errors` totals stay exact.
+    local_read_errors: AtomicU64,
+}
+
+impl FaultBackend {
+    /// Wrap `inner`, drawing the schedule from `spec` and reporting
+    /// into (and obeying the enable switch of) `control`.
+    pub fn new(inner: Box<dyn ChunkBackend>, spec: FaultSpec, control: Arc<FaultControl>) -> Self {
+        FaultBackend {
+            inner,
+            spec,
+            control,
+            torn: Mutex::new(HashSet::new()),
+            attempts: Mutex::new(HashMap::new()),
+            local_read_errors: AtomicU64::new(0),
+        }
+    }
+
+    /// Advance the (op, key) attempt counter and return the schedule
+    /// hash for this attempt. Always advances — even while injection
+    /// is disabled — so toggling the switch never shifts later draws.
+    fn draw(&self, op: u8, key: ChunkKey) -> u64 {
+        let nth = {
+            let mut attempts = self.attempts.lock().unwrap();
+            let slot = attempts.entry((op, key)).or_insert(0);
+            *slot += 1;
+            *slot
+        };
+        let mixed = self
+            .spec
+            .seed
+            .wrapping_add(splitmix64(((op as u64) << 56) | key.1))
+            .wrapping_add(splitmix64(key.0 .0))
+            .wrapping_add(splitmix64(nth));
+        splitmix64(mixed)
+    }
+
+    /// Does `hash` (one schedule draw) select a fault at `permille`?
+    /// Independent sub-draws come from different byte lanes of the
+    /// hash so one draw can answer for several fault classes.
+    fn selected(hash: u64, lane: u32, permille: u16) -> bool {
+        permille > 0 && (hash.rotate_right(lane * 13) % 1000) < permille as u64
+    }
+
+    fn maybe_delay(&self, hash: u64) {
+        if Self::selected(hash, 3, self.spec.delay_permille) {
+            self.control.delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(std::time::Duration::from_micros(self.spec.delay_us.max(1)));
+        }
+    }
+}
+
+impl ChunkBackend for FaultBackend {
+    fn put(&self, key: ChunkKey, bytes: &[u8]) -> Result<(), StorageError> {
+        let hash = self.draw(OP_PUT, key);
+        if !self.control.enabled() {
+            return self.inner.put(key, bytes);
+        }
+        self.maybe_delay(hash);
+        if Self::selected(hash, 0, self.spec.put_error_permille) {
+            self.control.put_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(StorageError::Invalid(format!(
+                "injected put failure for chunk {}/{}",
+                key.0 .0, key.1
+            )));
+        }
+        self.inner.put(key, bytes)?;
+        let mut torn = self.torn.lock().unwrap();
+        if Self::selected(hash, 1, self.spec.torn_put_permille) {
+            self.control.torn_puts.fetch_add(1, Ordering::Relaxed);
+            torn.insert(key);
+        } else {
+            // A clean overwrite repairs an earlier torn copy.
+            torn.remove(&key);
+        }
+        Ok(())
+    }
+
+    fn get(&self, key: ChunkKey) -> Result<Option<Vec<u8>>, StorageError> {
+        let hash = self.draw(OP_GET, key);
+        if !self.control.enabled() {
+            return self.inner.get(key);
+        }
+        self.maybe_delay(hash);
+        if self.torn.lock().unwrap().contains(&key) {
+            self.control.read_errors.fetch_add(1, Ordering::Relaxed);
+            self.local_read_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(StorageError::Invalid(format!(
+                "injected torn-rename corruption for chunk {}/{}",
+                key.0 .0, key.1
+            )));
+        }
+        match self.inner.get(key)? {
+            Some(bytes) => {
+                if Self::selected(hash, 2, self.spec.read_error_permille) {
+                    self.control.read_errors.fetch_add(1, Ordering::Relaxed);
+                    self.local_read_errors.fetch_add(1, Ordering::Relaxed);
+                    return Err(StorageError::Invalid(format!(
+                        "injected transient read corruption for chunk {}/{}",
+                        key.0 .0, key.1
+                    )));
+                }
+                Ok(Some(bytes))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn delete(&self, key: ChunkKey) {
+        self.torn.lock().unwrap().remove(&key);
+        self.inner.delete(key);
+    }
+
+    fn contains(&self, key: ChunkKey) -> bool {
+        // A torn copy is present-but-unreadable, exactly like a chunk
+        // file that fails its manifest CRC: `contains` says yes, `get`
+        // fails. The distinction is what the failover path tests.
+        self.inner.contains(key)
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.inner.used_bytes()
+    }
+
+    fn chunk_count(&self) -> usize {
+        self.inner.chunk_count()
+    }
+
+    fn read_errors(&self) -> u64 {
+        self.inner.read_errors() + self.local_read_errors.load(Ordering::Relaxed)
+    }
+
+    fn chunk_keys(&self) -> Vec<ChunkKey> {
+        self.inner.chunk_keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::live::MemoryBackend;
+    use crate::storage::types::FileId;
+
+    fn key(f: u64, c: u64) -> ChunkKey {
+        (FileId(f), c)
+    }
+
+    fn backend(spec: FaultSpec) -> (FaultBackend, Arc<FaultControl>) {
+        let ctl = FaultControl::armed();
+        (
+            FaultBackend::new(Box::<MemoryBackend>::default(), spec, Arc::clone(&ctl)),
+            ctl,
+        )
+    }
+
+    /// Same seed → identical injected-fault schedule, independent of
+    /// how calls interleave with other keys.
+    #[test]
+    fn schedule_is_a_pure_function_of_seed_and_attempt() {
+        let spec = FaultSpec {
+            seed: 42,
+            put_error_permille: 300,
+            read_error_permille: 300,
+            ..FaultSpec::default()
+        };
+        let trace = |interleave: bool| {
+            let (fb, _ctl) = backend(spec);
+            let mut out = Vec::new();
+            for n in 0..50u64 {
+                if interleave {
+                    // Touch unrelated keys between draws; must not
+                    // perturb key(1, 0)'s schedule.
+                    let _ = fb.put(key(99, n), b"noise");
+                }
+                out.push(fb.put(key(1, 0), b"x").is_err());
+                out.push(fb.get(key(1, 0)).is_err());
+            }
+            out
+        };
+        assert_eq!(trace(false), trace(true));
+    }
+
+    #[test]
+    fn put_error_stores_nothing() {
+        let spec = FaultSpec {
+            seed: 7,
+            put_error_permille: 1000,
+            ..FaultSpec::default()
+        };
+        let (fb, ctl) = backend(spec);
+        assert!(fb.put(key(1, 0), b"payload").is_err());
+        assert!(!fb.contains(key(1, 0)));
+        assert_eq!(fb.used_bytes(), 0);
+        assert_eq!(ctl.put_errors(), 1);
+    }
+
+    #[test]
+    fn torn_put_reports_success_but_reads_fail_until_disabled() {
+        let spec = FaultSpec {
+            seed: 7,
+            torn_put_permille: 1000,
+            ..FaultSpec::default()
+        };
+        let (fb, ctl) = backend(spec);
+        fb.put(key(1, 0), b"payload").expect("torn put reports ok");
+        assert!(fb.contains(key(1, 0)), "torn copy is present-but-bad");
+        assert!(fb.get(key(1, 0)).is_err());
+        assert!(fb.get(key(1, 0)).is_err(), "torn corruption persists");
+        assert_eq!(ctl.torn_puts(), 1);
+        assert_eq!(ctl.read_errors(), 2);
+        assert_eq!(fb.read_errors(), 2);
+        // Disabling injection repairs the copy: bytes were intact all
+        // along.
+        ctl.set_enabled(false);
+        assert_eq!(fb.get(key(1, 0)).unwrap().as_deref(), Some(&b"payload"[..]));
+    }
+
+    #[test]
+    fn transient_read_error_fires_once_per_selected_attempt() {
+        let spec = FaultSpec {
+            seed: 3,
+            read_error_permille: 500,
+            ..FaultSpec::default()
+        };
+        let (fb, ctl) = backend(spec);
+        fb.put(key(2, 1), b"abc").unwrap();
+        let mut errs = 0u64;
+        for _ in 0..40 {
+            match fb.get(key(2, 1)) {
+                Ok(Some(b)) => assert_eq!(b, b"abc"),
+                Ok(None) => panic!("chunk vanished"),
+                Err(_) => errs += 1,
+            }
+        }
+        assert!(errs > 0, "a 50% rate over 40 reads must fire");
+        assert!(errs < 40, "and must not fire every time");
+        assert_eq!(ctl.read_errors(), errs);
+    }
+
+    #[test]
+    fn disabled_control_passes_everything_through() {
+        let spec = FaultSpec {
+            seed: 9,
+            put_error_permille: 1000,
+            torn_put_permille: 1000,
+            read_error_permille: 1000,
+            ..FaultSpec::default()
+        };
+        let (fb, ctl) = backend(spec);
+        ctl.set_enabled(false);
+        fb.put(key(4, 0), b"quiet").unwrap();
+        assert_eq!(fb.get(key(4, 0)).unwrap().as_deref(), Some(&b"quiet"[..]));
+        assert_eq!(ctl.total(), 0);
+    }
+}

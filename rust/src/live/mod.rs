@@ -49,9 +49,23 @@
 //! ([`store::RecoveryReport`], the reserved `recovered=` field on
 //! `cache_state`/`system_status`, and the `live_recovery`
 //! experiment).
+//!
+//! Hostility is injectable on demand: [`fault::FaultBackend`] wraps any
+//! chunk backend with a deterministic, seed-driven fault schedule (put
+//! errors, torn renames, read corruption, latency spikes —
+//! [`store::LiveTuning::fault`]), and the store survives **live node
+//! churn**: [`store::LiveStore::fail_node`] re-replicates every chunk
+//! the lost node held through the background worker pool (no reopen
+//! needed), [`store::LiveStore::join_node`] sweeps the returning
+//! node's stale copies before it serves again, and
+//! [`store::LiveStore::audit`] proves bottom-up that namespace, usage
+//! accounting, and backend contents agree. The scenario harness
+//! (`crate::scenario`) drives all of it through named hostile
+//! workloads.
 
 pub mod backend;
 pub mod engine;
+pub mod fault;
 pub mod store;
 
 pub use backend::{
@@ -59,4 +73,5 @@ pub use backend::{
     NodeRecovery,
 };
 pub use engine::{EngineOptions, LiveEngine, LiveReport};
-pub use store::{CachePolicy, CacheStats, LiveStore, LiveTuning, RecoveryReport};
+pub use fault::{FaultBackend, FaultControl, FaultSpec};
+pub use store::{CachePolicy, CacheStats, LiveStore, LiveTuning, RecoveryReport, StoreAudit};

@@ -107,9 +107,10 @@
 //! scheduler can see which files outlived the crash.
 
 use super::backend::{
-    auto_data_dir, AppendLog, BackendKind, ChunkBackend, DirGuard, FileBackend, MemoryBackend,
-    NodeRecovery,
+    auto_data_dir, AppendLog, BackendKind, ChunkBackend, ChunkKey, DirGuard, FileBackend,
+    MemoryBackend, NodeRecovery,
 };
+use super::fault::{FaultBackend, FaultControl, FaultSpec};
 use crate::dispatch::{shard_for_path, PlacementCtx, Registry, ShardedPlacementState};
 use crate::hints::{AccessPattern, Lifetime, TagSet};
 use crate::storage::types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};
@@ -348,6 +349,12 @@ pub struct LiveTuning {
     /// system temp dir); a user-supplied directory is never deleted.
     /// Ignored by the memory backend.
     pub data_dir: Option<PathBuf>,
+    /// Deterministic fault injection: when set, every node's chunk
+    /// backend is wrapped in a [`FaultBackend`] drawing its schedule
+    /// from this spec (seed mixed per node). `None` — the default —
+    /// adds no decorator at all. The store's [`LiveStore::fault_control`]
+    /// exposes the shared switch/counters.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for LiveTuning {
@@ -360,6 +367,7 @@ impl Default for LiveTuning {
             lifetime: false,
             backend: BackendKind::from_env(),
             data_dir: None,
+            fault: None,
         }
     }
 }
@@ -733,6 +741,14 @@ enum ReplWork {
         target: NodeId,
         class: CacheClass,
     },
+    /// Re-replicate a chunk lost with a failed node: fetch the bytes
+    /// from any surviving holder and land them on `target`'s backend
+    /// (the [`LiveStore::fail_node`] churn path). Like `Promote`, no
+    /// payload is queued — bytes are fetched at execution time.
+    Restore {
+        sources: Vec<NodeId>,
+        target: NodeId,
+    },
 }
 
 /// One background job: a chunk plus the work to do with it.
@@ -771,6 +787,14 @@ struct ReplShared {
     cache: Option<Arc<CacheTier>>,
     /// Replica chunk copies completed in the background.
     copied: AtomicU64,
+    /// Restore jobs queued or in flight — the store-wide
+    /// `under_replicated` gauge: chunks whose replica count is below
+    /// target while churn recovery drains.
+    restore_pending: AtomicU64,
+    /// Chunks re-replicated onto a replacement holder after node churn.
+    restored_chunks: AtomicU64,
+    /// Bytes re-replicated onto replacement holders after node churn.
+    restored_bytes: AtomicU64,
 }
 
 /// The background replication worker pool.
@@ -798,6 +822,9 @@ impl ReplPool {
             stores,
             cache,
             copied: AtomicU64::new(0),
+            restore_pending: AtomicU64::new(0),
+            restored_chunks: AtomicU64::new(0),
+            restored_bytes: AtomicU64::new(0),
         });
         let n_workers = workers.max(1);
         let workers = (0..n_workers)
@@ -840,7 +867,17 @@ impl ReplPool {
     /// so a subsequent chunk sweep cannot be resurrected by a straggler.
     fn cancel_file(&self, file: FileId) {
         let mut q = self.shared.queue.lock().unwrap();
-        q.jobs.retain(|j| j.file != file);
+        q.jobs.retain(|j| {
+            if j.file != file {
+                return true;
+            }
+            // A dropped restore job must release its slice of the
+            // `under_replicated` gauge, or it would read high forever.
+            if matches!(j.work, ReplWork::Restore { .. }) {
+                self.shared.restore_pending.fetch_sub(1, Ordering::Relaxed);
+            }
+            false
+        });
         while q.in_flight.contains_key(&file) {
             q = self.shared.drained.wait(q).unwrap();
         }
@@ -853,8 +890,10 @@ impl ReplPool {
     /// or nothing would ever unpin it.
     fn cancel_promotes(&self, file: FileId) {
         let mut q = self.shared.queue.lock().unwrap();
-        q.jobs
-            .retain(|j| j.file != file || matches!(j.work, ReplWork::Copy { .. }));
+        q.jobs.retain(|j| {
+            j.file != file
+                || matches!(j.work, ReplWork::Copy { .. } | ReplWork::Restore { .. })
+        });
         while q.in_flight.contains_key(&file) {
             q = self.shared.drained.wait(q).unwrap();
         }
@@ -948,6 +987,36 @@ fn worker_loop(shared: &ReplShared) {
                     }
                 }
             }
+            ReplWork::Restore { sources, target } => {
+                // Skip if a racing job (or the node itself) already
+                // materialized the chunk; otherwise fetch from the
+                // first surviving holder with readable bytes — cache
+                // first for the same race-free probe order Promote
+                // uses — and land them on the replacement holder. A
+                // source whose read fails is treated as having no copy
+                // (its backend counts the fault) and the next source
+                // is tried; when no source or the put fails, the chunk
+                // simply stays under-replicated on that holder and
+                // reads keep failing over.
+                if !shared.stores[target.0].contains(key) {
+                    let bytes = sources.iter().find_map(|s| {
+                        shared
+                            .cache
+                            .as_ref()
+                            .and_then(|c| c.peek(*s, key))
+                            .or_else(|| shared.stores[s.0].get(key).ok().flatten())
+                    });
+                    if let Some(bytes) = bytes {
+                        if shared.stores[target.0].put(key, &bytes).is_ok() {
+                            shared.restored_chunks.fetch_add(1, Ordering::Relaxed);
+                            shared
+                                .restored_bytes
+                                .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                        }
+                    }
+                }
+                shared.restore_pending.fetch_sub(1, Ordering::Relaxed);
+            }
         }
         let mut q = shared.queue.lock().unwrap();
         if let Some(n) = q.in_flight.get_mut(&job.file) {
@@ -959,6 +1028,61 @@ fn worker_loop(shared: &ReplShared) {
         drop(q);
         shared.drained.notify_all();
     }
+}
+
+/// The result of a bottom-up [`LiveStore::audit`]: does the namespace
+/// (what files claim), the placement core (what accounting believes),
+/// and the chunk backends (what is physically stored) all agree? The
+/// scenario harness ends every hostile workload with one of these;
+/// `clean()` is the pass/fail verdict.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreAudit {
+    /// Files in the namespace.
+    pub files: usize,
+    /// Chunk replicas the namespace claims (one per chunk per holder).
+    pub replicas_claimed: usize,
+    /// Logical bytes the namespace claims on each node.
+    pub claimed_bytes: Vec<u64>,
+    /// Bytes the placement core's usage accounting carries per node.
+    pub accounted_bytes: Vec<u64>,
+    /// Bytes each node's chunk backend physically holds.
+    pub backend_bytes: Vec<u64>,
+    /// Backend chunks no surviving file claims from that node (leaks:
+    /// a failed node's unswept copies count here until
+    /// [`LiveStore::join_node`] sweeps them).
+    pub stray_chunks: usize,
+    /// Claimed replicas whose bytes exist neither in the holder's
+    /// backend nor as a dirty cache entry (lost data).
+    pub missing_chunks: usize,
+}
+
+impl StoreAudit {
+    /// Namespace claims and placement accounting agree byte-for-byte.
+    pub fn usage_exact(&self) -> bool {
+        self.claimed_bytes == self.accounted_bytes
+    }
+
+    /// No drift anywhere: usage exact, zero strays, zero missing.
+    pub fn clean(&self) -> bool {
+        self.usage_exact() && self.stray_chunks == 0 && self.missing_chunks == 0
+    }
+}
+
+/// Wrap every node backend in a [`FaultBackend`] sharing `control`,
+/// each drawing its schedule from `spec` mixed with the node index.
+fn wrap_with_faults(
+    backends: Vec<Box<dyn ChunkBackend>>,
+    spec: FaultSpec,
+    control: &Arc<FaultControl>,
+) -> Vec<Box<dyn ChunkBackend>> {
+    backends
+        .into_iter()
+        .enumerate()
+        .map(|(i, b)| {
+            Box::new(FaultBackend::new(b, spec.for_node(i), Arc::clone(control)))
+                as Box<dyn ChunkBackend>
+        })
+        .collect()
 }
 
 /// The live object store.
@@ -1012,8 +1136,17 @@ pub struct LiveStore {
     /// snapshots so a later crash falls back to journal salvage.
     clean_marker: AtomicBool,
     /// Files that came back through [`LiveStore::reopen`] — the
-    /// `recovered=` field on `cache_state` reads this.
-    recovered_ids: HashSet<FileId>,
+    /// `recovered=` field on `cache_state` reads this. Pruned when the
+    /// file is deleted or reclaimed, so the `system_status` count
+    /// never outlives the files it describes.
+    recovered_ids: RwLock<HashSet<FileId>>,
+    /// Shared fault-injection control when [`LiveTuning::fault`] is
+    /// set (`None` on an undecorated store).
+    faults: Option<Arc<FaultControl>>,
+    /// Per-node capacity as configured — what [`LiveStore::join_node`]
+    /// restores after [`LiveStore::fail_node`] zeroed the node out of
+    /// placement.
+    node_capacity: u64,
     /// What the last [`LiveStore::reopen`] rebuilt (`None` on a fresh
     /// store).
     recovery: Option<RecoveryReport>,
@@ -1123,6 +1256,11 @@ impl LiveStore {
                 )
             }
         };
+        let faults = tuning.fault.as_ref().map(|_| FaultControl::armed());
+        let backends = match (&tuning.fault, &faults) {
+            (Some(spec), Some(ctl)) => wrap_with_faults(backends, *spec, ctl),
+            _ => backends,
+        };
         let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(backends);
         let n_stripes = tuning.stripes.max(1);
         let cache = tuning.cache_bytes.map(|budget| {
@@ -1167,7 +1305,9 @@ impl LiveStore {
             dead: RwLock::new(vec![false; n_nodes]),
             journal,
             clean_marker: AtomicBool::new(false),
-            recovered_ids: HashSet::new(),
+            recovered_ids: RwLock::new(HashSet::new()),
+            faults,
+            node_capacity: capacity,
             recovery: None,
             _dir_guard: dir_guard,
         })
@@ -1395,13 +1535,19 @@ impl LiveStore {
             .open(data_dir.join(NAMESPACE_LOG))
             .map_err(|e| StorageError::Invalid(format!("reopen namespace journal: {e}")))?;
 
-        // Rebuild the live structures around the recovered state.
-        let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(
-            file_backends
-                .into_iter()
-                .map(|b| Box::new(b) as Box<dyn ChunkBackend>)
-                .collect(),
-        );
+        // Rebuild the live structures around the recovered state. The
+        // fault decorator (if any) wraps *after* bottom-up
+        // verification, which must see the honest disk.
+        let boxed: Vec<Box<dyn ChunkBackend>> = file_backends
+            .into_iter()
+            .map(|b| Box::new(b) as Box<dyn ChunkBackend>)
+            .collect();
+        let faults = tuning.fault.as_ref().map(|_| FaultControl::armed());
+        let boxed = match (&tuning.fault, &faults) {
+            (Some(spec), Some(ctl)) => wrap_with_faults(boxed, *spec, ctl),
+            _ => boxed,
+        };
+        let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(boxed);
         let n_stripes = tuning.stripes.max(1);
         let cache = tuning.cache_bytes.map(|budget| {
             Arc::new(CacheTier::new(
@@ -1460,7 +1606,9 @@ impl LiveStore {
             dead: RwLock::new(vec![false; n_nodes]),
             journal: Some(Mutex::new(AppendLog::new(journal))),
             clean_marker: AtomicBool::new(false),
-            recovered_ids,
+            recovered_ids: RwLock::new(recovered_ids),
+            faults,
+            node_capacity: capacity,
             recovery: Some(report),
             _dir_guard: None,
         })
@@ -1523,7 +1671,7 @@ impl LiveStore {
         stripe
             .files
             .get(path)
-            .is_some_and(|m| self.recovered_ids.contains(&m.id))
+            .is_some_and(|m| self.recovered_ids.read().unwrap().contains(&m.id))
     }
 
     /// Append one namespace-journal record (and, first, invalidate any
@@ -1623,6 +1771,66 @@ impl LiveStore {
         self.stores.iter().map(|s| s.chunk_count()).collect()
     }
 
+    /// Bottom-up consistency audit: cross-reference the namespace's
+    /// claims against the placement core's usage accounting and each
+    /// backend's physical contents. Flushes background replication
+    /// first (a queued copy is not drift), then freezes the namespace
+    /// for a consistent snapshot. Dirty cache-resident chunks (scratch
+    /// that skipped the spill) count as present on their holder.
+    pub fn audit(&self) -> StoreAudit {
+        self.flush_replication();
+        let guards: Vec<_> = self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        let n = self.stores.len();
+        let mut files = 0usize;
+        let mut replicas_claimed = 0usize;
+        let mut claimed_bytes = vec![0u64; n];
+        let mut claimed_keys: Vec<HashSet<ChunkKey>> = vec![HashSet::new(); n];
+        for stripe in &guards {
+            for meta in stripe.files.values() {
+                files += 1;
+                for (idx, chunk) in meta.chunks.iter().enumerate() {
+                    let bytes = meta.chunk_bytes(idx as u64);
+                    for holder in &chunk.replicas {
+                        replicas_claimed += 1;
+                        claimed_bytes[holder.0] += bytes;
+                        claimed_keys[holder.0].insert((meta.id, idx as u64));
+                    }
+                }
+            }
+        }
+        let accounted_bytes: Vec<u64> = {
+            let core = self.core.lock().unwrap();
+            core.nodes.iter().map(|n| n.used).collect()
+        };
+        let mut backend_bytes = vec![0u64; n];
+        let mut stray_chunks = 0usize;
+        let mut missing_chunks = 0usize;
+        for (i, store) in self.stores.iter().enumerate() {
+            backend_bytes[i] = store.used_bytes();
+            let present: HashSet<ChunkKey> = store.chunk_keys().into_iter().collect();
+            stray_chunks += present.difference(&claimed_keys[i]).count();
+            for key in claimed_keys[i].difference(&present) {
+                let dirty = self
+                    .cache
+                    .as_ref()
+                    .is_some_and(|c| c.contains_dirty(NodeId(i), *key));
+                if !dirty {
+                    missing_chunks += 1;
+                }
+            }
+        }
+        drop(guards);
+        StoreAudit {
+            files,
+            replicas_claimed,
+            claimed_bytes,
+            accounted_bytes,
+            backend_bytes,
+            stray_chunks,
+            missing_chunks,
+        }
+    }
+
     /// Number of namespace lock stripes.
     pub fn stripe_count(&self) -> usize {
         self.stripes.len()
@@ -1647,6 +1855,161 @@ impl LiveStore {
     /// Is the node currently alive?
     pub fn is_alive(&self, node: NodeId) -> bool {
         !self.dead.read().unwrap()[node.0]
+    }
+
+    /// Take `node` out of service **live** — the churn half the
+    /// reliability story was missing: until this PR, lost holders were
+    /// only pruned at reopen. `fail_node` marks the node dead, zeroes
+    /// its placement capacity (so no new chunk lands there), prunes it
+    /// from every chunk's holder list, and queues background
+    /// re-replication of each pruned chunk from a surviving holder
+    /// onto a replacement target — all without a reopen. The
+    /// [`LiveStore::under_replicated`] gauge counts chunks whose
+    /// restore has not landed yet; [`LiveStore::flush_replication`] is
+    /// the barrier that drains it to zero.
+    ///
+    /// A chunk whose *only* holder is the failed node keeps its claim:
+    /// there is no surviving source to copy from, so the store treats
+    /// the node as in outage (reads fail until
+    /// [`LiveStore::join_node`] brings it back) rather than silently
+    /// dropping the file.
+    ///
+    /// Returns the number of restore jobs queued.
+    pub fn fail_node(&self, node: NodeId) -> usize {
+        self.kill_node(node);
+        {
+            let mut core = self.core.lock().unwrap();
+            core.nodes[node.0].capacity = 0;
+        }
+        let mut jobs: Vec<ReplJob> = Vec::new();
+        for stripe in &self.stripes {
+            let mut stripe = stripe.lock().unwrap();
+            // Stripe → core is the store-wide lock order (write_file's
+            // placement path); `dead` nests innermost everywhere.
+            let mut core = self.core.lock().unwrap();
+            let dead = self.dead.read().unwrap();
+            for meta in stripe.files.values_mut() {
+                let file = meta.id;
+                let sizes: Vec<u64> = (0..meta.chunks.len())
+                    .map(|i| meta.chunk_bytes(i as u64))
+                    .collect();
+                for (idx, chunk) in meta.chunks.iter_mut().enumerate() {
+                    let Some(pos) = chunk.replicas.iter().position(|&h| h == node) else {
+                        continue;
+                    };
+                    if chunk.replicas.len() == 1 {
+                        continue; // sole holder: outage, not loss
+                    }
+                    let bytes = sizes[idx];
+                    chunk.replicas.remove(pos);
+                    if let Some(n) = core.nodes.iter_mut().find(|n| n.node == node) {
+                        n.used = n.used.saturating_sub(bytes);
+                    }
+                    // Replacement holder: live, not already holding
+                    // this chunk, with room — least-loaded first, the
+                    // same utilization feedback placement uses.
+                    let target = core
+                        .nodes
+                        .iter()
+                        .filter(|n| {
+                            !dead[n.node.0]
+                                && !chunk.replicas.contains(&n.node)
+                                && n.used + bytes <= n.capacity
+                        })
+                        .min_by_key(|n| n.used)
+                        .map(|n| n.node);
+                    let Some(target) = target else {
+                        continue; // no room anywhere: stay degraded
+                    };
+                    if let Some(n) = core.nodes.iter_mut().find(|n| n.node == target) {
+                        n.used += bytes;
+                    }
+                    let sources = chunk.replicas.clone();
+                    chunk.replicas.push(target);
+                    jobs.push(ReplJob {
+                        file,
+                        chunk: idx as u64,
+                        work: ReplWork::Restore { sources, target },
+                    });
+                }
+            }
+        }
+        // Holder lists changed: any clean-shutdown snapshot is stale.
+        self.invalidate_clean();
+        let queued = jobs.len();
+        self.repl
+            .shared
+            .restore_pending
+            .fetch_add(queued as u64, Ordering::Relaxed);
+        // Enqueue outside every namespace lock — enqueue blocks on
+        // backpressure, and a worker draining the queue may need locks
+        // of its own.
+        for job in jobs {
+            self.repl.enqueue(job);
+        }
+        queued
+    }
+
+    /// Bring a failed node back into service: sweep chunks it still
+    /// physically holds that no surviving file claims from it (they
+    /// were re-replicated elsewhere, or their file died, while the node
+    /// was gone), restore its placement capacity, and mark it alive.
+    /// Returns the number of stale chunks swept.
+    pub fn join_node(&self, node: NodeId) -> usize {
+        // Freeze the namespace so no create can claim the node (its
+        // capacity is still zero, but collocation anchors bypass
+        // capacity) while the stale sweep decides what to unlink.
+        let guards: Vec<_> = self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        let mut claimed: HashSet<ChunkKey> = HashSet::new();
+        for stripe in &guards {
+            for meta in stripe.files.values() {
+                for (idx, chunk) in meta.chunks.iter().enumerate() {
+                    if chunk.replicas.contains(&node) {
+                        claimed.insert((meta.id, idx as u64));
+                    }
+                }
+            }
+        }
+        let mut swept = 0usize;
+        for key in self.stores[node.0].chunk_keys() {
+            if !claimed.contains(&key) {
+                self.stores[node.0].delete(key);
+                swept += 1;
+            }
+        }
+        {
+            let mut core = self.core.lock().unwrap();
+            core.nodes[node.0].capacity = self.node_capacity;
+        }
+        drop(guards);
+        self.revive_node(node);
+        swept
+    }
+
+    /// Chunks currently below their replica count while churn
+    /// re-replication drains — the store-wide gauge `system_status`
+    /// reports as ` under_replicated=<n>`. Zero after
+    /// [`LiveStore::flush_replication`] (absent further churn).
+    pub fn under_replicated(&self) -> u64 {
+        self.repl.shared.restore_pending.load(Ordering::Relaxed)
+    }
+
+    /// Bytes copied onto replacement holders by churn re-replication
+    /// ([`LiveStore::fail_node`]) so far.
+    pub fn bytes_rereplicated(&self) -> u64 {
+        self.repl.shared.restored_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Chunks copied onto replacement holders by churn re-replication.
+    pub fn chunks_rereplicated(&self) -> u64 {
+        self.repl.shared.restored_chunks.load(Ordering::Relaxed)
+    }
+
+    /// The shared fault-injection control block, when this store was
+    /// built with [`LiveTuning::fault`] — scenarios flip it off before
+    /// their final audit and read the injected-fault counters from it.
+    pub fn fault_control(&self) -> Option<Arc<FaultControl>> {
+        self.faults.clone()
     }
 
     /// Barrier: block until every background replica copy has landed.
@@ -1741,7 +2104,10 @@ impl LiveStore {
     /// survived a [`LiveStore::reopen`] into the current instance. The
     /// live store also extends the registry-served `system_status`
     /// with a store-wide ` recovered=<n>` count, so a scheduler can see
-    /// how much of the namespace outlived a restart without walking it.
+    /// how much of the namespace outlived a restart without walking
+    /// it, and an ` under_replicated=<n>` gauge — chunks still waiting
+    /// on churn re-replication ([`LiveStore::fail_node`]); `0` means
+    /// every surviving file holds its full replica count again.
     pub fn get_xattr(&self, path: &str, key: &str) -> Option<String> {
         self.getattr_ops.fetch_add(1, Ordering::Relaxed);
         let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
@@ -1752,7 +2118,7 @@ impl LiveStore {
                 None => (0, 0, 0),
             };
             let tier = self.backend_kind.label();
-            let recovered = u8::from(self.recovered_ids.contains(&meta.id));
+            let recovered = u8::from(self.recovered_ids.read().unwrap().contains(&meta.id));
             return Some(format!(
                 "tier={tier};chunks={chunks};bytes={bytes};pinned={pinned};recovered={recovered}"
             ));
@@ -1761,7 +2127,11 @@ impl LiveStore {
             let core = self.core.lock().unwrap();
             if let Some(value) = self.registry.get_system_attr(key, meta, &core.nodes) {
                 if key == crate::hints::SYSTEM_STATUS_ATTR {
-                    return Some(format!("{value} recovered={}", self.recovered_ids.len()));
+                    return Some(format!(
+                        "{value} recovered={} under_replicated={}",
+                        self.recovered_ids.read().unwrap().len(),
+                        self.under_replicated()
+                    ));
                 }
                 return Some(value);
             }
@@ -2039,12 +2409,18 @@ impl LiveStore {
             let key = (meta.id, idx as u64);
             // Fail over to a live replica; error only when every holder
             // of the chunk is down.
-            let live: Vec<NodeId> = chunk
+            let mut live: Vec<NodeId> = chunk
                 .replicas
                 .iter()
                 .copied()
                 .filter(|&n| self.is_alive(n))
                 .collect();
+            // Dedupe, order preserved: a duplicated holder entry (a
+            // hand-edited or damaged journal can smuggle one through
+            // recovery) must be probed once — probing it twice
+            // double-counts `read_errors` on a corrupt source.
+            let mut seen = vec![false; self.stores.len()];
+            live.retain(|n| !std::mem::replace(&mut seen[n.0], true));
             if live.is_empty() {
                 return Err(StorageError::Invalid(format!(
                     "all {} replicas of chunk {idx} of {path} are on dead nodes",
@@ -2317,6 +2693,10 @@ impl LiveStore {
         if self.journal.is_some() && !scratch_never_replays {
             let _ = self.journal_append(&format!("del\t{}", meta.id.0), true);
         }
+        // A deleted or reclaimed file no longer counts as recovered:
+        // `system_status`'s `recovered=` must describe files that
+        // still exist, not every file the last reopen ever salvaged.
+        self.recovered_ids.write().unwrap().remove(&meta.id);
         self.repl.cancel_file(meta.id);
         if let Some(cache) = &self.cache {
             cache.purge_file(meta.id);
@@ -2854,5 +3234,145 @@ mod tests {
         assert_eq!(stats.hits, 0);
         assert!(stats.resident.iter().all(|&r| r == 0));
         assert_eq!(store.prefetch(NodeId(1), "/f").unwrap(), 0);
+    }
+
+    #[test]
+    fn recovered_count_prunes_on_delete() {
+        let dir = std::env::temp_dir().join(format!(
+            "woss-store-test-recprune-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let store = LiveStore::with_tuning(
+                Registry::woss(),
+                3,
+                u64::MAX / 2,
+                LiveTuning {
+                    backend: BackendKind::Disk,
+                    data_dir: Some(dir.clone()),
+                    ..LiveTuning::default()
+                },
+            );
+            store
+                .write_file(NodeId(0), "/keep", &[1u8; 10_000], &TagSet::new())
+                .unwrap();
+            store
+                .write_file(NodeId(1), "/drop", &[2u8; 10_000], &TagSet::new())
+                .unwrap();
+            store.flush_replication();
+            // Dirty shutdown: no snapshot, both files replay from the
+            // journal and count as recovered.
+        }
+        let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+        assert!(store.was_recovered("/drop"));
+        let status = store.get_xattr("/keep", "system_status").unwrap();
+        assert!(status.contains("recovered=2 "), "both salvaged: {status}");
+
+        store.delete("/drop").unwrap();
+        // The gauge describes files that still exist, not everything
+        // the reopen ever salvaged: the deleted id is pruned.
+        let status = store.get_xattr("/keep", "system_status").unwrap();
+        assert!(status.contains("recovered=1 "), "pruned on delete: {status}");
+        assert!(!store.was_recovered("/drop"));
+        // The survivor's per-file flag is untouched.
+        assert!(store
+            .get_xattr("/keep", "cache_state")
+            .unwrap()
+            .ends_with(";recovered=1"));
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fail_node_rereplicates_live_without_reopen() {
+        let store = LiveStore::woss(4);
+        let tags = TagSet::from_pairs([("Replication", "2"), ("RepSmntc", "optimistic")]);
+        let mut expected = Vec::new();
+        for f in 0..6u32 {
+            let data: Vec<u8> = (0..300_000u32).map(|i| ((i + f) % 251) as u8).collect();
+            let path = format!("/r/{f}");
+            store
+                .write_file(NodeId(f as usize % 4), &path, &data, &tags)
+                .unwrap();
+            expected.push((path, data));
+        }
+        store.flush_replication();
+
+        let victim = store.locations("/r/0")[0];
+        let queued = store.fail_node(victim);
+        assert!(queued > 0, "the victim held replicas to restore");
+        // The same barrier the replication pool always had drains the
+        // restores — at no point does anything reopen.
+        store.flush_replication();
+        assert_eq!(store.under_replicated(), 0, "gauge drains to zero");
+        assert!(store.bytes_rereplicated() > 0);
+        assert_eq!(store.chunks_rereplicated() as usize, queued);
+
+        let reader = (0..4).map(NodeId).find(|&n| store.is_alive(n)).unwrap();
+        for (path, data) in &expected {
+            assert_eq!(&store.read_file(reader, path).unwrap(), data);
+            assert!(store.fully_replicated(path).unwrap(), "{path} restored");
+            assert!(
+                !store.locations(path).contains(&victim),
+                "{path} no longer claims the dead node"
+            );
+        }
+
+        // Rejoin: the node's now-unclaimed copies are swept, and the
+        // bottom-up audit closes with nothing stray or missing.
+        let swept = store.join_node(victim);
+        assert!(swept > 0, "stale copies swept on rejoin");
+        let audit = store.audit();
+        assert!(audit.clean(), "audit after churn: {audit:?}");
+    }
+
+    #[test]
+    fn sole_holder_chunk_survives_outage_and_rejoin() {
+        let store = LiveStore::woss(3);
+        let data = vec![5u8; 100_000];
+        store
+            .write_file(NodeId(1), "/solo", &data, &TagSet::from_pairs([("DP", "local")]))
+            .unwrap();
+        // No surviving source: the claim is kept and nothing is queued
+        // — an outage, not data loss.
+        assert_eq!(store.fail_node(NodeId(1)), 0);
+        assert!(store.read_file(NodeId(0), "/solo").is_err());
+        assert_eq!(store.file_size("/solo"), Some(100_000));
+        // Rejoining sweeps nothing (the copy is still claimed) and
+        // restores service with a clean audit.
+        assert_eq!(store.join_node(NodeId(1)), 0);
+        assert_eq!(store.read_file(NodeId(0), "/solo").unwrap(), data);
+        let audit = store.audit();
+        assert!(audit.clean(), "{audit:?}");
+    }
+
+    #[test]
+    fn fault_tuning_wraps_backends_and_disabling_restores_service() {
+        let store = LiveStore::woss_with(
+            3,
+            LiveTuning {
+                fault: Some(FaultSpec {
+                    seed: 11,
+                    read_error_permille: 1000,
+                    ..FaultSpec::default()
+                }),
+                ..LiveTuning::default()
+            },
+        );
+        let ctl = store.fault_control().expect("fault control wired through");
+        let data = vec![9u8; 10_000];
+        store
+            .write_file(NodeId(0), "/f", &data, &TagSet::from_pairs([("Replication", "2")]))
+            .unwrap();
+        store.flush_replication();
+        // Every backend read fails while injection is armed, so the
+        // read exhausts its holders and surfaces the fault.
+        assert!(store.read_file(NodeId(2), "/f").is_err());
+        assert!(ctl.read_errors() >= 1, "injected errors are counted");
+        // Disabling injection restores service: the bytes underneath
+        // were stored intact all along.
+        ctl.set_enabled(false);
+        assert_eq!(store.read_file(NodeId(2), "/f").unwrap(), data);
     }
 }

@@ -20,6 +20,14 @@
 //!   process left behind (cleanly or not): replay manifests + journal
 //!   or snapshot, print what survived, verify recorded fingerprints
 //!   when `--fingerprint-file` names a file, and shut down clean.
+//! * `scenario <name|all>` — run hostile-scenario workloads (fault
+//!   injection + live node churn) against the live store: `--list`
+//!   prints the scenario names, `--seed N` replays a schedule,
+//!   `--backend mem|disk`, `--data-dir PATH` (disk root), `--quick`
+//!   (smoke sizes), `--json out.json` (the `woss-scenarios-v1`
+//!   document `BENCH_scenarios.json` tracks).
+//! * `bench-check` — validate tracked bench results:
+//!   `--scenarios BENCH_scenarios.json --live BENCH_live.json`.
 //! * `list` — experiment ids.
 //! * `calib` — print the active calibration.
 
@@ -28,6 +36,7 @@ use woss::bench::experiments;
 use woss::coordinator::{config, report};
 use woss::dispatch::Registry;
 use woss::live::{BackendKind, CachePolicy, EngineOptions, LiveEngine, LiveStore, LiveTuning};
+use woss::scenario;
 use woss::util::cli::Args;
 use woss::workloads;
 
@@ -43,6 +52,8 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("experiment") => cmd_experiment(args),
         Some("live") => cmd_live(args),
+        Some("scenario") => cmd_scenario(args),
+        Some("bench-check") => cmd_bench_check(args),
         Some("list") => {
             for id in experiments::ids() {
                 println!("{id}");
@@ -57,16 +68,23 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("{calib:#?}");
             Ok(())
         }
-        Some(other) => Err(anyhow!("unknown command '{other}' (experiment|live|list|calib)")),
+        Some(other) => Err(anyhow!(
+            "unknown command '{other}' (experiment|live|scenario|bench-check|list|calib)"
+        )),
         None => {
             println!("woss — workflow-optimized storage system (paper reproduction)");
-            println!("usage: woss <experiment|live|list|calib> [options]");
+            println!("usage: woss <experiment|live|scenario|bench-check|list|calib> [options]");
             println!("  woss experiment all --runs 5 --json results.json");
+            println!("  woss experiment live --runs 2 --json BENCH_live.json");
             println!("  woss experiment fig5 --runs 20");
             println!("  woss live --workload montage --nodes 8 --workers 8 --stripes 8 --repl-workers 2");
             println!("  woss live --workload pipeline --cache-mb 64 --cache-policy hint --lifetime");
             println!("  woss live --workload pipeline --backend disk --data-dir /tmp/woss --cache-mb 64");
             println!("  woss live --reopen --data-dir /tmp/woss    # recover a store left behind");
+            println!("  woss scenario --list                       # hostile-scenario names");
+            println!("  woss scenario all --seed 7 --json BENCH_scenarios.json");
+            println!("  woss scenario kill_recover --quick --backend disk --data-dir /tmp/woss-scn");
+            println!("  woss bench-check --scenarios BENCH_scenarios.json --live BENCH_live.json");
             Ok(())
         }
     }
@@ -90,6 +108,13 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
     let reports = if id == "all" {
         experiments::run_all(runs, seed)
+    } else if id == "live" {
+        // The live-engine group: the measurements `BENCH_live.json`
+        // tracks (throughput, cache behaviour, recovery timings).
+        experiments::live_ids()
+            .into_iter()
+            .map(|i| experiments::run(i, runs, seed).expect("live group id"))
+            .collect()
     } else {
         vec![experiments::run(id, runs, seed)
             .ok_or_else(|| anyhow!("unknown experiment '{id}'; see `woss list`"))?]
@@ -155,6 +180,7 @@ fn cmd_live(args: &Args) -> Result<()> {
         lifetime,
         backend,
         data_dir,
+        fault: None,
     };
     let registry = if hints {
         Registry::woss()
@@ -302,6 +328,70 @@ fn cmd_live_reopen(args: &Args) -> Result<()> {
         None => store.shutdown(),
     }
     println!("  shutdown: clean (next reopen takes the snapshot path)");
+    Ok(())
+}
+
+/// `woss scenario <name|all> [--list] [--seed N] [--backend mem|disk]
+/// [--data-dir PATH] [--quick] [--json PATH]`: run the hostile-scenario
+/// harness and optionally emit the `woss-scenarios-v1` results
+/// document. Comma-separated names run a subset.
+fn cmd_scenario(args: &Args) -> Result<()> {
+    if args.has_flag("list") {
+        for name in scenario::names() {
+            println!("{name}");
+        }
+        return Ok(());
+    }
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let data_dir = args.get("data-dir").map(std::path::PathBuf::from);
+    let backend = match args.get("backend") {
+        Some(raw) => raw.parse::<BackendKind>().map_err(|e| anyhow!(e))?,
+        None if data_dir.is_some() => BackendKind::Disk,
+        None => BackendKind::from_env(),
+    };
+    let cfg = scenario::ScenarioConfig {
+        seed: args.get_parse("seed", 7u64),
+        backend,
+        data_dir,
+        quick: args.has_flag("quick"),
+    };
+    let names: Vec<&str> = if which == "all" {
+        scenario::names()
+    } else {
+        which.split(',').collect()
+    };
+    let mut reports = Vec::new();
+    for name in names {
+        let rep = scenario::run(name, &cfg).map_err(|e| anyhow!("scenario {name}: {e}"))?;
+        println!("{}", rep.summary_line());
+        if !rep.clean() {
+            return Err(anyhow!("scenario {name} closed with a dirty audit"));
+        }
+        reports.push(rep);
+    }
+    if let Some(path) = args.get("json") {
+        let doc = scenario::results_json(&reports, cfg.seed);
+        std::fs::write(path, doc.to_string_pretty())
+            .map_err(|e| anyhow!("write {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `woss bench-check [--scenarios PATH] [--live PATH]`: validate the
+/// tracked bench-result documents against their schemas — the CI gate
+/// that keeps `BENCH_scenarios.json` / `BENCH_live.json` honest.
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let scen_path = args.get_or("scenarios", "BENCH_scenarios.json");
+    let text = std::fs::read_to_string(scen_path)
+        .map_err(|e| anyhow!("read {scen_path}: {e}"))?;
+    scenario::check_scenarios_json(&text).map_err(|e| anyhow!("{scen_path}: {e}"))?;
+    println!("{scen_path}: schema {} ok", scenario::SCENARIO_SCHEMA);
+    let live_path = args.get_or("live", "BENCH_live.json");
+    let text = std::fs::read_to_string(live_path)
+        .map_err(|e| anyhow!("read {live_path}: {e}"))?;
+    scenario::check_live_json(&text).map_err(|e| anyhow!("{live_path}: {e}"))?;
+    println!("{live_path}: live experiment results ok");
     Ok(())
 }
 

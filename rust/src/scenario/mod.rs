@@ -1,0 +1,1042 @@
+//! Hostile-scenario harness: named adversarial workloads against the
+//! live store, replayable from one seed, each ending in a full
+//! bottom-up audit.
+//!
+//! Benches (`crate::bench::experiments`) measure the live store on
+//! *friendly* workloads; this module is the other half of the story —
+//! what the numbers look like when the environment misbehaves. Each
+//! scenario drives [`crate::live::LiveStore`] through one hostile shape
+//! the paper's deployment model has to survive:
+//!
+//! * [`metadata_storm`](self) — thousands of tiny-file creates (and a
+//!   third of them deleted again) while the injector fires put errors
+//!   and latency spikes; every failed create retries.
+//! * [`hot_skew`](self) — a 10%-hot/90%-of-traffic read skew over
+//!   replicated files under torn replica publishes and transient read
+//!   errors; reads fail over and retry.
+//! * [`tenant_pressure`](self) — three tenants with different placement
+//!   hints interleave writes against deliberately scarce node capacity,
+//!   deleting their own oldest files to make room when `NoSpace` hits.
+//! * [`kill_recover`](self) — a storage node dies mid-workflow
+//!   ([`crate::live::LiveStore::fail_node`]); the workload keeps
+//!   writing and reading while churn re-replication drains, every byte
+//!   is verified **without a reopen**, and the node rejoins
+//!   ([`crate::live::LiveStore::join_node`]).
+//!
+//! Hostility comes from [`crate::live::FaultBackend`] (seed-driven,
+//! interleaving-independent fault schedules) and the store's live-churn
+//! API — so a run is replayable: the same seed yields the same fault
+//! schedule and the same workload shape. Every scenario closes the same
+//! way: injection is disabled (torn chunks were stored intact, so the
+//! store heals), background replication drains, every surviving file's
+//! fingerprint is re-verified, and [`crate::live::LiveStore::audit`]
+//! must come back clean — namespace claims, usage accounting, and
+//! physical backend contents in exact agreement, zero stray chunks.
+//!
+//! Results are machine-readable ([`ScenarioReport::to_json`], schema
+//! [`SCENARIO_SCHEMA`]): `woss scenario all --json BENCH_scenarios.json`
+//! is the tracked perf trajectory, and [`check_scenarios_json`] /
+//! [`check_live_json`] are the schema gates `woss bench-check` (and
+//! `scripts/verify.sh`) enforce on the emitted files.
+
+use crate::dispatch::Registry;
+use crate::hints::TagSet;
+use crate::live::{
+    chunk_crc, chunk_files_under, BackendKind, FaultSpec, LiveStore, LiveTuning, StoreAudit,
+};
+use crate::storage::NodeId;
+use crate::util::json::Json;
+use crate::util::{Rng, Summary};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Schema tag stamped into (and required of) `BENCH_scenarios.json`.
+pub const SCENARIO_SCHEMA: &str = "woss-scenarios-v1";
+
+/// How a scenario run is wired: replay seed, chunk backend, disk root,
+/// and whether sizes are scaled down for the CI smoke leg.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Deterministic schedule seed — workload shape and fault schedule.
+    pub seed: u64,
+    /// Chunk backend under the store.
+    pub backend: BackendKind,
+    /// Disk-backend root; each scenario uses its own subdirectory.
+    /// `None` on the disk backend auto-creates (and removes) a tempdir.
+    pub data_dir: Option<PathBuf>,
+    /// Scaled-down workload sizes for fast smoke runs.
+    pub quick: bool,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            seed: 7,
+            backend: BackendKind::Memory,
+            data_dir: None,
+            quick: false,
+        }
+    }
+}
+
+/// Machine-readable outcome of one scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    /// Scenario name.
+    pub name: &'static str,
+    /// Backend label (`mem` | `disk`).
+    pub backend: &'static str,
+    /// The replay seed the run used.
+    pub seed: u64,
+    /// Whether smoke sizes were used.
+    pub quick: bool,
+    /// Files alive at the final audit.
+    pub files: usize,
+    /// Workload operations issued (writes + reads + deletes, retries
+    /// included).
+    pub ops: usize,
+    /// Payload bytes successfully written.
+    pub bytes_written: u64,
+    /// Payload bytes read back.
+    pub bytes_read: u64,
+    /// Wall-clock workload time, excluding the closing audit.
+    pub elapsed_secs: f64,
+    /// Median successful-write latency, milliseconds.
+    pub write_p50_ms: f64,
+    /// 99th-percentile successful-write latency, milliseconds.
+    pub write_p99_ms: f64,
+    /// Median successful-read latency, milliseconds.
+    pub read_p50_ms: f64,
+    /// 99th-percentile successful-read latency, milliseconds.
+    pub read_p99_ms: f64,
+    /// Faults the injector actually fired (all classes).
+    pub faults_injected: u64,
+    /// Operation-level errors the workload observed and retried.
+    pub faults_surfaced: u64,
+    /// `NoSpace` rejections absorbed (capacity-pressure scenarios).
+    pub nospace_errors: u64,
+    /// `fail_node` → re-replication drained, seconds (churn scenarios).
+    pub recovery_secs: Option<f64>,
+    /// Bytes landed on replacement holders by churn re-replication.
+    pub bytes_rereplicated: u64,
+    /// Chunks landed on replacement holders.
+    pub chunks_rereplicated: u64,
+    /// Chunks still below replica count at the end — must be zero.
+    pub under_replicated_after: u64,
+    /// The closing bottom-up audit.
+    pub audit: StoreAudit,
+    /// Physical `*.chunk` files left on disk (disk backend only) —
+    /// must equal the audit's claimed replica count.
+    pub chunk_files: Option<usize>,
+}
+
+impl ScenarioReport {
+    /// Aggregate payload throughput over the workload window, MB/s.
+    pub fn throughput_mbps(&self) -> f64 {
+        if self.elapsed_secs <= 0.0 {
+            return 0.0;
+        }
+        (self.bytes_written + self.bytes_read) as f64 / 1048576.0 / self.elapsed_secs
+    }
+
+    /// Did the run close fully consistent? Clean audit, nothing left
+    /// under-replicated, and (on disk) physical chunk files exactly
+    /// matching the namespace's replica claims.
+    pub fn clean(&self) -> bool {
+        self.audit.clean()
+            && self.under_replicated_after == 0
+            && self
+                .chunk_files
+                .map(|n| n == self.audit.replicas_claimed)
+                .unwrap_or(true)
+    }
+
+    /// One human-readable result line.
+    pub fn summary_line(&self) -> String {
+        let recovery = match self.recovery_secs {
+            Some(s) => format!(
+                ", recovered in {s:.3}s ({} B re-replicated)",
+                self.bytes_rereplicated
+            ),
+            None => String::new(),
+        };
+        format!(
+            "{} [{}] seed={}: {} files, {} ops, {:.1} MB/s, write p50/p99 {:.2}/{:.2} ms, \
+             read p50/p99 {:.2}/{:.2} ms, {} faults injected ({} surfaced){}, audit {}",
+            self.name,
+            self.backend,
+            self.seed,
+            self.files,
+            self.ops,
+            self.throughput_mbps(),
+            self.write_p50_ms,
+            self.write_p99_ms,
+            self.read_p50_ms,
+            self.read_p99_ms,
+            self.faults_injected,
+            self.faults_surfaced,
+            recovery,
+            if self.clean() { "clean" } else { "DIRTY" },
+        )
+    }
+
+    /// The `woss-scenarios-v1` record for this run.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", self.name.into()),
+            ("backend", self.backend.into()),
+            ("seed", self.seed.into()),
+            ("quick", self.quick.into()),
+            ("files", self.files.into()),
+            ("ops", self.ops.into()),
+            ("bytes_written", self.bytes_written.into()),
+            ("bytes_read", self.bytes_read.into()),
+            ("elapsed_secs", self.elapsed_secs.into()),
+            ("throughput_mbps", self.throughput_mbps().into()),
+            ("write_p50_ms", self.write_p50_ms.into()),
+            ("write_p99_ms", self.write_p99_ms.into()),
+            ("read_p50_ms", self.read_p50_ms.into()),
+            ("read_p99_ms", self.read_p99_ms.into()),
+            ("faults_injected", self.faults_injected.into()),
+            ("faults_surfaced", self.faults_surfaced.into()),
+            ("nospace_errors", self.nospace_errors.into()),
+            (
+                "recovery_secs",
+                self.recovery_secs.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("bytes_rereplicated", self.bytes_rereplicated.into()),
+            ("chunks_rereplicated", self.chunks_rereplicated.into()),
+            ("under_replicated_after", self.under_replicated_after.into()),
+            ("replicas_claimed", self.audit.replicas_claimed.into()),
+            ("stray_chunks", self.audit.stray_chunks.into()),
+            ("missing_chunks", self.audit.missing_chunks.into()),
+            ("usage_exact", self.audit.usage_exact().into()),
+            ("audit_clean", self.clean().into()),
+        ])
+    }
+}
+
+/// All scenario names, in documentation order.
+pub fn names() -> Vec<&'static str> {
+    vec!["metadata_storm", "hot_skew", "tenant_pressure", "kill_recover"]
+}
+
+/// Run one scenario by name.
+pub fn run(name: &str, cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
+    match name {
+        "metadata_storm" => metadata_storm(cfg),
+        "hot_skew" => hot_skew(cfg),
+        "tenant_pressure" => tenant_pressure(cfg),
+        "kill_recover" => kill_recover(cfg),
+        other => Err(format!(
+            "unknown scenario '{other}' (see `woss scenario --list`)"
+        )),
+    }
+}
+
+/// Run every scenario under one config, in [`names`] order.
+pub fn run_all(cfg: &ScenarioConfig) -> Result<Vec<ScenarioReport>, String> {
+    names().into_iter().map(|n| run(n, cfg)).collect()
+}
+
+/// Serialize scenario reports as the tracked `BENCH_scenarios.json`
+/// document ([`SCENARIO_SCHEMA`]).
+pub fn results_json(reports: &[ScenarioReport], seed: u64) -> Json {
+    Json::obj([
+        ("schema", SCENARIO_SCHEMA.into()),
+        ("seed", seed.into()),
+        (
+            "scenarios",
+            Json::Arr(reports.iter().map(ScenarioReport::to_json).collect()),
+        ),
+    ])
+}
+
+/// Validate a `BENCH_scenarios.json` document: schema tag, non-empty
+/// scenario list, the numeric fields the perf trajectory tracks, a
+/// clean closing audit on every entry, and a measured recovery time on
+/// the churn scenario. This is what `woss bench-check` runs.
+pub fn check_scenarios_json(text: &str) -> Result<(), String> {
+    let doc = Json::parse(text).map_err(|e| format!("scenarios file: {e}"))?;
+    if doc.get("schema").and_then(Json::as_str) != Some(SCENARIO_SCHEMA) {
+        return Err(format!(
+            "scenarios file: missing or drifted schema tag (want \"{SCENARIO_SCHEMA}\")"
+        ));
+    }
+    let Some(Json::Arr(scenarios)) = doc.get("scenarios") else {
+        return Err("scenarios file: missing 'scenarios' array".into());
+    };
+    if scenarios.is_empty() {
+        return Err("scenarios file: empty 'scenarios' array".into());
+    }
+    for s in scenarios {
+        let name = s
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "scenarios file: entry without 'name'".to_string())?;
+        for field in [
+            "elapsed_secs",
+            "throughput_mbps",
+            "write_p50_ms",
+            "write_p99_ms",
+            "read_p50_ms",
+            "read_p99_ms",
+            "bytes_written",
+            "faults_injected",
+            "under_replicated_after",
+            "stray_chunks",
+            "missing_chunks",
+        ] {
+            if s.get(field).and_then(Json::as_f64).is_none() {
+                return Err(format!("scenario '{name}': missing numeric '{field}'"));
+            }
+        }
+        if s.get("backend").and_then(Json::as_str).is_none() {
+            return Err(format!("scenario '{name}': missing 'backend'"));
+        }
+        if s.get("audit_clean") != Some(&Json::Bool(true)) {
+            return Err(format!("scenario '{name}' did not close with a clean audit"));
+        }
+        if name == "kill_recover" {
+            if s.get("recovery_secs").and_then(Json::as_f64).is_none() {
+                return Err("kill_recover: missing numeric 'recovery_secs'".into());
+            }
+            if s.get("bytes_rereplicated").and_then(Json::as_f64).unwrap_or(0.0) <= 0.0 {
+                return Err("kill_recover: no bytes were re-replicated".into());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate a `BENCH_live.json` document (`woss experiment live
+/// --json`): the three live experiments present, throughput rows on
+/// `live_throughput`, reopen/recovery timings on `live_recovery`.
+pub fn check_live_json(text: &str) -> Result<(), String> {
+    let doc = Json::parse(text).map_err(|e| format!("live file: {e}"))?;
+    let Some(Json::Arr(exps)) = doc.get("experiments") else {
+        return Err("live file: missing 'experiments' array".into());
+    };
+    let mut seen: Vec<String> = Vec::new();
+    for e in exps {
+        let id = e
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "live file: experiment without 'id'".to_string())?
+            .to_string();
+        let row_fields: &[&str] = match id.as_str() {
+            "live_throughput" => &["write_mbps", "read_mbps"],
+            "live_recovery" => &["reopen_ms"],
+            _ => &[],
+        };
+        if !row_fields.is_empty() {
+            let Some(Json::Arr(rows)) = e.get("rows") else {
+                return Err(format!("live file: '{id}' has no 'rows' array"));
+            };
+            if rows.is_empty() {
+                return Err(format!("live file: '{id}' has empty 'rows'"));
+            }
+            for row in rows {
+                for field in row_fields {
+                    if row.get(field).and_then(Json::as_f64).is_none() {
+                        return Err(format!("live file: '{id}' row missing numeric '{field}'"));
+                    }
+                }
+            }
+        }
+        seen.push(id);
+    }
+    for required in ["live_throughput", "live_cache", "live_recovery"] {
+        if !seen.iter().any(|id| id == required) {
+            return Err(format!("live file: missing experiment '{required}'"));
+        }
+    }
+    Ok(())
+}
+
+/// `(path, byte length, payload crc)` recorded at write time and
+/// re-verified bottom-up before the closing audit.
+type Fingerprint = (String, usize, u64);
+
+/// Per-run operation tallies the scenarios accumulate.
+#[derive(Default)]
+struct Tally {
+    ops: usize,
+    bytes_written: u64,
+    bytes_read: u64,
+    write_lat_ms: Vec<f64>,
+    read_lat_ms: Vec<f64>,
+    surfaced: u64,
+    nospace: u64,
+}
+
+/// Snapshot taken by [`close_out`] after the workload window.
+struct Closing {
+    injected: u64,
+    audit: StoreAudit,
+    under: u64,
+    chunk_files: Option<usize>,
+}
+
+/// Per-scenario store: on the disk backend each scenario runs in its
+/// own subdirectory of the configured root (or an owned tempdir).
+fn store_for(
+    cfg: &ScenarioConfig,
+    name: &str,
+    nodes: usize,
+    capacity: u64,
+    fault: Option<FaultSpec>,
+) -> Result<LiveStore, String> {
+    let tuning = LiveTuning {
+        backend: cfg.backend,
+        data_dir: match (cfg.backend, &cfg.data_dir) {
+            (BackendKind::Disk, Some(root)) => Some(root.join(name)),
+            _ => None,
+        },
+        fault,
+        ..LiveTuning::default()
+    };
+    LiveStore::try_with_tuning(Registry::woss(), nodes, capacity, tuning)
+        .map_err(|e| format!("bring up store: {e}"))
+}
+
+/// Deterministic payload: one fresh odd multiplier per file so every
+/// file's bytes are distinct and every position varies.
+fn payload(rng: &mut Rng, len: usize) -> Vec<u8> {
+    let mult = rng.next_u64() | 1;
+    (0..len)
+        .map(|i| ((i as u64).wrapping_mul(mult) >> 3) as u8)
+        .collect()
+}
+
+/// Disable injection (the injector never altered stored bytes, so
+/// flagged chunks heal), drain background replication, and take the
+/// closing audit. Injected-fault counters are read first — disabling
+/// stops new faults, not the tally.
+fn close_out(store: &LiveStore) -> Closing {
+    let injected = store.fault_control().map(|c| c.total()).unwrap_or(0);
+    if let Some(ctl) = store.fault_control() {
+        ctl.set_enabled(false);
+    }
+    store.flush_replication();
+    Closing {
+        injected,
+        audit: store.audit(),
+        under: store.under_replicated(),
+        chunk_files: store.data_dir().map(chunk_files_under),
+    }
+}
+
+/// Re-read every surviving file and compare length + crc against the
+/// fingerprint recorded at write time. Runs with injection disabled:
+/// any mismatch here is real corruption, not an injected fault.
+fn verify_fingerprints(
+    store: &LiveStore,
+    expected: &[Fingerprint],
+    seed: u64,
+) -> Result<(), String> {
+    let nodes = store.n_nodes();
+    for (i, (path, len, crc)) in expected.iter().enumerate() {
+        let reader = (0..nodes)
+            .map(|n| NodeId((i + n) % nodes))
+            .find(|&n| store.is_alive(n))
+            .ok_or_else(|| "no live node to read from".to_string())?;
+        let bytes = store
+            .read_file(reader, path)
+            .map_err(|e| format!("final read of {path} failed (seed={seed}): {e}"))?;
+        if bytes.len() != *len || chunk_crc(&bytes) != *crc {
+            return Err(format!(
+                "fingerprint mismatch on {path}: got {} bytes (seed={seed})",
+                bytes.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Assemble the report from a finished workload window.
+#[allow(clippy::too_many_arguments)]
+fn report(
+    name: &'static str,
+    cfg: &ScenarioConfig,
+    store: &LiveStore,
+    tally: Tally,
+    files: usize,
+    elapsed_secs: f64,
+    recovery_secs: Option<f64>,
+    closing: Closing,
+) -> ScenarioReport {
+    let pct = |samples: &[f64], p: f64| {
+        if samples.is_empty() {
+            0.0
+        } else {
+            Summary::from_iter(samples.iter().copied()).percentile(p)
+        }
+    };
+    ScenarioReport {
+        name,
+        backend: cfg.backend.label(),
+        seed: cfg.seed,
+        quick: cfg.quick,
+        files,
+        ops: tally.ops,
+        bytes_written: tally.bytes_written,
+        bytes_read: tally.bytes_read,
+        elapsed_secs,
+        write_p50_ms: pct(&tally.write_lat_ms, 50.0),
+        write_p99_ms: pct(&tally.write_lat_ms, 99.0),
+        read_p50_ms: pct(&tally.read_lat_ms, 50.0),
+        read_p99_ms: pct(&tally.read_lat_ms, 99.0),
+        faults_injected: closing.injected,
+        faults_surfaced: tally.surfaced,
+        nospace_errors: tally.nospace,
+        recovery_secs,
+        bytes_rereplicated: store.bytes_rereplicated(),
+        chunks_rereplicated: store.chunks_rereplicated(),
+        under_replicated_after: closing.under,
+        audit: closing.audit,
+        chunk_files: closing.chunk_files,
+    }
+}
+
+/// Write one file, retrying injected failures; records latency of the
+/// successful attempt only (failed attempts are surfaced faults, not
+/// service time).
+fn write_with_retry(
+    store: &LiveStore,
+    client: NodeId,
+    path: &str,
+    data: &[u8],
+    tags: &TagSet,
+    tally: &mut Tally,
+    seed: u64,
+) -> Result<(), String> {
+    let mut tries = 0u32;
+    loop {
+        tally.ops += 1;
+        let t = Instant::now();
+        match store.write_file(client, path, data, tags) {
+            Ok(()) => {
+                tally.write_lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                tally.bytes_written += data.len() as u64;
+                return Ok(());
+            }
+            Err(e) if tries < 8 => {
+                tries += 1;
+                tally.surfaced += 1;
+                if matches!(e, crate::storage::StorageError::NoSpace(_)) {
+                    tally.nospace += 1;
+                    return Err(format!("nospace:{path}"));
+                }
+            }
+            Err(e) => return Err(format!("write {path} kept failing (seed={seed}): {e}")),
+        }
+    }
+}
+
+/// Many-small-files metadata storm. Four writers' worth of tiny files
+/// (one chunk each) land under injected put errors and latency spikes;
+/// a third of the namespace is deleted again, and the survivors are
+/// read back byte-verified before the audit.
+fn metadata_storm(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
+    const NODES: usize = 4;
+    let files = if cfg.quick { 240 } else { 1000 };
+    let spec = FaultSpec {
+        seed: cfg.seed,
+        put_error_permille: 25,
+        delay_permille: 40,
+        delay_us: 200,
+        ..FaultSpec::default()
+    };
+    let store = store_for(cfg, "metadata_storm", NODES, u64::MAX / 2, Some(spec))?;
+    let mut rng = Rng::new(cfg.seed ^ 0x5708_6d00);
+    let mut tally = Tally::default();
+    let mut expected: Vec<Fingerprint> = Vec::new();
+    let t0 = Instant::now();
+
+    for f in 0..files {
+        let len = 512 + rng.gen_range(7 * 1024) as usize;
+        let data = payload(&mut rng, len);
+        let path = format!("/storm/w{}/f{f}", f % 4);
+        let tags = match f % 3 {
+            0 => TagSet::from_pairs([("DP", "local")]),
+            1 => TagSet::from_pairs([("DP", "scatter 2")]),
+            _ => TagSet::new(),
+        };
+        write_with_retry(&store, NodeId(f % NODES), &path, &data, &tags, &mut tally, cfg.seed)?;
+        expected.push((path, len, chunk_crc(&data)));
+    }
+
+    // Churn the namespace: every third file dies again. Deletes under
+    // the storm are the metadata ops the audit must reconcile exactly.
+    let mut kept: Vec<Fingerprint> = Vec::new();
+    for (i, fp) in expected.into_iter().enumerate() {
+        if i % 3 == 0 {
+            store
+                .delete(&fp.0)
+                .map_err(|e| format!("storm delete {}: {e}", fp.0))?;
+            tally.ops += 1;
+        } else {
+            kept.push(fp);
+        }
+    }
+
+    // Read-back pass (no read faults in this scenario's spec): every
+    // survivor byte-verified while injection is still firing on puts.
+    for (i, (path, len, crc)) in kept.iter().enumerate() {
+        let t = Instant::now();
+        let bytes = store
+            .read_file(NodeId(i % NODES), path)
+            .map_err(|e| format!("storm read {path}: {e}"))?;
+        tally.read_lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        tally.ops += 1;
+        tally.bytes_read += bytes.len() as u64;
+        if bytes.len() != *len || chunk_crc(&bytes) != *crc {
+            return Err(format!("storm corruption on {path} (seed={})", cfg.seed));
+        }
+    }
+
+    let elapsed = t0.elapsed().as_secs_f64();
+    let closing = close_out(&store);
+    verify_fingerprints(&store, &kept, cfg.seed)?;
+    let files_alive = kept.len();
+    Ok(report(
+        "metadata_storm",
+        cfg,
+        &store,
+        tally,
+        files_alive,
+        elapsed,
+        None,
+        closing,
+    ))
+}
+
+/// Skewed hot-file traffic: 10% of the files take ~90% of the reads,
+/// under torn replica publishes and transient read errors. Hot files
+/// carry `Replication=3`, so failover almost always hides the faults;
+/// reads retry when an attempt exhausts every holder.
+fn hot_skew(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
+    const NODES: usize = 4;
+    const READERS: usize = 4;
+    let files = if cfg.quick { 30 } else { 120 };
+    let reads = if cfg.quick { 400 } else { 4000 };
+    let hot_count = (files / 10).max(1);
+    let spec = FaultSpec {
+        seed: cfg.seed,
+        torn_put_permille: 8,
+        read_error_permille: 12,
+        delay_permille: 30,
+        delay_us: 100,
+        ..FaultSpec::default()
+    };
+    let store = store_for(cfg, "hot_skew", NODES, u64::MAX / 2, Some(spec))?;
+    let mut rng = Rng::new(cfg.seed ^ 0x4075_6b00);
+    let mut tally = Tally::default();
+    let mut expected: Vec<Fingerprint> = Vec::new();
+    let t0 = Instant::now();
+
+    for f in 0..files {
+        let len = 64 * 1024 + rng.gen_range(192 * 1024) as usize;
+        let data = payload(&mut rng, len);
+        let path = format!("/skew/f{f}");
+        // The hot prefix of the namespace replicates wider.
+        let tags = if f < hot_count {
+            TagSet::from_pairs([("Replication", "3"), ("RepSmntc", "optimistic")])
+        } else {
+            TagSet::from_pairs([("Replication", "2"), ("RepSmntc", "optimistic")])
+        };
+        write_with_retry(&store, NodeId(f % NODES), &path, &data, &tags, &mut tally, cfg.seed)?;
+        expected.push((path, len, chunk_crc(&data)));
+    }
+    // Replicas on their holders before the read storm begins.
+    store.flush_replication();
+
+    // Concurrent skewed readers. The fault schedule is a pure function
+    // of (key, attempt), so the aggregate outcome is seed-deterministic
+    // even though threads interleave.
+    let reader_results = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..READERS)
+            .map(|r| {
+                let store = &store;
+                let expected = &expected;
+                let mut rng = Rng::new(cfg.seed ^ 0xbeef ^ ((r as u64) << 24));
+                let seed = cfg.seed;
+                scope.spawn(move || -> Result<(Vec<f64>, u64, u64, usize), String> {
+                    let mut lat = Vec::new();
+                    let mut surfaced = 0u64;
+                    let mut bytes_read = 0u64;
+                    let mut ops = 0usize;
+                    for _ in 0..reads / READERS {
+                        let (path, len, crc) = if rng.gen_range(10) < 9 {
+                            &expected[rng.range_usize(0, hot_count)]
+                        } else {
+                            &expected[rng.range_usize(hot_count, expected.len())]
+                        };
+                        let mut tries = 0u32;
+                        let mut got = None;
+                        while got.is_none() {
+                            ops += 1;
+                            let t = Instant::now();
+                            match store.read_file(NodeId(rng.range_usize(0, NODES)), path) {
+                                Ok(bytes) => {
+                                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                                    got = Some(bytes);
+                                }
+                                Err(_) => {
+                                    tries += 1;
+                                    surfaced += 1;
+                                    if tries >= 8 {
+                                        // Every holder's copy can be torn
+                                        // at once — an outage until the
+                                        // storm passes, not corruption.
+                                        // The closing fingerprint pass
+                                        // (injection off) still proves
+                                        // the bytes survived.
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        let Some(bytes) = got else { continue };
+                        bytes_read += bytes.len() as u64;
+                        // A read that succeeds must be exact: injected
+                        // faults surface as errors, never as bytes.
+                        if bytes.len() != *len || chunk_crc(&bytes) != *crc {
+                            return Err(format!("skew corruption on {path} (seed={seed})"));
+                        }
+                    }
+                    Ok((lat, surfaced, bytes_read, ops))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("skew reader panicked"))
+            .collect::<Vec<_>>()
+    });
+    for r in reader_results {
+        let (lat, surfaced, bytes_read, ops) = r?;
+        tally.read_lat_ms.extend(lat);
+        tally.surfaced += surfaced;
+        tally.bytes_read += bytes_read;
+        tally.ops += ops;
+    }
+
+    let elapsed = t0.elapsed().as_secs_f64();
+    let closing = close_out(&store);
+    verify_fingerprints(&store, &expected, cfg.seed)?;
+    let files_alive = expected.len();
+    Ok(report(
+        "hot_skew",
+        cfg,
+        &store,
+        tally,
+        files_alive,
+        elapsed,
+        None,
+        closing,
+    ))
+}
+
+/// Multi-tenant capacity pressure: three tenants with different
+/// placement hints interleave writes against scarce node capacity.
+/// When `NoSpace` hits, the tenant deletes its own oldest files and
+/// retries — the scenario proves reclaimed capacity is accounted
+/// exactly (the closing audit's `usage_exact`).
+fn tenant_pressure(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
+    const NODES: usize = 4;
+    const TENANTS: usize = 3;
+    let writes_per_tenant = if cfg.quick { 40 } else { 120 };
+    let node_capacity: u64 = if cfg.quick { 3 << 20 } else { 6 << 20 };
+    let store = store_for(cfg, "tenant_pressure", NODES, node_capacity, None)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x7e4a_4700);
+    let mut tally = Tally::default();
+    // Per-tenant surviving files, oldest first.
+    let mut live: Vec<Vec<Fingerprint>> = vec![Vec::new(); TENANTS];
+    let t0 = Instant::now();
+
+    let tenant_tags = |tenant: usize| match tenant {
+        0 => TagSet::from_pairs([("DP", "local")]),
+        1 => TagSet::from_pairs([("DP", "scatter 2")]),
+        _ => TagSet::from_pairs([("Replication", "2"), ("RepSmntc", "optimistic")]),
+    };
+
+    for round in 0..writes_per_tenant {
+        for tenant in 0..TENANTS {
+            let len = 96 * 1024 + rng.gen_range(160 * 1024) as usize;
+            let data = payload(&mut rng, len);
+            let path = format!("/tenant{tenant}/f{round}");
+            let tags = tenant_tags(tenant);
+            // Write; on NoSpace, evict own oldest files and retry.
+            let mut evictions = 0u32;
+            loop {
+                match write_with_retry(
+                    &store,
+                    NodeId(tenant % NODES),
+                    &path,
+                    &data,
+                    &tags,
+                    &mut tally,
+                    cfg.seed,
+                ) {
+                    Ok(()) => {
+                        live[tenant].push((path, len, chunk_crc(&data)));
+                        break;
+                    }
+                    Err(e) if e.starts_with("nospace:") && evictions < 12 => {
+                        evictions += 1;
+                        // Reclaim: drop this tenant's two oldest files
+                        // (if any survive) and try again. Another
+                        // tenant may still own the full node — then the
+                        // write is legitimately rejected and skipped.
+                        if live[tenant].is_empty() {
+                            break;
+                        }
+                        let evict = 2.min(live[tenant].len());
+                        for fp in live[tenant].drain(..evict) {
+                            store
+                                .delete(&fp.0)
+                                .map_err(|e| format!("tenant delete {}: {e}", fp.0))?;
+                            tally.ops += 1;
+                        }
+                        store.flush_replication();
+                    }
+                    Err(e) if e.starts_with("nospace:") => break,
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+    }
+
+    // Every tenant's survivors read back exactly.
+    let survivors: Vec<Fingerprint> = live.into_iter().flatten().collect();
+    for (i, (path, len, crc)) in survivors.iter().enumerate() {
+        let t = Instant::now();
+        let bytes = store
+            .read_file(NodeId(i % NODES), path)
+            .map_err(|e| format!("tenant read {path}: {e}"))?;
+        tally.read_lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        tally.ops += 1;
+        tally.bytes_read += bytes.len() as u64;
+        if bytes.len() != *len || chunk_crc(&bytes) != *crc {
+            return Err(format!("tenant corruption on {path} (seed={})", cfg.seed));
+        }
+    }
+
+    let elapsed = t0.elapsed().as_secs_f64();
+    let closing = close_out(&store);
+    verify_fingerprints(&store, &survivors, cfg.seed)?;
+    let files_alive = survivors.len();
+    Ok(report(
+        "tenant_pressure",
+        cfg,
+        &store,
+        tally,
+        files_alive,
+        elapsed,
+        None,
+        closing,
+    ))
+}
+
+/// Kill-and-recover mid-workflow: half the dataset lands, a holder
+/// node dies ([`LiveStore::fail_node`]), the workload keeps writing
+/// and reading while churn re-replication drains in the background,
+/// and every byte — including chunks the dead node held — verifies
+/// **without any reopen**. The node then rejoins and the audit closes
+/// clean. `recovery_secs` measures fail → re-replication drained.
+fn kill_recover(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
+    const NODES: usize = 5;
+    let files = if cfg.quick { 16 } else { 60 };
+    let store = store_for(cfg, "kill_recover", NODES, u64::MAX / 2, None)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x6b17_7200);
+    let mut tally = Tally::default();
+    let mut expected: Vec<Fingerprint> = Vec::new();
+    let tags = TagSet::from_pairs([("Replication", "2"), ("RepSmntc", "optimistic")]);
+    let t0 = Instant::now();
+
+    let write_one = |store: &LiveStore,
+                         f: usize,
+                         client: NodeId,
+                         rng: &mut Rng,
+                         tally: &mut Tally,
+                         expected: &mut Vec<Fingerprint>|
+     -> Result<(), String> {
+        let len = 256 * 1024 + rng.gen_range(512 * 1024) as usize;
+        let data = payload(rng, len);
+        let path = format!("/kr/f{f}");
+        write_with_retry(store, client, &path, &data, &tags, tally, cfg.seed)?;
+        expected.push((path, len, chunk_crc(&data)));
+        Ok(())
+    };
+
+    // Phase 1: half the workflow's dataset lands and replicates.
+    for f in 0..files / 2 {
+        write_one(&store, f, NodeId(f % NODES), &mut rng, &mut tally, &mut expected)?;
+    }
+    store.flush_replication();
+
+    // The primary holder of the first file dies mid-workflow.
+    let victim = store.locations(&expected[0].0)[0];
+    let t_fail = Instant::now();
+    let queued = store.fail_node(victim);
+    if queued == 0 {
+        return Err(format!(
+            "kill_recover: victim {victim:?} held nothing to restore (seed={})",
+            cfg.seed
+        ));
+    }
+
+    // Phase 2: the workflow keeps going — new writes placed on the
+    // survivors, reads failing over — while restores drain behind it.
+    let live_clients: Vec<NodeId> = (0..NODES)
+        .map(NodeId)
+        .filter(|&n| n != victim)
+        .collect();
+    for f in files / 2..files {
+        let client = live_clients[f % live_clients.len()];
+        write_one(&store, f, client, &mut rng, &mut tally, &mut expected)?;
+        // Interleave reads of phase-1 files (some were held by the
+        // victim; failover serves them from surviving holders).
+        let (path, len, crc) = &expected[rng.range_usize(0, files / 2)];
+        let t = Instant::now();
+        let bytes = store
+            .read_file(client, path)
+            .map_err(|e| format!("mid-churn read {path} (seed={}): {e}", cfg.seed))?;
+        tally.read_lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        tally.ops += 1;
+        tally.bytes_read += bytes.len() as u64;
+        if bytes.len() != *len || chunk_crc(&bytes) != *crc {
+            return Err(format!("mid-churn corruption on {path} (seed={})", cfg.seed));
+        }
+    }
+
+    // Recovery barrier: every queued restore has landed.
+    store.flush_replication();
+    let recovery_secs = t_fail.elapsed().as_secs_f64();
+    if store.under_replicated() != 0 {
+        return Err(format!(
+            "kill_recover: {} chunks still under-replicated after flush (seed={})",
+            store.under_replicated(),
+            cfg.seed
+        ));
+    }
+
+    // The acceptance check: every byte verifies with the node still
+    // dead and no reopen anywhere in sight.
+    verify_fingerprints(&store, &expected, cfg.seed)?;
+
+    // The node comes back; its stale copies are swept before service.
+    store.join_node(victim);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let closing = close_out(&store);
+    verify_fingerprints(&store, &expected, cfg.seed)?;
+    let files_alive = expected.len();
+    Ok(report(
+        "kill_recover",
+        cfg,
+        &store,
+        tally,
+        files_alive,
+        elapsed,
+        Some(recovery_secs),
+        closing,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(seed: u64) -> ScenarioConfig {
+        ScenarioConfig {
+            seed,
+            quick: true,
+            ..ScenarioConfig::default()
+        }
+    }
+
+    #[test]
+    fn all_scenarios_close_clean_on_mem() {
+        let cfg = quick_cfg(7);
+        let reports = run_all(&cfg).expect("scenarios complete");
+        assert_eq!(reports.len(), names().len());
+        for r in &reports {
+            assert!(r.clean(), "{} closed dirty: {:?}", r.name, r.audit);
+            assert!(r.files > 0, "{} kept no files", r.name);
+            assert!(r.bytes_written > 0);
+        }
+        let kr = reports.iter().find(|r| r.name == "kill_recover").unwrap();
+        assert!(kr.recovery_secs.is_some());
+        assert!(kr.bytes_rereplicated > 0, "churn re-replicated data");
+        // The emitted document round-trips through its own gate.
+        let doc = results_json(&reports, cfg.seed).to_string_pretty();
+        check_scenarios_json(&doc).expect("self-emitted document passes the schema gate");
+    }
+
+    #[test]
+    fn storm_outcome_is_a_pure_function_of_the_seed() {
+        let a = metadata_storm(&quick_cfg(1234)).unwrap();
+        let b = metadata_storm(&quick_cfg(1234)).unwrap();
+        // Timing fields differ run to run; schedule-derived outcomes
+        // must not.
+        assert_eq!(a.files, b.files);
+        assert_eq!(a.bytes_written, b.bytes_written);
+        assert_eq!(a.faults_injected, b.faults_injected);
+        assert_eq!(a.faults_surfaced, b.faults_surfaced);
+        assert_eq!(a.audit, b.audit);
+        let c = metadata_storm(&quick_cfg(99)).unwrap();
+        assert_ne!(
+            (a.faults_injected, a.bytes_written),
+            (c.faults_injected, c.bytes_written),
+            "a different seed draws a different schedule"
+        );
+    }
+
+    #[test]
+    fn schema_gate_rejects_drift() {
+        let cfg = quick_cfg(7);
+        let rep = metadata_storm(&cfg).unwrap();
+        let good = results_json(std::slice::from_ref(&rep), cfg.seed);
+        check_scenarios_json(&good.to_string_pretty()).unwrap();
+
+        let mut drifted = good.clone();
+        drifted.set("schema", "woss-scenarios-v0".into());
+        assert!(check_scenarios_json(&drifted.to_string_pretty()).is_err());
+
+        assert!(check_scenarios_json("{}").is_err());
+        assert!(check_scenarios_json("not json").is_err());
+
+        // A dirty audit is a hard failure, not a schema detail.
+        let mut dirty_scenario = rep.to_json();
+        dirty_scenario.set("audit_clean", false.into());
+        let dirty = Json::obj([
+            ("schema", SCENARIO_SCHEMA.into()),
+            ("seed", 7u64.into()),
+            ("scenarios", Json::Arr(vec![dirty_scenario])),
+        ]);
+        assert!(check_scenarios_json(&dirty.to_string_pretty()).is_err());
+    }
+
+    #[test]
+    fn live_gate_checks_ids_and_rows() {
+        let good = r#"{"experiments":[
+            {"id":"live_throughput","rows":[{"write_mbps":100,"read_mbps":200}]},
+            {"id":"live_cache","rows":[]},
+            {"id":"live_recovery","rows":[{"reopen_ms":12.5}]}
+        ]}"#;
+        check_live_json(good).unwrap();
+
+        let missing = r#"{"experiments":[{"id":"live_throughput","rows":[{"write_mbps":1,"read_mbps":2}]}]}"#;
+        assert!(check_live_json(missing).is_err());
+
+        let no_rows = r#"{"experiments":[
+            {"id":"live_throughput","rows":[]},
+            {"id":"live_cache"},
+            {"id":"live_recovery","rows":[{"reopen_ms":1}]}
+        ]}"#;
+        assert!(check_live_json(no_rows).is_err());
+        assert!(check_live_json("[]").is_err());
+    }
+}

@@ -57,6 +57,7 @@ fn run_on(backend: BackendKind, data_dir: Option<std::path::PathBuf>) -> (LiveEn
             lifetime: true,
             backend,
             data_dir,
+            fault: None,
         },
     );
     let engine = LiveEngine::with_options(
@@ -155,6 +156,7 @@ fn disk_backend_survives_footprint_beyond_cache_budget() {
             lifetime: true,
             backend: BackendKind::Disk,
             data_dir: None, // auto temp dir, removed when the store drops
+            fault: None,
         },
     );
     use woss::storage::NodeId;

@@ -1,0 +1,22 @@
+//! Shared harness for the deterministic live-store test suites: one
+//! seeded RNG per test, with the seed printed up front so any failing
+//! schedule is replayable (`WOSS_TEST_SEED=<seed> cargo test ...`).
+
+use woss::util::Rng;
+
+/// Default seed when `WOSS_TEST_SEED` is unset — fixed, so plain CI
+/// runs are bit-identical from run to run.
+const DEFAULT_SEED: u64 = 0x5EED_0055;
+
+/// One deterministic RNG for `test`, seeded from `WOSS_TEST_SEED` when
+/// set (replaying a reported failure) or a fixed default. The seed is
+/// printed immediately: a failing run's output always carries the
+/// exact value needed to reproduce its schedule.
+pub fn seeded_rng(test: &str) -> (u64, Rng) {
+    let seed = std::env::var("WOSS_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED);
+    eprintln!("{test}: deterministic schedule from seed {seed} (replay: WOSS_TEST_SEED={seed})");
+    (seed, Rng::new(seed))
+}

@@ -3,6 +3,15 @@
 //! byte-for-byte round-trip checks and the `flush_replication` barrier
 //! asserting full replica counts. No kernel artifacts needed — this
 //! exercises the storage layer only.
+//!
+//! Every test draws its payloads and orderings from one seeded RNG
+//! (`common::seeded_rng`): the seed is printed up front and repeated
+//! in assertion messages, so a failing interleaving is replayable with
+//! `WOSS_TEST_SEED=<seed>`. There are no wall-clock sleeps — readers
+//! retry until the work appears (the deadline below is an assertion
+//! timeout, not a pause) and `flush_replication` is the only barrier.
+
+mod common;
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -19,11 +28,19 @@ fn path_of(w: usize, f: usize) -> String {
     format!("/live/w{w}/f{f}")
 }
 
+/// Deterministic per-(writer, file) payload salt: a pure function of
+/// the harness seed, so writer threads and reader threads regenerate
+/// identical expected bytes without sharing an RNG stream.
+fn salt_of(seed: u64, w: usize, f: usize) -> u64 {
+    let mut rng = woss::util::Rng::new(seed ^ ((w as u64) << 32) ^ f as u64);
+    rng.next_u64()
+}
+
 /// Deterministic, distinct payload per (writer, file); sizes straddle
 /// several 256 KiB chunks so placement and replication fan out.
-fn blob(w: usize, f: usize) -> Vec<u8> {
+fn blob(w: usize, f: usize, salt: u64) -> Vec<u8> {
     let len = 300_000 + w * 60_000 + f * 17_000;
-    let mult = (w * 31 + f * 7 + 13) as u64;
+    let mult = salt | 1; // odd multiplier: every byte position varies
     (0..len)
         .map(|i| ((i as u64).wrapping_mul(mult) % 251) as u8)
         .collect()
@@ -44,15 +61,26 @@ fn tags_of(w: usize, f: usize) -> TagSet {
 
 #[test]
 fn writer_reader_grid_roundtrips_and_flush_replicates() {
+    let (seed, mut rng) = common::seeded_rng("writer_reader_grid");
     let store = Arc::new(LiveStore::woss_tuned(8, 4, 2));
+
+    // Each writer creates its files in a seed-shuffled order, so
+    // different seeds exercise different create interleavings.
+    let orders: Vec<Vec<usize>> = (0..WRITERS)
+        .map(|_| {
+            let mut order: Vec<usize> = (0..FILES_PER_WRITER).collect();
+            rng.shuffle(&mut order);
+            order
+        })
+        .collect();
 
     std::thread::scope(|scope| {
         // Writers: each creates its own files while readers are racing.
-        for w in 0..WRITERS {
+        for (w, order) in orders.iter().enumerate() {
             let store = Arc::clone(&store);
             scope.spawn(move || {
-                for f in 0..FILES_PER_WRITER {
-                    let data = blob(w, f);
+                for &f in order {
+                    let data = blob(w, f, salt_of(seed, w, f));
                     store
                         .write_file(NodeId(w % 8), &path_of(w, f), &data, &tags_of(w, f))
                         .expect("concurrent write");
@@ -70,7 +98,7 @@ fn writer_reader_grid_roundtrips_and_flush_replicates() {
                 while verified < WRITERS * FILES_PER_WRITER {
                     assert!(
                         Instant::now() < deadline,
-                        "reader {r} verified only {verified} files"
+                        "reader {r} verified only {verified} files (WOSS_TEST_SEED={seed})"
                     );
                     for w in 0..WRITERS {
                         for f in 0..FILES_PER_WRITER {
@@ -85,8 +113,9 @@ fn writer_reader_grid_roundtrips_and_flush_replicates() {
                             {
                                 assert_eq!(
                                     back,
-                                    blob(w, f),
-                                    "bytes corrupted for writer {w} file {f}"
+                                    blob(w, f, salt_of(seed, w, f)),
+                                    "bytes corrupted for writer {w} file {f} \
+                                     (WOSS_TEST_SEED={seed})"
                                 );
                                 done[idx] = true;
                                 verified += 1;
@@ -104,7 +133,7 @@ fn writer_reader_grid_roundtrips_and_flush_replicates() {
     for w in 0..WRITERS {
         for f in 0..FILES_PER_WRITER {
             let back = store.read_file(NodeId(7), &path_of(w, f)).unwrap();
-            assert_eq!(back, blob(w, f));
+            assert_eq!(back, blob(w, f, salt_of(seed, w, f)));
         }
     }
 
@@ -116,7 +145,7 @@ fn writer_reader_grid_roundtrips_and_flush_replicates() {
         for f in 0..FILES_PER_WRITER {
             assert!(
                 store.fully_replicated(&path_of(w, f)).unwrap(),
-                "writer {w} file {f} missing replicas after flush"
+                "writer {w} file {f} missing replicas after flush (WOSS_TEST_SEED={seed})"
             );
         }
     }
@@ -129,6 +158,7 @@ fn collocated_files_share_an_anchor_across_stripes() {
     // Collocation anchors are global: files of one group land together
     // no matter which lock stripe their paths hash to — even when the
     // writes race each other.
+    let (seed, _rng) = common::seeded_rng("collocated_anchor");
     let store = Arc::new(LiveStore::woss_tuned(6, 4, 1));
     std::thread::scope(|scope| {
         for w in 0..4usize {
@@ -136,7 +166,12 @@ fn collocated_files_share_an_anchor_across_stripes() {
             scope.spawn(move || {
                 let tags = TagSet::from_pairs([("DP", "collocation shared")]);
                 store
-                    .write_file(NodeId(w), &format!("/g/{w}"), &blob(w, 0), &tags)
+                    .write_file(
+                        NodeId(w),
+                        &format!("/g/{w}"),
+                        &blob(w, 0, salt_of(seed, w, 0)),
+                        &tags,
+                    )
                     .unwrap();
             });
         }
@@ -148,25 +183,30 @@ fn collocated_files_share_an_anchor_across_stripes() {
         anchors.push(holders[0]);
     }
     anchors.dedup();
-    assert_eq!(anchors.len(), 1, "one shared anchor: {anchors:?}");
+    assert_eq!(
+        anchors.len(),
+        1,
+        "one shared anchor: {anchors:?} (WOSS_TEST_SEED={seed})"
+    );
 }
 
 #[test]
 fn single_stripe_store_survives_the_same_grid() {
     // stripes=1 is the previous single-lock behaviour; the concurrent
     // grid must still round-trip (just without metadata parallelism).
+    let (seed, _rng) = common::seeded_rng("single_stripe_grid");
     let store = Arc::new(LiveStore::woss_tuned(4, 1, 1));
     std::thread::scope(|scope| {
         for w in 0..4usize {
             let store = Arc::clone(&store);
             scope.spawn(move || {
                 for f in 0..3usize {
-                    let data = blob(w, f);
+                    let data = blob(w, f, salt_of(seed, w, f));
                     store
                         .write_file(NodeId(w), &path_of(w, f), &data, &tags_of(w, f))
                         .unwrap();
                     let back = store.read_file(NodeId((w + 1) % 4), &path_of(w, f)).unwrap();
-                    assert_eq!(back, data);
+                    assert_eq!(back, data, "WOSS_TEST_SEED={seed}");
                 }
             });
         }

@@ -407,6 +407,7 @@ fn prop_backend_equivalence_mem_vs_disk() {
                 lifetime: true,
                 backend,
                 data_dir,
+                fault: None,
             };
             let mem = LiveStore::woss_with(4, tuning(BackendKind::Memory, None));
             let disk = LiveStore::woss_with(4, tuning(BackendKind::Disk, Some(dir.clone())));
@@ -496,6 +497,145 @@ fn prop_simulation_deterministic() {
                 &woss::workloads::reduce(8, 0.2, hints),
             );
             a.makespan == b.makespan
+        },
+    );
+}
+
+/// Fault injection can fail or slow operations but never corrupt them:
+/// a successful read returns exactly the bytes written, a failed write
+/// leaves no trace (so `file_size` tracks the model), and once the
+/// schedule is disabled and every file deleted, usage accounting drops
+/// back to zero with no stray chunk files — on both backends.
+#[test]
+fn prop_faulted_store_never_serves_wrong_bytes() {
+    use std::sync::atomic::Ordering;
+    use woss::live::{chunk_crc, chunk_files_under, BackendKind, FaultSpec, LiveStore, LiveTuning};
+
+    let case = std::sync::atomic::AtomicU64::new(0);
+    forall_noshrink(
+        "fault-no-corruption",
+        |rng: &mut Rng| {
+            let spec = (
+                rng.next_u64(),            // fault schedule seed
+                rng.gen_range(80) as u16,  // put_error_permille
+                rng.gen_range(50) as u16,  // torn_put_permille
+                rng.gen_range(80) as u16,  // read_error_permille
+            );
+            // Small op lists: every case builds a disk-backed store, so
+            // shape coverage (write/read/delete × fault mix) matters
+            // more than volume.
+            let ops = (0..rng.range_usize(2, 12))
+                .map(|_| {
+                    (
+                        rng.gen_range(5),           // 0-1 write, 2-3 read, 4 delete
+                        rng.range_usize(0, 4),      // path index
+                        rng.range_usize(0, 4),      // acting node
+                        1 + rng.gen_range(200_000), // file size
+                    )
+                })
+                .collect::<Vec<(u64, usize, usize, u64)>>();
+            (spec, ops)
+        },
+        |&((fseed, put_pm, torn_pm, read_pm), ref ops)| {
+            let spec = FaultSpec {
+                seed: fseed,
+                put_error_permille: put_pm,
+                torn_put_permille: torn_pm,
+                read_error_permille: read_pm,
+                ..FaultSpec::default()
+            };
+            let dir = std::env::temp_dir().join(format!(
+                "woss-prop-fault-{}-{}",
+                std::process::id(),
+                case.fetch_add(1, Ordering::Relaxed)
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let mut ok = true;
+            for backend in [BackendKind::Memory, BackendKind::Disk] {
+                let store = LiveStore::woss_with(
+                    4,
+                    LiveTuning {
+                        stripes: 4,
+                        repl_workers: 1,
+                        backend,
+                        data_dir: (backend == BackendKind::Disk).then(|| dir.clone()),
+                        fault: Some(spec),
+                        ..LiveTuning::default()
+                    },
+                );
+                // Model of what was durably written: path -> (len, crc).
+                let mut model: std::collections::BTreeMap<String, (usize, u64)> =
+                    std::collections::BTreeMap::new();
+                for &(op, pidx, node, size) in ops {
+                    let path = format!("/f{pidx}");
+                    match op {
+                        0 | 1 => {
+                            // No Replication tags here: optimistic copy
+                            // jobs swallow injected put errors, which is
+                            // churn-repair territory (scenario tests),
+                            // not this invariant.
+                            let tags = if op == 0 {
+                                TagSet::from_pairs([("DP", "local")])
+                            } else {
+                                TagSet::from_pairs([("DP", "scatter 2")])
+                            };
+                            let data: Vec<u8> = (0..size as usize)
+                                .map(|i| (i as u64).wrapping_mul(size | 1) as u8)
+                                .collect();
+                            if store.write_file(NodeId(node), &path, &data, &tags).is_ok() {
+                                // Ok means a fresh write fully landed
+                                // (AlreadyExists and injected put errors
+                                // both surface as Err and change nothing).
+                                model.insert(path.clone(), (data.len(), chunk_crc(&data)));
+                            }
+                        }
+                        2 | 3 => {
+                            if let Ok(bytes) = store.read_file(NodeId((node + 1) % 4), &path) {
+                                // A read may fail (injected), but a
+                                // successful one must match the model.
+                                match model.get(&path) {
+                                    Some(&(len, crc)) => {
+                                        ok &= bytes.len() == len && chunk_crc(&bytes) == crc;
+                                    }
+                                    None => ok = false,
+                                }
+                            }
+                        }
+                        _ => {
+                            let deleted = store.delete(&path).is_ok();
+                            ok &= deleted == model.contains_key(&path);
+                            model.remove(&path);
+                        }
+                    }
+                    // Failed writes must unwind completely; successful
+                    // ones (even torn) must register.
+                    ok &= store.file_size(&path).is_some() == model.contains_key(&path);
+                }
+                // Disable the schedule: torn chunks heal, every file
+                // must now read back exactly.
+                store.fault_control().expect("faulted store").set_enabled(false);
+                store.flush_replication();
+                for (i, (path, &(len, crc))) in model.iter().enumerate() {
+                    match store.read_file(NodeId(i % 4), path) {
+                        Ok(bytes) => ok &= bytes.len() == len && chunk_crc(&bytes) == crc,
+                        Err(_) => ok = false,
+                    }
+                }
+                ok &= store.audit().clean();
+                // Reclamation is exact: deleting everything returns the
+                // backends to zero bytes, with no stray chunk files.
+                for path in model.keys() {
+                    ok &= store.delete(path).is_ok();
+                }
+                store.flush_replication();
+                ok &= store.audit().clean();
+                ok &= store.backend_used_bytes().iter().sum::<u64>() == 0;
+                if let Some(root) = store.data_dir() {
+                    ok &= chunk_files_under(root) == 0;
+                }
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+            ok
         },
     );
 }

@@ -79,6 +79,29 @@ grep -q "after a clean shutdown" "$restart_dir/reopen2.out" \
     || { echo "FAIL: second reopen should take the snapshot path"; exit 1; }
 rm -rf "$restart_dir"
 
+# Hostile-scenario smoke: two fast scenarios on both chunk backends with
+# a fixed seed. Each run ends in a full bottom-up audit and the binary
+# exits non-zero on a dirty one, so this leg passing means fingerprints,
+# usage accounting, and the on-disk chunk population all reconciled.
+echo "== scenario smoke (metadata_storm,kill_recover × mem|disk, seed 7) =="
+scn_dir="$(mktemp -d)"
+"$woss" scenario metadata_storm,kill_recover --quick --seed 7 --backend mem
+"$woss" scenario metadata_storm,kill_recover --quick --seed 7 \
+    --backend disk --data-dir "$scn_dir/smoke"
+rm -rf "$scn_dir"
+
+# Tracked perf trajectory: regenerate both bench documents and validate
+# them against their schemas. A missing, unparseable, or schema-drifted
+# document fails the gate (bench-check is also what CI should run on the
+# committed copies).
+echo "== bench trajectory (BENCH_scenarios.json / BENCH_live.json) =="
+bench_dir="$(mktemp -d)"
+"$woss" scenario all --seed 7 --backend disk --data-dir "$bench_dir/scn" \
+    --json ../BENCH_scenarios.json
+"$woss" experiment live --runs 2 --seed 7 --json ../BENCH_live.json
+"$woss" bench-check --scenarios ../BENCH_scenarios.json --live ../BENCH_live.json
+rm -rf "$bench_dir"
+
 echo "== cargo test --doc (HINTS.md's mirrored doctests) =="
 # The doc examples in docs/HINTS.md are mirrored as rustdoc doctests
 # (hints/tagset.rs, hints/mod.rs); this gate keeps document and
