@@ -735,6 +735,9 @@ fn live_throughput(_runs: usize, seed: u64) -> Report {
                 let mb = FILE_BYTES as f64 / (1024.0 * 1024.0);
                 let write_mbps = threads as f64 * FILES as f64 * mb / write_secs.max(1e-9);
                 let read_mbps = threads as f64 * READS_PER_THREAD as f64 * mb / read_secs.max(1e-9);
+                // Per-op latency distributions (µs) — the percentile
+                // fields `woss bench-check` gates on BENCH_live.json.
+                let cs = store.cache_stats();
                 table.row([
                     backend.label().to_string(),
                     stripes.to_string(),
@@ -748,6 +751,15 @@ fn live_throughput(_runs: usize, seed: u64) -> Report {
                     ("threads", threads.into()),
                     ("write_mbps", write_mbps.into()),
                     ("read_mbps", read_mbps.into()),
+                    ("put_p50_us", cs.put_p50_us.into()),
+                    ("put_p95_us", cs.put_p95_us.into()),
+                    ("put_p99_us", cs.put_p99_us.into()),
+                    ("get_p50_us", cs.get_p50_us.into()),
+                    ("get_p95_us", cs.get_p95_us.into()),
+                    ("get_p99_us", cs.get_p99_us.into()),
+                    ("spill_p50_us", cs.spill_p50_us.into()),
+                    ("spill_p95_us", cs.spill_p95_us.into()),
+                    ("spill_p99_us", cs.spill_p99_us.into()),
                 ]));
             }
         }

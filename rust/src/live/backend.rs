@@ -38,14 +38,65 @@
 //! eviction, so correctness never depends on the hint being truthful).
 
 use crate::storage::types::{FileId, StorageError};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 /// Key of one stored chunk: the owning file plus the chunk index.
 pub type ChunkKey = (FileId, u64);
+
+/// Debug-only lock-scope guard for the pipelined data path.
+///
+/// The refactored data path promises that **no store lock is ever held
+/// across backend I/O** — the property the `Spilling` cache state and
+/// the backend's reserve → write → publish split exist to establish.
+/// This module makes the promise checkable: the store wraps every
+/// cache-node mutex and namespace-stripe acquisition in a [`token`],
+/// and every [`FileBackend`] I/O entry point (and the fault decorator's
+/// injected latency spikes) calls [`assert_unlocked`]. A violation —
+/// disk I/O re-entering under a store lock — panics immediately in
+/// debug builds instead of surfacing as a tail-latency mystery. Release
+/// builds compile the whole mechanism to nothing.
+pub(crate) mod lockscope {
+    #[cfg(debug_assertions)]
+    thread_local! {
+        static STORE_LOCKS_HELD: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+    }
+
+    /// RAII marker: the creating thread holds a store lock until the
+    /// token drops. Create it immediately before taking the lock so
+    /// the token outlives the guard by a single stack slot.
+    pub(crate) struct Token;
+
+    /// Mark the calling thread as holding a store lock.
+    pub(crate) fn token() -> Token {
+        #[cfg(debug_assertions)]
+        STORE_LOCKS_HELD.with(|d| d.set(d.get() + 1));
+        Token
+    }
+
+    impl Drop for Token {
+        fn drop(&mut self) {
+            #[cfg(debug_assertions)]
+            STORE_LOCKS_HELD.with(|d| d.set(d.get() - 1));
+        }
+    }
+
+    /// Panic (debug builds) if the calling thread holds a store lock —
+    /// called at every backend I/O entry point.
+    pub(crate) fn assert_unlocked(_what: &str) {
+        #[cfg(debug_assertions)]
+        STORE_LOCKS_HELD.with(|d| {
+            assert!(
+                d.get() == 0,
+                "{_what}: backend I/O while a store lock is held \
+                 (the pipelined data path forbids this)"
+            );
+        });
+    }
+}
 
 /// Which chunk-backend implementation a live deployment runs on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -154,17 +205,23 @@ pub trait ChunkBackend: Send + Sync {
 
 /// The PR 3 in-memory chunk store: a `RwLock<HashMap>` per node.
 /// Readers share the lock; byte copies happen outside every manager
-/// lock exactly as before the trait existed.
+/// lock exactly as before the trait existed. Chunks are held as
+/// `Arc<Vec<u8>>` so a `get` clones only the refcount under the read
+/// guard and materializes the caller's copy after releasing it —
+/// large-chunk reads no longer extend the lock hold time.
 #[derive(Default)]
 pub struct MemoryBackend {
-    chunks: RwLock<HashMap<ChunkKey, Vec<u8>>>,
+    chunks: RwLock<HashMap<ChunkKey, Arc<Vec<u8>>>>,
     used: AtomicU64,
 }
 
 impl ChunkBackend for MemoryBackend {
     fn put(&self, key: ChunkKey, bytes: &[u8]) -> Result<(), StorageError> {
+        // The payload copy happens before the write lock, so writers
+        // hold it only for the map insert.
+        let payload = Arc::new(bytes.to_vec());
         let mut chunks = self.chunks.write().unwrap();
-        if let Some(old) = chunks.insert(key, bytes.to_vec()) {
+        if let Some(old) = chunks.insert(key, payload) {
             self.used.fetch_sub(old.len() as u64, Ordering::Relaxed);
         }
         self.used.fetch_add(bytes.len() as u64, Ordering::Relaxed);
@@ -172,7 +229,10 @@ impl ChunkBackend for MemoryBackend {
     }
 
     fn get(&self, key: ChunkKey) -> Result<Option<Vec<u8>>, StorageError> {
-        Ok(self.chunks.read().unwrap().get(&key).cloned())
+        // Snapshot the Arc under the guard (O(1)); the byte clone runs
+        // with the lock released.
+        let snapshot = self.chunks.read().unwrap().get(&key).cloned();
+        Ok(snapshot.map(|arc| arc.as_ref().clone()))
     }
 
     fn delete(&self, key: ChunkKey) {
@@ -303,15 +363,6 @@ impl AppendLog {
     }
 }
 
-/// Index + manifest handle, guarded together: every mutation appends
-/// its manifest record and updates the map under the same write lock,
-/// so the in-memory view, the log, and the directory can never
-/// disagree about which chunks exist.
-struct Index {
-    chunks: HashMap<ChunkKey, ChunkRecord>,
-    manifest: AppendLog,
-}
-
 /// File-backed chunk store: one node directory, one file per chunk
 /// (`f<file>_c<chunk>.chunk`) plus the append-only `manifest.log`.
 ///
@@ -326,13 +377,26 @@ struct Index {
 /// neither the bytes nor the record of them. A crash *during* `put`
 /// leaves either nothing, an unreferenced temp file, or a renamed
 /// chunk with no manifest record; [`FileBackend::open_existing`]
-/// removes all three. `delete` appends its `del` record and unlinks
-/// the chunk file while still holding the index write lock, so no
-/// window exists in which the index says present while the file is
-/// gone (`contains` true / `get` `Ok(None)` was the precise symptom of
-/// ordering the unlink after the lock drop).
+/// removes all three.
 ///
-/// An in-memory index (key → length + checksum) fronts the directory
+/// # Lock scope (the pipelined data path)
+///
+/// **No lock is held across disk I/O.** Mutations reserve a per-key
+/// in-flight slot (a `put`/`delete` on the same chunk waits its turn,
+/// so same-key mutations stay linearizable), run the temp write +
+/// fsync + rename with no lock held, record the publish in the
+/// manifest under its own short mutex, and only then touch the index —
+/// a metadata-only `RwLock` held for map operations alone. `delete`
+/// retires the index entry first, appends its `del` record, and
+/// unlinks with no lock held: a concurrent `get` that loses its file
+/// mid-read re-checks the index and reports the benign race as
+/// *absent*, never as a disk fault. Reads snapshot the record under
+/// the read lock, read the file outside it, and verify length +
+/// checksum against the snapshot; only a chunk that stays indexed and
+/// still fails verification (bounded retries, for the benign
+/// same-content republish race) counts as a read error.
+///
+/// The in-memory index (key → length + checksum) fronts the directory
 /// for `contains`/`used_bytes`/`chunk_count`, so only `get`/`put` pay
 /// disk I/O — the penalty the hint-aware cache tier is there to
 /// absorb. Reads re-verify length and checksum: a present-but-damaged
@@ -342,10 +406,36 @@ pub struct FileBackend {
     dir: PathBuf,
     /// Handle on the directory itself, for fsyncing renames into it.
     dir_handle: std::fs::File,
-    state: RwLock<Index>,
+    /// Metadata-only index: key → published length + checksum. Never
+    /// held across file I/O.
+    index: RwLock<HashMap<ChunkKey, ChunkRecord>>,
+    /// The append-only publish log, under its own short mutex (appends
+    /// are the only I/O a lock covers — the log is the serialization
+    /// point by design, exactly like the namespace journal).
+    manifest: Mutex<AppendLog>,
+    /// Per-key in-flight table: keys with a mutation (put/delete)
+    /// currently between reserve and publish. Same-key mutations queue
+    /// here instead of on the index lock, so they serialize without
+    /// stalling unrelated keys or any reader.
+    inflight: Mutex<HashSet<ChunkKey>>,
+    inflight_cv: Condvar,
     used: AtomicU64,
     tmp_seq: AtomicU64,
     read_failures: AtomicU64,
+}
+
+/// Exclusive per-key mutation slot: dropped, it releases the key and
+/// wakes the next queued mutation.
+struct KeySlot<'a> {
+    backend: &'a FileBackend,
+    key: ChunkKey,
+}
+
+impl Drop for KeySlot<'_> {
+    fn drop(&mut self) {
+        self.backend.inflight.lock().unwrap().remove(&self.key);
+        self.backend.inflight_cv.notify_all();
+    }
 }
 
 impl FileBackend {
@@ -376,10 +466,10 @@ impl FileBackend {
         Ok(FileBackend {
             dir: dir.to_path_buf(),
             dir_handle,
-            state: RwLock::new(Index {
-                chunks: HashMap::new(),
-                manifest: AppendLog::new(manifest),
-            }),
+            index: RwLock::new(HashMap::new()),
+            manifest: Mutex::new(AppendLog::new(manifest)),
+            inflight: Mutex::new(HashSet::new()),
+            inflight_cv: Condvar::new(),
             used: AtomicU64::new(0),
             tmp_seq: AtomicU64::new(0),
             read_failures: AtomicU64::new(0),
@@ -524,10 +614,10 @@ impl FileBackend {
             FileBackend {
                 dir: dir.to_path_buf(),
                 dir_handle,
-                state: RwLock::new(Index {
-                    chunks: kept,
-                    manifest: AppendLog::new(manifest),
-                }),
+                index: RwLock::new(kept),
+                manifest: Mutex::new(AppendLog::new(manifest)),
+                inflight: Mutex::new(HashSet::new()),
+                inflight_cv: Condvar::new(),
                 used: AtomicU64::new(used),
                 tmp_seq: AtomicU64::new(0),
                 read_failures: AtomicU64::new(0),
@@ -540,11 +630,24 @@ impl FileBackend {
         chunk_path_in(&self.dir, key)
     }
 
+    /// Reserve the exclusive mutation slot for `key`, waiting out any
+    /// in-flight put/delete of the same chunk. This is what keeps
+    /// same-key mutations linearizable now that their disk I/O runs
+    /// outside the index lock.
+    fn lock_key(&self, key: ChunkKey) -> KeySlot<'_> {
+        let mut inflight = self.inflight.lock().unwrap();
+        while inflight.contains(&key) {
+            inflight = self.inflight_cv.wait(inflight).unwrap();
+        }
+        inflight.insert(key);
+        KeySlot { backend: self, key }
+    }
+
     /// Chunk keys currently indexed (recovery bookkeeping: the store
     /// cross-references these against the recovered namespace to find
     /// chunks no surviving file claims).
     pub fn chunk_keys(&self) -> Vec<ChunkKey> {
-        self.state.read().unwrap().chunks.keys().copied().collect()
+        self.index.read().unwrap().keys().copied().collect()
     }
 }
 
@@ -594,6 +697,11 @@ fn parse_chunk_name(name: &str) -> Option<ChunkKey> {
 
 impl ChunkBackend for FileBackend {
     fn put(&self, key: ChunkKey, bytes: &[u8]) -> Result<(), StorageError> {
+        lockscope::assert_unlocked("FileBackend::put");
+        // Reserve: the per-key slot serializes same-key mutations, so
+        // everything below runs without the index lock and still
+        // linearizes against a racing put/delete of this chunk.
+        let _slot = self.lock_key(key);
         let tmp = self.dir.join(format!(
             ".put-{}.tmp",
             self.tmp_seq.fetch_add(1, Ordering::Relaxed)
@@ -611,17 +719,16 @@ impl ChunkBackend for FileBackend {
                 self.dir.display()
             )));
         }
-        // Publish under the index write lock: rename, manifest record,
-        // index update as one unit. Serializing the rename here (not
-        // just the index insert) closes the put/delete race where a
-        // delete unlinked a freshly renamed chunk the index then
-        // claimed to hold. The checksum is computed once, outside the
-        // lock — it feeds both the manifest record and the index.
         let rec = ChunkRecord {
             len: bytes.len() as u64,
             crc: chunk_crc(bytes),
         };
-        let mut state = self.state.write().unwrap();
+        // Rename + directory fsync + manifest fsync, all outside the
+        // index lock. Until the index insert below, a concurrent `get`
+        // of a fresh key reports absent (the put has not linearized
+        // yet) and a `get` racing an overwrite re-verifies against the
+        // old record — same-content republishes (the only overwrites
+        // the store issues) still verify.
         if let Err(e) = std::fs::rename(&tmp, self.chunk_path(key)) {
             // Nothing was replaced: a previously published copy (and
             // its index entry) is still intact, only the temp goes.
@@ -634,10 +741,11 @@ impl ChunkBackend for FileBackend {
             )));
         }
         let line = format!("put {} {} {} {:016x}\n", key.0 .0, key.1, rec.len, rec.crc);
-        let logged = self
-            .dir_handle
-            .sync_all()
-            .and_then(|()| state.manifest.append(&line, true));
+        let logged = self.dir_handle.sync_all().and_then(|()| {
+            // The manifest mutex covers only the append — the one
+            // serialization point the log needs.
+            self.manifest.lock().unwrap().append(&line, true)
+        });
         if let Err(e) = logged {
             // The rename already replaced the on-disk bytes with
             // content the manifest never published — and, on an
@@ -647,7 +755,7 @@ impl ChunkBackend for FileBackend {
             // chunk whose bytes no longer match (every read a spurious
             // checksum failure); leaving the file would strand an
             // unindexed .chunk until the next recovery sweep.
-            if let Some(old) = state.chunks.remove(&key) {
+            if let Some(old) = self.index.write().unwrap().remove(&key) {
                 self.used.fetch_sub(old.len, Ordering::Relaxed);
             }
             let _ = std::fs::remove_file(self.chunk_path(key));
@@ -658,7 +766,9 @@ impl ChunkBackend for FileBackend {
                 self.dir.display()
             )));
         }
-        if let Some(old) = state.chunks.insert(key, rec) {
+        // Publish: the metadata-only index insert is the linearization
+        // point.
+        if let Some(old) = self.index.write().unwrap().insert(key, rec) {
             self.used.fetch_sub(old.len, Ordering::Relaxed);
         }
         self.used.fetch_add(rec.len, Ordering::Relaxed);
@@ -666,25 +776,44 @@ impl ChunkBackend for FileBackend {
     }
 
     fn get(&self, key: ChunkKey) -> Result<Option<Vec<u8>>, StorageError> {
-        // The index check keeps misses off the disk; the hit pays the
-        // real read (the penalty a cache hit avoids). The shared lock
-        // is held *across* the read: publishes and unlinks take the
-        // write lock, so an indexed chunk provably has its file — a
-        // failed read is a genuine disk fault, never a benign race
-        // with a concurrent delete or republish. (Readers still share
-        // the lock with each other.)
-        let state = self.state.read().unwrap();
-        let rec = match state.chunks.get(&key) {
-            Some(rec) => *rec,
-            None => return Ok(None),
-        };
-        let failed = match std::fs::read(self.chunk_path(key)) {
-            Ok(bytes) if bytes.len() as u64 == rec.len && chunk_crc(&bytes) == rec.crc => {
-                return Ok(Some(bytes));
+        lockscope::assert_unlocked("FileBackend::get");
+        // Snapshot the record under the read lock, read the file with
+        // no lock held, verify against the snapshot. A failed
+        // verification re-checks the index: entry gone → the benign
+        // delete race (absent, not a fault); entry present → retry a
+        // bounded number of times (a same-content republish between
+        // rename and index insert verifies against either record; the
+        // retries cover the theoretical different-content overwrite)
+        // before reporting a genuine disk fault.
+        const ATTEMPTS: usize = 3;
+        let mut failed = String::new();
+        for attempt in 0..ATTEMPTS {
+            let rec = match self.index.read().unwrap().get(&key) {
+                Some(rec) => *rec,
+                None => return Ok(None),
+            };
+            match std::fs::read(self.chunk_path(key)) {
+                Ok(bytes) if bytes.len() as u64 == rec.len && chunk_crc(&bytes) == rec.crc => {
+                    return Ok(Some(bytes));
+                }
+                Ok(_) => failed = "length/checksum mismatch".to_string(),
+                Err(e) => {
+                    if e.kind() == std::io::ErrorKind::NotFound
+                        && !self.index.read().unwrap().contains_key(&key)
+                    {
+                        // The file vanished because a concurrent delete
+                        // retired the chunk between our snapshot and
+                        // the read: absent, exactly as if we had
+                        // arrived a moment later.
+                        return Ok(None);
+                    }
+                    failed = e.to_string();
+                }
             }
-            Ok(_) => "length/checksum mismatch".to_string(),
-            Err(e) => e.to_string(),
-        };
+            if attempt + 1 < ATTEMPTS {
+                std::thread::yield_now();
+            }
+        }
         self.read_failures.fetch_add(1, Ordering::Relaxed);
         Err(StorageError::Invalid(format!(
             "chunk {}#{} unreadable in {}: {failed}",
@@ -695,22 +824,27 @@ impl ChunkBackend for FileBackend {
     }
 
     fn delete(&self, key: ChunkKey) {
-        // Manifest record and unlink both happen while the write lock
-        // is held: a concurrent put of the same key cannot rename a
-        // fresh chunk into place mid-delete and have it unlinked while
-        // the index says present.
-        let mut state = self.state.write().unwrap();
-        if let Some(old) = state.chunks.remove(&key) {
+        lockscope::assert_unlocked("FileBackend::delete");
+        // The slot serializes against a racing put of the same key (a
+        // fresh chunk cannot be renamed into place mid-delete and get
+        // unlinked while the index says present). Retire the index
+        // entry first, then log, then unlink — a reader that loses the
+        // file mid-read finds the entry gone and reports absent.
+        let _slot = self.lock_key(key);
+        let removed = self.index.write().unwrap().remove(&key);
+        if let Some(old) = removed {
             self.used.fetch_sub(old.len, Ordering::Relaxed);
-            let _ = state
+            let _ = self
                 .manifest
+                .lock()
+                .unwrap()
                 .append(&format!("del {} {}\n", key.0 .0, key.1), true);
             let _ = std::fs::remove_file(self.chunk_path(key));
         }
     }
 
     fn contains(&self, key: ChunkKey) -> bool {
-        self.state.read().unwrap().chunks.contains_key(&key)
+        self.index.read().unwrap().contains_key(&key)
     }
 
     fn used_bytes(&self) -> u64 {
@@ -718,7 +852,7 @@ impl ChunkBackend for FileBackend {
     }
 
     fn chunk_count(&self) -> usize {
-        self.state.read().unwrap().chunks.len()
+        self.index.read().unwrap().len()
     }
 
     fn read_errors(&self) -> u64 {

@@ -88,6 +88,28 @@ pub struct LiveReport {
     /// Logical bytes freed by that reclamation — the run's working-set
     /// saving.
     pub bytes_reclaimed: u64,
+    /// Foreground per-chunk put latency percentiles, µs (primary-copy
+    /// landing inside [`LiveStore::write_file`]; 0.0 when no puts ran).
+    pub put_p50_us: f64,
+    /// See [`LiveReport::put_p50_us`].
+    pub put_p95_us: f64,
+    /// See [`LiveReport::put_p50_us`].
+    pub put_p99_us: f64,
+    /// Foreground per-chunk read latency percentiles, µs (chunk serve
+    /// inside [`LiveStore::read_file`]; 0.0 when no reads ran).
+    pub get_p50_us: f64,
+    /// See [`LiveReport::get_p50_us`].
+    pub get_p95_us: f64,
+    /// See [`LiveReport::get_p50_us`].
+    pub get_p99_us: f64,
+    /// Dirty write-back (spill) latency percentiles, µs — the disk
+    /// writes the cache tier runs through the I/O pool; 0.0 when
+    /// nothing spilled.
+    pub spill_p50_us: f64,
+    /// See [`LiveReport::spill_p50_us`].
+    pub spill_p95_us: f64,
+    /// See [`LiveReport::spill_p50_us`].
+    pub spill_p99_us: f64,
     /// Kernel executions by artifact name.
     pub kernel_execs: BTreeMap<String, u64>,
     /// Fingerprint of every produced file (path → checksum of first
@@ -291,6 +313,15 @@ impl LiveEngine {
             peak_cache_bytes: cache.peak_node_resident,
             files_reclaimed: cache.files_reclaimed,
             bytes_reclaimed: cache.bytes_reclaimed,
+            put_p50_us: cache.put_p50_us,
+            put_p95_us: cache.put_p95_us,
+            put_p99_us: cache.put_p99_us,
+            get_p50_us: cache.get_p50_us,
+            get_p95_us: cache.get_p95_us,
+            get_p99_us: cache.get_p99_us,
+            spill_p50_us: cache.spill_p50_us,
+            spill_p95_us: cache.spill_p95_us,
+            spill_p99_us: cache.spill_p99_us,
             kernel_execs,
             fingerprints: fingerprints.into_inner().unwrap(),
         })

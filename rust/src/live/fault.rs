@@ -18,7 +18,15 @@
 //!   (transient I/O fault), exercising the failover path that
 //!   distinguishes a lost copy from an absent one;
 //! * **latency spikes** — a short real sleep on selected operations,
-//!   shaking out timing assumptions in concurrent tests.
+//!   shaking out timing assumptions in concurrent tests. Spikes fire
+//!   inside the backend call, i.e. in the *unlocked* I/O section of
+//!   the pipelined data path (a debug assertion enforces that no
+//!   store lock is held), so a fault schedule exercises genuine
+//!   overlap between a slow operation and concurrent traffic instead
+//!   of serializing everything behind one sleep under a lock.
+//!   [`FaultSpec::delay_node`] narrows spikes to a single node, which
+//!   is how the overlap tests slow one spill while asserting the rest
+//!   of the store stays responsive.
 //!
 //! # Determinism
 //!
@@ -40,7 +48,7 @@
 //! final fingerprint audit can prove the payloads underneath survived
 //! the entire schedule intact.
 
-use super::backend::{ChunkBackend, ChunkKey};
+use super::backend::{lockscope, ChunkBackend, ChunkKey};
 use crate::storage::types::StorageError;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -70,13 +78,25 @@ pub struct FaultSpec {
     pub delay_permille: u16,
     /// Duration of an injected latency spike, in microseconds.
     pub delay_us: u64,
+    /// Restrict latency spikes to this node index (`None` = every
+    /// node). Other fault classes are unaffected — this exists so a
+    /// test can slow exactly one node's disk and assert the rest of
+    /// the store keeps moving.
+    pub delay_node: Option<usize>,
 }
 
 impl FaultSpec {
     /// Derive the node-local spec: same rates, seed mixed with the
-    /// node index so two nodes never share a schedule.
+    /// node index so two nodes never share a schedule. When
+    /// [`FaultSpec::delay_node`] targets a different node, the derived
+    /// spec's spike rate is zeroed — the schedule hash itself is
+    /// untouched, so narrowing spikes never shifts the other fault
+    /// classes' draws.
     pub fn for_node(mut self, node: usize) -> FaultSpec {
         self.seed = splitmix64(self.seed ^ (node as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        if self.delay_node.is_some_and(|n| n != node) {
+            self.delay_permille = 0;
+        }
         self
     }
 }
@@ -215,6 +235,13 @@ impl FaultBackend {
 
     fn maybe_delay(&self, hash: u64) {
         if Self::selected(hash, 3, self.spec.delay_permille) {
+            // A spike is disk time, and disk time must never run under
+            // a store lock (the tentpole invariant the lock-scope
+            // guard enforces across the real backends too).
+            lockscope::assert_unlocked("FaultBackend::delay");
+            // Count *before* sleeping: a test watching the counter can
+            // detect a spike while it is still in flight — the hook the
+            // overlap tests use to know a slow spill has started.
             self.control.delays.fetch_add(1, Ordering::Relaxed);
             std::thread::sleep(std::time::Duration::from_micros(self.spec.delay_us.max(1)));
         }

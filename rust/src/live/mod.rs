@@ -50,6 +50,24 @@
 //! `cache_state`/`system_status`, and the `live_recovery`
 //! experiment).
 //!
+//! The data path is **pipelined**: no lock is held across disk I/O at
+//! any layer. [`backend::FileBackend`] mutations reserve a per-key
+//! in-flight slot and run the write/fsync/rename unlocked, dirty
+//! cache victims write back through an explicit `Spilling` entry
+//! state with the node's cache mutex dropped (the entry stays
+//! readable mid-spill), and all background byte movement — spills,
+//! replica copies, prefetch promotions, churn repair — funnels
+//! through a bounded I/O pool ([`store::LiveTuning::io_workers`],
+//! default 1 = the serial inline path; the pool changes scheduling,
+//! never semantics). The queue depth is served bottom-up as
+//! ` io_queue=<d>` on `system_status`,
+//! [`store::LiveStore::flush_replication`] barriers both pools, and
+//! foreground put/get/spill latency percentiles land in
+//! [`store::CacheStats`] / [`engine::LiveReport`]. Debug builds assert
+//! the invariant directly (`backend.rs`'s `lockscope` tracker), and
+//! `tests/live_overlap.rs` pins it behaviourally under injected
+//! latency spikes.
+//!
 //! Hostility is injectable on demand: [`fault::FaultBackend`] wraps any
 //! chunk backend with a deterministic, seed-driven fault schedule (put
 //! errors, torn renames, read corruption, latency spikes —

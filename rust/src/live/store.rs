@@ -107,13 +107,14 @@
 //! scheduler can see which files outlived the crash.
 
 use super::backend::{
-    auto_data_dir, AppendLog, BackendKind, ChunkBackend, ChunkKey, DirGuard, FileBackend,
-    MemoryBackend, NodeRecovery,
+    auto_data_dir, lockscope, AppendLog, BackendKind, ChunkBackend, ChunkKey, DirGuard,
+    FileBackend, MemoryBackend, NodeRecovery,
 };
 use super::fault::{FaultBackend, FaultControl, FaultSpec};
 use crate::dispatch::{shard_for_path, PlacementCtx, Registry, ShardedPlacementState};
 use crate::hints::{AccessPattern, Lifetime, TagSet};
 use crate::storage::types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};
+use crate::util::Summary;
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -355,6 +356,14 @@ pub struct LiveTuning {
     /// adds no decorator at all. The store's [`LiveStore::fault_control`]
     /// exposes the shared switch/counters.
     pub fault: Option<FaultSpec>,
+    /// Worker threads for the bounded I/O submission/completion pool
+    /// that background disk work drains through — dirty-entry spills,
+    /// optimistic replica copies, prefetch promotes, and churn
+    /// restores. `1` (the default) runs every submission inline on the
+    /// submitting thread, reproducing the pre-pool serial behavior
+    /// exactly; `>= 2` spawns that many workers so independent disk
+    /// operations overlap. Clamped to ≥ 1.
+    pub io_workers: usize,
 }
 
 impl Default for LiveTuning {
@@ -368,6 +377,7 @@ impl Default for LiveTuning {
             backend: BackendKind::from_env(),
             data_dir: None,
             fault: None,
+            io_workers: 1,
         }
     }
 }
@@ -385,16 +395,42 @@ enum CacheClass {
     Pinned,
 }
 
-/// One cached chunk.
-struct CacheEntry {
-    bytes: Vec<u8>,
-    class: CacheClass,
-    last_used: u64,
+/// Life-cycle state of a cached chunk — the write-back pipeline.
+///
+/// ```text
+///   insert ──────────────► Clean ──────────────────► (evicted)
+///   insert_dirty ────────► Dirty ──mark victim─────► Spilling
+///   Spilling ──write-back landed──────────────────► (evicted)
+///   Spilling ──write-back failed──────────────────► Dirty
+///   Spilling ──entry purged mid-flight────────────► (gone; the
+///                 spiller deletes the stray backend copy itself)
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EntryState {
+    /// The backend also holds these bytes: eviction is free.
+    Clean,
     /// Cache-only chunk: the backend does not hold these bytes (the
     /// `Lifetime=scratch` spill-skip). Evicting a dirty entry writes it
     /// back to the node's backend first — the bytes here are the only
     /// copy this node owns.
-    dirty: bool,
+    Dirty,
+    /// A dirty victim whose write-back is in flight on the I/O pool.
+    /// The entry stays resident (and readable) but is no longer an
+    /// eviction candidate; the spilling thread completes or aborts the
+    /// transition when the write-back returns. Cache hits and
+    /// evictions of *other* entries proceed while a spill is in
+    /// flight — the node's mutex is not held across the disk write.
+    Spilling,
+}
+
+/// One cached chunk.
+struct CacheEntry {
+    /// Shared so a spill (or a read) can snapshot the payload and
+    /// release the node's mutex before touching the disk or copying.
+    bytes: Arc<Vec<u8>>,
+    class: CacheClass,
+    last_used: u64,
+    state: EntryState,
 }
 
 /// One node's cache: entries + resident accounting + an LRU clock.
@@ -438,6 +474,29 @@ pub struct CacheStats {
     /// — the read silently failed over and the fault dissolved into
     /// remote-traffic noise. Always 0 on the memory backend.
     pub read_errors: u64,
+    /// Median per-chunk foreground put latency, µs — the time to land
+    /// a chunk's primary copy in [`LiveStore::write_file`]. 0.0 before
+    /// the first write.
+    pub put_p50_us: f64,
+    /// 95th-percentile per-chunk foreground put latency, µs.
+    pub put_p95_us: f64,
+    /// 99th-percentile per-chunk foreground put latency, µs.
+    pub put_p99_us: f64,
+    /// Median per-chunk foreground read latency, µs — the time to
+    /// serve one chunk in [`LiveStore::read_file`], cache hits
+    /// included (that is the point: hits should pull this down).
+    pub get_p50_us: f64,
+    /// 95th-percentile per-chunk foreground read latency, µs.
+    pub get_p95_us: f64,
+    /// 99th-percentile per-chunk foreground read latency, µs.
+    pub get_p99_us: f64,
+    /// Median dirty write-back (spill) latency, µs — submission to
+    /// completion through the I/O pool. 0.0 while nothing spilled.
+    pub spill_p50_us: f64,
+    /// 95th-percentile spill latency, µs.
+    pub spill_p95_us: f64,
+    /// 99th-percentile spill latency, µs.
+    pub spill_p99_us: f64,
 }
 
 /// The per-node, capacity-bounded hot-chunk cache tier.
@@ -457,6 +516,11 @@ struct CacheTier {
     /// per-node backends the store owns. `None` only in unit tests —
     /// a tier without a spill target declines dirty inserts.
     spill: Option<Arc<Vec<Box<dyn ChunkBackend>>>>,
+    /// The pool dirty write-backs drain through (shared with the
+    /// store and its replication workers).
+    io: Arc<IoPool>,
+    /// Spill latencies, µs (submission to completion).
+    spill_samples: Mutex<Vec<f64>>,
     hits: AtomicU64,
     insertions: AtomicU64,
     evictions: AtomicU64,
@@ -465,18 +529,42 @@ struct CacheTier {
     peak_node_resident: AtomicU64,
 }
 
+/// A locked node cache plus the [`lockscope`] token that lets the
+/// debug-only guard catch backend I/O issued while the lock is held.
+/// Field order matters: the mutex guard drops before the token.
+struct CacheGuard<'a> {
+    cache: std::sync::MutexGuard<'a, NodeCache>,
+    _token: lockscope::Token,
+}
+
+impl std::ops::Deref for CacheGuard<'_> {
+    type Target = NodeCache;
+    fn deref(&self) -> &NodeCache {
+        &self.cache
+    }
+}
+
+impl std::ops::DerefMut for CacheGuard<'_> {
+    fn deref_mut(&mut self) -> &mut NodeCache {
+        &mut self.cache
+    }
+}
+
 impl CacheTier {
     fn new(
         n_nodes: usize,
         budget: u64,
         policy: CachePolicy,
         spill: Option<Arc<Vec<Box<dyn ChunkBackend>>>>,
+        io: Arc<IoPool>,
     ) -> Self {
         CacheTier {
             nodes: (0..n_nodes).map(|_| Mutex::new(NodeCache::default())).collect(),
             budget,
             policy,
             spill,
+            io,
+            spill_samples: Mutex::new(Vec::new()),
             hits: AtomicU64::new(0),
             insertions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -486,45 +574,61 @@ impl CacheTier {
         }
     }
 
+    /// Lock `node`'s cache, registering the hold with the debug
+    /// lock-scope guard — every acquisition in this tier goes through
+    /// here so no code path can reach backend I/O with the mutex held
+    /// without tripping [`lockscope::assert_unlocked`].
+    fn lock_node(&self, node: NodeId) -> CacheGuard<'_> {
+        let token = lockscope::token();
+        CacheGuard {
+            cache: self.nodes[node.0].lock().unwrap(),
+            _token: token,
+        }
+    }
+
     /// Look up a chunk in `node`'s cache, refreshing its recency.
     fn get(&self, node: NodeId, key: (FileId, u64)) -> Option<Vec<u8>> {
-        let mut c = self.nodes[node.0].lock().unwrap();
-        c.tick += 1;
-        let tick = c.tick;
-        let entry = c.entries.get_mut(&key)?;
-        entry.last_used = tick;
-        let bytes = entry.bytes.clone();
+        let bytes = {
+            let mut c = self.lock_node(node);
+            c.tick += 1;
+            let tick = c.tick;
+            let entry = c.entries.get_mut(&key)?;
+            entry.last_used = tick;
+            Arc::clone(&entry.bytes)
+        };
         self.hits.fetch_add(1, Ordering::Relaxed);
-        Some(bytes)
+        // Materialize the caller's copy outside the node mutex: a
+        // large-chunk memcpy under the lock would stall every other
+        // hit on this node for the duration.
+        Some(bytes.as_ref().clone())
     }
 
     /// Is the chunk resident in `node`'s cache? (No recency touch.)
     fn contains(&self, node: NodeId, key: (FileId, u64)) -> bool {
-        self.nodes[node.0].lock().unwrap().entries.contains_key(&key)
+        self.lock_node(node).entries.contains_key(&key)
     }
 
     /// Is the chunk a *dirty* (cache-only) resident of `node`'s cache?
     /// Dirty bytes are the node's only copy — the backend presence
-    /// checks ([`LiveStore::fully_replicated`]) count them.
+    /// checks ([`LiveStore::fully_replicated`]) count them. A
+    /// [`EntryState::Spilling`] entry still counts: its write-back has
+    /// not landed yet, so the cache copy is still the only one.
     fn contains_dirty(&self, node: NodeId, key: (FileId, u64)) -> bool {
-        self.nodes[node.0]
-            .lock()
-            .unwrap()
+        self.lock_node(node)
             .entries
             .get(&key)
-            .is_some_and(|e| e.dirty)
+            .is_some_and(|e| matches!(e.state, EntryState::Dirty | EntryState::Spilling))
     }
 
     /// Read a chunk from `node`'s cache without touching recency or the
     /// hit counter — the background promote path and remote fallbacks
     /// use this so diagnostics only count foreground reads.
     fn peek(&self, node: NodeId, key: (FileId, u64)) -> Option<Vec<u8>> {
-        self.nodes[node.0]
-            .lock()
-            .unwrap()
-            .entries
-            .get(&key)
-            .map(|e| e.bytes.clone())
+        let bytes = {
+            let c = self.lock_node(node);
+            c.entries.get(&key).map(|e| Arc::clone(&e.bytes))
+        }?;
+        Some(bytes.as_ref().clone())
     }
 
     /// Best-effort clean insert into `node`'s cache (the bytes also
@@ -549,20 +653,26 @@ impl CacheTier {
         self.insert_entry(node, key, bytes, class, true)
     }
 
-    /// Write a dirty victim back to `node`'s backend. `false` when no
-    /// spill target is wired or the backend write failed — the victim
-    /// must then stay resident.
-    fn spill_back(&self, node: NodeId, key: (FileId, u64), bytes: &[u8]) -> bool {
-        match &self.spill {
-            Some(stores) => {
-                let ok = stores[node.0].put(key, bytes).is_ok();
-                if ok {
-                    self.spills.fetch_add(1, Ordering::Relaxed);
-                }
-                ok
-            }
-            None => false,
+    /// Write a dirty victim back to `node`'s backend through the I/O
+    /// pool. `false` when no spill target is wired or the backend
+    /// write failed — the victim must then stay resident. Called with
+    /// **no cache lock held**: the victim sits in
+    /// [`EntryState::Spilling`] while this runs.
+    fn spill_back(&self, node: NodeId, key: (FileId, u64), bytes: Arc<Vec<u8>>) -> bool {
+        let Some(stores) = &self.spill else {
+            return false;
+        };
+        let stores = Arc::clone(stores);
+        let started = std::time::Instant::now();
+        let ok = self.io.run(move || stores[node.0].put(key, &bytes).is_ok());
+        self.spill_samples
+            .lock()
+            .unwrap()
+            .push(started.elapsed().as_secs_f64() * 1e6);
+        if ok {
+            self.spills.fetch_add(1, Ordering::Relaxed);
         }
+        ok
     }
 
     fn insert_entry(
@@ -577,76 +687,138 @@ impl CacheTier {
         if need > self.budget {
             return false;
         }
-        let mut c = self.nodes[node.0].lock().unwrap();
-        c.tick += 1;
-        let tick = c.tick;
-        if let Some(entry) = c.entries.get_mut(&key) {
-            // Same key ⇒ same bytes (a chunk's content is immutable for
-            // a given FileId): refresh class and recency in place. The
-            // dirty flag is sticky — clearing it here would tell a
-            // later eviction the backend holds bytes it does not.
-            entry.class = class;
-            entry.last_used = tick;
-            entry.dirty = entry.dirty || dirty;
-            return true;
-        }
-        while c.resident + need > self.budget {
+        let bytes = Arc::new(bytes);
+        let mut c = self.lock_node(node);
+        // The loop re-enters after every lock reacquisition (a dirty
+        // victim's write-back drops the mutex): budget, residency, and
+        // the key itself are re-checked from scratch each round.
+        loop {
+            c.tick += 1;
+            let tick = c.tick;
+            if let Some(entry) = c.entries.get_mut(&key) {
+                // Same key ⇒ same bytes (a chunk's content is immutable
+                // for a given FileId): refresh class and recency in
+                // place. The dirty state is sticky — downgrading it
+                // here would tell a later eviction the backend holds
+                // bytes it does not. (A `Spilling` entry stays
+                // spilling: its in-flight write-back finishes the
+                // transition.)
+                entry.class = class;
+                entry.last_used = tick;
+                if dirty && entry.state == EntryState::Clean {
+                    entry.state = EntryState::Dirty;
+                }
+                return true;
+            }
+            if c.resident + need <= self.budget {
+                c.resident += need;
+                c.entries.insert(
+                    key,
+                    CacheEntry {
+                        bytes,
+                        class,
+                        last_used: tick,
+                        state: if dirty {
+                            EntryState::Dirty
+                        } else {
+                            EntryState::Clean
+                        },
+                    },
+                );
+                let resident = c.resident;
+                drop(c);
+                self.insertions.fetch_add(1, Ordering::Relaxed);
+                self.peak_node_resident.fetch_max(resident, Ordering::Relaxed);
+                return true;
+            }
+            // Pick a victim. `Spilling` entries are never candidates:
+            // their transition belongs to the thread that started it.
             let victim = match self.policy {
                 CachePolicy::Lru => c
                     .entries
                     .iter()
+                    .filter(|(_, e)| e.state != EntryState::Spilling)
                     .min_by_key(|(_, e)| e.last_used)
                     .map(|(k, _)| *k),
                 CachePolicy::HintAware => {
                     let oldest_of = |want: CacheClass| {
                         c.entries
                             .iter()
-                            .filter(|(_, e)| e.class == want)
+                            .filter(|(_, e)| e.class == want && e.state != EntryState::Spilling)
                             .min_by_key(|(_, e)| e.last_used)
                             .map(|(k, _)| *k)
                     };
                     oldest_of(CacheClass::Scratch).or_else(|| oldest_of(CacheClass::Durable))
                 }
             };
-            match victim {
-                Some(k) => {
-                    let evicted = c.entries.remove(&k).expect("victim resident");
-                    if evicted.dirty && !self.spill_back(node, k, &evicted.bytes) {
-                        // The victim's bytes exist nowhere else and we
-                        // cannot write them back: keep it resident and
-                        // decline the newcomer instead of losing data.
-                        c.entries.insert(k, evicted);
-                        return false;
-                    }
+            // Only pinned (or mid-spill) entries left: decline to cache.
+            let Some(k) = victim else { return false };
+            let victim_state = c.entries.get(&k).expect("victim resident").state;
+            if victim_state == EntryState::Clean {
+                // The backend already holds these bytes: eviction is
+                // free and the mutex never drops.
+                let evicted = c.entries.remove(&k).expect("victim resident");
+                c.resident -= evicted.bytes.len() as u64;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            // Dirty victim: mark it `Spilling`, drop the mutex, write
+            // the bytes back outside every lock, then re-lock and
+            // finish (or abort) the transition. Hits and evictions of
+            // other entries proceed while the disk write is in flight.
+            let payload = {
+                let e = c.entries.get_mut(&k).expect("victim resident");
+                e.state = EntryState::Spilling;
+                Arc::clone(&e.bytes)
+            };
+            drop(c);
+            let ok = self.spill_back(node, k, payload);
+            c = self.lock_node(node);
+            match c.entries.get(&k).map(|e| e.state) {
+                Some(EntryState::Spilling) if ok => {
+                    // Write-back landed and the entry is still ours:
+                    // complete the eviction.
+                    let evicted = c.entries.remove(&k).expect("still resident");
                     c.resident -= evicted.bytes.len() as u64;
                     self.evictions.fetch_add(1, Ordering::Relaxed);
                 }
-                // Only pinned entries left: decline to cache.
-                None => return false,
+                Some(EntryState::Spilling) => {
+                    // The victim's bytes exist nowhere else and we
+                    // could not write them back: revert to `Dirty`
+                    // (keeping it resident) and decline the newcomer
+                    // instead of losing data.
+                    if let Some(e) = c.entries.get_mut(&k) {
+                        e.state = EntryState::Dirty;
+                    }
+                    return false;
+                }
+                None if ok => {
+                    // The entry was purged mid-spill (its file died),
+                    // but our write-back landed a backend copy the
+                    // sweep never saw. Undo it ourselves — outside the
+                    // lock, like all backend I/O.
+                    drop(c);
+                    if let Some(stores) = &self.spill {
+                        stores[node.0].delete(k);
+                    }
+                    c = self.lock_node(node);
+                }
+                // Purged with nothing written (residency already
+                // released), or re-inserted by a racing thread (never
+                // evict a just-admitted entry) — loop and re-evaluate.
+                _ => {}
             }
         }
-        c.resident += need;
-        c.entries.insert(
-            key,
-            CacheEntry {
-                bytes,
-                class,
-                last_used: tick,
-                dirty,
-            },
-        );
-        let resident = c.resident;
-        drop(c);
-        self.insertions.fetch_add(1, Ordering::Relaxed);
-        self.peak_node_resident.fetch_max(resident, Ordering::Relaxed);
-        true
     }
 
     /// Drop every cached chunk of `file` on every node (delete /
-    /// reclaim sweep).
+    /// reclaim sweep). Entries mid-spill are removed like any other:
+    /// the spilling thread detects the removal when its write-back
+    /// returns and deletes the stray backend copy itself (see
+    /// [`Self::insert_entry`]).
     fn purge_file(&self, file: FileId) {
-        for node in &self.nodes {
-            let mut c = node.lock().unwrap();
+        for node in 0..self.nodes.len() {
+            let mut c = self.lock_node(NodeId(node));
             let keys: Vec<(FileId, u64)> =
                 c.entries.keys().filter(|k| k.0 == file).copied().collect();
             for k in keys {
@@ -659,8 +831,8 @@ impl CacheTier {
     /// Demote `file`'s pinned entries to durable: its broadcast
     /// fan-out completed, ordinary LRU applies from here on.
     fn unpin_file(&self, file: FileId) {
-        for node in &self.nodes {
-            let mut c = node.lock().unwrap();
+        for node in 0..self.nodes.len() {
+            let mut c = self.lock_node(NodeId(node));
             for (k, e) in c.entries.iter_mut() {
                 if k.0 == file && e.class == CacheClass::Pinned {
                     e.class = CacheClass::Durable;
@@ -673,8 +845,8 @@ impl CacheTier {
     /// `(chunk copies, bytes, pinned copies)`.
     fn file_state(&self, file: FileId) -> (u64, u64, u64) {
         let (mut chunks, mut bytes, mut pinned) = (0u64, 0u64, 0u64);
-        for node in &self.nodes {
-            let c = node.lock().unwrap();
+        for node in 0..self.nodes.len() {
+            let c = self.lock_node(NodeId(node));
             for (k, e) in c.entries.iter() {
                 if k.0 == file {
                     chunks += 1;
@@ -690,8 +862,8 @@ impl CacheTier {
 
     /// Fill the tier's counters into `stats`.
     fn fill_stats(&self, stats: &mut CacheStats) {
-        for node in &self.nodes {
-            let c = node.lock().unwrap();
+        for node in 0..self.nodes.len() {
+            let c = self.lock_node(NodeId(node));
             stats.resident.push(c.resident);
             stats.pinned_entries += c
                 .entries
@@ -705,7 +877,25 @@ impl CacheTier {
         stats.evictions = self.evictions.load(Ordering::Relaxed);
         stats.prefetched = self.prefetched.load(Ordering::Relaxed);
         stats.spilled = self.spills.load(Ordering::Relaxed);
+        let (p50, p95, p99) = latency_percentiles(&self.spill_samples);
+        stats.spill_p50_us = p50;
+        stats.spill_p95_us = p95;
+        stats.spill_p99_us = p99;
     }
+}
+
+/// p50/p95/p99 over a latency sample buffer (µs); zeros when empty.
+fn latency_percentiles(samples: &Mutex<Vec<f64>>) -> (f64, f64, f64) {
+    let s = samples.lock().unwrap();
+    if s.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let sum = Summary::from_iter(s.iter().copied());
+    (
+        sum.percentile(50.0),
+        sum.percentile(95.0),
+        sum.percentile(99.0),
+    )
 }
 
 /// One namespace stripe: the files (and pre-creation tags) whose path
@@ -785,6 +975,10 @@ struct ReplShared {
     stores: Arc<Vec<Box<dyn ChunkBackend>>>,
     /// Cache tier promote jobs land in (absent when the tier is off).
     cache: Option<Arc<CacheTier>>,
+    /// Every backend put/get a worker performs drains through this
+    /// pool, so replica copies, promote reads, and churn restores
+    /// share the same bounded I/O lanes as cache spills.
+    io: Arc<IoPool>,
     /// Replica chunk copies completed in the background.
     copied: AtomicU64,
     /// Restore jobs queued or in flight — the store-wide
@@ -809,6 +1003,7 @@ impl ReplPool {
     fn new(
         stores: Arc<Vec<Box<dyn ChunkBackend>>>,
         cache: Option<Arc<CacheTier>>,
+        io: Arc<IoPool>,
         workers: usize,
     ) -> Self {
         let shared = Arc::new(ReplShared {
@@ -821,6 +1016,7 @@ impl ReplPool {
             drained: Condvar::new(),
             stores,
             cache,
+            io,
             copied: AtomicU64::new(0),
             restore_pending: AtomicU64::new(0),
             restored_chunks: AtomicU64::new(0),
@@ -942,12 +1138,22 @@ fn worker_loop(shared: &ReplShared) {
         let key = (job.file, job.chunk);
         match &job.work {
             ReplWork::Copy { payload, targets } => {
-                for &target in targets {
-                    // A backend write failure (disk tier) leaves the
-                    // replica missing — optimistic semantics never
-                    // promised it, and reads fall back to holders that
-                    // materialized the chunk.
-                    if shared.stores[target.0].put(key, payload.as_ref()).is_ok() {
+                // All targets go down as one I/O batch: with
+                // `io_workers >= 2` the fan-out's puts land
+                // concurrently. A backend write failure (disk tier)
+                // leaves that replica missing — optimistic semantics
+                // never promised it, and reads fall back to holders
+                // that materialized the chunk.
+                let puts = targets
+                    .iter()
+                    .map(|&target| {
+                        let stores = Arc::clone(&shared.stores);
+                        let payload = Arc::clone(payload);
+                        move || stores[target.0].put(key, payload.as_ref()).is_ok()
+                    })
+                    .collect::<Vec<_>>();
+                for ok in shared.io.run_batch(puts) {
+                    if ok {
                         shared.copied.fetch_add(1, Ordering::Relaxed);
                     }
                 }
@@ -968,16 +1174,18 @@ fn worker_loop(shared: &ReplShared) {
                         // dirty cache-only chunk lives nowhere else,
                         // and cache-before-backend is the race-free
                         // probe order under concurrent dirty
-                        // write-backs), then its backend; a file
-                        // deleted mid-flight simply has no source left
-                        // and the job becomes a no-op. A holder whose
-                        // read fails is treated as having no copy (the
-                        // backend counts the fault) and the next source
-                        // is tried.
-                        let bytes = sources.iter().find_map(|s| {
-                            cache
-                                .peek(*s, key)
-                                .or_else(|| shared.stores[s.0].get(key).ok().flatten())
+                        // write-backs), then its backend (read through
+                        // the I/O pool); a file deleted mid-flight
+                        // simply has no source left and the job
+                        // becomes a no-op. A holder whose read fails
+                        // is treated as having no copy (the backend
+                        // counts the fault) and the next source is
+                        // tried.
+                        let bytes = sources.iter().find_map(|&s| {
+                            cache.peek(s, key).or_else(|| {
+                                let stores = Arc::clone(&shared.stores);
+                                shared.io.run(move || stores[s.0].get(key).ok().flatten())
+                            })
                         });
                         if let Some(bytes) = bytes {
                             if cache.insert(*target, key, bytes, *class) {
@@ -999,19 +1207,23 @@ fn worker_loop(shared: &ReplShared) {
                 // simply stays under-replicated on that holder and
                 // reads keep failing over.
                 if !shared.stores[target.0].contains(key) {
-                    let bytes = sources.iter().find_map(|s| {
+                    let bytes = sources.iter().find_map(|&s| {
                         shared
                             .cache
                             .as_ref()
-                            .and_then(|c| c.peek(*s, key))
-                            .or_else(|| shared.stores[s.0].get(key).ok().flatten())
+                            .and_then(|c| c.peek(s, key))
+                            .or_else(|| {
+                                let stores = Arc::clone(&shared.stores);
+                                shared.io.run(move || stores[s.0].get(key).ok().flatten())
+                            })
                     });
                     if let Some(bytes) = bytes {
-                        if shared.stores[target.0].put(key, &bytes).is_ok() {
+                        let target = *target;
+                        let len = bytes.len() as u64;
+                        let stores = Arc::clone(&shared.stores);
+                        if shared.io.run(move || stores[target.0].put(key, &bytes).is_ok()) {
                             shared.restored_chunks.fetch_add(1, Ordering::Relaxed);
-                            shared
-                                .restored_bytes
-                                .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                            shared.restored_bytes.fetch_add(len, Ordering::Relaxed);
                         }
                     }
                 }
@@ -1027,6 +1239,232 @@ fn worker_loop(shared: &ReplShared) {
         }
         drop(q);
         shared.drained.notify_all();
+    }
+}
+
+thread_local! {
+    /// Set inside [`io_worker_loop`]: a pooled job that submits to the
+    /// pool again must execute inline rather than enqueue-and-wait —
+    /// if every worker blocked on a sibling slot at once, nothing
+    /// would be left to drain the queue.
+    static IS_IO_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// One queued I/O submission (the closure owns everything it needs and
+/// delivers its result through a completion slot).
+type IoJob = Box<dyn FnOnce() + Send>;
+
+/// Queue state guarded by the I/O pool mutex.
+struct IoQueue {
+    jobs: VecDeque<IoJob>,
+    /// Submissions currently executing — pooled *and* inline (see
+    /// [`IoPool::run`]) — so [`IoPool::pending`] and [`IoPool::flush`]
+    /// cover serial (`io_workers=1`) operation too.
+    running: usize,
+    shutdown: bool,
+}
+
+/// State shared between submitters and the I/O workers.
+struct IoShared {
+    queue: Mutex<IoQueue>,
+    /// Signaled when work arrives or shutdown flips.
+    work: Condvar,
+    /// Signaled when a submission completes (flush waiters re-check).
+    drained: Condvar,
+}
+
+/// RAII decrement of [`IoQueue::running`] + drained notify — held
+/// across the job body so the gauge and the flush barrier stay honest
+/// even if the job panics.
+struct RunningGuard<'a>(&'a IoShared);
+
+impl Drop for RunningGuard<'_> {
+    fn drop(&mut self) {
+        let mut q = self.0.queue.lock().unwrap();
+        q.running -= 1;
+        drop(q);
+        self.0.drained.notify_all();
+    }
+}
+
+/// The bounded I/O submission/completion worker pool
+/// ([`LiveTuning::io_workers`]). Background disk work — dirty-entry
+/// spills, optimistic replica copies, prefetch promote reads, churn
+/// restore copies — drains through here instead of running on whatever
+/// thread happened to trigger it, so independent disk operations can
+/// overlap when the pool has more than one worker.
+///
+/// Submission is synchronous for the submitter ([`IoPool::run`]
+/// returns the job's result), which bounds the pool by construction:
+/// there can never be more queued jobs than blocked submitting
+/// threads. With `io_workers == 1` no worker threads are spawned at
+/// all and every submission runs inline on the submitting thread —
+/// byte-for-byte the pre-pool serial data path. [`IoPool::run_batch`]
+/// is the fan-out form: it enqueues a set of independent submissions
+/// at once (a multi-target replica copy) and waits for all of them.
+struct IoPool {
+    shared: Arc<IoShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl IoPool {
+    fn new(workers: usize) -> Self {
+        let shared = Arc::new(IoShared {
+            queue: Mutex::new(IoQueue {
+                jobs: VecDeque::new(),
+                running: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            drained: Condvar::new(),
+        });
+        // One worker means serial: run inline on the submitter and
+        // spawn nothing, reproducing the pre-pool behavior exactly.
+        let handles = if workers.max(1) < 2 {
+            Vec::new()
+        } else {
+            (0..workers)
+                .map(|i| {
+                    let shared = Arc::clone(&shared);
+                    std::thread::Builder::new()
+                        .name(format!("woss-io-{i}"))
+                        .spawn(move || io_worker_loop(&shared))
+                        .expect("spawn io worker")
+                })
+                .collect()
+        };
+        IoPool {
+            shared,
+            workers: handles,
+        }
+    }
+
+    /// Execute `f` through the pool and return its result. Inline on
+    /// the submitting thread when the pool is serial (no workers) or
+    /// when the submitter *is* a pool worker (a nested submission must
+    /// not wait on a sibling slot); otherwise enqueued and awaited.
+    /// A panic inside `f` resurfaces on the submitting thread either
+    /// way.
+    fn run<R: Send + 'static>(&self, f: impl FnOnce() -> R + Send + 'static) -> R {
+        if self.workers.is_empty() || IS_IO_WORKER.with(std::cell::Cell::get) {
+            {
+                let mut q = self.shared.queue.lock().unwrap();
+                q.running += 1;
+            }
+            let _guard = RunningGuard(&self.shared);
+            return f();
+        }
+        let mut results = self.run_batch(vec![f]);
+        results.pop().expect("one submission, one result")
+    }
+
+    /// Enqueue a set of independent submissions at once and wait for
+    /// all of them, returning their results in order. This is where
+    /// `io_workers >= 2` buys real overlap: a replica fan-out's puts
+    /// land concurrently instead of one after another.
+    fn run_batch<R, F>(&self, fs: Vec<F>) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        if self.workers.is_empty() || IS_IO_WORKER.with(std::cell::Cell::get) {
+            return fs
+                .into_iter()
+                .map(|f| {
+                    {
+                        let mut q = self.shared.queue.lock().unwrap();
+                        q.running += 1;
+                    }
+                    let _guard = RunningGuard(&self.shared);
+                    f()
+                })
+                .collect();
+        }
+        type Slot<R> = Arc<(Mutex<Option<std::thread::Result<R>>>, Condvar)>;
+        let slots: Vec<Slot<R>> = (0..fs.len())
+            .map(|_| Arc::new((Mutex::new(None), Condvar::new())))
+            .collect();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for (f, slot) in fs.into_iter().zip(&slots) {
+                let slot = Arc::clone(slot);
+                q.jobs.push_back(Box::new(move || {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                    let (lock, cv) = &*slot;
+                    *lock.lock().unwrap() = Some(r);
+                    cv.notify_all();
+                }));
+            }
+        }
+        self.shared.work.notify_all();
+        slots
+            .into_iter()
+            .map(|slot| {
+                let (lock, cv) = &*slot;
+                let mut held = lock.lock().unwrap();
+                loop {
+                    if let Some(r) = held.take() {
+                        break match r {
+                            Ok(r) => r,
+                            Err(panic) => std::panic::resume_unwind(panic),
+                        };
+                    }
+                    held = cv.wait(held).unwrap();
+                }
+            })
+            .collect()
+    }
+
+    /// Queued + executing submissions — the `io_queue=` gauge
+    /// `system_status` reports.
+    fn pending(&self) -> usize {
+        let q = self.shared.queue.lock().unwrap();
+        q.jobs.len() + q.running
+    }
+
+    /// Block until every queued and executing submission completes.
+    fn flush(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !(q.jobs.is_empty() && q.running == 0) {
+            q = self.shared.drained.wait(q).unwrap();
+        }
+    }
+}
+
+impl Drop for IoPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// I/O worker body: drain jobs (even after shutdown flips — every
+/// queued job has a submitter blocked on its completion slot), then
+/// exit.
+fn io_worker_loop(shared: &IoShared) {
+    IS_IO_WORKER.with(|w| w.set(true));
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    q.running += 1;
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        let _guard = RunningGuard(shared);
+        job();
     }
 }
 
@@ -1085,6 +1523,48 @@ fn wrap_with_faults(
         .collect()
 }
 
+/// A locked namespace stripe plus the [`lockscope`] token that lets
+/// the debug-only guard catch backend I/O issued while the lock is
+/// held (see [`CacheGuard`]). Field order matters: the mutex guard
+/// drops before the token.
+struct StripeGuard<'a> {
+    stripe: std::sync::MutexGuard<'a, NamespaceShard>,
+    _token: lockscope::Token,
+}
+
+impl std::ops::Deref for StripeGuard<'_> {
+    type Target = NamespaceShard;
+    fn deref(&self) -> &NamespaceShard {
+        &self.stripe
+    }
+}
+
+impl std::ops::DerefMut for StripeGuard<'_> {
+    fn deref_mut(&mut self) -> &mut NamespaceShard {
+        &mut self.stripe
+    }
+}
+
+/// The placement core, locked and lock-scope-tracked (see
+/// [`StripeGuard`]).
+struct CoreGuard<'a> {
+    core: std::sync::MutexGuard<'a, PlacementCore>,
+    _token: lockscope::Token,
+}
+
+impl std::ops::Deref for CoreGuard<'_> {
+    type Target = PlacementCore;
+    fn deref(&self) -> &PlacementCore {
+        &self.core
+    }
+}
+
+impl std::ops::DerefMut for CoreGuard<'_> {
+    fn deref_mut(&mut self) -> &mut PlacementCore {
+        &mut self.core
+    }
+}
+
 /// The live object store.
 pub struct LiveStore {
     registry: Registry,
@@ -1104,6 +1584,16 @@ pub struct LiveStore {
     lifetime_on: bool,
     next_id: AtomicU64,
     repl: ReplPool,
+    /// The bounded I/O submission/completion pool
+    /// ([`LiveTuning::io_workers`]) shared with the cache tier and the
+    /// replication workers. Declared after `repl`: the replication
+    /// workers join (and release their pool handle) before the pool's
+    /// own drop joins the I/O workers.
+    io: Arc<IoPool>,
+    /// Foreground per-chunk put latencies, µs ([`CacheStats::put_p50_us`]).
+    put_samples: Mutex<Vec<f64>>,
+    /// Foreground per-chunk read latencies, µs ([`CacheStats::get_p50_us`]).
+    get_samples: Mutex<Vec<f64>>,
     /// Bytes written through [`LiveStore::write_file`] (lock-free counter).
     pub bytes_written: AtomicU64,
     /// Bytes returned by [`LiveStore::read_file`].
@@ -1263,12 +1753,14 @@ impl LiveStore {
         };
         let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(backends);
         let n_stripes = tuning.stripes.max(1);
+        let io = Arc::new(IoPool::new(tuning.io_workers));
         let cache = tuning.cache_bytes.map(|budget| {
             Arc::new(CacheTier::new(
                 n_nodes,
                 budget,
                 tuning.cache_policy,
                 Some(Arc::clone(&stores)),
+                Arc::clone(&io),
             ))
         });
         Ok(LiveStore {
@@ -1292,7 +1784,10 @@ impl LiveStore {
             cache: cache.clone(),
             lifetime_on: tuning.lifetime,
             next_id: AtomicU64::new(1),
-            repl: ReplPool::new(stores, cache, tuning.repl_workers),
+            repl: ReplPool::new(stores, cache, Arc::clone(&io), tuning.repl_workers),
+            io,
+            put_samples: Mutex::new(Vec::new()),
+            get_samples: Mutex::new(Vec::new()),
             bytes_written: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
             local_reads: AtomicU64::new(0),
@@ -1549,12 +2044,14 @@ impl LiveStore {
         };
         let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(boxed);
         let n_stripes = tuning.stripes.max(1);
+        let io = Arc::new(IoPool::new(tuning.io_workers));
         let cache = tuning.cache_bytes.map(|budget| {
             Arc::new(CacheTier::new(
                 n_nodes,
                 budget,
                 tuning.cache_policy,
                 Some(Arc::clone(&stores)),
+                Arc::clone(&io),
             ))
         });
         let mut nodes: Vec<NodeState> = (0..n_nodes)
@@ -1593,7 +2090,10 @@ impl LiveStore {
             cache: cache.clone(),
             lifetime_on: tuning.lifetime,
             next_id: AtomicU64::new(max_id + 1),
-            repl: ReplPool::new(stores, cache, tuning.repl_workers),
+            repl: ReplPool::new(stores, cache, Arc::clone(&io), tuning.repl_workers),
+            io,
+            put_samples: Mutex::new(Vec::new()),
+            get_samples: Mutex::new(Vec::new()),
             bytes_written: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
             local_reads: AtomicU64::new(0),
@@ -1637,7 +2137,7 @@ impl LiveStore {
         // Writers simply block on their stripe until shutdown is done;
         // the marker flag is set before the locks drop, so the first
         // post-shutdown mutation invalidates the marker.
-        let guards: Vec<_> = self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        let guards: Vec<_> = (0..self.stripes.len()).map(|k| self.lock_stripe(k)).collect();
         for (k, stripe) in guards.iter().enumerate() {
             let mut snap = String::new();
             for (path, meta) in &stripe.files {
@@ -1667,7 +2167,7 @@ impl LiveStore {
     /// Did `path` survive a restart into this store instance? (The
     /// per-file half of the `recovered=` bottom-up field.)
     pub fn was_recovered(&self, path: &str) -> bool {
-        let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+        let stripe = self.lock_stripe(self.stripe_of(path));
         stripe
             .files
             .get(path)
@@ -1779,7 +2279,7 @@ impl LiveStore {
     /// that skipped the spill) count as present on their holder.
     pub fn audit(&self) -> StoreAudit {
         self.flush_replication();
-        let guards: Vec<_> = self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        let guards: Vec<_> = (0..self.stripes.len()).map(|k| self.lock_stripe(k)).collect();
         let n = self.stores.len();
         let mut files = 0usize;
         let mut replicas_claimed = 0usize;
@@ -1799,7 +2299,7 @@ impl LiveStore {
             }
         }
         let accounted_bytes: Vec<u64> = {
-            let core = self.core.lock().unwrap();
+            let core = self.lock_core();
             core.nodes.iter().map(|n| n.used).collect()
         };
         let mut backend_bytes = vec![0u64; n];
@@ -1840,6 +2340,29 @@ impl LiveStore {
         shard_for_path(path, self.stripes.len())
     }
 
+    /// Lock namespace stripe `idx`, registering the hold with the
+    /// debug lock-scope guard — every stripe acquisition goes through
+    /// here, so any code path that reaches backend chunk I/O with a
+    /// namespace lock held trips [`lockscope::assert_unlocked`] in
+    /// debug builds instead of shipping the stall.
+    fn lock_stripe(&self, idx: usize) -> StripeGuard<'_> {
+        let token = lockscope::token();
+        StripeGuard {
+            stripe: self.stripes[idx].lock().unwrap(),
+            _token: token,
+        }
+    }
+
+    /// Lock the placement core with lock-scope tracking (see
+    /// [`Self::lock_stripe`]).
+    fn lock_core(&self) -> CoreGuard<'_> {
+        let token = lockscope::token();
+        CoreGuard {
+            core: self.core.lock().unwrap(),
+            _token: token,
+        }
+    }
+
     /// Failure injection: mark a node dead. Chunks it held are only
     /// recoverable through replicas on surviving nodes — the
     /// reliability rationale behind the lazy-chained replication policy.
@@ -1878,15 +2401,15 @@ impl LiveStore {
     pub fn fail_node(&self, node: NodeId) -> usize {
         self.kill_node(node);
         {
-            let mut core = self.core.lock().unwrap();
+            let mut core = self.lock_core();
             core.nodes[node.0].capacity = 0;
         }
         let mut jobs: Vec<ReplJob> = Vec::new();
-        for stripe in &self.stripes {
-            let mut stripe = stripe.lock().unwrap();
+        for k in 0..self.stripes.len() {
+            let mut stripe = self.lock_stripe(k);
             // Stripe → core is the store-wide lock order (write_file's
             // placement path); `dead` nests innermost everywhere.
-            let mut core = self.core.lock().unwrap();
+            let mut core = self.lock_core();
             let dead = self.dead.read().unwrap();
             for meta in stripe.files.values_mut() {
                 let file = meta.id;
@@ -1959,29 +2482,38 @@ impl LiveStore {
         // Freeze the namespace so no create can claim the node (its
         // capacity is still zero, but collocation anchors bypass
         // capacity) while the stale sweep decides what to unlink.
-        let guards: Vec<_> = self.stripes.iter().map(|s| s.lock().unwrap()).collect();
-        let mut claimed: HashSet<ChunkKey> = HashSet::new();
-        for stripe in &guards {
-            for meta in stripe.files.values() {
-                for (idx, chunk) in meta.chunks.iter().enumerate() {
-                    if chunk.replicas.contains(&node) {
-                        claimed.insert((meta.id, idx as u64));
+        // Only the *decision* runs under the freeze; the unlinks are
+        // disk I/O and run after the guards drop. That is safe: a
+        // stale key can never be re-claimed in the gap — FileIds are
+        // never reused, and a file created after the freeze places
+        // fresh keys, not these.
+        let stale: Vec<ChunkKey> = {
+            let guards: Vec<_> = (0..self.stripes.len()).map(|k| self.lock_stripe(k)).collect();
+            let mut claimed: HashSet<ChunkKey> = HashSet::new();
+            for stripe in &guards {
+                for meta in stripe.files.values() {
+                    for (idx, chunk) in meta.chunks.iter().enumerate() {
+                        if chunk.replicas.contains(&node) {
+                            claimed.insert((meta.id, idx as u64));
+                        }
                     }
                 }
             }
-        }
-        let mut swept = 0usize;
-        for key in self.stores[node.0].chunk_keys() {
-            if !claimed.contains(&key) {
-                self.stores[node.0].delete(key);
-                swept += 1;
+            let stale = self.stores[node.0]
+                .chunk_keys()
+                .into_iter()
+                .filter(|key| !claimed.contains(key))
+                .collect();
+            {
+                let mut core = self.lock_core();
+                core.nodes[node.0].capacity = self.node_capacity;
             }
+            stale
+        };
+        let swept = stale.len();
+        for key in stale {
+            self.stores[node.0].delete(key);
         }
-        {
-            let mut core = self.core.lock().unwrap();
-            core.nodes[node.0].capacity = self.node_capacity;
-        }
-        drop(guards);
         self.revive_node(node);
         swept
     }
@@ -2012,12 +2544,24 @@ impl LiveStore {
         self.faults.clone()
     }
 
-    /// Barrier: block until every background replica copy has landed.
-    /// After this returns (and absent concurrent writes), every file
-    /// holds its full replica count — the determinism hook tests and
-    /// shutdown paths rely on.
+    /// Barrier over **both** background pools: block until every
+    /// queued replication job has landed, then until every I/O-pool
+    /// submission (spills, copy/restore puts, promote reads) has
+    /// completed. Replication first — its workers are the ones that
+    /// submit to the I/O pool, so draining them before the I/O flush
+    /// means no new submissions arrive behind the barrier. After this
+    /// returns (and absent concurrent writes), every file holds its
+    /// full replica count — the determinism hook tests and shutdown
+    /// paths rely on.
     pub fn flush_replication(&self) {
         self.repl.flush();
+        self.io.flush();
+    }
+
+    /// Queued + executing submissions on the I/O pool right now — the
+    /// ` io_queue=<depth>` gauge `system_status` serves bottom-up.
+    pub fn io_queue_depth(&self) -> usize {
+        self.io.pending()
     }
 
     /// Replica chunk copies completed by the background pool so far.
@@ -2035,7 +2579,7 @@ impl LiveStore {
     /// is still draining; always `true` after [`Self::flush_replication`].)
     pub fn fully_replicated(&self, path: &str) -> Result<bool, StorageError> {
         let meta = {
-            let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            let stripe = self.lock_stripe(self.stripe_of(path));
             stripe
                 .files
                 .get(path)
@@ -2047,10 +2591,13 @@ impl LiveStore {
                 let key = (meta.id, idx as u64);
                 // A dirty cache entry is the holder's copy for a
                 // scratch chunk that skipped the spill — it counts.
-                // Cache first: the evictor holds the cache mutex across
-                // a dirty write-back, so a cache miss means any spill
-                // has already landed in the backend (backend-first
-                // would transiently report false mid-eviction).
+                // Cache first: a dirty victim stays resident in
+                // `Spilling` state until its write-back lands (the
+                // spiller drops the mutex across the disk write but
+                // only removes the entry afterwards), so a cache miss
+                // means any spill has already landed in the backend
+                // (backend-first would transiently report false
+                // mid-eviction).
                 let present = self
                     .cache
                     .as_ref()
@@ -2069,7 +2616,7 @@ impl LiveStore {
     pub fn set_xattr(&self, path: &str, key: &str, value: &str) {
         self.setattr_ops.fetch_add(1, Ordering::Relaxed);
         {
-            let mut stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            let mut stripe = self.lock_stripe(self.stripe_of(path));
             if let Some(meta) = stripe.files.get_mut(path) {
                 meta.tags.set(key, value);
             } else {
@@ -2107,10 +2654,14 @@ impl LiveStore {
     /// how much of the namespace outlived a restart without walking
     /// it, and an ` under_replicated=<n>` gauge — chunks still waiting
     /// on churn re-replication ([`LiveStore::fail_node`]); `0` means
-    /// every surviving file holds its full replica count again.
+    /// every surviving file holds its full replica count again. A
+    /// third gauge, ` io_queue=<d>`, reports submissions queued or
+    /// executing on the I/O pool right now
+    /// ([`LiveStore::io_queue_depth`]) — `0` means the disk data path
+    /// is idle.
     pub fn get_xattr(&self, path: &str, key: &str) -> Option<String> {
         self.getattr_ops.fetch_add(1, Ordering::Relaxed);
-        let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+        let stripe = self.lock_stripe(self.stripe_of(path));
         let meta = stripe.files.get(path)?;
         if self.registry.hints_enabled() && key == crate::hints::CACHE_STATE_ATTR {
             let (chunks, bytes, pinned) = match &self.cache {
@@ -2124,13 +2675,14 @@ impl LiveStore {
             ));
         }
         if self.registry.serves_attr(key) {
-            let core = self.core.lock().unwrap();
+            let core = self.lock_core();
             if let Some(value) = self.registry.get_system_attr(key, meta, &core.nodes) {
                 if key == crate::hints::SYSTEM_STATUS_ATTR {
                     return Some(format!(
-                        "{value} recovered={} under_replicated={}",
+                        "{value} recovered={} under_replicated={} io_queue={}",
                         self.recovered_ids.read().unwrap().len(),
-                        self.under_replicated()
+                        self.under_replicated(),
+                        self.io_queue_depth()
                     ));
                 }
                 return Some(value);
@@ -2144,7 +2696,7 @@ impl LiveStore {
         if !self.registry.hints_enabled() {
             return Vec::new();
         }
-        let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+        let stripe = self.lock_stripe(self.stripe_of(path));
         stripe
             .files
             .get(path)
@@ -2154,7 +2706,7 @@ impl LiveStore {
 
     /// Stored size of a file.
     pub fn file_size(&self, path: &str) -> Option<u64> {
-        let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+        let stripe = self.lock_stripe(self.stripe_of(path));
         stripe.files.get(path).map(|m| m.size)
     }
 
@@ -2170,7 +2722,7 @@ impl LiveStore {
         tags: &TagSet,
     ) -> Result<(), StorageError> {
         let stripe_idx = self.stripe_of(path);
-        let mut stripe = self.stripes[stripe_idx].lock().unwrap();
+        let mut stripe = self.lock_stripe(stripe_idx);
         if stripe.files.contains_key(path) {
             return Err(StorageError::AlreadyExists(path.to_string()));
         }
@@ -2188,7 +2740,7 @@ impl LiveStore {
         // core (node usage + cursors); the stripe keeps its own
         // round-robin cursor, collocation anchors stay global.
         let chunks = {
-            let mut core = self.core.lock().unwrap();
+            let mut core = self.lock_core();
             let PlacementCore { nodes, placement } = &mut *core;
             let registry = &self.registry;
             placement.with_view(stripe_idx, |state| {
@@ -2292,6 +2844,7 @@ impl LiveStore {
             let key = (meta.id, idx);
             let primary = chunk.primary();
             let mut cached_only = false;
+            let started = std::time::Instant::now();
             if skip_spill {
                 if let Some(cache) = &self.cache {
                     cached_only = cache.insert_dirty(
@@ -2308,6 +2861,12 @@ impl LiveStore {
                     break 'data;
                 }
             }
+            // Per-chunk primary-landing latency (µs) — the p50/p95/p99
+            // `put_*` percentiles [`LiveStore::cache_stats`] reports.
+            self.put_samples
+                .lock()
+                .unwrap()
+                .push(started.elapsed().as_secs_f64() * 1e6);
             let replicas = &chunk.replicas[1..];
             if replicas.is_empty() {
                 continue;
@@ -2338,7 +2897,7 @@ impl LiveStore {
             // no partial chunks. If a racing delete already removed the
             // entry it also swept, so only the owner frees capacity.
             let ours = {
-                let mut stripe = self.stripes[stripe_idx].lock().unwrap();
+                let mut stripe = self.lock_stripe(stripe_idx);
                 match stripe.files.get(path) {
                     Some(m) if m.id == meta.id => {
                         stripe.files.remove(path);
@@ -2360,7 +2919,7 @@ impl LiveStore {
         // race cannot orphan chunks (an id check, so a file re-created
         // at this path after the delete is left untouched).
         let raced_delete = {
-            let stripe = self.stripes[stripe_idx].lock().unwrap();
+            let stripe = self.lock_stripe(stripe_idx);
             stripe.files.get(path).map(|m| m.id) != Some(meta.id)
         };
         if raced_delete {
@@ -2396,7 +2955,7 @@ impl LiveStore {
     /// file.
     pub fn read_file(&self, client: NodeId, path: &str) -> Result<Vec<u8>, StorageError> {
         let meta = {
-            let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            let stripe = self.lock_stripe(self.stripe_of(path));
             stripe
                 .files
                 .get(path)
@@ -2407,6 +2966,7 @@ impl LiveStore {
         let mut out = Vec::with_capacity(meta.size as usize);
         for (idx, chunk) in meta.chunks.iter().enumerate() {
             let key = (meta.id, idx as u64);
+            let started = std::time::Instant::now();
             // Fail over to a live replica; error only when every holder
             // of the chunk is down.
             let mut live: Vec<NodeId> = chunk
@@ -2451,15 +3011,17 @@ impl LiveStore {
             // 3. Any live holder that materialized the chunk — its
             //    cache first (a dirty cache-only chunk exists nowhere
             //    else, and a resident chunk served from cache skips the
-            //    disk), then its backend. This order is race-free: the
-            //    evictor holds the node's cache mutex across the dirty
-            //    write-back, so a cache miss means any spill has
-            //    already landed in the backend. (Backend-first would
-            //    open a window where an eviction lands between the two
-            //    probes and both miss.) Fill the reader's cache on the
-            //    way so the next read is local — unless the reader is
-            //    itself a (still-draining) holder, whose authoritative
-            //    copy is about to arrive anyway.
+            //    disk), then its backend. This order is race-free even
+            //    though the spiller drops the cache mutex across the
+            //    disk write: a dirty victim stays resident (and
+            //    readable) in `Spilling` state until its write-back
+            //    lands, and is only removed afterwards — so a cache
+            //    miss means any spill has already reached the backend.
+            //    (Backend-first would open a window where an eviction
+            //    lands between the two probes and both miss.) Fill the
+            //    reader's cache on the way so the next read is local —
+            //    unless the reader is itself a (still-draining) holder,
+            //    whose authoritative copy is about to arrive anyway.
             if !served {
                 for source in live.iter().copied().filter(|&n| n != client) {
                     let got = self
@@ -2482,8 +3044,8 @@ impl LiveStore {
             //    (cache-only) chunk can be spilled by a concurrent
             //    eviction between step 1 (backend miss, not yet
             //    spilled) and step 2 (cache miss, already evicted) —
-            //    the write-back has landed by the time the cache lock
-            //    was released, so the bytes are here now.
+            //    the entry is only removed once its write-back has
+            //    landed, so the bytes are here now.
             if !served && live.contains(&client) {
                 if let Some(bytes) = self.backend_read(client, key) {
                     out.extend_from_slice(&bytes);
@@ -2496,6 +3058,12 @@ impl LiveStore {
                     "missing chunk {idx} of {path}"
                 )));
             }
+            // Per-chunk serve latency (µs) — the p50/p95/p99 `get_*`
+            // percentiles [`LiveStore::cache_stats`] reports.
+            self.get_samples
+                .lock()
+                .unwrap()
+                .push(started.elapsed().as_secs_f64() * 1e6);
         }
         self.bytes_read
             .fetch_add(out.len() as u64, Ordering::Relaxed);
@@ -2559,24 +3127,52 @@ impl LiveStore {
     }
 
     /// Cache-fill with the class derived from the file's *current*
-    /// metadata, atomically with respect to the consumer countdown
-    /// (both run under the namespace stripe lock). Deriving the class
-    /// from a metadata clone taken at read start would race the
-    /// fan-out countdown: a `Pinned` entry inserted after the last
-    /// consumer's `unpin_file` pass would never be unpinned. A file
-    /// that was reclaimed, deleted, or re-created mid-read is simply
-    /// not cached.
+    /// metadata. The admission itself runs with **no stripe lock
+    /// held** — it can spill a dirty victim to disk, and no store lock
+    /// may be held across backend I/O — so instead of deriving the
+    /// class atomically with the consumer countdown (the old
+    /// stripe-lock-across-insert design), this derives it just before
+    /// the insert and re-validates just after, converging on whatever
+    /// raced in between: a file deleted or re-created mid-insert has
+    /// its entry purged again, and a `Pinned` class that landed after
+    /// the last consumer's `unpin_file` pass is demoted so the pin
+    /// cannot outlive the fan-out.
     fn cache_insert_current(&self, client: NodeId, path: &str, key: (FileId, u64), bytes: Vec<u8>) {
         let Some(cache) = &self.cache else { return };
-        let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
-        let Some(meta) = stripe.files.get(path) else {
-            return;
+        let class = {
+            let stripe = self.lock_stripe(self.stripe_of(path));
+            let Some(meta) = stripe.files.get(path) else {
+                return;
+            };
+            if meta.id != key.0 {
+                return;
+            }
+            self.cache_class(meta)
         };
-        if meta.id != key.0 {
+        if !cache.insert(client, key, bytes, class) {
             return;
         }
-        let class = self.cache_class(meta);
-        cache.insert(client, key, bytes, class);
+        enum Stale {
+            Purge,
+            Unpin,
+        }
+        let stale = {
+            let stripe = self.lock_stripe(self.stripe_of(path));
+            match stripe.files.get(path) {
+                Some(meta) if meta.id == key.0 => (class == CacheClass::Pinned
+                    && self.cache_class(meta) != CacheClass::Pinned)
+                    .then_some(Stale::Unpin),
+                _ => Some(Stale::Purge),
+            }
+        };
+        match stale {
+            // The file died (or was re-created) while we inserted: the
+            // sweep's purge ran before our entry existed, so remove it
+            // ourselves. The entry is clean — nothing else to undo.
+            Some(Stale::Purge) => cache.purge_file(key.0),
+            Some(Stale::Unpin) => cache.unpin_file(key.0),
+            None => {}
+        }
     }
 
     /// One declared consumer read of `path` completed. Decrements the
@@ -2591,7 +3187,7 @@ impl LiveStore {
             Pending,
         }
         let outcome = {
-            let mut stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            let mut stripe = self.lock_stripe(self.stripe_of(path));
             let info = match stripe.files.get(path) {
                 // The id check skips files re-created at this path
                 // after a delete raced the read.
@@ -2652,7 +3248,7 @@ impl LiveStore {
     /// removed the namespace entry.
     fn sweep_file(&self, meta: &FileMeta) {
         {
-            let mut core = self.core.lock().unwrap();
+            let mut core = self.lock_core();
             for (idx, chunk) in meta.chunks.iter().enumerate() {
                 let bytes = meta.chunk_bytes(idx as u64);
                 for holder in &chunk.replicas {
@@ -2674,9 +3270,11 @@ impl LiveStore {
     /// The cache purge MUST precede the backend deletes: a concurrent
     /// eviction could otherwise write a dirty (never-spilled) chunk of
     /// this dying file back to the backend after its delete ran,
-    /// orphaning an on-disk file forever. With the entries gone first
-    /// (the per-node cache mutex serializes in-flight spills against
-    /// the purge), nothing can re-materialize a chunk, and the backend
+    /// orphaning an on-disk file forever. With the entries gone first,
+    /// nothing can re-materialize a chunk through the cache, and an
+    /// in-flight spill whose `Spilling` entry this purge removed
+    /// detects the removal when it completes and deletes its own
+    /// backend copy (see `CacheTier::insert_entry`) — so the backend
     /// deletes below are final. Dirty entries are simply dropped: the
     /// file is dead, its bytes owe nothing to the disk.
     fn sweep_bytes(&self, meta: &FileMeta) {
@@ -2727,7 +3325,7 @@ impl LiveStore {
             return Ok(0);
         }
         let meta = {
-            let stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            let stripe = self.lock_stripe(self.stripe_of(path));
             stripe
                 .files
                 .get(path)
@@ -2785,6 +3383,10 @@ impl LiveStore {
         stats.files_reclaimed = self.files_reclaimed.load(Ordering::Relaxed);
         stats.bytes_reclaimed = self.bytes_reclaimed.load(Ordering::Relaxed);
         stats.read_errors = self.stores.iter().map(|s| s.read_errors()).sum();
+        (stats.put_p50_us, stats.put_p95_us, stats.put_p99_us) =
+            latency_percentiles(&self.put_samples);
+        (stats.get_p50_us, stats.get_p95_us, stats.get_p99_us) =
+            latency_percentiles(&self.get_samples);
         stats
     }
 
@@ -2794,7 +3396,7 @@ impl LiveStore {
     /// swept chunks.
     pub fn delete(&self, path: &str) -> Result<(), StorageError> {
         let meta = {
-            let mut stripe = self.stripes[self.stripe_of(path)].lock().unwrap();
+            let mut stripe = self.lock_stripe(self.stripe_of(path));
             stripe
                 .files
                 .remove(path)
@@ -3059,7 +3661,7 @@ mod tests {
 
     #[test]
     fn cache_tier_budget_and_eviction_classes() {
-        let tier = CacheTier::new(2, 1000, CachePolicy::HintAware, None);
+        let tier = CacheTier::new(2, 1000, CachePolicy::HintAware, None, Arc::new(IoPool::new(1)));
         let f = FileId(1);
         assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Durable));
         assert!(tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Scratch));
@@ -3071,12 +3673,12 @@ mod tests {
         assert!(!tier.insert(NodeId(0), (f, 3), vec![0u8; 2000], CacheClass::Durable));
         // Pinned entries never evict under the hint-aware policy: the
         // cache declines the newcomer instead.
-        let tier = CacheTier::new(1, 500, CachePolicy::HintAware, None);
+        let tier = CacheTier::new(1, 500, CachePolicy::HintAware, None, Arc::new(IoPool::new(1)));
         assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Pinned));
         assert!(!tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Durable));
         assert!(tier.get(NodeId(0), (f, 0)).is_some(), "pin held");
         // Plain LRU is hint-blind: the same pressure evicts the pin.
-        let tier = CacheTier::new(1, 500, CachePolicy::Lru, None);
+        let tier = CacheTier::new(1, 500, CachePolicy::Lru, None, Arc::new(IoPool::new(1)));
         assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Pinned));
         assert!(tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Durable));
         assert!(tier.get(NodeId(0), (f, 0)).is_none(), "LRU ignores pins");
@@ -3088,7 +3690,13 @@ mod tests {
         // in the node's backend first.
         let backends: Arc<Vec<Box<dyn ChunkBackend>>> =
             Arc::new(vec![Box::new(MemoryBackend::default())]);
-        let tier = CacheTier::new(1, 1000, CachePolicy::HintAware, Some(Arc::clone(&backends)));
+        let tier = CacheTier::new(
+            1,
+            1000,
+            CachePolicy::HintAware,
+            Some(Arc::clone(&backends)),
+            Arc::new(IoPool::new(1)),
+        );
         let f = FileId(7);
         assert!(tier.insert_dirty(NodeId(0), (f, 0), vec![1u8; 600], CacheClass::Scratch));
         assert!(tier.contains_dirty(NodeId(0), (f, 0)));
@@ -3104,7 +3712,7 @@ mod tests {
 
         // Without a spill target the tier refuses to evict a dirty
         // entry — the newcomer is declined, the dirty bytes survive.
-        let tier = CacheTier::new(1, 1000, CachePolicy::HintAware, None);
+        let tier = CacheTier::new(1, 1000, CachePolicy::HintAware, None, Arc::new(IoPool::new(1)));
         assert!(tier.insert_dirty(NodeId(0), (f, 0), vec![3u8; 600], CacheClass::Scratch));
         assert!(!tier.insert(NodeId(0), (f, 1), vec![4u8; 600], CacheClass::Durable));
         assert_eq!(tier.peek(NodeId(0), (f, 0)), Some(vec![3u8; 600]));

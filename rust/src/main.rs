@@ -8,7 +8,8 @@
 //! * `live` — run a workload on the live engine (real bytes, real PJRT
 //!   kernels): `--workload pipeline|montage`, `--nodes`, `--workers`,
 //!   `--stripes` (manager lock stripes), `--repl-workers` (background
-//!   replication threads), `--cache-mb` (per-node hot-chunk cache
+//!   replication threads), `--io-workers` (disk I/O pool threads;
+//!   1 = serial data path), `--cache-mb` (per-node hot-chunk cache
 //!   budget; 0 = off), `--cache-policy lru|hint` (eviction policy),
 //!   `--lifetime` (tag + enforce scratch reclamation), `--backend
 //!   mem|disk` (chunk backend; `disk` spills chunks to files),
@@ -24,8 +25,9 @@
 //!   injection + live node churn) against the live store: `--list`
 //!   prints the scenario names, `--seed N` replays a schedule,
 //!   `--backend mem|disk`, `--data-dir PATH` (disk root), `--quick`
-//!   (smoke sizes), `--json out.json` (the `woss-scenarios-v1`
-//!   document `BENCH_scenarios.json` tracks).
+//!   (smoke sizes), `--io-workers N` (disk I/O pool threads),
+//!   `--json out.json` (the `woss-scenarios-v1` document
+//!   `BENCH_scenarios.json` tracks).
 //! * `bench-check` — validate tracked bench results:
 //!   `--scenarios BENCH_scenarios.json --live BENCH_live.json`.
 //! * `list` — experiment ids.
@@ -80,6 +82,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("  woss live --workload montage --nodes 8 --workers 8 --stripes 8 --repl-workers 2");
             println!("  woss live --workload pipeline --cache-mb 64 --cache-policy hint --lifetime");
             println!("  woss live --workload pipeline --backend disk --data-dir /tmp/woss --cache-mb 64");
+            println!("  woss live --workload montage --backend disk --io-workers 4");
             println!("  woss live --reopen --data-dir /tmp/woss    # recover a store left behind");
             println!("  woss scenario --list                       # hostile-scenario names");
             println!("  woss scenario all --seed 7 --json BENCH_scenarios.json");
@@ -136,6 +139,7 @@ fn cmd_live(args: &Args) -> Result<()> {
     let defaults = LiveTuning::default();
     let stripes = args.get_parse("stripes", defaults.stripes);
     let repl_workers = args.get_parse("repl-workers", defaults.repl_workers);
+    let io_workers = args.get_parse("io-workers", defaults.io_workers);
     let cache_mb = args.get_parse("cache-mb", 0u64);
     let cache_policy = match args.get_or("cache-policy", "hint") {
         "lru" => CachePolicy::Lru,
@@ -181,6 +185,7 @@ fn cmd_live(args: &Args) -> Result<()> {
         backend,
         data_dir,
         fault: None,
+        io_workers,
     };
     let registry = if hints {
         Registry::woss()
@@ -214,8 +219,20 @@ fn cmd_live(args: &Args) -> Result<()> {
         rep.remote_reads
     );
     println!(
-        "  replication: {} replica copies drained in the background ({} stripes, {} repl workers)",
-        rep.bg_replicas, stripes, repl_workers
+        "  replication: {} replica copies drained in the background ({} stripes, {} repl workers, {} io workers)",
+        rep.bg_replicas, stripes, repl_workers, io_workers
+    );
+    println!(
+        "  latency µs: put p50/p95/p99 {:.0}/{:.0}/{:.0}, get {:.0}/{:.0}/{:.0}, spill {:.0}/{:.0}/{:.0}",
+        rep.put_p50_us,
+        rep.put_p95_us,
+        rep.put_p99_us,
+        rep.get_p50_us,
+        rep.get_p95_us,
+        rep.get_p99_us,
+        rep.spill_p50_us,
+        rep.spill_p95_us,
+        rep.spill_p99_us
     );
     match &store_data_dir {
         Some(dir) => println!(
@@ -280,6 +297,7 @@ fn cmd_live_reopen(args: &Args) -> Result<()> {
     let tuning = LiveTuning {
         stripes: args.get_parse("stripes", defaults.stripes),
         repl_workers: args.get_parse("repl-workers", defaults.repl_workers),
+        io_workers: args.get_parse("io-workers", defaults.io_workers),
         cache_bytes: if cache_mb > 0 {
             Some(cache_mb * 1024 * 1024)
         } else {
@@ -332,9 +350,9 @@ fn cmd_live_reopen(args: &Args) -> Result<()> {
 }
 
 /// `woss scenario <name|all> [--list] [--seed N] [--backend mem|disk]
-/// [--data-dir PATH] [--quick] [--json PATH]`: run the hostile-scenario
-/// harness and optionally emit the `woss-scenarios-v1` results
-/// document. Comma-separated names run a subset.
+/// [--data-dir PATH] [--quick] [--io-workers N] [--json PATH]`: run the
+/// hostile-scenario harness and optionally emit the `woss-scenarios-v1`
+/// results document. Comma-separated names run a subset.
 fn cmd_scenario(args: &Args) -> Result<()> {
     if args.has_flag("list") {
         for name in scenario::names() {
@@ -354,6 +372,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         backend,
         data_dir,
         quick: args.has_flag("quick"),
+        io_workers: args.get_parse("io-workers", 1usize),
     };
     let names: Vec<&str> = if which == "all" {
         scenario::names()

@@ -66,6 +66,9 @@ pub struct ScenarioConfig {
     pub data_dir: Option<PathBuf>,
     /// Scaled-down workload sizes for fast smoke runs.
     pub quick: bool,
+    /// Disk I/O pool threads for the store under test
+    /// ([`LiveTuning::io_workers`]); 1 = the serial data path.
+    pub io_workers: usize,
 }
 
 impl Default for ScenarioConfig {
@@ -75,6 +78,7 @@ impl Default for ScenarioConfig {
             backend: BackendKind::Memory,
             data_dir: None,
             quick: false,
+            io_workers: 1,
         }
     }
 }
@@ -325,7 +329,22 @@ pub fn check_live_json(text: &str) -> Result<(), String> {
             .ok_or_else(|| "live file: experiment without 'id'".to_string())?
             .to_string();
         let row_fields: &[&str] = match id.as_str() {
-            "live_throughput" => &["write_mbps", "read_mbps"],
+            // Percentile fields landed with the pipelined data path:
+            // every throughput row must carry the per-op
+            // latency distribution alongside the aggregate rates.
+            "live_throughput" => &[
+                "write_mbps",
+                "read_mbps",
+                "put_p50_us",
+                "put_p95_us",
+                "put_p99_us",
+                "get_p50_us",
+                "get_p95_us",
+                "get_p99_us",
+                "spill_p50_us",
+                "spill_p95_us",
+                "spill_p99_us",
+            ],
             "live_recovery" => &["reopen_ms"],
             _ => &[],
         };
@@ -394,6 +413,7 @@ fn store_for(
             _ => None,
         },
         fault,
+        io_workers: cfg.io_workers,
         ..LiveTuning::default()
     };
     LiveStore::try_with_tuning(Registry::woss(), nodes, capacity, tuning)
@@ -1021,15 +1041,30 @@ mod tests {
 
     #[test]
     fn live_gate_checks_ids_and_rows() {
-        let good = r#"{"experiments":[
+        let row = r#"{"write_mbps":100,"read_mbps":200,
+            "put_p50_us":10,"put_p95_us":20,"put_p99_us":30,
+            "get_p50_us":1,"get_p95_us":2,"get_p99_us":3,
+            "spill_p50_us":0,"spill_p95_us":0,"spill_p99_us":0}"#;
+        let good = format!(
+            r#"{{"experiments":[
+            {{"id":"live_throughput","rows":[{row}]}},
+            {{"id":"live_cache","rows":[]}},
+            {{"id":"live_recovery","rows":[{{"reopen_ms":12.5}}]}}
+        ]}}"#
+        );
+        check_live_json(&good).unwrap();
+
+        let missing = format!(r#"{{"experiments":[{{"id":"live_throughput","rows":[{row}]}}]}}"#);
+        assert!(check_live_json(&missing).is_err());
+
+        // A throughput row without the percentile fields is schema
+        // drift, not a tolerated legacy shape.
+        let legacy = r#"{"experiments":[
             {"id":"live_throughput","rows":[{"write_mbps":100,"read_mbps":200}]},
             {"id":"live_cache","rows":[]},
             {"id":"live_recovery","rows":[{"reopen_ms":12.5}]}
         ]}"#;
-        check_live_json(good).unwrap();
-
-        let missing = r#"{"experiments":[{"id":"live_throughput","rows":[{"write_mbps":1,"read_mbps":2}]}]}"#;
-        assert!(check_live_json(missing).is_err());
+        assert!(check_live_json(legacy).is_err());
 
         let no_rows = r#"{"experiments":[
             {"id":"live_throughput","rows":[]},

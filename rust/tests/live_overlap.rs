@@ -1,0 +1,219 @@
+//! Overlap tests for the pipelined disk data path: with a seeded
+//! latency spike pinned to one node's backend, concurrent cache
+//! hits and a second node's puts must complete *while the slow
+//! operation is still in flight* — the store never holds a lock across
+//! disk I/O, so one slow disk serializes nothing but itself.
+//!
+//! The spike is detected mid-flight through [`FaultControl::delays`]
+//! (the injector counts a spike *before* it sleeps), and every
+//! concurrent operation runs under a deadline: a regression that
+//! re-introduces a lock held across the spiking I/O shows up as the
+//! deadline firing, not as a hang.
+//!
+//! Determinism: the fault schedule is a pure function of the harness
+//! seed (`WOSS_TEST_SEED` replays it), `delay_permille: 1000` fires on
+//! every selected node-0 backend operation, and `delay_node` keeps
+//! node 1 spike-free.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+use woss::dispatch::Registry;
+use woss::hints::TagSet;
+use woss::live::{BackendKind, FaultSpec, LiveStore, LiveTuning};
+use woss::storage::NodeId;
+use woss::util::Rng;
+
+/// How long the injected spike parks node 0's backend operation.
+const SPIKE_US: u64 = 1_500_000;
+/// Assertion timeout for everything that must NOT wait on the spike.
+const DEADLINE: Duration = Duration::from_secs(10);
+
+/// Deterministic payload bytes from the harness seed.
+fn payload(seed: u64, salt: u64, len: usize) -> Vec<u8> {
+    let mut rng = Rng::new(seed ^ salt);
+    let mult = rng.next_u64() | 1;
+    (0..len)
+        .map(|i| ((i as u64).wrapping_mul(mult) >> 3) as u8)
+        .collect()
+}
+
+/// A spike schedule pinned to node 0: every node-0 backend put/get
+/// sleeps [`SPIKE_US`]; node 1 never spikes.
+fn spike_spec(seed: u64) -> FaultSpec {
+    FaultSpec {
+        seed,
+        delay_permille: 1000,
+        delay_us: SPIKE_US,
+        delay_node: Some(0),
+        ..FaultSpec::default()
+    }
+}
+
+/// Busy-wait (with a deadline) until the injector reports at least one
+/// spike in flight or already fired.
+fn await_spike_started(store: &LiveStore, seed: u64) {
+    let ctl = store.fault_control().expect("fault-injecting store");
+    let t0 = Instant::now();
+    while ctl.delays() < 1 {
+        assert!(
+            t0.elapsed() < DEADLINE,
+            "spike never started (seed={seed})"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Memory backend: a foreground put parked on node 0's backend blocks
+/// neither node-0 cache hits nor node-1 puts — the data path runs
+/// outside every store lock on the mem tier too.
+#[test]
+fn mem_slow_put_overlaps_cache_hits_and_other_nodes() {
+    let (seed, _rng) = common::seeded_rng("mem_slow_put_overlaps");
+    let store = LiveStore::try_with_tuning(
+        Registry::woss(),
+        2,
+        u64::MAX / 2,
+        LiveTuning {
+            cache_bytes: Some(4 << 20),
+            fault: Some(spike_spec(seed)),
+            ..LiveTuning::default()
+        },
+    )
+    .expect("mem store");
+    let ctl = store.fault_control().unwrap();
+    ctl.set_enabled(false);
+
+    // Warm-up (no spikes): /warm lives on node 1; two reads from node 0
+    // leave a node-0 cached copy, so re-reads are pure cache hits that
+    // never touch node 0's (spiking) backend.
+    let local = TagSet::from_pairs([("DP", "local")]);
+    let warm = payload(seed, 1, 100_000);
+    store.write_file(NodeId(1), "/warm", &warm, &local).unwrap();
+    store.read_file(NodeId(0), "/warm").unwrap();
+    assert_eq!(store.read_file(NodeId(0), "/warm").unwrap(), warm);
+    assert!(store.cache_stats().hits >= 1, "warm copy is cache-resident");
+
+    ctl.set_enabled(true);
+    let slow = payload(seed, 2, 200_000);
+    let n1 = payload(seed, 3, 100_000);
+    let slow_done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            // Primary copy lands on node 0 → spike fires inside the
+            // unlocked backend put.
+            store.write_file(NodeId(0), "/slow", &slow, &local).unwrap();
+            slow_done.store(true, Ordering::SeqCst);
+        });
+        await_spike_started(&store, seed);
+
+        // Both of these must complete while /slow is still parked.
+        let t = Instant::now();
+        assert_eq!(store.read_file(NodeId(0), "/warm").unwrap(), warm);
+        store.write_file(NodeId(1), "/n1", &n1, &local).unwrap();
+        assert!(
+            t.elapsed() < DEADLINE,
+            "concurrent ops blew the deadline (seed={seed})"
+        );
+        assert!(
+            !slow_done.load(Ordering::SeqCst),
+            "cache hit + node-1 put finished only after the slow put — \
+             no overlap (seed={seed})"
+        );
+    });
+
+    ctl.set_enabled(false);
+    assert_eq!(store.read_file(NodeId(1), "/slow").unwrap(), slow);
+    assert_eq!(store.read_file(NodeId(0), "/n1").unwrap(), n1);
+    assert!(store.audit().clean(), "closing audit (seed={seed})");
+}
+
+/// Disk backend, `io_workers = 4`: a dirty scratch chunk's spill parks
+/// on node 0's disk mid-write-back. The `Spilling` entry protocol keeps
+/// the node's cache mutex free, so node-0 cache hits and node-1 puts
+/// proceed, and the `io_queue=` gauge reports the in-flight submission.
+#[test]
+fn disk_spill_overlaps_cache_hits_and_other_nodes() {
+    let (seed, _rng) = common::seeded_rng("disk_spill_overlaps");
+    let dir = std::env::temp_dir().join(format!("woss-overlap-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = LiveStore::try_with_tuning(
+        Registry::woss(),
+        2,
+        u64::MAX / 2,
+        LiveTuning {
+            cache_bytes: Some(400_000),
+            lifetime: true,
+            backend: BackendKind::Disk,
+            data_dir: Some(dir.clone()),
+            fault: Some(spike_spec(seed)),
+            io_workers: 4,
+            ..LiveTuning::default()
+        },
+    )
+    .expect("disk store");
+    let ctl = store.fault_control().unwrap();
+    ctl.set_enabled(false);
+
+    // /s0: scratch on the disk tier skips the spill — a dirty
+    // cache-only chunk on node 0, the victim-to-be.
+    let scratch = TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch")]);
+    let local = TagSet::from_pairs([("DP", "local")]);
+    let s0 = payload(seed, 10, 200_000);
+    store.write_file(NodeId(0), "/s0", &s0, &scratch).unwrap();
+    // /warm: durable on node 1, cached on node 0 by the reads below.
+    let warm = payload(seed, 11, 100_000);
+    store.write_file(NodeId(1), "/warm", &warm, &local).unwrap();
+    store.read_file(NodeId(0), "/warm").unwrap();
+    assert_eq!(store.read_file(NodeId(0), "/warm").unwrap(), warm);
+
+    ctl.set_enabled(true);
+    // /s1 needs room on node 0: the hint-aware policy picks the dirty
+    // scratch entry (/s0) as victim → Spilling → disk put → spike.
+    let s1 = payload(seed, 12, 200_000);
+    let n1 = payload(seed, 13, 100_000);
+    let spill_done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            store.write_file(NodeId(0), "/s1", &s1, &scratch).unwrap();
+            spill_done.store(true, Ordering::SeqCst);
+        });
+        await_spike_started(&store, seed);
+
+        // The bottom-up gauge sees the parked submission.
+        let status = store.get_xattr("/warm", "system_status").unwrap();
+        let depth: usize = status
+            .rsplit("io_queue=")
+            .next()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("system_status lacks io_queue: {status}"));
+        assert!(depth >= 1, "spill in flight must show in io_queue: {status}");
+
+        // Node-0 cache hits and node-1 puts proceed mid-spill.
+        let t = Instant::now();
+        assert_eq!(store.read_file(NodeId(0), "/warm").unwrap(), warm);
+        store.write_file(NodeId(1), "/n1", &n1, &local).unwrap();
+        assert!(
+            t.elapsed() < DEADLINE,
+            "concurrent ops blew the deadline (seed={seed})"
+        );
+        assert!(
+            !spill_done.load(Ordering::SeqCst),
+            "cache hit + node-1 put finished only after the spill — \
+             no overlap (seed={seed})"
+        );
+    });
+
+    ctl.set_enabled(false);
+    store.flush_replication();
+    let stats = store.cache_stats();
+    assert!(stats.spilled >= 1, "the dirty victim was written back");
+    assert!(stats.spill_p99_us > 0.0, "spill latency was sampled");
+    assert_eq!(store.read_file(NodeId(0), "/s0").unwrap(), s0, "spilled bytes");
+    assert_eq!(store.read_file(NodeId(0), "/s1").unwrap(), s1);
+    assert_eq!(store.read_file(NodeId(1), "/n1").unwrap(), n1);
+    assert!(store.audit().clean(), "closing audit (seed={seed})");
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -110,8 +110,12 @@ fn crash_reopen_serves_durable_files_byte_identical() {
         "system_status reports the recovered count: {status}"
     );
     assert!(
-        status.ends_with("under_replicated=0"),
+        status.contains("under_replicated=0"),
         "no churn: nothing under-replicated: {status}"
+    );
+    assert!(
+        status.ends_with("io_queue=0"),
+        "idle data path: empty I/O queue: {status}"
     );
 
     // A file created *after* the reopen is not "recovered".

@@ -88,7 +88,52 @@ scn_dir="$(mktemp -d)"
 "$woss" scenario metadata_storm,kill_recover --quick --seed 7 --backend mem
 "$woss" scenario metadata_storm,kill_recover --quick --seed 7 \
     --backend disk --data-dir "$scn_dir/smoke"
+# Same schedules again with the I/O pool fanned out: the pipelined data
+# path must close the same audits clean at io_workers=4.
+"$woss" scenario metadata_storm,kill_recover --quick --seed 7 \
+    --backend disk --data-dir "$scn_dir/smoke4" --io-workers 4
 rm -rf "$scn_dir"
+
+# Pipeline-equivalence leg: the I/O pool must change scheduling, never
+# semantics. The same single-worker workload runs on the disk matrix at
+# --io-workers 1 (the serial pre-pool data path) and 4 (real overlap),
+# and the recorded output fingerprints must be byte-identical. The
+# cache+lifetime runs also compare the reclamation line (scratch files
+# reclaimed, bytes returned), and the cache-less pipeline run compares
+# the locality line (local/remote chunk-read counts) — prefetch is a
+# background race by design, so locality is only compared where no
+# cache tier is in play.
+echo "== io-workers equivalence (--io-workers 1 vs 4, disk matrix) =="
+io_dir="$(mktemp -d)"
+for wl in pipeline montage; do
+    for iow in 1 4; do
+        "$woss" live --workload "$wl" --nodes 4 --workers 1 \
+            --backend disk --data-dir "$io_dir/$wl-$iow" \
+            --cache-mb 2 --lifetime --io-workers "$iow" \
+            --fingerprint-file "$io_dir/$wl-$iow.fp" \
+            > "$io_dir/$wl-$iow.out"
+    done
+    cmp "$io_dir/$wl-1.fp" "$io_dir/$wl-4.fp" \
+        || { echo "FAIL: $wl fingerprints diverge between --io-workers 1 and 4"; exit 1; }
+    a="$(grep '  lifetime:' "$io_dir/$wl-1.out")"
+    b="$(grep '  lifetime:' "$io_dir/$wl-4.out")"
+    [ "$a" = "$b" ] \
+        || { echo "FAIL: $wl reclamation diverges: '$a' vs '$b'"; exit 1; }
+done
+for iow in 1 4; do
+    "$woss" live --workload pipeline --nodes 4 --workers 1 \
+        --backend disk --data-dir "$io_dir/plain-$iow" \
+        --io-workers "$iow" \
+        --fingerprint-file "$io_dir/plain-$iow.fp" \
+        > "$io_dir/plain-$iow.out"
+done
+cmp "$io_dir/plain-1.fp" "$io_dir/plain-4.fp" \
+    || { echo "FAIL: plain fingerprints diverge between --io-workers 1 and 4"; exit 1; }
+a="$(grep '  locality:' "$io_dir/plain-1.out")"
+b="$(grep '  locality:' "$io_dir/plain-4.out")"
+[ "$a" = "$b" ] \
+    || { echo "FAIL: locality diverges between --io-workers 1 and 4: '$a' vs '$b'"; exit 1; }
+rm -rf "$io_dir"
 
 # Tracked perf trajectory: regenerate both bench documents and validate
 # them against their schemas. A missing, unparseable, or schema-drifted
