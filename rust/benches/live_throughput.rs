@@ -1,5 +1,5 @@
 //! `cargo bench` target for the live-store concurrency sweep: read and
-//! tagged-write throughput vs chunk backend (mem|disk) × lock-stripe
+//! tagged-write throughput vs chunk backend (mem|disk|seg) × lock-stripe
 //! count × thread count, plus optimistic-vs-pessimistic write latency.
 //! See rust/src/bench/experiments.rs for the driver.
 

@@ -641,15 +641,15 @@ fn table6_shards(runs: usize, seed: u64) -> Report {
 }
 
 /// Live-store concurrency sweep: tagged-write and read throughput vs
-/// lock-stripe count × thread count, on both chunk backends (the
-/// in-memory store and the file-backed spill tier), plus mean
-/// tagged-write latency under optimistic vs pessimistic replication
-/// semantics. Unlike the other experiments this one measures
-/// *wall-clock* behaviour of the live (real-bytes, real-threads)
-/// store, so absolute numbers vary by machine; the shapes — reads
-/// scaling with reader threads, optimistic returning before full
-/// replication, the disk backend paying a per-chunk file I/O cost the
-/// memory backend does not — are the reproducible claim.
+/// lock-stripe count × thread count, on all three chunk backends (the
+/// in-memory store, the file-per-chunk spill tier, and the packed
+/// segment log), plus mean tagged-write latency under optimistic vs
+/// pessimistic replication semantics. Unlike the other experiments
+/// this one measures *wall-clock* behaviour of the live (real-bytes,
+/// real-threads) store, so absolute numbers vary by machine; the
+/// shapes — reads scaling with reader threads, optimistic returning
+/// before full replication, the persistent backends paying an I/O cost
+/// the memory backend does not — are the reproducible claim.
 fn live_throughput(_runs: usize, seed: u64) -> Report {
     use crate::hints::TagSet;
     use crate::live::{BackendKind, LiveStore, LiveTuning};
@@ -671,7 +671,7 @@ fn live_throughput(_runs: usize, seed: u64) -> Report {
         .map(|i| ((i as u64).wrapping_mul(31).wrapping_add(seed)) as u8)
         .collect();
 
-    for backend in [BackendKind::Memory, BackendKind::Disk] {
+    for backend in [BackendKind::Memory, BackendKind::Disk, BackendKind::Seg] {
         for stripes in [1usize, 4, 8] {
             for threads in [1usize, 2, 4] {
                 let store = LiveStore::woss_with(
@@ -811,7 +811,7 @@ fn live_throughput(_runs: usize, seed: u64) -> Report {
             ("rows", Json::Arr(rows)),
             ("latency", Json::Arr(latency)),
         ]),
-        expectation: "read throughput scales with reader threads (≥2x from 1→4 threads at 4 stripes on a ≥4-core box); the disk backend trails the memory backend on both phases (per-chunk file I/O); optimistic tagged writes return well below the pessimistic latency; stripes=1 reproduces the single-lock manager behaviour",
+        expectation: "read throughput scales with reader threads (≥2x from 1→4 threads at 4 stripes on a ≥4-core box); the persistent backends trail the memory backend on both phases (file I/O), with seg ahead of disk on writes (one group-committed log append vs a file create + fsync per chunk); optimistic tagged writes return well below the pessimistic latency; stripes=1 reproduces the single-lock manager behaviour",
     }
 }
 
@@ -842,7 +842,7 @@ fn live_cache(_runs: usize, _seed: u64) -> Report {
         .header(["backend", "policy", "cache", "locality", "hits / evictions / peak KiB"]);
     let mut rows = Vec::new();
 
-    for backend in [BackendKind::Memory, BackendKind::Disk] {
+    for backend in [BackendKind::Memory, BackendKind::Disk, BackendKind::Seg] {
         for (policy, label) in [(CachePolicy::Lru, "lru"), (CachePolicy::HintAware, "hint")] {
             for budget in [TIGHT, AMPLE] {
                 let store = LiveStore::woss_with(
@@ -1065,7 +1065,7 @@ fn live_cache(_runs: usize, _seed: u64) -> Report {
             ("prefetch", prefetch_json),
             ("reclaim", reclaim_json),
         ]),
-        expectation: "at the tight budget hint-aware eviction keeps the durable hot set resident where plain LRU churns it (higher locality at equal cache size, on both backends); at the ample budget the policies converge; peak resident bytes never exceed the per-node budget; on the disk backend the hint-aware cache serves every post-warm-up hot read from memory (remote chunk fetches collapse from rounds×files to files), recovering most of the cache-off disk read penalty; prefetch makes the pipeline handoff fully node-local; every Consumers=1 scratch file is reclaimed",
+        expectation: "at the tight budget hint-aware eviction keeps the durable hot set resident where plain LRU churns it (higher locality at equal cache size, on every backend); at the ample budget the policies converge; peak resident bytes never exceed the per-node budget; on the disk backend the hint-aware cache serves every post-warm-up hot read from memory (remote chunk fetches collapse from rounds×files to files), recovering most of the cache-off disk read penalty; prefetch makes the pipeline handoff fully node-local; every Consumers=1 scratch file is reclaimed",
     }
 }
 
@@ -1430,12 +1430,12 @@ mod tests {
             Some(Json::Arr(rows)) => rows,
             _ => panic!("rows"),
         };
-        assert_eq!(rows.len(), 18, "2 backends × 3 stripe counts × 3 thread counts");
+        assert_eq!(rows.len(), 27, "3 backends × 3 stripe counts × 3 thread counts");
         for row in rows {
             assert!(row.get("read_mbps").and_then(Json::as_f64).unwrap() > 0.0);
             assert!(row.get("write_mbps").and_then(Json::as_f64).unwrap() > 0.0);
             let backend = row.get("backend").and_then(Json::as_str).unwrap();
-            assert!(backend == "mem" || backend == "disk");
+            assert!(backend == "mem" || backend == "disk" || backend == "seg");
         }
         // Wall-clock magnitudes (scaling factors, the optimistic-vs-
         // pessimistic latency gap) are machine-dependent — a 1-core CI
@@ -1464,7 +1464,7 @@ mod tests {
             Some(Json::Arr(rows)) => rows,
             _ => panic!("rows"),
         };
-        assert_eq!(rows.len(), 8, "2 backends × 2 policies × 2 budgets");
+        assert_eq!(rows.len(), 12, "3 backends × 2 policies × 2 budgets");
         let field = |row: &Json, key: &str| row.get(key).and_then(Json::as_f64).unwrap();
         let locality = |backend: &str, policy: &str, tight: bool| {
             rows.iter()
@@ -1479,8 +1479,8 @@ mod tests {
         // The acceptance claim: at equal (tight) cache size, hint-aware
         // eviction wins on locality — scratch evicts first, so the
         // durable hot set stays resident while plain LRU churns it.
-        // The policy shape holds on both chunk backends.
-        for backend in ["mem", "disk"] {
+        // The policy shape holds on every chunk backend.
+        for backend in ["mem", "disk", "seg"] {
             assert!(
                 locality(backend, "hint", true) > locality(backend, "lru", true),
                 "[{backend}] hint {:.2} must beat lru {:.2} at the tight budget",
@@ -1490,12 +1490,14 @@ mod tests {
         }
         // The cache-policy counters are backend-independent: the tier
         // sits above the ChunkBackend trait, so swapping mem for disk
-        // must not change what gets cached or evicted.
-        assert_eq!(
-            locality("mem", "hint", true),
-            locality("disk", "hint", true),
-            "cache behaviour must be identical across backends"
-        );
+        // or seg must not change what gets cached or evicted.
+        for backend in ["disk", "seg"] {
+            assert_eq!(
+                locality("mem", "hint", true),
+                locality(backend, "hint", true),
+                "cache behaviour must be identical across backends ({backend})"
+            );
+        }
         // Cached bytes stay bounded by the budget in every configuration.
         for row in rows {
             assert!(

@@ -8,7 +8,7 @@
 //! schedules the consuming task on a node that holds the data.
 //!
 //! Two reserved attributes are *not* provider-backed: `cache_state`
-//! (which chunk backend — `tier=mem|disk` — plus per-node cache
+//! (which chunk backend — `tier=mem|disk|seg` — plus per-node cache
 //! residency) and the live countdown behind `consumers_left` are
 //! deployment-local state only the live store can see, so
 //! [`crate::live::LiveStore::get_xattr`] serves `cache_state` directly

@@ -34,7 +34,7 @@ pub use tagset::TagSet;
 pub const LOCATION_ATTR: &str = "location";
 
 /// Reserved attribute exposing where a file's bytes actually live:
-/// `tier=<mem|disk>;chunks=<n>;bytes=<n>;pinned=<n>;recovered=<0|1>` —
+/// `tier=<mem|disk|seg>;chunks=<n>;bytes=<n>;pinned=<n>;recovered=<0|1>` —
 /// the chunk backend uncached bytes sit on, the file's cache-tier
 /// residency summed over node caches, and whether the file survived a
 /// store restart (`recovered=1` after `LiveStore::reopen` brought it

@@ -13,6 +13,14 @@
 //!   rename so a chunk is never observable half-written *and* survives
 //!   a machine crash once published. Deleting or reclaiming a chunk
 //!   removes its on-disk file.
+//! * [`SegBackend`] — a **packed segment log**: chunks appended into a
+//!   few large `seg-<n>.log` files per node (length + FNV-1a framed
+//!   records, group-commit fsync) with a compact in-memory index,
+//!   read back positionally (sealed segments served zero-syscall from
+//!   `Arc`-mapped buffers), and rewritten by online compaction once
+//!   dead bytes pass a threshold — the layout that survives millions
+//!   of tiny chunks where file-per-chunk dies on inode exhaustion,
+//!   dirent scans, and one fsync per chunk.
 //!
 //! # Crash consistency (the manifest)
 //!
@@ -41,7 +49,7 @@ use crate::storage::types::{FileId, StorageError};
 use std::collections::{HashMap, HashSet};
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 /// Key of one stored chunk: the owning file plus the chunk index.
@@ -107,11 +115,16 @@ pub enum BackendKind {
     /// File-backed disk tier: one file per chunk under a per-node
     /// directory (temp-file + fsync + rename writes, manifest-logged).
     Disk,
+    /// Packed segment-log disk tier: chunks framed into a few large
+    /// append-only `seg-<n>.log` files per node with group-commit
+    /// fsyncs and online compaction.
+    Seg,
 }
 
 impl BackendKind {
     /// Resolve the backend from the `LIVE_BACKEND` environment variable
-    /// (`mem` | `disk`, same lenient parser as the CLI's `--backend`),
+    /// (`mem` | `disk` | `seg`, same lenient parser as the CLI's
+    /// `--backend`),
     /// defaulting to [`BackendKind::Memory`] when unset. This is the CI
     /// matrix hook: `LIVE_BACKEND=disk cargo test` runs every live test
     /// against the spill tier without touching the tests — which is
@@ -127,14 +140,22 @@ impl BackendKind {
         }
     }
 
-    /// Stable lowercase label (`mem` | `disk`) — the value the reserved
-    /// `cache_state` attribute reports in its `tier=` field and the CLI
-    /// accepts for `--backend`.
+    /// Stable lowercase label (`mem` | `disk` | `seg`) — the value the
+    /// reserved `cache_state` attribute reports in its `tier=` field
+    /// and the CLI accepts for `--backend`.
     pub fn label(self) -> &'static str {
         match self {
             BackendKind::Memory => "mem",
             BackendKind::Disk => "disk",
+            BackendKind::Seg => "seg",
         }
+    }
+
+    /// Does this backend persist chunks on disk (a durable spill target
+    /// under the cache tier, with a `--data-dir` layout to recover)?
+    /// True for both disk layouts — file-per-chunk and packed segments.
+    pub fn is_persistent(self) -> bool {
+        !matches!(self, BackendKind::Memory)
     }
 }
 
@@ -145,7 +166,8 @@ impl std::str::FromStr for BackendKind {
         match s.trim().to_ascii_lowercase().as_str() {
             "mem" | "memory" => Ok(BackendKind::Memory),
             "disk" | "file" => Ok(BackendKind::Disk),
-            other => Err(format!("unknown backend '{other}' (mem|disk)")),
+            "seg" | "segment" => Ok(BackendKind::Seg),
+            other => Err(format!("unknown backend '{other}' (mem|disk|seg)")),
         }
     }
 }
@@ -201,6 +223,16 @@ pub trait ChunkBackend: Send + Sync {
     /// namespace to find stale copies (a rejoining node's leftovers)
     /// and stray chunks no surviving file claims.
     fn chunk_keys(&self) -> Vec<ChunkKey>;
+
+    /// Run any pending background maintenance — segment compaction for
+    /// the packed log, a manifest rewrite for the file tier — and
+    /// report whether work was done. The store kicks this on the I/O
+    /// pool after delete/reclaim sweeps so reclaimed space actually
+    /// returns to the filesystem; a backend with nothing pending must
+    /// return immediately. Never called under a store lock.
+    fn maintain(&self) -> bool {
+        false
+    }
 }
 
 /// The PR 3 in-memory chunk store: a `RwLock<HashMap>` per node.
@@ -272,6 +304,13 @@ pub fn chunk_crc(bytes: &[u8]) -> u64 {
 
 /// Name of the per-node append-only chunk manifest.
 const MANIFEST: &str = "manifest.log";
+
+/// Dead manifest records (overwritten `put`s plus `del` pairs) that
+/// trigger the online manifest rewrite. Low enough that a long-lived
+/// node's manifest stays bounded by its live chunk count plus this
+/// constant, high enough that steady churn amortizes each rewrite over
+/// hundreds of appends.
+const MANIFEST_COMPACT_DEAD: u64 = 256;
 
 /// What one node's manifest replay recovered and discarded — the
 /// per-backend half of [`crate::live::store::RecoveryReport`].
@@ -413,28 +452,53 @@ pub struct FileBackend {
     /// are the only I/O a lock covers — the log is the serialization
     /// point by design, exactly like the namespace journal).
     manifest: Mutex<AppendLog>,
-    /// Per-key in-flight table: keys with a mutation (put/delete)
-    /// currently between reserve and publish. Same-key mutations queue
-    /// here instead of on the index lock, so they serialize without
-    /// stalling unrelated keys or any reader.
-    inflight: Mutex<HashSet<ChunkKey>>,
-    inflight_cv: Condvar,
+    /// Per-key in-flight mutation table (see [`Inflight`]).
+    inflight: Inflight,
     used: AtomicU64,
     tmp_seq: AtomicU64,
     read_failures: AtomicU64,
+    /// Manifest records gone dead since the last compaction:
+    /// overwritten `put`s plus `del` pairs. Crossing
+    /// [`MANIFEST_COMPACT_DEAD`] triggers the online rewrite.
+    dead_records: AtomicU64,
+}
+
+/// Per-key in-flight mutation table shared by both disk backends: keys
+/// with a put/delete currently between reserve and publish. Same-key
+/// mutations queue here instead of on the index lock, so they
+/// serialize without stalling unrelated keys or any reader.
+#[derive(Default)]
+struct Inflight {
+    keys: Mutex<HashSet<ChunkKey>>,
+    cv: Condvar,
+}
+
+impl Inflight {
+    /// Reserve the exclusive mutation slot for `key`, waiting out any
+    /// in-flight put/delete of the same chunk. This is what keeps
+    /// same-key mutations linearizable while their disk I/O runs
+    /// outside the index lock.
+    fn lock(&self, key: ChunkKey) -> KeySlot<'_> {
+        let mut keys = self.keys.lock().unwrap();
+        while keys.contains(&key) {
+            keys = self.cv.wait(keys).unwrap();
+        }
+        keys.insert(key);
+        KeySlot { table: self, key }
+    }
 }
 
 /// Exclusive per-key mutation slot: dropped, it releases the key and
 /// wakes the next queued mutation.
 struct KeySlot<'a> {
-    backend: &'a FileBackend,
+    table: &'a Inflight,
     key: ChunkKey,
 }
 
 impl Drop for KeySlot<'_> {
     fn drop(&mut self) {
-        self.backend.inflight.lock().unwrap().remove(&self.key);
-        self.backend.inflight_cv.notify_all();
+        self.table.keys.lock().unwrap().remove(&self.key);
+        self.table.cv.notify_all();
     }
 }
 
@@ -468,11 +532,11 @@ impl FileBackend {
             dir_handle,
             index: RwLock::new(HashMap::new()),
             manifest: Mutex::new(AppendLog::new(manifest)),
-            inflight: Mutex::new(HashSet::new()),
-            inflight_cv: Condvar::new(),
+            inflight: Inflight::default(),
             used: AtomicU64::new(0),
             tmp_seq: AtomicU64::new(0),
             read_failures: AtomicU64::new(0),
+            dead_records: AtomicU64::new(0),
         })
     }
 
@@ -616,11 +680,11 @@ impl FileBackend {
                 dir_handle,
                 index: RwLock::new(kept),
                 manifest: Mutex::new(AppendLog::new(manifest)),
-                inflight: Mutex::new(HashSet::new()),
-                inflight_cv: Condvar::new(),
+                inflight: Inflight::default(),
                 used: AtomicU64::new(used),
                 tmp_seq: AtomicU64::new(0),
                 read_failures: AtomicU64::new(0),
+                dead_records: AtomicU64::new(0),
             },
             recovery,
         ))
@@ -630,17 +694,56 @@ impl FileBackend {
         chunk_path_in(&self.dir, key)
     }
 
-    /// Reserve the exclusive mutation slot for `key`, waiting out any
-    /// in-flight put/delete of the same chunk. This is what keeps
-    /// same-key mutations linearizable now that their disk I/O runs
-    /// outside the index lock.
-    fn lock_key(&self, key: ChunkKey) -> KeySlot<'_> {
-        let mut inflight = self.inflight.lock().unwrap();
-        while inflight.contains(&key) {
-            inflight = self.inflight_cv.wait(inflight).unwrap();
+    /// The online half of the recovery-time manifest compaction (PR 5
+    /// left the rewrite to `open_existing`, so a long-lived node's
+    /// manifest grew with its operation history instead of its live
+    /// chunk count): once enough records go dead, rewrite the log from
+    /// the index and swap the append handle, all under the manifest
+    /// mutex so concurrent publishes land in the new file. A failed
+    /// rewrite is abandoned — the old log keeps appending, and the
+    /// next threshold crossing retries.
+    fn maybe_compact_manifest(&self) {
+        if self.dead_records.load(Ordering::Relaxed) < MANIFEST_COMPACT_DEAD {
+            return;
         }
-        inflight.insert(key);
-        KeySlot { backend: self, key }
+        let mut log = self.manifest.lock().unwrap();
+        // Re-check under the mutex: a racing mutation may have queued
+        // behind the compaction that already reset the counter.
+        if self.dead_records.load(Ordering::Relaxed) < MANIFEST_COMPACT_DEAD {
+            return;
+        }
+        // Puts publish their index insert under the manifest mutex, so
+        // this snapshot is exactly the set of live records the old
+        // log's tail describes — nothing mid-publish can be dropped.
+        let snapshot: Vec<(ChunkKey, ChunkRecord)> = self
+            .index
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, r)| (*k, *r))
+            .collect();
+        let tmp = self.dir.join(".manifest.tmp");
+        let rewrite = || -> std::io::Result<std::fs::File> {
+            let mut f = std::fs::File::create(&tmp)?;
+            for (key, rec) in &snapshot {
+                writeln!(f, "put {} {} {} {:016x}", key.0 .0, key.1, rec.len, rec.crc)?;
+            }
+            f.sync_all()?;
+            std::fs::rename(&tmp, self.dir.join(MANIFEST))?;
+            self.dir_handle.sync_all()?;
+            std::fs::OpenOptions::new()
+                .append(true)
+                .open(self.dir.join(MANIFEST))
+        };
+        match rewrite() {
+            Ok(f) => {
+                *log = AppendLog::new(f);
+                self.dead_records.store(0, Ordering::Relaxed);
+            }
+            Err(_) => {
+                let _ = std::fs::remove_file(&tmp);
+            }
+        }
     }
 
     /// Chunk keys currently indexed (recovery bookkeeping: the store
@@ -701,7 +804,7 @@ impl ChunkBackend for FileBackend {
         // Reserve: the per-key slot serializes same-key mutations, so
         // everything below runs without the index lock and still
         // linearizes against a racing put/delete of this chunk.
-        let _slot = self.lock_key(key);
+        let _slot = self.inflight.lock(key);
         let tmp = self.dir.join(format!(
             ".put-{}.tmp",
             self.tmp_seq.fetch_add(1, Ordering::Relaxed)
@@ -741,12 +844,18 @@ impl ChunkBackend for FileBackend {
             )));
         }
         let line = format!("put {} {} {} {:016x}\n", key.0 .0, key.1, rec.len, rec.crc);
-        let logged = self.dir_handle.sync_all().and_then(|()| {
-            // The manifest mutex covers only the append — the one
-            // serialization point the log needs.
-            self.manifest.lock().unwrap().append(&line, true)
-        });
+        // The manifest mutex covers the append *and* the index insert
+        // below: the log is the serialization point by design, and
+        // holding it through the publish keeps the online compaction's
+        // index snapshot exactly consistent with the log tail — no
+        // record can land in the old log after the rewrite snapshots.
+        let mut log = self.manifest.lock().unwrap();
+        let logged = self
+            .dir_handle
+            .sync_all()
+            .and_then(|()| log.append(&line, true));
         if let Err(e) = logged {
+            drop(log);
             // The rename already replaced the on-disk bytes with
             // content the manifest never published — and, on an
             // overwrite, destroyed the copy the old index entry
@@ -770,8 +879,12 @@ impl ChunkBackend for FileBackend {
         // point.
         if let Some(old) = self.index.write().unwrap().insert(key, rec) {
             self.used.fetch_sub(old.len, Ordering::Relaxed);
+            // The overwritten put's manifest record is dead weight now.
+            self.dead_records.fetch_add(1, Ordering::Relaxed);
         }
         self.used.fetch_add(rec.len, Ordering::Relaxed);
+        drop(log);
+        self.maybe_compact_manifest();
         Ok(())
     }
 
@@ -830,7 +943,7 @@ impl ChunkBackend for FileBackend {
         // unlinked while the index says present). Retire the index
         // entry first, then log, then unlink — a reader that loses the
         // file mid-read finds the entry gone and reports absent.
-        let _slot = self.lock_key(key);
+        let _slot = self.inflight.lock(key);
         let removed = self.index.write().unwrap().remove(&key);
         if let Some(old) = removed {
             self.used.fetch_sub(old.len, Ordering::Relaxed);
@@ -840,6 +953,10 @@ impl ChunkBackend for FileBackend {
                 .unwrap()
                 .append(&format!("del {} {}\n", key.0 .0, key.1), true);
             let _ = std::fs::remove_file(self.chunk_path(key));
+            // The retired put record and the del pair are both dead
+            // weight in the log now.
+            self.dead_records.fetch_add(2, Ordering::Relaxed);
+            self.maybe_compact_manifest();
         }
     }
 
@@ -893,6 +1010,1053 @@ pub fn chunk_files_under(dir: &Path) -> usize {
         }
     }
     count
+}
+
+/// Count the segment files (`seg-*.log`) anywhere under `dir` — the
+/// packed backend's on-disk footprint, the number the `seg` acceptance
+/// gate requires to stay O(segments) rather than O(chunks). Symbolic
+/// links are never followed, exactly as in [`chunk_files_under`].
+pub fn segment_files_under(dir: &Path) -> usize {
+    let mut count = 0;
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&d) else {
+            continue;
+        };
+        for entry in entries.flatten() {
+            let Ok(ftype) = entry.file_type() else {
+                continue;
+            };
+            if ftype.is_dir() {
+                stack.push(entry.path());
+            } else if ftype.is_file()
+                && parse_seg_name(&entry.file_name().to_string_lossy()).is_some()
+            {
+                count += 1;
+            }
+        }
+    }
+    count
+}
+
+/// Name of the per-node segment list: the file name of every live
+/// segment, one per line, in **replay order**. Rewritten atomically
+/// (temp + fsync + rename + directory fsync) at every roll and
+/// compaction flip, the list is the single source of truth recovery
+/// trusts: segment files it does not name are crash debris and get
+/// swept, never replayed.
+const SEG_META: &str = "segments.meta";
+
+/// Byte length of one framed record header:
+/// `[op:1][file:8][chunk:8][len:8][crc:8]`, all little-endian.
+const SEG_HEADER: usize = 33;
+
+/// Record op: chunk publish (header + payload).
+const SEG_PUT: u8 = 1;
+/// Record op: chunk tombstone (header only).
+const SEG_DEL: u8 = 2;
+
+/// Tuning for [`SegBackend`]. The defaults suit real deployments;
+/// tests shrink them to exercise rolls and compaction with a handful
+/// of tiny chunks.
+#[derive(Debug, Clone, Copy)]
+pub struct SegConfig {
+    /// Seal the active segment and roll to a fresh one once it holds
+    /// this many bytes (a single oversized record may still exceed it:
+    /// records never split across segments).
+    pub segment_bytes: u64,
+    /// Group-commit boundary: fsync the active segment once this many
+    /// bytes accumulate since the last sync. `0` syncs every record —
+    /// the file backend's fsync-per-put discipline.
+    pub group_commit_bytes: u64,
+    /// Rewrite sealed segments once dead bytes (overwritten, deleted,
+    /// and tombstone records, headers included) pass this threshold.
+    pub compact_dead_bytes: u64,
+    /// Byte budget for sealed segments held whole in memory as
+    /// `Arc`-mapped buffers — the mmap-style zero-syscall read path.
+    /// Segments past the budget fall back to positional reads.
+    pub map_budget_bytes: u64,
+}
+
+impl Default for SegConfig {
+    fn default() -> Self {
+        SegConfig {
+            segment_bytes: 8 << 20,
+            group_commit_bytes: 256 << 10,
+            compact_dead_bytes: 4 << 20,
+            map_budget_bytes: 32 << 20,
+        }
+    }
+}
+
+/// One chunk's location in the packed log: which segment, where the
+/// payload starts, and the framed record's checksum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SegRecord {
+    seg: u64,
+    offset: u64,
+    len: u64,
+    crc: u64,
+}
+
+/// One open segment: the shared read/append handle plus its path
+/// (non-unix positional reads reopen by path; the mapped read path
+/// loads by path).
+struct SegmentFile {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+/// Append-side state, guarded by the writer mutex: the active segment,
+/// its append offset, the unsynced byte count for group commit, the
+/// next unallocated segment id, and the replay-ordered segment list
+/// the on-disk meta mirrors.
+struct SegWriter {
+    active: u64,
+    offset: u64,
+    unsynced: u64,
+    next_id: u64,
+    order: Vec<u64>,
+}
+
+/// Sealed segments mapped whole into memory (`Arc<Vec<u8>>`), evicted
+/// oldest-first once over the byte budget.
+#[derive(Default)]
+struct MappedSegs {
+    bufs: HashMap<u64, Arc<Vec<u8>>>,
+    order: std::collections::VecDeque<u64>,
+    bytes: u64,
+}
+
+fn seg_file_name(id: u64) -> String {
+    format!("seg-{id}.log")
+}
+
+fn seg_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(seg_file_name(id))
+}
+
+fn tmp_seg_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("seg-{id}.log.tmp"))
+}
+
+/// Parse `seg-<n>.log` back into its id.
+fn parse_seg_name(name: &str) -> Option<u64> {
+    name.strip_prefix("seg-")?
+        .strip_suffix(".log")?
+        .parse()
+        .ok()
+}
+
+/// Serialize one framed record header.
+fn seg_header_bytes(op: u8, key: ChunkKey, len: u64, crc: u64) -> [u8; SEG_HEADER] {
+    let mut out = [0u8; SEG_HEADER];
+    out[0] = op;
+    out[1..9].copy_from_slice(&key.0 .0.to_le_bytes());
+    out[9..17].copy_from_slice(&key.1.to_le_bytes());
+    out[17..25].copy_from_slice(&len.to_le_bytes());
+    out[25..33].copy_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse one framed record header. `None` means the framing itself is
+/// lost (unrecognizable op byte) — recovery tears off the rest of the
+/// segment.
+fn seg_parse_header(raw: &[u8]) -> Option<(u8, ChunkKey, u64, u64)> {
+    let op = raw[0];
+    if op != SEG_PUT && op != SEG_DEL {
+        return None;
+    }
+    let file = u64::from_le_bytes(raw[1..9].try_into().unwrap());
+    let chunk = u64::from_le_bytes(raw[9..17].try_into().unwrap());
+    let len = u64::from_le_bytes(raw[17..25].try_into().unwrap());
+    let crc = u64::from_le_bytes(raw[25..33].try_into().unwrap());
+    Some((op, (FileId(file), chunk), len, crc))
+}
+
+/// FNV-1a over the record's meaningful header bytes (op, key, length —
+/// everything but the checksum field itself) followed by the payload,
+/// so a flipped bit anywhere in the record fails verification, not
+/// just payload damage.
+fn seg_record_crc(op: u8, key: ChunkKey, payload: &[u8]) -> u64 {
+    let head = seg_header_bytes(op, key, payload.len() as u64, 0);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in head[..SEG_HEADER - 8].iter().chain(payload.iter()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Open (or create) one segment file for appending and positional
+/// reads. Append mode keeps the kernel positioning every write at the
+/// true end of file, so the writer never seeks.
+fn open_segment(dir: &Path, id: u64, fresh: bool) -> std::io::Result<std::fs::File> {
+    let mut opts = std::fs::OpenOptions::new();
+    opts.read(true).append(true);
+    if fresh {
+        opts.create_new(true);
+    }
+    opts.open(seg_path(dir, id))
+}
+
+/// Positional read of `len` bytes at `offset` — the portable stand-in
+/// for an mmap'd view. Unix reads through the shared handle without
+/// moving any cursor; elsewhere the segment is reopened by path so the
+/// append cursor is never disturbed.
+#[cfg(unix)]
+fn pread_exact(seg: &SegmentFile, offset: u64, len: usize) -> std::io::Result<Vec<u8>> {
+    use std::os::unix::fs::FileExt;
+    let mut buf = vec![0u8; len];
+    seg.file.read_exact_at(&mut buf, offset)?;
+    Ok(buf)
+}
+
+#[cfg(not(unix))]
+fn pread_exact(seg: &SegmentFile, offset: u64, len: usize) -> std::io::Result<Vec<u8>> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = std::fs::File::open(&seg.path)?;
+    f.seek(SeekFrom::Start(offset))?;
+    let mut buf = vec![0u8; len];
+    f.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Packed segment-log chunk store: a node directory holding a few
+/// large append-only `seg-<n>.log` files plus the replay-ordered
+/// segment list (`segments.meta`). Chunks are framed as
+/// `[op][file][chunk][len][crc]` records (33-byte little-endian
+/// header, FNV-1a over header + payload) appended to the active
+/// segment; a compact in-memory index maps each key to its segment and
+/// offset, so `contains`/`used_bytes`/`chunk_count` never touch disk.
+///
+/// # Why a packed log
+///
+/// File-per-chunk collapses at the millions-of-tiny-chunks scale the
+/// north star demands: one inode, one dirent, and at least one fsync
+/// per chunk. The packed log amortizes all three — a tiny put is one
+/// buffered append, fsynced on the group-commit boundary
+/// ([`SegConfig::group_commit_bytes`]), and the directory holds
+/// O(segments) files regardless of chunk count.
+///
+/// # Durability contract
+///
+/// A put is durable once its group commits: a crash can cost at most
+/// the unsynced tail of the active segment, which
+/// [`SegBackend::open_existing`] tears off cleanly. Set
+/// [`SegConfig::group_commit_bytes`] to `0` for the file backend's
+/// fsync-per-put discipline.
+///
+/// # Lock scope (the pipelined data path)
+///
+/// Same discipline as [`FileBackend`]: **no store lock is ever held
+/// across segment I/O**. Mutations reserve the per-key in-flight slot,
+/// append under the backend's own writer mutex (the log *is* the
+/// serialization point, exactly like the manifest), and publish with a
+/// metadata-only index insert afterwards. Reads snapshot the record
+/// under the index read lock and fetch the payload outside it: sealed
+/// segments from an `Arc`-mapped whole-segment buffer (the mmap-style
+/// zero-syscall path, byte-budgeted), the active segment via
+/// positional reads that never move the append cursor. Checksums are
+/// verified on every read; a failure re-checks the index — a delete or
+/// compaction race retries against the new truth — before counting a
+/// genuine fault in [`ChunkBackend::read_errors`].
+///
+/// # Compaction
+///
+/// Overwrites and deletes only append (a tombstone for deletes); the
+/// space comes back when [`SegBackend::maintain`] rewrites sealed
+/// segments once dead bytes pass [`SegConfig::compact_dead_bytes`].
+/// The store kicks `maintain` on its I/O pool after delete, reclaim,
+/// and churn sweeps, so reclaimed chunks actually return space.
+pub struct SegBackend {
+    dir: PathBuf,
+    /// Handle on the directory itself, for fsyncing renames into it.
+    dir_handle: std::fs::File,
+    cfg: SegConfig,
+    /// Metadata-only index: key → segment location. Never held across
+    /// segment I/O.
+    index: RwLock<HashMap<ChunkKey, SegRecord>>,
+    /// Open segment handles by id; reads clone the `Arc` under the
+    /// read guard and do positional I/O outside it.
+    segments: RwLock<HashMap<u64, Arc<SegmentFile>>>,
+    /// Append state, under its own short mutex.
+    writer: Mutex<SegWriter>,
+    mapped: Mutex<MappedSegs>,
+    /// Per-key in-flight mutation table (see [`Inflight`]).
+    inflight: Inflight,
+    /// The active (unsealed) segment id, readable without the writer
+    /// mutex so the read path can route sealed segments to the map.
+    active_id: AtomicU64,
+    /// Live payload bytes.
+    used: AtomicU64,
+    /// Bytes no live record references (framing headers included).
+    dead: AtomicU64,
+    /// Single-flight latch for compaction.
+    compacting: AtomicBool,
+    read_failures: AtomicU64,
+}
+
+impl SegBackend {
+    /// Open a **fresh** backend over `dir`: create the directory, the
+    /// first segment, and the segment list. Refuses a directory that
+    /// already carries a segment list — re-open such a directory with
+    /// [`SegBackend::open_existing`] instead of silently shadowing its
+    /// chunks.
+    pub fn new(dir: &Path) -> Result<Self, StorageError> {
+        Self::with_config(dir, SegConfig::default())
+    }
+
+    /// [`SegBackend::new`] with explicit tuning.
+    pub fn with_config(dir: &Path, cfg: SegConfig) -> Result<Self, StorageError> {
+        std::fs::create_dir_all(dir).map_err(|e| {
+            StorageError::Invalid(format!("create backend dir {}: {e}", dir.display()))
+        })?;
+        if dir.join(SEG_META).exists() {
+            return Err(StorageError::Invalid(format!(
+                "backend dir {} holds a previous store's segment list; open_existing it \
+                 instead of silently shadowing its chunks",
+                dir.display()
+            )));
+        }
+        let dir_handle = std::fs::File::open(dir)
+            .map_err(|e| StorageError::Invalid(format!("open backend dir: {e}")))?;
+        let file = open_segment(dir, 0, true)
+            .map_err(|e| StorageError::Invalid(format!("create segment: {e}")))?;
+        let backend = SegBackend {
+            dir: dir.to_path_buf(),
+            dir_handle,
+            cfg,
+            index: RwLock::new(HashMap::new()),
+            segments: RwLock::new(HashMap::from([(
+                0,
+                Arc::new(SegmentFile {
+                    path: seg_path(dir, 0),
+                    file,
+                }),
+            )])),
+            writer: Mutex::new(SegWriter {
+                active: 0,
+                offset: 0,
+                unsynced: 0,
+                next_id: 1,
+                order: vec![0],
+            }),
+            mapped: Mutex::new(MappedSegs::default()),
+            inflight: Inflight::default(),
+            active_id: AtomicU64::new(0),
+            used: AtomicU64::new(0),
+            dead: AtomicU64::new(0),
+            compacting: AtomicBool::new(false),
+            read_failures: AtomicU64::new(0),
+        };
+        backend
+            .write_meta(&[0])
+            .map_err(|e| StorageError::Invalid(format!("write segment list: {e}")))?;
+        Ok(backend)
+    }
+
+    /// Re-open a segment directory left by a previous store: replay
+    /// every listed segment in order, tear off torn tails, skip
+    /// checksum-corrupt records, sweep crash debris, and rebuild the
+    /// index.
+    ///
+    /// * The segment list names the live segments in replay order;
+    ///   compaction flips it atomically, so a rewrite the crash
+    ///   interrupted leaves only *unlisted* files — swept here
+    ///   (counted in [`NodeRecovery::orphan_files`] along with stale
+    ///   `*.tmp` files), never replayed. A missing list (the crash
+    ///   predates the first publish becoming durable) falls back to
+    ///   ascending-id order over whatever segments exist.
+    /// * A record cut short by the crash — short header, short
+    ///   payload, or unrecognizable op byte — tears off the rest of
+    ///   its segment (counted in [`NodeRecovery::torn_records`]); the
+    ///   file is truncated back to its last good record so new appends
+    ///   never fuse onto wreckage.
+    /// * A full-length record whose checksum fails is skipped alone
+    ///   (counted in [`NodeRecovery::corrupt_chunks`]) — the framing
+    ///   is intact, so the records after it still replay.
+    pub fn open_existing(dir: &Path) -> Result<(Self, NodeRecovery), StorageError> {
+        Self::open_existing_with(dir, SegConfig::default())
+    }
+
+    /// [`SegBackend::open_existing`] with explicit tuning.
+    pub fn open_existing_with(
+        dir: &Path,
+        cfg: SegConfig,
+    ) -> Result<(Self, NodeRecovery), StorageError> {
+        if !dir.is_dir() {
+            return Err(StorageError::Invalid(format!(
+                "backend dir {} does not exist",
+                dir.display()
+            )));
+        }
+        let mut recovery = NodeRecovery::default();
+        let listed: Vec<u64> = match std::fs::read_to_string(dir.join(SEG_META)) {
+            Ok(text) => text.lines().filter_map(parse_seg_name).collect(),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                // No durable list: best effort over whatever segments
+                // exist, oldest id first.
+                let mut ids: Vec<u64> = match std::fs::read_dir(dir) {
+                    Ok(entries) => entries
+                        .flatten()
+                        .filter_map(|e| parse_seg_name(&e.file_name().to_string_lossy()))
+                        .collect(),
+                    Err(_) => Vec::new(),
+                };
+                ids.sort_unstable();
+                ids
+            }
+            Err(e) => {
+                return Err(StorageError::Invalid(format!(
+                    "read segment list in {}: {e}",
+                    dir.display()
+                )));
+            }
+        };
+
+        let mut replayed: HashMap<ChunkKey, SegRecord> = HashMap::new();
+        let mut segments: HashMap<u64, Arc<SegmentFile>> = HashMap::new();
+        let mut kept: Vec<u64> = Vec::new();
+        let mut total_bytes = 0u64;
+        for id in &listed {
+            let path = seg_path(dir, *id);
+            let raw = match std::fs::read(&path) {
+                Ok(raw) => raw,
+                Err(_) => {
+                    // Listed but unreadable: its records are lost; the
+                    // segments around it still replay.
+                    recovery.torn_records += 1;
+                    continue;
+                }
+            };
+            let mut off = 0usize;
+            let mut valid = 0usize;
+            loop {
+                if off == raw.len() {
+                    break;
+                }
+                if off + SEG_HEADER > raw.len() {
+                    recovery.torn_records += 1;
+                    break;
+                }
+                let Some((op, key, len, crc)) = seg_parse_header(&raw[off..off + SEG_HEADER])
+                else {
+                    recovery.torn_records += 1;
+                    break;
+                };
+                let start = off + SEG_HEADER;
+                if start as u64 + len > raw.len() as u64 {
+                    recovery.torn_records += 1;
+                    break;
+                }
+                let end = start + len as usize;
+                let payload = &raw[start..end];
+                if seg_record_crc(op, key, payload) == crc {
+                    if op == SEG_PUT {
+                        replayed.insert(
+                            key,
+                            SegRecord {
+                                seg: *id,
+                                offset: start as u64,
+                                len,
+                                crc,
+                            },
+                        );
+                    } else {
+                        replayed.remove(&key);
+                    }
+                } else {
+                    recovery.corrupt_chunks += 1;
+                }
+                off = end;
+                valid = end;
+            }
+            let file = open_segment(dir, *id, false)
+                .map_err(|e| StorageError::Invalid(format!("reopen segment: {e}")))?;
+            if valid < raw.len() {
+                // Torn or garbled tail: truncate back to the last good
+                // record so new appends start on a clean boundary.
+                file.set_len(valid as u64).map_err(|e| {
+                    StorageError::Invalid(format!("truncate torn segment: {e}"))
+                })?;
+            }
+            total_bytes += valid as u64;
+            segments.insert(*id, Arc::new(SegmentFile { path, file }));
+            kept.push(*id);
+        }
+
+        // Sweep crash debris: segment files the list never published (a
+        // compaction the crash interrupted) and stale temp files.
+        // Nothing may resurrect from them.
+        let listed_set: HashSet<u64> = listed.iter().copied().collect();
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if let Some(id) = parse_seg_name(&name) {
+                    if !listed_set.contains(&id) {
+                        recovery.orphan_files += 1;
+                        let _ = std::fs::remove_file(entry.path());
+                    }
+                } else if name.ends_with(".tmp") {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+
+        // Resume appending to the last listed segment, or a fresh one
+        // when nothing survived.
+        let dir_handle = std::fs::File::open(dir)
+            .map_err(|e| StorageError::Invalid(format!("open backend dir: {e}")))?;
+        let mut next_id = kept.iter().copied().max().map_or(0, |m| m + 1);
+        let (active, offset) = if let Some(id) = kept.last().copied() {
+            let len = std::fs::metadata(seg_path(dir, id))
+                .map(|m| m.len())
+                .unwrap_or(0);
+            (id, len)
+        } else {
+            let id = next_id;
+            next_id += 1;
+            let file = open_segment(dir, id, true)
+                .map_err(|e| StorageError::Invalid(format!("create segment: {e}")))?;
+            segments.insert(
+                id,
+                Arc::new(SegmentFile {
+                    path: seg_path(dir, id),
+                    file,
+                }),
+            );
+            kept.push(id);
+            (id, 0)
+        };
+
+        let used: u64 = replayed.values().map(|r| r.len).sum();
+        let live_framed: u64 = replayed.values().map(|r| r.len + SEG_HEADER as u64).sum();
+        recovery.chunks_recovered = replayed.len();
+        recovery.bytes_recovered = used;
+        let backend = SegBackend {
+            dir: dir.to_path_buf(),
+            dir_handle,
+            cfg,
+            index: RwLock::new(replayed),
+            segments: RwLock::new(segments),
+            writer: Mutex::new(SegWriter {
+                active,
+                offset,
+                unsynced: 0,
+                next_id,
+                order: kept.clone(),
+            }),
+            mapped: Mutex::new(MappedSegs::default()),
+            inflight: Inflight::default(),
+            active_id: AtomicU64::new(active),
+            used: AtomicU64::new(used),
+            dead: AtomicU64::new(total_bytes.saturating_sub(live_framed)),
+            compacting: AtomicBool::new(false),
+            read_failures: AtomicU64::new(0),
+        };
+        // Re-publish the list: prunes the fallback ordering and any
+        // listed segment that vanished; a no-op otherwise.
+        backend
+            .write_meta(&kept)
+            .map_err(|e| StorageError::Invalid(format!("write segment list: {e}")))?;
+        Ok((backend, recovery))
+    }
+
+    /// Atomically publish the segment list: temp file + fsync + rename
+    /// + directory fsync. The list is recovery's source of truth, so
+    /// this rewrite is the commit point of both segment rolls and
+    /// compaction flips.
+    fn write_meta(&self, order: &[u64]) -> std::io::Result<()> {
+        let tmp = self.dir.join(".segments.meta.tmp");
+        let mut f = std::fs::File::create(&tmp)?;
+        for id in order {
+            writeln!(f, "{}", seg_file_name(*id))?;
+        }
+        f.sync_all()?;
+        std::fs::rename(&tmp, self.dir.join(SEG_META))?;
+        self.dir_handle.sync_all()
+    }
+
+    /// Seal the active segment (final fsync) and start a fresh one,
+    /// publishing the extended segment list before any record lands in
+    /// the new file. Called under the writer mutex.
+    fn roll(&self, w: &mut SegWriter) -> Result<(), StorageError> {
+        if w.unsynced > 0 {
+            let sealed = self.segments.read().unwrap().get(&w.active).cloned();
+            if let Some(sealed) = sealed {
+                sealed
+                    .file
+                    .sync_all()
+                    .map_err(|e| StorageError::Invalid(format!("seal segment: {e}")))?;
+            }
+            w.unsynced = 0;
+        }
+        let id = w.next_id;
+        let file = open_segment(&self.dir, id, true)
+            .map_err(|e| StorageError::Invalid(format!("create segment: {e}")))?;
+        self.segments.write().unwrap().insert(
+            id,
+            Arc::new(SegmentFile {
+                path: seg_path(&self.dir, id),
+                file,
+            }),
+        );
+        let mut order = w.order.clone();
+        order.push(id);
+        if let Err(e) = self.write_meta(&order) {
+            // The new segment never activated: take it back out so a
+            // retried roll can re-create it.
+            self.segments.write().unwrap().remove(&id);
+            let _ = std::fs::remove_file(seg_path(&self.dir, id));
+            return Err(StorageError::Invalid(format!("publish segment list: {e}")));
+        }
+        w.order = order;
+        w.next_id = id + 1;
+        w.active = id;
+        w.offset = 0;
+        self.active_id.store(id, Ordering::Release);
+        Ok(())
+    }
+
+    /// Append one framed record to the active segment under the writer
+    /// mutex, rolling first when it would overflow, group-committing
+    /// per [`SegConfig::group_commit_bytes`]. Returns the segment id
+    /// and payload offset where the record landed.
+    fn append_record(
+        &self,
+        op: u8,
+        key: ChunkKey,
+        payload: &[u8],
+        crc: u64,
+    ) -> Result<(u64, u64), StorageError> {
+        let total = (SEG_HEADER + payload.len()) as u64;
+        let mut w = self.writer.lock().unwrap();
+        if w.offset > 0 && w.offset + total > self.cfg.segment_bytes {
+            self.roll(&mut w)?;
+        }
+        let seg = self
+            .segments
+            .read()
+            .unwrap()
+            .get(&w.active)
+            .cloned()
+            .expect("active segment is always open");
+        let mut buf = Vec::with_capacity(total as usize);
+        buf.extend_from_slice(&seg_header_bytes(op, key, payload.len() as u64, crc));
+        buf.extend_from_slice(payload);
+        if let Err(e) = (&seg.file).write_all(&buf) {
+            // Contain the wreckage: truncate back to the last record
+            // boundary so later appends cannot fuse onto a partial
+            // record (recovery would tear the whole tail off).
+            let _ = seg.file.set_len(w.offset);
+            return Err(StorageError::Invalid(format!(
+                "append chunk {}#{} to {}: {e}",
+                key.0 .0,
+                key.1,
+                self.dir.display()
+            )));
+        }
+        let payload_off = w.offset + SEG_HEADER as u64;
+        w.offset += total;
+        w.unsynced += total;
+        if self.cfg.group_commit_bytes == 0 || w.unsynced >= self.cfg.group_commit_bytes {
+            if let Err(e) = seg.file.sync_all() {
+                return Err(StorageError::Invalid(format!(
+                    "commit segment in {}: {e}",
+                    self.dir.display()
+                )));
+            }
+            w.unsynced = 0;
+        }
+        Ok((w.active, payload_off))
+    }
+
+    /// Read one record's payload and verify its checksum. `None` means
+    /// it could not be read back intact *right now* — the caller
+    /// decides whether that is a benign race (the index moved on) or a
+    /// fault.
+    fn read_record(&self, key: ChunkKey, rec: SegRecord) -> Option<Vec<u8>> {
+        let payload = self.read_payload(rec)?;
+        (seg_record_crc(SEG_PUT, key, &payload) == rec.crc).then_some(payload)
+    }
+
+    /// Fetch `rec`'s payload bytes: sealed segments serve from the
+    /// `Arc`-mapped buffer (no syscall), everything else — the active
+    /// segment, or a sealed one past the map budget — takes a
+    /// positional read through the shared handle.
+    fn read_payload(&self, rec: SegRecord) -> Option<Vec<u8>> {
+        if rec.seg != self.active_id.load(Ordering::Acquire) {
+            if let Some(buf) = self.mapped_segment(rec.seg) {
+                let start = rec.offset as usize;
+                let end = start.checked_add(rec.len as usize)?;
+                if end <= buf.len() {
+                    return Some(buf[start..end].to_vec());
+                }
+                return None;
+            }
+        }
+        let seg = self.segments.read().unwrap().get(&rec.seg).cloned()?;
+        pread_exact(&seg, rec.offset, rec.len as usize).ok()
+    }
+
+    /// The whole-segment buffer for a sealed segment, loaded on first
+    /// touch and evicted oldest-first past the byte budget. `None`
+    /// when the segment alone exceeds the budget (a positional read is
+    /// cheaper than churning the whole map) or the load failed.
+    fn mapped_segment(&self, id: u64) -> Option<Arc<Vec<u8>>> {
+        if let Some(buf) = self.mapped.lock().unwrap().bufs.get(&id) {
+            return Some(Arc::clone(buf));
+        }
+        let seg = self.segments.read().unwrap().get(&id).cloned()?;
+        let raw = std::fs::read(&seg.path).ok()?;
+        if raw.len() as u64 > self.cfg.map_budget_bytes {
+            return None;
+        }
+        let buf = Arc::new(raw);
+        let mut mapped = self.mapped.lock().unwrap();
+        if let Some(existing) = mapped.bufs.get(&id) {
+            // Two readers raced the first touch; keep one buffer.
+            return Some(Arc::clone(existing));
+        }
+        mapped.bytes += buf.len() as u64;
+        mapped.bufs.insert(id, Arc::clone(&buf));
+        mapped.order.push_back(id);
+        while mapped.bytes > self.cfg.map_budget_bytes {
+            let Some(oldest) = mapped.order.pop_front() else {
+                break;
+            };
+            if let Some(b) = mapped.bufs.remove(&oldest) {
+                mapped.bytes -= b.len() as u64;
+            }
+        }
+        Some(buf)
+    }
+
+    /// Has enough garbage accumulated to justify a rewrite?
+    fn compact_pending(&self) -> bool {
+        self.dead.load(Ordering::Relaxed) >= self.cfg.compact_dead_bytes
+    }
+
+    /// Rewrite sealed segments, dropping dead records. Single-flight;
+    /// concurrent callers — and calls with nothing to do — return
+    /// `false` immediately. This is [`ChunkBackend::maintain`] for the
+    /// packed log; the store schedules it on the I/O pool.
+    ///
+    /// The protocol, crash-safe at every step because the segment-list
+    /// flip is the only commit point:
+    /// 1. Snapshot the sealed segment ids (forcing a roll first when
+    ///    all the garbage sits in the active segment) and the live
+    ///    records pointing into them.
+    /// 2. Copy those records into fresh segments written as `*.tmp`,
+    ///    fsynced, then renamed into place — still unlisted, so a
+    ///    crash here leaves only orphans for recovery to sweep.
+    /// 3. Flip: splice the rewrites in front of the surviving order
+    ///    and atomically publish the new segment list. Replay order is
+    ///    preserved — anything written since the snapshot sits later
+    ///    in the list and still wins.
+    /// 4. Retarget index entries that still point into the compacted
+    ///    segments (a chunk overwritten or deleted mid-compaction
+    ///    keeps its newer truth; its copy in the rewrite is just dead
+    ///    weight), then drop handles, mapped buffers, and the old
+    ///    files. A reader mid-`get` keeps its `Arc`'d handle across
+    ///    the unlink; its retry re-reads the index and lands on the
+    ///    rewrite.
+    pub fn maintain(&self) -> bool {
+        lockscope::assert_unlocked("SegBackend::maintain");
+        if !self.compact_pending() {
+            return false;
+        }
+        if self.compacting.swap(true, Ordering::SeqCst) {
+            return false;
+        }
+        let did = self.compact().unwrap_or(false);
+        self.compacting.store(false, Ordering::SeqCst);
+        did
+    }
+
+    fn compact(&self) -> Result<bool, StorageError> {
+        // Step 1: the sealed snapshot.
+        let sealed: Vec<u64> = {
+            let mut w = self.writer.lock().unwrap();
+            if w.order.len() <= 1 {
+                if w.offset == 0 {
+                    return Ok(false);
+                }
+                // All the garbage sits in the active segment: seal it
+                // so the rewrite below can reclaim the space.
+                self.roll(&mut w)?;
+            }
+            w.order[..w.order.len() - 1].to_vec()
+        };
+        if sealed.is_empty() {
+            return Ok(false);
+        }
+        let sealed_set: HashSet<u64> = sealed.iter().copied().collect();
+        let mut live: Vec<(ChunkKey, SegRecord)> = self
+            .index
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|(_, r)| sealed_set.contains(&r.seg))
+            .map(|(k, r)| (*k, *r))
+            .collect();
+        // Deterministic output layout.
+        live.sort_unstable_by_key(|(_, r)| (r.seg, r.offset));
+        let old_bytes: u64 = sealed
+            .iter()
+            .filter_map(|id| std::fs::metadata(seg_path(&self.dir, *id)).ok())
+            .map(|m| m.len())
+            .sum();
+
+        // Step 2: copy live records into fresh segments.
+        let io_err = |what: &str, e: std::io::Error| {
+            StorageError::Invalid(format!("compact {}: {what}: {e}", self.dir.display()))
+        };
+        let mut new_segs: Vec<u64> = Vec::new();
+        let mut moved: Vec<(ChunkKey, SegRecord, SegRecord)> = Vec::new();
+        let mut new_bytes = 0u64;
+        let mut cur: Option<(u64, std::fs::File, u64)> = None;
+        for (key, old) in live {
+            let payload = match self.read_record(key, old) {
+                Some(p) => p,
+                // A sealed record that cannot be read back intact:
+                // abort with everything in place — reads will surface
+                // the damage, and unlinking the segment here would
+                // destroy the healthy records around it.
+                None => return Ok(false),
+            };
+            let total = (SEG_HEADER + payload.len()) as u64;
+            if let Some((id, f, len)) = cur.take() {
+                if len > 0 && len + total > self.cfg.segment_bytes {
+                    f.sync_all().map_err(|e| io_err("seal rewrite", e))?;
+                    new_segs.push(id);
+                    new_bytes += len;
+                } else {
+                    cur = Some((id, f, len));
+                }
+            }
+            if cur.is_none() {
+                let id = {
+                    let mut w = self.writer.lock().unwrap();
+                    let id = w.next_id;
+                    w.next_id += 1;
+                    id
+                };
+                let f = std::fs::File::create(tmp_seg_path(&self.dir, id))
+                    .map_err(|e| io_err("create rewrite", e))?;
+                cur = Some((id, f, 0));
+            }
+            let (id, mut f, len) = cur.take().unwrap();
+            let mut buf = Vec::with_capacity(total as usize);
+            buf.extend_from_slice(&seg_header_bytes(SEG_PUT, key, old.len, old.crc));
+            buf.extend_from_slice(&payload);
+            f.write_all(&buf).map_err(|e| io_err("write rewrite", e))?;
+            moved.push((
+                key,
+                old,
+                SegRecord {
+                    seg: id,
+                    offset: len + SEG_HEADER as u64,
+                    len: old.len,
+                    crc: old.crc,
+                },
+            ));
+            cur = Some((id, f, len + total));
+        }
+        if let Some((id, f, len)) = cur.take() {
+            f.sync_all().map_err(|e| io_err("seal rewrite", e))?;
+            new_segs.push(id);
+            new_bytes += len;
+        }
+        for id in &new_segs {
+            std::fs::rename(tmp_seg_path(&self.dir, *id), seg_path(&self.dir, *id))
+                .map_err(|e| io_err("publish rewrite", e))?;
+        }
+        self.dir_handle
+            .sync_all()
+            .map_err(|e| io_err("sync dir", e))?;
+        // Open read handles before the index flip so a get landing on
+        // a retargeted record finds its segment.
+        {
+            let mut segs = self.segments.write().unwrap();
+            for id in &new_segs {
+                let file = open_segment(&self.dir, *id, false)
+                    .map_err(|e| io_err("reopen rewrite", e))?;
+                segs.insert(
+                    *id,
+                    Arc::new(SegmentFile {
+                        path: seg_path(&self.dir, *id),
+                        file,
+                    }),
+                );
+            }
+        }
+
+        // Step 3: the flip.
+        {
+            let mut w = self.writer.lock().unwrap();
+            let mut order = new_segs.clone();
+            order.extend(w.order.iter().copied().filter(|id| !sealed_set.contains(id)));
+            self.write_meta(&order)
+                .map_err(|e| io_err("publish segment list", e))?;
+            w.order = order;
+        }
+
+        // Step 4: retarget, unaccount, drop.
+        let mut stale = 0u64;
+        {
+            let mut idx = self.index.write().unwrap();
+            for (key, old, new) in &moved {
+                match idx.get_mut(key) {
+                    Some(r) if *r == *old => *r = *new,
+                    _ => stale += SEG_HEADER as u64 + old.len,
+                }
+            }
+        }
+        {
+            let mut segs = self.segments.write().unwrap();
+            for id in &sealed {
+                segs.remove(id);
+            }
+        }
+        {
+            let mut mapped = self.mapped.lock().unwrap();
+            for id in &sealed {
+                if let Some(buf) = mapped.bufs.remove(id) {
+                    mapped.bytes -= buf.len() as u64;
+                }
+            }
+            mapped.order.retain(|id| !sealed_set.contains(id));
+        }
+        for id in &sealed {
+            let _ = std::fs::remove_file(seg_path(&self.dir, *id));
+        }
+        let freed = old_bytes.saturating_sub(new_bytes);
+        let freed_now = freed.min(self.dead.load(Ordering::Relaxed));
+        self.dead.fetch_sub(freed_now, Ordering::Relaxed);
+        self.dead.fetch_add(stale, Ordering::Relaxed);
+        Ok(true)
+    }
+}
+
+impl ChunkBackend for SegBackend {
+    fn put(&self, key: ChunkKey, bytes: &[u8]) -> Result<(), StorageError> {
+        lockscope::assert_unlocked("SegBackend::put");
+        // Reserve → write → publish, exactly the file backend's
+        // discipline: the per-key slot serializes same-key mutations,
+        // the append runs under the backend's writer mutex alone, and
+        // the metadata-only index insert afterwards is the
+        // linearization point.
+        let _slot = self.inflight.lock(key);
+        let crc = seg_record_crc(SEG_PUT, key, bytes);
+        match self.append_record(SEG_PUT, key, bytes, crc) {
+            Ok((seg, offset)) => {
+                let rec = SegRecord {
+                    seg,
+                    offset,
+                    len: bytes.len() as u64,
+                    crc,
+                };
+                if let Some(old) = self.index.write().unwrap().insert(key, rec) {
+                    self.used.fetch_sub(old.len, Ordering::Relaxed);
+                    self.dead
+                        .fetch_add(old.len + SEG_HEADER as u64, Ordering::Relaxed);
+                }
+                self.used.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                // The record's durability is undefined (a group-commit
+                // fsync can fail after the bytes landed). Make the
+                // failure consistent, exactly like the file backend:
+                // the chunk is gone — retire any old entry and lay a
+                // best-effort tombstone so replay cannot resurrect the
+                // half-committed record.
+                if let Some(old) = self.index.write().unwrap().remove(&key) {
+                    self.used.fetch_sub(old.len, Ordering::Relaxed);
+                    self.dead
+                        .fetch_add(old.len + SEG_HEADER as u64, Ordering::Relaxed);
+                }
+                let del_crc = seg_record_crc(SEG_DEL, key, &[]);
+                let _ = self.append_record(SEG_DEL, key, &[], del_crc);
+                Err(e)
+            }
+        }
+    }
+
+    fn get(&self, key: ChunkKey) -> Result<Option<Vec<u8>>, StorageError> {
+        lockscope::assert_unlocked("SegBackend::get");
+        // Snapshot the record under the read lock, read the segment
+        // with no lock held, verify against the snapshot. On failure
+        // re-check the index: entry gone → the benign delete race
+        // (absent, not a fault); entry moved → a compaction retargeted
+        // it — retry against the new truth before declaring a genuine
+        // disk fault.
+        const ATTEMPTS: usize = 3;
+        for attempt in 0..ATTEMPTS {
+            let rec = match self.index.read().unwrap().get(&key) {
+                Some(rec) => *rec,
+                None => return Ok(None),
+            };
+            if let Some(bytes) = self.read_record(key, rec) {
+                return Ok(Some(bytes));
+            }
+            if attempt + 1 < ATTEMPTS {
+                std::thread::yield_now();
+            }
+        }
+        self.read_failures.fetch_add(1, Ordering::Relaxed);
+        Err(StorageError::Invalid(format!(
+            "chunk {}#{} unreadable in {}",
+            key.0 .0,
+            key.1,
+            self.dir.display()
+        )))
+    }
+
+    fn delete(&self, key: ChunkKey) {
+        lockscope::assert_unlocked("SegBackend::delete");
+        // Retire the index entry first — a reader that loses the race
+        // finds the entry gone and reports absent — then log the
+        // tombstone so replay agrees.
+        let _slot = self.inflight.lock(key);
+        let removed = self.index.write().unwrap().remove(&key);
+        if let Some(old) = removed {
+            self.used.fetch_sub(old.len, Ordering::Relaxed);
+            // The retired record and the tombstone itself are both
+            // dead weight in the log now.
+            self.dead
+                .fetch_add(old.len + 2 * SEG_HEADER as u64, Ordering::Relaxed);
+            let crc = seg_record_crc(SEG_DEL, key, &[]);
+            let _ = self.append_record(SEG_DEL, key, &[], crc);
+        }
+    }
+
+    fn contains(&self, key: ChunkKey) -> bool {
+        self.index.read().unwrap().contains_key(&key)
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    fn chunk_count(&self) -> usize {
+        self.index.read().unwrap().len()
+    }
+
+    fn read_errors(&self) -> u64 {
+        self.read_failures.load(Ordering::Relaxed)
+    }
+
+    fn chunk_keys(&self) -> Vec<ChunkKey> {
+        self.index.read().unwrap().keys().copied().collect()
+    }
+
+    fn maintain(&self) -> bool {
+        SegBackend::maintain(self)
+    }
 }
 
 /// Owner of an auto-created `--data-dir`: removes the whole tree on
@@ -1211,8 +2375,334 @@ mod tests {
     fn backend_kind_parse_and_label() {
         assert_eq!("mem".parse::<BackendKind>().unwrap(), BackendKind::Memory);
         assert_eq!("DISK".parse::<BackendKind>().unwrap(), BackendKind::Disk);
+        assert_eq!("seg".parse::<BackendKind>().unwrap(), BackendKind::Seg);
+        assert_eq!("Segment".parse::<BackendKind>().unwrap(), BackendKind::Seg);
         assert!("floppy".parse::<BackendKind>().is_err());
         assert_eq!(BackendKind::Memory.label(), "mem");
         assert_eq!(BackendKind::Disk.label(), "disk");
+        assert_eq!(BackendKind::Seg.label(), "seg");
+        assert!(!BackendKind::Memory.is_persistent());
+        assert!(BackendKind::Disk.is_persistent());
+        assert!(BackendKind::Seg.is_persistent());
+    }
+
+    #[test]
+    fn long_lived_manifest_stays_bounded() {
+        // The PR 5 follow-on bug: the manifest only compacted at
+        // reopen, so a long-lived node's log grew with its operation
+        // history. Churn one small key set far past the dead-record
+        // threshold and require the file to stay bounded by live
+        // chunks + threshold, not by the churn count.
+        let (dir, b) = temp_backend("boundedlog");
+        let rounds = MANIFEST_COMPACT_DEAD * 2;
+        for round in 0..rounds {
+            let k = key(1, round % 4);
+            b.put(k, &[round as u8; 64]).unwrap();
+            b.delete(k);
+        }
+        b.put(key(2, 0), &[9u8; 64]).unwrap();
+        let lines = std::fs::read_to_string(dir.join(MANIFEST))
+            .unwrap()
+            .lines()
+            .count() as u64;
+        assert!(
+            lines <= MANIFEST_COMPACT_DEAD + 8,
+            "manifest must stay bounded under churn: {lines} lines after {rounds} rounds"
+        );
+        // The compacted log still replays to the live truth.
+        drop(b);
+        let (b2, rec) = FileBackend::open_existing(&dir).unwrap();
+        assert_eq!(rec.chunks_recovered, 1);
+        assert_eq!(b2.get(key(2, 0)).unwrap(), Some(vec![9u8; 64]));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Tiny segments + per-record fsync: every structural edge (rolls,
+    /// group commit, compaction) triggers with a handful of small
+    /// chunks.
+    fn tiny_cfg() -> SegConfig {
+        SegConfig {
+            segment_bytes: 4096,
+            group_commit_bytes: 0,
+            compact_dead_bytes: 2048,
+            map_budget_bytes: 1 << 20,
+        }
+    }
+
+    fn temp_seg(tag: &str, cfg: SegConfig) -> (PathBuf, SegBackend) {
+        let dir = std::env::temp_dir().join(format!(
+            "woss-backend-test-{}-seg-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let backend = SegBackend::with_config(&dir, cfg).unwrap();
+        (dir, backend)
+    }
+
+    fn seg_disk_bytes(dir: &PathBuf) -> u64 {
+        std::fs::read_dir(dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| parse_seg_name(&e.file_name().to_string_lossy()).is_some())
+            .map(|e| e.metadata().unwrap().len())
+            .sum()
+    }
+
+    #[test]
+    fn seg_roundtrip_and_accounting() {
+        let (dir, b) = temp_seg("roundtrip", tiny_cfg());
+        let payload: Vec<u8> = (0..3000u32).map(|i| (i % 251) as u8).collect();
+        b.put(key(3, 2), &payload).unwrap();
+        assert_eq!(b.get(key(3, 2)).unwrap(), Some(payload));
+        assert_eq!(b.used_bytes(), 3000);
+        assert_eq!(b.chunk_count(), 1);
+        assert!(b.get(key(3, 3)).unwrap().is_none());
+        // Overwrite replaces the accounting; delete zeroes it.
+        b.put(key(3, 2), &[9u8; 10]).unwrap();
+        assert_eq!(b.used_bytes(), 10);
+        assert_eq!(b.get(key(3, 2)).unwrap(), Some(vec![9u8; 10]));
+        b.delete(key(3, 2));
+        b.delete(key(3, 2)); // idempotent
+        assert_eq!(b.used_bytes(), 0);
+        assert!(!b.contains(key(3, 2)));
+        assert_eq!(b.read_errors(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seg_packs_many_chunks_into_few_files() {
+        let (dir, b) = temp_seg("packed", tiny_cfg());
+        for c in 0..200u64 {
+            b.put(key(1, c), &[c as u8; 64]).unwrap();
+        }
+        for c in 0..200u64 {
+            assert_eq!(b.get(key(1, c)).unwrap(), Some(vec![c as u8; 64]));
+        }
+        let files = segment_files_under(&dir);
+        assert!(files > 1, "4 KiB segments must have rolled: {files}");
+        assert!(files < 20, "file count stays O(segments): {files}");
+        assert_eq!(chunk_files_under(&dir), 0, "no per-chunk files");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seg_fresh_open_refuses_previous_store_dir() {
+        let (dir, b) = temp_seg("refuse", tiny_cfg());
+        b.put(key(1, 0), &[1u8; 100]).unwrap();
+        drop(b);
+        assert!(
+            SegBackend::new(&dir).is_err(),
+            "a dir with a segment list must be open_existing'd, not shadowed"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seg_recovery_roundtrips_published_chunks() {
+        let (dir, b) = temp_seg("recover", tiny_cfg());
+        let p0: Vec<u8> = (0..5000u32).map(|i| (i % 13) as u8).collect();
+        let p1: Vec<u8> = (0..7000u32).map(|i| (i % 17) as u8).collect();
+        b.put(key(1, 0), &p0).unwrap();
+        b.put(key(1, 1), &p1).unwrap();
+        b.put(key(2, 0), &p0).unwrap();
+        b.delete(key(2, 0));
+        drop(b); // crash: no clean shutdown exists at this layer
+        let (b2, rec) = SegBackend::open_existing_with(&dir, tiny_cfg()).unwrap();
+        assert_eq!(rec.chunks_recovered, 2);
+        assert_eq!(rec.bytes_recovered, 12_000);
+        assert_eq!(rec.torn_records, 0);
+        assert_eq!(rec.corrupt_chunks, 0);
+        assert_eq!(b2.get(key(1, 0)).unwrap(), Some(p0));
+        assert_eq!(b2.get(key(1, 1)).unwrap(), Some(p1));
+        assert!(!b2.contains(key(2, 0)), "deleted chunk stays deleted");
+        assert_eq!(b2.used_bytes(), 12_000);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seg_torn_tail_is_discarded_valid_prefix_kept() {
+        let (dir, b) = temp_seg("torn", tiny_cfg());
+        b.put(key(1, 0), &[1u8; 100]).unwrap();
+        b.put(key(1, 1), &[2u8; 100]).unwrap();
+        drop(b);
+        // Simulate a crash mid-append: a record header cut short at
+        // the tail of the active segment.
+        let meta = std::fs::read_to_string(dir.join(SEG_META)).unwrap();
+        let last = meta.lines().last().unwrap().to_string();
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join(&last))
+            .unwrap();
+        f.write_all(&[SEG_PUT, 9, 9, 9]).unwrap();
+        drop(f);
+        let (b2, rec) = SegBackend::open_existing_with(&dir, tiny_cfg()).unwrap();
+        assert_eq!(rec.chunks_recovered, 2, "valid prefix survives");
+        assert_eq!(rec.torn_records, 1, "torn tail dropped");
+        assert_eq!(b2.get(key(1, 0)).unwrap(), Some(vec![1u8; 100]));
+        assert_eq!(b2.get(key(1, 1)).unwrap(), Some(vec![2u8; 100]));
+        // The truncation erased the tail: a second replay is clean.
+        drop(b2);
+        let (_b3, rec3) = SegBackend::open_existing_with(&dir, tiny_cfg()).unwrap();
+        assert_eq!(rec3.torn_records, 0, "truncation erased the torn tail");
+        assert_eq!(rec3.chunks_recovered, 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seg_corrupt_record_skipped_later_records_survive() {
+        let (dir, b) = temp_seg("corrupt", tiny_cfg());
+        b.put(key(1, 0), &[1u8; 100]).unwrap();
+        b.put(key(1, 1), &[2u8; 100]).unwrap();
+        b.put(key(1, 2), &[3u8; 100]).unwrap();
+        drop(b);
+        // Flip one payload byte in the middle record, framing intact:
+        // only that record may fall, and only to the checksum.
+        let seg0 = dir.join("seg-0.log");
+        let mut raw = std::fs::read(&seg0).unwrap();
+        let mid = (SEG_HEADER + 100) + SEG_HEADER + 50;
+        raw[mid] ^= 0xff;
+        std::fs::write(&seg0, &raw).unwrap();
+        let (b2, rec) = SegBackend::open_existing_with(&dir, tiny_cfg()).unwrap();
+        assert_eq!(rec.corrupt_chunks, 1, "the damaged record alone");
+        assert_eq!(rec.torn_records, 0);
+        assert_eq!(rec.chunks_recovered, 2, "records after the damage replay");
+        assert!(!b2.contains(key(1, 1)));
+        assert_eq!(b2.get(key(1, 2)).unwrap(), Some(vec![3u8; 100]));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seg_orphan_segments_and_tmp_files_swept() {
+        let (dir, b) = temp_seg("orphan", tiny_cfg());
+        b.put(key(1, 0), &[3u8; 100]).unwrap();
+        drop(b);
+        // A compaction the crash interrupted: an unlisted segment full
+        // of stale (but well-formed) records, plus a temp file caught
+        // mid-rewrite. Neither may resurrect anything.
+        let stale_key = key(8, 0);
+        let stale_crc = seg_record_crc(SEG_PUT, stale_key, b"dead");
+        let mut stale = seg_header_bytes(SEG_PUT, stale_key, 4, stale_crc).to_vec();
+        stale.extend_from_slice(b"dead");
+        std::fs::write(dir.join("seg-77.log"), &stale).unwrap();
+        std::fs::write(dir.join("seg-78.log.tmp"), &stale).unwrap();
+        let (b2, rec) = SegBackend::open_existing_with(&dir, tiny_cfg()).unwrap();
+        assert_eq!(rec.orphan_files, 1, "unlisted segment swept");
+        assert!(!dir.join("seg-77.log").exists());
+        assert!(!dir.join("seg-78.log.tmp").exists());
+        assert!(!b2.contains(stale_key), "nothing resurrects from debris");
+        assert_eq!(b2.get(key(1, 0)).unwrap(), Some(vec![3u8; 100]));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seg_compaction_reclaims_dead_bytes_and_preserves_live_chunks() {
+        let (dir, b) = temp_seg("compact", tiny_cfg());
+        for c in 0..40u64 {
+            b.put(key(1, c), &[c as u8; 200]).unwrap();
+        }
+        for c in 0..30u64 {
+            b.delete(key(1, c));
+        }
+        let before = seg_disk_bytes(&dir);
+        assert!(b.maintain(), "dead bytes past threshold must compact");
+        let after = seg_disk_bytes(&dir);
+        assert!(
+            after < before,
+            "compaction must shrink the log: {before} -> {after}"
+        );
+        for c in 30..40u64 {
+            assert_eq!(b.get(key(1, c)).unwrap(), Some(vec![c as u8; 200]));
+        }
+        for c in 0..30u64 {
+            assert!(b.get(key(1, c)).unwrap().is_none());
+        }
+        assert!(!b.maintain(), "nothing left to compact");
+        // Survives a reopen: the flipped segment list is the truth.
+        drop(b);
+        let (b2, rec) = SegBackend::open_existing_with(&dir, tiny_cfg()).unwrap();
+        assert_eq!(rec.chunks_recovered, 10);
+        for c in 30..40u64 {
+            assert_eq!(b2.get(key(1, c)).unwrap(), Some(vec![c as u8; 200]));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seg_compaction_rolls_active_when_garbage_is_unsealed() {
+        let cfg = SegConfig {
+            segment_bytes: 1 << 20,
+            group_commit_bytes: 0,
+            compact_dead_bytes: 512,
+            map_budget_bytes: 1 << 20,
+        };
+        let (dir, b) = temp_seg("rollcompact", cfg);
+        for c in 0..10u64 {
+            b.put(key(1, c), &[c as u8; 100]).unwrap();
+        }
+        for c in 0..9u64 {
+            b.delete(key(1, c));
+        }
+        // Everything sits in the one active segment; maintain must
+        // seal it first, then reclaim.
+        assert!(b.maintain());
+        assert_eq!(b.get(key(1, 9)).unwrap(), Some(vec![9u8; 100]));
+        assert_eq!(b.chunk_count(), 1);
+        let files = segment_files_under(&dir);
+        assert!(files <= 2, "rewrite + fresh active: {files}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seg_put_delete_race_never_leaves_index_and_log_disagreeing() {
+        let cfg = SegConfig {
+            segment_bytes: 1 << 18,
+            group_commit_bytes: 4096,
+            compact_dead_bytes: 16 << 10,
+            map_budget_bytes: 1 << 20,
+        };
+        let (dir, b) = temp_seg("race", cfg);
+        let b = Arc::new(b);
+        let payload = vec![7u8; 2048];
+        std::thread::scope(|scope| {
+            let putter = Arc::clone(&b);
+            let p = payload.clone();
+            scope.spawn(move || {
+                for _ in 0..300 {
+                    putter.put(key(1, 0), &p).unwrap();
+                }
+            });
+            let deleter = Arc::clone(&b);
+            scope.spawn(move || {
+                for _ in 0..300 {
+                    deleter.delete(key(1, 0));
+                }
+            });
+            // Compaction churns underneath the race: retargeted
+            // records must stay readable throughout.
+            let compactor = Arc::clone(&b);
+            scope.spawn(move || {
+                for _ in 0..50 {
+                    compactor.maintain();
+                    std::thread::yield_now();
+                }
+            });
+            let checker = Arc::clone(&b);
+            let p = payload.clone();
+            scope.spawn(move || {
+                for _ in 0..300 {
+                    // Present implies readable with the right bytes;
+                    // absent is fine. Never "present but unreadable".
+                    match checker.get(key(1, 0)) {
+                        Ok(Some(bytes)) => assert_eq!(bytes, p),
+                        Ok(None) => {}
+                        Err(e) => panic!("indexed chunk unreadable mid-race: {e}"),
+                    }
+                }
+            });
+        });
+        b.put(key(1, 0), &payload).unwrap();
+        assert_eq!(b.get(key(1, 0)).unwrap(), Some(payload));
+        assert_eq!(b.read_errors(), 0, "the race must not manufacture disk faults");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

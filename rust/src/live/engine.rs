@@ -69,7 +69,7 @@ pub struct LiveReport {
     /// had to write back under eviction pressure; 0 on the memory
     /// backend or when every scratch chunk died cache-resident.
     pub spilled_chunks: u64,
-    /// Chunk backend the store ran on (`mem` | `disk`).
+    /// Chunk backend the store ran on (`mem` | `disk` | `seg`).
     pub backend: &'static str,
     /// Chunk reads that failed on a present chunk (disk fault /
     /// corruption, counted per backend) — reads failed over to another

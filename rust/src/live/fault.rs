@@ -331,6 +331,13 @@ impl ChunkBackend for FaultBackend {
     fn chunk_keys(&self) -> Vec<ChunkKey> {
         self.inner.chunk_keys()
     }
+
+    fn maintain(&self) -> bool {
+        // Maintenance (e.g. segment compaction) is the inner backend's
+        // business; the decorator only schedules faults on the data
+        // path, so a faulted store still reclaims dead bytes.
+        self.inner.maintain()
+    }
 }
 
 #[cfg(test)]

@@ -35,8 +35,12 @@
 //! before, while [`backend::FileBackend`] spills each chunk to a file
 //! under `--data-dir` (temp-file + fsync + rename), turning the cache
 //! tier into a true memory-over-disk hot tier and lifting the store's
-//! capacity past RAM. The `live_throughput` and `live_cache` benches
-//! sweep both backends.
+//! capacity past RAM. [`backend::SegBackend`] replaces file-per-chunk
+//! with a few packed append-only segment logs per node
+//! (length+checksum-framed records, group commit, online compaction) —
+//! the layout that survives millions of tiny chunks without exhausting
+//! inodes or fsyncing once per chunk. The `live_throughput` and
+//! `live_cache` benches sweep all three backends.
 //!
 //! The disk tier is **crash-consistent and re-openable**: every chunk
 //! publish is recorded in a per-node append-only manifest (length +
@@ -87,8 +91,8 @@ pub mod fault;
 pub mod store;
 
 pub use backend::{
-    chunk_crc, chunk_files_under, BackendKind, ChunkBackend, FileBackend, MemoryBackend,
-    NodeRecovery,
+    chunk_crc, chunk_files_under, segment_files_under, BackendKind, ChunkBackend, FileBackend,
+    MemoryBackend, NodeRecovery, SegBackend, SegConfig,
 };
 pub use engine::{EngineOptions, LiveEngine, LiveReport};
 pub use fault::{FaultBackend, FaultControl, FaultSpec};

@@ -108,7 +108,7 @@
 
 use super::backend::{
     auto_data_dir, lockscope, AppendLog, BackendKind, ChunkBackend, ChunkKey, DirGuard,
-    FileBackend, MemoryBackend, NodeRecovery,
+    FileBackend, MemoryBackend, NodeRecovery, SegBackend,
 };
 use super::fault::{FaultBackend, FaultControl, FaultSpec};
 use crate::dispatch::{shard_for_path, PlacementCtx, Registry, ShardedPlacementState};
@@ -344,11 +344,11 @@ pub struct LiveTuning {
     /// can re-run every live test against the disk spill tier; an
     /// explicit value always wins.
     pub backend: BackendKind,
-    /// Root directory for the disk backend (one `node<i>/` subdirectory
-    /// per storage node). `None` lets the store create — and remove on
-    /// drop — a process-unique directory under `WOSS_DATA_DIR` (or the
-    /// system temp dir); a user-supplied directory is never deleted.
-    /// Ignored by the memory backend.
+    /// Root directory for the persistent backends (`disk` | `seg`;
+    /// one `node<i>/` subdirectory per storage node). `None` lets the
+    /// store create — and remove on drop — a process-unique directory
+    /// under `WOSS_DATA_DIR` (or the system temp dir); a user-supplied
+    /// directory is never deleted. Ignored by the memory backend.
     pub data_dir: Option<PathBuf>,
     /// Deterministic fault injection: when set, every node's chunk
     /// backend is wrapped in a [`FaultBackend`] drawing its schedule
@@ -1683,7 +1683,7 @@ impl LiveStore {
                     .collect();
                 (backends, None, None, None)
             }
-            BackendKind::Disk => {
+            BackendKind::Disk | BackendKind::Seg => {
                 // A user-supplied directory persists across the store's
                 // lifetime; an auto-created one is owned (removed when
                 // the store drops, after the replication workers join).
@@ -1720,16 +1720,24 @@ impl LiveStore {
                 // different registry, and a DSS store (tags inert)
                 // must keep those same files — they were ordinary
                 // durable data to it.
+                // `backend=` records the on-disk chunk layout so
+                // reopen dispatches to the right replay path; PR 5-era
+                // stores lack the field and are file-per-chunk.
                 write_durable(
                     &root.join(STORE_META),
                     &format!(
-                        "nodes={n_nodes} capacity={capacity} hints={}\n",
-                        u8::from(registry.hints_enabled())
+                        "nodes={n_nodes} capacity={capacity} hints={} backend={}\n",
+                        u8::from(registry.hints_enabled()),
+                        tuning.backend.label()
                     ),
                 )?;
                 let mut backends: Vec<Box<dyn ChunkBackend>> = Vec::with_capacity(n_nodes);
                 for i in 0..n_nodes {
-                    backends.push(Box::new(FileBackend::new(&root.join(format!("node{i}")))?));
+                    let node_dir = root.join(format!("node{i}"));
+                    backends.push(match tuning.backend {
+                        BackendKind::Seg => Box::new(SegBackend::new(&node_dir)?) as Box<dyn ChunkBackend>,
+                        _ => Box::new(FileBackend::new(&node_dir)?) as Box<dyn ChunkBackend>,
+                    });
                 }
                 let journal = std::fs::OpenOptions::new()
                     .create(true)
@@ -1815,14 +1823,17 @@ impl LiveStore {
         LiveStore::reopen_with(registry, data_dir, LiveTuning::default())
     }
 
-    /// Re-open a disk-backed store with explicit tuning (the backend is
-    /// forced to disk and `tuning.data_dir` is overridden by
-    /// `data_dir`; node count and capacity come from the store's own
-    /// `store.meta`).
+    /// Re-open a persistent store with explicit tuning (the backend
+    /// kind comes from the store's own `store.meta` — `tuning.backend`
+    /// is ignored, so a `disk` store reopens as `disk` and a `seg`
+    /// store as `seg` no matter what the caller passes — and
+    /// `tuning.data_dir` is overridden by `data_dir`; node count and
+    /// capacity likewise come from `store.meta`).
     ///
-    /// Recovery is bottom-up: per-node chunk manifests are replayed
-    /// and every surviving chunk file verified against its recorded
-    /// length and checksum ([`FileBackend::open_existing`]); the
+    /// Recovery is bottom-up: per-node chunk manifests or segment
+    /// logs are replayed and every surviving chunk verified against
+    /// its recorded length and checksum ([`FileBackend::open_existing`]
+    /// / [`SegBackend::open_existing`]); the
     /// namespace comes from the clean-shutdown snapshots when the
     /// `CLEAN` marker is present, else from journal salvage. A file
     /// survives only if every chunk verified on at least one holder
@@ -1843,6 +1854,9 @@ impl LiveStore {
         let mut n_nodes = 0usize;
         let mut capacity = 0u64;
         let mut creator_hints: Option<bool> = None;
+        // PR 5-era stores predate the `backend=` field; they are all
+        // file-per-chunk.
+        let mut backend_kind = BackendKind::Disk;
         for field in meta_raw.split_whitespace() {
             if let Some(v) = field.strip_prefix("nodes=") {
                 n_nodes = v
@@ -1854,6 +1868,10 @@ impl LiveStore {
                     .map_err(|e| StorageError::Invalid(format!("store.meta capacity: {e}")))?;
             } else if let Some(v) = field.strip_prefix("hints=") {
                 creator_hints = Some(v != "0");
+            } else if let Some(v) = field.strip_prefix("backend=") {
+                backend_kind = v
+                    .parse()
+                    .map_err(|e| StorageError::Invalid(format!("store.meta backend: {e}")))?;
             }
         }
         if n_nodes == 0 {
@@ -1865,17 +1883,30 @@ impl LiveStore {
 
         // Bottom layer first: replay + verify every node's chunks. A
         // node directory that never made it to disk (the store crashed
-        // during bring-up, after store.meta but before every
-        // FileBackend::new) is an empty node, not an error — the
+        // during bring-up, after store.meta but before every backend
+        // constructor ran) is an empty node, not an error — the
         // directory must stay reopenable at every point of its life.
-        let mut file_backends = Vec::with_capacity(n_nodes);
+        let mut file_backends: Vec<Box<dyn ChunkBackend>> = Vec::with_capacity(n_nodes);
         let mut node_recs = Vec::with_capacity(n_nodes);
         for i in 0..n_nodes {
             let node_dir = data_dir.join(format!("node{i}"));
-            let (b, rec) = if node_dir.is_dir() {
-                FileBackend::open_existing(&node_dir)?
-            } else {
-                (FileBackend::new(&node_dir)?, NodeRecovery::default())
+            let (b, rec): (Box<dyn ChunkBackend>, NodeRecovery) = match backend_kind {
+                BackendKind::Seg => {
+                    if node_dir.is_dir() {
+                        let (b, rec) = SegBackend::open_existing(&node_dir)?;
+                        (Box::new(b), rec)
+                    } else {
+                        (Box::new(SegBackend::new(&node_dir)?), NodeRecovery::default())
+                    }
+                }
+                _ => {
+                    if node_dir.is_dir() {
+                        let (b, rec) = FileBackend::open_existing(&node_dir)?;
+                        (Box::new(b), rec)
+                    } else {
+                        (Box::new(FileBackend::new(&node_dir)?), NodeRecovery::default())
+                    }
+                }
             };
             file_backends.push(b);
             node_recs.push(rec);
@@ -2033,10 +2064,7 @@ impl LiveStore {
         // Rebuild the live structures around the recovered state. The
         // fault decorator (if any) wraps *after* bottom-up
         // verification, which must see the honest disk.
-        let boxed: Vec<Box<dyn ChunkBackend>> = file_backends
-            .into_iter()
-            .map(|b| Box::new(b) as Box<dyn ChunkBackend>)
-            .collect();
+        let boxed: Vec<Box<dyn ChunkBackend>> = file_backends;
         let faults = tuning.fault.as_ref().map(|_| FaultControl::armed());
         let boxed = match (&tuning.fault, &faults) {
             (Some(spec), Some(ctl)) => wrap_with_faults(boxed, *spec, ctl),
@@ -2085,7 +2113,7 @@ impl LiveStore {
                 placement: ShardedPlacementState::new(n_stripes),
             }),
             stores: Arc::clone(&stores),
-            backend_kind: BackendKind::Disk,
+            backend_kind,
             data_root: Some(data_dir.to_path_buf()),
             cache: cache.clone(),
             lifetime_on: tuning.lifetime,
@@ -2514,6 +2542,9 @@ impl LiveStore {
         for key in stale {
             self.stores[node.0].delete(key);
         }
+        // The sweep may have turned most of the node's segments into
+        // garbage; compact before the node serves again.
+        self.maintain_backends(std::iter::once(node.0));
         self.revive_node(node);
         swept
     }
@@ -2645,7 +2676,7 @@ impl LiveStore {
     /// The reserved `cache_state` attribute is served directly by the
     /// store (node-local cache residency is live-deployment state the
     /// manager-side providers cannot see): its value is
-    /// `tier=<mem|disk>;chunks=<copies>;bytes=<n>;pinned=<copies>;recovered=<0|1>`
+    /// `tier=<mem|disk|seg>;chunks=<copies>;bytes=<n>;pinned=<copies>;recovered=<0|1>`
     /// — the chunk backend uncached bytes live on, the file's cache
     /// residency summed over every node's cache, and whether this file
     /// survived a [`LiveStore::reopen`] into the current instance. The
@@ -3112,14 +3143,14 @@ impl LiveStore {
     }
 
     /// Does this file's primary copy skip the backend spill and live
-    /// cache-only (dirty) until reclaimed? Only on the disk backend —
-    /// the memory backend *is* memory, there is no spill to skip — and
-    /// only while the whole scratch contract is active: a cache to live
-    /// in, lifetime enforcement driving reclamation, and a registry
-    /// that interprets the `Lifetime` tag at all (a DSS baseline never
-    /// does).
+    /// cache-only (dirty) until reclaimed? Only on a persistent
+    /// backend (disk or seg) — the memory backend *is* memory, there
+    /// is no spill to skip — and only while the whole scratch contract
+    /// is active: a cache to live in, lifetime enforcement driving
+    /// reclamation, and a registry that interprets the `Lifetime` tag
+    /// at all (a DSS baseline never does).
     fn scratch_skips_spill(&self, meta: &FileMeta) -> bool {
-        self.backend_kind == BackendKind::Disk
+        self.backend_kind.is_persistent()
             && self.cache.is_some()
             && self.lifetime_on
             && self.registry.hints_enabled()
@@ -3305,6 +3336,33 @@ impl LiveStore {
                 // a swept file leaves nothing in the data directory.
                 self.stores[holder.0].delete((meta.id, idx as u64));
             }
+        }
+        self.maintain_backends(
+            meta.chunks
+                .iter()
+                .flat_map(|c| c.replicas.iter().map(|h| h.0)),
+        );
+    }
+
+    /// Nudge backend maintenance for `nodes` after a sweep freed
+    /// bytes: a packed-log backend only returns dead space by
+    /// compacting segments, and its threshold check is a cheap atomic
+    /// read when nothing is owed (the file-per-chunk and memory
+    /// backends are no-ops). Runs through the I/O pool so a real
+    /// compaction executes on an I/O worker — off every store lock,
+    /// counted in the `io_queue` gauge — and completes before the
+    /// sweep returns, so "deleted" means "space reclaimable" to the
+    /// caller.
+    fn maintain_backends(&self, nodes: impl IntoIterator<Item = usize>) {
+        let mut seen = HashSet::new();
+        for n in nodes {
+            if !seen.insert(n) {
+                continue;
+            }
+            let stores = Arc::clone(&self.stores);
+            self.io.run(move || {
+                stores[n].maintain();
+            });
         }
     }
 
@@ -3718,7 +3776,60 @@ mod tests {
         assert_eq!(tier.peek(NodeId(0), (f, 0)), Some(vec![3u8; 600]));
     }
 
-    use super::super::backend::chunk_files_under;
+    use super::super::backend::{chunk_files_under, segment_files_under};
+
+    #[test]
+    fn seg_store_packs_reopens_and_reclaims() {
+        let dir = std::env::temp_dir().join(format!("woss-store-test-seg-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let data: Vec<u8> = (0..600_000u32).map(|i| (i % 251) as u8).collect();
+        {
+            let store = LiveStore::with_tuning(
+                Registry::woss(),
+                3,
+                u64::MAX / 2,
+                LiveTuning {
+                    backend: BackendKind::Seg,
+                    data_dir: Some(dir.clone()),
+                    ..LiveTuning::default()
+                },
+            );
+            assert_eq!(store.backend_kind(), BackendKind::Seg);
+            store
+                .write_file(NodeId(1), "/f", &data, &TagSet::from_pairs([("DP", "local")]))
+                .unwrap();
+            assert_eq!(chunk_files_under(&dir), 0, "no per-chunk files on seg");
+            assert!(
+                segment_files_under(&dir) >= 1,
+                "chunks packed into segment logs"
+            );
+            assert_eq!(store.read_file(NodeId(2), "/f").unwrap(), data);
+            assert_eq!(
+                store.get_xattr("/f", "cache_state").unwrap(),
+                "tier=seg;chunks=0;bytes=0;pinned=0;recovered=0",
+                "no cache tier: bytes live in the segment log"
+            );
+            // Dirty shutdown: drop without shutdown().
+        }
+        // store.meta names the backend, so reopen dispatches to
+        // segment replay without being told.
+        let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+        assert_eq!(store.backend_kind(), BackendKind::Seg);
+        assert_eq!(store.read_file(NodeId(0), "/f").unwrap(), data);
+        let report = store.recovery_report().unwrap().clone();
+        assert_eq!(report.files_recovered, 1);
+        assert!(store.was_recovered("/f"));
+        store.delete("/f").unwrap();
+        assert_eq!(
+            store.backend_used_bytes().iter().sum::<u64>(),
+            0,
+            "delete + segment maintenance returns every byte"
+        );
+        let audit = store.audit();
+        assert!(audit.clean(), "{audit:?}");
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
 
     #[test]
     fn disk_backend_roundtrips_and_deletes_spilled_files() {

@@ -12,19 +12,22 @@
 //!   1 = serial data path), `--cache-mb` (per-node hot-chunk cache
 //!   budget; 0 = off), `--cache-policy lru|hint` (eviction policy),
 //!   `--lifetime` (tag + enforce scratch reclamation), `--backend
-//!   mem|disk` (chunk backend; `disk` spills chunks to files),
-//!   `--data-dir PATH` (disk-backend root; omitted = a temp directory
-//!   removed on exit), `--fingerprint-file PATH` (record output
+//!   mem|disk|seg` (chunk backend; `disk` spills one file per chunk,
+//!   `seg` packs chunks into a few append-only segment logs per node),
+//!   `--data-dir PATH` (persistent-backend root; omitted = a temp
+//!   directory removed on exit), `--fingerprint-file PATH` (record output
 //!   fingerprints for a later restart check), `--clean-shutdown`
 //!   (write the namespace snapshot + CLEAN marker before exiting).
-//! * `live --reopen --data-dir PATH` — recover a disk store a previous
-//!   process left behind (cleanly or not): replay manifests + journal
-//!   or snapshot, print what survived, verify recorded fingerprints
-//!   when `--fingerprint-file` names a file, and shut down clean.
+//! * `live --reopen --data-dir PATH` — recover a persistent store a
+//!   previous process left behind (cleanly or not; the backend kind
+//!   comes from its `store.meta`): replay manifests/segment logs +
+//!   journal or snapshot, print what survived, verify recorded
+//!   fingerprints when `--fingerprint-file` names a file, and shut
+//!   down clean.
 //! * `scenario <name|all>` — run hostile-scenario workloads (fault
 //!   injection + live node churn) against the live store: `--list`
 //!   prints the scenario names, `--seed N` replays a schedule,
-//!   `--backend mem|disk`, `--data-dir PATH` (disk root), `--quick`
+//!   `--backend mem|disk|seg`, `--data-dir PATH` (persistent root), `--quick`
 //!   (smoke sizes), `--io-workers N` (disk I/O pool threads),
 //!   `--json out.json` (the `woss-scenarios-v1` document
 //!   `BENCH_scenarios.json` tracks).
@@ -83,6 +86,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("  woss live --workload pipeline --cache-mb 64 --cache-policy hint --lifetime");
             println!("  woss live --workload pipeline --backend disk --data-dir /tmp/woss --cache-mb 64");
             println!("  woss live --workload montage --backend disk --io-workers 4");
+            println!("  woss live --workload montage --backend seg --data-dir /tmp/woss-seg");
             println!("  woss live --reopen --data-dir /tmp/woss    # recover a store left behind");
             println!("  woss scenario --list                       # hostile-scenario names");
             println!("  woss scenario all --seed 7 --json BENCH_scenarios.json");
@@ -156,7 +160,7 @@ fn cmd_live(args: &Args) -> Result<()> {
         None => BackendKind::from_env(),
     };
     if backend == BackendKind::Memory && data_dir.is_some() {
-        return Err(anyhow!("--data-dir requires --backend disk"));
+        return Err(anyhow!("--data-dir requires --backend disk|seg"));
     }
     let workload = args.get_or("workload", "pipeline");
     let hints = !args.has_flag("no-hints");
@@ -349,7 +353,7 @@ fn cmd_live_reopen(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `woss scenario <name|all> [--list] [--seed N] [--backend mem|disk]
+/// `woss scenario <name|all> [--list] [--seed N] [--backend mem|disk|seg]
 /// [--data-dir PATH] [--quick] [--io-workers N] [--json PATH]`: run the
 /// hostile-scenario harness and optionally emit the `woss-scenarios-v1`
 /// results document. Comma-separated names run a subset.

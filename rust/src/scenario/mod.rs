@@ -11,6 +11,11 @@
 //! * [`metadata_storm`](self) — thousands of tiny-file creates (and a
 //!   third of them deleted again) while the injector fires put errors
 //!   and latency spikes; every failed create retries.
+//! * [`small_file_flood`](self) — the metadata storm's storage-layer
+//!   sequel: a tiny-file workload through the full store, plus a raw
+//!   ≥100k-tiny-chunk ingest race between the file-per-chunk `disk`
+//!   backend and the packed segment-log `seg` backend — the
+//!   file-count and wall-clock gap the tracked trajectory pins.
 //! * [`hot_skew`](self) — a 10%-hot/90%-of-traffic read skew over
 //!   replicated files under torn replica publishes and transient read
 //!   errors; reads fail over and retry.
@@ -42,9 +47,10 @@
 use crate::dispatch::Registry;
 use crate::hints::TagSet;
 use crate::live::{
-    chunk_crc, chunk_files_under, BackendKind, FaultSpec, LiveStore, LiveTuning, StoreAudit,
+    chunk_crc, chunk_files_under, segment_files_under, BackendKind, ChunkBackend, FaultSpec,
+    FileBackend, LiveStore, LiveTuning, SegBackend, StoreAudit,
 };
-use crate::storage::NodeId;
+use crate::storage::{FileId, NodeId};
 use crate::util::json::Json;
 use crate::util::{Rng, Summary};
 use std::path::PathBuf;
@@ -61,8 +67,9 @@ pub struct ScenarioConfig {
     pub seed: u64,
     /// Chunk backend under the store.
     pub backend: BackendKind,
-    /// Disk-backend root; each scenario uses its own subdirectory.
-    /// `None` on the disk backend auto-creates (and removes) a tempdir.
+    /// Persistent-backend root (`disk` | `seg`); each scenario uses
+    /// its own subdirectory. `None` on a persistent backend
+    /// auto-creates (and removes) a tempdir.
     pub data_dir: Option<PathBuf>,
     /// Scaled-down workload sizes for fast smoke runs.
     pub quick: bool,
@@ -88,7 +95,7 @@ impl Default for ScenarioConfig {
 pub struct ScenarioReport {
     /// Scenario name.
     pub name: &'static str,
-    /// Backend label (`mem` | `disk`).
+    /// Backend label (`mem` | `disk` | `seg`).
     pub backend: &'static str,
     /// The replay seed the run used.
     pub seed: u64,
@@ -132,6 +139,25 @@ pub struct ScenarioReport {
     /// Physical `*.chunk` files left on disk (disk backend only) —
     /// must equal the audit's claimed replica count.
     pub chunk_files: Option<usize>,
+    /// Physical `seg-*.log` files left on disk (`seg` backend only).
+    /// Informational: the packed layout means this is O(segments), so
+    /// it never equals the replica count the way `chunk_files` does.
+    pub segment_files: Option<usize>,
+    /// `small_file_flood` only: tiny chunks ingested per backend in
+    /// the raw disk-vs-seg comparison (`None` on other scenarios).
+    pub flood_chunks: Option<u64>,
+    /// `small_file_flood` only: file-per-chunk ingest wall clock,
+    /// seconds.
+    pub flood_disk_secs: Option<f64>,
+    /// `small_file_flood` only: packed segment-log ingest wall clock,
+    /// seconds.
+    pub flood_seg_secs: Option<f64>,
+    /// `small_file_flood` only: files the `disk` backend left on disk
+    /// after ingest — O(chunks), the layout this scenario indicts.
+    pub flood_disk_files: Option<usize>,
+    /// `small_file_flood` only: files the `seg` backend left on disk
+    /// after the same ingest — O(segments).
+    pub flood_seg_files: Option<usize>,
 }
 
 impl ScenarioReport {
@@ -216,19 +242,58 @@ impl ScenarioReport {
             ("missing_chunks", self.audit.missing_chunks.into()),
             ("usage_exact", self.audit.usage_exact().into()),
             ("audit_clean", self.clean().into()),
+            (
+                "segment_files",
+                self.segment_files
+                    .map(|v| Json::Num(v as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "flood_chunks",
+                self.flood_chunks
+                    .map(|v| Json::Num(v as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "flood_disk_secs",
+                self.flood_disk_secs.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "flood_seg_secs",
+                self.flood_seg_secs.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "flood_disk_files",
+                self.flood_disk_files
+                    .map(|v| Json::Num(v as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "flood_seg_files",
+                self.flood_seg_files
+                    .map(|v| Json::Num(v as f64))
+                    .unwrap_or(Json::Null),
+            ),
         ])
     }
 }
 
 /// All scenario names, in documentation order.
 pub fn names() -> Vec<&'static str> {
-    vec!["metadata_storm", "hot_skew", "tenant_pressure", "kill_recover"]
+    vec![
+        "metadata_storm",
+        "small_file_flood",
+        "hot_skew",
+        "tenant_pressure",
+        "kill_recover",
+    ]
 }
 
 /// Run one scenario by name.
 pub fn run(name: &str, cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
     match name {
         "metadata_storm" => metadata_storm(cfg),
+        "small_file_flood" => small_file_flood(cfg),
         "hot_skew" => hot_skew(cfg),
         "tenant_pressure" => tenant_pressure(cfg),
         "kill_recover" => kill_recover(cfg),
@@ -307,6 +372,45 @@ pub fn check_scenarios_json(text: &str) -> Result<(), String> {
             }
             if s.get("bytes_rereplicated").and_then(Json::as_f64).unwrap_or(0.0) <= 0.0 {
                 return Err("kill_recover: no bytes were re-replicated".into());
+            }
+        }
+        if name == "small_file_flood" {
+            // The tracked file-per-chunk vs packed-log gap: every
+            // flood field present, the packed log's file count at
+            // least two orders of magnitude below file-per-chunk's,
+            // and — on a full-size (non-quick) row — ≥100k chunks
+            // with `seg` winning the ingest race outright. Timing is
+            // only gated at full size: at smoke sizes the gap can
+            // drown in noise.
+            let num = |field: &str| -> Result<f64, String> {
+                s.get(field)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("small_file_flood: missing numeric '{field}'"))
+            };
+            let chunks = num("flood_chunks")?;
+            let disk_secs = num("flood_disk_secs")?;
+            let seg_secs = num("flood_seg_secs")?;
+            let disk_files = num("flood_disk_files")?;
+            let seg_files = num("flood_seg_files")?;
+            if seg_files * 100.0 > disk_files {
+                return Err(format!(
+                    "small_file_flood: seg left {seg_files} files vs disk's \
+                     {disk_files} — not O(segments)"
+                ));
+            }
+            if s.get("quick") != Some(&Json::Bool(true)) {
+                if chunks < 100_000.0 {
+                    return Err(format!(
+                        "small_file_flood: full-size row must ingest ≥100k chunks \
+                         (got {chunks})"
+                    ));
+                }
+                if seg_secs >= disk_secs {
+                    return Err(format!(
+                        "small_file_flood: seg ingest ({seg_secs:.3}s) did not beat \
+                         file-per-chunk ({disk_secs:.3}s)"
+                    ));
+                }
             }
         }
     }
@@ -395,6 +499,7 @@ struct Closing {
     audit: StoreAudit,
     under: u64,
     chunk_files: Option<usize>,
+    segment_files: Option<usize>,
 }
 
 /// Per-scenario store: on the disk backend each scenario runs in its
@@ -409,7 +514,7 @@ fn store_for(
     let tuning = LiveTuning {
         backend: cfg.backend,
         data_dir: match (cfg.backend, &cfg.data_dir) {
-            (BackendKind::Disk, Some(root)) => Some(root.join(name)),
+            (kind, Some(root)) if kind.is_persistent() => Some(root.join(name)),
             _ => None,
         },
         fault,
@@ -443,7 +548,17 @@ fn close_out(store: &LiveStore) -> Closing {
         injected,
         audit: store.audit(),
         under: store.under_replicated(),
-        chunk_files: store.data_dir().map(chunk_files_under),
+        // Per-chunk file accounting only applies to the file-per-chunk
+        // layout; on `seg` the replica claims live packed inside a few
+        // segment logs, reported separately (and informationally).
+        chunk_files: match store.backend_kind() {
+            BackendKind::Disk => store.data_dir().map(chunk_files_under),
+            _ => None,
+        },
+        segment_files: match store.backend_kind() {
+            BackendKind::Seg => store.data_dir().map(segment_files_under),
+            _ => None,
+        },
     }
 }
 
@@ -516,6 +631,12 @@ fn report(
         under_replicated_after: closing.under,
         audit: closing.audit,
         chunk_files: closing.chunk_files,
+        segment_files: closing.segment_files,
+        flood_chunks: None,
+        flood_disk_secs: None,
+        flood_seg_secs: None,
+        flood_disk_files: None,
+        flood_seg_files: None,
     }
 }
 
@@ -630,6 +751,168 @@ fn metadata_storm(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
         None,
         closing,
     ))
+}
+
+/// Outcome of the raw disk-vs-seg tiny-chunk ingest race.
+struct FloodOutcome {
+    chunks: u64,
+    disk_secs: f64,
+    seg_secs: f64,
+    disk_files: usize,
+    seg_files: usize,
+}
+
+/// Ingest the same flood of tiny chunks into a bare [`FileBackend`]
+/// and a bare [`SegBackend`], then delete everything and require both
+/// to return every byte. This is the layer the paper's
+/// "millions of small files" argument is about: file-per-chunk pays
+/// one file + one fsync per tiny chunk, the packed log pays one
+/// append (fsynced on the group-commit boundary) and keeps the file
+/// count O(segments).
+fn flood_backends(cfg: &ScenarioConfig) -> Result<FloodOutcome, String> {
+    let chunks: u64 = if cfg.quick { 800 } else { 100_000 };
+    let root = match &cfg.data_dir {
+        Some(dir) => dir.join("small_file_flood").join("raw"),
+        None => std::env::temp_dir().join(format!("woss-flood-{}", std::process::id())),
+    };
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).map_err(|e| format!("flood dir {}: {e}", root.display()))?;
+    let body = [0x5au8; 64];
+
+    let disk_dir = root.join("disk");
+    let disk = FileBackend::new(&disk_dir).map_err(|e| format!("flood disk backend: {e}"))?;
+    let t = Instant::now();
+    for c in 0..chunks {
+        disk.put((FileId(1), c), &body)
+            .map_err(|e| format!("flood disk put {c}: {e}"))?;
+    }
+    let disk_secs = t.elapsed().as_secs_f64();
+    let disk_files = chunk_files_under(&disk_dir);
+
+    let seg_dir = root.join("seg");
+    let seg = SegBackend::new(&seg_dir).map_err(|e| format!("flood seg backend: {e}"))?;
+    let t = Instant::now();
+    for c in 0..chunks {
+        seg.put((FileId(1), c), &body)
+            .map_err(|e| format!("flood seg put {c}: {e}"))?;
+    }
+    let seg_secs = t.elapsed().as_secs_f64();
+    let seg_files = segment_files_under(&seg_dir);
+
+    // Spot-verify both layouts actually hold the bytes before the
+    // teardown (ends, middle, and a seed-driven sample).
+    let mut rng = Rng::new(cfg.seed ^ 0xf100_d00d);
+    for probe in [0, chunks / 2, chunks - 1]
+        .into_iter()
+        .chain((0..8).map(|_| rng.next_u64() % chunks))
+    {
+        for (label, b) in [("disk", &disk as &dyn ChunkBackend), ("seg", &seg)] {
+            let got = b
+                .get((FileId(1), probe))
+                .map_err(|e| format!("flood {label} read {probe}: {e}"))?;
+            if got.as_deref() != Some(&body[..]) {
+                return Err(format!("flood {label} chunk {probe} corrupt or missing"));
+            }
+        }
+    }
+
+    // The space must come back: file-per-chunk by unlinking, the
+    // packed log by compaction.
+    for c in 0..chunks {
+        disk.delete((FileId(1), c));
+        seg.delete((FileId(1), c));
+    }
+    seg.maintain();
+    if disk.used_bytes() != 0 || seg.used_bytes() != 0 {
+        return Err(format!(
+            "flood deletes left bytes behind: disk={} seg={}",
+            disk.used_bytes(),
+            seg.used_bytes()
+        ));
+    }
+    if chunk_files_under(&disk_dir) != 0 {
+        return Err("flood: stray chunk files after delete".into());
+    }
+    drop(disk);
+    drop(seg);
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(FloodOutcome {
+        chunks,
+        disk_secs,
+        seg_secs,
+        disk_files,
+        seg_files,
+    })
+}
+
+/// The metadata storm's storage-layer sequel: a tiny-file workload
+/// through the full store on the configured backend (every file one
+/// small chunk, a read-back pass, a clean audit), then the raw
+/// [`flood_backends`] ingest race — ≥100k tiny chunks per backend at
+/// full size — whose numbers land in the `flood_*` report fields that
+/// `bench-check` gates. The scenario fails unless the packed log's
+/// file count is at least two orders of magnitude below
+/// file-per-chunk's.
+fn small_file_flood(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
+    const NODES: usize = 2;
+    let files = if cfg.quick { 160 } else { 600 };
+    let store = store_for(cfg, "small_file_flood", NODES, u64::MAX / 2, None)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x5f10_0d00);
+    let mut tally = Tally::default();
+    let mut expected: Vec<Fingerprint> = Vec::new();
+    let t0 = Instant::now();
+
+    for f in 0..files {
+        let len = 64 + rng.gen_range(448) as usize;
+        let data = payload(&mut rng, len);
+        let path = format!("/flood/f{f}");
+        let tags = TagSet::from_pairs([("DP", "local")]);
+        write_with_retry(&store, NodeId(f % NODES), &path, &data, &tags, &mut tally, cfg.seed)?;
+        expected.push((path, len, chunk_crc(&data)));
+    }
+    for (i, (path, len, crc)) in expected.iter().enumerate() {
+        let t = Instant::now();
+        let bytes = store
+            .read_file(NodeId(i % NODES), path)
+            .map_err(|e| format!("flood read {path}: {e}"))?;
+        tally.read_lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        tally.ops += 1;
+        tally.bytes_read += bytes.len() as u64;
+        if bytes.len() != *len || chunk_crc(&bytes) != *crc {
+            return Err(format!("flood corruption on {path} (seed={})", cfg.seed));
+        }
+    }
+
+    let elapsed = t0.elapsed().as_secs_f64();
+    let closing = close_out(&store);
+    verify_fingerprints(&store, &expected, cfg.seed)?;
+
+    let flood = flood_backends(cfg)?;
+    if flood.seg_files * 100 > flood.disk_files {
+        return Err(format!(
+            "flood: seg left {} files vs disk's {} — the packed layout \
+             must stay O(segments), not O(chunks)",
+            flood.seg_files, flood.disk_files
+        ));
+    }
+
+    let files_alive = expected.len();
+    let mut rep = report(
+        "small_file_flood",
+        cfg,
+        &store,
+        tally,
+        files_alive,
+        elapsed,
+        None,
+        closing,
+    );
+    rep.flood_chunks = Some(flood.chunks);
+    rep.flood_disk_secs = Some(flood.disk_secs);
+    rep.flood_seg_secs = Some(flood.seg_secs);
+    rep.flood_disk_files = Some(flood.disk_files);
+    rep.flood_seg_files = Some(flood.seg_files);
+    Ok(rep)
 }
 
 /// Skewed hot-file traffic: 10% of the files take ~90% of the reads,
@@ -990,6 +1273,23 @@ mod tests {
         let kr = reports.iter().find(|r| r.name == "kill_recover").unwrap();
         assert!(kr.recovery_secs.is_some());
         assert!(kr.bytes_rereplicated > 0, "churn re-replicated data");
+        let flood = reports
+            .iter()
+            .find(|r| r.name == "small_file_flood")
+            .unwrap();
+        let (disk_files, seg_files) = (
+            flood.flood_disk_files.expect("flood ran the disk leg"),
+            flood.flood_seg_files.expect("flood ran the seg leg"),
+        );
+        assert_eq!(
+            disk_files,
+            flood.flood_chunks.unwrap() as usize,
+            "file-per-chunk leaves one file per tiny chunk"
+        );
+        assert!(
+            seg_files * 100 <= disk_files,
+            "packed log stays O(segments): {seg_files} vs {disk_files}"
+        );
         // The emitted document round-trips through its own gate.
         let doc = results_json(&reports, cfg.seed).to_string_pretty();
         check_scenarios_json(&doc).expect("self-emitted document passes the schema gate");

@@ -1,27 +1,41 @@
-//! Backend equivalence at the workflow level: a live run on the
-//! file-backed spill tier must be observably identical to the same run
-//! on the in-memory backend — same fingerprints, same locality, same
-//! reclamation — and deleting everything that survived must leave the
-//! disk store's `--data-dir` with zero chunk files. The chunk backend
-//! is a capacity decision, never a semantics decision.
+//! Backend equivalence at the workflow level: a live run must be
+//! observably identical across every chunk backend — in-memory,
+//! file-per-chunk disk spill, and the packed segment log — same
+//! fingerprints, same locality, same reclamation — and deleting
+//! everything that survived must leave a persistent backend's
+//! `--data-dir` holding zero chunk bytes. The chunk backend is a
+//! capacity/layout decision, never a semantics decision.
+//!
+//! Workload sizes are drawn from the seeded `tests/common` harness, so
+//! a failing shape is replayable with `WOSS_TEST_SEED=<seed>`.
+
+mod common;
 
 use woss::hints::TagSet;
 use woss::live::{
-    chunk_files_under, BackendKind, CachePolicy, EngineOptions, LiveEngine, LiveReport, LiveStore,
-    LiveTuning,
+    chunk_files_under, segment_files_under, BackendKind, CachePolicy, EngineOptions, LiveEngine,
+    LiveReport, LiveStore, LiveTuning,
 };
+use woss::util::Rng;
 use woss::workflow::dag::{TaskSpec, Tier, Workflow};
 
 /// A fan-out/fan-in workflow whose intermediates are all consumed (and
 /// so reclaimed under lifetime tagging): preload → stageIn → 3
-/// transforms → merge.
-fn workflow() -> Workflow {
+/// transforms → merge. Sizes come from the seeded RNG — every backend
+/// in the matrix is built from the same seed, so they see the same
+/// shape.
+fn workflow(rng: &mut Rng) -> Workflow {
     let mut w = Workflow::new();
-    w.preload("/backend/in", 200_000);
+    w.preload("/backend/in", 150_000 + rng.gen_range(100_000) as usize);
     w.push(
         TaskSpec::new(0, "stageIn")
             .read("/backend/in", Tier::Backend)
-            .write("/w/in", Tier::Intermediate, 150_000, TagSet::from_pairs([("DP", "local")])),
+            .write(
+                "/w/in",
+                Tier::Intermediate,
+                100_000 + rng.gen_range(100_000) as usize,
+                TagSet::from_pairs([("DP", "local")]),
+            ),
     );
     for p in 0..3 {
         w.push(
@@ -30,7 +44,7 @@ fn workflow() -> Workflow {
                 .write(
                     &format!("/w/mid{p}"),
                     Tier::Intermediate,
-                    120_000,
+                    80_000 + rng.gen_range(80_000) as usize,
                     TagSet::from_pairs([("DP", "local")]),
                 ),
         );
@@ -39,14 +53,24 @@ fn workflow() -> Workflow {
     for p in 0..3 {
         merge = merge.read(&format!("/w/mid{p}"), Tier::Intermediate);
     }
-    merge = merge.write("/w/out", Tier::Intermediate, 100_000, TagSet::new());
+    merge = merge.write(
+        "/w/out",
+        Tier::Intermediate,
+        80_000 + rng.gen_range(40_000) as usize,
+        TagSet::new(),
+    );
     w.push(merge);
     w
 }
 
 /// One deterministic run: single worker, no prefetch races, no
-/// replication tags — every counter is exact.
-fn run_on(backend: BackendKind, data_dir: Option<std::path::PathBuf>) -> (LiveEngine, LiveReport) {
+/// replication tags — every counter is exact. The workflow is rebuilt
+/// from the seed, so every backend runs the identical shape.
+fn run_on(
+    seed: u64,
+    backend: BackendKind,
+    data_dir: Option<std::path::PathBuf>,
+) -> (LiveEngine, LiveReport) {
     let store = LiveStore::woss_with(
         4,
         LiveTuning {
@@ -58,6 +82,7 @@ fn run_on(backend: BackendKind, data_dir: Option<std::path::PathBuf>) -> (LiveEn
             backend,
             data_dir,
             fault: None,
+            io_workers: 1,
         },
     );
     let engine = LiveEngine::with_options(
@@ -69,115 +94,143 @@ fn run_on(backend: BackendKind, data_dir: Option<std::path::PathBuf>) -> (LiveEn
         },
     )
     .unwrap();
-    let report = engine.run(&workflow()).unwrap();
+    let report = engine.run(&workflow(&mut Rng::new(seed))).unwrap();
     (engine, report)
 }
 
 #[test]
-fn disk_run_matches_memory_run_and_cleans_its_data_dir() {
-    let dir = std::env::temp_dir().join(format!(
-        "woss-backend-equivalence-{}",
-        std::process::id()
-    ));
-    let _ = std::fs::remove_dir_all(&dir);
-
-    let (mem_engine, mem) = run_on(BackendKind::Memory, None);
-    let (disk_engine, disk) = run_on(BackendKind::Disk, Some(dir.clone()));
-
+fn every_backend_matches_memory_and_cleans_its_data_dir() {
+    let (seed, _rng) = common::seeded_rng("backend_equivalence");
+    let (mem_engine, mem) = run_on(seed, BackendKind::Memory, None);
     assert_eq!(mem.backend, "mem");
-    assert_eq!(disk.backend, "disk");
-    assert_eq!(mem.tasks, disk.tasks);
-    assert_eq!(
-        mem.fingerprints, disk.fingerprints,
-        "identical output checksums on both backends"
-    );
     assert!(!mem.fingerprints.is_empty());
-    assert_eq!(
-        (mem.local_reads, mem.remote_reads),
-        (disk.local_reads, disk.remote_reads),
-        "identical locality on both backends"
-    );
-    assert_eq!(mem.locality(), disk.locality());
-    assert_eq!(
-        (mem.files_reclaimed, mem.bytes_reclaimed),
-        (disk.files_reclaimed, disk.bytes_reclaimed),
-        "identical reclamation on both backends"
-    );
     assert_eq!(
         mem.files_reclaimed, 4,
         "/w/in and the three mids die with their last consumer"
     );
 
-    // Both runs re-verify their fingerprinted files end to end.
-    assert_eq!(
-        mem_engine.verify(&mem).unwrap(),
-        disk_engine.verify(&disk).unwrap()
-    );
+    for kind in [BackendKind::Disk, BackendKind::Seg] {
+        let dir = std::env::temp_dir().join(format!(
+            "woss-backend-equivalence-{}-{}",
+            kind.label(),
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (engine, rep) = run_on(seed, kind, Some(dir.clone()));
 
-    // What survived the run is really on disk; deleting it removes
-    // every spilled file.
-    assert!(
-        chunk_files_under(&dir) > 0,
-        "durable survivors live in the data dir"
-    );
-    for path in ["/backend/in", "/w/out"] {
-        disk_engine.store().delete(path).unwrap();
-        mem_engine.store().delete(path).unwrap();
+        assert_eq!(rep.backend, kind.label());
+        assert_eq!(mem.tasks, rep.tasks);
+        assert_eq!(
+            mem.fingerprints, rep.fingerprints,
+            "identical output checksums on {kind:?} (seed={seed})"
+        );
+        assert_eq!(
+            (mem.local_reads, mem.remote_reads),
+            (rep.local_reads, rep.remote_reads),
+            "identical locality on {kind:?} (seed={seed})"
+        );
+        assert_eq!(mem.locality(), rep.locality());
+        assert_eq!(
+            (mem.files_reclaimed, mem.bytes_reclaimed),
+            (rep.files_reclaimed, rep.bytes_reclaimed),
+            "identical reclamation on {kind:?} (seed={seed})"
+        );
+
+        // Both runs re-verify their fingerprinted files end to end.
+        assert_eq!(
+            mem_engine.verify(&mem).unwrap(),
+            engine.verify(&rep).unwrap()
+        );
+
+        // Physical layout matches the backend's contract: one file per
+        // chunk on `disk`, a few packed logs (and zero per-chunk
+        // files) on `seg`.
+        match kind {
+            BackendKind::Seg => {
+                assert!(
+                    segment_files_under(&dir) > 0,
+                    "durable survivors live in the segment logs"
+                );
+                assert_eq!(chunk_files_under(&dir), 0, "no per-chunk files on seg");
+            }
+            _ => {
+                assert!(
+                    chunk_files_under(&dir) > 0,
+                    "durable survivors live in the data dir"
+                );
+                assert_eq!(segment_files_under(&dir), 0, "no segment logs on disk");
+            }
+        }
+
+        // What survived the run is really on disk; deleting it returns
+        // every byte on both layouts.
+        for path in ["/backend/in", "/w/out"] {
+            engine.store().delete(path).unwrap();
+        }
+        assert_eq!(
+            chunk_files_under(&dir),
+            0,
+            "reclaim + delete leave zero chunk files in --data-dir"
+        );
+        assert!(
+            segment_files_under(&dir) <= 4,
+            "segment count stays O(segments) — at most one active log per node"
+        );
+        assert_eq!(
+            engine.store().backend_used_bytes().iter().sum::<u64>(),
+            0,
+            "delete + maintenance returned every byte on {kind:?}"
+        );
+
+        drop(engine);
+        assert!(dir.exists(), "a user-supplied data_dir is never deleted");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
-    assert_eq!(
-        chunk_files_under(&dir),
-        0,
-        "reclaim + delete leave zero files in --data-dir"
-    );
-    assert_eq!(
-        disk_engine.store().backend_used_bytes().iter().sum::<u64>(),
-        0
-    );
-
-    drop(disk_engine);
-    assert!(dir.exists(), "a user-supplied data_dir is never deleted");
-    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
-fn disk_backend_survives_footprint_beyond_cache_budget() {
+fn persistent_backends_survive_footprint_beyond_cache_budget() {
     // The capacity story the memory store could not tell: a working
-    // set several times the cache budget streams through the disk
-    // backend — dirty scratch chunks write back under pressure, every
-    // byte stays readable, and the cache stays within budget.
-    let budget: u64 = 2 * 256 * 1024; // two chunks
-    let store = LiveStore::woss_with(
-        3,
-        LiveTuning {
-            stripes: 4,
-            repl_workers: 1,
-            cache_bytes: Some(budget),
-            cache_policy: CachePolicy::HintAware,
-            lifetime: true,
-            backend: BackendKind::Disk,
-            data_dir: None, // auto temp dir, removed when the store drops
-            fault: None,
-        },
-    );
-    use woss::storage::NodeId;
-    let scratch = TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch")]);
-    let payload = vec![0xABu8; 400_000]; // ~1.5 chunks per file
-    for f in 0..12 {
-        store
-            .write_file(NodeId(0), &format!("/big{f}"), &payload, &scratch)
-            .unwrap();
-    }
-    let stats = store.cache_stats();
-    assert!(
-        stats.spilled > 0,
-        "a footprint beyond the budget forces write-backs"
-    );
-    assert!(stats.peak_node_resident <= budget, "cache stayed bounded");
-    for f in 0..12 {
-        assert_eq!(
-            store.read_file(NodeId(1), &format!("/big{f}")).unwrap(),
-            payload,
-            "file {f} readable after spill"
+    // set several times the cache budget streams through each
+    // persistent backend — dirty scratch chunks write back under
+    // pressure, every byte stays readable, and the cache stays within
+    // budget.
+    for kind in [BackendKind::Disk, BackendKind::Seg] {
+        let budget: u64 = 2 * 256 * 1024; // two chunks
+        let store = LiveStore::woss_with(
+            3,
+            LiveTuning {
+                stripes: 4,
+                repl_workers: 1,
+                cache_bytes: Some(budget),
+                cache_policy: CachePolicy::HintAware,
+                lifetime: true,
+                backend: kind,
+                data_dir: None, // auto temp dir, removed when the store drops
+                fault: None,
+                io_workers: 1,
+            },
         );
+        use woss::storage::NodeId;
+        let scratch = TagSet::from_pairs([("DP", "local"), ("Lifetime", "scratch")]);
+        let payload = vec![0xABu8; 400_000]; // ~1.5 chunks per file
+        for f in 0..12 {
+            store
+                .write_file(NodeId(0), &format!("/big{f}"), &payload, &scratch)
+                .unwrap();
+        }
+        let stats = store.cache_stats();
+        assert!(
+            stats.spilled > 0,
+            "a footprint beyond the budget forces write-backs on {kind:?}"
+        );
+        assert!(stats.peak_node_resident <= budget, "cache stayed bounded");
+        for f in 0..12 {
+            assert_eq!(
+                store.read_file(NodeId(1), &format!("/big{f}")).unwrap(),
+                payload,
+                "file {f} readable after spill on {kind:?}"
+            );
+        }
     }
 }

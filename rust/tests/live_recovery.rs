@@ -1,13 +1,17 @@
-//! Crash consistency & restart: a disk-backed store killed without a
+//! Crash consistency & restart: a persistent store killed without a
 //! clean shutdown — dropped after `flush_replication()`, which is what
 //! a `kill -9` looks like to the file system — must reopen on the same
 //! `--data-dir` and serve every fully-replicated durable file
 //! byte-identical. Scratch files must never resurrect, a clean
 //! shutdown must restore the namespace *as it was* (post-create tags
 //! included), and the `recovered=` bottom-up field must tell the
-//! scheduler which files made it. These tests run under both
-//! `LIVE_BACKEND` matrix legs but exercise explicit disk tunings, so
-//! the guarantees hold regardless of the env default.
+//! scheduler which files made it. The kill-and-reopen sweep runs on
+//! both persistent backends (`disk` and `seg`), and the seg-specific
+//! tests plant real crash debris — torn segment tails, orphan `.tmp`
+//! and unlisted segments, checksum-corrupt records, compaction cut
+//! short — and demand salvage without resurrection. These tests run
+//! under every `LIVE_BACKEND` matrix leg but exercise explicit
+//! tunings, so the guarantees hold regardless of the env default.
 
 mod common;
 
@@ -15,7 +19,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
 use woss::dispatch::Registry;
 use woss::hints::TagSet;
-use woss::live::{chunk_files_under, BackendKind, LiveStore, LiveTuning};
+use woss::live::{chunk_files_under, segment_files_under, BackendKind, LiveStore, LiveTuning};
 use woss::storage::types::NodeId;
 
 /// A private temp dir per test, honoring `WOSS_DATA_DIR` so the CI
@@ -29,16 +33,34 @@ fn test_dir(tag: &str) -> PathBuf {
     dir
 }
 
-fn disk_tuning(dir: &Path) -> LiveTuning {
+fn backend_tuning(kind: BackendKind, dir: &Path) -> LiveTuning {
     LiveTuning {
-        backend: BackendKind::Disk,
+        backend: kind,
         data_dir: Some(dir.to_path_buf()),
         ..LiveTuning::default()
     }
 }
 
+fn disk_tuning(dir: &Path) -> LiveTuning {
+    backend_tuning(BackendKind::Disk, dir)
+}
+
+fn woss_on(kind: BackendKind, dir: &Path, nodes: usize) -> LiveStore {
+    LiveStore::with_tuning(Registry::woss(), nodes, u64::MAX / 2, backend_tuning(kind, dir))
+}
+
 fn woss_disk(dir: &Path, nodes: usize) -> LiveStore {
-    LiveStore::with_tuning(Registry::woss(), nodes, u64::MAX / 2, disk_tuning(dir))
+    woss_on(BackendKind::Disk, dir, nodes)
+}
+
+/// The segment files of one node, in `segments.meta` replay order —
+/// the last entry is the active (append) segment.
+fn node_segments(node_dir: &Path) -> Vec<PathBuf> {
+    std::fs::read_to_string(node_dir.join("segments.meta"))
+        .unwrap()
+        .lines()
+        .map(|l| node_dir.join(l.trim()))
+        .collect()
 }
 
 /// Deterministic per-file payload.
@@ -237,90 +259,112 @@ fn scratch_and_deleted_files_never_resurrect() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
-/// Kill-and-reopen property sweep: seeded rounds of mixed
-/// durable/scratch/deleted traffic, killed mid-lifecycle (after the
-/// replication barrier), reopened, and checked invariant by invariant:
-/// every surviving durable file byte-identical, every dead path absent,
-/// the on-disk chunk population exactly the recovered index.
+/// Kill-and-reopen property sweep, run on BOTH persistent backends:
+/// seeded rounds of mixed durable/scratch/deleted traffic, killed
+/// mid-lifecycle (after the replication barrier), reopened, and checked
+/// invariant by invariant: every surviving durable file byte-identical,
+/// every dead path absent, the on-disk chunk population exactly the
+/// recovered index (per-chunk files on `disk`, packed logs and zero
+/// chunk files on `seg`).
 #[test]
 fn prop_kill_and_reopen_roundtrips() {
     // One harness RNG seeds every round: a failing round is replayed
-    // by re-running with the printed WOSS_TEST_SEED.
+    // by re-running with the printed WOSS_TEST_SEED. Both backends see
+    // the same per-round traffic, so a divergence is a backend bug.
     let (base, mut harness) = common::seeded_rng("prop_kill_and_reopen_roundtrips");
     for round in 0..5u64 {
         let seed = harness.next_u64();
-        let dir = test_dir(&format!("prop{round}"));
-        let mut live: Vec<(String, Vec<u8>)> = Vec::new();
-        let mut dead: Vec<String> = Vec::new();
-        {
-            let store = woss_disk(&dir, 4);
-            let mut rng = woss::util::Rng::new(seed);
-            for f in 0..12u64 {
-                let path = format!("/p{f}");
-                let len = 50_000 + rng.gen_range(500_000) as usize;
-                let data = payload(rng.next_u64(), len);
-                let tags = match rng.gen_range(4) {
-                    0 => TagSet::from_pairs([("Replication", "2")]),
-                    1 => TagSet::from_pairs([("DP", "local")]),
-                    2 => TagSet::from_pairs([("Lifetime", "scratch")]),
-                    _ => TagSet::new(),
-                };
-                let scratch = tags.get("Lifetime").is_some();
-                store
-                    .write_file(NodeId(rng.gen_range(4) as usize), &path, &data, &tags)
-                    .unwrap();
-                if rng.gen_range(5) == 0 {
-                    store.delete(&path).unwrap();
-                    dead.push(path);
-                } else if scratch {
-                    dead.push(path);
-                } else {
-                    live.push((path, data));
+        for kind in [BackendKind::Disk, BackendKind::Seg] {
+            let dir = test_dir(&format!("prop{round}-{}", kind.label()));
+            let mut live: Vec<(String, Vec<u8>)> = Vec::new();
+            let mut dead: Vec<String> = Vec::new();
+            {
+                let store = woss_on(kind, &dir, 4);
+                let mut rng = woss::util::Rng::new(seed);
+                for f in 0..12u64 {
+                    let path = format!("/p{f}");
+                    let len = 50_000 + rng.gen_range(500_000) as usize;
+                    let data = payload(rng.next_u64(), len);
+                    let tags = match rng.gen_range(4) {
+                        0 => TagSet::from_pairs([("Replication", "2")]),
+                        1 => TagSet::from_pairs([("DP", "local")]),
+                        2 => TagSet::from_pairs([("Lifetime", "scratch")]),
+                        _ => TagSet::new(),
+                    };
+                    let scratch = tags.get("Lifetime").is_some();
+                    store
+                        .write_file(NodeId(rng.gen_range(4) as usize), &path, &data, &tags)
+                        .unwrap();
+                    if rng.gen_range(5) == 0 {
+                        store.delete(&path).unwrap();
+                        dead.push(path);
+                    } else if scratch {
+                        dead.push(path);
+                    } else {
+                        live.push((path, data));
+                    }
+                }
+                store.flush_replication();
+                for (path, _) in &live {
+                    assert!(store.fully_replicated(path).unwrap());
+                }
+            } // killed
+
+            let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+            let recovery = store.recovery_report().unwrap().clone();
+            assert_eq!(
+                recovery.files_recovered,
+                live.len(),
+                "round {round} on {kind:?} (WOSS_TEST_SEED={base})"
+            );
+            for (path, data) in &live {
+                assert_eq!(
+                    &store.read_file(NodeId(0), path).unwrap(),
+                    data,
+                    "round {round} {path} on {kind:?} (WOSS_TEST_SEED={base})"
+                );
+            }
+            for path in &dead {
+                assert!(
+                    store.read_file(NodeId(0), path).is_err(),
+                    "round {round}: {path} must stay dead on {kind:?} (WOSS_TEST_SEED={base})"
+                );
+            }
+            match kind {
+                BackendKind::Seg => {
+                    // Packed layout: zero per-chunk files ever, and the
+                    // recovered population lives in O(segments) logs.
+                    assert_eq!(
+                        chunk_files_under(&dir),
+                        0,
+                        "round {round}: seg never writes chunk files (WOSS_TEST_SEED={base})"
+                    );
+                    assert!(
+                        segment_files_under(&dir) > 0,
+                        "round {round}: recovered chunks live in segment logs"
+                    );
+                }
+                _ => {
+                    let indexed: usize = store.backend_chunk_counts().iter().sum();
+                    assert_eq!(
+                        chunk_files_under(&dir),
+                        indexed,
+                        "round {round}: orphans swept (WOSS_TEST_SEED={base})"
+                    );
                 }
             }
-            store.flush_replication();
-            for (path, _) in &live {
-                assert!(store.fully_replicated(path).unwrap());
+            // The reopened store is a working store: fresh writes and
+            // reads proceed, ids never collide with recovered files.
+            store
+                .write_file(NodeId(0), "/fresh", &payload(1234, 300_000), &TagSet::new())
+                .unwrap();
+            assert_eq!(store.read_file(NodeId(1), "/fresh").unwrap(), payload(1234, 300_000));
+            for (path, data) in &live {
+                assert_eq!(&store.read_file(NodeId(2), path).unwrap(), data);
             }
-        } // killed
-
-        let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
-        let recovery = store.recovery_report().unwrap().clone();
-        assert_eq!(
-            recovery.files_recovered,
-            live.len(),
-            "round {round} (WOSS_TEST_SEED={base})"
-        );
-        for (path, data) in &live {
-            assert_eq!(
-                &store.read_file(NodeId(0), path).unwrap(),
-                data,
-                "round {round} {path} (WOSS_TEST_SEED={base})"
-            );
+            drop(store);
+            std::fs::remove_dir_all(&dir).unwrap();
         }
-        for path in &dead {
-            assert!(
-                store.read_file(NodeId(0), path).is_err(),
-                "round {round}: {path} must stay dead (WOSS_TEST_SEED={base})"
-            );
-        }
-        let indexed: usize = store.backend_chunk_counts().iter().sum();
-        assert_eq!(
-            chunk_files_under(&dir),
-            indexed,
-            "round {round}: orphans swept (WOSS_TEST_SEED={base})"
-        );
-        // The reopened store is a working store: fresh writes and reads
-        // proceed, ids never collide with recovered files.
-        store
-            .write_file(NodeId(0), "/fresh", &payload(1234, 300_000), &TagSet::new())
-            .unwrap();
-        assert_eq!(store.read_file(NodeId(1), "/fresh").unwrap(), payload(1234, 300_000));
-        for (path, data) in &live {
-            assert_eq!(&store.read_file(NodeId(2), path).unwrap(), data);
-        }
-        drop(store);
-        std::fs::remove_dir_all(&dir).unwrap();
     }
 }
 
@@ -485,6 +529,238 @@ fn duplicated_holder_is_probed_once_after_corruption() {
         store.cache_stats().read_errors,
         damaged,
         "the corrupt duplicated holder is probed exactly once per chunk"
+    );
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Total bytes across one node's listed segment files.
+fn seg_bytes(node_dir: &Path) -> u64 {
+    node_segments(node_dir)
+        .iter()
+        .map(|p| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+        .sum()
+}
+
+/// A torn segment tail — the record a crash cut mid-append — is
+/// discarded on reopen, the valid prefix survives byte-identical, and
+/// the truncation is durable: a second crash-reopen sees no debris.
+#[test]
+fn seg_crash_reopen_discards_torn_tail_and_serves_files() {
+    let dir = test_dir("seg-torn");
+    let mut expected: Vec<(String, Vec<u8>)> = Vec::new();
+    {
+        let store = woss_on(BackendKind::Seg, &dir, 3);
+        for (i, len) in [400_000usize, 150_000, 0].into_iter().enumerate() {
+            let path = format!("/t{i}");
+            let data = payload(i as u64 + 40, len);
+            store
+                .write_file(NodeId(0), &path, &data, &TagSet::from_pairs([("DP", "local")]))
+                .unwrap();
+            expected.push((path, data));
+        }
+        store.flush_replication();
+    } // killed
+
+    // Append a half-written record to node0's active segment: a valid
+    // header whose claimed payload runs past end-of-file.
+    let active = node_segments(&dir.join("node0")).pop().expect("node0 has segments");
+    let mut torn = vec![1u8]; // SEG_PUT
+    for v in [9u64, 9, 1 << 20, 0] {
+        torn.extend_from_slice(&v.to_le_bytes());
+    }
+    torn.extend_from_slice(b"cut");
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&active).unwrap();
+        f.write_all(&torn).unwrap();
+    }
+
+    let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+    let recovery = store.recovery_report().unwrap().clone();
+    assert_eq!(recovery.files_recovered, expected.len());
+    assert!(recovery.chunks_dropped >= 1, "the torn record was counted and dropped");
+    for (path, data) in &expected {
+        assert_eq!(&store.read_file(NodeId(1), path).unwrap(), data, "{path}");
+        assert!(store.was_recovered(path));
+    }
+    assert!(
+        store.read_file(NodeId(0), "/t9").is_err(),
+        "the torn record resurrects nothing"
+    );
+    drop(store); // crash again, no new debris
+
+    let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+    assert_eq!(
+        store.recovery_report().unwrap().chunks_dropped,
+        0,
+        "the first reopen truncated the torn tail durably"
+    );
+    for (path, data) in &expected {
+        assert_eq!(&store.read_file(NodeId(2), path).unwrap(), data);
+    }
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Orphan segments — files a crashed compaction wrote but never
+/// published in `segments.meta`, and half-renamed `.tmp` segments — are
+/// swept on reopen and can never resurrect data: only meta-listed
+/// segments are replayed.
+#[test]
+fn seg_orphan_and_tmp_segments_swept_on_reopen() {
+    let dir = test_dir("seg-orphan");
+    let keep = payload(50, 300_000);
+    {
+        let store = woss_on(BackendKind::Seg, &dir, 2);
+        store
+            .write_file(NodeId(0), "/keep", &keep, &TagSet::from_pairs([("DP", "local")]))
+            .unwrap();
+        store.flush_replication();
+    } // killed mid-compaction, as far as reopen can tell
+
+    // Debris a compaction crash leaves behind: an unlisted rewritten
+    // segment and a half-renamed temp file.
+    let node0 = dir.join("node0");
+    let orphan = node0.join("seg-99.log");
+    let tmp = node0.join("seg-98.log.tmp");
+    std::fs::write(&orphan, b"stale rewritten segment from a dead compactor").unwrap();
+    std::fs::write(&tmp, b"half-renamed").unwrap();
+
+    let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+    let recovery = store.recovery_report().unwrap().clone();
+    assert_eq!(recovery.files_recovered, 1);
+    assert!(recovery.chunks_dropped >= 1, "the orphan segment was counted");
+    assert!(!orphan.exists(), "unlisted segment swept");
+    assert!(!tmp.exists(), "tmp segment swept");
+    assert_eq!(store.read_file(NodeId(1), "/keep").unwrap(), keep);
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A checksum-corrupt record (bit rot or a mangled sector inside an
+/// otherwise healthy segment) is dropped on reopen; the file survives
+/// through its replica on another node and reads byte-identical.
+#[test]
+fn seg_checksum_corrupt_record_dropped_replica_serves() {
+    let dir = test_dir("seg-corrupt");
+    let data = payload(60, 200_000); // one chunk
+    {
+        let store = woss_on(BackendKind::Seg, &dir, 3);
+        store
+            .write_file(
+                NodeId(0),
+                "/db",
+                &data,
+                // DP=local pins the primary to node0; the replica lands
+                // on node1 or node2 and must carry the recovery.
+                &TagSet::from_pairs([("DP", "local"), ("Replication", "2")]),
+            )
+            .unwrap();
+        store.flush_replication();
+    } // killed
+
+    // Flip one payload byte inside node0's first record (offset past
+    // the 33-byte header). Same length: only the checksum can notice.
+    let first = node_segments(&dir.join("node0"))
+        .into_iter()
+        .next()
+        .expect("node0 has segments");
+    let mut bytes = std::fs::read(&first).unwrap();
+    bytes[33 + 10] ^= 0xFF;
+    std::fs::write(&first, &bytes).unwrap();
+
+    let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+    let recovery = store.recovery_report().unwrap().clone();
+    assert_eq!(recovery.files_recovered, 1, "the replica carried the file");
+    assert!(recovery.chunks_dropped >= 1, "the corrupt record was dropped");
+    for reader in 0..3 {
+        assert_eq!(
+            store.read_file(NodeId(reader), "/db").unwrap(),
+            data,
+            "byte-identical from n{reader}"
+        );
+    }
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Online compaction followed by a crash: lifetime reclamation of
+/// scratch files triggers segment compaction (the dead bytes cross the
+/// threshold), the node's on-disk footprint shrinks, and a reopen after
+/// the crash serves every durable survivor byte-identical — with none
+/// of the reclaimed scratch resurrected from pre-compaction segments.
+#[test]
+fn seg_compaction_then_crash_recovers_survivors_only() {
+    let dir = test_dir("seg-compact");
+    let keep: Vec<Vec<u8>> = (0..2).map(|i| payload(70 + i, 600_000)).collect();
+    {
+        let store = LiveStore::with_tuning(
+            Registry::woss(),
+            2,
+            u64::MAX / 2,
+            LiveTuning {
+                lifetime: true,
+                ..backend_tuning(BackendKind::Seg, &dir)
+            },
+        );
+        for (i, data) in keep.iter().enumerate() {
+            store
+                .write_file(
+                    NodeId(0),
+                    &format!("/keep{i}"),
+                    data,
+                    &TagSet::from_pairs([("DP", "local")]),
+                )
+                .unwrap();
+        }
+        // ~5.4 MB of scratch on node0 — past the 4 MB dead-bytes
+        // threshold once consumed, so reclamation must compact.
+        for f in 0..9 {
+            store
+                .write_file(
+                    NodeId(0),
+                    &format!("/tmp{f}"),
+                    &payload(80 + f, 600_000),
+                    &TagSet::from_pairs([
+                        ("DP", "local"),
+                        ("Lifetime", "scratch"),
+                        ("Consumers", "1"),
+                    ]),
+                )
+                .unwrap();
+        }
+        for f in 0..9 {
+            store.read_file(NodeId(1), &format!("/tmp{f}")).unwrap();
+        }
+        store.flush_replication();
+        assert!(
+            store.cache_stats().files_reclaimed >= 9,
+            "every consumed scratch file was reclaimed"
+        );
+        assert_eq!(store.file_size("/tmp0"), None);
+        assert!(
+            seg_bytes(&dir.join("node0")) < 4_000_000,
+            "compaction shrank node0 below its ~6.6 MB of raw appends"
+        );
+    } // killed right after the compaction
+
+    let store = LiveStore::reopen(Registry::woss(), &dir).unwrap();
+    let recovery = store.recovery_report().unwrap().clone();
+    assert_eq!(recovery.files_recovered, 2, "only the durable files survive");
+    for (i, data) in keep.iter().enumerate() {
+        assert_eq!(&store.read_file(NodeId(1), &format!("/keep{i}")).unwrap(), data);
+    }
+    for f in 0..9 {
+        assert!(
+            store.read_file(NodeId(0), &format!("/tmp{f}")).is_err(),
+            "/tmp{f} stays reclaimed — compaction left no resurrectable copy"
+        );
+    }
+    assert_eq!(chunk_files_under(&dir), 0);
+    assert!(
+        segment_files_under(&dir) <= 4,
+        "the compacted node holds O(segments) files, not O(chunks)"
     );
     drop(store);
     std::fs::remove_dir_all(&dir).unwrap();

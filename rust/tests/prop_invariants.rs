@@ -358,24 +358,28 @@ fn prop_cache_residency_bounded() {
     );
 }
 
-/// Backend equivalence: the same operation sequence against a
-/// memory-backed and a disk-backed store produces identical observable
-/// behaviour — byte-for-byte reads, sizes, reclamation counts, and
-/// locality counters — and the disk store's data directory holds zero
-/// chunk files once everything is deleted. (Single-threaded ops, no
-/// replication tags: every counter is deterministic.)
+/// Backend equivalence: the same operation sequence produces an
+/// identical observable trace — write/delete outcomes, byte-for-byte
+/// reads, sizes, reclamation counts, and locality counters — on every
+/// chunk backend (memory, file-per-chunk disk, packed segment log), and
+/// each persistent store's data directory holds zero chunk files once
+/// everything is deleted. (Single-threaded ops, no replication tags:
+/// every counter is deterministic.)
 #[test]
-fn prop_backend_equivalence_mem_vs_disk() {
+fn prop_backend_equivalence_mem_vs_disk_vs_seg() {
     use std::sync::atomic::Ordering;
-    use woss::live::{chunk_files_under, BackendKind, CachePolicy, LiveStore, LiveTuning};
+    use woss::live::{
+        chunk_crc, chunk_files_under, segment_files_under, BackendKind, CachePolicy, LiveStore,
+        LiveTuning,
+    };
 
     let case = std::sync::atomic::AtomicU64::new(0);
     forall_noshrink(
         "backend-equivalence",
         |rng: &mut Rng| {
-            // Kept small: 256 cases × a disk-backed store is real file
-            // I/O; the shapes (create/read/reclaim/delete interleaving)
-            // matter, not the byte volume.
+            // Kept small: 256 cases × two file-backed stores is real
+            // file I/O; the shapes (create/read/reclaim/delete
+            // interleaving) matter, not the byte volume.
             (0..rng.range_usize(1, 12))
                 .map(|_| {
                     (
@@ -388,13 +392,8 @@ fn prop_backend_equivalence_mem_vs_disk() {
                 .collect::<Vec<(u64, usize, usize, u64)>>()
         },
         |ops| {
-            let dir = std::env::temp_dir().join(format!(
-                "woss-prop-equiv-{}-{}",
-                std::process::id(),
-                case.fetch_add(1, Ordering::Relaxed)
-            ));
-            let _ = std::fs::remove_dir_all(&dir);
-            // Ample cache budget: under pressure the disk store's
+            let case_id = case.fetch_add(1, Ordering::Relaxed);
+            // Ample cache budget: under pressure a persistent store's
             // extra dirty (cache-only scratch) entries would shift
             // evictions relative to the memory store, making locality
             // counters legitimately diverge; pressure-path behaviour is
@@ -408,66 +407,76 @@ fn prop_backend_equivalence_mem_vs_disk() {
                 backend,
                 data_dir,
                 fault: None,
+                io_workers: 1,
             };
+            // Replay the ops on a store and record every observable
+            // outcome: op success, read (len, crc), file_size after.
+            let run_trace = |store: &LiveStore| -> Vec<(bool, Option<(usize, u64)>, Option<u64>)> {
+                ops.iter()
+                    .map(|&(op, pidx, node, size)| {
+                        let path = format!("/e{pidx}");
+                        let (done, read) = match op {
+                            0 | 1 => {
+                                let tags = if op == 0 {
+                                    TagSet::from_pairs([
+                                        ("DP", "local"),
+                                        ("Lifetime", "scratch"),
+                                        ("Consumers", "2"),
+                                    ])
+                                } else {
+                                    TagSet::from_pairs([("DP", "local")])
+                                };
+                                let data = vec![(size % 251) as u8; size as usize];
+                                (store.write_file(NodeId(node), &path, &data, &tags).is_ok(), None)
+                            }
+                            2 | 3 => match store.read_file(NodeId((node + 1) % 4), &path) {
+                                Ok(bytes) => (true, Some((bytes.len(), chunk_crc(&bytes)))),
+                                Err(_) => (false, None),
+                            },
+                            _ => (store.delete(&path).is_ok(), None),
+                        };
+                        (done, read, store.file_size(&path))
+                    })
+                    .collect()
+            };
+
             let mem = LiveStore::woss_with(4, tuning(BackendKind::Memory, None));
-            let disk = LiveStore::woss_with(4, tuning(BackendKind::Disk, Some(dir.clone())));
+            let mem_trace = run_trace(&mem);
             let mut ok = true;
-            for &(op, pidx, node, size) in ops {
-                let path = format!("/e{pidx}");
-                match op {
-                    0 | 1 => {
-                        let tags = if op == 0 {
-                            TagSet::from_pairs([
-                                ("DP", "local"),
-                                ("Lifetime", "scratch"),
-                                ("Consumers", "2"),
-                            ])
-                        } else {
-                            TagSet::from_pairs([("DP", "local")])
-                        };
-                        let data = vec![(size % 251) as u8; size as usize];
-                        let a = mem.write_file(NodeId(node), &path, &data, &tags);
-                        let b = disk.write_file(NodeId(node), &path, &data, &tags);
-                        ok &= a.is_ok() == b.is_ok();
-                    }
-                    2 | 3 => {
-                        let a = mem.read_file(NodeId((node + 1) % 4), &path);
-                        let b = disk.read_file(NodeId((node + 1) % 4), &path);
-                        ok &= match (&a, &b) {
-                            (Ok(x), Ok(y)) => x == y,
-                            (Err(_), Err(_)) => true,
-                            _ => false,
-                        };
-                    }
-                    _ => {
-                        let a = mem.delete(&path);
-                        let b = disk.delete(&path);
-                        ok &= a.is_ok() == b.is_ok();
-                    }
+            for kind in [BackendKind::Disk, BackendKind::Seg] {
+                let dir = std::env::temp_dir().join(format!(
+                    "woss-prop-equiv-{}-{}-{}",
+                    kind.label(),
+                    std::process::id(),
+                    case_id
+                ));
+                let _ = std::fs::remove_dir_all(&dir);
+                let store = LiveStore::woss_with(4, tuning(kind, Some(dir.clone())));
+                // Observable behaviour converged: identical traces,
+                // reclamation, and locality counters.
+                ok &= run_trace(&store) == mem_trace;
+                ok &= mem.cache_stats().files_reclaimed == store.cache_stats().files_reclaimed;
+                ok &= mem.cache_stats().bytes_reclaimed == store.cache_stats().bytes_reclaimed;
+                ok &= mem.local_reads.load(Ordering::Relaxed)
+                    == store.local_reads.load(Ordering::Relaxed);
+                ok &= mem.remote_reads.load(Ordering::Relaxed)
+                    == store.remote_reads.load(Ordering::Relaxed);
+                // Deleting every surviving file leaves zero chunk files
+                // in the data directory and zero live backend bytes —
+                // on seg the packed logs may remain, but hold nothing.
+                for pidx in 0..5 {
+                    let _ = store.delete(&format!("/e{pidx}"));
                 }
-                ok &= mem.file_size(&path) == disk.file_size(&path);
-                if !ok {
-                    break;
+                ok &= chunk_files_under(&dir) == 0;
+                if kind == BackendKind::Seg {
+                    ok &= segment_files_under(&dir) <= 4; // one active log per node
+                } else {
+                    ok &= segment_files_under(&dir) == 0;
                 }
+                ok &= store.backend_used_bytes().iter().sum::<u64>() == 0;
+                drop(store);
+                let _ = std::fs::remove_dir_all(&dir);
             }
-            // Observable state converged: reclamation and locality
-            // counters agree exactly.
-            ok &= mem.cache_stats().files_reclaimed == disk.cache_stats().files_reclaimed;
-            ok &= mem.cache_stats().bytes_reclaimed == disk.cache_stats().bytes_reclaimed;
-            ok &= mem.local_reads.load(Ordering::Relaxed)
-                == disk.local_reads.load(Ordering::Relaxed);
-            ok &= mem.remote_reads.load(Ordering::Relaxed)
-                == disk.remote_reads.load(Ordering::Relaxed);
-            // Deleting every surviving file leaves zero chunk files in
-            // the disk store's data directory.
-            for pidx in 0..5 {
-                let _ = mem.delete(&format!("/e{pidx}"));
-                let _ = disk.delete(&format!("/e{pidx}"));
-            }
-            ok &= chunk_files_under(&dir) == 0;
-            ok &= disk.backend_used_bytes().iter().sum::<u64>() == 0;
-            drop(disk);
-            let _ = std::fs::remove_dir_all(&dir);
             ok
         },
     );
@@ -505,7 +514,7 @@ fn prop_simulation_deterministic() {
 /// a successful read returns exactly the bytes written, a failed write
 /// leaves no trace (so `file_size` tracks the model), and once the
 /// schedule is disabled and every file deleted, usage accounting drops
-/// back to zero with no stray chunk files — on both backends.
+/// back to zero with no stray chunk files — on all three backends.
 #[test]
 fn prop_faulted_store_never_serves_wrong_bytes() {
     use std::sync::atomic::Ordering;
@@ -551,14 +560,17 @@ fn prop_faulted_store_never_serves_wrong_bytes() {
             ));
             let _ = std::fs::remove_dir_all(&dir);
             let mut ok = true;
-            for backend in [BackendKind::Memory, BackendKind::Disk] {
+            for backend in [BackendKind::Memory, BackendKind::Disk, BackendKind::Seg] {
                 let store = LiveStore::woss_with(
                     4,
                     LiveTuning {
                         stripes: 4,
                         repl_workers: 1,
                         backend,
-                        data_dir: (backend == BackendKind::Disk).then(|| dir.clone()),
+                        // Each persistent backend gets its own subtree
+                        // so one sweep's debris can't leak into the
+                        // next backend's accounting.
+                        data_dir: backend.is_persistent().then(|| dir.join(backend.label())),
                         fault: Some(spec),
                         ..LiveTuning::default()
                     },

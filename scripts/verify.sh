@@ -30,21 +30,29 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-# The live suite again, against both chunk backends. LIVE_BACKEND is the
-# LiveTuning::default() hook: `disk` reroutes every default-tuned live
-# store through the file-backed spill tier. WOSS_DATA_DIR roots the
-# stores' auto-created data directories in a tempdir we can audit: a
-# clean run leaves it empty (stores remove their own directories on
-# drop, deletes/reclaims unlink chunk files), so anything left behind is
-# a leak and fails the gate.
-echo "== live suite × chunk-backend matrix (LIVE_BACKEND=mem|disk) =="
-for backend in mem disk; do
+# The live suite again, against every chunk backend. LIVE_BACKEND is
+# the LiveTuning::default() hook: `disk` reroutes every default-tuned
+# live store through the file-backed spill tier, `seg` through the
+# packed segment log. WOSS_DATA_DIR roots the stores' auto-created data
+# directories in a tempdir we can audit: a clean run leaves it empty
+# (stores remove their own directories on drop, deletes/reclaims unlink
+# chunk files and compact dead segment bytes), so anything left behind
+# is a leak and fails the gate — a surviving seg-*.log after the
+# delete-everything tests is called out by name.
+echo "== live suite × chunk-backend matrix (LIVE_BACKEND=mem|disk|seg) =="
+for backend in mem disk seg; do
     tmpdir="$(mktemp -d)"
     echo "-- LIVE_BACKEND=$backend --"
     LIVE_BACKEND="$backend" WOSS_DATA_DIR="$tmpdir" cargo test -q --lib live::
     LIVE_BACKEND="$backend" WOSS_DATA_DIR="$tmpdir" cargo test -q \
         --test live_cache --test live_concurrency --test live_stack \
         --test backend_equivalence --test live_recovery
+    stray_segs="$(find "$tmpdir" -type f -name 'seg-*.log*' | head -5)"
+    if [ -n "$stray_segs" ]; then
+        echo "FAIL: the $backend run left stray segment files after delete:"
+        echo "$stray_segs"
+        exit 1
+    fi
     stray="$(find "$tmpdir" -type f | head -20)"
     if [ -n "$stray" ]; then
         echo "FAIL: the $backend run left stray files under $tmpdir:"
@@ -54,86 +62,97 @@ for backend in mem disk; do
     rm -rf "$tmpdir"
 done
 
-# Restart leg: the disk tier must survive process death. Run a live
-# workload crash-style (no clean shutdown — the process just exits),
-# reopen the same data dir in a fresh process and verify every recorded
-# fingerprint reads back identical (journal-salvage path); the reopen
-# shuts down clean, so a second reopen exercises the snapshot path and
-# must verify the same fingerprints again. The stray-file gate above
-# stays in force: this leg uses its own directory and removes it.
-echo "== disk restart leg (crash salvage + snapshot reopen) =="
-restart_dir="$(mktemp -d)"
+# Restart leg: both persistent tiers must survive process death. Run a
+# live workload crash-style (no clean shutdown — the process just
+# exits), reopen the same data dir in a fresh process and verify every
+# recorded fingerprint reads back identical (journal-salvage path; on
+# seg this also replays the segment logs); the reopen shuts down clean,
+# so a second reopen exercises the snapshot path and must verify the
+# same fingerprints again. The stray-file gate above stays in force:
+# this leg uses its own directory and removes it.
 woss="./target/release/woss"
-"$woss" live --workload pipeline --nodes 4 --workers 4 \
-    --backend disk --data-dir "$restart_dir/store" \
-    --fingerprint-file "$restart_dir/fingerprints.txt"
-"$woss" live --reopen --data-dir "$restart_dir/store" \
-    --fingerprint-file "$restart_dir/fingerprints.txt" \
-    | tee "$restart_dir/reopen1.out"
-grep -q "crash (journal salvage)" "$restart_dir/reopen1.out" \
-    || { echo "FAIL: first reopen should take the crash-salvage path"; exit 1; }
-"$woss" live --reopen --data-dir "$restart_dir/store" \
-    --fingerprint-file "$restart_dir/fingerprints.txt" \
-    | tee "$restart_dir/reopen2.out"
-grep -q "after a clean shutdown" "$restart_dir/reopen2.out" \
-    || { echo "FAIL: second reopen should take the snapshot path"; exit 1; }
-rm -rf "$restart_dir"
+for backend in disk seg; do
+    echo "== $backend restart leg (crash salvage + snapshot reopen) =="
+    restart_dir="$(mktemp -d)"
+    "$woss" live --workload pipeline --nodes 4 --workers 4 \
+        --backend "$backend" --data-dir "$restart_dir/store" \
+        --fingerprint-file "$restart_dir/fingerprints.txt"
+    "$woss" live --reopen --data-dir "$restart_dir/store" \
+        --fingerprint-file "$restart_dir/fingerprints.txt" \
+        | tee "$restart_dir/reopen1.out"
+    grep -q "crash (journal salvage)" "$restart_dir/reopen1.out" \
+        || { echo "FAIL: first $backend reopen should take the crash-salvage path"; exit 1; }
+    "$woss" live --reopen --data-dir "$restart_dir/store" \
+        --fingerprint-file "$restart_dir/fingerprints.txt" \
+        | tee "$restart_dir/reopen2.out"
+    grep -q "after a clean shutdown" "$restart_dir/reopen2.out" \
+        || { echo "FAIL: second $backend reopen should take the snapshot path"; exit 1; }
+    rm -rf "$restart_dir"
+done
 
-# Hostile-scenario smoke: two fast scenarios on both chunk backends with
-# a fixed seed. Each run ends in a full bottom-up audit and the binary
-# exits non-zero on a dirty one, so this leg passing means fingerprints,
-# usage accounting, and the on-disk chunk population all reconciled.
-echo "== scenario smoke (metadata_storm,kill_recover × mem|disk, seed 7) =="
+# Hostile-scenario smoke: fast scenarios on every chunk backend with a
+# fixed seed — small_file_flood rides along to race the disk and seg
+# backends on a tiny-chunk ingest and audit the packed layout. Each run
+# ends in a full bottom-up audit and the binary exits non-zero on a
+# dirty one, so this leg passing means fingerprints, usage accounting,
+# and the on-disk chunk population all reconciled.
+echo "== scenario smoke (metadata_storm,small_file_flood,kill_recover × mem|disk|seg, seed 7) =="
 scn_dir="$(mktemp -d)"
-"$woss" scenario metadata_storm,kill_recover --quick --seed 7 --backend mem
-"$woss" scenario metadata_storm,kill_recover --quick --seed 7 \
+"$woss" scenario metadata_storm,small_file_flood,kill_recover --quick --seed 7 --backend mem
+"$woss" scenario metadata_storm,small_file_flood,kill_recover --quick --seed 7 \
     --backend disk --data-dir "$scn_dir/smoke"
+"$woss" scenario metadata_storm,small_file_flood,kill_recover --quick --seed 7 \
+    --backend seg --data-dir "$scn_dir/smoke-seg"
 # Same schedules again with the I/O pool fanned out: the pipelined data
 # path must close the same audits clean at io_workers=4.
-"$woss" scenario metadata_storm,kill_recover --quick --seed 7 \
+"$woss" scenario metadata_storm,small_file_flood,kill_recover --quick --seed 7 \
     --backend disk --data-dir "$scn_dir/smoke4" --io-workers 4
+"$woss" scenario metadata_storm,small_file_flood,kill_recover --quick --seed 7 \
+    --backend seg --data-dir "$scn_dir/smoke4-seg" --io-workers 4
 rm -rf "$scn_dir"
 
 # Pipeline-equivalence leg: the I/O pool must change scheduling, never
-# semantics. The same single-worker workload runs on the disk matrix at
-# --io-workers 1 (the serial pre-pool data path) and 4 (real overlap),
-# and the recorded output fingerprints must be byte-identical. The
-# cache+lifetime runs also compare the reclamation line (scratch files
-# reclaimed, bytes returned), and the cache-less pipeline run compares
-# the locality line (local/remote chunk-read counts) — prefetch is a
-# background race by design, so locality is only compared where no
-# cache tier is in play.
-echo "== io-workers equivalence (--io-workers 1 vs 4, disk matrix) =="
-io_dir="$(mktemp -d)"
-for wl in pipeline montage; do
-    for iow in 1 4; do
-        "$woss" live --workload "$wl" --nodes 4 --workers 1 \
-            --backend disk --data-dir "$io_dir/$wl-$iow" \
-            --cache-mb 2 --lifetime --io-workers "$iow" \
-            --fingerprint-file "$io_dir/$wl-$iow.fp" \
-            > "$io_dir/$wl-$iow.out"
+# semantics. The same single-worker workload runs on each persistent
+# backend at --io-workers 1 (the serial pre-pool data path) and 4 (real
+# overlap), and the recorded output fingerprints must be
+# byte-identical. The cache+lifetime runs also compare the reclamation
+# line (scratch files reclaimed, bytes returned), and the cache-less
+# pipeline run compares the locality line (local/remote chunk-read
+# counts) — prefetch is a background race by design, so locality is
+# only compared where no cache tier is in play.
+for be in disk seg; do
+    echo "== io-workers equivalence (--io-workers 1 vs 4, $be matrix) =="
+    io_dir="$(mktemp -d)"
+    for wl in pipeline montage; do
+        for iow in 1 4; do
+            "$woss" live --workload "$wl" --nodes 4 --workers 1 \
+                --backend "$be" --data-dir "$io_dir/$wl-$iow" \
+                --cache-mb 2 --lifetime --io-workers "$iow" \
+                --fingerprint-file "$io_dir/$wl-$iow.fp" \
+                > "$io_dir/$wl-$iow.out"
+        done
+        cmp "$io_dir/$wl-1.fp" "$io_dir/$wl-4.fp" \
+            || { echo "FAIL: $be $wl fingerprints diverge between --io-workers 1 and 4"; exit 1; }
+        a="$(grep '  lifetime:' "$io_dir/$wl-1.out")"
+        b="$(grep '  lifetime:' "$io_dir/$wl-4.out")"
+        [ "$a" = "$b" ] \
+            || { echo "FAIL: $be $wl reclamation diverges: '$a' vs '$b'"; exit 1; }
     done
-    cmp "$io_dir/$wl-1.fp" "$io_dir/$wl-4.fp" \
-        || { echo "FAIL: $wl fingerprints diverge between --io-workers 1 and 4"; exit 1; }
-    a="$(grep '  lifetime:' "$io_dir/$wl-1.out")"
-    b="$(grep '  lifetime:' "$io_dir/$wl-4.out")"
+    for iow in 1 4; do
+        "$woss" live --workload pipeline --nodes 4 --workers 1 \
+            --backend "$be" --data-dir "$io_dir/plain-$iow" \
+            --io-workers "$iow" \
+            --fingerprint-file "$io_dir/plain-$iow.fp" \
+            > "$io_dir/plain-$iow.out"
+    done
+    cmp "$io_dir/plain-1.fp" "$io_dir/plain-4.fp" \
+        || { echo "FAIL: $be plain fingerprints diverge between --io-workers 1 and 4"; exit 1; }
+    a="$(grep '  locality:' "$io_dir/plain-1.out")"
+    b="$(grep '  locality:' "$io_dir/plain-4.out")"
     [ "$a" = "$b" ] \
-        || { echo "FAIL: $wl reclamation diverges: '$a' vs '$b'"; exit 1; }
+        || { echo "FAIL: $be locality diverges between --io-workers 1 and 4: '$a' vs '$b'"; exit 1; }
+    rm -rf "$io_dir"
 done
-for iow in 1 4; do
-    "$woss" live --workload pipeline --nodes 4 --workers 1 \
-        --backend disk --data-dir "$io_dir/plain-$iow" \
-        --io-workers "$iow" \
-        --fingerprint-file "$io_dir/plain-$iow.fp" \
-        > "$io_dir/plain-$iow.out"
-done
-cmp "$io_dir/plain-1.fp" "$io_dir/plain-4.fp" \
-    || { echo "FAIL: plain fingerprints diverge between --io-workers 1 and 4"; exit 1; }
-a="$(grep '  locality:' "$io_dir/plain-1.out")"
-b="$(grep '  locality:' "$io_dir/plain-4.out")"
-[ "$a" = "$b" ] \
-    || { echo "FAIL: locality diverges between --io-workers 1 and 4: '$a' vs '$b'"; exit 1; }
-rm -rf "$io_dir"
 
 # Tracked perf trajectory: regenerate both bench documents and validate
 # them against their schemas. A missing, unparseable, or schema-drifted
