@@ -683,6 +683,11 @@ fn live_throughput(_runs: usize, seed: u64) -> Report {
                         ..LiveTuning::default()
                     },
                 );
+                // Per-row latency distributions: the reservoirs start
+                // empty for every (backend, stripes, threads) cell,
+                // so a row's percentile columns can never echo a
+                // previous configuration's samples.
+                store.reset_latency_samples();
                 // Tagged-write phase: every write carries placement +
                 // replication hints (the cross-layer hot path), each
                 // writer thread creating its own files.

@@ -61,11 +61,17 @@ impl PlacementPolicy for CollocatePlacement {
             if ctx.fits(anchor, chunk_bytes) {
                 return Some(anchor);
             }
-            // Anchor full: decline (files will spill via default path —
-            // the reduce task still finds most inputs on the anchor).
-            return None;
+            // Anchor full *or dead* — `fits` covers both, because node
+            // churn zeroes a failed node's capacity. Re-anchor the group
+            // on the current most-free node instead of declining
+            // forever: before this fix every later file in the group
+            // silently fell through to round-robin, scattering exactly
+            // the files the reduce task was promised together. Files
+            // already on the old anchor stay where they are (hints are
+            // hints); new ones collocate on the fresh anchor.
         }
-        // First file of the group: anchor on the most-free node.
+        // First file of the group, or a re-anchor after churn: anchor
+        // on the most-free node.
         let anchor = ctx.most_free(chunk_bytes)?;
         ctx.state.groups.insert(group, anchor);
         Some(anchor)
@@ -112,6 +118,39 @@ impl PlacementPolicy for ScatterPlacement {
             None
         }
     }
+}
+
+/// Cost-based default placement — the adaptive replacement for blind
+/// round-robin striping when no hint module claims a chunk.
+///
+/// `costs[i]` scores `nodes[i]`: lower is cheaper to write right now.
+/// The live store computes it from its bottom-up load plane (capacity
+/// fraction × EWMA write latency × in-flight I/O depth — see
+/// `LiveStore`'s cost formula); this function stays policy-free so the
+/// dispatch layer needs no handle on live-store internals and unit
+/// tests can feed synthetic scores. Only nodes with room for `bytes`
+/// are candidates; ties break on the lowest slice position, so equal
+/// scores (the cold-start case: no samples anywhere) degrade to
+/// first-fit determinism. Returns `None` when nothing fits — the
+/// caller's round-robin fallback applies, exactly as for a declining
+/// hint module.
+pub fn place_cost_based(nodes: &[NodeState], costs: &[f64], bytes: u64) -> Option<NodeId> {
+    debug_assert_eq!(nodes.len(), costs.len());
+    let mut best: Option<(f64, usize)> = None;
+    for (i, n) in nodes.iter().enumerate() {
+        if !n.fits(bytes) {
+            continue;
+        }
+        let cost = costs.get(i).copied().unwrap_or(f64::INFINITY);
+        let better = match best {
+            None => true,
+            Some((b, _)) => cost < b,
+        };
+        if better {
+            best = Some((cost, i));
+        }
+    }
+    best.map(|(_, i)| nodes[i].node)
 }
 
 #[cfg(test)]
@@ -202,6 +241,78 @@ mod tests {
             .place(&mut ctx(NodeId(1), &t2, &ns, &mut st), 0, 100)
             .unwrap();
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn collocate_reanchors_after_churn() {
+        let tags = TagSet::from_pairs([("DP", "collocation g")]);
+        let mut ns = nodes(4);
+        let mut st = PlacementState::default();
+        let anchor = CollocatePlacement
+            .place(&mut ctx(NodeId(1), &tags, &ns, &mut st), 0, 100)
+            .unwrap();
+        // Churn kills the anchor: fail_node zeroes its capacity, so
+        // nothing fits there any more.
+        {
+            let dead = ns.iter_mut().find(|n| n.node == anchor).unwrap();
+            dead.capacity = 0;
+            dead.used = 0;
+        }
+        let fresh = CollocatePlacement
+            .place(&mut ctx(NodeId(1), &tags, &ns, &mut st), 0, 100)
+            .expect("group must re-anchor, not decline forever");
+        assert_ne!(fresh, anchor, "re-anchor must leave the dead node");
+        assert_eq!(
+            st.groups.get("g"),
+            Some(&fresh),
+            "the group record must follow the new anchor"
+        );
+        // Later files in the group stick to the fresh anchor.
+        let again = CollocatePlacement
+            .place(&mut ctx(NodeId(3), &tags, &ns, &mut st), 0, 100)
+            .unwrap();
+        assert_eq!(again, fresh);
+    }
+
+    #[test]
+    fn collocate_reanchors_when_anchor_fills() {
+        let tags = TagSet::from_pairs([("DP", "collocation g")]);
+        let mut ns = nodes(2);
+        let mut st = PlacementState::default();
+        let anchor = CollocatePlacement
+            .place(&mut ctx(NodeId(1), &tags, &ns, &mut st), 0, 100)
+            .unwrap();
+        ns.iter_mut().find(|n| n.node == anchor).unwrap().used = 1 << 30;
+        let fresh = CollocatePlacement
+            .place(&mut ctx(NodeId(1), &tags, &ns, &mut st), 0, 100)
+            .expect("a full anchor re-anchors on the remaining node");
+        assert_ne!(fresh, anchor);
+    }
+
+    #[test]
+    fn cost_based_prefers_cheapest_fitting_node() {
+        let mut ns = nodes(3);
+        // Node 3 is cheapest but full; node 2 is next.
+        ns[2].used = ns[2].capacity;
+        let picked = place_cost_based(&ns, &[3.0, 1.5, 0.5], 100);
+        assert_eq!(picked, Some(NodeId(2)));
+    }
+
+    #[test]
+    fn cost_based_ties_break_on_position() {
+        let ns = nodes(3);
+        // Cold start: every score identical → first fit wins, so the
+        // degenerate case is deterministic.
+        assert_eq!(place_cost_based(&ns, &[1.0, 1.0, 1.0], 100), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn cost_based_declines_when_pool_full() {
+        let mut ns = nodes(2);
+        for n in &mut ns {
+            n.used = n.capacity;
+        }
+        assert_eq!(place_cost_based(&ns, &[1.0, 2.0], 1), None);
     }
 
     #[test]

@@ -53,6 +53,12 @@ pub const SYSTEM_STATUS_ATTR: &str = "system_status";
 /// file declared no consumer count) — bottom-up.
 pub const CONSUMERS_LEFT_ATTR: &str = "consumers_left";
 
+/// Reserved attribute exposing a file's current read heat (`%.2f`):
+/// the decayed per-file read counter the adaptive plane uses to decide
+/// when a hot file earns extra replicas (and when they are trimmed).
+/// Bottom-up, served by the live store.
+pub const HEAT_ATTR: &str = "heat";
+
 /// A parsed, typed hint. Unknown keys are preserved in the [`TagSet`] but
 /// parse to [`Hint::Unknown`] — a legacy storage system would simply
 /// ignore them (the paper's incremental-adoption argument).

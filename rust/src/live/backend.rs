@@ -233,6 +233,18 @@ pub trait ChunkBackend: Send + Sync {
     fn maintain(&self) -> bool {
         false
     }
+
+    /// Mutations currently executing inside this backend — the
+    /// queue-depth half of the bottom-up load signal the adaptive
+    /// placement plane consumes (`used_bytes` is the capacity half).
+    /// Disk backends report their per-key in-flight mutation slots: a
+    /// node mid-spill or mid-compaction shows a non-zero depth and
+    /// stops looking like a cheap placement target. Memory backends
+    /// complete mutations synchronously under a map lock, hence the
+    /// zero default.
+    fn io_depth(&self) -> u64 {
+        0
+    }
 }
 
 /// The PR 3 in-memory chunk store: a `RwLock<HashMap>` per node.
@@ -978,6 +990,10 @@ impl ChunkBackend for FileBackend {
 
     fn chunk_keys(&self) -> Vec<ChunkKey> {
         FileBackend::chunk_keys(self)
+    }
+
+    fn io_depth(&self) -> u64 {
+        self.inflight.keys.lock().unwrap().len() as u64
     }
 }
 
@@ -2056,6 +2072,10 @@ impl ChunkBackend for SegBackend {
 
     fn maintain(&self) -> bool {
         SegBackend::maintain(self)
+    }
+
+    fn io_depth(&self) -> u64 {
+        self.inflight.keys.lock().unwrap().len() as u64
     }
 }
 

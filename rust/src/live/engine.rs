@@ -356,15 +356,39 @@ impl LiveEngine {
                     *gravity.entry(holder.0).or_insert(0) += bytes;
                 }
             }
-            gravity
-                .into_iter()
-                .max_by_key(|&(n, bytes)| {
+            let picked = if self.store.adaptive() {
+                // Adaptive stores break byte-ties with the same
+                // read-cost score `read_file` uses to order holders,
+                // so a node mid-spill or mid-compaction stops
+                // attracting tasks its data-gravity alone would pull
+                // in. The remaining tie-breaks keep the static
+                // ordering for determinism.
+                gravity.into_iter().max_by(|&(a, a_bytes), &(b, b_bytes)| {
+                    a_bytes
+                        .cmp(&b_bytes)
+                        .then_with(|| {
+                            self.store
+                                .node_read_cost(NodeId(b))
+                                .partial_cmp(&self.store.node_read_cost(NodeId(a)))
+                                .unwrap_or(std::cmp::Ordering::Equal)
+                        })
+                        .then_with(|| {
+                            node_load[b]
+                                .load(Ordering::Relaxed)
+                                .cmp(&node_load[a].load(Ordering::Relaxed))
+                        })
+                        .then_with(|| b.cmp(&a))
+                })
+            } else {
+                gravity.into_iter().max_by_key(|&(n, bytes)| {
                     (
                         bytes,
                         std::cmp::Reverse(node_load[n].load(Ordering::Relaxed)),
                         std::cmp::Reverse(n),
                     )
                 })
+            };
+            picked
                 .map(|(n, _)| NodeId(n))
                 .unwrap_or_else(|| {
                     NodeId(next_node.fetch_add(1, Ordering::Relaxed) % self.store.n_nodes())

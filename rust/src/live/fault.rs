@@ -338,6 +338,12 @@ impl ChunkBackend for FaultBackend {
         // path, so a faulted store still reclaims dead bytes.
         self.inner.maintain()
     }
+
+    fn io_depth(&self) -> u64 {
+        // The load plane must see through the decorator: a hostile
+        // scenario's store still reads the real backend queue depth.
+        self.inner.io_depth()
+    }
 }
 
 #[cfg(test)]

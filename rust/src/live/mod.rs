@@ -96,4 +96,6 @@ pub use backend::{
 };
 pub use engine::{EngineOptions, LiveEngine, LiveReport};
 pub use fault::{FaultBackend, FaultControl, FaultSpec};
-pub use store::{CachePolicy, CacheStats, LiveStore, LiveTuning, RecoveryReport, StoreAudit};
+pub use store::{
+    CachePolicy, CacheStats, LiveStore, LiveTuning, NodeLoad, RecoveryReport, StoreAudit,
+};

@@ -111,6 +111,7 @@ use super::backend::{
     FileBackend, MemoryBackend, NodeRecovery, SegBackend,
 };
 use super::fault::{FaultBackend, FaultControl, FaultSpec};
+use crate::dispatch::placement::place_cost_based;
 use crate::dispatch::{shard_for_path, PlacementCtx, Registry, ShardedPlacementState};
 use crate::hints::{AccessPattern, Lifetime, TagSet};
 use crate::storage::types::{ChunkMeta, FileId, FileMeta, NodeId, NodeState, StorageError};
@@ -364,6 +365,13 @@ pub struct LiveTuning {
     /// exactly; `>= 2` spawns that many workers so independent disk
     /// operations overlap. Clamped to ≥ 1.
     pub io_workers: usize,
+    /// Adaptive load-aware placement & read scheduling: consume the
+    /// per-node load-feedback plane ([`NodeLoad`]) in every placement,
+    /// read-source, and churn-repair decision, and widen/trim replicas
+    /// of read-hot files automatically. Off (the default) keeps every
+    /// decision byte-identical to the static store — the signals are
+    /// still *collected* (cheap atomics), only the decisions change.
+    pub adaptive: bool,
 }
 
 impl Default for LiveTuning {
@@ -378,6 +386,7 @@ impl Default for LiveTuning {
             data_dir: None,
             fault: None,
             io_workers: 1,
+            adaptive: false,
         }
     }
 }
@@ -519,8 +528,12 @@ struct CacheTier {
     /// The pool dirty write-backs drain through (shared with the
     /// store and its replication workers).
     io: Arc<IoPool>,
+    /// Per-node load signals shared with the store — spill latency is
+    /// one of the EWMAs the adaptive placement plane reads, and the
+    /// cache is the only layer that sees it.
+    loads: Arc<Vec<NodeLoad>>,
     /// Spill latencies, µs (submission to completion).
-    spill_samples: Mutex<Vec<f64>>,
+    spill_samples: Mutex<Reservoir>,
     hits: AtomicU64,
     insertions: AtomicU64,
     evictions: AtomicU64,
@@ -557,6 +570,7 @@ impl CacheTier {
         policy: CachePolicy,
         spill: Option<Arc<Vec<Box<dyn ChunkBackend>>>>,
         io: Arc<IoPool>,
+        loads: Arc<Vec<NodeLoad>>,
     ) -> Self {
         CacheTier {
             nodes: (0..n_nodes).map(|_| Mutex::new(NodeCache::default())).collect(),
@@ -564,7 +578,8 @@ impl CacheTier {
             policy,
             spill,
             io,
-            spill_samples: Mutex::new(Vec::new()),
+            loads,
+            spill_samples: Mutex::new(Reservoir::default()),
             hits: AtomicU64::new(0),
             insertions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -664,11 +679,13 @@ impl CacheTier {
         };
         let stores = Arc::clone(stores);
         let started = std::time::Instant::now();
-        let ok = self.io.run(move || stores[node.0].put(key, &bytes).is_ok());
-        self.spill_samples
-            .lock()
-            .unwrap()
-            .push(started.elapsed().as_secs_f64() * 1e6);
+        let ok = {
+            let _slot = self.loads[node.0].begin();
+            self.io.run(move || stores[node.0].put(key, &bytes).is_ok())
+        };
+        let us = started.elapsed().as_secs_f64() * 1e6;
+        self.loads[node.0].observe_spill(us);
+        self.spill_samples.lock().unwrap().record(us);
         if ok {
             self.spills.fetch_add(1, Ordering::Relaxed);
         }
@@ -884,18 +901,323 @@ impl CacheTier {
     }
 }
 
-/// p50/p95/p99 over a latency sample buffer (µs); zeros when empty.
-fn latency_percentiles(samples: &Mutex<Vec<f64>>) -> (f64, f64, f64) {
+/// Retained-sample cap for the latency reservoirs. 4096 doubles give a
+/// stable p99 estimate while bounding each buffer at 32 KiB — a
+/// week-long run holds the same memory as a one-minute one.
+const LATENCY_RESERVOIR: usize = 4096;
+
+/// Fixed-capacity latency sample buffer: reservoir sampling (Algorithm
+/// R) over the stream of observed latencies. The first
+/// [`LATENCY_RESERVOIR`] samples are kept outright; after that each
+/// newcomer replaces a uniformly random retained slot with probability
+/// `cap/seen`, so every sample in the stream is retained with equal
+/// probability and the percentiles stay unbiased while memory stays
+/// flat. Replacement slots come from a deterministic xorshift64* —
+/// equal operation sequences reproduce equal reports.
+struct Reservoir {
+    samples: Vec<f64>,
+    /// Samples offered so far (not just kept).
+    seen: u64,
+    /// xorshift64* state; seeded non-zero (all-zero is its fixed point).
+    rng: u64,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir {
+            samples: Vec::new(),
+            seen: 0,
+            rng: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
+impl Reservoir {
+    fn next_rng(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Offer one sample to the reservoir.
+    fn record(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < LATENCY_RESERVOIR {
+            self.samples.push(v);
+            return;
+        }
+        let j = (self.next_rng() % self.seen) as usize;
+        if j < LATENCY_RESERVOIR {
+            self.samples[j] = v;
+        }
+    }
+
+    /// Drop every retained sample and restart the sampler — the
+    /// per-row reset the experiment sweeps use so one configuration's
+    /// latencies never bleed into the next row's percentiles. Resets
+    /// the RNG too: each row's replacement schedule is then a pure
+    /// function of its own operation count.
+    fn reset(&mut self) {
+        *self = Reservoir::default();
+    }
+
+    fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// p50/p95/p99 over a latency sample reservoir (µs); zeros when empty.
+fn latency_percentiles(samples: &Mutex<Reservoir>) -> (f64, f64, f64) {
     let s = samples.lock().unwrap();
     if s.is_empty() {
         return (0.0, 0.0, 0.0);
     }
-    let sum = Summary::from_iter(s.iter().copied());
+    let sum = Summary::from_iter(s.samples.iter().copied());
     (
         sum.percentile(50.0),
         sum.percentile(95.0),
         sum.percentile(99.0),
     )
+}
+
+/// EWMA smoothing factor for the per-node latency signals: each new
+/// sample moves the average 20% of the way — slow enough to ride out
+/// one injected delay spike, fast enough that a node mid-compaction
+/// looks expensive within a handful of operations.
+const LOAD_EWMA_ALPHA: f64 = 0.2;
+
+/// Lock-free per-node load signals — the upward half of the paper's
+/// bidirectional channel, collected continuously on the data path and
+/// consumed by adaptive placement ([`LiveTuning::adaptive`]), the
+/// read-source scheduler, and the `load=` field of `system_status`.
+/// All atomics, no locks: the f64 EWMAs are stored as bit patterns in
+/// `AtomicU64` (bit pattern 0 ⇒ no samples yet) and updated with a CAS
+/// loop; a lost race under contention skews one sample's weight, never
+/// the invariant.
+#[derive(Default)]
+pub struct NodeLoad {
+    /// EWMA foreground primary-put latency, µs (f64 bits).
+    put_ewma_us: AtomicU64,
+    /// EWMA foreground chunk-serve latency, µs (f64 bits).
+    get_ewma_us: AtomicU64,
+    /// EWMA dirty-spill write-back latency, µs (f64 bits).
+    spill_ewma_us: AtomicU64,
+    /// Store-level mutations in flight against this node right now:
+    /// foreground puts, cache spills, background copy/restore puts.
+    /// Complements [`ChunkBackend::io_depth`], which counts mutations
+    /// already *inside* the backend.
+    inflight: AtomicU64,
+    /// Chunk serves from this node satisfied by its cache.
+    hits: AtomicU64,
+    /// Chunk serves from this node that had to touch its backend.
+    misses: AtomicU64,
+}
+
+/// RAII in-flight marker on a [`NodeLoad`]: increments on
+/// [`NodeLoad::begin`], decrements on drop — panic- and
+/// early-return-safe, so the depth gauge can never leak.
+struct LoadSlot<'a> {
+    load: &'a NodeLoad,
+}
+
+impl Drop for LoadSlot<'_> {
+    fn drop(&mut self) {
+        self.load.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl NodeLoad {
+    fn ewma_observe(cell: &AtomicU64, sample: f64) {
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            // Bit pattern 0 doubles as "no samples yet": the first
+            // observation seeds the average instead of decaying from
+            // zero. (A sub-resolution 0.0 µs sample re-seeds — harmless.)
+            let next = if cur == 0 {
+                sample
+            } else {
+                let prev = f64::from_bits(cur);
+                prev + LOAD_EWMA_ALPHA * (sample - prev)
+            };
+            match cell.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    fn observe_put(&self, us: f64) {
+        Self::ewma_observe(&self.put_ewma_us, us);
+    }
+
+    fn observe_get(&self, us: f64) {
+        Self::ewma_observe(&self.get_ewma_us, us);
+    }
+
+    fn observe_spill(&self, us: f64) {
+        Self::ewma_observe(&self.spill_ewma_us, us);
+    }
+
+    fn begin(&self) -> LoadSlot<'_> {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        LoadSlot { load: self }
+    }
+
+    fn record_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Smoothed foreground put latency, µs (0.0 before any sample).
+    pub fn put_ewma_us(&self) -> f64 {
+        f64::from_bits(self.put_ewma_us.load(Ordering::Relaxed))
+    }
+
+    /// Smoothed foreground chunk-serve latency, µs.
+    pub fn get_ewma_us(&self) -> f64 {
+        f64::from_bits(self.get_ewma_us.load(Ordering::Relaxed))
+    }
+
+    /// Smoothed dirty-spill write-back latency, µs.
+    pub fn spill_ewma_us(&self) -> f64 {
+        f64::from_bits(self.spill_ewma_us.load(Ordering::Relaxed))
+    }
+
+    /// Store-level operations in flight against this node right now.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of this node's chunk serves satisfied by its cache
+    /// (0.0 before any serve — a node nobody reads claims no cheapness).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed);
+        let m = self.misses.load(Ordering::Relaxed);
+        if h + m == 0 {
+            return 0.0;
+        }
+        h as f64 / (h + m) as f64
+    }
+}
+
+/// Write-cost score of placing `bytes`-agnostic work on node `n`
+/// (lower = cheaper): capacity pressure × smoothed write latency ×
+/// queue depth, the cost formula adaptive placement minimizes. A
+/// zero-capacity (failed) node is infinitely expensive. `io_depth` is
+/// the backend's own in-flight mutation count
+/// ([`ChunkBackend::io_depth`]), added to the store-level depth so a
+/// node mid-spill or mid-compaction prices itself out.
+fn write_cost(n: &NodeState, load: &NodeLoad, io_depth: u64) -> f64 {
+    if n.capacity == 0 {
+        return f64::INFINITY;
+    }
+    let used_frac = n.used as f64 / n.capacity as f64;
+    let depth = (load.inflight() + io_depth) as f64;
+    (1.0 + used_frac) * (1.0 + load.put_ewma_us() / 1e3) * (1.0 + depth)
+}
+
+/// Read-cost score of serving a chunk from a node (lower = cheaper):
+/// smoothed serve latency × queue depth × cache coldness — a holder
+/// with a warm cache (`hit_rate → 1`) halves its score relative to one
+/// that must touch its backend for every serve.
+fn read_cost(load: &NodeLoad, io_depth: u64) -> f64 {
+    let depth = (load.inflight() + io_depth) as f64;
+    (1.0 + load.get_ewma_us() / 1e3) * (1.0 + depth) * (2.0 - load.hit_rate())
+}
+
+/// Half-life of file heat, in tracker ticks. The clock is *operation
+/// count* (one tick per tracked read store-wide), not wall time — heat
+/// is then deterministic for a given operation sequence, which the
+/// seeded scenarios and the convergence property test rely on.
+const HEAT_HALF_LIFE_TICKS: f64 = 256.0;
+/// Heat at which a file earns one extra replica per chunk (the
+/// dynamically-derived `broadcast` hint).
+const HEAT_WIDEN: f64 = 8.0;
+/// Heat below which a widened file gives its extra replica back. The
+/// wide gap below [`HEAT_WIDEN`] is deliberate hysteresis: a file
+/// oscillating near one threshold never crosses the other, so the
+/// widen/trim pair cannot ping-pong.
+const HEAT_TRIM: f64 = 2.0;
+/// Lock shards for the heat map (path-keyed, same router as the
+/// namespace stripes).
+const HEAT_SHARDS: usize = 16;
+
+struct HeatEntry {
+    heat: f64,
+    /// Tracker tick of the last update (decay is computed lazily).
+    tick: u64,
+}
+
+/// Per-file read-popularity tracker with exponential decay — the
+/// signal behind the reserved `heat=` attribute and the adaptive
+/// replica widening loop. Sharded like the namespace so hot-path reads
+/// of unrelated files never contend; each update is one shard-lock
+/// hold around a float multiply.
+struct HeatTracker {
+    /// Tracked reads so far — the decay clock.
+    ticks: AtomicU64,
+    shards: Vec<Mutex<HashMap<String, HeatEntry>>>,
+}
+
+impl HeatTracker {
+    fn new() -> Self {
+        HeatTracker {
+            ticks: AtomicU64::new(0),
+            shards: (0..HEAT_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    /// Heat after decaying from `then` to `now`. `saturating_sub`:
+    /// a concurrent `record` can push an entry's tick past a tick this
+    /// reader loaded earlier — that must read as "no time passed", not
+    /// as a huge negative exponent.
+    fn decayed(heat: f64, then: u64, now: u64) -> f64 {
+        let dt = now.saturating_sub(then) as f64;
+        heat * 0.5f64.powf(dt / HEAT_HALF_LIFE_TICKS)
+    }
+
+    /// Count one read of `path`; returns the file's updated heat.
+    fn record(&self, path: &str) -> f64 {
+        let now = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut shard = self.shards[shard_for_path(path, HEAT_SHARDS)].lock().unwrap();
+        let e = shard.entry(path.to_string()).or_insert(HeatEntry {
+            heat: 0.0,
+            tick: now,
+        });
+        e.heat = Self::decayed(e.heat, e.tick, now) + 1.0;
+        e.tick = now;
+        e.heat
+    }
+
+    /// Current decayed heat of `path` without counting a read.
+    fn peek(&self, path: &str) -> f64 {
+        let now = self.ticks.load(Ordering::Relaxed);
+        let shard = self.shards[shard_for_path(path, HEAT_SHARDS)].lock().unwrap();
+        shard
+            .get(path)
+            .map(|e| Self::decayed(e.heat, e.tick, now))
+            .unwrap_or(0.0)
+    }
+
+    /// Drop a deleted/reclaimed file's entry so a later file re-created
+    /// at the same path starts cold.
+    fn forget(&self, path: &str) {
+        self.shards[shard_for_path(path, HEAT_SHARDS)]
+            .lock()
+            .unwrap()
+            .remove(path);
+    }
 }
 
 /// One namespace stripe: the files (and pre-creation tags) whose path
@@ -979,6 +1301,10 @@ struct ReplShared {
     /// pool, so replica copies, promote reads, and churn restores
     /// share the same bounded I/O lanes as cache spills.
     io: Arc<IoPool>,
+    /// Per-node load signals shared with the store: background puts
+    /// hold an in-flight slot on their target so the depth gauge the
+    /// adaptive plane reads covers background byte movement too.
+    loads: Arc<Vec<NodeLoad>>,
     /// Replica chunk copies completed in the background.
     copied: AtomicU64,
     /// Restore jobs queued or in flight — the store-wide
@@ -1004,6 +1330,7 @@ impl ReplPool {
         stores: Arc<Vec<Box<dyn ChunkBackend>>>,
         cache: Option<Arc<CacheTier>>,
         io: Arc<IoPool>,
+        loads: Arc<Vec<NodeLoad>>,
         workers: usize,
     ) -> Self {
         let shared = Arc::new(ReplShared {
@@ -1017,6 +1344,7 @@ impl ReplPool {
             stores,
             cache,
             io,
+            loads,
             copied: AtomicU64::new(0),
             restore_pending: AtomicU64::new(0),
             restored_chunks: AtomicU64::new(0),
@@ -1100,6 +1428,14 @@ impl ReplPool {
         let q = self.shared.queue.lock().unwrap();
         q.jobs.len() + q.in_flight.values().sum::<usize>()
     }
+
+    /// Any queued or in-flight background job for `file`? The heat
+    /// trim path checks this so it never removes a replica whose
+    /// widening copy is still landing.
+    fn has_pending(&self, file: FileId) -> bool {
+        let q = self.shared.queue.lock().unwrap();
+        q.in_flight.contains_key(&file) || q.jobs.iter().any(|j| j.file == file)
+    }
 }
 
 impl Drop for ReplPool {
@@ -1144,6 +1480,10 @@ fn worker_loop(shared: &ReplShared) {
                 // leaves that replica missing — optimistic semantics
                 // never promised it, and reads fall back to holders
                 // that materialized the chunk.
+                let _slots: Vec<LoadSlot<'_>> = targets
+                    .iter()
+                    .map(|&t| shared.loads[t.0].begin())
+                    .collect();
                 let puts = targets
                     .iter()
                     .map(|&target| {
@@ -1221,6 +1561,7 @@ fn worker_loop(shared: &ReplShared) {
                         let target = *target;
                         let len = bytes.len() as u64;
                         let stores = Arc::clone(&shared.stores);
+                        let _slot = shared.loads[target.0].begin();
                         if shared.io.run(move || stores[target.0].put(key, &bytes).is_ok()) {
                             shared.restored_chunks.fetch_add(1, Ordering::Relaxed);
                             shared.restored_bytes.fetch_add(len, Ordering::Relaxed);
@@ -1591,9 +1932,29 @@ pub struct LiveStore {
     /// own drop joins the I/O workers.
     io: Arc<IoPool>,
     /// Foreground per-chunk put latencies, µs ([`CacheStats::put_p50_us`]).
-    put_samples: Mutex<Vec<f64>>,
+    put_samples: Mutex<Reservoir>,
     /// Foreground per-chunk read latencies, µs ([`CacheStats::get_p50_us`]).
-    get_samples: Mutex<Vec<f64>>,
+    get_samples: Mutex<Reservoir>,
+    /// Per-node live load signals (EWMA latencies, in-flight depth,
+    /// cache hit rate) — the feedback plane adaptive placement and
+    /// read scheduling consume. Always collected; only *decisions*
+    /// are gated on `adaptive`.
+    loads: Arc<Vec<NodeLoad>>,
+    /// Per-file read-popularity tracker behind the reserved `heat=`
+    /// attribute and the adaptive replica widen/trim loop.
+    heat: HeatTracker,
+    /// Files currently holding an extra heat replica (guards the
+    /// widen/trim loop against double-widening and no-op trims).
+    widened: Mutex<HashSet<FileId>>,
+    /// Consume the load plane in placement/read/churn decisions
+    /// ([`LiveTuning::adaptive`]). Off reproduces static behavior.
+    adaptive: bool,
+    /// Files granted an extra replica because their read heat crossed
+    /// [`HEAT_WIDEN`].
+    heat_widened: AtomicU64,
+    /// Widened files whose extra replica was trimmed after decay below
+    /// [`HEAT_TRIM`].
+    heat_trimmed: AtomicU64,
     /// Bytes written through [`LiveStore::write_file`] (lock-free counter).
     pub bytes_written: AtomicU64,
     /// Bytes returned by [`LiveStore::read_file`].
@@ -1762,6 +2123,8 @@ impl LiveStore {
         let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(backends);
         let n_stripes = tuning.stripes.max(1);
         let io = Arc::new(IoPool::new(tuning.io_workers));
+        let loads: Arc<Vec<NodeLoad>> =
+            Arc::new((0..n_nodes).map(|_| NodeLoad::default()).collect());
         let cache = tuning.cache_bytes.map(|budget| {
             Arc::new(CacheTier::new(
                 n_nodes,
@@ -1769,6 +2132,7 @@ impl LiveStore {
                 tuning.cache_policy,
                 Some(Arc::clone(&stores)),
                 Arc::clone(&io),
+                Arc::clone(&loads),
             ))
         });
         Ok(LiveStore {
@@ -1792,10 +2156,22 @@ impl LiveStore {
             cache: cache.clone(),
             lifetime_on: tuning.lifetime,
             next_id: AtomicU64::new(1),
-            repl: ReplPool::new(stores, cache, Arc::clone(&io), tuning.repl_workers),
+            repl: ReplPool::new(
+                stores,
+                cache,
+                Arc::clone(&io),
+                Arc::clone(&loads),
+                tuning.repl_workers,
+            ),
             io,
-            put_samples: Mutex::new(Vec::new()),
-            get_samples: Mutex::new(Vec::new()),
+            put_samples: Mutex::new(Reservoir::default()),
+            get_samples: Mutex::new(Reservoir::default()),
+            loads,
+            heat: HeatTracker::new(),
+            widened: Mutex::new(HashSet::new()),
+            adaptive: tuning.adaptive,
+            heat_widened: AtomicU64::new(0),
+            heat_trimmed: AtomicU64::new(0),
             bytes_written: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
             local_reads: AtomicU64::new(0),
@@ -2073,6 +2449,8 @@ impl LiveStore {
         let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(boxed);
         let n_stripes = tuning.stripes.max(1);
         let io = Arc::new(IoPool::new(tuning.io_workers));
+        let loads: Arc<Vec<NodeLoad>> =
+            Arc::new((0..n_nodes).map(|_| NodeLoad::default()).collect());
         let cache = tuning.cache_bytes.map(|budget| {
             Arc::new(CacheTier::new(
                 n_nodes,
@@ -2080,6 +2458,7 @@ impl LiveStore {
                 tuning.cache_policy,
                 Some(Arc::clone(&stores)),
                 Arc::clone(&io),
+                Arc::clone(&loads),
             ))
         });
         let mut nodes: Vec<NodeState> = (0..n_nodes)
@@ -2118,10 +2497,22 @@ impl LiveStore {
             cache: cache.clone(),
             lifetime_on: tuning.lifetime,
             next_id: AtomicU64::new(max_id + 1),
-            repl: ReplPool::new(stores, cache, Arc::clone(&io), tuning.repl_workers),
+            repl: ReplPool::new(
+                stores,
+                cache,
+                Arc::clone(&io),
+                Arc::clone(&loads),
+                tuning.repl_workers,
+            ),
             io,
-            put_samples: Mutex::new(Vec::new()),
-            get_samples: Mutex::new(Vec::new()),
+            put_samples: Mutex::new(Reservoir::default()),
+            get_samples: Mutex::new(Reservoir::default()),
+            loads,
+            heat: HeatTracker::new(),
+            widened: Mutex::new(HashSet::new()),
+            adaptive: tuning.adaptive,
+            heat_widened: AtomicU64::new(0),
+            heat_trimmed: AtomicU64::new(0),
             bytes_written: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
             local_reads: AtomicU64::new(0),
@@ -2457,9 +2848,12 @@ impl LiveStore {
                         n.used = n.used.saturating_sub(bytes);
                     }
                     // Replacement holder: live, not already holding
-                    // this chunk, with room — least-loaded first, the
-                    // same utilization feedback placement uses.
-                    let target = core
+                    // this chunk, with room. Static mode takes
+                    // least-loaded by bytes; adaptive prices the
+                    // candidates with the same write-cost formula
+                    // placement uses, so repair traffic also steers
+                    // around slow or queue-deep nodes.
+                    let candidates: Vec<&NodeState> = core
                         .nodes
                         .iter()
                         .filter(|n| {
@@ -2467,8 +2861,28 @@ impl LiveStore {
                                 && !chunk.replicas.contains(&n.node)
                                 && n.used + bytes <= n.capacity
                         })
-                        .min_by_key(|n| n.used)
-                        .map(|n| n.node);
+                        .collect();
+                    let target = if self.adaptive {
+                        candidates
+                            .iter()
+                            .copied()
+                            .min_by(|&a, &b| {
+                                let ca = write_cost(
+                                    a,
+                                    &self.loads[a.node.0],
+                                    self.stores[a.node.0].io_depth(),
+                                );
+                                let cb = write_cost(
+                                    b,
+                                    &self.loads[b.node.0],
+                                    self.stores[b.node.0].io_depth(),
+                                );
+                                ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                            })
+                            .map(|n| n.node)
+                    } else {
+                        candidates.iter().min_by_key(|n| n.used).map(|n| n.node)
+                    };
                     let Some(target) = target else {
                         continue; // no room anywhere: stay degraded
                     };
@@ -2705,16 +3119,42 @@ impl LiveStore {
                 "tier={tier};chunks={chunks};bytes={bytes};pinned={pinned};recovered={recovered}"
             ));
         }
+        // Reserved `heat`: the file's decayed read-popularity score —
+        // live deployment state only the store can see (like
+        // `cache_state`), served bottom-up so an application can watch
+        // the signal that drives adaptive replica widening.
+        if self.registry.hints_enabled() && key == crate::hints::HEAT_ATTR {
+            return Some(format!("{:.2}", self.heat.peek(path)));
+        }
         if self.registry.serves_attr(key) {
             let core = self.lock_core();
             if let Some(value) = self.registry.get_system_attr(key, meta, &core.nodes) {
                 if key == crate::hints::SYSTEM_STATUS_ATTR {
-                    return Some(format!(
+                    let mut value = format!(
                         "{value} recovered={} under_replicated={} io_queue={}",
                         self.recovered_ids.read().unwrap().len(),
                         self.under_replicated(),
                         self.io_queue_depth()
-                    ));
+                    );
+                    // Adaptive only: per-node write-cost scores
+                    // (`load=<node>:<score>,...`) so a scheduler can
+                    // see the same cost surface placement minimizes.
+                    // Gated so the off mode's value stays byte-stable.
+                    if self.adaptive {
+                        let scores: Vec<String> = core
+                            .nodes
+                            .iter()
+                            .enumerate()
+                            .map(|(i, n)| {
+                                format!(
+                                    "{i}:{:.3}",
+                                    write_cost(n, &self.loads[i], self.stores[i].io_depth())
+                                )
+                            })
+                            .collect();
+                        value.push_str(&format!(" load={}", scores.join(",")));
+                    }
+                    return Some(value);
                 }
                 return Some(value);
             }
@@ -2774,6 +3214,9 @@ impl LiveStore {
             let mut core = self.lock_core();
             let PlacementCore { nodes, placement } = &mut *core;
             let registry = &self.registry;
+            let loads = &self.loads;
+            let stores = &self.stores;
+            let adaptive = self.adaptive;
             placement.with_view(stripe_idx, |state| {
                 let mut chunks: Vec<ChunkMeta> = Vec::with_capacity(n_chunks as usize);
                 let failed = 'place: {
@@ -2787,7 +3230,37 @@ impl LiveStore {
                                 nodes: &*nodes,
                                 state: &mut *state,
                             };
-                            match registry.place_chunk(&mut ctx, idx, bytes) {
+                            // Hint policies keep priority in both
+                            // modes; adaptive replaces only the
+                            // *default* layout — cost-based over the
+                            // live load plane instead of blind
+                            // round-robin. Costs are recomputed per
+                            // chunk: earlier chunks of this very file
+                            // shift `used` (and soon the EWMAs), and
+                            // the decision should see that.
+                            // `io_depth()` under the core lock is
+                            // safe: backends serve it from their own
+                            // in-flight slot set without touching
+                            // store locks or doing I/O.
+                            let placed = if adaptive {
+                                registry
+                                    .place_hinted(&mut ctx, idx, bytes)
+                                    .or_else(|| {
+                                        let costs: Vec<f64> = ctx
+                                            .nodes
+                                            .iter()
+                                            .enumerate()
+                                            .map(|(i, n)| {
+                                                write_cost(n, &loads[i], stores[i].io_depth())
+                                            })
+                                            .collect();
+                                        place_cost_based(ctx.nodes, &costs, bytes)
+                                    })
+                                    .or_else(|| ctx.next_rr(bytes))
+                            } else {
+                                registry.place_chunk(&mut ctx, idx, bytes)
+                            };
+                            match placed {
                                 Some(node) => node,
                                 None => break 'place Some(StorageError::NoSpace(bytes)),
                             }
@@ -2876,6 +3349,7 @@ impl LiveStore {
             let primary = chunk.primary();
             let mut cached_only = false;
             let started = std::time::Instant::now();
+            let load_slot = self.loads[primary.0].begin();
             if skip_spill {
                 if let Some(cache) = &self.cache {
                     cached_only = cache.insert_dirty(
@@ -2893,17 +3367,19 @@ impl LiveStore {
                 }
             }
             // Per-chunk primary-landing latency (µs) — the p50/p95/p99
-            // `put_*` percentiles [`LiveStore::cache_stats`] reports.
-            self.put_samples
-                .lock()
-                .unwrap()
-                .push(started.elapsed().as_secs_f64() * 1e6);
+            // `put_*` percentiles [`LiveStore::cache_stats`] reports,
+            // and the per-node put EWMA adaptive placement prices in.
+            drop(load_slot);
+            let us = started.elapsed().as_secs_f64() * 1e6;
+            self.loads[primary.0].observe_put(us);
+            self.put_samples.lock().unwrap().record(us);
             let replicas = &chunk.replicas[1..];
             if replicas.is_empty() {
                 continue;
             }
             if blocking {
                 for holder in replicas {
+                    let _slot = self.loads[holder.0].begin();
                     if let Err(e) = self.stores[holder.0].put(key, payload) {
                         data_err = Some(e);
                         break 'data;
@@ -3019,11 +3495,15 @@ impl LiveStore {
                 )));
             }
             let mut served = false;
+            // Which node ended up serving this chunk — its get EWMA
+            // absorbs the latency sample below.
+            let mut served_by = client;
             // 1. The reader's own backend (authoritative copy).
             if live.contains(&client) {
                 if let Some(bytes) = self.backend_read(client, key) {
                     out.extend_from_slice(&bytes);
                     self.local_reads.fetch_add(1, Ordering::Relaxed);
+                    self.loads[client.0].record_miss();
                     served = true;
                 }
             }
@@ -3035,6 +3515,7 @@ impl LiveStore {
                     if let Some(bytes) = cache.get(client, key) {
                         out.extend_from_slice(&bytes);
                         self.local_reads.fetch_add(1, Ordering::Relaxed);
+                        self.loads[client.0].record_hit();
                         served = true;
                     }
                 }
@@ -3054,15 +3535,37 @@ impl LiveStore {
             //    unless the reader is itself a (still-draining) holder,
             //    whose authoritative copy is about to arrive anyway.
             if !served {
-                for source in live.iter().copied().filter(|&n| n != client) {
+                let mut order: Vec<NodeId> =
+                    live.iter().copied().filter(|&n| n != client).collect();
+                if self.adaptive {
+                    // Cheapest live holder first, by read-cost score —
+                    // a holder mid-spill or mid-compaction (deep
+                    // queue, hot EWMA) stops absorbing reads it is
+                    // slow to serve. Stable sort: equal scores keep
+                    // the static holder order, so adaptive-off stays
+                    // trace-identical and ties stay deterministic.
+                    order.sort_by(|&a, &b| {
+                        let ca = read_cost(&self.loads[a.0], self.stores[a.0].io_depth());
+                        let cb = read_cost(&self.loads[b.0], self.stores[b.0].io_depth());
+                        ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                }
+                for source in order {
                     let got = self
                         .cache
                         .as_ref()
                         .and_then(|c| c.peek(source, key))
-                        .or_else(|| self.backend_read(source, key));
-                    if let Some(bytes) = got {
+                        .map(|bytes| (bytes, true))
+                        .or_else(|| self.backend_read(source, key).map(|bytes| (bytes, false)));
+                    if let Some((bytes, from_cache)) = got {
                         out.extend_from_slice(&bytes);
                         self.remote_reads.fetch_add(1, Ordering::Relaxed);
+                        if from_cache {
+                            self.loads[source.0].record_hit();
+                        } else {
+                            self.loads[source.0].record_miss();
+                        }
+                        served_by = source;
                         if client_alive && !live.contains(&client) {
                             self.cache_insert_current(client, path, key, bytes);
                         }
@@ -3081,6 +3584,7 @@ impl LiveStore {
                 if let Some(bytes) = self.backend_read(client, key) {
                     out.extend_from_slice(&bytes);
                     self.local_reads.fetch_add(1, Ordering::Relaxed);
+                    self.loads[client.0].record_miss();
                     served = true;
                 }
             }
@@ -3090,14 +3594,27 @@ impl LiveStore {
                 )));
             }
             // Per-chunk serve latency (µs) — the p50/p95/p99 `get_*`
-            // percentiles [`LiveStore::cache_stats`] reports.
-            self.get_samples
-                .lock()
-                .unwrap()
-                .push(started.elapsed().as_secs_f64() * 1e6);
+            // percentiles [`LiveStore::cache_stats`] reports, and the
+            // serving node's get EWMA the read scheduler prices in.
+            let us = started.elapsed().as_secs_f64() * 1e6;
+            self.loads[served_by.0].observe_get(us);
+            self.get_samples.lock().unwrap().record(us);
         }
         self.bytes_read
             .fetch_add(out.len() as u64, Ordering::Relaxed);
+        // Popularity: one tracked read. Recording is unconditional —
+        // it is cheap and feeds the reserved `heat=` attribute — but
+        // *acting* on it (automatic replica widening/trim, the
+        // dynamically-derived broadcast hint) is the adaptive plane's
+        // call alone.
+        let heat = self.heat.record(path);
+        if self.adaptive {
+            if heat >= HEAT_WIDEN {
+                self.maybe_widen(path, &meta);
+            } else if heat <= HEAT_TRIM {
+                self.maybe_trim(path, &meta);
+            }
+        }
         if self.lifetime_on
             && self.registry.hints_enabled()
             && meta.tags.consumers().is_some()
@@ -3117,6 +3634,141 @@ impl LiveStore {
     /// remote traffic.
     fn backend_read(&self, node: NodeId, key: (FileId, u64)) -> Option<Vec<u8>> {
         self.stores[node.0].get(key).ok().flatten()
+    }
+
+    /// Grant `path` one extra replica per chunk: its read heat crossed
+    /// [`HEAT_WIDEN`] — the paper's `broadcast` hint, derived
+    /// dynamically when the application didn't say it. Targets are the
+    /// cheapest live non-holders by write cost; the bytes move through
+    /// the same `ReplWork::Restore` machinery churn repair uses, so
+    /// backpressure, the `under_replicated` gauge, and
+    /// [`LiveStore::flush_replication`] all apply unchanged.
+    fn maybe_widen(&self, path: &str, snapshot: &FileMeta) {
+        // Claim the file first: concurrent hot readers must not widen
+        // twice. The claim is dropped again below if nothing widened.
+        if !self.widened.lock().unwrap().insert(snapshot.id) {
+            return;
+        }
+        let mut jobs: Vec<ReplJob> = Vec::new();
+        {
+            let mut stripe = self.lock_stripe(self.stripe_of(path));
+            // The id check skips files re-created at this path since
+            // our caller cloned its snapshot.
+            if let Some(meta) = stripe.files.get_mut(path).filter(|m| m.id == snapshot.id) {
+                let file = meta.id;
+                let sizes: Vec<u64> = (0..meta.chunks.len())
+                    .map(|i| meta.chunk_bytes(i as u64))
+                    .collect();
+                // Stripe → core → dead: the store-wide lock order.
+                let mut core = self.lock_core();
+                let dead = self.dead.read().unwrap();
+                for (idx, chunk) in meta.chunks.iter_mut().enumerate() {
+                    let bytes = sizes[idx];
+                    let target = core
+                        .nodes
+                        .iter()
+                        .filter(|n| {
+                            !dead[n.node.0]
+                                && !chunk.replicas.contains(&n.node)
+                                && n.used + bytes <= n.capacity
+                                && n.capacity > 0
+                        })
+                        .min_by(|a, b| {
+                            let ca =
+                                write_cost(a, &self.loads[a.node.0], self.stores[a.node.0].io_depth());
+                            let cb =
+                                write_cost(b, &self.loads[b.node.0], self.stores[b.node.0].io_depth());
+                            ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+                        })
+                        .map(|n| n.node);
+                    let Some(target) = target else {
+                        continue; // pool full, or every live node already holds it
+                    };
+                    if let Some(n) = core.nodes.iter_mut().find(|n| n.node == target) {
+                        n.used += bytes;
+                    }
+                    let sources = chunk.replicas.clone();
+                    chunk.replicas.push(target);
+                    jobs.push(ReplJob {
+                        file,
+                        chunk: idx as u64,
+                        work: ReplWork::Restore { sources, target },
+                    });
+                }
+            }
+        }
+        if jobs.is_empty() {
+            // File gone, re-created, or no node had room: drop the
+            // claim so a later heat crossing retries.
+            self.widened.lock().unwrap().remove(&snapshot.id);
+            return;
+        }
+        // Holder lists changed: same bookkeeping as churn repair —
+        // stale snapshots invalidated, gauge raised *before* the
+        // enqueue (the worker always decrements), jobs enqueued
+        // outside every namespace lock (enqueue blocks on
+        // backpressure).
+        self.invalidate_clean();
+        self.heat_widened.fetch_add(1, Ordering::Relaxed);
+        self.repl
+            .shared
+            .restore_pending
+            .fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        for job in jobs {
+            self.repl.enqueue(job);
+        }
+    }
+
+    /// Take back `path`'s extra replica: its heat decayed below
+    /// [`HEAT_TRIM`]. Only acts on files [`LiveStore::maybe_widen`]
+    /// actually widened, and never while background jobs for the file
+    /// are still landing — together with the wide
+    /// `HEAT_WIDEN`/`HEAT_TRIM` hysteresis band this keeps the loop
+    /// convergent: a replica is removed only once it fully exists and
+    /// the file has been cold for a while, so a steady workload's
+    /// replica count stabilizes instead of ping-ponging.
+    fn maybe_trim(&self, path: &str, snapshot: &FileMeta) {
+        if !self.widened.lock().unwrap().contains(&snapshot.id) {
+            return;
+        }
+        if self.repl.has_pending(snapshot.id) {
+            return;
+        }
+        let base = self.registry.replication_factor(&snapshot.tags).max(1) as usize;
+        let mut removed: Vec<(NodeId, ChunkKey)> = Vec::new();
+        {
+            let mut stripe = self.lock_stripe(self.stripe_of(path));
+            let Some(meta) = stripe.files.get_mut(path).filter(|m| m.id == snapshot.id) else {
+                return;
+            };
+            let sizes: Vec<u64> = (0..meta.chunks.len())
+                .map(|i| meta.chunk_bytes(i as u64))
+                .collect();
+            let mut core = self.lock_core();
+            for (idx, chunk) in meta.chunks.iter_mut().enumerate() {
+                while chunk.replicas.len() > base && chunk.replicas.len() > 1 {
+                    // The heat replica was pushed last; popping keeps
+                    // the primary and the original holders intact.
+                    let victim = chunk.replicas.pop().expect("len checked above");
+                    if let Some(n) = core.nodes.iter_mut().find(|n| n.node == victim) {
+                        n.used = n.used.saturating_sub(sizes[idx]);
+                    }
+                    removed.push((victim, (meta.id, idx as u64)));
+                }
+            }
+        }
+        self.widened.lock().unwrap().remove(&snapshot.id);
+        if removed.is_empty() {
+            return;
+        }
+        self.invalidate_clean();
+        self.heat_trimmed.fetch_add(1, Ordering::Relaxed);
+        // Physical deletes outside every namespace lock; nudge the
+        // packed-log backends to compact what just became garbage.
+        for (node, key) in &removed {
+            self.stores[node.0].delete(*key);
+        }
+        self.maintain_backends(removed.iter().map(|(n, _)| n.0));
     }
 
     /// Eviction class for chunks of this file, per its tags. A DSS
@@ -3256,6 +3908,8 @@ impl LiveStore {
         self.invalidate_clean();
         match outcome {
             Outcome::Reclaim(meta) => {
+                self.heat.forget(path);
+                self.widened.lock().unwrap().remove(&meta.id);
                 self.sweep_file(&meta);
                 self.files_reclaimed.fetch_add(1, Ordering::Relaxed);
                 self.bytes_reclaimed.fetch_add(meta.size, Ordering::Relaxed);
@@ -3448,6 +4102,70 @@ impl LiveStore {
         stats
     }
 
+    /// Is the adaptive load-feedback plane driving placement/read
+    /// decisions ([`LiveTuning::adaptive`])?
+    pub fn adaptive(&self) -> bool {
+        self.adaptive
+    }
+
+    /// Live load signals of `node` — the lock-free [`NodeLoad`]
+    /// snapshot the adaptive plane reads (EWMA latencies, in-flight
+    /// depth, cache hit rate). Always collected, even with adaptive
+    /// off.
+    pub fn node_load(&self, node: NodeId) -> &NodeLoad {
+        &self.loads[node.0]
+    }
+
+    /// Current write-cost score of `node` (lower = cheaper placement
+    /// target; `inf` for a failed node) — the exact value adaptive
+    /// placement minimizes and `system_status` serves as `load=`.
+    pub fn node_write_cost(&self, node: NodeId) -> f64 {
+        let core = self.lock_core();
+        write_cost(
+            &core.nodes[node.0],
+            &self.loads[node.0],
+            self.stores[node.0].io_depth(),
+        )
+    }
+
+    /// Current read-cost score of `node` (lower = cheaper to serve a
+    /// chunk) — the score the adaptive read scheduler sorts live
+    /// holders by.
+    pub fn node_read_cost(&self, node: NodeId) -> f64 {
+        read_cost(&self.loads[node.0], self.stores[node.0].io_depth())
+    }
+
+    /// Current decayed read heat of `path` (`0.0` for unknown files) —
+    /// the value behind the reserved `heat=` attribute.
+    pub fn heat_of(&self, path: &str) -> f64 {
+        self.heat.peek(path)
+    }
+
+    /// Files granted an automatic extra replica because their read
+    /// heat crossed the widen threshold.
+    pub fn heat_widened(&self) -> u64 {
+        self.heat_widened.load(Ordering::Relaxed)
+    }
+
+    /// Widened files whose extra replica was trimmed back after their
+    /// heat decayed.
+    pub fn heat_trimmed(&self) -> u64 {
+        self.heat_trimmed.load(Ordering::Relaxed)
+    }
+
+    /// Drop every foreground put/get (and cache spill) latency sample
+    /// collected so far. The experiment sweeps call this between
+    /// configurations so each row's percentiles describe that row
+    /// alone — not the whole run up to it. Counters and EWMAs are
+    /// untouched; only the percentile reservoirs reset.
+    pub fn reset_latency_samples(&self) {
+        self.put_samples.lock().unwrap().reset();
+        self.get_samples.lock().unwrap().reset();
+        if let Some(cache) = &self.cache {
+            cache.spill_samples.lock().unwrap().reset();
+        }
+    }
+
     /// Delete a file and free its chunks (including any cached
     /// copies). Queued background copies for the file are cancelled
     /// (and in-flight ones waited out) so a straggler cannot resurrect
@@ -3460,6 +4178,11 @@ impl LiveStore {
                 .remove(path)
                 .ok_or_else(|| StorageError::NotFound(path.to_string()))?
         };
+        // A dead file is cold by definition: a file re-created at this
+        // path starts from zero heat, and its widened flag (if any)
+        // must not leak onto a future id.
+        self.heat.forget(path);
+        self.widened.lock().unwrap().remove(&meta.id);
         self.sweep_file(&meta);
         Ok(())
     }
@@ -3717,9 +4440,105 @@ mod tests {
         assert!(store.delete("/f").is_err());
     }
 
+    fn test_loads(n: usize) -> Arc<Vec<NodeLoad>> {
+        Arc::new((0..n).map(|_| NodeLoad::default()).collect())
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_resets() {
+        let mut r = Reservoir::default();
+        for i in 0..(LATENCY_RESERVOIR * 3) {
+            r.record(i as f64);
+        }
+        assert_eq!(r.samples.len(), LATENCY_RESERVOIR, "retention is capped");
+        assert_eq!(r.seen, (LATENCY_RESERVOIR * 3) as u64);
+        r.reset();
+        assert!(r.is_empty());
+        assert_eq!(r.seen, 0);
+        r.record(7.0);
+        assert_eq!(r.samples, vec![7.0], "fills again after reset");
+    }
+
+    #[test]
+    fn node_load_ewma_inflight_and_hit_rate() {
+        let load = NodeLoad::default();
+        assert_eq!(load.put_ewma_us(), 0.0);
+        load.observe_put(100.0);
+        assert_eq!(load.put_ewma_us(), 100.0, "first sample seeds the average");
+        load.observe_put(200.0);
+        let ewma = load.put_ewma_us();
+        assert!(
+            ewma > 100.0 && ewma < 200.0,
+            "EWMA moves toward the new sample: {ewma}"
+        );
+        assert_eq!(load.hit_rate(), 0.0, "no serves yet");
+        load.record_hit();
+        load.record_hit();
+        load.record_miss();
+        assert!((load.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+        {
+            let _slot = load.begin();
+            assert_eq!(load.inflight(), 1);
+        }
+        assert_eq!(load.inflight(), 0, "slot released on drop");
+    }
+
+    #[test]
+    fn write_cost_prices_pressure_latency_and_depth() {
+        let n = NodeState {
+            node: NodeId(0),
+            capacity: 100,
+            used: 50,
+        };
+        let load = NodeLoad::default();
+        let idle = write_cost(&n, &load, 0);
+        load.observe_put(2_000.0);
+        assert!(write_cost(&n, &load, 0) > idle, "latency raises the cost");
+        assert!(
+            write_cost(&n, &load, 3) > write_cost(&n, &load, 0),
+            "queue depth raises the cost"
+        );
+        let dead = NodeState {
+            node: NodeId(1),
+            capacity: 0,
+            used: 0,
+        };
+        assert!(write_cost(&dead, &load, 0).is_infinite());
+        let warm = NodeLoad::default();
+        warm.record_hit();
+        assert!(
+            read_cost(&warm, 0) < read_cost(&NodeLoad::default(), 0),
+            "a warm cache makes a holder cheaper to read from"
+        );
+    }
+
+    #[test]
+    fn heat_decays_on_the_op_clock_and_forgets() {
+        let heat = HeatTracker::new();
+        assert_eq!(heat.peek("/f"), 0.0);
+        let h1 = heat.record("/f");
+        assert!((h1 - 1.0).abs() < 1e-9);
+        let h2 = heat.record("/f");
+        assert!(h2 > h1, "back-to-back reads accumulate");
+        // Unrelated traffic advances the decay clock.
+        for i in 0..512 {
+            heat.record(&format!("/other{i}"));
+        }
+        assert!(heat.peek("/f") < h2, "heat decays as other reads tick by");
+        heat.forget("/f");
+        assert_eq!(heat.peek("/f"), 0.0);
+    }
+
     #[test]
     fn cache_tier_budget_and_eviction_classes() {
-        let tier = CacheTier::new(2, 1000, CachePolicy::HintAware, None, Arc::new(IoPool::new(1)));
+        let tier = CacheTier::new(
+            2,
+            1000,
+            CachePolicy::HintAware,
+            None,
+            Arc::new(IoPool::new(1)),
+            test_loads(2),
+        );
         let f = FileId(1);
         assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Durable));
         assert!(tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Scratch));
@@ -3731,12 +4550,26 @@ mod tests {
         assert!(!tier.insert(NodeId(0), (f, 3), vec![0u8; 2000], CacheClass::Durable));
         // Pinned entries never evict under the hint-aware policy: the
         // cache declines the newcomer instead.
-        let tier = CacheTier::new(1, 500, CachePolicy::HintAware, None, Arc::new(IoPool::new(1)));
+        let tier = CacheTier::new(
+            1,
+            500,
+            CachePolicy::HintAware,
+            None,
+            Arc::new(IoPool::new(1)),
+            test_loads(1),
+        );
         assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Pinned));
         assert!(!tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Durable));
         assert!(tier.get(NodeId(0), (f, 0)).is_some(), "pin held");
         // Plain LRU is hint-blind: the same pressure evicts the pin.
-        let tier = CacheTier::new(1, 500, CachePolicy::Lru, None, Arc::new(IoPool::new(1)));
+        let tier = CacheTier::new(
+            1,
+            500,
+            CachePolicy::Lru,
+            None,
+            Arc::new(IoPool::new(1)),
+            test_loads(1),
+        );
         assert!(tier.insert(NodeId(0), (f, 0), vec![1u8; 400], CacheClass::Pinned));
         assert!(tier.insert(NodeId(0), (f, 1), vec![2u8; 400], CacheClass::Durable));
         assert!(tier.get(NodeId(0), (f, 0)).is_none(), "LRU ignores pins");
@@ -3754,6 +4587,7 @@ mod tests {
             CachePolicy::HintAware,
             Some(Arc::clone(&backends)),
             Arc::new(IoPool::new(1)),
+            test_loads(1),
         );
         let f = FileId(7);
         assert!(tier.insert_dirty(NodeId(0), (f, 0), vec![1u8; 600], CacheClass::Scratch));
@@ -3770,7 +4604,14 @@ mod tests {
 
         // Without a spill target the tier refuses to evict a dirty
         // entry — the newcomer is declined, the dirty bytes survive.
-        let tier = CacheTier::new(1, 1000, CachePolicy::HintAware, None, Arc::new(IoPool::new(1)));
+        let tier = CacheTier::new(
+            1,
+            1000,
+            CachePolicy::HintAware,
+            None,
+            Arc::new(IoPool::new(1)),
+            test_loads(1),
+        );
         assert!(tier.insert_dirty(NodeId(0), (f, 0), vec![3u8; 600], CacheClass::Scratch));
         assert!(!tier.insert(NodeId(0), (f, 1), vec![4u8; 600], CacheClass::Durable));
         assert_eq!(tier.peek(NodeId(0), (f, 0)), Some(vec![3u8; 600]));

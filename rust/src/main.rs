@@ -15,7 +15,10 @@
 //!   mem|disk|seg` (chunk backend; `disk` spills one file per chunk,
 //!   `seg` packs chunks into a few append-only segment logs per node),
 //!   `--data-dir PATH` (persistent-backend root; omitted = a temp
-//!   directory removed on exit), `--fingerprint-file PATH` (record output
+//!   directory removed on exit), `--adaptive on|off` (load-aware
+//!   placement + read scheduling fed by live node signals; `off`, the
+//!   default, reproduces the static decisions byte-for-byte),
+//!   `--fingerprint-file PATH` (record output
 //!   fingerprints for a later restart check), `--clean-shutdown`
 //!   (write the namespace snapshot + CLEAN marker before exiting).
 //! * `live --reopen --data-dir PATH` — recover a persistent store a
@@ -29,7 +32,9 @@
 //!   prints the scenario names, `--seed N` replays a schedule,
 //!   `--backend mem|disk|seg`, `--data-dir PATH` (persistent root), `--quick`
 //!   (smoke sizes), `--io-workers N` (disk I/O pool threads),
-//!   `--json out.json` (the `woss-scenarios-v1` document
+//!   `--adaptive on|off` (primary-run mode; the skew scenarios
+//!   dual-run both modes either way and record both p99 columns),
+//!   `--json out.json` (the `woss-scenarios-v2` document
 //!   `BENCH_scenarios.json` tracks).
 //! * `bench-check` — validate tracked bench results:
 //!   `--scenarios BENCH_scenarios.json --live BENCH_live.json`.
@@ -44,6 +49,16 @@ use woss::live::{BackendKind, CachePolicy, EngineOptions, LiveEngine, LiveStore,
 use woss::scenario;
 use woss::util::cli::Args;
 use woss::workloads;
+
+/// Parse `--adaptive on|off` (absent = off: the static decisions the
+/// store has always made, byte-for-byte).
+fn parse_adaptive(args: &Args) -> Result<bool> {
+    match args.get("adaptive") {
+        None | Some("off") => Ok(false),
+        Some("on") => Ok(true),
+        Some(other) => Err(anyhow!("unknown --adaptive '{other}' (on|off)")),
+    }
+}
 
 fn main() {
     let args = Args::from_env();
@@ -164,6 +179,7 @@ fn cmd_live(args: &Args) -> Result<()> {
     }
     let workload = args.get_or("workload", "pipeline");
     let hints = !args.has_flag("no-hints");
+    let adaptive = parse_adaptive(args)?;
 
     let wf = match workload {
         "pipeline" => workloads::pipeline(nodes.min(8), 0.01, hints),
@@ -190,6 +206,7 @@ fn cmd_live(args: &Args) -> Result<()> {
         data_dir,
         fault: None,
         io_workers,
+        adaptive,
     };
     let registry = if hints {
         Registry::woss()
@@ -226,6 +243,9 @@ fn cmd_live(args: &Args) -> Result<()> {
         "  replication: {} replica copies drained in the background ({} stripes, {} repl workers, {} io workers)",
         rep.bg_replicas, stripes, repl_workers, io_workers
     );
+    if adaptive {
+        println!("  adaptive: load-aware placement + read scheduling on");
+    }
     println!(
         "  latency µs: put p50/p95/p99 {:.0}/{:.0}/{:.0}, get {:.0}/{:.0}/{:.0}, spill {:.0}/{:.0}/{:.0}",
         rep.put_p50_us,
@@ -309,6 +329,7 @@ fn cmd_live_reopen(args: &Args) -> Result<()> {
         },
         cache_policy,
         lifetime: args.has_flag("lifetime"),
+        adaptive: parse_adaptive(args)?,
         ..defaults
     };
     let registry = if args.has_flag("no-hints") {
@@ -354,9 +375,10 @@ fn cmd_live_reopen(args: &Args) -> Result<()> {
 }
 
 /// `woss scenario <name|all> [--list] [--seed N] [--backend mem|disk|seg]
-/// [--data-dir PATH] [--quick] [--io-workers N] [--json PATH]`: run the
-/// hostile-scenario harness and optionally emit the `woss-scenarios-v1`
-/// results document. Comma-separated names run a subset.
+/// [--data-dir PATH] [--quick] [--io-workers N] [--adaptive on|off]
+/// [--json PATH]`: run the hostile-scenario harness and optionally emit
+/// the `woss-scenarios-v2` results document. Comma-separated names run
+/// a subset.
 fn cmd_scenario(args: &Args) -> Result<()> {
     if args.has_flag("list") {
         for name in scenario::names() {
@@ -377,6 +399,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         data_dir,
         quick: args.has_flag("quick"),
         io_workers: args.get_parse("io-workers", 1usize),
+        adaptive: parse_adaptive(args)?,
     };
     let names: Vec<&str> = if which == "all" {
         scenario::names()

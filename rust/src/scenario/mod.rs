@@ -57,7 +57,10 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 /// Schema tag stamped into (and required of) `BENCH_scenarios.json`.
-pub const SCENARIO_SCHEMA: &str = "woss-scenarios-v1";
+/// v2 added the adaptive-placement columns: `adaptive` on every row,
+/// `read_p99_ms_static` / `read_p99_ms_adaptive` on the skew
+/// scenarios that dual-run both modes.
+pub const SCENARIO_SCHEMA: &str = "woss-scenarios-v2";
 
 /// How a scenario run is wired: replay seed, chunk backend, disk root,
 /// and whether sizes are scaled down for the CI smoke leg.
@@ -76,6 +79,11 @@ pub struct ScenarioConfig {
     /// Disk I/O pool threads for the store under test
     /// ([`LiveTuning::io_workers`]); 1 = the serial data path.
     pub io_workers: usize,
+    /// Adaptive load-aware placement/read decisions
+    /// ([`LiveTuning::adaptive`]) for the primary run. The skew
+    /// scenarios additionally dual-run both modes to record the
+    /// static-vs-adaptive p99 columns regardless of this flag.
+    pub adaptive: bool,
 }
 
 impl Default for ScenarioConfig {
@@ -86,6 +94,7 @@ impl Default for ScenarioConfig {
             data_dir: None,
             quick: false,
             io_workers: 1,
+            adaptive: false,
         }
     }
 }
@@ -101,6 +110,14 @@ pub struct ScenarioReport {
     pub seed: u64,
     /// Whether smoke sizes were used.
     pub quick: bool,
+    /// Whether the primary run used adaptive load-aware decisions.
+    pub adaptive: bool,
+    /// Skew scenarios only: p99 read latency (ms) of the static-mode
+    /// leg of the dual run. `None` on scenarios that run once.
+    pub read_p99_ms_static: Option<f64>,
+    /// Skew scenarios only: p99 read latency (ms) of the
+    /// adaptive-mode leg of the dual run.
+    pub read_p99_ms_adaptive: Option<f64>,
     /// Files alive at the final audit.
     pub files: usize,
     /// Workload operations issued (writes + reads + deletes, retries
@@ -217,6 +234,17 @@ impl ScenarioReport {
             ("backend", self.backend.into()),
             ("seed", self.seed.into()),
             ("quick", self.quick.into()),
+            ("adaptive", self.adaptive.into()),
+            (
+                "read_p99_ms_static",
+                self.read_p99_ms_static.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "read_p99_ms_adaptive",
+                self.read_p99_ms_adaptive
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null),
+            ),
             ("files", self.files.into()),
             ("ops", self.ops.into()),
             ("bytes_written", self.bytes_written.into()),
@@ -363,8 +391,38 @@ pub fn check_scenarios_json(text: &str) -> Result<(), String> {
         if s.get("backend").and_then(Json::as_str).is_none() {
             return Err(format!("scenario '{name}': missing 'backend'"));
         }
+        if !matches!(s.get("adaptive"), Some(Json::Bool(_))) {
+            return Err(format!("scenario '{name}': missing boolean 'adaptive'"));
+        }
         if s.get("audit_clean") != Some(&Json::Bool(true)) {
             return Err(format!("scenario '{name}' did not close with a clean audit"));
+        }
+        if name == "hot_skew" || name == "tenant_pressure" {
+            // The skew scenarios dual-run static vs adaptive; both
+            // p99 columns must be present, and on a full-size
+            // `hot_skew` row the adaptive leg must not lose — the
+            // tracked artifact of the cross-layer feedback loop. The
+            // gate is skipped at smoke sizes, where a handful of
+            // reads makes p99 noise.
+            let p99_static = s
+                .get("read_p99_ms_static")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("scenario '{name}': missing numeric 'read_p99_ms_static'"))?;
+            let p99_adaptive = s
+                .get("read_p99_ms_adaptive")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| {
+                    format!("scenario '{name}': missing numeric 'read_p99_ms_adaptive'")
+                })?;
+            if name == "hot_skew"
+                && s.get("quick") != Some(&Json::Bool(true))
+                && p99_adaptive > p99_static
+            {
+                return Err(format!(
+                    "hot_skew: adaptive p99 read latency ({p99_adaptive:.3} ms) did not \
+                     beat static ({p99_static:.3} ms)"
+                ));
+            }
         }
         if name == "kill_recover" {
             if s.get("recovery_secs").and_then(Json::as_f64).is_none() {
@@ -519,6 +577,7 @@ fn store_for(
         },
         fault,
         io_workers: cfg.io_workers,
+        adaptive: cfg.adaptive,
         ..LiveTuning::default()
     };
     LiveStore::try_with_tuning(Registry::woss(), nodes, capacity, tuning)
@@ -613,6 +672,9 @@ fn report(
         backend: cfg.backend.label(),
         seed: cfg.seed,
         quick: cfg.quick,
+        adaptive: cfg.adaptive,
+        read_p99_ms_static: None,
+        read_p99_ms_adaptive: None,
         files,
         ops: tally.ops,
         bytes_written: tally.bytes_written,
@@ -919,7 +981,42 @@ fn small_file_flood(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
 /// under torn replica publishes and transient read errors. Hot files
 /// carry `Replication=3`, so failover almost always hides the faults;
 /// reads retry when an attempt exhausts every holder.
+///
+/// Dual-runs the identical seeded workload with adaptive decisions
+/// off and on — the proving ground for the load-feedback plane. The
+/// primary report reflects `cfg.adaptive`; both legs' p99 read
+/// latencies are recorded so `bench-check` gates the win as a tracked
+/// artifact.
 fn hot_skew(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
+    dual_run(cfg, hot_skew_once)
+}
+
+/// Static-vs-adaptive harness for the skew scenarios: run `once` with
+/// adaptive forced off then on (distinct store names keep persistent
+/// backends' on-disk subtrees apart), pick the primary leg by
+/// `cfg.adaptive`, and stamp both legs' p99 read latencies on it.
+fn dual_run(
+    cfg: &ScenarioConfig,
+    once: fn(&ScenarioConfig, &str) -> Result<ScenarioReport, String>,
+) -> Result<ScenarioReport, String> {
+    let leg = |adaptive: bool, suffix: &str| -> Result<ScenarioReport, String> {
+        let leg_cfg = ScenarioConfig {
+            adaptive,
+            ..cfg.clone()
+        };
+        once(&leg_cfg, suffix)
+    };
+    let static_rep = leg(false, "static")?;
+    let adaptive_rep = leg(true, "adaptive")?;
+    let (p99_static, p99_adaptive) = (static_rep.read_p99_ms, adaptive_rep.read_p99_ms);
+    let mut rep = if cfg.adaptive { adaptive_rep } else { static_rep };
+    rep.adaptive = cfg.adaptive;
+    rep.read_p99_ms_static = Some(p99_static);
+    rep.read_p99_ms_adaptive = Some(p99_adaptive);
+    Ok(rep)
+}
+
+fn hot_skew_once(cfg: &ScenarioConfig, leg: &str) -> Result<ScenarioReport, String> {
     const NODES: usize = 4;
     const READERS: usize = 4;
     let files = if cfg.quick { 30 } else { 120 };
@@ -933,7 +1030,7 @@ fn hot_skew(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
         delay_us: 100,
         ..FaultSpec::default()
     };
-    let store = store_for(cfg, "hot_skew", NODES, u64::MAX / 2, Some(spec))?;
+    let store = store_for(cfg, &format!("hot_skew_{leg}"), NODES, u64::MAX / 2, Some(spec))?;
     let mut rng = Rng::new(cfg.seed ^ 0x4075_6b00);
     let mut tally = Tally::default();
     let mut expected: Vec<Fingerprint> = Vec::new();
@@ -1047,12 +1144,20 @@ fn hot_skew(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
 /// When `NoSpace` hits, the tenant deletes its own oldest files and
 /// retries — the scenario proves reclaimed capacity is accounted
 /// exactly (the closing audit's `usage_exact`).
+///
+/// Dual-runs static vs adaptive like [`hot_skew`]; here the columns
+/// are informational (capacity pressure, not read skew, dominates),
+/// so `bench-check` requires them present but does not gate a win.
 fn tenant_pressure(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
+    dual_run(cfg, tenant_pressure_once)
+}
+
+fn tenant_pressure_once(cfg: &ScenarioConfig, leg: &str) -> Result<ScenarioReport, String> {
     const NODES: usize = 4;
     const TENANTS: usize = 3;
     let writes_per_tenant = if cfg.quick { 40 } else { 120 };
     let node_capacity: u64 = if cfg.quick { 3 << 20 } else { 6 << 20 };
-    let store = store_for(cfg, "tenant_pressure", NODES, node_capacity, None)?;
+    let store = store_for(cfg, &format!("tenant_pressure_{leg}"), NODES, node_capacity, None)?;
     let mut rng = Rng::new(cfg.seed ^ 0x7e4a_4700);
     let mut tally = Tally::default();
     // Per-tenant surviving files, oldest first.

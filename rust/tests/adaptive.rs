@@ -1,0 +1,294 @@
+//! Adaptive load-aware placement: safety, convergence, and the
+//! off-mode contract.
+//!
+//! Three claims from the feedback-plane design are pinned here:
+//!
+//! 1. **Never overfill** — cost-based placement may chase cheap
+//!    nodes, but a node's capacity is still a hard wall; a pool under
+//!    sustained pressure rejects with `NoSpace`, keeps accounting
+//!    exact, and every accepted byte stays readable.
+//! 2. **Convergence** — the heat tracker widens a steadily-hot file
+//!    exactly once and trims it exactly once after it cools; replica
+//!    counts must not ping-pong under a steady workload.
+//! 3. **Off means off** — with `adaptive: false` the signals are
+//!    still collected, but decisions are byte-identical to the static
+//!    store on every backend: perturbing every load signal with read
+//!    storms must not move a single placement. This is the
+//!    trace-equivalence guard for the pre-adaptive behaviour.
+//!
+//! Workload shapes come from the seeded `tests/common` harness, so a
+//! failing schedule replays with `WOSS_TEST_SEED=<seed>`.
+
+mod common;
+
+use woss::dispatch::Registry;
+use woss::hints::TagSet;
+use woss::live::{BackendKind, LiveStore, LiveTuning};
+use woss::scenario::{self, ScenarioConfig};
+use woss::storage::{NodeId, StorageError};
+use woss::util::Rng;
+
+/// Deterministic payload, distinct per call.
+fn payload(rng: &mut Rng, len: usize) -> Vec<u8> {
+    let mult = rng.next_u64() | 1;
+    (0..len)
+        .map(|i| ((i as u64).wrapping_mul(mult) >> 3) as u8)
+        .collect()
+}
+
+fn adaptive_tuning(backend: BackendKind, adaptive: bool) -> LiveTuning {
+    LiveTuning {
+        stripes: 4,
+        repl_workers: 1,
+        backend,
+        adaptive,
+        ..LiveTuning::default()
+    }
+}
+
+/// Pull `used=` / `capacity=` out of the `system_status` attribute
+/// (served through any existing file's getattr).
+fn used_and_capacity(store: &LiveStore, path: &str) -> (u64, u64) {
+    let status = store
+        .get_xattr(path, woss::hints::SYSTEM_STATUS_ATTR)
+        .expect("system_status answers on a live file");
+    let field = |prefix: &str| -> u64 {
+        status
+            .split_whitespace()
+            .find_map(|tok| tok.strip_prefix(prefix))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("no '{prefix}' in '{status}'"))
+    };
+    (field("used="), field("capacity="))
+}
+
+/// Claim 1: a tight pool under adaptive placement rejects cleanly
+/// instead of overfilling, across several seeded pressure schedules.
+#[test]
+fn adaptive_placement_never_overfills_a_tight_pool() {
+    let (seed, _) = common::seeded_rng("adaptive_placement_never_overfills_a_tight_pool");
+    const NODES: usize = 4;
+    const NODE_CAPACITY: u64 = 2 << 20;
+    for round in 0..3u64 {
+        let mut rng = Rng::new(seed ^ (round.wrapping_mul(0x9e37_79b9)));
+        let store = LiveStore::try_with_tuning(
+            Registry::woss(),
+            NODES,
+            NODE_CAPACITY,
+            adaptive_tuning(BackendKind::Memory, true),
+        )
+        .expect("bring up tight store");
+        let mut accepted: Vec<(String, Vec<u8>)> = Vec::new();
+        let mut rejected = 0u32;
+        for f in 0..200 {
+            let len = 64 * 1024 + rng.gen_range(128 * 1024) as usize;
+            let data = payload(&mut rng, len);
+            let path = format!("/tight/f{f}");
+            let tags = if f % 3 == 0 {
+                TagSet::from_pairs([("Replication", "2"), ("RepSmntc", "optimistic")])
+            } else {
+                TagSet::new()
+            };
+            match store.write_file(NodeId(f % NODES), &path, &data, &tags) {
+                Ok(_) => accepted.push((path, data)),
+                Err(StorageError::NoSpace(_)) => rejected += 1,
+                Err(e) => panic!("pressure write failed with non-capacity error: {e}"),
+            }
+        }
+        store.flush_replication();
+        assert!(rejected > 0, "schedule never hit capacity — not a pressure test");
+        let (used, capacity) = used_and_capacity(&store, &accepted[0].0);
+        assert!(
+            used <= capacity,
+            "pool overfilled: used {used} > capacity {capacity}"
+        );
+        let audit = store.audit();
+        assert!(audit.clean(), "pressure run closed dirty: {audit:?}");
+        for (path, data) in &accepted {
+            let back = store
+                .read_file(NodeId(0), path)
+                .unwrap_or_else(|e| panic!("accepted file {path} unreadable: {e}"));
+            assert_eq!(&back, data, "accepted bytes for {path} corrupted");
+        }
+    }
+}
+
+/// Claim 2: one steadily-hot file widens once, stays widened while
+/// hot, trims once after cooling, and never re-widens from stale heat.
+#[test]
+fn heat_replicas_converge_without_ping_pong() {
+    let (seed, mut rng) = common::seeded_rng("heat_replicas_converge_without_ping_pong");
+    const NODES: usize = 4;
+    const COLD_FILES: usize = 200;
+    let store = LiveStore::woss_with(NODES, adaptive_tuning(BackendKind::Memory, true));
+    let hot = "/heat/hot";
+    let hot_data = payload(&mut rng, 96 * 1024);
+    store
+        .write_file(NodeId(0), hot, &hot_data, &TagSet::new())
+        .expect("hot write");
+    for f in 0..COLD_FILES {
+        let data = payload(&mut rng, 8 * 1024);
+        store
+            .write_file(NodeId(f % NODES), &format!("/heat/cold{f}"), &data, &TagSet::new())
+            .expect("cold write");
+    }
+    let base_holders = store.locations(hot).len();
+
+    // Hot storm: heat crosses the widen threshold early in the storm;
+    // the remaining reads must not widen again.
+    for i in 0..300 {
+        store.read_file(NodeId(i % NODES), hot).expect("hot read");
+    }
+    store.flush_replication();
+    assert_eq!(store.heat_widened(), 1, "steady heat widened more than once");
+    assert_eq!(store.heat_trimmed(), 0);
+    let widened_holders = store.locations(hot).len();
+    assert!(
+        widened_holders > base_holders,
+        "hot file never gained a replica (still {widened_holders} holders, seed {seed})"
+    );
+
+    // Keep it hot: replica count must hold steady, not oscillate.
+    for i in 0..300 {
+        store.read_file(NodeId(i % NODES), hot).expect("hot read");
+    }
+    store.flush_replication();
+    assert_eq!(store.heat_widened(), 1, "re-widened under a steady workload");
+    assert_eq!(store.heat_trimmed(), 0, "trimmed while still hot");
+    assert_eq!(store.locations(hot).len(), widened_holders);
+
+    // Cool-down: the op clock advances on cold traffic, the hot
+    // file's entry decays, and the next touch trims it back.
+    for i in 0..2600 {
+        store
+            .read_file(NodeId(i % NODES), &format!("/heat/cold{}", i % COLD_FILES))
+            .expect("cold read");
+    }
+    store.read_file(NodeId(0), hot).expect("cooled read");
+    store.flush_replication();
+    assert_eq!(store.heat_trimmed(), 1, "cooled file was never trimmed");
+    assert_eq!(store.heat_widened(), 1, "trim bounced straight back to widen");
+    assert_eq!(
+        store.locations(hot).len(),
+        base_holders,
+        "trim did not return to the base replica count"
+    );
+    assert_eq!(&store.read_file(NodeId(1), hot).unwrap(), &hot_data);
+
+    // Cold traffic must never have earned a replica of its own.
+    let audit = store.audit();
+    assert!(audit.clean(), "heat lifecycle closed dirty: {audit:?}");
+}
+
+/// Claim 3: with `adaptive: false`, saturating every load signal
+/// (read storms between write batches) must not move a single
+/// placement, change a byte, or trigger a single heat action — the
+/// static trace, on every backend.
+#[test]
+fn adaptive_off_is_trace_equivalent_to_the_static_store() {
+    let (seed, _) = common::seeded_rng("adaptive_off_is_trace_equivalent_to_the_static_store");
+    const NODES: usize = 4;
+    const FILES: usize = 30;
+    for backend in [BackendKind::Memory, BackendKind::Disk, BackendKind::Seg] {
+        let quiet = LiveStore::woss_with(NODES, adaptive_tuning(backend, false));
+        let stormy = LiveStore::woss_with(NODES, adaptive_tuning(backend, false));
+        let mut quiet_rng = Rng::new(seed);
+        let mut stormy_rng = Rng::new(seed);
+        let mut write_batch = |store: &LiveStore, rng: &mut Rng, batch: usize| {
+            for f in 0..FILES / 3 {
+                let i = batch * (FILES / 3) + f;
+                let len = 32 * 1024 + rng.gen_range(96 * 1024) as usize;
+                let data = payload(rng, len);
+                let tags = match i % 4 {
+                    0 => TagSet::from_pairs([("DP", "local")]),
+                    1 => TagSet::from_pairs([("DP", "scatter 2")]),
+                    2 => TagSet::from_pairs([("Replication", "2"), ("RepSmntc", "optimistic")]),
+                    _ => TagSet::new(),
+                };
+                store
+                    .write_file(NodeId(i % NODES), &format!("/eq/f{i}"), &data, &tags)
+                    .expect("equivalence write");
+            }
+        };
+        for batch in 0..3 {
+            write_batch(&quiet, &mut quiet_rng, batch);
+            write_batch(&stormy, &mut stormy_rng, batch);
+            // Storm only the second store: every EWMA, queue-depth,
+            // hit-rate, and heat signal diverges from the quiet twin.
+            for i in 0..400 {
+                let f = i % ((batch + 1) * (FILES / 3));
+                stormy
+                    .read_file(NodeId(i % NODES), &format!("/eq/f{f}"))
+                    .expect("storm read");
+            }
+        }
+        quiet.flush_replication();
+        stormy.flush_replication();
+        for i in 0..FILES {
+            let path = format!("/eq/f{i}");
+            assert_eq!(
+                quiet.locations(&path),
+                stormy.locations(&path),
+                "[{}] placement of {path} moved with adaptive off (seed {seed})",
+                backend.label()
+            );
+            assert_eq!(
+                quiet.read_file(NodeId(0), &path).unwrap(),
+                stormy.read_file(NodeId(0), &path).unwrap(),
+                "[{}] bytes of {path} diverged",
+                backend.label()
+            );
+        }
+        // Off-mode storms must not trigger heat actions or leak the
+        // adaptive-only status field.
+        assert_eq!(stormy.heat_widened(), 0, "[{}] off-mode widened", backend.label());
+        assert_eq!(stormy.heat_trimmed(), 0, "[{}] off-mode trimmed", backend.label());
+        let status = stormy
+            .get_xattr("/eq/f0", woss::hints::SYSTEM_STATUS_ATTR)
+            .expect("system_status");
+        assert!(
+            !status.contains("load="),
+            "[{}] off-mode status leaked adaptive field: {status}",
+            backend.label()
+        );
+        assert!(quiet.audit().clean() && stormy.audit().clean());
+    }
+}
+
+/// Seeded skew proving ground: the dual-run `hot_skew` scenario must
+/// record both mode legs, and the adaptive leg must not lose badly at
+/// smoke sizes. (The strict adaptive-beats-static gate runs on the
+/// full-size tracked rows in `bench-check`, where p99 has enough
+/// samples to be stable; at quick sizes a 2x guard keeps this
+/// replayable without flaking on loaded CI boxes.)
+#[test]
+fn hot_skew_dual_run_records_both_legs_and_adaptive_holds_up() {
+    let cfg = ScenarioConfig {
+        seed: 7,
+        quick: true,
+        ..ScenarioConfig::default()
+    };
+    let rep = scenario::run("hot_skew", &cfg).expect("hot_skew completes");
+    assert!(rep.clean(), "hot_skew closed dirty: {:?}", rep.audit);
+    assert!(!rep.adaptive, "primary leg follows cfg.adaptive");
+    let p99_static = rep.read_p99_ms_static.expect("static p99 recorded");
+    let p99_adaptive = rep.read_p99_ms_adaptive.expect("adaptive p99 recorded");
+    assert!(p99_static > 0.0 && p99_adaptive > 0.0);
+    assert!(
+        p99_adaptive <= p99_static * 2.0,
+        "adaptive p99 {p99_adaptive:.3} ms blew past static {p99_static:.3} ms at smoke size"
+    );
+
+    // The adaptive primary leg reports the same columns and stays clean.
+    let rep_on = scenario::run(
+        "hot_skew",
+        &ScenarioConfig {
+            adaptive: true,
+            ..cfg.clone()
+        },
+    )
+    .expect("adaptive hot_skew completes");
+    assert!(rep_on.clean());
+    assert!(rep_on.adaptive);
+    assert!(rep_on.read_p99_ms_static.is_some() && rep_on.read_p99_ms_adaptive.is_some());
+}

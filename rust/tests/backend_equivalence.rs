@@ -83,6 +83,7 @@ fn run_on(
             data_dir,
             fault: None,
             io_workers: 1,
+            adaptive: false,
         },
     );
     let engine = LiveEngine::with_options(
@@ -209,6 +210,7 @@ fn persistent_backends_survive_footprint_beyond_cache_budget() {
                 data_dir: None, // auto temp dir, removed when the store drops
                 fault: None,
                 io_workers: 1,
+                adaptive: false,
             },
         );
         use woss::storage::NodeId;

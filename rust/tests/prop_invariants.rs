@@ -408,6 +408,7 @@ fn prop_backend_equivalence_mem_vs_disk_vs_seg() {
                 data_dir,
                 fault: None,
                 io_workers: 1,
+                adaptive: false,
             };
             // Replay the ops on a store and record every observable
             // outcome: op success, read (len, crc), file_size after.

@@ -111,6 +111,19 @@ scn_dir="$(mktemp -d)"
     --backend seg --data-dir "$scn_dir/smoke4-seg" --io-workers 4
 rm -rf "$scn_dir"
 
+# Adaptive-placement leg: hot_skew dual-runs the identical seeded
+# workload with the load-feedback plane off and on, in both primary
+# modes. Both invocations must close clean audits; the off-mode run
+# doubles as a check that collecting the signals alone never perturbs
+# the static decision path.
+echo "== adaptive placement (hot_skew --adaptive on|off, seed 7) =="
+adp_dir="$(mktemp -d)"
+"$woss" scenario hot_skew --quick --seed 7 --adaptive off
+"$woss" scenario hot_skew --quick --seed 7 --adaptive on
+"$woss" scenario hot_skew,tenant_pressure --quick --seed 7 \
+    --backend disk --data-dir "$adp_dir/adp" --adaptive on
+rm -rf "$adp_dir"
+
 # Pipeline-equivalence leg: the I/O pool must change scheduling, never
 # semantics. The same single-worker workload runs on each persistent
 # backend at --io-workers 1 (the serial pre-pool data path) and 4 (real
