@@ -19,7 +19,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use super::store::LiveStore;
+use super::proto::{ManagerInfo, ManagerService, StoreCounters};
+use super::rpc::RemoteStore;
+use super::store::{CacheStats, LiveStore};
+use crate::storage::types::StorageError;
 
 /// Engine-side cross-layer options.
 #[derive(Debug, Clone, Copy, Default)]
@@ -34,6 +37,100 @@ pub struct EngineOptions {
     /// executing node's cache ahead of the reads (no-op without a
     /// cache tier).
     pub prefetch: bool,
+}
+
+/// The engine's grip on a store: the in-process [`LiveStore`] (the
+/// default transport — plain method calls, trace-equivalent to the
+/// pre-split monolith) or a [`RemoteStore`] client framing every call
+/// to a `woss managerd` daemon. Both arms implement
+/// [`ManagerService`], so the engine, scenario harness, and CLI drive
+/// either transport through one code path.
+#[derive(Clone)]
+pub enum StoreHandle {
+    /// In-process store — direct method calls, no serialization.
+    Local(Arc<LiveStore>),
+    /// Socket client to a `woss managerd` daemon.
+    Remote(Arc<RemoteStore>),
+}
+
+impl StoreHandle {
+    /// The typed service surface (both transports implement it).
+    pub fn svc(&self) -> &dyn ManagerService {
+        match self {
+            StoreHandle::Local(s) => s.as_ref(),
+            StoreHandle::Remote(s) => s.as_ref(),
+        }
+    }
+
+    /// The in-process store, when this handle holds one (`None` over a
+    /// socket — process-local surfaces like `audit` live on the
+    /// manager's side of the wire).
+    pub fn local(&self) -> Option<&LiveStore> {
+        match self {
+            StoreHandle::Local(s) => Some(s),
+            StoreHandle::Remote(_) => None,
+        }
+    }
+
+    /// Static deployment facts (the remote side caches its `Hello`).
+    pub fn info(&self) -> ManagerInfo {
+        self.svc().hello()
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.info().n_nodes
+    }
+    fn exposes_location(&self) -> bool {
+        self.info().exposes_location
+    }
+    fn adaptive(&self) -> bool {
+        self.info().adaptive
+    }
+    fn cache_enabled(&self) -> bool {
+        self.info().cache_enabled
+    }
+    fn lifetime_enabled(&self) -> bool {
+        self.info().lifetime_enabled
+    }
+    fn write_file(
+        &self,
+        node: NodeId,
+        path: &str,
+        data: &[u8],
+        tags: &TagSet,
+    ) -> std::result::Result<(), StorageError> {
+        self.svc().write_file(node, path, data, tags)
+    }
+    fn read_file(&self, node: NodeId, path: &str) -> std::result::Result<Vec<u8>, StorageError> {
+        self.svc().read_file(node, path)
+    }
+    fn set_xattr(&self, path: &str, key: &str, value: &str) {
+        self.svc().set_attr(path, key, value)
+    }
+    fn get_xattr(&self, path: &str, key: &str) -> Option<String> {
+        self.svc().get_attr(path, key)
+    }
+    fn file_size(&self, path: &str) -> Option<u64> {
+        self.svc().file_size(path)
+    }
+    fn locations(&self, path: &str) -> Vec<NodeId> {
+        self.svc().locations(path)
+    }
+    fn prefetch(&self, node: NodeId, path: &str) -> std::result::Result<usize, StorageError> {
+        self.svc().prefetch(node, path)
+    }
+    fn node_read_cost(&self, node: NodeId) -> f64 {
+        self.svc().node_read_cost(node)
+    }
+    fn flush_replication(&self) {
+        self.svc().flush()
+    }
+    fn cache_stats(&self) -> CacheStats {
+        self.svc().cache_stats()
+    }
+    fn counters(&self) -> StoreCounters {
+        self.svc().counters()
+    }
 }
 
 /// Wrapper serializing kernel execution across the worker pool: the
@@ -79,6 +176,10 @@ pub struct LiveReport {
     /// Files that survived a [`LiveStore::reopen`] into the store this
     /// run executed on (0 for a fresh store).
     pub recovered_files: u64,
+    /// End-of-run replication barriers that hit their
+    /// [`crate::live::LiveTuning::flush_timeout_ms`] deadline instead
+    /// of draining (always 0 with the deadline off — the default).
+    pub flush_timeouts: u64,
     /// Highest bytes resident in any single node's cache over the run
     /// — bounded by the configured per-node budget.
     pub peak_cache_bytes: u64,
@@ -137,7 +238,7 @@ impl LiveReport {
 
 /// The live engine.
 pub struct LiveEngine {
-    store: Arc<LiveStore>,
+    store: StoreHandle,
     runtime: Arc<SharedRuntime>,
     workers: usize,
     options: EngineOptions,
@@ -164,9 +265,21 @@ impl LiveEngine {
 
     /// Build an engine with explicit cross-layer [`EngineOptions`].
     pub fn with_options(store: LiveStore, workers: usize, options: EngineOptions) -> Result<Self> {
+        LiveEngine::with_handle(StoreHandle::Local(Arc::new(store)), workers, options)
+    }
+
+    /// Build an engine over either transport — the socket path hands a
+    /// [`StoreHandle::Remote`] here and everything downstream (the
+    /// workloads, the scenario harness, the CLI reports) runs
+    /// unchanged.
+    pub fn with_handle(
+        store: StoreHandle,
+        workers: usize,
+        options: EngineOptions,
+    ) -> Result<Self> {
         let rt = Runtime::load(&Runtime::artifact_dir())?;
         Ok(LiveEngine {
-            store: Arc::new(store),
+            store,
             runtime: Arc::new(SharedRuntime(Mutex::new(rt))),
             workers: workers.max(1),
             options,
@@ -175,8 +288,19 @@ impl LiveEngine {
         })
     }
 
-    /// The store (counters, verification).
+    /// The in-process store (counters, verification, shutdown).
+    ///
+    /// # Panics
+    /// When the engine runs over a socket transport — use
+    /// [`LiveEngine::handle`] there.
     pub fn store(&self) -> &LiveStore {
+        self.store
+            .local()
+            .expect("engine is driving a remote store; use handle()")
+    }
+
+    /// The transport-agnostic store handle.
+    pub fn handle(&self) -> &StoreHandle {
         &self.store
     }
 
@@ -292,24 +416,24 @@ impl LiveEngine {
             .map(|&n| (n.to_string(), rt.exec_count(n)))
             .collect();
         let cache = self.store.cache_stats();
+        // One counters() snapshot serves both transports — over a
+        // socket these were never process-local atomics to read.
+        let counters = self.store.counters();
         Ok(LiveReport {
             elapsed_secs: start.elapsed().as_secs_f64(),
             tasks: workflow.tasks.len(),
-            bytes_written: self.store.bytes_written.load(Ordering::Relaxed),
-            bytes_read: self.store.bytes_read.load(Ordering::Relaxed),
-            local_reads: self.store.local_reads.load(Ordering::Relaxed),
-            remote_reads: self.store.remote_reads.load(Ordering::Relaxed),
-            bg_replicas: self.store.background_copies(),
+            bytes_written: counters.bytes_written,
+            bytes_read: counters.bytes_read,
+            local_reads: counters.local_reads,
+            remote_reads: counters.remote_reads,
+            bg_replicas: counters.background_copies,
             cache_hits: cache.hits,
             prefetched_chunks: cache.prefetched,
             spilled_chunks: cache.spilled,
-            backend: self.store.backend_kind().label(),
+            backend: self.store.info().backend.label(),
             read_errors: cache.read_errors,
-            recovered_files: self
-                .store
-                .recovery_report()
-                .map(|r| r.files_recovered as u64)
-                .unwrap_or(0),
+            recovered_files: counters.recovered_files,
+            flush_timeouts: counters.flush_timeouts,
             peak_cache_bytes: cache.peak_node_resident,
             files_reclaimed: cache.files_reclaimed,
             bytes_reclaimed: cache.bytes_reclaimed,

@@ -84,18 +84,45 @@
 //! accounting, and backend contents agree. The scenario harness
 //! (`crate::scenario`) drives all of it through named hostile
 //! workloads.
+//!
+//! Since PR 10 the store is carved along a **typed service boundary**
+//! ([`proto`]): every manager- and node-tier operation is an entry in
+//! an exhaustive request/response enum behind the
+//! [`proto::ManagerService`] / [`proto::NodeService`] traits, framed
+//! on the wire as length-prefixed, FNV-1a-checksummed records (the
+//! seg-log idiom applied to sockets). The in-process transport — plain
+//! method calls on [`store::LiveStore`] — stays the default and is
+//! trace-equivalent to the monolith; [`rpc`] adds the real one: `woss
+//! noded` chunk daemons and a `woss managerd` metadata daemon over
+//! Unix or TCP sockets, with [`rpc::RemoteBackend`] /
+//! [`rpc::RemoteStore`] as the client halves and [`rpc::Cluster`]
+//! supervising daemon processes so `fail_node` is a real SIGKILL and
+//! `join_node` a real restart through the salvage path. The PR 9 load
+//! plane rides in a response trailer (`io_depth` on every node reply),
+//! so adaptive placement works unchanged across the process split.
 
 pub mod backend;
 pub mod engine;
 pub mod fault;
+pub mod proto;
+pub mod rpc;
 pub mod store;
 
 pub use backend::{
     chunk_crc, chunk_files_under, segment_files_under, BackendKind, ChunkBackend, FileBackend,
     MemoryBackend, NodeRecovery, SegBackend, SegConfig,
 };
-pub use engine::{EngineOptions, LiveEngine, LiveReport};
+pub use engine::{EngineOptions, LiveEngine, LiveReport, StoreHandle};
 pub use fault::{FaultBackend, FaultControl, FaultSpec};
+pub use proto::{
+    dispatch_manager, read_frame, write_frame, ManagerInfo, ManagerRequest, ManagerResponse,
+    ManagerService, NodeHost, NodeRequest, NodeResponse, NodeService, ProtoError, StoreCounters,
+};
+pub use rpc::{
+    connect_node_tier, open_node_host, serve_manager, serve_node, store_over_cluster, Cluster,
+    RemoteBackend, RemoteStore, RpcAddr, Server,
+};
 pub use store::{
-    CachePolicy, CacheStats, LiveStore, LiveTuning, NodeLoad, RecoveryReport, StoreAudit,
+    CachePolicy, CacheStats, LiveStore, LiveTuning, NodeLoad, NodeSupervisor, RecoveryReport,
+    StoreAudit,
 };

@@ -1,0 +1,1756 @@
+//! Typed service boundary + wire protocol for the live store.
+//!
+//! This module carves the monolithic [`LiveStore`] along two explicit
+//! service surfaces, each transport-agnostic:
+//!
+//! * [`NodeService`] — one storage node's chunk store: the
+//!   [`ChunkBackend`] operations plus recovery info, expressed as the
+//!   exhaustive [`NodeRequest`] / [`NodeResponse`] enums. Implemented
+//!   by [`NodeHost`] (a daemon's backend) and consumed remotely by
+//!   [`super::rpc::RemoteBackend`].
+//! * [`ManagerService`] — the manager/metadata surface the engine,
+//!   scenario harness, and CLI drive: file writes/reads, attributes,
+//!   placement queries, churn, and counters, expressed as
+//!   [`ManagerRequest`] / [`ManagerResponse`]. Implemented by
+//!   [`LiveStore`] itself (the in-process transport — plain method
+//!   calls, byte-identical to the pre-split store) and by
+//!   [`super::rpc::RemoteStore`] (the socket transport).
+//!
+//! On the wire every message is one **frame**: a length-prefixed,
+//! FNV-1a-checksummed byte payload (the same record idioms the
+//! segment log uses — `[u32 len][u64 fnv1a][payload]`, little-endian).
+//! [`read_frame`] / [`write_frame`] never panic on hostile input:
+//! truncated headers, oversized lengths, checksum mismatches, unknown
+//! op codes, and mid-stream disconnects each surface as a typed
+//! [`ProtoError`], which the daemons encode back to the peer as a
+//! `Malformed` response before closing the connection.
+//!
+//! The PR 9 load-feedback plane crosses the boundary in response
+//! *trailers*: every [`NodeResponse`] carries the node's current
+//! [`ChunkBackend::io_depth`] after its body, so a remote manager's
+//! adaptive placement sees the same signal an in-process one reads
+//! directly.
+
+use super::backend::{chunk_crc, BackendKind, ChunkBackend, ChunkKey, NodeRecovery};
+use super::store::{CacheStats, LiveStore};
+use crate::hints::TagSet;
+use crate::storage::types::{FileId, NodeId, StorageError};
+use std::io::{Read, Write};
+use std::sync::atomic::Ordering;
+
+/// Hard cap on a frame's payload length. Write requests carry whole
+/// files, so the cap is generous; anything larger is a corrupt or
+/// hostile header, not a legitimate message.
+pub const FRAME_MAX: u32 = 256 << 20;
+
+/// Frame header bytes: `u32` payload length + `u64` FNV-1a checksum.
+pub const FRAME_HEADER: usize = 12;
+
+/// Typed failure of the wire layer. Daemons map every hostile input to
+/// one of these — never a panic, never a hang, never a leaked
+/// connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// The stream ended (or stalled past the read deadline) inside a
+    /// frame: a truncated header or a mid-stream disconnect.
+    Truncated,
+    /// The header's length field exceeds [`FRAME_MAX`].
+    Oversized(u64),
+    /// The payload did not hash to the header's FNV-1a checksum.
+    BadChecksum,
+    /// The payload led with an op code this peer does not speak.
+    UnknownOp(u8),
+    /// The op code was known but the payload body did not decode.
+    BadPayload(String),
+    /// The peer closed the stream cleanly between frames.
+    Disconnected,
+    /// An underlying socket error outside the framing itself.
+    Io(String),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Truncated => write!(f, "truncated frame"),
+            ProtoError::Oversized(len) => {
+                write!(f, "oversized frame length {len} (cap {FRAME_MAX})")
+            }
+            ProtoError::BadChecksum => write!(f, "frame checksum mismatch"),
+            ProtoError::UnknownOp(op) => write!(f, "unknown op code {op}"),
+            ProtoError::BadPayload(why) => write!(f, "malformed payload: {why}"),
+            ProtoError::Disconnected => write!(f, "peer disconnected"),
+            ProtoError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Read exactly `buf.len()` bytes. `at_boundary` marks the first read
+/// of a frame, where a clean EOF is a [`ProtoError::Disconnected`]
+/// (the peer hung up between frames) rather than a truncation.
+fn fill(r: &mut dyn Read, buf: &mut [u8], at_boundary: bool) -> Result<(), ProtoError> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => {
+                return Err(if at_boundary && off == 0 {
+                    ProtoError::Disconnected
+                } else {
+                    ProtoError::Truncated
+                })
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // A half-open peer that sent part of a frame and went
+                // silent: the read deadline fires and the frame is
+                // truncated — the daemon must not hang forever.
+                return Err(ProtoError::Truncated);
+            }
+            Err(e) => return Err(ProtoError::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Write one frame: `[u32 len][u64 fnv1a(payload)][payload]`, one
+/// buffered `write_all`.
+pub fn write_frame(w: &mut dyn Write, payload: &[u8]) -> Result<(), ProtoError> {
+    if payload.len() as u64 > FRAME_MAX as u64 {
+        return Err(ProtoError::Oversized(payload.len() as u64));
+    }
+    let mut buf = Vec::with_capacity(FRAME_HEADER + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&chunk_crc(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+    w.write_all(&buf).map_err(|e| ProtoError::Io(e.to_string()))?;
+    w.flush().map_err(|e| ProtoError::Io(e.to_string()))
+}
+
+/// Read one frame and verify its checksum. Hostile input surfaces as
+/// the matching [`ProtoError`]; the payload allocation is bounded by
+/// [`FRAME_MAX`] *before* any allocation happens.
+pub fn read_frame(r: &mut dyn Read) -> Result<Vec<u8>, ProtoError> {
+    let mut len_bytes = [0u8; 4];
+    read_at_boundary(r, &mut len_bytes)?;
+    read_frame_rest(r, len_bytes)
+}
+
+/// Read exactly `buf.len()` bytes at a frame boundary: a clean EOF at
+/// byte zero is [`ProtoError::Disconnected`] (the peer hung up between
+/// frames), anything short after that [`ProtoError::Truncated`]. A
+/// daemon blocks here without a deadline — an idle pooled connection
+/// is not an error.
+pub fn read_at_boundary(r: &mut dyn Read, buf: &mut [u8]) -> Result<(), ProtoError> {
+    fill(r, buf, true)
+}
+
+/// Finish a frame whose 4 length bytes the caller already read (the
+/// two-stage server read: boundary read without a deadline, the rest
+/// under one, so a half-open peer that sent a partial frame surfaces
+/// as [`ProtoError::Truncated`] instead of parking the thread).
+pub fn read_frame_rest(r: &mut dyn Read, len_bytes: [u8; 4]) -> Result<Vec<u8>, ProtoError> {
+    let len = u32::from_le_bytes(len_bytes);
+    if len > FRAME_MAX {
+        return Err(ProtoError::Oversized(len as u64));
+    }
+    let mut crc = [0u8; 8];
+    fill(r, &mut crc, false)?;
+    let want_crc = u64::from_le_bytes(crc);
+    let mut payload = vec![0u8; len as usize];
+    fill(r, &mut payload, false)?;
+    if chunk_crc(&payload) != want_crc {
+        return Err(ProtoError::BadChecksum);
+    }
+    Ok(payload)
+}
+
+// ---------------------------------------------------------------------------
+// Payload codec
+// ---------------------------------------------------------------------------
+
+/// Little-endian payload encoder (the frame layer owns the checksum).
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Fresh encoder, leading with an op/tag byte.
+    pub fn tagged(tag: u8) -> Self {
+        let mut e = Enc::default();
+        e.u8(tag);
+        e
+    }
+
+    /// Append one byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u32`.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64`.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64` (bit pattern).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Append a bool as one byte.
+    pub fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    /// Append a length-prefixed byte string.
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// The finished payload.
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Payload decoder; every read is bounds-checked and surfaces
+/// [`ProtoError::BadPayload`] instead of panicking.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Decode over `buf` from its first byte.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| ProtoError::BadPayload(format!("short read: want {n} more bytes")))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a `u32`.
+    pub fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a `u64`.
+    pub fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read an `f64` (bit pattern).
+    pub fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a bool byte (0 | 1).
+    pub fn bool(&mut self) -> Result<bool, ProtoError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(ProtoError::BadPayload(format!("bad bool byte {other}"))),
+        }
+    }
+
+    /// Read a length-prefixed byte string.
+    pub fn bytes(&mut self) -> Result<Vec<u8>, ProtoError> {
+        let len = self.u64()?;
+        if len > FRAME_MAX as u64 {
+            return Err(ProtoError::BadPayload(format!("byte string length {len}")));
+        }
+        Ok(self.take(len as usize)?.to_vec())
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String, ProtoError> {
+        String::from_utf8(self.bytes()?)
+            .map_err(|e| ProtoError::BadPayload(format!("non-utf8 string: {e}")))
+    }
+
+    /// Require the payload fully consumed (trailing garbage is drift).
+    pub fn done(&self) -> Result<(), ProtoError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(ProtoError::BadPayload(format!(
+                "{} trailing bytes",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+fn enc_key(e: &mut Enc, key: ChunkKey) {
+    e.u64(key.0 .0);
+    e.u64(key.1);
+}
+
+fn dec_key(d: &mut Dec) -> Result<ChunkKey, ProtoError> {
+    Ok((FileId(d.u64()?), d.u64()?))
+}
+
+fn enc_storage_err(e: &mut Enc, err: &StorageError) {
+    match err {
+        StorageError::NotFound(s) => {
+            e.u8(0);
+            e.str(s);
+        }
+        StorageError::AlreadyExists(s) => {
+            e.u8(1);
+            e.str(s);
+        }
+        StorageError::NoSpace(n) => {
+            e.u8(2);
+            e.u64(*n);
+        }
+        StorageError::Invalid(s) => {
+            e.u8(3);
+            e.str(s);
+        }
+    }
+}
+
+fn dec_storage_err(d: &mut Dec) -> Result<StorageError, ProtoError> {
+    Ok(match d.u8()? {
+        0 => StorageError::NotFound(d.str()?),
+        1 => StorageError::AlreadyExists(d.str()?),
+        2 => StorageError::NoSpace(d.u64()?),
+        3 => StorageError::Invalid(d.str()?),
+        other => return Err(ProtoError::BadPayload(format!("bad error tag {other}"))),
+    })
+}
+
+fn enc_proto_err(e: &mut Enc, err: &ProtoError) {
+    match err {
+        ProtoError::Truncated => e.u8(0),
+        ProtoError::Oversized(len) => {
+            e.u8(1);
+            e.u64(*len);
+        }
+        ProtoError::BadChecksum => e.u8(2),
+        ProtoError::UnknownOp(op) => {
+            e.u8(3);
+            e.u8(*op);
+        }
+        ProtoError::BadPayload(s) => {
+            e.u8(4);
+            e.str(s);
+        }
+        ProtoError::Disconnected => e.u8(5),
+        ProtoError::Io(s) => {
+            e.u8(6);
+            e.str(s);
+        }
+    }
+}
+
+fn dec_proto_err(d: &mut Dec) -> Result<ProtoError, ProtoError> {
+    Ok(match d.u8()? {
+        0 => ProtoError::Truncated,
+        1 => ProtoError::Oversized(d.u64()?),
+        2 => ProtoError::BadChecksum,
+        3 => ProtoError::UnknownOp(d.u8()?),
+        4 => ProtoError::BadPayload(d.str()?),
+        5 => ProtoError::Disconnected,
+        6 => ProtoError::Io(d.str()?),
+        other => return Err(ProtoError::BadPayload(format!("bad proto-err tag {other}"))),
+    })
+}
+
+fn enc_backend_kind(e: &mut Enc, kind: BackendKind) {
+    e.u8(match kind {
+        BackendKind::Memory => 0,
+        BackendKind::Disk => 1,
+        BackendKind::Seg => 2,
+    });
+}
+
+fn dec_backend_kind(d: &mut Dec) -> Result<BackendKind, ProtoError> {
+    Ok(match d.u8()? {
+        0 => BackendKind::Memory,
+        1 => BackendKind::Disk,
+        2 => BackendKind::Seg,
+        other => return Err(ProtoError::BadPayload(format!("bad backend tag {other}"))),
+    })
+}
+
+fn enc_tags(e: &mut Enc, tags: &TagSet) {
+    let pairs: Vec<(&str, &str)> = tags.iter().collect();
+    e.u32(pairs.len() as u32);
+    for (k, v) in pairs {
+        e.str(k);
+        e.str(v);
+    }
+}
+
+fn dec_tags(d: &mut Dec) -> Result<TagSet, ProtoError> {
+    let n = d.u32()?;
+    let mut pairs = Vec::with_capacity(n.min(1024) as usize);
+    for _ in 0..n {
+        pairs.push((d.str()?, d.str()?));
+    }
+    Ok(TagSet::from_pairs(pairs))
+}
+
+// ---------------------------------------------------------------------------
+// Node service
+// ---------------------------------------------------------------------------
+
+/// One storage node's remote surface — the [`ChunkBackend`] contract
+/// as an exhaustive request enum, plus recovery info and shutdown.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeRequest {
+    /// Liveness probe (the spawn-readiness handshake).
+    Ping,
+    /// Store one chunk's bytes.
+    Put {
+        /// Chunk key (file id + index).
+        key: ChunkKey,
+        /// Payload bytes.
+        bytes: Vec<u8>,
+    },
+    /// Fetch one chunk's bytes (`None` when absent).
+    Get {
+        /// Chunk key.
+        key: ChunkKey,
+    },
+    /// Remove one chunk (idempotent).
+    Delete {
+        /// Chunk key.
+        key: ChunkKey,
+    },
+    /// Is the chunk present?
+    Contains {
+        /// Chunk key.
+        key: ChunkKey,
+    },
+    /// Usage snapshot: used bytes, chunk count, read-error count.
+    Stat,
+    /// Every chunk key this node holds.
+    ChunkKeys,
+    /// Run background maintenance (segment compaction).
+    Maintain,
+    /// Static identity + what a `--reopen` salvaged at startup.
+    Info,
+    /// Clean daemon exit after the reply is sent.
+    Shutdown,
+}
+
+const NODE_OP_PING: u8 = 1;
+const NODE_OP_PUT: u8 = 2;
+const NODE_OP_GET: u8 = 3;
+const NODE_OP_DELETE: u8 = 4;
+const NODE_OP_CONTAINS: u8 = 5;
+const NODE_OP_STAT: u8 = 6;
+const NODE_OP_KEYS: u8 = 7;
+const NODE_OP_MAINTAIN: u8 = 8;
+const NODE_OP_INFO: u8 = 9;
+const NODE_OP_SHUTDOWN: u8 = 10;
+
+impl NodeRequest {
+    /// Serialize to a frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e;
+        match self {
+            NodeRequest::Ping => e = Enc::tagged(NODE_OP_PING),
+            NodeRequest::Put { key, bytes } => {
+                e = Enc::tagged(NODE_OP_PUT);
+                enc_key(&mut e, *key);
+                e.bytes(bytes);
+            }
+            NodeRequest::Get { key } => {
+                e = Enc::tagged(NODE_OP_GET);
+                enc_key(&mut e, *key);
+            }
+            NodeRequest::Delete { key } => {
+                e = Enc::tagged(NODE_OP_DELETE);
+                enc_key(&mut e, *key);
+            }
+            NodeRequest::Contains { key } => {
+                e = Enc::tagged(NODE_OP_CONTAINS);
+                enc_key(&mut e, *key);
+            }
+            NodeRequest::Stat => e = Enc::tagged(NODE_OP_STAT),
+            NodeRequest::ChunkKeys => e = Enc::tagged(NODE_OP_KEYS),
+            NodeRequest::Maintain => e = Enc::tagged(NODE_OP_MAINTAIN),
+            NodeRequest::Info => e = Enc::tagged(NODE_OP_INFO),
+            NodeRequest::Shutdown => e = Enc::tagged(NODE_OP_SHUTDOWN),
+        }
+        e.finish()
+    }
+
+    /// Parse a frame payload; unknown op codes and malformed bodies
+    /// surface as typed [`ProtoError`]s.
+    pub fn decode(payload: &[u8]) -> Result<Self, ProtoError> {
+        let mut d = Dec::new(payload);
+        let req = match d.u8()? {
+            NODE_OP_PING => NodeRequest::Ping,
+            NODE_OP_PUT => NodeRequest::Put {
+                key: dec_key(&mut d)?,
+                bytes: d.bytes()?,
+            },
+            NODE_OP_GET => NodeRequest::Get {
+                key: dec_key(&mut d)?,
+            },
+            NODE_OP_DELETE => NodeRequest::Delete {
+                key: dec_key(&mut d)?,
+            },
+            NODE_OP_CONTAINS => NodeRequest::Contains {
+                key: dec_key(&mut d)?,
+            },
+            NODE_OP_STAT => NodeRequest::Stat,
+            NODE_OP_KEYS => NodeRequest::ChunkKeys,
+            NODE_OP_MAINTAIN => NodeRequest::Maintain,
+            NODE_OP_INFO => NodeRequest::Info,
+            NODE_OP_SHUTDOWN => NodeRequest::Shutdown,
+            other => return Err(ProtoError::UnknownOp(other)),
+        };
+        d.done()?;
+        Ok(req)
+    }
+}
+
+/// A node daemon's reply body. On the wire every reply additionally
+/// carries the node's current I/O queue depth as a trailer — the load
+/// plane crossing the process boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeResponse {
+    /// Success with nothing to return.
+    Ok,
+    /// A boolean answer (`Contains`, `Maintain`).
+    Bool(bool),
+    /// A chunk's bytes, or `None` when the node does not hold it.
+    Chunk(Option<Vec<u8>>),
+    /// Usage snapshot.
+    Stat {
+        /// Bytes the backend holds.
+        used_bytes: u64,
+        /// Chunks the backend holds.
+        chunk_count: u64,
+        /// Reads that failed on a present chunk.
+        read_errors: u64,
+    },
+    /// Every chunk key held.
+    Keys(Vec<ChunkKey>),
+    /// Static identity + reopen salvage summary.
+    Info {
+        /// The chunk layout this daemon runs.
+        backend: BackendKind,
+        /// Chunks a `--reopen` verified and kept.
+        chunks_recovered: u64,
+        /// Bytes across those chunks.
+        bytes_recovered: u64,
+    },
+    /// The operation failed with a storage-layer error.
+    Err(StorageError),
+    /// The daemon could not make sense of the incoming frame; it
+    /// reports why and closes the connection.
+    Malformed(ProtoError),
+}
+
+const NODE_RE_OK: u8 = 1;
+const NODE_RE_BOOL: u8 = 2;
+const NODE_RE_CHUNK: u8 = 3;
+const NODE_RE_STAT: u8 = 4;
+const NODE_RE_KEYS: u8 = 5;
+const NODE_RE_INFO: u8 = 6;
+const NODE_RE_ERR: u8 = 7;
+const NODE_RE_MALFORMED: u8 = 8;
+
+impl NodeResponse {
+    /// Serialize with the load trailer (`io_depth`) appended.
+    pub fn encode(&self, io_depth: u64) -> Vec<u8> {
+        let mut e;
+        match self {
+            NodeResponse::Ok => e = Enc::tagged(NODE_RE_OK),
+            NodeResponse::Bool(b) => {
+                e = Enc::tagged(NODE_RE_BOOL);
+                e.bool(*b);
+            }
+            NodeResponse::Chunk(c) => {
+                e = Enc::tagged(NODE_RE_CHUNK);
+                match c {
+                    Some(bytes) => {
+                        e.bool(true);
+                        e.bytes(bytes);
+                    }
+                    None => e.bool(false),
+                }
+            }
+            NodeResponse::Stat {
+                used_bytes,
+                chunk_count,
+                read_errors,
+            } => {
+                e = Enc::tagged(NODE_RE_STAT);
+                e.u64(*used_bytes);
+                e.u64(*chunk_count);
+                e.u64(*read_errors);
+            }
+            NodeResponse::Keys(keys) => {
+                e = Enc::tagged(NODE_RE_KEYS);
+                e.u64(keys.len() as u64);
+                for &k in keys {
+                    enc_key(&mut e, k);
+                }
+            }
+            NodeResponse::Info {
+                backend,
+                chunks_recovered,
+                bytes_recovered,
+            } => {
+                e = Enc::tagged(NODE_RE_INFO);
+                enc_backend_kind(&mut e, *backend);
+                e.u64(*chunks_recovered);
+                e.u64(*bytes_recovered);
+            }
+            NodeResponse::Err(err) => {
+                e = Enc::tagged(NODE_RE_ERR);
+                enc_storage_err(&mut e, err);
+            }
+            NodeResponse::Malformed(err) => {
+                e = Enc::tagged(NODE_RE_MALFORMED);
+                enc_proto_err(&mut e, err);
+            }
+        }
+        e.u64(io_depth);
+        e.finish()
+    }
+
+    /// Parse a reply payload, returning `(body, io_depth trailer)`.
+    pub fn decode(payload: &[u8]) -> Result<(Self, u64), ProtoError> {
+        let mut d = Dec::new(payload);
+        let resp = match d.u8()? {
+            NODE_RE_OK => NodeResponse::Ok,
+            NODE_RE_BOOL => NodeResponse::Bool(d.bool()?),
+            NODE_RE_CHUNK => NodeResponse::Chunk(if d.bool()? {
+                Some(d.bytes()?)
+            } else {
+                None
+            }),
+            NODE_RE_STAT => NodeResponse::Stat {
+                used_bytes: d.u64()?,
+                chunk_count: d.u64()?,
+                read_errors: d.u64()?,
+            },
+            NODE_RE_KEYS => {
+                let n = d.u64()?;
+                let mut keys = Vec::with_capacity(n.min(1 << 20) as usize);
+                for _ in 0..n {
+                    keys.push(dec_key(&mut d)?);
+                }
+                NodeResponse::Keys(keys)
+            }
+            NODE_RE_INFO => NodeResponse::Info {
+                backend: dec_backend_kind(&mut d)?,
+                chunks_recovered: d.u64()?,
+                bytes_recovered: d.u64()?,
+            },
+            NODE_RE_ERR => NodeResponse::Err(dec_storage_err(&mut d)?),
+            NODE_RE_MALFORMED => NodeResponse::Malformed(dec_proto_err(&mut d)?),
+            other => return Err(ProtoError::UnknownOp(other)),
+        };
+        let io_depth = d.u64()?;
+        d.done()?;
+        Ok((resp, io_depth))
+    }
+}
+
+/// The transport-agnostic node service: one request in, one reply out.
+/// [`NodeHost`] implements it over a real backend; the wire server in
+/// `live::rpc` serves any implementation.
+pub trait NodeService: Send + Sync {
+    /// Handle one request.
+    fn handle(&self, req: NodeRequest) -> NodeResponse;
+    /// Current I/O queue depth — the reply trailer's load signal.
+    fn io_depth(&self) -> u64;
+}
+
+/// A node daemon's state: the chunk backend it serves plus what a
+/// `--reopen` salvaged at startup.
+pub struct NodeHost {
+    backend: Box<dyn ChunkBackend>,
+    kind: BackendKind,
+    recovery: Option<NodeRecovery>,
+}
+
+impl NodeHost {
+    /// Wrap `backend` (of layout `kind`) with optional reopen salvage
+    /// info.
+    pub fn new(
+        backend: Box<dyn ChunkBackend>,
+        kind: BackendKind,
+        recovery: Option<NodeRecovery>,
+    ) -> Self {
+        NodeHost {
+            backend,
+            kind,
+            recovery,
+        }
+    }
+
+    /// The wrapped backend (tests; the service surface is `handle`).
+    pub fn backend(&self) -> &dyn ChunkBackend {
+        self.backend.as_ref()
+    }
+}
+
+impl NodeService for NodeHost {
+    fn handle(&self, req: NodeRequest) -> NodeResponse {
+        match req {
+            NodeRequest::Ping | NodeRequest::Shutdown => NodeResponse::Ok,
+            NodeRequest::Put { key, bytes } => match self.backend.put(key, &bytes) {
+                Ok(()) => NodeResponse::Ok,
+                Err(e) => NodeResponse::Err(e),
+            },
+            NodeRequest::Get { key } => match self.backend.get(key) {
+                Ok(c) => NodeResponse::Chunk(c),
+                Err(e) => NodeResponse::Err(e),
+            },
+            NodeRequest::Delete { key } => {
+                self.backend.delete(key);
+                NodeResponse::Ok
+            }
+            NodeRequest::Contains { key } => NodeResponse::Bool(self.backend.contains(key)),
+            NodeRequest::Stat => NodeResponse::Stat {
+                used_bytes: self.backend.used_bytes(),
+                chunk_count: self.backend.chunk_count() as u64,
+                read_errors: self.backend.read_errors(),
+            },
+            NodeRequest::ChunkKeys => NodeResponse::Keys(self.backend.chunk_keys()),
+            NodeRequest::Maintain => NodeResponse::Bool(self.backend.maintain()),
+            NodeRequest::Info => NodeResponse::Info {
+                backend: self.kind,
+                chunks_recovered: self
+                    .recovery
+                    .as_ref()
+                    .map(|r| r.chunks_recovered as u64)
+                    .unwrap_or(0),
+                bytes_recovered: self.recovery.as_ref().map(|r| r.bytes_recovered).unwrap_or(0),
+            },
+        }
+    }
+
+    fn io_depth(&self) -> u64 {
+        self.backend.io_depth()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manager service
+// ---------------------------------------------------------------------------
+
+/// Static facts about a manager deployment, fetched once per client
+/// connection (`Hello`) and cached — they never change over a store's
+/// lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ManagerInfo {
+    /// Storage nodes behind the manager.
+    pub n_nodes: usize,
+    /// Chunk layout the node tier runs.
+    pub backend: BackendKind,
+    /// Does the registry expose the `location` attribute (WOSS) or
+    /// not (DSS baseline)?
+    pub exposes_location: bool,
+    /// Load-aware placement/read decisions on?
+    pub adaptive: bool,
+    /// Hot-chunk cache tier configured?
+    pub cache_enabled: bool,
+    /// Scratch-lifetime reclamation enforced?
+    pub lifetime_enabled: bool,
+}
+
+/// Lock-free store counters, snapshotted in one round-trip.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// Bytes written through `write_file`.
+    pub bytes_written: u64,
+    /// Bytes returned by `read_file`.
+    pub bytes_read: u64,
+    /// Chunk reads served from the reader's own node.
+    pub local_reads: u64,
+    /// Chunk reads that fetched from another node.
+    pub remote_reads: u64,
+    /// `set-attribute` operations (top-down channel).
+    pub setattr_ops: u64,
+    /// `get-attribute` operations (bottom-up channel).
+    pub getattr_ops: u64,
+    /// Replica copies completed by the background pool.
+    pub background_copies: u64,
+    /// Chunks still below replica count (churn restores draining).
+    pub under_replicated: u64,
+    /// Bytes landed on replacement holders by churn re-replication.
+    pub bytes_rereplicated: u64,
+    /// Chunks landed on replacement holders.
+    pub chunks_rereplicated: u64,
+    /// Files that survived a reopen into this store.
+    pub recovered_files: u64,
+    /// Replication/I/O flush barriers that hit their deadline
+    /// ([`super::store::LiveTuning::flush_timeout_ms`]).
+    pub flush_timeouts: u64,
+}
+
+/// The manager/metadata surface, transport-agnostic: everything the
+/// engine, scenario harness, and CLI need from a live store.
+/// [`LiveStore`] implements it with plain method calls (the in-process
+/// transport — the default, byte-identical to the pre-split store);
+/// [`super::rpc::RemoteStore`] implements it over the wire.
+pub trait ManagerService: Send + Sync {
+    /// Static deployment facts.
+    fn hello(&self) -> ManagerInfo;
+    /// Write a file on behalf of `client` with `tags`.
+    fn write_file(
+        &self,
+        client: NodeId,
+        path: &str,
+        data: &[u8],
+        tags: &TagSet,
+    ) -> Result<(), StorageError>;
+    /// Read a file back on behalf of `client`.
+    fn read_file(&self, client: NodeId, path: &str) -> Result<Vec<u8>, StorageError>;
+    /// Delete a file and reclaim its chunks.
+    fn delete_file(&self, path: &str) -> Result<(), StorageError>;
+    /// Set an extended attribute (top-down channel).
+    fn set_attr(&self, path: &str, key: &str, value: &str);
+    /// Get an extended attribute (bottom-up channel).
+    fn get_attr(&self, path: &str, key: &str) -> Option<String>;
+    /// Logical size of a file, `None` when absent.
+    fn file_size(&self, path: &str) -> Option<u64>;
+    /// Replica holders of a file's first chunk.
+    fn locations(&self, path: &str) -> Vec<NodeId>;
+    /// Promote a file's chunks into `client`'s cache tier.
+    fn prefetch(&self, client: NodeId, path: &str) -> Result<usize, StorageError>;
+    /// The adaptive read-cost score for one node.
+    fn node_read_cost(&self, node: NodeId) -> f64;
+    /// Barrier: drain background replication + the I/O pool.
+    fn flush(&self);
+    /// Cache-tier counters + latency percentiles.
+    fn cache_stats(&self) -> CacheStats;
+    /// Lock-free counter snapshot.
+    fn counters(&self) -> StoreCounters;
+    /// Kill a node and queue re-replication; returns jobs queued.
+    fn fail_node(&self, node: NodeId) -> usize;
+    /// Bring a failed node back; returns stale chunks swept.
+    fn join_node(&self, node: NodeId) -> usize;
+    /// Is the node serving?
+    fn is_alive(&self, node: NodeId) -> bool;
+    /// Bytes held per node backend.
+    fn backend_used_bytes(&self) -> Vec<u64>;
+    /// Clean shutdown (snapshot + CLEAN marker on persistent tiers).
+    fn shutdown_store(&self);
+}
+
+impl ManagerService for LiveStore {
+    fn hello(&self) -> ManagerInfo {
+        ManagerInfo {
+            n_nodes: self.n_nodes(),
+            backend: self.backend_kind(),
+            exposes_location: self.exposes_location(),
+            adaptive: self.adaptive(),
+            cache_enabled: self.cache_enabled(),
+            lifetime_enabled: self.lifetime_enabled(),
+        }
+    }
+
+    fn write_file(
+        &self,
+        client: NodeId,
+        path: &str,
+        data: &[u8],
+        tags: &TagSet,
+    ) -> Result<(), StorageError> {
+        LiveStore::write_file(self, client, path, data, tags)
+    }
+
+    fn read_file(&self, client: NodeId, path: &str) -> Result<Vec<u8>, StorageError> {
+        LiveStore::read_file(self, client, path)
+    }
+
+    fn delete_file(&self, path: &str) -> Result<(), StorageError> {
+        self.delete(path)
+    }
+
+    fn set_attr(&self, path: &str, key: &str, value: &str) {
+        self.set_xattr(path, key, value);
+    }
+
+    fn get_attr(&self, path: &str, key: &str) -> Option<String> {
+        self.get_xattr(path, key)
+    }
+
+    fn file_size(&self, path: &str) -> Option<u64> {
+        LiveStore::file_size(self, path)
+    }
+
+    fn locations(&self, path: &str) -> Vec<NodeId> {
+        LiveStore::locations(self, path)
+    }
+
+    fn prefetch(&self, client: NodeId, path: &str) -> Result<usize, StorageError> {
+        LiveStore::prefetch(self, client, path)
+    }
+
+    fn node_read_cost(&self, node: NodeId) -> f64 {
+        LiveStore::node_read_cost(self, node)
+    }
+
+    fn flush(&self) {
+        self.flush_replication();
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        LiveStore::cache_stats(self)
+    }
+
+    fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            local_reads: self.local_reads.load(Ordering::Relaxed),
+            remote_reads: self.remote_reads.load(Ordering::Relaxed),
+            setattr_ops: self.setattr_ops.load(Ordering::Relaxed),
+            getattr_ops: self.getattr_ops.load(Ordering::Relaxed),
+            background_copies: self.background_copies(),
+            under_replicated: self.under_replicated(),
+            bytes_rereplicated: self.bytes_rereplicated(),
+            chunks_rereplicated: self.chunks_rereplicated(),
+            recovered_files: self
+                .recovery_report()
+                .map(|r| r.files_recovered as u64)
+                .unwrap_or(0),
+            flush_timeouts: self.flush_timeouts(),
+        }
+    }
+
+    fn fail_node(&self, node: NodeId) -> usize {
+        LiveStore::fail_node(self, node)
+    }
+
+    fn join_node(&self, node: NodeId) -> usize {
+        LiveStore::join_node(self, node)
+    }
+
+    fn is_alive(&self, node: NodeId) -> bool {
+        LiveStore::is_alive(self, node)
+    }
+
+    fn backend_used_bytes(&self) -> Vec<u64> {
+        LiveStore::backend_used_bytes(self)
+    }
+
+    fn shutdown_store(&self) {
+        self.shutdown();
+    }
+}
+
+/// The manager wire surface — every [`ManagerService`] method as a
+/// typed request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ManagerRequest {
+    /// Static deployment facts (the connect handshake).
+    Hello,
+    /// `write_file`.
+    WriteFile {
+        /// Requesting client node.
+        client: u64,
+        /// Namespace path.
+        path: String,
+        /// Hint tags.
+        tags: TagSet,
+        /// File bytes.
+        data: Vec<u8>,
+    },
+    /// `read_file`.
+    ReadFile {
+        /// Requesting client node.
+        client: u64,
+        /// Namespace path.
+        path: String,
+    },
+    /// `delete_file`.
+    Delete {
+        /// Namespace path.
+        path: String,
+    },
+    /// `set_attr`.
+    SetAttr {
+        /// Namespace path.
+        path: String,
+        /// Attribute key.
+        key: String,
+        /// Attribute value.
+        value: String,
+    },
+    /// `get_attr`.
+    GetAttr {
+        /// Namespace path.
+        path: String,
+        /// Attribute key.
+        key: String,
+    },
+    /// `file_size`.
+    FileSize {
+        /// Namespace path.
+        path: String,
+    },
+    /// `locations`.
+    Locations {
+        /// Namespace path.
+        path: String,
+    },
+    /// `prefetch`.
+    Prefetch {
+        /// Requesting client node.
+        client: u64,
+        /// Namespace path.
+        path: String,
+    },
+    /// `node_read_cost`.
+    NodeReadCost {
+        /// Node index.
+        node: u64,
+    },
+    /// `flush` (replication + I/O barrier).
+    Flush,
+    /// `cache_stats`.
+    CacheStats,
+    /// `counters`.
+    Counters,
+    /// `fail_node`.
+    FailNode {
+        /// Node index.
+        node: u64,
+    },
+    /// `join_node`.
+    JoinNode {
+        /// Node index.
+        node: u64,
+    },
+    /// `is_alive`.
+    IsAlive {
+        /// Node index.
+        node: u64,
+    },
+    /// `backend_used_bytes`.
+    BackendUsedBytes,
+    /// Clean store shutdown, then daemon exit after the reply.
+    Shutdown,
+}
+
+const MGR_OP_HELLO: u8 = 1;
+const MGR_OP_WRITE: u8 = 2;
+const MGR_OP_READ: u8 = 3;
+const MGR_OP_DELETE: u8 = 4;
+const MGR_OP_SETATTR: u8 = 5;
+const MGR_OP_GETATTR: u8 = 6;
+const MGR_OP_SIZE: u8 = 7;
+const MGR_OP_LOCATIONS: u8 = 8;
+const MGR_OP_PREFETCH: u8 = 9;
+const MGR_OP_READCOST: u8 = 10;
+const MGR_OP_FLUSH: u8 = 11;
+const MGR_OP_CACHESTATS: u8 = 12;
+const MGR_OP_COUNTERS: u8 = 13;
+const MGR_OP_FAIL: u8 = 14;
+const MGR_OP_JOIN: u8 = 15;
+const MGR_OP_ALIVE: u8 = 16;
+const MGR_OP_USED: u8 = 17;
+const MGR_OP_SHUTDOWN: u8 = 18;
+
+impl ManagerRequest {
+    /// Serialize to a frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e;
+        match self {
+            ManagerRequest::Hello => e = Enc::tagged(MGR_OP_HELLO),
+            ManagerRequest::WriteFile {
+                client,
+                path,
+                tags,
+                data,
+            } => {
+                e = Enc::tagged(MGR_OP_WRITE);
+                e.u64(*client);
+                e.str(path);
+                enc_tags(&mut e, tags);
+                e.bytes(data);
+            }
+            ManagerRequest::ReadFile { client, path } => {
+                e = Enc::tagged(MGR_OP_READ);
+                e.u64(*client);
+                e.str(path);
+            }
+            ManagerRequest::Delete { path } => {
+                e = Enc::tagged(MGR_OP_DELETE);
+                e.str(path);
+            }
+            ManagerRequest::SetAttr { path, key, value } => {
+                e = Enc::tagged(MGR_OP_SETATTR);
+                e.str(path);
+                e.str(key);
+                e.str(value);
+            }
+            ManagerRequest::GetAttr { path, key } => {
+                e = Enc::tagged(MGR_OP_GETATTR);
+                e.str(path);
+                e.str(key);
+            }
+            ManagerRequest::FileSize { path } => {
+                e = Enc::tagged(MGR_OP_SIZE);
+                e.str(path);
+            }
+            ManagerRequest::Locations { path } => {
+                e = Enc::tagged(MGR_OP_LOCATIONS);
+                e.str(path);
+            }
+            ManagerRequest::Prefetch { client, path } => {
+                e = Enc::tagged(MGR_OP_PREFETCH);
+                e.u64(*client);
+                e.str(path);
+            }
+            ManagerRequest::NodeReadCost { node } => {
+                e = Enc::tagged(MGR_OP_READCOST);
+                e.u64(*node);
+            }
+            ManagerRequest::Flush => e = Enc::tagged(MGR_OP_FLUSH),
+            ManagerRequest::CacheStats => e = Enc::tagged(MGR_OP_CACHESTATS),
+            ManagerRequest::Counters => e = Enc::tagged(MGR_OP_COUNTERS),
+            ManagerRequest::FailNode { node } => {
+                e = Enc::tagged(MGR_OP_FAIL);
+                e.u64(*node);
+            }
+            ManagerRequest::JoinNode { node } => {
+                e = Enc::tagged(MGR_OP_JOIN);
+                e.u64(*node);
+            }
+            ManagerRequest::IsAlive { node } => {
+                e = Enc::tagged(MGR_OP_ALIVE);
+                e.u64(*node);
+            }
+            ManagerRequest::BackendUsedBytes => e = Enc::tagged(MGR_OP_USED),
+            ManagerRequest::Shutdown => e = Enc::tagged(MGR_OP_SHUTDOWN),
+        }
+        e.finish()
+    }
+
+    /// Parse a frame payload.
+    pub fn decode(payload: &[u8]) -> Result<Self, ProtoError> {
+        let mut d = Dec::new(payload);
+        let req = match d.u8()? {
+            MGR_OP_HELLO => ManagerRequest::Hello,
+            MGR_OP_WRITE => ManagerRequest::WriteFile {
+                client: d.u64()?,
+                path: d.str()?,
+                tags: dec_tags(&mut d)?,
+                data: d.bytes()?,
+            },
+            MGR_OP_READ => ManagerRequest::ReadFile {
+                client: d.u64()?,
+                path: d.str()?,
+            },
+            MGR_OP_DELETE => ManagerRequest::Delete { path: d.str()? },
+            MGR_OP_SETATTR => ManagerRequest::SetAttr {
+                path: d.str()?,
+                key: d.str()?,
+                value: d.str()?,
+            },
+            MGR_OP_GETATTR => ManagerRequest::GetAttr {
+                path: d.str()?,
+                key: d.str()?,
+            },
+            MGR_OP_SIZE => ManagerRequest::FileSize { path: d.str()? },
+            MGR_OP_LOCATIONS => ManagerRequest::Locations { path: d.str()? },
+            MGR_OP_PREFETCH => ManagerRequest::Prefetch {
+                client: d.u64()?,
+                path: d.str()?,
+            },
+            MGR_OP_READCOST => ManagerRequest::NodeReadCost { node: d.u64()? },
+            MGR_OP_FLUSH => ManagerRequest::Flush,
+            MGR_OP_CACHESTATS => ManagerRequest::CacheStats,
+            MGR_OP_COUNTERS => ManagerRequest::Counters,
+            MGR_OP_FAIL => ManagerRequest::FailNode { node: d.u64()? },
+            MGR_OP_JOIN => ManagerRequest::JoinNode { node: d.u64()? },
+            MGR_OP_ALIVE => ManagerRequest::IsAlive { node: d.u64()? },
+            MGR_OP_USED => ManagerRequest::BackendUsedBytes,
+            MGR_OP_SHUTDOWN => ManagerRequest::Shutdown,
+            other => return Err(ProtoError::UnknownOp(other)),
+        };
+        d.done()?;
+        Ok(req)
+    }
+}
+
+/// A manager daemon's reply.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ManagerResponse {
+    /// Success with nothing to return.
+    Ok,
+    /// Deployment facts (`Hello`).
+    Info(ManagerInfo),
+    /// File bytes (`ReadFile`).
+    Bytes(Vec<u8>),
+    /// An optional size (`FileSize`).
+    Size(Option<u64>),
+    /// An optional attribute value (`GetAttr`).
+    Attr(Option<String>),
+    /// Node indices (`Locations`).
+    Nodes(Vec<u64>),
+    /// A float answer (`NodeReadCost`).
+    F64(f64),
+    /// A boolean answer (`IsAlive`).
+    Bool(bool),
+    /// A count (`Prefetch` chunks, `FailNode` jobs, `JoinNode` sweeps).
+    Count(u64),
+    /// Cache-tier stats (`CacheStats`).
+    Stats(CacheStats),
+    /// Counter snapshot (`Counters`).
+    Counters(StoreCounters),
+    /// Per-node byte totals (`BackendUsedBytes`).
+    U64s(Vec<u64>),
+    /// The operation failed with a storage-layer error.
+    Err(StorageError),
+    /// The daemon could not make sense of the incoming frame.
+    Malformed(ProtoError),
+}
+
+const MGR_RE_OK: u8 = 1;
+const MGR_RE_INFO: u8 = 2;
+const MGR_RE_BYTES: u8 = 3;
+const MGR_RE_SIZE: u8 = 4;
+const MGR_RE_ATTR: u8 = 5;
+const MGR_RE_NODES: u8 = 6;
+const MGR_RE_F64: u8 = 7;
+const MGR_RE_BOOL: u8 = 8;
+const MGR_RE_COUNT: u8 = 9;
+const MGR_RE_STATS: u8 = 10;
+const MGR_RE_COUNTERS: u8 = 11;
+const MGR_RE_U64S: u8 = 12;
+const MGR_RE_ERR: u8 = 13;
+const MGR_RE_MALFORMED: u8 = 14;
+
+impl ManagerResponse {
+    /// Serialize to a frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e;
+        match self {
+            ManagerResponse::Ok => e = Enc::tagged(MGR_RE_OK),
+            ManagerResponse::Info(info) => {
+                e = Enc::tagged(MGR_RE_INFO);
+                e.u64(info.n_nodes as u64);
+                enc_backend_kind(&mut e, info.backend);
+                e.bool(info.exposes_location);
+                e.bool(info.adaptive);
+                e.bool(info.cache_enabled);
+                e.bool(info.lifetime_enabled);
+            }
+            ManagerResponse::Bytes(b) => {
+                e = Enc::tagged(MGR_RE_BYTES);
+                e.bytes(b);
+            }
+            ManagerResponse::Size(s) => {
+                e = Enc::tagged(MGR_RE_SIZE);
+                match s {
+                    Some(v) => {
+                        e.bool(true);
+                        e.u64(*v);
+                    }
+                    None => e.bool(false),
+                }
+            }
+            ManagerResponse::Attr(a) => {
+                e = Enc::tagged(MGR_RE_ATTR);
+                match a {
+                    Some(v) => {
+                        e.bool(true);
+                        e.str(v);
+                    }
+                    None => e.bool(false),
+                }
+            }
+            ManagerResponse::Nodes(ns) => {
+                e = Enc::tagged(MGR_RE_NODES);
+                e.u64(ns.len() as u64);
+                for &n in ns {
+                    e.u64(n);
+                }
+            }
+            ManagerResponse::F64(v) => {
+                e = Enc::tagged(MGR_RE_F64);
+                e.f64(*v);
+            }
+            ManagerResponse::Bool(b) => {
+                e = Enc::tagged(MGR_RE_BOOL);
+                e.bool(*b);
+            }
+            ManagerResponse::Count(c) => {
+                e = Enc::tagged(MGR_RE_COUNT);
+                e.u64(*c);
+            }
+            ManagerResponse::Stats(s) => {
+                e = Enc::tagged(MGR_RE_STATS);
+                e.u64(s.resident.len() as u64);
+                for &r in &s.resident {
+                    e.u64(r);
+                }
+                e.u64(s.peak_node_resident);
+                e.u64(s.hits);
+                e.u64(s.insertions);
+                e.u64(s.evictions);
+                e.u64(s.prefetched);
+                e.u64(s.spilled);
+                e.u64(s.pinned_entries);
+                e.u64(s.files_reclaimed);
+                e.u64(s.bytes_reclaimed);
+                e.u64(s.read_errors);
+                for v in [
+                    s.put_p50_us,
+                    s.put_p95_us,
+                    s.put_p99_us,
+                    s.get_p50_us,
+                    s.get_p95_us,
+                    s.get_p99_us,
+                    s.spill_p50_us,
+                    s.spill_p95_us,
+                    s.spill_p99_us,
+                ] {
+                    e.f64(v);
+                }
+            }
+            ManagerResponse::Counters(c) => {
+                e = Enc::tagged(MGR_RE_COUNTERS);
+                for v in [
+                    c.bytes_written,
+                    c.bytes_read,
+                    c.local_reads,
+                    c.remote_reads,
+                    c.setattr_ops,
+                    c.getattr_ops,
+                    c.background_copies,
+                    c.under_replicated,
+                    c.bytes_rereplicated,
+                    c.chunks_rereplicated,
+                    c.recovered_files,
+                    c.flush_timeouts,
+                ] {
+                    e.u64(v);
+                }
+            }
+            ManagerResponse::U64s(vs) => {
+                e = Enc::tagged(MGR_RE_U64S);
+                e.u64(vs.len() as u64);
+                for &v in vs {
+                    e.u64(v);
+                }
+            }
+            ManagerResponse::Err(err) => {
+                e = Enc::tagged(MGR_RE_ERR);
+                enc_storage_err(&mut e, err);
+            }
+            ManagerResponse::Malformed(err) => {
+                e = Enc::tagged(MGR_RE_MALFORMED);
+                enc_proto_err(&mut e, err);
+            }
+        }
+        e.finish()
+    }
+
+    /// Parse a frame payload.
+    pub fn decode(payload: &[u8]) -> Result<Self, ProtoError> {
+        let mut d = Dec::new(payload);
+        let resp = match d.u8()? {
+            MGR_RE_OK => ManagerResponse::Ok,
+            MGR_RE_INFO => ManagerResponse::Info(ManagerInfo {
+                n_nodes: d.u64()? as usize,
+                backend: dec_backend_kind(&mut d)?,
+                exposes_location: d.bool()?,
+                adaptive: d.bool()?,
+                cache_enabled: d.bool()?,
+                lifetime_enabled: d.bool()?,
+            }),
+            MGR_RE_BYTES => ManagerResponse::Bytes(d.bytes()?),
+            MGR_RE_SIZE => ManagerResponse::Size(if d.bool()? { Some(d.u64()?) } else { None }),
+            MGR_RE_ATTR => ManagerResponse::Attr(if d.bool()? { Some(d.str()?) } else { None }),
+            MGR_RE_NODES => {
+                let n = d.u64()?;
+                let mut ns = Vec::with_capacity(n.min(1 << 16) as usize);
+                for _ in 0..n {
+                    ns.push(d.u64()?);
+                }
+                ManagerResponse::Nodes(ns)
+            }
+            MGR_RE_F64 => ManagerResponse::F64(d.f64()?),
+            MGR_RE_BOOL => ManagerResponse::Bool(d.bool()?),
+            MGR_RE_COUNT => ManagerResponse::Count(d.u64()?),
+            MGR_RE_STATS => {
+                let n = d.u64()?;
+                let mut resident = Vec::with_capacity(n.min(1 << 16) as usize);
+                for _ in 0..n {
+                    resident.push(d.u64()?);
+                }
+                ManagerResponse::Stats(CacheStats {
+                    resident,
+                    peak_node_resident: d.u64()?,
+                    hits: d.u64()?,
+                    insertions: d.u64()?,
+                    evictions: d.u64()?,
+                    prefetched: d.u64()?,
+                    spilled: d.u64()?,
+                    pinned_entries: d.u64()?,
+                    files_reclaimed: d.u64()?,
+                    bytes_reclaimed: d.u64()?,
+                    read_errors: d.u64()?,
+                    put_p50_us: d.f64()?,
+                    put_p95_us: d.f64()?,
+                    put_p99_us: d.f64()?,
+                    get_p50_us: d.f64()?,
+                    get_p95_us: d.f64()?,
+                    get_p99_us: d.f64()?,
+                    spill_p50_us: d.f64()?,
+                    spill_p95_us: d.f64()?,
+                    spill_p99_us: d.f64()?,
+                })
+            }
+            MGR_RE_COUNTERS => ManagerResponse::Counters(StoreCounters {
+                bytes_written: d.u64()?,
+                bytes_read: d.u64()?,
+                local_reads: d.u64()?,
+                remote_reads: d.u64()?,
+                setattr_ops: d.u64()?,
+                getattr_ops: d.u64()?,
+                background_copies: d.u64()?,
+                under_replicated: d.u64()?,
+                bytes_rereplicated: d.u64()?,
+                chunks_rereplicated: d.u64()?,
+                recovered_files: d.u64()?,
+                flush_timeouts: d.u64()?,
+            }),
+            MGR_RE_U64S => {
+                let n = d.u64()?;
+                let mut vs = Vec::with_capacity(n.min(1 << 16) as usize);
+                for _ in 0..n {
+                    vs.push(d.u64()?);
+                }
+                ManagerResponse::U64s(vs)
+            }
+            MGR_RE_ERR => ManagerResponse::Err(dec_storage_err(&mut d)?),
+            MGR_RE_MALFORMED => ManagerResponse::Malformed(dec_proto_err(&mut d)?),
+            other => return Err(ProtoError::UnknownOp(other)),
+        };
+        d.done()?;
+        Ok(resp)
+    }
+}
+
+/// Route one typed request to a [`ManagerService`] implementation.
+/// This is the whole in-process transport: `decode → dispatch →
+/// encode` must behave identically to calling the service directly,
+/// which `proto` tests pin.
+pub fn dispatch_manager(svc: &dyn ManagerService, req: ManagerRequest) -> ManagerResponse {
+    match req {
+        ManagerRequest::Hello => ManagerResponse::Info(svc.hello()),
+        ManagerRequest::WriteFile {
+            client,
+            path,
+            tags,
+            data,
+        } => match svc.write_file(NodeId(client as usize), &path, &data, &tags) {
+            Ok(()) => ManagerResponse::Ok,
+            Err(e) => ManagerResponse::Err(e),
+        },
+        ManagerRequest::ReadFile { client, path } => {
+            match svc.read_file(NodeId(client as usize), &path) {
+                Ok(bytes) => ManagerResponse::Bytes(bytes),
+                Err(e) => ManagerResponse::Err(e),
+            }
+        }
+        ManagerRequest::Delete { path } => match svc.delete_file(&path) {
+            Ok(()) => ManagerResponse::Ok,
+            Err(e) => ManagerResponse::Err(e),
+        },
+        ManagerRequest::SetAttr { path, key, value } => {
+            svc.set_attr(&path, &key, &value);
+            ManagerResponse::Ok
+        }
+        ManagerRequest::GetAttr { path, key } => ManagerResponse::Attr(svc.get_attr(&path, &key)),
+        ManagerRequest::FileSize { path } => ManagerResponse::Size(svc.file_size(&path)),
+        ManagerRequest::Locations { path } => ManagerResponse::Nodes(
+            svc.locations(&path).into_iter().map(|n| n.0 as u64).collect(),
+        ),
+        ManagerRequest::Prefetch { client, path } => {
+            match svc.prefetch(NodeId(client as usize), &path) {
+                Ok(n) => ManagerResponse::Count(n as u64),
+                Err(e) => ManagerResponse::Err(e),
+            }
+        }
+        ManagerRequest::NodeReadCost { node } => {
+            ManagerResponse::F64(svc.node_read_cost(NodeId(node as usize)))
+        }
+        ManagerRequest::Flush => {
+            svc.flush();
+            ManagerResponse::Ok
+        }
+        ManagerRequest::CacheStats => ManagerResponse::Stats(svc.cache_stats()),
+        ManagerRequest::Counters => ManagerResponse::Counters(svc.counters()),
+        ManagerRequest::FailNode { node } => {
+            ManagerResponse::Count(svc.fail_node(NodeId(node as usize)) as u64)
+        }
+        ManagerRequest::JoinNode { node } => {
+            ManagerResponse::Count(svc.join_node(NodeId(node as usize)) as u64)
+        }
+        ManagerRequest::IsAlive { node } => {
+            ManagerResponse::Bool(svc.is_alive(NodeId(node as usize)))
+        }
+        ManagerRequest::BackendUsedBytes => ManagerResponse::U64s(svc.backend_used_bytes()),
+        ManagerRequest::Shutdown => {
+            svc.shutdown_store();
+            ManagerResponse::Ok
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::Registry;
+
+    fn round_trip_node(req: NodeRequest) {
+        let decoded = NodeRequest::decode(&req.encode()).unwrap();
+        assert_eq!(req, decoded);
+    }
+
+    fn round_trip_mgr(req: ManagerRequest) {
+        let decoded = ManagerRequest::decode(&req.encode()).unwrap();
+        assert_eq!(req, decoded);
+    }
+
+    #[test]
+    fn frames_round_trip_and_reject_corruption() {
+        let payload = b"the quick brown fox".to_vec();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        assert_eq!(read_frame(&mut buf.as_slice()).unwrap(), payload);
+
+        // Bit-flip in the payload → checksum mismatch.
+        let mut corrupt = buf.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0x40;
+        assert_eq!(
+            read_frame(&mut corrupt.as_slice()),
+            Err(ProtoError::BadChecksum)
+        );
+
+        // Truncated mid-payload.
+        let cut = &buf[..buf.len() - 3];
+        assert_eq!(read_frame(&mut &cut[..]), Err(ProtoError::Truncated));
+
+        // Truncated mid-header.
+        assert_eq!(read_frame(&mut &buf[..2]), Err(ProtoError::Truncated));
+
+        // Clean EOF before any byte → disconnect, not truncation.
+        assert_eq!(read_frame(&mut &buf[..0]), Err(ProtoError::Disconnected));
+
+        // Oversized length field, rejected before allocation.
+        let mut huge = (FRAME_MAX + 1).to_le_bytes().to_vec();
+        huge.extend_from_slice(&[0u8; 8]);
+        assert_eq!(
+            read_frame(&mut huge.as_slice()),
+            Err(ProtoError::Oversized((FRAME_MAX + 1) as u64))
+        );
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        round_trip_node(NodeRequest::Ping);
+        round_trip_node(NodeRequest::Put {
+            key: (FileId(7), 3),
+            bytes: vec![1, 2, 3],
+        });
+        round_trip_node(NodeRequest::Get { key: (FileId(1), 0) });
+        round_trip_node(NodeRequest::Delete { key: (FileId(2), 9) });
+        round_trip_node(NodeRequest::Contains { key: (FileId(3), 1) });
+        round_trip_node(NodeRequest::Stat);
+        round_trip_node(NodeRequest::ChunkKeys);
+        round_trip_node(NodeRequest::Maintain);
+        round_trip_node(NodeRequest::Info);
+        round_trip_node(NodeRequest::Shutdown);
+
+        for resp in [
+            NodeResponse::Ok,
+            NodeResponse::Bool(true),
+            NodeResponse::Chunk(Some(vec![9, 9])),
+            NodeResponse::Chunk(None),
+            NodeResponse::Stat {
+                used_bytes: 10,
+                chunk_count: 2,
+                read_errors: 1,
+            },
+            NodeResponse::Keys(vec![(FileId(1), 0), (FileId(2), 5)]),
+            NodeResponse::Info {
+                backend: BackendKind::Seg,
+                chunks_recovered: 4,
+                bytes_recovered: 4096,
+            },
+            NodeResponse::Err(StorageError::NoSpace(123)),
+            NodeResponse::Malformed(ProtoError::UnknownOp(200)),
+        ] {
+            let (decoded, depth) = NodeResponse::decode(&resp.encode(42)).unwrap();
+            assert_eq!(decoded, resp);
+            assert_eq!(depth, 42, "io_depth trailer survives the trip");
+        }
+
+        round_trip_mgr(ManagerRequest::Hello);
+        round_trip_mgr(ManagerRequest::WriteFile {
+            client: 1,
+            path: "/a/b".into(),
+            tags: TagSet::from_pairs([("Replication", "2")]),
+            data: vec![0xAB; 100],
+        });
+        round_trip_mgr(ManagerRequest::ReadFile {
+            client: 0,
+            path: "/a/b".into(),
+        });
+        round_trip_mgr(ManagerRequest::GetAttr {
+            path: "/a".into(),
+            key: "location".into(),
+        });
+        round_trip_mgr(ManagerRequest::Counters);
+        round_trip_mgr(ManagerRequest::Shutdown);
+
+        let stats = CacheStats {
+            resident: vec![1, 2, 3],
+            hits: 7,
+            put_p99_us: 1.5,
+            ..CacheStats::default()
+        };
+        match ManagerResponse::decode(&ManagerResponse::Stats(stats.clone()).encode()).unwrap() {
+            ManagerResponse::Stats(s) => {
+                assert_eq!(s.resident, stats.resident);
+                assert_eq!(s.hits, 7);
+                assert_eq!(s.put_p99_us, 1.5);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_ops_and_bad_payloads_are_typed_errors() {
+        assert_eq!(NodeRequest::decode(&[250]), Err(ProtoError::UnknownOp(250)));
+        assert_eq!(
+            ManagerRequest::decode(&[99]),
+            Err(ProtoError::UnknownOp(99))
+        );
+        // A put op with a short body.
+        assert!(matches!(
+            NodeRequest::decode(&[NODE_OP_PUT, 1, 2]),
+            Err(ProtoError::BadPayload(_))
+        ));
+        // Trailing garbage after a complete message is drift, not noise.
+        let mut payload = NodeRequest::Ping.encode();
+        payload.push(0);
+        assert!(matches!(
+            NodeRequest::decode(&payload),
+            Err(ProtoError::BadPayload(_))
+        ));
+        assert!(NodeRequest::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn typed_dispatch_matches_direct_store_calls() {
+        // The in-process transport equivalence: the same operations
+        // through `encode → decode → dispatch_manager` and through
+        // direct method calls must leave two stores with identical
+        // observable state.
+        let direct = LiveStore::new(Registry::woss(), 3, u64::MAX / 2);
+        let routed = LiveStore::new(Registry::woss(), 3, u64::MAX / 2);
+        let via_wire = |req: ManagerRequest| {
+            let payload = req.encode();
+            let req = ManagerRequest::decode(&payload).unwrap();
+            let resp = dispatch_manager(&routed, req);
+            ManagerResponse::decode(&resp.encode()).unwrap()
+        };
+
+        let tags = TagSet::from_pairs([("Replication", "2"), ("RepSmntc", "optimistic")]);
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        for f in 0..8 {
+            let path = format!("/eq/f{f}");
+            direct
+                .write_file(NodeId(f % 3), &path, &data, &tags)
+                .unwrap();
+            match via_wire(ManagerRequest::WriteFile {
+                client: (f % 3) as u64,
+                path: path.clone(),
+                tags: tags.clone(),
+                data: data.clone(),
+            }) {
+                ManagerResponse::Ok => {}
+                other => panic!("routed write failed: {other:?}"),
+            }
+        }
+        direct.flush_replication();
+        assert!(matches!(via_wire(ManagerRequest::Flush), ManagerResponse::Ok));
+
+        for f in 0..8 {
+            let path = format!("/eq/f{f}");
+            let a = direct.read_file(NodeId(0), &path).unwrap();
+            let b = match via_wire(ManagerRequest::ReadFile {
+                client: 0,
+                path: path.clone(),
+            }) {
+                ManagerResponse::Bytes(b) => b,
+                other => panic!("routed read failed: {other:?}"),
+            };
+            assert_eq!(a, b, "bytes identical through the typed boundary");
+            let la: Vec<u64> = direct.locations(&path).iter().map(|n| n.0 as u64).collect();
+            let lb = match via_wire(ManagerRequest::Locations { path }) {
+                ManagerResponse::Nodes(ns) => ns,
+                other => panic!("routed locations failed: {other:?}"),
+            };
+            assert_eq!(la, lb, "placement identical through the typed boundary");
+        }
+        assert_eq!(
+            direct.backend_used_bytes(),
+            match via_wire(ManagerRequest::BackendUsedBytes) {
+                ManagerResponse::U64s(v) => v,
+                other => panic!("{other:?}"),
+            }
+        );
+        let ca = ManagerService::counters(&direct);
+        let cb = match via_wire(ManagerRequest::Counters) {
+            ManagerResponse::Counters(c) => c,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(ca.bytes_written, cb.bytes_written);
+        assert_eq!(ca.local_reads + ca.remote_reads, cb.local_reads + cb.remote_reads);
+    }
+}

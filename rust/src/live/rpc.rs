@@ -1,0 +1,1076 @@
+//! Socket transport for the [`super::proto`] service boundary: real
+//! `woss managerd` / `woss noded` daemons over TCP or Unix sockets.
+//!
+//! Three pieces live here:
+//!
+//! * **Servers** — [`serve_node`] / [`serve_manager`] accept
+//!   connections on an [`RpcAddr`] and speak the framed protocol,
+//!   thread-per-connection. A hostile frame gets a typed `Malformed`
+//!   reply and the connection is closed; the daemon never panics,
+//!   never hangs on a half-open peer (mid-frame reads run under a
+//!   deadline), and never leaks the connection.
+//! * **Clients** — [`RemoteBackend`] is a [`ChunkBackend`] whose node
+//!   lives in another process: every response's `io_depth` trailer
+//!   updates the local load signal, so adaptive placement sees remote
+//!   queues without extra round-trips. [`RemoteStore`] is the
+//!   manager-side client the engine drives through
+//!   [`super::proto::ManagerService`].
+//! * **[`Cluster`]** — the process supervisor: spawns `woss noded`
+//!   daemons, probes them ready, and implements
+//!   [`NodeSupervisor`] so [`LiveStore::fail_node`] SIGKILLs the real
+//!   process and [`LiveStore::join_node`] brings it back with
+//!   `--reopen` salvage on persistent backends.
+
+use super::backend::{BackendKind, ChunkBackend, ChunkKey};
+use super::proto::{
+    read_at_boundary, read_frame, read_frame_rest, write_frame, ManagerInfo, ManagerRequest,
+    ManagerResponse, ManagerService, NodeRequest, NodeResponse, NodeService, ProtoError,
+    StoreCounters,
+};
+use super::store::{CacheStats, LiveStore, NodeSupervisor};
+use crate::hints::TagSet;
+use crate::storage::types::{NodeId, StorageError};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Deadline for the *rest* of a frame once its first bytes arrived — a
+/// peer that goes silent mid-frame is treated as truncated, not waited
+/// on forever.
+const MID_FRAME_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Deadline for one client round-trip's response read. Generous: a
+/// manager `Flush` barrier legitimately takes a while.
+const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// How long [`Cluster::spawn`] / restart waits for a daemon's Ping.
+const READY_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A daemon endpoint: `unix:/path/to.sock` or `tcp:host:port`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RpcAddr {
+    /// A Unix-domain socket path.
+    Unix(PathBuf),
+    /// A TCP `host:port`.
+    Tcp(String),
+}
+
+impl FromStr for RpcAddr {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            if path.is_empty() {
+                return Err("empty unix socket path".into());
+            }
+            Ok(RpcAddr::Unix(PathBuf::from(path)))
+        } else if let Some(hp) = s.strip_prefix("tcp:") {
+            if !hp.contains(':') {
+                return Err(format!("tcp address '{hp}' is not host:port"));
+            }
+            Ok(RpcAddr::Tcp(hp.to_string()))
+        } else {
+            Err(format!(
+                "address '{s}' must be unix:<path> or tcp:<host>:<port>"
+            ))
+        }
+    }
+}
+
+impl std::fmt::Display for RpcAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RpcAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+            RpcAddr::Tcp(hp) => write!(f, "tcp:{hp}"),
+        }
+    }
+}
+
+/// One connected socket of either family, with uniform deadline
+/// control.
+enum Stream {
+    /// Unix-domain connection.
+    Unix(UnixStream),
+    /// TCP connection (`NODELAY` — frames are latency-bound).
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    fn connect(addr: &RpcAddr) -> std::io::Result<Stream> {
+        match addr {
+            RpcAddr::Unix(path) => Ok(Stream::Unix(UnixStream::connect(path)?)),
+            RpcAddr::Tcp(hp) => {
+                let s = TcpStream::connect(hp.as_str())?;
+                let _ = s.set_nodelay(true);
+                Ok(Stream::Tcp(s))
+            }
+        }
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) {
+        match self {
+            Stream::Unix(s) => {
+                let _ = s.set_read_timeout(t);
+            }
+            Stream::Tcp(s) => {
+                let _ = s.set_read_timeout(t);
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn bind(addr: &RpcAddr) -> std::io::Result<Listener> {
+        match addr {
+            RpcAddr::Unix(path) => {
+                // A previous daemon's socket file would make the bind
+                // fail; it names nothing alive (connects would have
+                // found it) so replace it.
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)?;
+                l.set_nonblocking(true)?;
+                Ok(Listener::Unix(l))
+            }
+            RpcAddr::Tcp(hp) => {
+                let l = TcpListener::bind(hp.as_str())?;
+                l.set_nonblocking(true)?;
+                Ok(Listener::Tcp(l))
+            }
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(Stream::Unix(s))
+            }
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                let _ = s.set_nodelay(true);
+                Ok(Stream::Tcp(s))
+            }
+        }
+    }
+}
+
+/// A running daemon server. Dropping it (or calling
+/// [`Server::wait`] after a Shutdown request) stops the accept loop;
+/// in-flight connections finish their current frame.
+pub struct Server {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    addr: RpcAddr,
+}
+
+impl Server {
+    /// The address this server listens on.
+    pub fn addr(&self) -> &RpcAddr {
+        &self.addr
+    }
+
+    /// Ask the accept loop to stop (in-flight connections drain).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the accept loop exits — i.e. until something sets
+    /// the stop flag: [`Server::stop`], drop, or a `Shutdown` request
+    /// from a client. This is a daemon main loop's last line.
+    pub fn wait(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        if let RpcAddr::Unix(path) = &self.addr {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// One server read: block at the frame boundary, then finish the frame
+/// under [`MID_FRAME_TIMEOUT`].
+fn server_read_frame(stream: &mut Stream) -> Result<Vec<u8>, ProtoError> {
+    stream.set_read_timeout(None);
+    let mut len_bytes = [0u8; 4];
+    read_at_boundary(stream, &mut len_bytes)?;
+    stream.set_read_timeout(Some(MID_FRAME_TIMEOUT));
+    read_frame_rest(stream, len_bytes)
+}
+
+/// One connection's reply to one inbound event: the encoded reply
+/// frame plus whether to close the connection after sending it. The
+/// handler receives framing errors too (`Err` input) so each dialect
+/// encodes its *own* `Malformed` variant — the node and manager enums
+/// are distinct on the wire.
+type ConnReply = (Vec<u8>, bool);
+
+fn serve_loop<H>(addr: RpcAddr, stop: Arc<AtomicBool>, handler: Arc<H>) -> std::io::Result<Server>
+where
+    H: Fn(Result<Vec<u8>, ProtoError>, &Arc<AtomicBool>) -> ConnReply + Send + Sync + 'static,
+{
+    let listener = Listener::bind(&addr)?;
+    let stop_accept = Arc::clone(&stop);
+    let handle = std::thread::Builder::new()
+        .name("woss-rpc-accept".into())
+        .spawn(move || {
+            while !stop_accept.load(Ordering::SeqCst) {
+                let mut stream = match listener.accept() {
+                    Ok(s) => s,
+                    Err(_) => {
+                        // WouldBlock (nothing pending) or a transient
+                        // accept error: poll the stop flag and retry.
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    }
+                };
+                let handler = Arc::clone(&handler);
+                let stop = Arc::clone(&stop_accept);
+                // Thread-per-connection; the thread owns the stream
+                // and exits on the first framing error or disconnect,
+                // so a hostile client costs one closed socket, nothing
+                // more.
+                let _ = std::thread::Builder::new()
+                    .name("woss-rpc-conn".into())
+                    .spawn(move || {
+                        while !stop.load(Ordering::SeqCst) {
+                            let event = match server_read_frame(&mut stream) {
+                                Err(ProtoError::Disconnected) => return,
+                                other => other,
+                            };
+                            let was_err = event.is_err();
+                            let (payload, close) = handler(event, &stop);
+                            if was_err {
+                                // Typed error back to the peer (best
+                                // effort), then drop the connection —
+                                // a malformed stream has no
+                                // recoverable framing.
+                                let _ = write_frame(&mut stream, &payload);
+                                return;
+                            }
+                            if write_frame(&mut stream, &payload).is_err() || close {
+                                return;
+                            }
+                        }
+                    });
+            }
+        })?;
+    Ok(Server {
+        stop,
+        handle: Some(handle),
+        addr,
+    })
+}
+
+/// Serve a [`NodeService`] on `addr`. Returns once the listener is
+/// bound; the accept loop runs until [`Server::stop`] or a client's
+/// `Shutdown` request.
+pub fn serve_node(addr: RpcAddr, svc: Arc<dyn NodeService>) -> std::io::Result<Server> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let handler = Arc::new(
+        move |event: Result<Vec<u8>, ProtoError>, stop: &Arc<AtomicBool>| {
+            let req = match event.and_then(|p| NodeRequest::decode(&p)) {
+                Ok(req) => req,
+                Err(err) => {
+                    return (NodeResponse::Malformed(err).encode(svc.io_depth()), true);
+                }
+            };
+            let shutdown = req == NodeRequest::Shutdown;
+            if shutdown {
+                stop.store(true, Ordering::SeqCst);
+            }
+            let resp = svc.handle(req);
+            (resp.encode(svc.io_depth()), shutdown)
+        },
+    );
+    serve_loop(addr, stop, handler)
+}
+
+/// Serve a [`ManagerService`] on `addr`. A client `Shutdown` request
+/// runs the store's clean shutdown, replies `Ok`, and stops the
+/// server.
+pub fn serve_manager(addr: RpcAddr, svc: Arc<dyn ManagerService>) -> std::io::Result<Server> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let handler = Arc::new(
+        move |event: Result<Vec<u8>, ProtoError>, stop: &Arc<AtomicBool>| {
+            let req = match event.and_then(|p| ManagerRequest::decode(&p)) {
+                Ok(req) => req,
+                Err(err) => return (ManagerResponse::Malformed(err).encode(), true),
+            };
+            let shutdown = req == ManagerRequest::Shutdown;
+            if shutdown {
+                stop.store(true, Ordering::SeqCst);
+            }
+            let resp = super::proto::dispatch_manager(svc.as_ref(), req);
+            (resp.encode(), shutdown)
+        },
+    );
+    serve_loop(addr, stop, handler)
+}
+
+/// A small pool of connected streams to one daemon. Concurrent callers
+/// each pop (or dial) their own connection and return it on success;
+/// a failed call's connection is dropped, not pooled.
+struct ConnPool {
+    addr: RpcAddr,
+    idle: Mutex<Vec<Stream>>,
+}
+
+impl ConnPool {
+    fn new(addr: RpcAddr) -> Self {
+        ConnPool {
+            addr,
+            idle: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// One framed round-trip. A stale pooled connection (the peer
+    /// restarted since it was pooled) fails the first attempt; one
+    /// reconnect-and-retry covers it — every request in both dialects
+    /// is idempotent, so the retry is safe even if the first attempt's
+    /// request landed.
+    fn call(&self, request: &[u8]) -> Result<Vec<u8>, ProtoError> {
+        let pooled = self.idle.lock().unwrap().pop();
+        let retry_budget = if pooled.is_some() { 2 } else { 1 };
+        let mut stream = pooled;
+        let mut last_err = ProtoError::Disconnected;
+        for _ in 0..retry_budget {
+            let mut s = match stream.take() {
+                Some(s) => s,
+                None => match Stream::connect(&self.addr) {
+                    Ok(s) => s,
+                    Err(e) => return Err(ProtoError::Io(e.to_string())),
+                },
+            };
+            s.set_read_timeout(Some(CLIENT_READ_TIMEOUT));
+            match write_frame(&mut s, request).and_then(|()| read_frame(&mut s)) {
+                Ok(reply) => {
+                    self.idle.lock().unwrap().push(s);
+                    return Ok(reply);
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Drop every pooled connection (the peer is known dead).
+    fn clear(&self) {
+        self.idle.lock().unwrap().clear();
+    }
+}
+
+/// A [`ChunkBackend`] whose node lives in another process, behind a
+/// `woss noded` daemon. Every reply's `io_depth` trailer refreshes the
+/// locally cached load signal, so the adaptive plane reads remote
+/// queue depth for free. When the daemon is dead (a real
+/// `fail_node`), operations degrade the way the churn machinery
+/// expects: reads fail over, metadata queries report empty, deletes
+/// are deferred to the rejoin sweep.
+pub struct RemoteBackend {
+    pool: ConnPool,
+    /// Last `io_depth` trailer seen from this node.
+    last_depth: AtomicU64,
+    /// Round-trips that failed against a present daemon — folded into
+    /// [`ChunkBackend::read_errors`] alongside what the daemon itself
+    /// reports.
+    local_errors: AtomicU64,
+}
+
+impl RemoteBackend {
+    /// A proxy speaking to the node daemon at `addr`.
+    pub fn connect(addr: RpcAddr) -> Self {
+        RemoteBackend {
+            pool: ConnPool::new(addr),
+            last_depth: AtomicU64::new(0),
+            local_errors: AtomicU64::new(0),
+        }
+    }
+
+    /// Drop pooled connections (the daemon was killed or restarted).
+    pub fn reset_connections(&self) {
+        self.pool.clear();
+    }
+
+    fn call(&self, req: &NodeRequest) -> Result<NodeResponse, ProtoError> {
+        let reply = self.pool.call(&req.encode())?;
+        let (resp, depth) = NodeResponse::decode(&reply)?;
+        self.last_depth.store(depth, Ordering::Relaxed);
+        Ok(resp)
+    }
+}
+
+impl ChunkBackend for RemoteBackend {
+    fn put(&self, key: ChunkKey, bytes: &[u8]) -> Result<(), StorageError> {
+        match self.call(&NodeRequest::Put {
+            key,
+            bytes: bytes.to_vec(),
+        }) {
+            Ok(NodeResponse::Ok) => Ok(()),
+            Ok(NodeResponse::Err(e)) => Err(e),
+            Ok(other) => Err(StorageError::Invalid(format!(
+                "unexpected put reply: {other:?}"
+            ))),
+            Err(e) => Err(StorageError::Invalid(format!("node unreachable: {e}"))),
+        }
+    }
+
+    fn get(&self, key: ChunkKey) -> Result<Option<Vec<u8>>, StorageError> {
+        match self.call(&NodeRequest::Get { key }) {
+            Ok(NodeResponse::Chunk(c)) => Ok(c),
+            Ok(NodeResponse::Err(e)) => Err(e),
+            Ok(other) => Err(StorageError::Invalid(format!(
+                "unexpected get reply: {other:?}"
+            ))),
+            Err(e) => {
+                // A dead daemon's copy is *lost*, not absent: the read
+                // path must fail over to another holder, exactly as for
+                // a local disk fault.
+                self.local_errors.fetch_add(1, Ordering::Relaxed);
+                Err(StorageError::Invalid(format!("node unreachable: {e}")))
+            }
+        }
+    }
+
+    fn delete(&self, key: ChunkKey) {
+        // Best effort: a dead daemon's stale chunks are swept by the
+        // join_node reconciliation after it restarts.
+        let _ = self.call(&NodeRequest::Delete { key });
+    }
+
+    fn contains(&self, key: ChunkKey) -> bool {
+        matches!(
+            self.call(&NodeRequest::Contains { key }),
+            Ok(NodeResponse::Bool(true))
+        )
+    }
+
+    fn used_bytes(&self) -> u64 {
+        match self.call(&NodeRequest::Stat) {
+            Ok(NodeResponse::Stat { used_bytes, .. }) => used_bytes,
+            _ => 0,
+        }
+    }
+
+    fn chunk_count(&self) -> usize {
+        match self.call(&NodeRequest::Stat) {
+            Ok(NodeResponse::Stat { chunk_count, .. }) => chunk_count as usize,
+            _ => 0,
+        }
+    }
+
+    fn read_errors(&self) -> u64 {
+        let remote = match self.call(&NodeRequest::Stat) {
+            Ok(NodeResponse::Stat { read_errors, .. }) => read_errors,
+            _ => 0,
+        };
+        remote + self.local_errors.load(Ordering::Relaxed)
+    }
+
+    fn chunk_keys(&self) -> Vec<ChunkKey> {
+        match self.call(&NodeRequest::ChunkKeys) {
+            Ok(NodeResponse::Keys(keys)) => keys,
+            _ => Vec::new(),
+        }
+    }
+
+    fn maintain(&self) -> bool {
+        matches!(
+            self.call(&NodeRequest::Maintain),
+            Ok(NodeResponse::Bool(true))
+        )
+    }
+
+    fn io_depth(&self) -> u64 {
+        // No round-trip: the trailer on every reply keeps this fresh.
+        self.last_depth.load(Ordering::Relaxed)
+    }
+}
+
+/// The manager-side client: a [`ManagerService`] implementation that
+/// frames each call to a `woss managerd` daemon. The engine drives it
+/// through [`super::engine::StoreHandle`] exactly as it drives an
+/// in-process [`LiveStore`].
+pub struct RemoteStore {
+    pool: ConnPool,
+    info: ManagerInfo,
+}
+
+impl RemoteStore {
+    /// Connect to `addr` and complete the `Hello` handshake (the
+    /// static deployment facts are cached — they never change).
+    pub fn connect(addr: RpcAddr) -> Result<Self, StorageError> {
+        let pool = ConnPool::new(addr);
+        let reply = pool
+            .call(&ManagerRequest::Hello.encode())
+            .map_err(|e| StorageError::Invalid(format!("manager unreachable: {e}")))?;
+        let info = match ManagerResponse::decode(&reply) {
+            Ok(ManagerResponse::Info(info)) => info,
+            Ok(other) => {
+                return Err(StorageError::Invalid(format!(
+                    "unexpected hello reply: {other:?}"
+                )))
+            }
+            Err(e) => return Err(StorageError::Invalid(format!("hello failed: {e}"))),
+        };
+        Ok(RemoteStore { pool, info })
+    }
+
+    fn call(&self, req: &ManagerRequest) -> ManagerResponse {
+        match self.pool.call(&req.encode()) {
+            Ok(reply) => match ManagerResponse::decode(&reply) {
+                Ok(resp) => resp,
+                Err(e) => ManagerResponse::Err(StorageError::Invalid(format!(
+                    "undecodable manager reply: {e}"
+                ))),
+            },
+            Err(e) => {
+                ManagerResponse::Err(StorageError::Invalid(format!("manager unreachable: {e}")))
+            }
+        }
+    }
+
+    fn expect_err(resp: ManagerResponse, what: &str) -> StorageError {
+        match resp {
+            ManagerResponse::Err(e) => e,
+            other => StorageError::Invalid(format!("unexpected {what} reply: {other:?}")),
+        }
+    }
+}
+
+impl ManagerService for RemoteStore {
+    fn hello(&self) -> ManagerInfo {
+        self.info
+    }
+
+    fn write_file(
+        &self,
+        client: NodeId,
+        path: &str,
+        data: &[u8],
+        tags: &TagSet,
+    ) -> Result<(), StorageError> {
+        match self.call(&ManagerRequest::WriteFile {
+            client: client.0 as u64,
+            path: path.to_string(),
+            tags: tags.clone(),
+            data: data.to_vec(),
+        }) {
+            ManagerResponse::Ok => Ok(()),
+            other => Err(Self::expect_err(other, "write")),
+        }
+    }
+
+    fn read_file(&self, client: NodeId, path: &str) -> Result<Vec<u8>, StorageError> {
+        match self.call(&ManagerRequest::ReadFile {
+            client: client.0 as u64,
+            path: path.to_string(),
+        }) {
+            ManagerResponse::Bytes(b) => Ok(b),
+            other => Err(Self::expect_err(other, "read")),
+        }
+    }
+
+    fn delete_file(&self, path: &str) -> Result<(), StorageError> {
+        match self.call(&ManagerRequest::Delete {
+            path: path.to_string(),
+        }) {
+            ManagerResponse::Ok => Ok(()),
+            other => Err(Self::expect_err(other, "delete")),
+        }
+    }
+
+    fn set_attr(&self, path: &str, key: &str, value: &str) {
+        let _ = self.call(&ManagerRequest::SetAttr {
+            path: path.to_string(),
+            key: key.to_string(),
+            value: value.to_string(),
+        });
+    }
+
+    fn get_attr(&self, path: &str, key: &str) -> Option<String> {
+        match self.call(&ManagerRequest::GetAttr {
+            path: path.to_string(),
+            key: key.to_string(),
+        }) {
+            ManagerResponse::Attr(a) => a,
+            _ => None,
+        }
+    }
+
+    fn file_size(&self, path: &str) -> Option<u64> {
+        match self.call(&ManagerRequest::FileSize {
+            path: path.to_string(),
+        }) {
+            ManagerResponse::Size(s) => s,
+            _ => None,
+        }
+    }
+
+    fn locations(&self, path: &str) -> Vec<NodeId> {
+        match self.call(&ManagerRequest::Locations {
+            path: path.to_string(),
+        }) {
+            ManagerResponse::Nodes(ns) => ns.into_iter().map(|n| NodeId(n as usize)).collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    fn prefetch(&self, client: NodeId, path: &str) -> Result<usize, StorageError> {
+        match self.call(&ManagerRequest::Prefetch {
+            client: client.0 as u64,
+            path: path.to_string(),
+        }) {
+            ManagerResponse::Count(n) => Ok(n as usize),
+            other => Err(Self::expect_err(other, "prefetch")),
+        }
+    }
+
+    fn node_read_cost(&self, node: NodeId) -> f64 {
+        match self.call(&ManagerRequest::NodeReadCost {
+            node: node.0 as u64,
+        }) {
+            ManagerResponse::F64(v) => v,
+            _ => f64::INFINITY,
+        }
+    }
+
+    fn flush(&self) {
+        let _ = self.call(&ManagerRequest::Flush);
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        match self.call(&ManagerRequest::CacheStats) {
+            ManagerResponse::Stats(s) => s,
+            _ => CacheStats::default(),
+        }
+    }
+
+    fn counters(&self) -> StoreCounters {
+        match self.call(&ManagerRequest::Counters) {
+            ManagerResponse::Counters(c) => c,
+            _ => StoreCounters::default(),
+        }
+    }
+
+    fn fail_node(&self, node: NodeId) -> usize {
+        match self.call(&ManagerRequest::FailNode {
+            node: node.0 as u64,
+        }) {
+            ManagerResponse::Count(n) => n as usize,
+            _ => 0,
+        }
+    }
+
+    fn join_node(&self, node: NodeId) -> usize {
+        match self.call(&ManagerRequest::JoinNode {
+            node: node.0 as u64,
+        }) {
+            ManagerResponse::Count(n) => n as usize,
+            _ => 0,
+        }
+    }
+
+    fn is_alive(&self, node: NodeId) -> bool {
+        matches!(
+            self.call(&ManagerRequest::IsAlive {
+                node: node.0 as u64,
+            }),
+            ManagerResponse::Bool(true)
+        )
+    }
+
+    fn backend_used_bytes(&self) -> Vec<u64> {
+        match self.call(&ManagerRequest::BackendUsedBytes) {
+            ManagerResponse::U64s(v) => v,
+            _ => Vec::new(),
+        }
+    }
+
+    fn shutdown_store(&self) {
+        let _ = self.call(&ManagerRequest::Shutdown);
+    }
+}
+
+/// Probe `addr` with `Ping` until the daemon answers or `deadline`
+/// passes.
+pub fn wait_ready(addr: &RpcAddr, deadline: Instant) -> Result<(), String> {
+    loop {
+        if let Ok(mut s) = Stream::connect(addr) {
+            s.set_read_timeout(Some(Duration::from_secs(2)));
+            let ping = NodeRequest::Ping.encode();
+            if write_frame(&mut s, &ping).is_ok() {
+                if let Ok(reply) = read_frame(&mut s) {
+                    if matches!(NodeResponse::decode(&reply), Ok((NodeResponse::Ok, _))) {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+        if Instant::now() >= deadline {
+            return Err(format!("daemon at {addr} not ready in time"));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Remove-on-drop directory (the cluster's sockets, and its data tree
+/// when the caller did not supply one).
+struct RmDir(PathBuf);
+
+impl Drop for RmDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+static CLUSTER_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One spawned node daemon and what it needs to come back.
+struct NodeProc {
+    addr: RpcAddr,
+    data_dir: Option<PathBuf>,
+    child: Option<std::process::Child>,
+}
+
+/// The node-tier process supervisor: spawns one `woss noded` per node
+/// over Unix sockets, probes them ready, and (as the store's
+/// [`NodeSupervisor`]) turns `fail_node` into a real SIGKILL and
+/// `join_node` into a respawn — with `--reopen` salvage on persistent
+/// backends, exercising the exact recovery path a crashed node takes.
+pub struct Cluster {
+    nodes: Mutex<Vec<NodeProc>>,
+    backend: BackendKind,
+    bin: PathBuf,
+    sock_dir: RmDir,
+    /// Cluster-owned data tree guard (when the caller supplied none);
+    /// held only for its Drop.
+    owned_data: Option<RmDir>,
+}
+
+impl Cluster {
+    /// Spawn `n` node daemons on backend `backend`. `data_root`, when
+    /// given, hosts one `rnode<i>/` per daemon and survives the
+    /// cluster; `None` uses a cluster-owned tempdir (persistent
+    /// backends only — the memory backend needs no disk either way).
+    /// The daemon binary is `$WOSS_BIN` when set (integration tests
+    /// point it at the cargo-built binary), else the current
+    /// executable.
+    pub fn spawn(
+        n: usize,
+        backend: BackendKind,
+        data_root: Option<&Path>,
+    ) -> Result<Arc<Cluster>, String> {
+        let bin = match std::env::var_os("WOSS_BIN") {
+            Some(p) => PathBuf::from(p),
+            None => std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?,
+        };
+        let seq = CLUSTER_SEQ.fetch_add(1, Ordering::Relaxed);
+        let sock_dir = std::env::temp_dir().join(format!(
+            "woss-cluster-{}-{seq}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&sock_dir).map_err(|e| format!("create {sock_dir:?}: {e}"))?;
+        let sock_dir = RmDir(sock_dir);
+        let (data_root_path, owned_data) = if backend.is_persistent() {
+            match data_root {
+                Some(p) => {
+                    std::fs::create_dir_all(p).map_err(|e| format!("create {p:?}: {e}"))?;
+                    (Some(p.to_path_buf()), None)
+                }
+                None => {
+                    let d = std::env::temp_dir().join(format!(
+                        "woss-cluster-data-{}-{seq}",
+                        std::process::id()
+                    ));
+                    std::fs::create_dir_all(&d).map_err(|e| format!("create {d:?}: {e}"))?;
+                    (Some(d.clone()), Some(RmDir(d)))
+                }
+            }
+        } else {
+            (None, None)
+        };
+        let cluster = Cluster {
+            nodes: Mutex::new(Vec::with_capacity(n)),
+            backend,
+            bin,
+            sock_dir,
+            owned_data,
+        };
+        {
+            let mut nodes = cluster.nodes.lock().unwrap();
+            for i in 0..n {
+                let addr = RpcAddr::Unix(cluster.sock_dir.0.join(format!("node{i}.sock")));
+                let data_dir = data_root_path.as_ref().map(|r| r.join(format!("rnode{i}")));
+                let child = cluster.launch(&addr, data_dir.as_deref(), false)?;
+                nodes.push(NodeProc {
+                    addr,
+                    data_dir,
+                    child: Some(child),
+                });
+            }
+            let deadline = Instant::now() + READY_TIMEOUT;
+            for p in nodes.iter() {
+                wait_ready(&p.addr, deadline)?;
+            }
+        }
+        Ok(Arc::new(cluster))
+    }
+
+    fn launch(
+        &self,
+        addr: &RpcAddr,
+        data_dir: Option<&Path>,
+        reopen: bool,
+    ) -> Result<std::process::Child, String> {
+        let mut cmd = std::process::Command::new(&self.bin);
+        cmd.arg("noded")
+            .arg("--listen")
+            .arg(addr.to_string())
+            .arg("--backend")
+            .arg(self.backend.label());
+        if let Some(d) = data_dir {
+            cmd.arg("--data-dir").arg(d);
+        }
+        if reopen {
+            cmd.arg("--reopen");
+        }
+        cmd.stdin(std::process::Stdio::null());
+        cmd.spawn().map_err(|e| format!("spawn noded: {e}"))
+    }
+
+    /// Node daemon addresses, in node order.
+    pub fn addrs(&self) -> Vec<RpcAddr> {
+        self.nodes
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|p| p.addr.clone())
+            .collect()
+    }
+
+    /// The cluster-owned data tree, when [`Cluster::spawn`] created
+    /// one (removed when the cluster drops).
+    pub fn owned_data_root(&self) -> Option<&Path> {
+        self.owned_data.as_ref().map(|d| d.0.as_path())
+    }
+
+    /// A [`RemoteBackend`] per node, ready to hand to
+    /// [`LiveStore::with_backends`].
+    pub fn backends(&self) -> Vec<Box<dyn ChunkBackend>> {
+        self.addrs()
+            .into_iter()
+            .map(|a| Box::new(RemoteBackend::connect(a)) as Box<dyn ChunkBackend>)
+            .collect()
+    }
+
+    /// The chunk layout the daemons run.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// The daemon's OS pid, `None` after a kill.
+    pub fn pid(&self, node: usize) -> Option<u32> {
+        self.nodes.lock().unwrap()[node]
+            .child
+            .as_ref()
+            .map(|c| c.id())
+    }
+
+    /// SIGKILL node `i`'s daemon and reap it — a real process death,
+    /// not a simulation.
+    pub fn kill(&self, node: usize) {
+        let mut nodes = self.nodes.lock().unwrap();
+        if let Some(mut child) = nodes[node].child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    /// Respawn node `i`'s daemon. Persistent backends come back with
+    /// `--reopen` — the manifest/segment salvage path — because their
+    /// first launch already created a store in the data dir; the
+    /// memory backend restarts empty. Blocks until the daemon answers
+    /// its readiness probe.
+    pub fn restart(&self, node: usize) -> Result<(), String> {
+        let (addr, data_dir) = {
+            let mut nodes = self.nodes.lock().unwrap();
+            if let Some(mut child) = nodes[node].child.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            (nodes[node].addr.clone(), nodes[node].data_dir.clone())
+        };
+        let reopen = self.backend.is_persistent();
+        let child = self.launch(&addr, data_dir.as_deref(), reopen)?;
+        wait_ready(&addr, Instant::now() + READY_TIMEOUT)?;
+        self.nodes.lock().unwrap()[node].child = Some(child);
+        Ok(())
+    }
+}
+
+impl NodeSupervisor for Cluster {
+    fn node_down(&self, node: usize) {
+        self.kill(node);
+    }
+
+    fn node_up(&self, node: usize) -> Result<(), String> {
+        self.restart(node)
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        let mut nodes = self.nodes.lock().unwrap();
+        for p in nodes.iter_mut() {
+            if let Some(mut child) = p.child.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+/// Everything `woss managerd` needs to stand up: connect to every node
+/// daemon, ask one for the backend kind, and build the store over
+/// remote backends. Returns the store plus the layout the node tier
+/// reported.
+pub fn connect_node_tier(
+    addrs: &[RpcAddr],
+) -> Result<(Vec<Box<dyn ChunkBackend>>, BackendKind), String> {
+    if addrs.is_empty() {
+        return Err("managerd needs at least one node address".into());
+    }
+    let deadline = Instant::now() + READY_TIMEOUT;
+    for addr in addrs {
+        wait_ready(addr, deadline)?;
+    }
+    // The node tier's layout comes from the daemons themselves: probe
+    // the first one's Info.
+    let probe = RemoteBackend::connect(addrs[0].clone());
+    let kind = match probe.call(&NodeRequest::Info) {
+        Ok(NodeResponse::Info { backend, .. }) => backend,
+        other => return Err(format!("node info probe failed: {other:?}")),
+    };
+    let backends = addrs
+        .iter()
+        .map(|a| Box::new(RemoteBackend::connect(a.clone())) as Box<dyn ChunkBackend>)
+        .collect();
+    Ok((backends, kind))
+}
+
+/// Build a [`super::proto::NodeHost`] for `woss noded`: a fresh
+/// backend of `kind` (memory, or a new store under `data_dir`), or —
+/// with `reopen` — the salvage path over what a previous daemon (or a
+/// SIGKILLed one) left behind.
+pub fn open_node_host(
+    kind: BackendKind,
+    data_dir: Option<&Path>,
+    reopen: bool,
+) -> Result<super::proto::NodeHost, StorageError> {
+    use super::backend::{FileBackend, MemoryBackend, NodeRecovery, SegBackend};
+    let host = match kind {
+        BackendKind::Memory => super::proto::NodeHost::new(
+            Box::new(MemoryBackend::default()),
+            kind,
+            if reopen {
+                // A memory node has nothing to salvage; it restarts
+                // empty (its chunks re-replicate from the survivors).
+                Some(NodeRecovery::default())
+            } else {
+                None
+            },
+        ),
+        BackendKind::Disk | BackendKind::Seg => {
+            let dir = data_dir.ok_or_else(|| {
+                StorageError::Invalid(format!(
+                    "noded --backend {} needs --data-dir",
+                    kind.label()
+                ))
+            })?;
+            if reopen {
+                let (backend, rec): (Box<dyn ChunkBackend>, _) = match kind {
+                    BackendKind::Seg => {
+                        let (b, rec) = SegBackend::open_existing(dir)?;
+                        (Box::new(b), rec)
+                    }
+                    _ => {
+                        let (b, rec) = FileBackend::open_existing(dir)?;
+                        (Box::new(b), rec)
+                    }
+                };
+                super::proto::NodeHost::new(backend, kind, Some(rec))
+            } else {
+                let backend: Box<dyn ChunkBackend> = match kind {
+                    BackendKind::Seg => Box::new(SegBackend::new(dir)?),
+                    _ => Box::new(FileBackend::new(dir)?),
+                };
+                super::proto::NodeHost::new(backend, kind, None)
+            }
+        }
+    };
+    Ok(host)
+}
+
+/// Convenience for `woss managerd` and the scenario harness: a
+/// [`LiveStore`] over a remote node tier, with the cluster (when one
+/// is supervising) attached so churn crosses the process boundary.
+pub fn store_over_cluster(
+    registry: crate::dispatch::Registry,
+    cluster: &Arc<Cluster>,
+    capacity: u64,
+    tuning: super::store::LiveTuning,
+) -> LiveStore {
+    let store = LiveStore::with_backends(
+        registry,
+        cluster.backends(),
+        cluster.backend_kind(),
+        capacity,
+        tuning,
+    );
+    store.attach_supervisor(Arc::clone(cluster) as Arc<dyn NodeSupervisor>);
+    store
+}

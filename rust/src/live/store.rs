@@ -121,6 +121,7 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 /// Default chunk size for the live store (256 KiB = one kernel tile).
 pub const LIVE_CHUNK: u64 = 256 * 1024;
@@ -372,6 +373,13 @@ pub struct LiveTuning {
     /// decision byte-identical to the static store — the signals are
     /// still *collected* (cheap atomics), only the decisions change.
     pub adaptive: bool,
+    /// Deadline in milliseconds for the [`LiveStore::flush_replication`]
+    /// barrier (and the I/O-pool drain inside it). `None` — the default
+    /// — waits forever, exactly as before; with a deadline a wedged
+    /// worker or dead peer can no longer hang a client: the barrier
+    /// returns at the deadline and the miss is counted in
+    /// [`LiveStore::flush_timeouts`].
+    pub flush_timeout_ms: Option<u64>,
 }
 
 impl Default for LiveTuning {
@@ -387,6 +395,7 @@ impl Default for LiveTuning {
             fault: None,
             io_workers: 1,
             adaptive: false,
+            flush_timeout_ms: None,
         }
     }
 }
@@ -452,7 +461,7 @@ struct NodeCache {
 
 /// Observable cache-tier counters (see [`LiveStore::cache_stats`]).
 /// All zeros while the tier is disabled.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct CacheStats {
     /// Bytes currently resident per node cache.
     pub resident: Vec<u64>,
@@ -1387,6 +1396,24 @@ impl ReplPool {
         }
     }
 
+    /// [`ReplPool::flush`] with a give-up point: returns `true` when
+    /// the pool drained, `false` when `deadline` passed first. A wedged
+    /// worker (fault injection, dead remote peer) can no longer park a
+    /// client forever on the barrier.
+    fn flush_deadline(&self, deadline: Instant) -> bool {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !(q.jobs.is_empty() && q.in_flight.is_empty()) {
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return false;
+            };
+            if left.is_zero() {
+                return false;
+            }
+            q = self.shared.drained.wait_timeout(q, left).unwrap().0;
+        }
+        true
+    }
+
     /// Drop queued jobs for `file` and wait out its in-flight copies,
     /// so a subsequent chunk sweep cannot be resurrected by a straggler.
     fn cancel_file(&self, file: FileId) {
@@ -1770,6 +1797,22 @@ impl IoPool {
             q = self.shared.drained.wait(q).unwrap();
         }
     }
+
+    /// [`IoPool::flush`] with a give-up point: `true` when drained,
+    /// `false` when `deadline` passed first.
+    fn flush_deadline(&self, deadline: Instant) -> bool {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !(q.jobs.is_empty() && q.running == 0) {
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return false;
+            };
+            if left.is_zero() {
+                return false;
+            }
+            q = self.shared.drained.wait_timeout(q, left).unwrap().0;
+        }
+        true
+    }
 }
 
 impl Drop for IoPool {
@@ -1906,6 +1949,44 @@ impl std::ops::DerefMut for CoreGuard<'_> {
     }
 }
 
+/// Hook by which churn crosses the process boundary. In socket mode
+/// the cluster supervisor (`live::rpc::Cluster`) implements this:
+/// [`LiveStore::fail_node`] reports the kill so the supervisor SIGKILLs
+/// the actual `woss noded` process, and [`LiveStore::join_node`] asks
+/// it to respawn the daemon (`noded --reopen` on persistent backends)
+/// before the node is re-admitted to placement. The in-process default
+/// attaches no supervisor and behaves exactly as before.
+pub trait NodeSupervisor: Send + Sync {
+    /// The manager declared `node` dead; take its process down.
+    fn node_down(&self, node: usize);
+    /// The manager wants `node` back; bring its process up (blocking
+    /// until it serves) or say why it cannot come back.
+    fn node_up(&self, node: usize) -> Result<(), String>;
+}
+
+/// What varies between the store constructors — fresh
+/// ([`LiveStore::try_with_tuning`]), restart ([`LiveStore::reopen`]),
+/// caller-supplied backends ([`LiveStore::with_backends`]). The shared
+/// assembly tail wires the identical pool/cache/counter plumbing
+/// around these.
+struct StoreParts {
+    registry: Registry,
+    n_nodes: usize,
+    capacity: u64,
+    backends: Vec<Box<dyn ChunkBackend>>,
+    backend_kind: BackendKind,
+    data_root: Option<PathBuf>,
+    journal: Option<Mutex<AppendLog>>,
+    dir_guard: Option<DirGuard>,
+    /// Rebuilt namespace stripes (reopen) or `None` for fresh.
+    stripes: Option<Vec<NamespaceShard>>,
+    /// Rebuilt node states with recovered usage, or `None` for fresh.
+    nodes: Option<Vec<NodeState>>,
+    next_id: u64,
+    recovered_ids: HashSet<FileId>,
+    recovery: Option<RecoveryReport>,
+}
+
 /// The live object store.
 pub struct LiveStore {
     registry: Registry,
@@ -1994,6 +2075,17 @@ pub struct LiveStore {
     /// Shared fault-injection control when [`LiveTuning::fault`] is
     /// set (`None` on an undecorated store).
     faults: Option<Arc<FaultControl>>,
+    /// Process supervisor for the node tier, attached in socket mode
+    /// ([`LiveStore::attach_supervisor`]): [`LiveStore::fail_node`]
+    /// reports the kill so the supervisor can take the real daemon
+    /// down, and [`LiveStore::join_node`] asks it to bring the daemon
+    /// back before re-admitting the node. `None` — the in-process
+    /// default — keeps churn purely internal, exactly as before.
+    supervisor: RwLock<Option<Arc<dyn NodeSupervisor>>>,
+    /// Barrier deadline derived from [`LiveTuning::flush_timeout_ms`].
+    flush_deadline: Option<Duration>,
+    /// Flush barriers that hit the deadline before the pools drained.
+    flush_timeouts: AtomicU64,
     /// Per-node capacity as configured — what [`LiveStore::join_node`]
     /// restores after [`LiveStore::fail_node`] zeroed the node out of
     /// placement.
@@ -2115,6 +2207,81 @@ impl LiveStore {
                 )
             }
         };
+        Ok(LiveStore::assemble(
+            StoreParts {
+                registry,
+                n_nodes,
+                capacity,
+                backends,
+                backend_kind: tuning.backend,
+                data_root,
+                journal,
+                dir_guard,
+                stripes: None,
+                nodes: None,
+                next_id: 1,
+                recovered_ids: HashSet::new(),
+                recovery: None,
+            },
+            &tuning,
+        ))
+    }
+
+    /// A deployment over caller-supplied chunk backends — the
+    /// `managerd` path, where each element is a remote proxy speaking
+    /// the node wire protocol to a `woss noded` daemon
+    /// ([`super::rpc::RemoteBackend`]). The manager keeps no local
+    /// data directory or namespace journal: durability lives behind
+    /// the supplied backends. Every other tuning knob applies exactly
+    /// as for a local store; `tuning.backend` is ignored in favor of
+    /// `backend_kind`, the layout the daemons themselves report.
+    pub fn with_backends(
+        registry: Registry,
+        backends: Vec<Box<dyn ChunkBackend>>,
+        backend_kind: BackendKind,
+        capacity: u64,
+        tuning: LiveTuning,
+    ) -> Self {
+        let n_nodes = backends.len();
+        LiveStore::assemble(
+            StoreParts {
+                registry,
+                n_nodes,
+                capacity,
+                backends,
+                backend_kind,
+                data_root: None,
+                journal: None,
+                dir_guard: None,
+                stripes: None,
+                nodes: None,
+                next_id: 1,
+                recovered_ids: HashSet::new(),
+                recovery: None,
+            },
+            &tuning,
+        )
+    }
+
+    /// The shared constructor tail: fault decoration, the I/O and
+    /// replication pools, the cache tier, the load plane, and every
+    /// counter — identical no matter where the backends came from.
+    fn assemble(parts: StoreParts, tuning: &LiveTuning) -> Self {
+        let StoreParts {
+            registry,
+            n_nodes,
+            capacity,
+            backends,
+            backend_kind,
+            data_root,
+            journal,
+            dir_guard,
+            stripes,
+            nodes,
+            next_id,
+            recovered_ids,
+            recovery,
+        } = parts;
         let faults = tuning.fault.as_ref().map(|_| FaultControl::armed());
         let backends = match (&tuning.fault, &faults) {
             (Some(spec), Some(ctl)) => wrap_with_faults(backends, *spec, ctl),
@@ -2135,27 +2302,30 @@ impl LiveStore {
                 Arc::clone(&loads),
             ))
         });
-        Ok(LiveStore {
+        let stripes = stripes
+            .unwrap_or_else(|| (0..n_stripes).map(|_| NamespaceShard::default()).collect());
+        let nodes = nodes.unwrap_or_else(|| {
+            (0..n_nodes)
+                .map(|i| NodeState {
+                    node: NodeId(i),
+                    capacity,
+                    used: 0,
+                })
+                .collect()
+        });
+        LiveStore {
             registry,
-            stripes: (0..n_stripes)
-                .map(|_| Mutex::new(NamespaceShard::default()))
-                .collect(),
+            stripes: stripes.into_iter().map(Mutex::new).collect(),
             core: Mutex::new(PlacementCore {
-                nodes: (0..n_nodes)
-                    .map(|i| NodeState {
-                        node: NodeId(i),
-                        capacity,
-                        used: 0,
-                    })
-                    .collect(),
+                nodes,
                 placement: ShardedPlacementState::new(n_stripes),
             }),
             stores: Arc::clone(&stores),
-            backend_kind: tuning.backend,
+            backend_kind,
             data_root,
             cache: cache.clone(),
             lifetime_on: tuning.lifetime,
-            next_id: AtomicU64::new(1),
+            next_id: AtomicU64::new(next_id),
             repl: ReplPool::new(
                 stores,
                 cache,
@@ -2184,12 +2354,15 @@ impl LiveStore {
             dead: RwLock::new(vec![false; n_nodes]),
             journal,
             clean_marker: AtomicBool::new(false),
-            recovered_ids: RwLock::new(HashSet::new()),
+            recovered_ids: RwLock::new(recovered_ids),
             faults,
+            supervisor: RwLock::new(None),
+            flush_deadline: tuning.flush_timeout_ms.map(Duration::from_millis),
+            flush_timeouts: AtomicU64::new(0),
             node_capacity: capacity,
-            recovery: None,
+            recovery,
             _dir_guard: dir_guard,
-        })
+        }
     }
 
     /// Re-open a disk-backed store left in `data_dir` by a previous
@@ -2438,29 +2611,9 @@ impl LiveStore {
             .map_err(|e| StorageError::Invalid(format!("reopen namespace journal: {e}")))?;
 
         // Rebuild the live structures around the recovered state. The
-        // fault decorator (if any) wraps *after* bottom-up
-        // verification, which must see the honest disk.
-        let boxed: Vec<Box<dyn ChunkBackend>> = file_backends;
-        let faults = tuning.fault.as_ref().map(|_| FaultControl::armed());
-        let boxed = match (&tuning.fault, &faults) {
-            (Some(spec), Some(ctl)) => wrap_with_faults(boxed, *spec, ctl),
-            _ => boxed,
-        };
-        let stores: Arc<Vec<Box<dyn ChunkBackend>>> = Arc::new(boxed);
+        // fault decorator (if any) wraps inside `assemble`, *after*
+        // bottom-up verification — which must see the honest disk.
         let n_stripes = tuning.stripes.max(1);
-        let io = Arc::new(IoPool::new(tuning.io_workers));
-        let loads: Arc<Vec<NodeLoad>> =
-            Arc::new((0..n_nodes).map(|_| NodeLoad::default()).collect());
-        let cache = tuning.cache_bytes.map(|budget| {
-            Arc::new(CacheTier::new(
-                n_nodes,
-                budget,
-                tuning.cache_policy,
-                Some(Arc::clone(&stores)),
-                Arc::clone(&io),
-                Arc::clone(&loads),
-            ))
-        });
         let mut nodes: Vec<NodeState> = (0..n_nodes)
             .map(|i| NodeState {
                 node: NodeId(i),
@@ -2484,53 +2637,24 @@ impl LiveStore {
                 .insert(path, meta);
         }
 
-        Ok(LiveStore {
-            registry,
-            stripes: stripes.into_iter().map(Mutex::new).collect(),
-            core: Mutex::new(PlacementCore {
-                nodes,
-                placement: ShardedPlacementState::new(n_stripes),
-            }),
-            stores: Arc::clone(&stores),
-            backend_kind,
-            data_root: Some(data_dir.to_path_buf()),
-            cache: cache.clone(),
-            lifetime_on: tuning.lifetime,
-            next_id: AtomicU64::new(max_id + 1),
-            repl: ReplPool::new(
-                stores,
-                cache,
-                Arc::clone(&io),
-                Arc::clone(&loads),
-                tuning.repl_workers,
-            ),
-            io,
-            put_samples: Mutex::new(Reservoir::default()),
-            get_samples: Mutex::new(Reservoir::default()),
-            loads,
-            heat: HeatTracker::new(),
-            widened: Mutex::new(HashSet::new()),
-            adaptive: tuning.adaptive,
-            heat_widened: AtomicU64::new(0),
-            heat_trimmed: AtomicU64::new(0),
-            bytes_written: AtomicU64::new(0),
-            bytes_read: AtomicU64::new(0),
-            local_reads: AtomicU64::new(0),
-            remote_reads: AtomicU64::new(0),
-            setattr_ops: AtomicU64::new(0),
-            getattr_ops: AtomicU64::new(0),
-            replicas_deferred: AtomicU64::new(0),
-            files_reclaimed: AtomicU64::new(0),
-            bytes_reclaimed: AtomicU64::new(0),
-            dead: RwLock::new(vec![false; n_nodes]),
-            journal: Some(Mutex::new(AppendLog::new(journal))),
-            clean_marker: AtomicBool::new(false),
-            recovered_ids: RwLock::new(recovered_ids),
-            faults,
-            node_capacity: capacity,
-            recovery: Some(report),
-            _dir_guard: None,
-        })
+        Ok(LiveStore::assemble(
+            StoreParts {
+                registry,
+                n_nodes,
+                capacity,
+                backends: file_backends,
+                backend_kind,
+                data_root: Some(data_dir.to_path_buf()),
+                journal: Some(Mutex::new(AppendLog::new(journal))),
+                dir_guard: None,
+                stripes: Some(stripes),
+                nodes: Some(nodes),
+                next_id: max_id + 1,
+                recovered_ids,
+                recovery: Some(report),
+            },
+            &tuning,
+        ))
     }
 
     /// Clean shutdown: drain background replication, then persist the
@@ -2819,6 +2943,12 @@ impl LiveStore {
     /// Returns the number of restore jobs queued.
     pub fn fail_node(&self, node: NodeId) -> usize {
         self.kill_node(node);
+        // Socket mode: the kill is real — tell the supervisor to take
+        // the actual daemon process down before re-replication starts
+        // copying from the survivors.
+        if let Some(sup) = self.supervisor.read().unwrap().clone() {
+            sup.node_down(node.0);
+        }
         {
             let mut core = self.lock_core();
             core.nodes[node.0].capacity = 0;
@@ -2921,6 +3051,17 @@ impl LiveStore {
     /// was gone), restore its placement capacity, and mark it alive.
     /// Returns the number of stale chunks swept.
     pub fn join_node(&self, node: NodeId) -> usize {
+        // Socket mode: the daemon must actually be serving again
+        // before the node re-enters placement — respawn it (with
+        // `--reopen` salvage on persistent backends) and wait for its
+        // readiness probe. If the process cannot come back, the node
+        // stays dead rather than re-admitting a black hole.
+        if let Some(sup) = self.supervisor.read().unwrap().clone() {
+            if let Err(why) = sup.node_up(node.0) {
+                eprintln!("join_node(n{}): supervisor could not restart: {why}", node.0);
+                return 0;
+            }
+        }
         // Freeze the namespace so no create can claim the node (its
         // capacity is still zero, but collocation anchors bypass
         // capacity) while the stale sweep decides what to unlink.
@@ -2998,9 +3139,48 @@ impl LiveStore {
     /// returns (and absent concurrent writes), every file holds its
     /// full replica count — the determinism hook tests and shutdown
     /// paths rely on.
+    /// With [`LiveTuning::flush_timeout_ms`] set, the barrier gives up
+    /// at the deadline instead of waiting forever — a wedged worker or
+    /// dead remote peer can no longer hang a client on the barrier.
+    /// The miss is counted in [`LiveStore::flush_timeouts`].
     pub fn flush_replication(&self) {
-        self.repl.flush();
-        self.io.flush();
+        match self.flush_deadline {
+            None => {
+                self.repl.flush();
+                self.io.flush();
+            }
+            Some(limit) => {
+                if !self.try_flush_replication(limit) {
+                    self.flush_timeouts.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// [`LiveStore::flush_replication`] with an explicit deadline:
+    /// both pools are drained against the same budget. Returns `true`
+    /// when everything landed, `false` on a deadline miss (the store
+    /// stays consistent — jobs keep draining in the background, the
+    /// barrier just stops waiting). Does **not** bump the
+    /// [`LiveStore::flush_timeouts`] counter; callers decide what a
+    /// miss means.
+    pub fn try_flush_replication(&self, limit: Duration) -> bool {
+        let deadline = Instant::now() + limit;
+        self.repl.flush_deadline(deadline) && self.io.flush_deadline(deadline)
+    }
+
+    /// Flush barriers that hit their [`LiveTuning::flush_timeout_ms`]
+    /// deadline before the background pools drained.
+    pub fn flush_timeouts(&self) -> u64 {
+        self.flush_timeouts.load(Ordering::Relaxed)
+    }
+
+    /// Attach the process supervisor for socket mode: from now on
+    /// [`LiveStore::fail_node`] takes the real daemon down and
+    /// [`LiveStore::join_node`] respawns it before re-admitting the
+    /// node.
+    pub fn attach_supervisor(&self, sup: Arc<dyn NodeSupervisor>) {
+        *self.supervisor.write().unwrap() = Some(sup);
     }
 
     /// Queued + executing submissions on the I/O pool right now — the
@@ -4934,5 +5114,46 @@ mod tests {
         // were stored intact all along.
         ctl.set_enabled(false);
         assert_eq!(store.read_file(NodeId(2), "/f").unwrap(), data);
+    }
+
+    #[test]
+    fn flush_deadline_bounds_the_barrier_and_counts_misses() {
+        // Injected latency makes every backend op sleep 30 ms; a 1 ms
+        // barrier budget must give up (and count the miss) instead of
+        // hanging, while a generous explicit deadline still drains.
+        let store = LiveStore::woss_with(
+            3,
+            LiveTuning {
+                fault: Some(FaultSpec {
+                    seed: 5,
+                    delay_permille: 1000,
+                    delay_us: 30_000,
+                    ..FaultSpec::default()
+                }),
+                flush_timeout_ms: Some(1),
+                ..LiveTuning::default()
+            },
+        );
+        let data = vec![7u8; 200_000];
+        store
+            .write_file(
+                NodeId(0),
+                "/slow",
+                &data,
+                &TagSet::from_pairs([("Replication", "2"), ("RepSmntc", "optimistic")]),
+            )
+            .unwrap();
+        // The optimistic replica copy is queued behind a 30 ms sleep;
+        // the tuned barrier stops waiting at its deadline.
+        store.flush_replication();
+        assert!(store.flush_timeouts() >= 1, "deadline miss is counted");
+        // The miss left the store consistent — the job kept draining
+        // in the background and a generous deadline sees it land.
+        assert!(store.try_flush_replication(Duration::from_secs(30)));
+        let misses = store.flush_timeouts();
+        assert!(store.fully_replicated("/slow").unwrap());
+        assert_eq!(store.flush_timeouts(), misses, "try_ variant never counts");
+        let audit = store.audit();
+        assert!(audit.clean(), "{audit:?}");
     }
 }

@@ -20,13 +20,30 @@
 //!   default, reproduces the static decisions byte-for-byte),
 //!   `--fingerprint-file PATH` (record output
 //!   fingerprints for a later restart check), `--clean-shutdown`
-//!   (write the namespace snapshot + CLEAN marker before exiting).
+//!   (write the namespace snapshot + CLEAN marker before exiting),
+//!   `--flush-timeout-ms N` (bound the replication flush barrier;
+//!   0 = wait forever, timeouts surface in the run report).
 //! * `live --reopen --data-dir PATH` — recover a persistent store a
 //!   previous process left behind (cleanly or not; the backend kind
 //!   comes from its `store.meta`): replay manifests/segment logs +
 //!   journal or snapshot, print what survived, verify recorded
 //!   fingerprints when `--fingerprint-file` names a file, and shut
 //!   down clean.
+//! * `live --connect ADDR` — run the same workload against a running
+//!   `woss managerd` over the wire protocol instead of an in-process
+//!   store (`ADDR` is `unix:/path.sock` or `tcp:host:port`);
+//!   `--clean-shutdown` asks the daemon to snapshot and exit.
+//! * `noded --listen ADDR` — a chunk-node daemon: one
+//!   [`woss::live::ChunkBackend`] served over the length-prefixed wire
+//!   protocol. `--backend mem|disk|seg`, `--data-dir PATH` (required
+//!   for persistent backends), `--reopen` (salvage what a previous —
+//!   possibly SIGKILLed — daemon left behind).
+//! * `managerd --listen ADDR --nodes A,B,C` — the metadata/placement
+//!   daemon: a full `LiveStore` whose node tier is remote `noded`
+//!   processes (comma-separated addresses). Takes the usual store
+//!   tuning flags (`--capacity-mb`, `--stripes`, `--repl-workers`,
+//!   `--io-workers`, `--cache-mb`, `--cache-policy`, `--lifetime`,
+//!   `--adaptive on|off`, `--flush-timeout-ms`, `--no-hints`).
 //! * `scenario <name|all>` — run hostile-scenario workloads (fault
 //!   injection + live node churn) against the live store: `--list`
 //!   prints the scenario names, `--seed N` replays a schedule,
@@ -34,18 +51,27 @@
 //!   (smoke sizes), `--io-workers N` (disk I/O pool threads),
 //!   `--adaptive on|off` (primary-run mode; the skew scenarios
 //!   dual-run both modes either way and record both p99 columns),
-//!   `--json out.json` (the `woss-scenarios-v2` document
+//!   `--transport inproc|socket` (socket = real `noded` daemon
+//!   processes per node, churn by SIGKILL), `--wire-bench` (also run
+//!   the socket transport on wire-tracked scenarios and record its
+//!   read p99), `--json out.json` (the `woss-scenarios-v3` document
 //!   `BENCH_scenarios.json` tracks).
 //! * `bench-check` — validate tracked bench results:
 //!   `--scenarios BENCH_scenarios.json --live BENCH_live.json`.
 //! * `list` — experiment ids.
 //! * `calib` — print the active calibration.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 use woss::bench::experiments;
 use woss::coordinator::{config, report};
 use woss::dispatch::Registry;
-use woss::live::{BackendKind, CachePolicy, EngineOptions, LiveEngine, LiveStore, LiveTuning};
+use woss::live::{
+    connect_node_tier, open_node_host, serve_manager, serve_node, BackendKind, CachePolicy,
+    EngineOptions, LiveEngine, LiveStore, LiveTuning, ManagerService, RemoteStore, RpcAddr,
+    StoreHandle,
+};
 use woss::scenario;
 use woss::util::cli::Args;
 use woss::workloads;
@@ -60,6 +86,23 @@ fn parse_adaptive(args: &Args) -> Result<bool> {
     }
 }
 
+/// Parse `--flush-timeout-ms N` (absent or 0 = wait forever, the
+/// behaviour every prior release had).
+fn parse_flush_timeout(args: &Args) -> Option<u64> {
+    match args.get_parse("flush-timeout-ms", 0u64) {
+        0 => None,
+        ms => Some(ms),
+    }
+}
+
+/// Parse `--listen ADDR` / a required socket address option.
+fn parse_addr(args: &Args, key: &str, usage: &str) -> Result<RpcAddr> {
+    args.get(key)
+        .ok_or_else(|| anyhow!("{usage}"))?
+        .parse::<RpcAddr>()
+        .map_err(|e| anyhow!(e))
+}
+
 fn main() {
     let args = Args::from_env();
     if let Err(e) = dispatch(&args) {
@@ -72,6 +115,8 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("experiment") => cmd_experiment(args),
         Some("live") => cmd_live(args),
+        Some("noded") => cmd_noded(args),
+        Some("managerd") => cmd_managerd(args),
         Some("scenario") => cmd_scenario(args),
         Some("bench-check") => cmd_bench_check(args),
         Some("list") => {
@@ -89,11 +134,11 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some(other) => Err(anyhow!(
-            "unknown command '{other}' (experiment|live|scenario|bench-check|list|calib)"
+            "unknown command '{other}' (experiment|live|noded|managerd|scenario|bench-check|list|calib)"
         )),
         None => {
             println!("woss — workflow-optimized storage system (paper reproduction)");
-            println!("usage: woss <experiment|live|scenario|bench-check|list|calib> [options]");
+            println!("usage: woss <experiment|live|noded|managerd|scenario|bench-check|list|calib> [options]");
             println!("  woss experiment all --runs 5 --json results.json");
             println!("  woss experiment live --runs 2 --json BENCH_live.json");
             println!("  woss experiment fig5 --runs 20");
@@ -103,7 +148,11 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("  woss live --workload montage --backend disk --io-workers 4");
             println!("  woss live --workload montage --backend seg --data-dir /tmp/woss-seg");
             println!("  woss live --reopen --data-dir /tmp/woss    # recover a store left behind");
+            println!("  woss noded --listen unix:/tmp/woss-n0.sock --backend seg --data-dir /tmp/woss-n0");
+            println!("  woss managerd --listen unix:/tmp/woss-mgr.sock --nodes unix:/tmp/woss-n0.sock,unix:/tmp/woss-n1.sock");
+            println!("  woss live --connect unix:/tmp/woss-mgr.sock --workload pipeline");
             println!("  woss scenario --list                       # hostile-scenario names");
+            println!("  woss scenario kill_recover --quick --transport socket --backend seg");
             println!("  woss scenario all --seed 7 --json BENCH_scenarios.json");
             println!("  woss scenario kill_recover --quick --backend disk --data-dir /tmp/woss-scn");
             println!("  woss bench-check --scenarios BENCH_scenarios.json --live BENCH_live.json");
@@ -152,6 +201,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 fn cmd_live(args: &Args) -> Result<()> {
     if args.has_flag("reopen") {
         return cmd_live_reopen(args);
+    }
+    if args.get("connect").is_some() {
+        return cmd_live_connect(args);
     }
     let nodes = args.get_parse("nodes", 8usize);
     let workers = args.get_parse("workers", 8usize);
@@ -207,6 +259,7 @@ fn cmd_live(args: &Args) -> Result<()> {
         fault: None,
         io_workers,
         adaptive,
+        flush_timeout_ms: parse_flush_timeout(args),
     };
     let registry = if hints {
         Registry::woss()
@@ -285,6 +338,12 @@ fn cmd_live(args: &Args) -> Result<()> {
         println!(
             "  faults: {} chunk reads failed on a present chunk (failed over)",
             rep.read_errors
+        );
+    }
+    if rep.flush_timeouts > 0 {
+        println!(
+            "  flush: {} barrier waits hit the --flush-timeout-ms deadline",
+            rep.flush_timeouts
         );
     }
     println!("  kernels: {:?}", rep.kernel_execs);
@@ -374,10 +433,186 @@ fn cmd_live_reopen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `woss live --connect ADDR`: the same workload driver, but the store
+/// is a running `woss managerd` reached over the wire protocol — the
+/// engine, hints, and end-to-end verification are unchanged; only the
+/// transport under the service boundary differs.
+fn cmd_live_connect(args: &Args) -> Result<()> {
+    let addr = parse_addr(args, "connect", "usage: woss live --connect unix:/path.sock|tcp:host:port")?;
+    let workers = args.get_parse("workers", 8usize);
+    let hints = !args.has_flag("no-hints");
+    let workload = args.get_or("workload", "pipeline");
+
+    // Retry the handshake briefly: the daemon may still be binding or
+    // waiting on its own node tier.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let store = loop {
+        match RemoteStore::connect(addr.clone()) {
+            Ok(s) => break s,
+            Err(_) if std::time::Instant::now() < deadline => {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            Err(e) => return Err(anyhow!("connect {addr}: {e}")),
+        }
+    };
+    let handle = StoreHandle::Remote(Arc::new(store));
+    let info = handle.info();
+
+    let wf = match workload {
+        "pipeline" => workloads::pipeline(info.n_nodes.min(8), 0.01, hints),
+        "montage" => workloads::Montage {
+            inputs: 12,
+            hints,
+            scale: 0.05,
+        }
+        .build(),
+        other => return Err(anyhow!("unknown workload '{other}' (pipeline|montage)")),
+    };
+    let engine = LiveEngine::with_handle(
+        handle.clone(),
+        workers,
+        EngineOptions {
+            lifetime: info.lifetime_enabled,
+            prefetch: info.cache_enabled,
+        },
+    )?;
+    let rep = engine.run(&wf)?;
+    let verified = engine.verify(&rep)?;
+    println!(
+        "live run over {addr}: {} tasks in {:.2}s ({} nodes, {} backend, wire transport)",
+        rep.tasks, rep.elapsed_secs, info.n_nodes, rep.backend
+    );
+    println!(
+        "  storage: {:.1} MB written, {:.1} MB read, {:.1} MB/s aggregate",
+        rep.bytes_written as f64 / 1048576.0,
+        rep.bytes_read as f64 / 1048576.0,
+        rep.throughput_mbps()
+    );
+    println!(
+        "  locality: {:.0}% of chunk reads local ({} local / {} remote)",
+        rep.locality() * 100.0,
+        rep.local_reads,
+        rep.remote_reads
+    );
+    if rep.flush_timeouts > 0 {
+        println!(
+            "  flush: {} barrier waits hit the daemon's flush deadline",
+            rep.flush_timeouts
+        );
+    }
+    println!("  integrity: {verified} files verified by checksum kernel");
+    if let Some(fp_path) = args.get("fingerprint-file") {
+        write_fingerprints(std::path::Path::new(fp_path), &rep.fingerprints)?;
+        println!(
+            "  fingerprints: {} recorded to {fp_path}",
+            rep.fingerprints.len()
+        );
+    }
+    if args.has_flag("clean-shutdown") {
+        engine.handle().svc().shutdown_store();
+        println!("  shutdown: daemon asked to snapshot and exit");
+    }
+    Ok(())
+}
+
+/// `woss noded --listen ADDR [--backend mem|disk|seg] [--data-dir PATH]
+/// [--reopen]`: serve one chunk node over the wire protocol until a
+/// `Shutdown` request (or a signal) stops it. With `--reopen` the
+/// backend takes the salvage path over whatever a previous — possibly
+/// SIGKILLed — daemon left under `--data-dir`.
+fn cmd_noded(args: &Args) -> Result<()> {
+    let usage = "usage: woss noded --listen unix:/path.sock|tcp:host:port \
+                 [--backend mem|disk|seg] [--data-dir PATH] [--reopen]";
+    let listen = parse_addr(args, "listen", usage)?;
+    let data_dir = args.get("data-dir").map(std::path::PathBuf::from);
+    let backend = match args.get("backend") {
+        Some(raw) => raw.parse::<BackendKind>().map_err(|e| anyhow!(e))?,
+        None if data_dir.is_some() => BackendKind::Disk,
+        None => BackendKind::Memory,
+    };
+    let reopen = args.has_flag("reopen");
+    let host = open_node_host(backend, data_dir.as_deref(), reopen)
+        .map_err(|e| anyhow!("bring up {} node: {e}", backend.label()))?;
+    let server =
+        serve_node(listen, Arc::new(host)).map_err(|e| anyhow!("noded listen: {e}"))?;
+    println!(
+        "noded: {} backend serving on {}{}",
+        backend.label(),
+        server.addr(),
+        if reopen { " (reopened)" } else { "" }
+    );
+    server.wait();
+    Ok(())
+}
+
+/// `woss managerd --listen ADDR --nodes A,B,C [tuning flags]`: the
+/// metadata/placement daemon — a full [`LiveStore`] whose chunk tier
+/// is remote `noded` processes. Serves until a `Shutdown` request,
+/// which snapshots the namespace before the process exits.
+fn cmd_managerd(args: &Args) -> Result<()> {
+    let usage = "usage: woss managerd --listen ADDR --nodes ADDR[,ADDR...] \
+                 [--capacity-mb N] [--stripes N] [--repl-workers N] [--io-workers N] \
+                 [--cache-mb N] [--cache-policy lru|hint] [--lifetime] \
+                 [--adaptive on|off] [--flush-timeout-ms N] [--no-hints]";
+    let listen = parse_addr(args, "listen", usage)?;
+    let addrs = args
+        .get("nodes")
+        .ok_or_else(|| anyhow!(usage))?
+        .split(',')
+        .map(|s| s.trim().parse::<RpcAddr>())
+        .collect::<std::result::Result<Vec<_>, String>>()
+        .map_err(|e| anyhow!(e))?;
+    let (backends, kind) = connect_node_tier(&addrs).map_err(|e| anyhow!(e))?;
+    let defaults = LiveTuning::default();
+    let cache_mb = args.get_parse("cache-mb", 0u64);
+    let cache_policy = match args.get_or("cache-policy", "hint") {
+        "lru" => CachePolicy::Lru,
+        "hint" => CachePolicy::HintAware,
+        other => return Err(anyhow!("unknown --cache-policy '{other}' (lru|hint)")),
+    };
+    let tuning = LiveTuning {
+        stripes: args.get_parse("stripes", defaults.stripes),
+        repl_workers: args.get_parse("repl-workers", defaults.repl_workers),
+        io_workers: args.get_parse("io-workers", defaults.io_workers),
+        cache_bytes: if cache_mb > 0 {
+            Some(cache_mb * 1024 * 1024)
+        } else {
+            None
+        },
+        cache_policy,
+        lifetime: args.has_flag("lifetime"),
+        backend: kind,
+        adaptive: parse_adaptive(args)?,
+        flush_timeout_ms: parse_flush_timeout(args),
+        ..defaults
+    };
+    let capacity = match args.get_parse("capacity-mb", 0u64) {
+        0 => u64::MAX / 2,
+        mb => mb * 1024 * 1024,
+    };
+    let registry = if args.has_flag("no-hints") {
+        Registry::baseline()
+    } else {
+        Registry::woss()
+    };
+    let n = addrs.len();
+    let store = LiveStore::with_backends(registry, backends, kind, capacity, tuning);
+    let server =
+        serve_manager(listen, Arc::new(store)).map_err(|e| anyhow!("managerd listen: {e}"))?;
+    println!(
+        "managerd: {n} {} nodes behind {}",
+        kind.label(),
+        server.addr()
+    );
+    server.wait();
+    Ok(())
+}
+
 /// `woss scenario <name|all> [--list] [--seed N] [--backend mem|disk|seg]
 /// [--data-dir PATH] [--quick] [--io-workers N] [--adaptive on|off]
-/// [--json PATH]`: run the hostile-scenario harness and optionally emit
-/// the `woss-scenarios-v2` results document. Comma-separated names run
+/// [--transport inproc|socket] [--wire-bench] [--json PATH]`: run the
+/// hostile-scenario harness and optionally emit the
+/// `woss-scenarios-v3` results document. Comma-separated names run
 /// a subset.
 fn cmd_scenario(args: &Args) -> Result<()> {
     if args.has_flag("list") {
@@ -400,6 +635,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         quick: args.has_flag("quick"),
         io_workers: args.get_parse("io-workers", 1usize),
         adaptive: parse_adaptive(args)?,
+        transport: args
+            .get_or("transport", "inproc")
+            .parse()
+            .map_err(|e: String| anyhow!(e))?,
+        wire_bench: args.has_flag("wire-bench"),
     };
     let names: Vec<&str> = if which == "all" {
         scenario::names()

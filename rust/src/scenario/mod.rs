@@ -28,6 +28,13 @@
 //!   is verified **without a reopen**, and the node rejoins
 //!   ([`crate::live::LiveStore::join_node`]).
 //!
+//! Every scenario also runs over the process split
+//! ([`Transport::Socket`], `--transport socket`): the node tier
+//! becomes real `woss noded` daemon processes behind the wire
+//! protocol, `kill_recover`'s node death a real SIGKILL, and its
+//! rejoin a `noded --reopen` salvage restart — with the identical
+//! workload, audit, and byte verification on top.
+//!
 //! Hostility comes from [`crate::live::FaultBackend`] (seed-driven,
 //! interleaving-independent fault schedules) and the store's live-churn
 //! API — so a run is replayable: the same seed yields the same fault
@@ -47,8 +54,8 @@
 use crate::dispatch::Registry;
 use crate::hints::TagSet;
 use crate::live::{
-    chunk_crc, chunk_files_under, segment_files_under, BackendKind, ChunkBackend, FaultSpec,
-    FileBackend, LiveStore, LiveTuning, SegBackend, StoreAudit,
+    chunk_crc, chunk_files_under, segment_files_under, store_over_cluster, BackendKind,
+    ChunkBackend, Cluster, FaultSpec, FileBackend, LiveStore, LiveTuning, SegBackend, StoreAudit,
 };
 use crate::storage::{FileId, NodeId};
 use crate::util::json::Json;
@@ -59,8 +66,45 @@ use std::time::Instant;
 /// Schema tag stamped into (and required of) `BENCH_scenarios.json`.
 /// v2 added the adaptive-placement columns: `adaptive` on every row,
 /// `read_p99_ms_static` / `read_p99_ms_adaptive` on the skew
-/// scenarios that dual-run both modes.
-pub const SCENARIO_SCHEMA: &str = "woss-scenarios-v2";
+/// scenarios that dual-run both modes. v3 added the process-split
+/// columns: `transport` on every row, `read_p99_ms_wire` on
+/// `kill_recover` (the socket-transport leg's read p99 — the tracked
+/// wire-overhead artifact).
+pub const SCENARIO_SCHEMA: &str = "woss-scenarios-v3";
+
+/// Which transport sits under the store a scenario drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Transport {
+    /// Plain method calls on an in-process [`LiveStore`] — the default,
+    /// trace-equivalent to the pre-split monolith.
+    #[default]
+    InProc,
+    /// Real `woss noded` daemon processes per storage node, reached
+    /// over the length-prefixed wire protocol (Unix sockets); node
+    /// churn is a real SIGKILL + restart through the salvage path.
+    Socket,
+}
+
+impl Transport {
+    /// Stable label for reports (`inproc` | `socket`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Transport::InProc => "inproc",
+            Transport::Socket => "socket",
+        }
+    }
+}
+
+impl std::str::FromStr for Transport {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "inproc" | "local" => Ok(Transport::InProc),
+            "socket" | "wire" => Ok(Transport::Socket),
+            other => Err(format!("unknown transport '{other}' (inproc|socket)")),
+        }
+    }
+}
 
 /// How a scenario run is wired: replay seed, chunk backend, disk root,
 /// and whether sizes are scaled down for the CI smoke leg.
@@ -84,6 +128,13 @@ pub struct ScenarioConfig {
     /// scenarios additionally dual-run both modes to record the
     /// static-vs-adaptive p99 columns regardless of this flag.
     pub adaptive: bool,
+    /// Transport under the store: in-process method calls (default) or
+    /// real `woss noded` daemons over the wire protocol.
+    pub transport: Transport,
+    /// Force the `kill_recover` socket leg that records
+    /// `read_p99_ms_wire` even at `--quick` sizes (full-size in-process
+    /// runs record it unconditionally).
+    pub wire_bench: bool,
 }
 
 impl Default for ScenarioConfig {
@@ -95,6 +146,8 @@ impl Default for ScenarioConfig {
             quick: false,
             io_workers: 1,
             adaptive: false,
+            transport: Transport::InProc,
+            wire_bench: false,
         }
     }
 }
@@ -112,12 +165,19 @@ pub struct ScenarioReport {
     pub quick: bool,
     /// Whether the primary run used adaptive load-aware decisions.
     pub adaptive: bool,
+    /// Transport label of the primary run (`inproc` | `socket`).
+    pub transport: &'static str,
     /// Skew scenarios only: p99 read latency (ms) of the static-mode
     /// leg of the dual run. `None` on scenarios that run once.
     pub read_p99_ms_static: Option<f64>,
     /// Skew scenarios only: p99 read latency (ms) of the
     /// adaptive-mode leg of the dual run.
     pub read_p99_ms_adaptive: Option<f64>,
+    /// `kill_recover` only: p99 read latency (ms) of the
+    /// socket-transport leg — the tracked wire-overhead column.
+    /// `None` when the wire leg did not run (quick in-process runs
+    /// without `--wire-bench`) or on other scenarios.
+    pub read_p99_ms_wire: Option<f64>,
     /// Files alive at the final audit.
     pub files: usize,
     /// Workload operations issued (writes + reads + deletes, retries
@@ -207,11 +267,16 @@ impl ScenarioReport {
             ),
             None => String::new(),
         };
+        let backend_tag = if self.transport == "socket" {
+            format!("{}/socket", self.backend)
+        } else {
+            self.backend.to_string()
+        };
         format!(
             "{} [{}] seed={}: {} files, {} ops, {:.1} MB/s, write p50/p99 {:.2}/{:.2} ms, \
              read p50/p99 {:.2}/{:.2} ms, {} faults injected ({} surfaced){}, audit {}",
             self.name,
-            self.backend,
+            backend_tag,
             self.seed,
             self.files,
             self.ops,
@@ -227,7 +292,7 @@ impl ScenarioReport {
         )
     }
 
-    /// The `woss-scenarios-v1` record for this run.
+    /// The [`SCENARIO_SCHEMA`] record for this run.
     pub fn to_json(&self) -> Json {
         Json::obj([
             ("name", self.name.into()),
@@ -235,6 +300,7 @@ impl ScenarioReport {
             ("seed", self.seed.into()),
             ("quick", self.quick.into()),
             ("adaptive", self.adaptive.into()),
+            ("transport", self.transport.into()),
             (
                 "read_p99_ms_static",
                 self.read_p99_ms_static.map(Json::Num).unwrap_or(Json::Null),
@@ -244,6 +310,10 @@ impl ScenarioReport {
                 self.read_p99_ms_adaptive
                     .map(Json::Num)
                     .unwrap_or(Json::Null),
+            ),
+            (
+                "read_p99_ms_wire",
+                self.read_p99_ms_wire.map(Json::Num).unwrap_or(Json::Null),
             ),
             ("files", self.files.into()),
             ("ops", self.ops.into()),
@@ -391,6 +461,14 @@ pub fn check_scenarios_json(text: &str) -> Result<(), String> {
         if s.get("backend").and_then(Json::as_str).is_none() {
             return Err(format!("scenario '{name}': missing 'backend'"));
         }
+        match s.get("transport").and_then(Json::as_str) {
+            Some("inproc") | Some("socket") => {}
+            _ => {
+                return Err(format!(
+                    "scenario '{name}': missing 'transport' (inproc|socket)"
+                ))
+            }
+        }
         if !matches!(s.get("adaptive"), Some(Json::Bool(_))) {
             return Err(format!("scenario '{name}': missing boolean 'adaptive'"));
         }
@@ -430,6 +508,23 @@ pub fn check_scenarios_json(text: &str) -> Result<(), String> {
             }
             if s.get("bytes_rereplicated").and_then(Json::as_f64).unwrap_or(0.0) <= 0.0 {
                 return Err("kill_recover: no bytes were re-replicated".into());
+            }
+            // A full-size row must carry the socket-transport leg's
+            // read p99 — the tracked wire-overhead column of the
+            // process split. Quick rows may skip the leg (it spawns
+            // real daemons) unless `--wire-bench` forced it.
+            if s.get("quick") != Some(&Json::Bool(true)) {
+                let wire = s
+                    .get("read_p99_ms_wire")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| {
+                        "kill_recover: missing numeric 'read_p99_ms_wire'".to_string()
+                    })?;
+                if wire <= 0.0 {
+                    return Err(format!(
+                        "kill_recover: wire-leg read p99 must be positive (got {wire})"
+                    ));
+                }
             }
         }
         if name == "small_file_flood" {
@@ -561,7 +656,12 @@ struct Closing {
 }
 
 /// Per-scenario store: on the disk backend each scenario runs in its
-/// own subdirectory of the configured root (or an owned tempdir).
+/// own subdirectory of the configured root (or an owned tempdir). On
+/// [`Transport::Socket`] the node tier is a [`Cluster`] of real `woss
+/// noded` daemon processes; the cluster is kept alive by the store's
+/// supervisor handle (fault injection still works — the
+/// [`crate::live::FaultBackend`] decorator wraps the remote client
+/// backends), and churn becomes a real SIGKILL + salvage restart.
 fn store_for(
     cfg: &ScenarioConfig,
     name: &str,
@@ -569,19 +669,35 @@ fn store_for(
     capacity: u64,
     fault: Option<FaultSpec>,
 ) -> Result<LiveStore, String> {
+    let scenario_dir = match (cfg.backend, &cfg.data_dir) {
+        (kind, Some(root)) if kind.is_persistent() => Some(root.join(name)),
+        _ => None,
+    };
     let tuning = LiveTuning {
         backend: cfg.backend,
-        data_dir: match (cfg.backend, &cfg.data_dir) {
-            (kind, Some(root)) if kind.is_persistent() => Some(root.join(name)),
-            _ => None,
+        data_dir: match cfg.transport {
+            Transport::InProc => scenario_dir.clone(),
+            Transport::Socket => None,
         },
         fault,
         io_workers: cfg.io_workers,
         adaptive: cfg.adaptive,
         ..LiveTuning::default()
     };
-    LiveStore::try_with_tuning(Registry::woss(), nodes, capacity, tuning)
-        .map_err(|e| format!("bring up store: {e}"))
+    match cfg.transport {
+        Transport::InProc => LiveStore::try_with_tuning(Registry::woss(), nodes, capacity, tuning)
+            .map_err(|e| format!("bring up store: {e}")),
+        Transport::Socket => {
+            let cluster = Cluster::spawn(nodes, cfg.backend, scenario_dir.as_deref())
+                .map_err(|e| format!("spawn node daemons: {e}"))?;
+            Ok(store_over_cluster(
+                Registry::woss(),
+                &cluster,
+                capacity,
+                tuning,
+            ))
+        }
+    }
 }
 
 /// Deterministic payload: one fresh odd multiplier per file so every
@@ -673,8 +789,10 @@ fn report(
         seed: cfg.seed,
         quick: cfg.quick,
         adaptive: cfg.adaptive,
+        transport: cfg.transport.label(),
         read_p99_ms_static: None,
         read_p99_ms_adaptive: None,
+        read_p99_ms_wire: None,
         files,
         ops: tally.ops,
         bytes_written: tally.bytes_written,
@@ -1254,10 +1372,39 @@ fn tenant_pressure_once(cfg: &ScenarioConfig, leg: &str) -> Result<ScenarioRepor
 /// and every byte — including chunks the dead node held — verifies
 /// **without any reopen**. The node then rejoins and the audit closes
 /// clean. `recovery_secs` measures fail → re-replication drained.
+///
+/// On [`Transport::Socket`] every step crosses the process boundary:
+/// the victim daemon is SIGKILLed for real, mid-churn reads fail over
+/// to surviving daemons, and the rejoin is a fresh `noded --reopen`
+/// through the salvage path. In-process runs additionally re-run the
+/// whole scenario over sockets (at full size, or with
+/// [`ScenarioConfig::wire_bench`]) and record that leg's read p99 as
+/// `read_p99_ms_wire` — the tracked wire-overhead column.
 fn kill_recover(cfg: &ScenarioConfig) -> Result<ScenarioReport, String> {
+    let mut rep = kill_recover_once(cfg, "kill_recover")?;
+    rep.read_p99_ms_wire = match cfg.transport {
+        // The primary run already crossed the wire.
+        Transport::Socket => Some(rep.read_p99_ms),
+        Transport::InProc if cfg.wire_bench || !cfg.quick => {
+            let wire_cfg = ScenarioConfig {
+                transport: Transport::Socket,
+                ..cfg.clone()
+            };
+            let wire = kill_recover_once(&wire_cfg, "kill_recover_wire")?;
+            if !wire.clean() {
+                return Err("kill_recover: socket leg closed with a dirty audit".into());
+            }
+            Some(wire.read_p99_ms)
+        }
+        Transport::InProc => None,
+    };
+    Ok(rep)
+}
+
+fn kill_recover_once(cfg: &ScenarioConfig, name: &str) -> Result<ScenarioReport, String> {
     const NODES: usize = 5;
     let files = if cfg.quick { 16 } else { 60 };
-    let store = store_for(cfg, "kill_recover", NODES, u64::MAX / 2, None)?;
+    let store = store_for(cfg, name, NODES, u64::MAX / 2, None)?;
     let mut rng = Rng::new(cfg.seed ^ 0x6b17_7200);
     let mut tally = Tally::default();
     let mut expected: Vec<Fingerprint> = Vec::new();
@@ -1374,6 +1521,7 @@ mod tests {
             assert!(r.clean(), "{} closed dirty: {:?}", r.name, r.audit);
             assert!(r.files > 0, "{} kept no files", r.name);
             assert!(r.bytes_written > 0);
+            assert_eq!(r.transport, "inproc", "default transport is in-process");
         }
         let kr = reports.iter().find(|r| r.name == "kill_recover").unwrap();
         assert!(kr.recovery_secs.is_some());
@@ -1442,6 +1590,54 @@ mod tests {
             ("scenarios", Json::Arr(vec![dirty_scenario])),
         ]);
         assert!(check_scenarios_json(&dirty.to_string_pretty()).is_err());
+    }
+
+    #[test]
+    fn transport_parses_and_labels() {
+        assert_eq!("inproc".parse::<Transport>().unwrap(), Transport::InProc);
+        assert_eq!("socket".parse::<Transport>().unwrap(), Transport::Socket);
+        assert_eq!("wire".parse::<Transport>().unwrap(), Transport::Socket);
+        assert!("carrier-pigeon".parse::<Transport>().is_err());
+        assert_eq!(Transport::default().label(), "inproc");
+        assert_eq!(Transport::Socket.label(), "socket");
+    }
+
+    #[test]
+    fn v3_gate_checks_transport_and_wire_columns() {
+        let cfg = quick_cfg(7);
+        let rep = metadata_storm(&cfg).unwrap();
+        let wrap = |row: Json| {
+            Json::obj([
+                ("schema", SCENARIO_SCHEMA.into()),
+                ("seed", 7u64.into()),
+                ("scenarios", Json::Arr(vec![row])),
+            ])
+        };
+
+        // A row without the transport label is schema drift.
+        let mut row = rep.to_json();
+        row.set("transport", Json::Null);
+        assert!(check_scenarios_json(&wrap(row).to_string_pretty()).is_err());
+        let mut row = rep.to_json();
+        row.set("transport", "telepathy".into());
+        assert!(check_scenarios_json(&wrap(row).to_string_pretty()).is_err());
+
+        // A full-size kill_recover row must carry a positive wire-leg
+        // p99; a quick row may skip the leg.
+        let mut row = rep.to_json();
+        row.set("name", "kill_recover".into());
+        row.set("recovery_secs", 0.5.into());
+        row.set("bytes_rereplicated", 4096u64.into());
+        row.set("quick", false.into());
+        row.set("read_p99_ms_wire", Json::Null);
+        assert!(check_scenarios_json(&wrap(row.clone()).to_string_pretty()).is_err());
+        row.set("read_p99_ms_wire", 0.0.into());
+        assert!(check_scenarios_json(&wrap(row.clone()).to_string_pretty()).is_err());
+        row.set("read_p99_ms_wire", 1.25.into());
+        check_scenarios_json(&wrap(row.clone()).to_string_pretty()).unwrap();
+        row.set("quick", true.into());
+        row.set("read_p99_ms_wire", Json::Null);
+        check_scenarios_json(&wrap(row).to_string_pretty()).unwrap();
     }
 
     #[test]

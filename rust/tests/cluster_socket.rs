@@ -1,0 +1,191 @@
+//! Real-process cluster legs: `woss noded` daemons spawned as child
+//! processes over Unix sockets, driven through the same `LiveStore`
+//! API the in-process tier uses. Pins the tentpole's transport
+//! equivalence (a manager served over the wire produces byte-identical
+//! engine fingerprints) and the churn contract: `fail_node` is a real
+//! SIGKILL of a real daemon, recovery is a real respawn — with
+//! `--reopen` salvage on persistent backends.
+//!
+//! Every test routes `Cluster::spawn` at the cargo-built `woss` binary
+//! via `WOSS_BIN` (inside a test harness, `current_exe()` is the test
+//! binary itself, which has no `noded` subcommand).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use woss::dispatch::Registry;
+use woss::hints::TagSet;
+use woss::live::{
+    serve_manager, store_over_cluster, BackendKind, Cluster, EngineOptions, LiveEngine, LiveStore,
+    LiveTuning, ManagerService, RemoteStore, RpcAddr, StoreHandle,
+};
+use woss::scenario::{self, ScenarioConfig, Transport};
+use woss::storage::NodeId;
+use woss::workloads;
+
+/// Point `Cluster::spawn` at the real `woss` binary.
+fn point_at_woss_bin() {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| std::env::set_var("WOSS_BIN", env!("CARGO_BIN_EXE_woss")));
+}
+
+/// Deterministic per-file payload bytes.
+fn payload(i: usize) -> Vec<u8> {
+    (0..40_000 + i * 1_111)
+        .map(|j| ((j as u64).wrapping_mul(31).wrapping_add(i as u64 * 7)) as u8)
+        .collect()
+}
+
+/// Is an OS process with this pid still around? (`Cluster::kill` reaps,
+/// so a killed daemon's `/proc` entry disappears — no zombie.)
+fn process_alive(pid: u32) -> bool {
+    std::path::Path::new(&format!("/proc/{pid}")).exists()
+}
+
+#[test]
+fn socket_cluster_serves_bytes_and_survives_real_process_death() {
+    point_at_woss_bin();
+    let cluster = Cluster::spawn(3, BackendKind::Memory, None).expect("spawn mem cluster");
+    let store = store_over_cluster(
+        Registry::woss(),
+        &cluster,
+        u64::MAX / 2,
+        LiveTuning::default(),
+    );
+
+    // Every chunk twice-held before the churn starts.
+    let tags = TagSet::from_pairs([("Replication", "2"), ("RepSmntc", "pessimistic")]);
+    let n_files = 6;
+    for i in 0..n_files {
+        store
+            .write_file(NodeId(i % 3), &format!("/wire/f{i}"), &payload(i), &tags)
+            .expect("write over the wire");
+    }
+    store.flush_replication();
+    for i in 0..n_files {
+        assert!(store.fully_replicated(&format!("/wire/f{i}")).unwrap());
+        let got = store.read_file(NodeId((i + 1) % 3), &format!("/wire/f{i}")).unwrap();
+        assert_eq!(got, payload(i), "roundtrip bytes over sockets");
+    }
+
+    // fail_node must kill the actual daemon process, not flip a flag.
+    let victim = store.locations("/wire/f0")[0];
+    let pid = cluster.pid(victim.0).expect("daemon running");
+    assert!(process_alive(pid), "victim daemon alive before the kill");
+    let queued = store.fail_node(victim);
+    assert!(queued > 0, "the victim held chunks, restores must queue");
+    assert!(cluster.pid(victim.0).is_none(), "child reaped after kill");
+    assert!(!process_alive(pid), "the OS process is really gone");
+
+    // Survivors re-replicate and keep serving every byte.
+    store.flush_replication();
+    assert_eq!(store.under_replicated(), 0);
+    for i in 0..n_files {
+        let client = NodeId((i + 2) % 3);
+        let got = store.read_file(client, &format!("/wire/f{i}")).unwrap();
+        assert_eq!(got, payload(i), "bytes survive a daemon death");
+    }
+
+    // join_node respawns a fresh daemon process on the same socket.
+    store.join_node(victim);
+    assert!(store.is_alive(victim), "rejoined node serves again");
+    let new_pid = cluster.pid(victim.0).expect("respawned daemon");
+    assert_ne!(new_pid, pid, "a new process, not a resurrected flag");
+    assert!(process_alive(new_pid));
+
+    store.flush_replication();
+    let audit = store.audit();
+    assert!(audit.clean(), "{audit:?}");
+}
+
+/// `kill_recover` in socket mode: the scenario's node kill is a real
+/// `SIGKILL` of a `noded` child, recovery respawns it with `--reopen`
+/// (manifest/segment salvage on persistent backends), and the
+/// scenario's own byte-verification audit must close clean. Runs on
+/// both persistent layouts so both salvage paths cross the process
+/// boundary.
+#[test]
+fn kill_recover_over_sockets_salvages_both_persistent_backends() {
+    point_at_woss_bin();
+    for backend in [BackendKind::Disk, BackendKind::Seg] {
+        let cfg = ScenarioConfig {
+            quick: true,
+            backend,
+            transport: Transport::Socket,
+            ..ScenarioConfig::default()
+        };
+        let rep = scenario::run("kill_recover", &cfg)
+            .unwrap_or_else(|e| panic!("kill_recover socket/{}: {e}", backend.label()));
+        assert!(rep.clean(), "dirty socket run on {}: {rep:?}", backend.label());
+        assert_eq!(rep.transport, "socket");
+        assert!(
+            rep.recovery_secs.is_some(),
+            "recovery clock must run on {}",
+            backend.label()
+        );
+        assert!(
+            rep.bytes_rereplicated > 0,
+            "churn must move real bytes on {}",
+            backend.label()
+        );
+        assert_eq!(
+            rep.read_p99_ms_wire,
+            Some(rep.read_p99_ms),
+            "a socket-primary run records its own p99 as the wire column"
+        );
+    }
+}
+
+/// The tentpole equivalence claim at the manager boundary: the same
+/// workflow driven through a `RemoteStore` client against a served
+/// manager produces the same task count, the same bytes written, and
+/// byte-identical output fingerprints as the in-process store — and
+/// each side's fingerprints verify against the *other* side's store.
+#[test]
+fn manager_over_socket_matches_in_process_engine_run() {
+    let wf = workloads::pipeline(3, 0.01, true);
+
+    // Leg 1: classic in-process store.
+    let local_engine =
+        LiveEngine::with_options(LiveStore::woss(3), 2, EngineOptions::default()).unwrap();
+    let local_rep = local_engine.run(&wf).expect("local run");
+    local_engine.verify(&local_rep).expect("local verify");
+
+    // Leg 2: identical store served over a Unix socket, driven through
+    // the RemoteStore client library.
+    let sock = std::env::temp_dir().join(format!("woss-mgr-eq-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let server = serve_manager(
+        RpcAddr::Unix(PathBuf::from(&sock)),
+        Arc::new(LiveStore::woss(3)),
+    )
+    .expect("bind manager");
+    let remote = RemoteStore::connect(server.addr().clone()).expect("connect manager");
+    let handle = StoreHandle::Remote(Arc::new(remote));
+    let remote_engine = LiveEngine::with_handle(handle.clone(), 2, EngineOptions::default())
+        .expect("engine over socket");
+    let remote_rep = remote_engine.run(&wf).expect("remote run");
+    remote_engine.verify(&remote_rep).expect("remote verify");
+
+    assert_eq!(local_rep.tasks, remote_rep.tasks, "same DAG executed");
+    assert_eq!(
+        local_rep.bytes_written, remote_rep.bytes_written,
+        "same bytes moved through both transports"
+    );
+    assert_eq!(
+        local_rep.fingerprints, remote_rep.fingerprints,
+        "output bytes identical across transports"
+    );
+    // Cross-check: each store holds bytes matching the OTHER leg's
+    // fingerprints.
+    local_engine
+        .verify_fingerprints(&remote_rep.fingerprints)
+        .expect("remote fingerprints verify against the local store");
+    remote_engine
+        .verify_fingerprints(&local_rep.fingerprints)
+        .expect("local fingerprints verify against the served store");
+
+    // Shutdown over the wire stops the serve loop.
+    handle.svc().shutdown_store();
+    server.wait();
+}

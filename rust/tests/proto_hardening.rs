@@ -1,0 +1,212 @@
+//! Protocol hardening: hostile byte streams against live daemon
+//! servers. Every attack — truncated header, oversized length field,
+//! checksum mismatch, unknown op code, trailing garbage, mid-stream
+//! disconnect — must surface as a typed
+//! [`woss::live::ProtoError`]-carrying `Malformed` reply (or a quiet
+//! close when the peer is already gone). The daemon never panics,
+//! never hangs, never leaks the connection: after every attack a
+//! fresh connection gets clean service.
+//!
+//! The codec-level property (hostile bytes → typed errors, bounded
+//! allocation) is pinned by `proto.rs`'s unit tests; this suite pins
+//! the *server loop* behavior over real Unix sockets, in both wire
+//! dialects (node and manager).
+
+use std::io::Write;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use woss::live::proto::FRAME_MAX;
+use woss::live::{
+    chunk_crc, read_frame, serve_manager, serve_node, write_frame, BackendKind, LiveStore,
+    ManagerRequest, ManagerResponse, MemoryBackend, NodeHost, NodeRequest, NodeResponse,
+    ProtoError, RpcAddr, Server,
+};
+
+/// Per-test socket path under the system temp dir.
+fn sock_addr(tag: &str) -> (RpcAddr, PathBuf) {
+    let path = std::env::temp_dir().join(format!("woss-hard-{}-{tag}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    (RpcAddr::Unix(path.clone()), path)
+}
+
+/// An in-process node daemon over one memory backend.
+fn node_server(tag: &str) -> (Server, PathBuf) {
+    let (addr, path) = sock_addr(tag);
+    let host = NodeHost::new(
+        Box::new(MemoryBackend::default()),
+        BackendKind::Memory,
+        None,
+    );
+    let server = serve_node(addr, Arc::new(host)).expect("bind node server");
+    (server, path)
+}
+
+fn connect(path: &PathBuf) -> UnixStream {
+    let s = UnixStream::connect(path).expect("connect to daemon");
+    // A hung server must fail the test, not park it forever.
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s
+}
+
+/// Send raw bytes, read the one reply frame, decode it as a node
+/// response.
+fn node_exchange(path: &PathBuf, raw: &[u8]) -> NodeResponse {
+    let mut s = connect(path);
+    s.write_all(raw).expect("send attack bytes");
+    let reply = read_frame(&mut s).expect("typed reply frame");
+    let (resp, _depth) = NodeResponse::decode(&reply).expect("decodable reply");
+    resp
+}
+
+/// A clean request must succeed — proof the daemon is still serving.
+fn assert_node_alive(path: &PathBuf) {
+    let mut s = connect(path);
+    write_frame(&mut s, &NodeRequest::Ping.encode()).unwrap();
+    let reply = read_frame(&mut s).expect("ping reply");
+    let (resp, _) = NodeResponse::decode(&reply).unwrap();
+    assert_eq!(resp, NodeResponse::Ok, "daemon still serves after attack");
+}
+
+/// Frame `payload` with a deliberately wrong checksum.
+fn frame_with_bad_crc(payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&(chunk_crc(payload) ^ 0xdead_beef).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// A correctly checksummed frame around arbitrary payload bytes.
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, payload).unwrap();
+    buf
+}
+
+#[test]
+fn node_daemon_answers_every_attack_with_a_typed_error() {
+    let (server, path) = node_server("typed");
+
+    // Checksum mismatch on an otherwise valid frame.
+    let resp = node_exchange(&path, &frame_with_bad_crc(&NodeRequest::Ping.encode()));
+    assert_eq!(resp, NodeResponse::Malformed(ProtoError::BadChecksum));
+    assert_node_alive(&path);
+
+    // Oversized length field: rejected from the 12-byte header alone,
+    // before any payload allocation.
+    let mut huge = (FRAME_MAX + 1).to_le_bytes().to_vec();
+    huge.extend_from_slice(&[0u8; 8]);
+    let resp = node_exchange(&path, &huge);
+    assert_eq!(
+        resp,
+        NodeResponse::Malformed(ProtoError::Oversized((FRAME_MAX + 1) as u64))
+    );
+    assert_node_alive(&path);
+
+    // An op code this dialect does not speak.
+    let resp = node_exchange(&path, &frame(&[240]));
+    assert_eq!(resp, NodeResponse::Malformed(ProtoError::UnknownOp(240)));
+    assert_node_alive(&path);
+
+    // A known op with trailing garbage: the strict decoder refuses
+    // frames it did not consume entirely.
+    let mut sloppy = NodeRequest::Ping.encode();
+    sloppy.push(0);
+    let resp = node_exchange(&path, &frame(&sloppy));
+    assert!(
+        matches!(resp, NodeResponse::Malformed(ProtoError::BadPayload(_))),
+        "trailing garbage is a typed payload error, got {resp:?}"
+    );
+    assert_node_alive(&path);
+
+    server.stop();
+}
+
+#[test]
+fn node_daemon_survives_disconnects_and_half_frames() {
+    let (server, path) = node_server("disconnect");
+
+    // Truncated header: two bytes of the length field, then gone.
+    {
+        let mut s = connect(&path);
+        s.write_all(&[0x10, 0x00]).unwrap();
+    }
+    assert_node_alive(&path);
+
+    // Mid-stream disconnect: a full header promising 64 payload bytes,
+    // ten delivered, then the peer vanishes.
+    {
+        let full = frame(&[7u8; 64]);
+        let mut s = connect(&path);
+        s.write_all(&full[..22]).unwrap();
+    }
+    assert_node_alive(&path);
+
+    // Clean disconnect between frames: one good request, then close.
+    {
+        let mut s = connect(&path);
+        write_frame(&mut s, &NodeRequest::Ping.encode()).unwrap();
+        let reply = read_frame(&mut s).expect("ping reply");
+        let (resp, _) = NodeResponse::decode(&reply).unwrap();
+        assert_eq!(resp, NodeResponse::Ok);
+    }
+    assert_node_alive(&path);
+
+    // No connection leak: a burst of hostile connections in a row,
+    // then clean service.
+    for i in 0..20u8 {
+        let mut s = connect(&path);
+        match i % 3 {
+            0 => s.write_all(&frame(&[200 + i])).unwrap(),
+            1 => s.write_all(&[i]).unwrap(),
+            _ => s.write_all(&frame_with_bad_crc(&[i])).unwrap(),
+        }
+    }
+    assert_node_alive(&path);
+
+    server.stop();
+}
+
+#[test]
+fn manager_daemon_speaks_its_own_malformed_dialect_and_shuts_down() {
+    let (addr, path) = sock_addr("manager");
+    let server = serve_manager(addr, Arc::new(LiveStore::woss(2))).expect("bind manager server");
+
+    // Hostile op code → a *manager-dialect* Malformed reply (distinct
+    // tag space from the node dialect — the reply must decode as a
+    // ManagerResponse, not a NodeResponse).
+    {
+        let mut s = connect(&path);
+        s.write_all(&frame(&[77])).unwrap();
+        let reply = read_frame(&mut s).expect("typed reply frame");
+        let resp = ManagerResponse::decode(&reply).expect("manager-dialect reply");
+        assert_eq!(resp, ManagerResponse::Malformed(ProtoError::UnknownOp(77)));
+    }
+
+    // Clean service after the attack.
+    {
+        let mut s = connect(&path);
+        write_frame(&mut s, &ManagerRequest::Hello.encode()).unwrap();
+        let reply = read_frame(&mut s).expect("hello reply");
+        match ManagerResponse::decode(&reply).unwrap() {
+            ManagerResponse::Info(info) => assert_eq!(info.n_nodes, 2),
+            other => panic!("hello answered {other:?}"),
+        }
+    }
+
+    // A Shutdown request stops the serve loop: `wait()` returns
+    // instead of parking forever.
+    {
+        let mut s = connect(&path);
+        write_frame(&mut s, &ManagerRequest::Shutdown.encode()).unwrap();
+        let reply = read_frame(&mut s).expect("shutdown acked");
+        assert_eq!(
+            ManagerResponse::decode(&reply).unwrap(),
+            ManagerResponse::Ok
+        );
+    }
+    server.wait();
+}

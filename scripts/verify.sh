@@ -167,10 +167,54 @@ for be in disk seg; do
     rm -rf "$io_dir"
 done
 
+# Cluster leg: the carved service boundary, as real processes. Three
+# `woss noded` daemons and a `woss managerd` over Unix sockets serve the
+# same workloads `woss live` runs in-process, and the recorded output
+# fingerprints must be byte-identical across the transport — the wire
+# protocol is a transport, never a semantics knob. `--clean-shutdown`
+# on the wire run doubles as the managerd termination path (a Shutdown
+# request stops its serve loop). The socket scenario smoke then drives
+# the same daemons as scenario children: kill_recover SIGKILLs a real
+# noded mid-workflow and its restart salvages via `noded --reopen`.
+echo "== cluster leg (managerd + 3 noded over Unix sockets) =="
+clu_dir="$(mktemp -d)"
+clu_pids=""
+cleanup_cluster() { [ -n "$clu_pids" ] && kill $clu_pids 2>/dev/null || true; }
+trap cleanup_cluster EXIT
+for wl in pipeline montage; do
+    d="$clu_dir/$wl"
+    mkdir -p "$d"
+    for i in 0 1 2; do
+        "$woss" noded --listen "unix:$d/n$i.sock" --backend mem \
+            > "$d/n$i.log" 2>&1 &
+        clu_pids="$clu_pids $!"
+    done
+    "$woss" managerd --listen "unix:$d/mgr.sock" \
+        --nodes "unix:$d/n0.sock,unix:$d/n1.sock,unix:$d/n2.sock" \
+        > "$d/mgr.log" 2>&1 &
+    clu_pids="$clu_pids $!"
+    "$woss" live --workload "$wl" --nodes 3 --workers 4 \
+        --fingerprint-file "$d/local.fp" > /dev/null
+    "$woss" live --connect "unix:$d/mgr.sock" --workload "$wl" --workers 4 \
+        --clean-shutdown --fingerprint-file "$d/wire.fp" > /dev/null
+    cmp "$d/local.fp" "$d/wire.fp" \
+        || { echo "FAIL: $wl fingerprints diverge between in-process and socket transports"; exit 1; }
+done
+echo "== scenario smoke over sockets (kill_recover --transport socket) =="
+"$woss" scenario kill_recover --quick --seed 7 --transport socket
+"$woss" scenario kill_recover --quick --seed 7 --transport socket \
+    --backend seg --data-dir "$clu_dir/scn-seg"
+cleanup_cluster
+clu_pids=""
+rm -rf "$clu_dir"
+
 # Tracked perf trajectory: regenerate both bench documents and validate
 # them against their schemas. A missing, unparseable, or schema-drifted
 # document fails the gate (bench-check is also what CI should run on the
-# committed copies).
+# committed copies). The full-size kill_recover row now dual-runs its
+# socket leg (real noded children of the woss binary itself), so the
+# regenerated document carries a live `read_p99_ms_wire` column for
+# bench-check's v3 gate.
 echo "== bench trajectory (BENCH_scenarios.json / BENCH_live.json) =="
 bench_dir="$(mktemp -d)"
 "$woss" scenario all --seed 7 --backend disk --data-dir "$bench_dir/scn" \
